@@ -1,0 +1,53 @@
+//! SEP recall curves (the Fig. 3 experiment, interactively sized).
+//!
+//! Prints recall-vs-token-index series for each shadow precision and
+//! alignment setup, plus sparkline shapes: aligned curves stay flat at
+//! ~1.0, unaligned curves decay as autoregressive drift accumulates.
+//!
+//! ```bash
+//! cargo run --release --example recall_curves -- [--prompts 4] [--out-tokens 48]
+//! ```
+
+use odmoe::model::{Precision, WeightStore};
+use odmoe::predictor::AlignmentConfig;
+use odmoe::util::cli::Args;
+use odmoe::util::table::{print_series, sparkline};
+use odmoe::workload::{recall, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let prompts = args.usize_or("prompts", 4)?;
+    let out_tokens = args.usize_or("out-tokens", 48)?;
+    let seed = args.u64_or("seed", 42)?;
+    let series = args.has("series"); // print full numeric series too
+
+    let rt = odmoe::Runtime::load_default()?;
+    let ws = WeightStore::generate(&rt.cfg, seed);
+    let corpus = Corpus::generate(seed ^ 1, prompts, 16, rt.cfg.vocab_size as u32);
+
+    for p in [Precision::Fp16, Precision::Int8, Precision::Nf4] {
+        println!("== shadow precision: {} ==", p.label());
+        for (label, align) in [
+            ("unaligned        ", AlignmentConfig::none()),
+            ("token-aligned    ", AlignmentConfig::token_only()),
+            ("token+KV aligned ", AlignmentConfig::every_iteration()),
+        ] {
+            let stats = recall::sep_recall(&rt, &ws, p, align, &corpus, out_tokens)?;
+            let curve = stats.curve();
+            println!(
+                "  {label} overall={:.4}  {}",
+                stats.recall(),
+                sparkline(&curve)
+            );
+            if series {
+                let xs: Vec<f64> = (0..curve.len()).map(|i| i as f64).collect();
+                print_series(&format!("{} {label}", p.label()), &xs, &curve);
+            }
+        }
+        println!();
+    }
+    println!("paper Fig. 3: with token+KV alignment every iteration, recall is");
+    println!("0.9994 (fp16), 0.9734 (int8), 0.9567 (nf4); unaligned curves decay");
+    println!("toward ~0.3 by token 256.");
+    Ok(())
+}

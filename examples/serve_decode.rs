@@ -1,0 +1,85 @@
+//! End-to-end serving driver (the DESIGN.md validation run): serve a real
+//! batched workload — the paper's speed-test corpus shape (short + long
+//! prompts) — through OD-MoE *and* the fully-cached reference, verify the
+//! token streams agree bit-exactly, and report latency/throughput.
+//!
+//! ```bash
+//! cargo run --release --example serve_decode -- [--prompts 3] [--out-tokens 64]
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §End-to-end used the defaults.
+
+use odmoe::coordinator::baselines::FullyCachedEngine;
+use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
+use odmoe::metrics::SpeedStats;
+use odmoe::model::WeightStore;
+use odmoe::util::cli::Args;
+use odmoe::util::table::Table;
+use odmoe::workload::speed::PAPER_LAYER_SCALE;
+use odmoe::workload::Corpus;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let prompts = args.usize_or("prompts", 3)?;
+    let out_tokens = args.usize_or("out-tokens", 64)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let rt = odmoe::Runtime::load_default()?;
+    let ws = WeightStore::generate(&rt.cfg, seed);
+    let (short, long) = Corpus::speed_set(seed, prompts, rt.cfg.vocab_size as u32);
+
+    let mut od = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default())?;
+    let mut reference = FullyCachedEngine::new(&rt, ws)?;
+
+    let mut table = Table::new(&[
+        "corpus", "prompt", "ttft ms*", "decode tok/s*", "stall ms", "exact",
+    ]);
+    let mut od_stats = SpeedStats::default();
+    let mut ref_stats = SpeedStats::default();
+    let wall = Instant::now();
+    let mut served = 0usize;
+
+    for (name, corpus) in [("short-16", &short), ("long-128", &long)] {
+        for (i, prompt) in corpus.prompts.iter().enumerate() {
+            od.reset()?;
+            reference.reset()?;
+            let r_od = od.run_prompt(prompt, out_tokens, false)?;
+            let r_ref = reference.run_prompt(prompt, out_tokens, false)?;
+            let exact = r_od.tokens == r_ref.tokens;
+            assert!(exact, "OD-MoE must serve the full-precision stream");
+            let n = r_od.tokens.len() - 1;
+            od_stats.record(
+                r_od.ttft_ms * PAPER_LAYER_SCALE,
+                r_od.decode_ms * PAPER_LAYER_SCALE,
+                n,
+            );
+            ref_stats.record(
+                r_ref.ttft_ms * PAPER_LAYER_SCALE,
+                r_ref.decode_ms * PAPER_LAYER_SCALE,
+                n,
+            );
+            served += r_od.tokens.len();
+            table.row(&[
+                name.into(),
+                format!("#{i}"),
+                format!("{:.0}", r_od.ttft_ms * PAPER_LAYER_SCALE),
+                format!("{:.3}", n as f64 / (r_od.decode_ms * PAPER_LAYER_SCALE / 1000.0)),
+                format!("{:.1}", r_od.stall_ms),
+                if exact { "yes" } else { "NO" }.into(),
+            ]);
+        }
+    }
+    table.print();
+
+    let ratio = od_stats.decode_tps() / ref_stats.decode_tps();
+    println!("\n== summary (paper-scale virtual time, * = 32-layer equivalent) ==");
+    println!("od-moe   : TTFT {:.0} ms | decode {:.3} tok/s | output {:.3} tok/s",
+             od_stats.mean_ttft_ms(), od_stats.decode_tps(), od_stats.output_tps());
+    println!("reference: TTFT {:.0} ms | decode {:.3} tok/s | output {:.3} tok/s",
+             ref_stats.mean_ttft_ms(), ref_stats.decode_tps(), ref_stats.output_tps());
+    println!("decode ratio od-moe/fully-cached: {:.1}% (paper: ~75%)", ratio * 100.0);
+    println!("tokens served: {served} | wall-clock: {:.1}s | PJRT executions: {}",
+             wall.elapsed().as_secs_f64(), rt.stats.executions.get());
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Timing analysis: renders the paper's Fig. 2/4/5-style timeline diagrams
+//! from the simulator's event trace, and checks the Eq. (1) feasibility
+//! condition across hardware profiles and worker counts.
+//!
+//! ```bash
+//! cargo run --release --example timing_analysis
+//! ```
+
+use odmoe::cluster::HardwareProfile;
+use odmoe::coordinator::{Engine, GroupSchedule, OdMoeConfig, OdMoeEngine};
+use odmoe::model::WeightStore;
+use odmoe::predictor::AlignmentConfig;
+use odmoe::util::table::Table;
+use odmoe::workload::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let rt = odmoe::Runtime::load_default()?;
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let prompt = &Corpus::generate(3, 1, 16, rt.cfg.vocab_size as u32).prompts[0];
+
+    // ---- Eq. (1) feasibility table -------------------------------------
+    println!("== Eq. (1): t_maxload = n_groups*t_M + (n_groups-1)*t_W ==\n");
+    let mut t = Table::new(&[
+        "profile", "workers", "groups", "t_M ms", "t_W ms", "window ms", "load ms", "bottleneck-free",
+    ]);
+    for profile in [HardwareProfile::rtx3090(), HardwareProfile::rtx3080_workers()] {
+        for n_workers in [2usize, 4, 8, 16] {
+            let s = GroupSchedule::new(n_workers, rt.cfg.top_k);
+            let window = s.t_maxload(profile.t_main_ms(), profile.t_worker_ms());
+            let load = profile.expert_load_ms(1.0);
+            t.row(&[
+                profile.name.to_string(),
+                n_workers.to_string(),
+                s.n_groups().to_string(),
+                format!("{:.2}", profile.t_main_ms()),
+                format!("{:.2}", profile.t_worker_ms()),
+                format!("{window:.2}"),
+                format!("{load:.2}"),
+                if load <= window { "yes" } else { "NO" }.to_string(),
+            ]);
+        }
+    }
+    t.print();
+
+    // ---- Fig. 2/4/5 timelines -------------------------------------------
+    let names: Vec<String> = std::iter::once("main".to_string())
+        .chain(std::iter::once("shadow".to_string()))
+        .chain((0..8).map(|i| format!("worker{i}")))
+        .collect();
+
+    for (title, align) in [
+        ("Fig. 4 analogue: no alignment (shadow free-runs)", AlignmentConfig::none()),
+        ("Fig. 5 analogue: token+KV alignment (late departure)", AlignmentConfig::every_iteration()),
+    ] {
+        let cfg = OdMoeConfig { align, ..OdMoeConfig::default() };
+        let mut engine = OdMoeEngine::new(&rt, ws.clone(), cfg)?;
+        engine.enable_trace();
+        let res = engine.run_prompt(prompt, 4, false)?;
+        // Render the window right after prefill (the first decode token).
+        let t0 = res.ttft_ms;
+        let t1 = res.ttft_ms + res.decode_ms / 3.0 * 1.2;
+        println!("\n== {title} ==");
+        println!("{}", engine.cluster.trace.render_timeline(t0, t1, 100, &names));
+        println!("decode {:.2} tok/s | stall {:.1} ms", res.decode_tps(), res.stall_ms);
+    }
+    Ok(())
+}

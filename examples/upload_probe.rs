@@ -1,0 +1,22 @@
+//! Perf probe (EXPERIMENTS.md §Perf, iteration 3): isolate the PJRT
+//! host->device upload cost from execute dispatch, to decide whether
+//! buffer-chaining the KV caches was worth pursuing. Verdict: a 64 KB
+//! cache upload costs ~2 µs of an ~86 µs main-block call — dispatch and
+//! interpret-mode HLO execution dominate, so no further buffer work.
+
+fn main() -> anyhow::Result<()> {
+    let rt = odmoe::Runtime::load_default()?;
+    let cache = vec![0f32; 512 * 2 * 16];
+    let t0 = std::time::Instant::now();
+    for _ in 0..1000 {
+        std::hint::black_box(rt.upload_f32(&cache, &[512, 2, 16])?);
+    }
+    println!("upload 64KB f32: {:.1} µs", t0.elapsed().as_micros() as f64 / 1000.0);
+    let small = vec![0f32; 64];
+    let t0 = std::time::Instant::now();
+    for _ in 0..1000 {
+        std::hint::black_box(rt.upload_f32(&small, &[1, 64])?);
+    }
+    println!("upload 256B f32: {:.1} µs", t0.elapsed().as_micros() as f64 / 1000.0);
+    Ok(())
+}

@@ -1,0 +1,160 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run via `make artifacts` (no-op if artifacts are newer than inputs).
+Python appears ONLY here — the Rust binary is self-contained afterwards.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()`:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 (behind the `xla` crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Alongside the artifacts this writes:
+  * config.json  — the ModelConfig the graphs were specialized for; the
+    Rust loader refuses to run against a mismatched config.
+  * checks.json  — known-answer tests: for each artifact, a deterministic
+    seeded input set and the jit-executed outputs. Rust integration tests
+    execute the artifact through PJRT and assert allclose, validating the
+    whole python->HLO-text->rust round trip numerically.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, ModelConfig
+from . import model
+
+# Token counts the expert-FFN executable is specialized for: 1 for decode,
+# the rest for prefill mini-batches (Fig. 7 sweep) and full batches.
+EXPERT_FFN_SIZES = (1, 4, 8, 16, 32, 64, 128)
+# Prompt lengths the prefill main-block is specialized for (paper's speed
+# corpus uses 16- and 128-token prompts).
+PREFILL_SIZES = (16, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, matching load_hlo.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _rng(seed: int):
+    return np.random.default_rng(seed)
+
+
+def _weights_decode(cfg: ModelConfig, rng):
+    """Deterministic example weights for checks.json (NOT the model weights
+    used at runtime — Rust generates those itself)."""
+    d, q, kv, e, f = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.n_experts, cfg.d_ff
+    mk = lambda *s: rng.standard_normal(s).astype(np.float32) * 0.15
+    return dict(
+        x=mk(1, d),
+        attn_g=1.0 + 0.1 * mk(d).reshape(d),
+        wq=mk(d, q), wk=mk(d, kv), wv=mk(d, kv), wo=mk(q, d),
+        ffn_g=1.0 + 0.1 * mk(d).reshape(d),
+        w_gate=mk(d, e),
+    )
+
+
+def build_artifacts(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    checks = {}
+
+    def emit(name: str, fn, example_args: list):
+        specs = [jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype)
+                 for a in example_args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        outs = jax.jit(fn)(*[jnp.asarray(a) for a in example_args])
+        checks[name] = {
+            "inputs": [np.asarray(a).ravel().tolist() for a in example_args],
+            "input_shapes": [list(np.asarray(a).shape) for a in example_args],
+            "input_dtypes": [str(np.asarray(a).dtype) for a in example_args],
+            "outputs": [np.asarray(o).ravel().tolist() for o in outs],
+            "output_shapes": [list(np.asarray(o).shape) for o in outs],
+            "output_dtypes": [str(np.asarray(o).dtype) for o in outs],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    # --- decode main block -------------------------------------------------
+    rng = _rng(0xD0)
+    w = _weights_decode(cfg, rng)
+    pos = 3  # example: cache already holds 3 tokens
+    k_cache = np.zeros((cfg.max_seq_len, cfg.n_kv_heads, cfg.head_dim), np.float32)
+    v_cache = np.zeros_like(k_cache)
+    k_cache[:pos] = rng.standard_normal(k_cache[:pos].shape).astype(np.float32) * 0.3
+    v_cache[:pos] = rng.standard_normal(v_cache[:pos].shape).astype(np.float32) * 0.3
+    emit(
+        "main_block_decode",
+        model.main_block_decode(cfg),
+        [w["x"], w["attn_g"], w["wq"], w["wk"], w["wv"], w["wo"],
+         w["ffn_g"], w["w_gate"], k_cache, v_cache,
+         np.array([pos], np.int32)],
+    )
+
+    # --- prefill main blocks -----------------------------------------------
+    for T in PREFILL_SIZES:
+        rng = _rng(0xF0 + T)
+        w = _weights_decode(cfg, rng)
+        x = rng.standard_normal((T, cfg.d_model)).astype(np.float32) * 0.15
+        emit(
+            f"main_block_prefill_t{T}",
+            model.main_block_prefill(cfg, T),
+            [x, w["attn_g"], w["wq"], w["wk"], w["wv"], w["wo"],
+             w["ffn_g"], w["w_gate"]],
+        )
+
+    # --- expert FFN (the pallas hot-spot), one executable per batch size ----
+    for T in EXPERT_FFN_SIZES:
+        rng = _rng(0xE0 + T)
+        h = rng.standard_normal((T, cfg.d_model)).astype(np.float32) * 0.3
+        w1 = rng.standard_normal((cfg.d_model, cfg.d_ff)).astype(np.float32) * 0.15
+        w3 = rng.standard_normal((cfg.d_model, cfg.d_ff)).astype(np.float32) * 0.15
+        w2 = rng.standard_normal((cfg.d_ff, cfg.d_model)).astype(np.float32) * 0.15
+        emit(f"expert_ffn_t{T}", model.expert_ffn(cfg), [h, w1, w3, w2])
+
+    # --- LM head -------------------------------------------------------------
+    rng = _rng(0x1A)
+    x = rng.standard_normal((1, cfg.d_model)).astype(np.float32) * 0.3
+    g = (1.0 + 0.1 * rng.standard_normal(cfg.d_model)).astype(np.float32)
+    w_out = rng.standard_normal((cfg.d_model, cfg.vocab_size)).astype(np.float32) * 0.15
+    emit("lm_head", model.lm_head(cfg), [x, g, w_out])
+
+    return checks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    cfg = DEFAULT
+    print(f"lowering Tiny-Mixtral graphs (d={cfg.d_model}, L={cfg.n_layers}, "
+          f"E={cfg.n_experts}, top-{cfg.top_k}) -> {args.out}")
+    checks = build_artifacts(cfg, args.out)
+    with open(os.path.join(args.out, "config.json"), "w") as fh:
+        fh.write(cfg.to_json())
+    with open(os.path.join(args.out, "checks.json"), "w") as fh:
+        json.dump(checks, fh)
+    # Sentinel consumed by the Makefile's up-to-date check.
+    with open(os.path.join(args.out, ".stamp"), "w") as fh:
+        fh.write("ok\n")
+    print(f"wrote {len(checks)} artifacts + config.json + checks.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Model configuration shared by all compile-path modules.
+
+This is the single source of truth for the Tiny-Mixtral architecture used
+throughout the repo. The Rust side mirrors these defaults in
+`rust/src/model/config.rs`; `aot.py` additionally embeds the config as JSON
+next to the HLO artifacts so the Rust loader can verify it is running
+against artifacts built for the same shapes.
+"""
+
+from dataclasses import dataclass, asdict, field
+import json
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-Mixtral: architecturally faithful, scale-reduced Mixtral-8x7B.
+
+    Same component structure as the paper's base model (RMSNorm, rotary
+    GQA attention, softmax top-k router, SwiGLU experts); reduced
+    dimensions so the full stack runs on a CPU-only PJRT client.
+    """
+
+    vocab_size: int = 256
+    d_model: int = 64
+    n_layers: int = 12
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 16
+    d_ff: int = 128           # per-expert SwiGLU hidden size
+    n_experts: int = 8
+    top_k: int = 2
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    max_seq_len: int = 512    # KV-cache capacity baked into decode graphs
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def expert_param_count(self) -> int:
+        # w1 (gate), w3 (up): d_model x d_ff; w2 (down): d_ff x d_model.
+        return 3 * self.d_model * self.d_ff
+
+    @property
+    def expert_bytes_f32(self) -> int:
+        return self.expert_param_count * 4
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=2, sort_keys=True)
+
+
+DEFAULT = ModelConfig()

@@ -1,0 +1,62 @@
+"""Single-token GQA decode-attention Pallas kernel.
+
+Decode attention on the main node reads the whole padded KV cache for one
+new query token. TPU adaptation: the cache for all KV heads of one layer
+(max_seq x n_kv x head_dim, 64 KiB at the default config) is staged into
+VMEM in one block; scores/softmax/weighted-sum all happen in-register per
+head. Positions >= seq_len are masked (the cache is a fixed-capacity ring
+buffer owned by the Rust coordinator).
+
+The valid-length scalar rides in as a [1] i32 array (interpret-mode
+friendly stand-in for scalar prefetch).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)            # [n_heads, head_dim]
+    k = k_ref[...].astype(jnp.float32)            # [max_seq, n_kv, head_dim]
+    v = v_ref[...].astype(jnp.float32)
+    seq_len = len_ref[0]
+    n_heads, head_dim = q.shape
+    max_seq, n_kv, _ = k.shape
+    group = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    # GQA via grouped einsum: fold the query-head groups into the einsum
+    # instead of materializing a repeated [max_seq, n_heads, head_dim]
+    # cache — the cache (the biggest tensor here) is read once, not
+    # `group` times (EXPERIMENTS.md §Perf, L1 iteration 2).
+    qg = q.reshape(n_kv, group, head_dim)
+    scores = jnp.einsum("kgd,skd->kgs", qg, k) * scale   # [n_kv, group, S]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, 1, max_seq), 2) < seq_len
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("kgs,skd->kgd", probs, v)
+    o_ref[...] = out.reshape(n_heads, head_dim)
+
+
+def decode_attention(
+    q: jax.Array,        # [n_heads, head_dim]
+    k_cache: jax.Array,  # [max_seq, n_kv_heads, head_dim]
+    v_cache: jax.Array,
+    seq_len: jax.Array,  # [1] i32 — valid length INCLUDING the new token
+) -> jax.Array:
+    """Matches `ref.gqa_attention_decode`. Returns [n_heads, head_dim]."""
+    n_heads, head_dim = q.shape
+    max_seq, n_kv, _ = k_cache.shape
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n_heads, head_dim), lambda i: (0, 0)),
+            pl.BlockSpec((max_seq, n_kv, head_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((max_seq, n_kv, head_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_heads, head_dim), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, head_dim), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, seq_len)

@@ -1,0 +1,81 @@
+"""Fused SwiGLU expert-FFN Pallas kernel — the paper's compute hot-spot.
+
+The paper executes each expert's FFN (`w2 @ (silu(w1 x) * w3 x)`) on a
+worker GPU's CUDA cores. TPU adaptation (DESIGN.md §3): the three matmuls
+are fused into ONE kernel so the [T, d_ff] intermediates (gate, up) live
+entirely in VMEM and never round-trip to HBM, and every matmul requests
+`preferred_element_type=float32` to target the MXU systolic array.
+
+Blocking: the full per-expert weight set (w1, w3: [d_model, d_ff],
+w2: [d_ff, d_model]) is mapped into VMEM once (index_map pins them to
+block (0, 0) for every grid step) while the token axis is tiled with
+`block_t` rows per grid step. VMEM footprint per grid step:
+
+    3 * d_model * d_ff * 4 B   (weights, 96 KiB at 64x128)
+  + block_t * (2*d_ff + 2*d_model) * 4 B   (x, gate/up, out)
+
+which stays far below the ~16 MiB VMEM budget for every configuration we
+ship — see `vmem_bytes()` used by tests and DESIGN.md §7.
+
+interpret=True always: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One grid step: [block_t, d_model] tokens through the fused FFN."""
+    x = x_ref[...]
+    # Gate and up projections hit the MXU back-to-back while x is hot in VMEM.
+    gate = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    # SiLU on the VPU; the [block_t, d_ff] intermediate never leaves VMEM.
+    act = gate * jax.lax.logistic(gate) * up
+    o_ref[...] = jnp.dot(act, w2_ref[...], preferred_element_type=jnp.float32)
+
+
+def pick_block_t(t: int) -> int:
+    """Token-axis tile: whole batch if small, else the largest power-of-two
+    divisor of t capped at 64 (keeps the activation tile ~64 KiB)."""
+    if t <= 64:
+        return t
+    bt = 64
+    while t % bt != 0:
+        bt //= 2
+    return max(bt, 1)
+
+
+def vmem_bytes(t: int, d_model: int, d_ff: int) -> int:
+    """Estimated VMEM footprint of one grid step (see module docstring)."""
+    bt = pick_block_t(t)
+    weights = 3 * d_model * d_ff * 4
+    acts = bt * (2 * d_ff + 2 * d_model) * 4
+    return weights + acts
+
+
+@functools.partial(jax.jit, static_argnames=())
+def swiglu_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """Fused expert FFN. x: [T, d_model] -> [T, d_model]. Matches
+    `ref.swiglu_ffn` to ~1e-5 (fp32 accumulation in both)."""
+    t, d_model = x.shape
+    d_ff = w1.shape[1]
+    bt = pick_block_t(t)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_model), lambda i: (i, 0)),       # x: tile tokens
+            pl.BlockSpec((d_model, d_ff), lambda i: (0, 0)),     # w1: resident
+            pl.BlockSpec((d_model, d_ff), lambda i: (0, 0)),     # w3: resident
+            pl.BlockSpec((d_ff, d_model), lambda i: (0, 0)),     # w2: resident
+        ],
+        out_specs=pl.BlockSpec((bt, d_model), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d_model), jnp.float32),
+        interpret=True,
+    )(x, w1, w3, w2)

@@ -1,0 +1,95 @@
+"""Dequantize-into-matmul Pallas kernels for the shadow (SEP) path.
+
+The paper's shadow model is an INT8/NF4-quantized Mixtral. The bandwidth
+win that quantization buys on PCIe translates on TPU to streaming the
+compressed weights HBM->VMEM and dequantizing *inside* the kernel, fused
+with the matmul, so full-precision weights never exist in HBM.
+
+Two kernels:
+  * `int8_matmul`   — x @ (q * row_scale), q: int8 per-row absmax.
+  * `nf4_matmul`    — x @ dequant_nf4(codes, block_scales), codebook
+                      lookup fused via a VMEM-resident 16-entry table.
+
+Both are validated against `ref.dequantize_* + matmul` oracles in
+python/tests/test_quant_kernels.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _int8_matmul_kernel(x_ref, q_ref, s_ref, o_ref):
+    # Dequantize in VMEM: int8 codes * per-row scale, then straight to MXU.
+    w = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def int8_matmul(x: jax.Array, q: jax.Array, scale: jax.Array) -> jax.Array:
+    """x: [T, d] f32, q: [d, out] int8, scale: [d] f32 -> [T, out] f32."""
+    t, d = x.shape
+    out = q.shape[1]
+    return pl.pallas_call(
+        _int8_matmul_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, out), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, out), jnp.float32),
+        interpret=True,
+    )(x, q, scale)
+
+
+def _nf4_matmul_kernel(x_ref, codes_ref, scales_ref, table_ref, o_ref, *, d, out, block):
+    # Codebook lookup: 16-entry NF4 table resident in VMEM.
+    codes = codes_ref[...]                      # [n_blocks, block] uint8
+    table = table_ref[...]                      # [16]
+    vals = table[codes.astype(jnp.int32)]       # [n_blocks, block]
+    w = (vals * scales_ref[...][:, None]).reshape(d, out)
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "out", "block"))
+def nf4_matmul(
+    x: jax.Array,
+    codes: jax.Array,
+    scales: jax.Array,
+    *,
+    d: int,
+    out: int,
+    block: int = 64,
+) -> jax.Array:
+    """x: [T, d] f32; codes: [n_blocks, block] uint8 (row-major flattening
+    of the [d, out] weight); scales: [n_blocks] f32 -> [T, out] f32."""
+    t = x.shape[0]
+    n_blocks = codes.shape[0]
+    return pl.pallas_call(
+        functools.partial(_nf4_matmul_kernel, d=d, out=out, block=block),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((n_blocks, block), lambda i: (0, 0)),
+            pl.BlockSpec((n_blocks,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, out), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, ref.NF4_LEVELS)
+
+
+def int8_swiglu_ffn(x, q1, s1, q3, s3, q2, s2):
+    """Quantized expert FFN for the shadow model: all three projections
+    run through the fused int8 dequant-matmul kernel."""
+    gate = int8_matmul(x, q1, s1)
+    up = int8_matmul(x, q3, s3)
+    act = gate * jax.lax.logistic(gate) * up
+    return int8_matmul(act, q2, s2)

@@ -1,0 +1,166 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/` asserts each
+Pallas kernel (run in interpret mode) matches its oracle to tight
+tolerances across randomized shapes and dtypes (hypothesis sweeps).
+Nothing in here is performance-tuned — clarity over speed.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis. x: [..., d], weight: [d]."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x.astype(jnp.float32) * inv * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """Mixtral expert FFN: w2 @ (silu(w1 x) * (w3 x)).
+
+    x: [T, d_model]; w1, w3: [d_model, d_ff]; w2: [d_ff, d_model].
+    """
+    gate = jax.nn.silu(x @ w1)
+    up = x @ w3
+    return (gate * up) @ w2
+
+
+def router_logits(x: jax.Array, w_gate: jax.Array) -> jax.Array:
+    """Router logits. x: [T, d_model], w_gate: [d_model, n_experts]."""
+    return x @ w_gate
+
+
+def router_topk(logits: jax.Array, k: int):
+    """Top-k softmax routing as in Mixtral: softmax over the selected
+    logits only. Returns (weights [T, k], indices [T, k] int32)."""
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return w, idx.astype(jnp.int32)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [T, n_heads, head_dim], positions: [T] int32."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def gqa_attention_decode(
+    q: jax.Array,        # [n_heads, head_dim] — single new token
+    k_cache: jax.Array,  # [max_seq, n_kv_heads, head_dim]
+    v_cache: jax.Array,  # [max_seq, n_kv_heads, head_dim]
+    seq_len: jax.Array,  # scalar int32: valid cache length INCLUDING new token
+) -> jax.Array:
+    """Single-token GQA decode attention against a padded KV cache.
+
+    Entries at positions >= seq_len are masked out. Returns
+    [n_heads, head_dim].
+    """
+    n_heads, head_dim = q.shape
+    max_seq, n_kv, _ = k_cache.shape
+    group = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    # Expand kv heads to query heads.
+    k = jnp.repeat(k_cache, group, axis=1)  # [max_seq, n_heads, head_dim]
+    v = jnp.repeat(v_cache, group, axis=1)
+    scores = jnp.einsum("hd,shd->hs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.arange(max_seq) < seq_len
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hs,shd->hd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gqa_attention_prefill(
+    q: jax.Array,  # [T, n_heads, head_dim]
+    k: jax.Array,  # [T, n_kv_heads, head_dim]
+    v: jax.Array,  # [T, n_kv_heads, head_dim]
+) -> jax.Array:
+    """Causal GQA attention over a full prompt. Returns [T, n_heads, head_dim]."""
+    T, n_heads, head_dim = q.shape
+    group = n_heads // k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("thd,shd->hts", q.astype(jnp.float32), kx.astype(jnp.float32)) * scale
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hts,shd->thd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantization oracles (mirror rust/src/quant/).
+# ---------------------------------------------------------------------------
+
+# The 16 NF4 levels (QLoRA, Dettmers et al. 2023): quantiles of N(0,1)
+# normalized to [-1, 1]. Index 7 is exactly 0.
+NF4_LEVELS = jnp.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=jnp.float32,
+)
+
+
+def quantize_int8(w: jax.Array):
+    """Per-row absmax symmetric INT8. w: [rows, cols] -> (q int8, scale [rows])."""
+    absmax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+def quantize_nf4(w: jax.Array, block: int = 64):
+    """Blockwise NF4: flatten, split into blocks, absmax-scale, nearest
+    NF4 level. Returns (codes uint8 [n_blocks, block], scales [n_blocks])."""
+    flat = w.reshape(-1)
+    assert flat.shape[0] % block == 0, "weight size must be divisible by block"
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    normed = blocks / scale
+    # Nearest level (ties resolved toward the lower index, matching rust).
+    dist = jnp.abs(normed[..., None] - NF4_LEVELS[None, None, :])
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.uint8)
+    return codes, scale[:, 0]
+
+
+def dequantize_nf4(codes: jax.Array, scales: jax.Array, shape) -> jax.Array:
+    vals = NF4_LEVELS[codes.astype(jnp.int32)] * scales[:, None]
+    return vals.reshape(shape)
+
+
+def fake_quant(w: jax.Array, mode: str) -> jax.Array:
+    """Quantize-dequantize round trip ("fake quant") used to build shadow
+    weights. mode in {fp32, fp16, int8, nf4}."""
+    if mode == "fp32":
+        return w
+    if mode == "fp16":
+        return w.astype(jnp.float16).astype(jnp.float32)
+    if w.ndim == 1:
+        # Norm gains / biases: quantize as a single row.
+        return fake_quant(w.reshape(1, -1), mode).reshape(w.shape)
+    if mode == "int8":
+        q, s = quantize_int8(w)
+        return dequantize_int8(q, s)
+    if mode == "nf4":
+        c, s = quantize_nf4(w)
+        return dequantize_nf4(c, s, w.shape)
+    raise ValueError(f"unknown quant mode {mode!r}")

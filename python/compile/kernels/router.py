@@ -1,0 +1,79 @@
+"""Fused RMSNorm + router-logits Pallas kernel.
+
+The Mixtral router is `softmax(top_k((rmsnorm(x) * g) @ w_gate))`. The
+norm and the gating matmul are fused so the normalized activations stay
+in VMEM; top-k itself stays in plain XLA (`jax.lax.top_k`) because it is
+O(T*E) scalar work with no MXU benefit.
+
+The same kernel also serves the attention-input norm (pass w_gate = I to
+get just the normalized activations — model.py instead calls
+`rms_norm_matmul` with the QKV weight, fusing norm+projection).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_matmul_kernel(x_ref, g_ref, w_ref, o_ref, *, eps):
+    """o = rmsnorm(x; g) @ w, all in one VMEM residency."""
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * g_ref[...][None, :]
+    o_ref[...] = jnp.dot(xn, w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rms_norm_matmul(
+    x: jax.Array, g: jax.Array, w: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """Fused `rmsnorm(x; g) @ w`. x: [T, d], g: [d], w: [d, out]."""
+    t, d = x.shape
+    out = w.shape[1]
+    return pl.pallas_call(
+        functools.partial(_rms_matmul_kernel, eps=eps),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, out), jnp.float32),
+        interpret=True,
+    )(x, g, w)
+
+
+def topk_small(logits: jax.Array, k: int):
+    """Top-k by iterated argmax (k is 2 for Mixtral; E is 8).
+
+    Functionally identical to `jax.lax.top_k` (first-occurrence tie-break),
+    but lowers to argmax/select ops only: the `topk(..., largest=true)` HLO
+    custom-call emitted by recent JAX is rejected by the image's
+    xla_extension 0.5.1 text parser (see DESIGN.md §AOT notes).
+    Returns (vals [T, k], idx [T, k] i32).
+    """
+    e = logits.shape[-1]
+    masked = logits
+    vals, idxs = [], []
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)  # [T]
+        val = jnp.max(masked, axis=-1)
+        idxs.append(idx)
+        vals.append(val)
+        hit = jax.nn.one_hot(idx, e, dtype=bool)
+        masked = jnp.where(hit, -jnp.inf, masked)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def router(x: jax.Array, g: jax.Array, w_gate: jax.Array, k: int, eps: float = 1e-5):
+    """Full router: fused norm+logits kernel, then top-k softmax.
+
+    Returns (weights [T, k] f32, indices [T, k] i32, logits [T, E]).
+    """
+    logits = rms_norm_matmul(x, g, w_gate, eps=eps)
+    vals, idx = topk_small(logits, k)
+    weights = jax.nn.softmax(vals, axis=-1)
+    return weights, idx, logits

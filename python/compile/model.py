@@ -1,0 +1,165 @@
+"""Layer-2: Tiny-Mixtral compute graphs in JAX, calling the L1 kernels.
+
+Every function here is a *pure* graph over explicit weight arguments — no
+parameter capture — so the Rust coordinator owns all weights (full
+precision AND fake-quantized shadow variants) and feeds them as runtime
+inputs to the AOT-compiled executables. One HLO artifact therefore serves
+both the full-precision model and every shadow quantization level.
+
+Graphs exported by aot.py:
+  main_block_decode    non-expert per-layer work for ONE token: fused
+                       norm+QKV (pallas), RoPE, cache update, decode
+                       attention (pallas), output proj, fused norm+router
+                       (pallas), top-k.
+  main_block_prefill   same for a T-token prompt with causal attention.
+  expert_ffn           fused SwiGLU expert (pallas) for a given T.
+  lm_head              final RMSNorm + logits + greedy argmax.
+
+The decode KV cache is a fixed-capacity padded buffer owned by Rust; the
+graph receives the cache *before* the new token, computes the new K/V row,
+attends over the updated cache, and returns the new row for Rust to commit
+(outputs stay small: no full-cache round-trip per layer).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as attn_k
+from .kernels import moe_ffn as ffn_k
+from .kernels import ref
+from .kernels import router as router_k
+
+
+def rope_decode(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """RoPE for one token. x: [n_heads, head_dim], pos: [1] i32."""
+    return ref.rope(x[None, ...], pos, theta)[0]
+
+
+def main_block_decode(cfg: ModelConfig):
+    """Returns fn(x, attn_g, wq, wk, wv, wo, ffn_g, w_gate,
+                  k_cache, v_cache, pos) ->
+         (x_resid [1,d], h_norm [1,d], route_w [1,k], route_idx [1,k] i32,
+          k_new [1,n_kv,hd], v_new [1,n_kv,hd])
+
+    x: [1, d_model] residual stream entering the layer.
+    k_cache/v_cache: [max_seq, n_kv, hd] padded, valid length == pos.
+    h_norm is the post-attention normalized hidden state the main node
+    ships to worker nodes (the "embedding" of Fig. 2 step c/d).
+    """
+
+    def fn(x, attn_g, wq, wk, wv, wo, ffn_g, w_gate, k_cache, v_cache, pos):
+        d = cfg.d_model
+        # Fused RMSNorm + QKV projection (single pallas kernel over the
+        # concatenated [d, q+kv+kv] weight keeps x resident in VMEM once).
+        wqkv = jnp.concatenate([wq, wk, wv], axis=1)
+        qkv = router_k.rms_norm_matmul(x, attn_g, wqkv, eps=cfg.rms_eps)  # [1, q+2kv]
+        q = qkv[0, : cfg.q_dim].reshape(cfg.n_heads, cfg.head_dim)
+        k = qkv[0, cfg.q_dim : cfg.q_dim + cfg.kv_dim].reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = qkv[0, cfg.q_dim + cfg.kv_dim :].reshape(cfg.n_kv_heads, cfg.head_dim)
+        q = rope_decode(q, pos, cfg.rope_theta)
+        k = rope_decode(k, pos, cfg.rope_theta)
+        # Commit the new row into the padded cache, then attend over it.
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, ...], (pos[0], 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, ...], (pos[0], 0, 0))
+        o = attn_k.decode_attention(q, k_cache, v_cache, pos + 1)  # [n_heads, hd]
+        x_resid = x + o.reshape(1, cfg.q_dim) @ wo
+        # Fused RMSNorm + router logits, then top-k softmax.
+        route_w, route_idx, _ = router_k.router(
+            x_resid, ffn_g, w_gate, cfg.top_k, eps=cfg.rms_eps
+        )
+        # h_norm (what workers consume) via plain jnp RMSNorm: XLA fuses
+        # this into a couple of elementwise ops — the earlier
+        # rms_norm_matmul-against-identity spent a whole pallas matmul on
+        # it (EXPERIMENTS.md §Perf, L2 iteration 1).
+        h_norm = ref.rms_norm(x_resid, ffn_g, cfg.rms_eps)
+        _ = d
+        return x_resid, h_norm, route_w, route_idx, k[None, ...], v[None, ...]
+
+    return fn
+
+
+def main_block_prefill(cfg: ModelConfig, seq_len: int):
+    """Prefill (batched) variant over a fixed T-token prompt.
+
+    fn(x [T,d], attn_g, wq, wk, wv, wo, ffn_g, w_gate) ->
+      (x_resid [T,d], h_norm [T,d], route_w [T,k], route_idx [T,k] i32,
+       k_all [T,n_kv,hd], v_all [T,n_kv,hd])
+    """
+
+    def fn(x, attn_g, wq, wk, wv, wo, ffn_g, w_gate):
+        d = cfg.d_model
+        T = seq_len
+        positions = jnp.arange(T, dtype=jnp.int32)
+        wqkv = jnp.concatenate([wq, wk, wv], axis=1)
+        qkv = router_k.rms_norm_matmul(x, attn_g, wqkv, eps=cfg.rms_eps)
+        q = qkv[:, : cfg.q_dim].reshape(T, cfg.n_heads, cfg.head_dim)
+        k = qkv[:, cfg.q_dim : cfg.q_dim + cfg.kv_dim].reshape(T, cfg.n_kv_heads, cfg.head_dim)
+        v = qkv[:, cfg.q_dim + cfg.kv_dim :].reshape(T, cfg.n_kv_heads, cfg.head_dim)
+        q = ref.rope(q, positions, cfg.rope_theta)
+        k = ref.rope(k, positions, cfg.rope_theta)
+        o = ref.gqa_attention_prefill(q, k, v)  # [T, n_heads, hd]
+        x_resid = x + o.reshape(T, cfg.q_dim) @ wo
+        route_w, route_idx, _ = router_k.router(
+            x_resid, ffn_g, w_gate, cfg.top_k, eps=cfg.rms_eps
+        )
+        h_norm = ref.rms_norm(x_resid, ffn_g, cfg.rms_eps)
+        _ = d
+        return x_resid, h_norm, route_w, route_idx, k, v
+
+    return fn
+
+
+def expert_ffn(cfg: ModelConfig):
+    """fn(h [T,d], w1 [d,f], w3 [d,f], w2 [f,d]) -> (y [T,d],).
+
+    The worker-node computation: the fused SwiGLU pallas kernel. The
+    router weight is applied by the caller (main node combines
+    `sum_k route_w[k] * y_k` on the residual stream).
+    """
+
+    def fn(h, w1, w3, w2):
+        return (ffn_k.swiglu_ffn(h, w1, w3, w2),)
+
+    return fn
+
+
+def lm_head(cfg: ModelConfig):
+    """fn(x [1,d], final_g [d], w_out [d,V]) -> (logits [1,V], tok [1] i32).
+
+    Greedy decoding (paper §4.1): argmax over logits, no sampling.
+    """
+
+    def fn(x, final_g, w_out):
+        logits = router_k.rms_norm_matmul(x, final_g, w_out, eps=cfg.rms_eps)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, tok
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference model (oracle for integration tests + checks.json).
+# ---------------------------------------------------------------------------
+
+
+def ref_main_block_decode(cfg: ModelConfig):
+    """Same contract as main_block_decode but built only from ref.* ops."""
+
+    def fn(x, attn_g, wq, wk, wv, wo, ffn_g, w_gate, k_cache, v_cache, pos):
+        xn = ref.rms_norm(x, attn_g, cfg.rms_eps)
+        q = (xn @ wq).reshape(cfg.n_heads, cfg.head_dim)
+        k = (xn @ wk).reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = (xn @ wv).reshape(cfg.n_kv_heads, cfg.head_dim)
+        q = rope_decode(q, pos, cfg.rope_theta)
+        k = rope_decode(k, pos, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, ...], (pos[0], 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, ...], (pos[0], 0, 0))
+        o = ref.gqa_attention_decode(q, k_cache, v_cache, pos[0] + 1)
+        x_resid = x + o.reshape(1, cfg.q_dim) @ wo
+        h_norm = ref.rms_norm(x_resid, ffn_g, cfg.rms_eps)
+        logits = ref.router_logits(h_norm, w_gate)
+        route_w, route_idx = ref.router_topk(logits, cfg.top_k)
+        return x_resid, h_norm, route_w, route_idx, k[None, ...], v[None, ...]
+
+    return fn

@@ -1,0 +1,67 @@
+"""Decode-attention Pallas kernel vs oracle + attention invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _case(rng, max_seq, n_heads, n_kv, hd):
+    q = jnp.asarray(rng.standard_normal((n_heads, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((max_seq, n_kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((max_seq, n_kv, hd)).astype(np.float32))
+    return q, k, v
+
+
+@settings(**SETTINGS)
+@given(
+    max_seq=st.sampled_from([8, 32, 512]),
+    heads=st.sampled_from([(4, 2), (4, 4), (8, 2)]),
+    hd=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+    frac=st.floats(0.01, 1.0),
+)
+def test_decode_attention_matches_ref(max_seq, heads, hd, seed, frac):
+    n_heads, n_kv = heads
+    rng = np.random.default_rng(seed)
+    q, k, v = _case(rng, max_seq, n_heads, n_kv, hd)
+    seq_len = max(1, int(max_seq * frac))
+    got = attention.decode_attention(q, k, v, jnp.asarray([seq_len], jnp.int32))
+    want = ref.gqa_attention_decode(q, k, v, jnp.asarray(seq_len))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_masking_ignores_padded_tail():
+    # Garbage past seq_len must not affect the output.
+    rng = np.random.default_rng(7)
+    q, k, v = _case(rng, 32, 4, 2, 16)
+    seq_len = jnp.asarray([5], jnp.int32)
+    base = np.asarray(attention.decode_attention(q, k, v, seq_len))
+    k2 = k.at[5:].set(1e6)
+    v2 = v.at[5:].set(-1e6)
+    poisoned = np.asarray(attention.decode_attention(q, k2, v2, seq_len))
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+def test_single_valid_token_returns_its_value():
+    # With seq_len=1 softmax collapses to the first cached V row.
+    rng = np.random.default_rng(8)
+    q, k, v = _case(rng, 16, 4, 2, 16)
+    out = np.asarray(attention.decode_attention(q, k, v, jnp.asarray([1], jnp.int32)))
+    expect = np.repeat(np.asarray(v[0]), 2, axis=0)  # kv head -> 2 q heads each
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_ref_matches_decode_ref_last_token():
+    # Causal prefill's last row == decode attention over the same cache.
+    rng = np.random.default_rng(9)
+    T, n_heads, n_kv, hd = 12, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((T, n_heads, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((T, n_kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((T, n_kv, hd)).astype(np.float32))
+    pre = ref.gqa_attention_prefill(q, k, v)
+    dec = ref.gqa_attention_decode(q[-1], k, v, jnp.asarray(T))
+    np.testing.assert_allclose(np.asarray(pre[-1]), np.asarray(dec), rtol=1e-5, atol=1e-5)

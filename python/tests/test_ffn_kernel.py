@@ -1,0 +1,73 @@
+"""Pallas fused-SwiGLU kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps token counts and dimension combinations; this is the
+core correctness signal for the L1 hot-spot (DESIGN.md §3).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import moe_ffn, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _mats(rng, t, d, f):
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.2)
+    return mk(t, d), mk(d, f), mk(d, f), mk(f, d)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.sampled_from([1, 2, 3, 5, 8, 16, 33, 64, 128, 200]),
+    d=st.sampled_from([8, 16, 64]),
+    f=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_swiglu_matches_ref(t, d, f, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, w3, w2 = _mats(rng, t, d, f)
+    got = moe_ffn.swiglu_ffn(x, w1, w3, w2)
+    want = ref.swiglu_ffn(x, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_zero_input_gives_zero():
+    x = jnp.zeros((4, 64))
+    rng = np.random.default_rng(1)
+    _, w1, w3, w2 = _mats(rng, 4, 64, 128)
+    out = moe_ffn.swiglu_ffn(x, w1, w3, w2)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((4, 64), np.float32))
+
+
+def test_large_magnitude_stable():
+    # silu saturates; kernel must not produce nan/inf for large activations.
+    rng = np.random.default_rng(2)
+    x, w1, w3, w2 = _mats(rng, 8, 64, 128)
+    out = np.asarray(moe_ffn.swiglu_ffn(x * 100.0, w1, w3, w2))
+    assert np.isfinite(out).all()
+
+
+@pytest.mark.parametrize("t,expect", [(1, 1), (16, 16), (64, 64), (128, 64), (96, 32), (100, 4)])
+def test_pick_block_t(t, expect):
+    bt = moe_ffn.pick_block_t(t)
+    assert bt == expect
+    assert t % bt == 0
+
+
+@pytest.mark.parametrize("t", [1, 64, 128])
+def test_vmem_budget(t):
+    # DESIGN.md §7: per-grid-step VMEM must stay far below ~16 MiB.
+    assert moe_ffn.vmem_bytes(t, 64, 128) < 1 << 20
+
+
+def test_rows_independent():
+    # Token rows must not interact: FFN is position-wise.
+    rng = np.random.default_rng(3)
+    x, w1, w3, w2 = _mats(rng, 6, 16, 32)
+    full = np.asarray(moe_ffn.swiglu_ffn(x, w1, w3, w2))
+    for i in range(6):
+        row = np.asarray(moe_ffn.swiglu_ffn(x[i : i + 1], w1, w3, w2))
+        np.testing.assert_allclose(full[i : i + 1], row, rtol=1e-5, atol=1e-6)

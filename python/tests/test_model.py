@@ -1,0 +1,127 @@
+"""L2 model graphs: pallas-backed blocks vs pure-jnp reference model,
+plus shape/contract checks for everything aot.py exports."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import DEFAULT as CFG
+from compile.kernels import ref
+
+
+def _decode_inputs(seed, pos):
+    rng = np.random.default_rng(seed)
+    d, q, kv, e = CFG.d_model, CFG.q_dim, CFG.kv_dim, CFG.n_experts
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.15)
+    k_cache = np.zeros((CFG.max_seq_len, CFG.n_kv_heads, CFG.head_dim), np.float32)
+    v_cache = np.zeros_like(k_cache)
+    k_cache[:pos] = rng.standard_normal(k_cache[:pos].shape) * 0.3
+    v_cache[:pos] = rng.standard_normal(v_cache[:pos].shape) * 0.3
+    return [
+        mk(1, d), 1.0 + 0.1 * mk(d), mk(d, q), mk(d, kv), mk(d, kv), mk(q, d),
+        1.0 + 0.1 * mk(d), mk(d, e),
+        jnp.asarray(k_cache), jnp.asarray(v_cache), jnp.asarray([pos], jnp.int32),
+    ]
+
+
+@pytest.mark.parametrize("pos", [0, 1, 7, 100])
+def test_main_block_decode_matches_ref(pos):
+    args = _decode_inputs(42 + pos, pos)
+    got = jax.jit(model.main_block_decode(CFG))(*args)
+    want = model.ref_main_block_decode(CFG)(*args)
+    names = ["x_resid", "h_norm", "route_w", "route_idx", "k_new", "v_new"]
+    for n, g, w in zip(names, got, want):
+        if g.dtype == jnp.int32:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=n)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=5e-5, atol=5e-5, err_msg=n
+            )
+
+
+def test_main_block_decode_output_shapes():
+    out = jax.jit(model.main_block_decode(CFG))(*_decode_inputs(0, 3))
+    assert out[0].shape == (1, CFG.d_model)
+    assert out[1].shape == (1, CFG.d_model)
+    assert out[2].shape == (1, CFG.top_k)
+    assert out[3].shape == (1, CFG.top_k) and out[3].dtype == jnp.int32
+    assert out[4].shape == (1, CFG.n_kv_heads, CFG.head_dim)
+    assert out[5].shape == (1, CFG.n_kv_heads, CFG.head_dim)
+
+
+def test_route_idx_in_range():
+    out = jax.jit(model.main_block_decode(CFG))(*_decode_inputs(5, 2))
+    idx = np.asarray(out[3])
+    assert ((idx >= 0) & (idx < CFG.n_experts)).all()
+    assert idx[0, 0] != idx[0, 1], "top-2 must select distinct experts"
+
+
+@pytest.mark.parametrize("T", [16, 128])
+def test_prefill_consistent_with_decode(T):
+    """Running the prefill graph must agree with T sequential decode steps —
+    the cross-check that the two attention paths implement one model."""
+    rng = np.random.default_rng(100 + T)
+    d, q, kv, e = CFG.d_model, CFG.q_dim, CFG.kv_dim, CFG.n_experts
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.15)
+    w = [1.0 + 0.1 * mk(d), mk(d, q), mk(d, kv), mk(d, kv), mk(q, d),
+         1.0 + 0.1 * mk(d), mk(d, e)]
+    x = mk(T, d)
+    pre = jax.jit(model.main_block_prefill(CFG, T))(x, *w)
+
+    dec_fn = jax.jit(model.main_block_decode(CFG))
+    k_cache = jnp.zeros((CFG.max_seq_len, CFG.n_kv_heads, CFG.head_dim))
+    v_cache = jnp.zeros_like(k_cache)
+    for t in range(T):
+        out = dec_fn(x[t : t + 1], *w, k_cache, v_cache, jnp.asarray([t], jnp.int32))
+        k_cache = jax.lax.dynamic_update_slice(k_cache, out[4], (t, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, out[5], (t, 0, 0))
+        np.testing.assert_allclose(
+            np.asarray(pre[0][t]), np.asarray(out[0][0]), rtol=2e-4, atol=2e-4,
+            err_msg=f"x_resid token {t}",
+        )
+    # Router decisions for the last token must agree.
+    np.testing.assert_array_equal(np.asarray(pre[3][-1]), np.asarray(out[3][0]))
+
+
+def test_lm_head_greedy_argmax():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((1, CFG.d_model)).astype(np.float32))
+    g = jnp.asarray(np.ones(CFG.d_model, np.float32))
+    w_out = jnp.asarray(rng.standard_normal((CFG.d_model, CFG.vocab_size)).astype(np.float32))
+    logits, tok = jax.jit(model.lm_head(CFG))(x, g, w_out)
+    assert logits.shape == (1, CFG.vocab_size)
+    assert int(tok[0]) == int(np.argmax(np.asarray(logits)[0]))
+
+
+def test_expert_ffn_graph_matches_ref():
+    rng = np.random.default_rng(9)
+    h = jnp.asarray(rng.standard_normal((4, CFG.d_model)).astype(np.float32))
+    w1 = jnp.asarray(rng.standard_normal((CFG.d_model, CFG.d_ff)).astype(np.float32) * 0.2)
+    w3 = jnp.asarray(rng.standard_normal((CFG.d_model, CFG.d_ff)).astype(np.float32) * 0.2)
+    w2 = jnp.asarray(rng.standard_normal((CFG.d_ff, CFG.d_model)).astype(np.float32) * 0.2)
+    (got,) = jax.jit(model.expert_ffn(CFG))(h, w1, w3, w2)
+    want = ref.swiglu_ffn(h, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_quantized_routing_agreement_rate():
+    """The SEP premise (paper §2.3/§3.2): a fake-quantized block selects the
+    same experts as the full-precision block almost always."""
+    agree = {"fp16": 0, "int8": 0, "nf4": 0}
+    trials = 40
+    fn = jax.jit(model.main_block_decode(CFG))
+    for t in range(trials):
+        args = _decode_inputs(1000 + t, 3)
+        full_idx = np.sort(np.asarray(fn(*args)[3])[0])
+        for mode in agree:
+            qargs = list(args)
+            # Quantize every weight matrix (indices 1..7).
+            for i in range(1, 8):
+                qargs[i] = ref.fake_quant(args[i], mode)
+            q_idx = np.sort(np.asarray(fn(*qargs)[3])[0])
+            agree[mode] += int((full_idx == q_idx).all())
+    assert agree["fp16"] >= trials * 0.95, agree
+    assert agree["int8"] >= trials * 0.85, agree
+    assert agree["nf4"] >= trials * 0.70, agree

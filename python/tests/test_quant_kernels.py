@@ -1,0 +1,94 @@
+"""Quantization oracles + dequant-matmul Pallas kernels (shadow path)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(rows=st.sampled_from([8, 64]), cols=st.sampled_from([16, 128]),
+       seed=st.integers(0, 2**16))
+def test_int8_roundtrip_error_bound(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((rows, cols)).astype(np.float32)
+    q, s = ref.quantize_int8(jnp.asarray(w))
+    back = np.asarray(ref.dequantize_int8(q, s))
+    # Max quantization error is half a step: absmax/127/2 per row.
+    step = np.abs(w).max(axis=1, keepdims=True) / 127.0
+    assert (np.abs(back - w) <= step * 0.5 + 1e-7).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_nf4_roundtrip_bounded(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    c, s = ref.quantize_nf4(jnp.asarray(w))
+    back = np.asarray(ref.dequantize_nf4(c, s, w.shape))
+    # NF4 error bounded by largest inter-level gap (~0.30 of blockwise absmax).
+    blocks = w.reshape(-1, 64)
+    absmax = np.abs(blocks).max(axis=1, keepdims=True)
+    err = np.abs(back.reshape(-1, 64) - blocks)
+    assert (err <= 0.16 * absmax + 1e-7).all()
+
+
+def test_nf4_levels_are_sorted_and_symmetric_endpoints():
+    lv = np.asarray(ref.NF4_LEVELS)
+    assert (np.diff(lv) > 0).all()
+    assert lv[0] == -1.0 and lv[-1] == 1.0 and lv[7] == 0.0
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 4, 16]), seed=st.integers(0, 2**16))
+def test_int8_matmul_kernel_matches_dequant_ref(t, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, 64)).astype(np.float32))
+    w = rng.standard_normal((64, 128)).astype(np.float32) * 0.2
+    q, s = ref.quantize_int8(jnp.asarray(w))
+    got = quant.int8_matmul(x, q, s)
+    want = x @ ref.dequantize_int8(q, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([1, 4, 16]), seed=st.integers(0, 2**16))
+def test_nf4_matmul_kernel_matches_dequant_ref(t, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, 64)).astype(np.float32))
+    w = rng.standard_normal((64, 128)).astype(np.float32) * 0.2
+    c, s = ref.quantize_nf4(jnp.asarray(w))
+    got = quant.nf4_matmul(x, c, s, d=64, out=128)
+    want = x @ ref.dequantize_nf4(c, s, (64, 128))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_int8_swiglu_close_to_full_precision():
+    # The quantized expert must track the full-precision expert closely —
+    # this is the phenomenon SEP relies on (paper §3.2).
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32) * 0.3)
+    w1 = rng.standard_normal((64, 128)).astype(np.float32) * 0.15
+    w3 = rng.standard_normal((64, 128)).astype(np.float32) * 0.15
+    w2 = rng.standard_normal((128, 64)).astype(np.float32) * 0.15
+    q1, s1 = ref.quantize_int8(jnp.asarray(w1))
+    q3, s3 = ref.quantize_int8(jnp.asarray(w3))
+    q2, s2 = ref.quantize_int8(jnp.asarray(w2))
+    approx = np.asarray(quant.int8_swiglu_ffn(x, q1, s1, q3, s3, q2, s2))
+    exact = np.asarray(ref.swiglu_ffn(x, jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2)))
+    rel = np.linalg.norm(approx - exact) / np.linalg.norm(exact)
+    assert rel < 0.02, f"int8 expert diverges from fp32: rel={rel:.4f}"
+
+
+def test_fake_quant_modes():
+    rng = np.random.default_rng(12)
+    w = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    assert np.asarray(ref.fake_quant(w, "fp32") == w).all()
+    errs = {}
+    for m in ("fp16", "int8", "nf4"):
+        errs[m] = float(np.abs(np.asarray(ref.fake_quant(w, m)) - np.asarray(w)).max())
+    # Error ordering must reflect precision: fp16 < int8 < nf4.
+    assert errs["fp16"] < errs["int8"] < errs["nf4"]

@@ -1,0 +1,64 @@
+"""Fused RMSNorm+matmul / router kernel vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, router
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.sampled_from([1, 2, 7, 16, 128]),
+    d=st.sampled_from([8, 64]),
+    out=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_rms_norm_matmul_matches_ref(t, d, out, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    g = jnp.asarray((1 + 0.1 * rng.standard_normal(d)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((d, out)).astype(np.float32) * 0.2)
+    got = router.rms_norm_matmul(x, g, w)
+    want = ref.rms_norm(x, g) @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(k=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**16))
+def test_router_topk_consistency(k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((5, 64)).astype(np.float32))
+    g = jnp.asarray(np.ones(64, np.float32))
+    wg = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32) * 0.3)
+    w, idx, logits = router.router(x, g, wg, k)
+    lref = ref.router_logits(ref.rms_norm(x, g), wg)
+    wref, iref = ref.router_topk(lref, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(iref))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wref), rtol=1e-5, atol=1e-6)
+    # Routing weights are a valid distribution over the k selected experts.
+    np.testing.assert_allclose(np.asarray(w).sum(-1), np.ones(5), rtol=1e-5)
+
+
+def test_router_weights_sorted_descending():
+    # top_k returns values in descending order; softmax preserves order.
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((9, 64)).astype(np.float32))
+    g = jnp.asarray(np.ones(64, np.float32))
+    wg = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    w, _, _ = router.router(x, g, wg, 2)
+    w = np.asarray(w)
+    assert (w[:, 0] >= w[:, 1]).all()
+
+
+def test_rms_norm_scale_invariance():
+    # rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps effects).
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((3, 64)).astype(np.float32))
+    g = jnp.asarray(np.ones(64, np.float32))
+    w = jnp.asarray(np.eye(64, dtype=np.float32))
+    a = np.asarray(router.rms_norm_matmul(x, g, w))
+    b = np.asarray(router.rms_norm_matmul(x * 10.0, g, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,48 @@
+//! Shared setup for the figure/table benches.
+//!
+//! Workload sizes are scaled down from the paper's (Q=100, N=512) so the
+//! whole `cargo bench` suite finishes in minutes on one CPU core; set
+//! `ODMOE_BENCH_SCALE=paper` for larger sweeps. Every bench prints the
+//! paper's reference values next to ours — shape comparison is the goal
+//! (see EXPERIMENTS.md).
+
+use odmoe::model::WeightStore;
+use odmoe::Runtime;
+
+pub struct Setup {
+    pub rt: Runtime,
+    pub seed: u64,
+}
+
+impl Setup {
+    pub fn new() -> Self {
+        let rt = Runtime::load_default().expect("run `make artifacts` first");
+        Self { rt, seed: 42 }
+    }
+
+    pub fn weights(&self) -> WeightStore {
+        WeightStore::generate(&self.rt.cfg, self.seed)
+    }
+
+    /// (prompts, out_tokens) for recall-style sweeps.
+    pub fn recall_size(&self) -> (usize, usize) {
+        if big() {
+            (16, 256)
+        } else {
+            (4, 48)
+        }
+    }
+
+    /// (prompts_per_length, out_tokens list) for speed sweeps.
+    pub fn speed_size(&self) -> (usize, Vec<usize>) {
+        if big() {
+            (4, vec![64, 256])
+        } else {
+            (1, vec![24])
+        }
+    }
+}
+
+pub fn big() -> bool {
+    std::env::var("ODMOE_BENCH_SCALE").as_deref() == Ok("paper")
+}

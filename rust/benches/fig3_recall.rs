@@ -1,0 +1,47 @@
+//! Fig. 3: SEP expert-selection recall vs output-token index, for shadow
+//! precisions {NF4, INT8, FP16} x alignment setups {unaligned, token-only,
+//! token+KV}. Paper reference: aligned overall recall 0.9567 / 0.9734 /
+//! 0.9994; unaligned curves decay with token index.
+
+mod common;
+
+use odmoe::model::Precision;
+use odmoe::predictor::AlignmentConfig;
+use odmoe::util::table::{sparkline, Table};
+use odmoe::workload::{recall, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    let s = common::Setup::new();
+    let ws = s.weights();
+    let (prompts, out_tokens) = s.recall_size();
+    let corpus = Corpus::generate(s.seed ^ 1, prompts, 16, s.rt.cfg.vocab_size as u32);
+
+    println!("# Fig. 3 — recall vs token index (Q={prompts}, N={out_tokens})\n");
+    let mut table = Table::new(&[
+        "shadow", "alignment", "recall@1", "recall@mid", "recall@last", "overall", "curve",
+    ]);
+    for p in [Precision::Nf4, Precision::Int8, Precision::Fp16] {
+        for (label, align) in [
+            ("unaligned", AlignmentConfig::none()),
+            ("token-only", AlignmentConfig::token_only()),
+            ("token+KV", AlignmentConfig::every_iteration()),
+        ] {
+            let stats = recall::sep_recall(&s.rt, &ws, p, align, &corpus, out_tokens)?;
+            let curve = stats.curve();
+            let mid = curve.len() / 2;
+            table.row(&[
+                p.label().into(),
+                label.into(),
+                format!("{:.4}", curve[0]),
+                format!("{:.4}", curve[mid]),
+                format!("{:.4}", curve[curve.len() - 1]),
+                format!("{:.4}", stats.recall()),
+                sparkline(&curve),
+            ]);
+        }
+    }
+    table.print();
+    println!("\npaper: aligned overall = 0.9567 (nf4) / 0.9734 (int8) / 0.9994 (fp16);");
+    println!("unaligned decays from ~1.0 toward ~0.3; token-only sits between.");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Fig. 9: decoding speed vs token/KV alignment periods (1/2/4/8/16) on
+//! the RTX 3090 testbed. Paper reference: best speed at T=1, KV=1 —
+//! reduced prediction error outweighs the late-departure cost there.
+
+mod common;
+
+use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
+use odmoe::predictor::AlignmentConfig;
+use odmoe::util::table::Table;
+use odmoe::workload::speed::PAPER_LAYER_SCALE;
+use odmoe::workload::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let s = common::Setup::new();
+    let ws = s.weights();
+    let (prompts, outs) = s.speed_size();
+    let out_tokens = *outs.last().unwrap();
+    let corpus = Corpus::generate(s.seed ^ 9, prompts, 16, s.rt.cfg.vocab_size as u32);
+    let periods = [1usize, 2, 4, 8, 16];
+
+    println!("# Fig. 9 — decode tok/s* vs alignment periods (rtx3090)\n");
+    let headers: Vec<String> = std::iter::once("token\\KV".into())
+        .chain(periods.iter().map(|p| format!("KV={p}")))
+        .collect();
+    let refs: Vec<&str> = headers.iter().map(|x| x.as_str()).collect();
+    let mut table = Table::new(&refs);
+    let mut best = (0.0f64, 0usize, 0usize);
+    for &tp in &periods {
+        let mut row = vec![format!("T={tp}")];
+        for &kp in &periods {
+            let cfg = OdMoeConfig {
+                align: AlignmentConfig { token_period: tp, kv_period: kp },
+                ..OdMoeConfig::default()
+            };
+            let mut engine = OdMoeEngine::new(&s.rt, ws.clone(), cfg)?;
+            let mut total_tps = 0.0;
+            for prompt in &corpus.prompts {
+                engine.reset()?;
+                let r = engine.run_prompt(prompt, out_tokens, false)?;
+                total_tps += r.decode_tps() / PAPER_LAYER_SCALE;
+            }
+            let tps = total_tps / corpus.prompts.len() as f64;
+            if tps > best.0 {
+                best = (tps, tp, kp);
+            }
+            row.push(format!("{tps:.3}"));
+        }
+        table.row(&row);
+    }
+    table.print();
+    println!("\nbest: {:.3} tok/s at T={}, KV={}   (paper: optimum at T=1, KV=1)",
+             best.0, best.1, best.2);
+    Ok(())
+}

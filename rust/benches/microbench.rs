@@ -1,0 +1,78 @@
+//! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf): PJRT dispatch
+//! latency per artifact, full decode-step latency, simulator event
+//! throughput, quantization throughput.
+
+mod common;
+
+use odmoe::cluster::{Cluster, HardwareProfile};
+use odmoe::engine::ModelState;
+use odmoe::quant;
+use odmoe::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let s = common::Setup::new();
+    let ws = s.weights();
+    let cfg = s.rt.cfg.clone();
+
+    bench::header();
+
+    // --- PJRT dispatch costs -------------------------------------------
+    let mut state = ModelState::new(&s.rt, ws.clone())?;
+    let k_cache = vec![0f32; cfg.max_seq_len * cfg.n_kv_heads * cfg.head_dim];
+    let x = vec![0.1f32; cfg.d_model];
+    let h = vec![0.1f32; cfg.d_model];
+
+    // Raw runtime calls via a device model.
+    let dm = odmoe::runtime::DeviceModel::upload(&s.rt, &ws)?;
+    bench::run("pjrt: main_block_decode (1 layer)", 30, 5, || {
+        s.rt.main_block_decode(&dm, 0, &x, &k_cache, &k_cache, 3).unwrap();
+    })
+    .print();
+    bench::run("pjrt: expert_ffn t=1", 30, 10, || {
+        s.rt.expert_ffn(&dm, 0, 0, &h, 1).unwrap();
+    })
+    .print();
+    bench::run("pjrt: lm_head", 30, 10, || {
+        s.rt.lm_head(&dm, &x).unwrap();
+    })
+    .print();
+
+    // --- Full decode step (12 layers + experts + lm head). --------------
+    let mut tok = 3u32;
+    bench::run("engine: full decode step (12 layers)", 10, 2, || {
+        if state.pos + 1 >= cfg.max_seq_len {
+            state.reset();
+        }
+        tok = state.decode_step(tok).unwrap().token_out;
+    })
+    .print();
+
+    // --- Simulator event throughput. -------------------------------------
+    bench::run("sim: 1k resource bookings", 50, 10, || {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 8);
+        for i in 0..1000 {
+            let w = i % 8;
+            c.expert_load(w, i as f64, 1e6);
+        }
+        std::hint::black_box(c.lan.free_at());
+    })
+    .print();
+
+    // --- Quantization throughput (shadow build cost). --------------------
+    let w = ws.experts[0][0].w1.clone();
+    bench::run("quant: int8 fake-quant 8k params", 30, 20, || {
+        std::hint::black_box(quant::fake_quant_int8(&w, cfg.d_ff));
+    })
+    .print();
+    bench::run("quant: nf4 fake-quant 8k params", 30, 20, || {
+        std::hint::black_box(quant::fake_quant_nf4(&w));
+    })
+    .print();
+
+    println!(
+        "\ntotal PJRT executions this run: {}  | host bytes uploaded: {:.1} MB",
+        s.rt.stats.executions.get(),
+        s.rt.stats.host_bytes_uploaded.get() as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Table 1: expert-activation prediction baselines vs SEP.
+//! Paper reference: AdapMoE 0.86, DAOP 0.84, HOBBIT 0.91 (4 layers ahead),
+//! Mixtral-Offloading ~0.80 / fMoE <0.85 (cache-hit), SEP 0.9567–0.9994.
+
+mod common;
+
+use odmoe::model::Precision;
+use odmoe::predictor::{
+    AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical,
+};
+use odmoe::util::table::Table;
+use odmoe::workload::{recall, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    let s = common::Setup::new();
+    let ws = s.weights();
+    let cfg = s.rt.cfg.clone();
+    let (prompts, out_tokens) = s.recall_size();
+    let corpus = Corpus::generate(s.seed ^ 11, prompts, 16, cfg.vocab_size as u32);
+
+    println!("# Table 1 — expert-activation prediction (Q={prompts}, N={out_tokens})\n");
+    let mut table = Table::new(&["predictor", "recall", "lookahead", "paper"]);
+
+    let mut gl = GateLookahead::new(&ws);
+    let (r, n) = recall::baseline_recall(&s.rt, &ws, &mut gl, &corpus, out_tokens)?;
+    table.row(&["gate-lookahead (AdapMoE/DAOP/MxOff)".into(), format!("{r:.4}"),
+                "1 layer".into(), "0.86 / 0.84 / ~0.80".into()]);
+    let _ = n;
+
+    let mut ml = MultiLayerGate::new(&ws, 4);
+    let (r, _) = recall::baseline_recall(&s.rt, &ws, &mut ml, &corpus, out_tokens)?;
+    table.row(&["multi-layer gate (HOBBIT)".into(), format!("{r:.4}"),
+                "4 layers".into(), "0.91".into()]);
+
+    let mut st = Statistical::new(cfg.n_layers, cfg.n_experts, cfg.top_k);
+    let (r, _) = recall::baseline_recall(&s.rt, &ws, &mut st, &corpus, out_tokens)?;
+    table.row(&["statistical (EdgeMoE/fMoE)".into(), format!("{r:.4}"),
+                "any".into(), "<0.85 (hit rate)".into()]);
+
+    let mut rp = RandomPredictor::new(s.seed, cfg.n_experts, cfg.top_k);
+    let (r, _) = recall::baseline_recall(&s.rt, &ws, &mut rp, &corpus, out_tokens)?;
+    table.row(&["random (control)".into(), format!("{r:.4}"),
+                "any".into(), "k/E = 0.25".into()]);
+
+    for (p, paper) in [
+        (Precision::Nf4, "0.9567"),
+        (Precision::Int8, "0.9734"),
+        (Precision::Fp16, "0.9994"),
+    ] {
+        let stats = recall::sep_recall(
+            &s.rt, &ws, p, AlignmentConfig::every_iteration(), &corpus, out_tokens,
+        )?;
+        table.row(&[
+            format!("SEP {} (ours)", p.label()),
+            format!("{:.4}", stats.recall()),
+            "whole model".into(),
+            paper.into(),
+        ]);
+    }
+    table.print();
+    println!("\npaper: SEP beats every baseline at every precision; the ordering");
+    println!("SEP > multi-layer/gate heuristics > statistical > random must hold.");
+    Ok(())
+}

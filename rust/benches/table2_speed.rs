@@ -1,0 +1,120 @@
+//! Table 2(i)+(ii): inference speed across all seven systems for the four
+//! (input, output) configurations, plus the GPU-memory audit.
+//! Paper reference (decode averages, tok/s): Transformers 4.89,
+//! OD-MoE 3.69, AdapMoE 3.13, Mixtral-Offloading 2.24, llama.cpp 0.82,
+//! HOBBIT 0.79, MoE-Infinity 0.69.
+
+mod common;
+
+use odmoe::cluster::HardwareProfile;
+use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
+use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
+use odmoe::metrics::memory as memaudit;
+use odmoe::util::table::Table;
+use odmoe::workload::speed::{run_speed_cell, SpeedCell};
+use odmoe::workload::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let s = common::Setup::new();
+    let ws = s.weights();
+    let l = s.rt.cfg.n_layers;
+    let (prompts, outs) = s.speed_size();
+    let vocab = s.rt.cfg.vocab_size as u32;
+
+    // Engines in the paper's column order.
+    let mut engines: Vec<Box<dyn Engine + '_>> = vec![
+        Box::new(OffloadEngine::new(&s.rt, ws.clone(), OffloadConfig::mixtral_offloading(l))?),
+        Box::new(OffloadEngine::new(&s.rt, ws.clone(), OffloadConfig::moe_infinity(l))?),
+        Box::new(OffloadEngine::new(&s.rt, ws.clone(), OffloadConfig::hobbit(l))?),
+        Box::new(OffloadEngine::new(&s.rt, ws.clone(), OffloadConfig::adapmoe(l))?),
+        Box::new(FullyCachedEngine::new(&s.rt, ws.clone())?),
+        Box::new(CpuEngine::new(&s.rt, ws.clone())?),
+        Box::new(OdMoeEngine::new(&s.rt, ws.clone(), OdMoeConfig::default())?),
+    ];
+    let names = ["MxOff", "MoE-Inf", "HOBBIT", "AdapMoE", "Transformers", "llama.cpp", "OD-MoE"];
+    let paper_decode = [2.2375, 0.6875, 0.7850, 3.1300, 4.8900, 0.8225, 3.6925];
+
+    println!("# Table 2(i) — inference speed (paper-scale, 32-layer equivalent)\n");
+    for metric in ["TTFT (ms)", "Decode tok/s", "Output tok/s"] {
+        println!("## {metric}");
+        let mut table = {
+            let mut h: Vec<String> = vec!["config".into()];
+            h.extend(names.iter().map(|n| n.to_string()));
+            let refs: Vec<&str> = h.iter().map(|x| x.as_str()).collect();
+            Table::new(&refs)
+        };
+        // Cells per engine per config.
+        let mut per_cfg: Vec<Vec<SpeedCell>> = Vec::new();
+        for e in engines.iter_mut() {
+            let mut cells = Vec::new();
+            for (input_len, corpus_seed) in [(16usize, 0x51u64), (128, 0x52)] {
+                let corpus = Corpus::generate(s.seed ^ corpus_seed, prompts, input_len, vocab);
+                for &out in &outs {
+                    cells.push(run_speed_cell(e.as_mut(), &corpus, out)?);
+                }
+            }
+            per_cfg.push(cells);
+        }
+        let n_cfg = per_cfg[0].len();
+        for c in 0..n_cfg {
+            let cell0 = &per_cfg[0][c];
+            let mut row = vec![format!("({}, {})", cell0.input_len, cell0.output_len)];
+            for cells in &per_cfg {
+                let cell = &cells[c];
+                row.push(match metric {
+                    "TTFT (ms)" => format!("{:.0}", cell.scaled.mean_ttft_ms()),
+                    "Decode tok/s" => format!("{:.3}", cell.scaled.decode_tps()),
+                    _ => format!("{:.3}", cell.scaled.output_tps()),
+                });
+            }
+            table.row(&row);
+        }
+        // Average row + paper reference for decode.
+        let mut avg_row = vec!["average".to_string()];
+        for cells in &per_cfg {
+            let vals: Vec<f64> = cells
+                .iter()
+                .map(|c| match metric {
+                    "TTFT (ms)" => c.scaled.mean_ttft_ms(),
+                    "Decode tok/s" => c.scaled.decode_tps(),
+                    _ => c.scaled.output_tps(),
+                })
+                .collect();
+            let avg = vals.iter().sum::<f64>() / vals.len() as f64;
+            avg_row.push(if metric == "TTFT (ms)" {
+                format!("{avg:.0}")
+            } else {
+                format!("{avg:.3}")
+            });
+        }
+        table.row(&avg_row);
+        if metric == "Decode tok/s" {
+            let mut p_row = vec!["paper avg".to_string()];
+            p_row.extend(paper_decode.iter().map(|v| format!("{v:.4}")));
+            table.row(&p_row);
+        }
+        table.print();
+        println!();
+    }
+
+    println!("# Table 2(ii) — GPU memory (GB)\n");
+    let p = HardwareProfile::rtx3090();
+    let mut table = Table::new(&["system", "ours", "paper"]);
+    for (audit, paper) in [
+        (memaudit::offloading("MxOff", &p, 64, 0.143, 0.35), "11"),
+        (memaudit::offloading("MoE-Inf", &p, 42, 0.5, 0.35), "21.5"),
+        (memaudit::offloading("HOBBIT", &p, 110, 0.25, 0.35), "22"),
+        (memaudit::offloading("AdapMoE", &p, 52, 0.143, 0.35), "8"),
+        (memaudit::fully_cached(&p), "180"),
+        (memaudit::cpu_only(), "N/A"),
+        (memaudit::odmoe(&p, 8), "60"),
+    ] {
+        table.row(&[
+            audit.system.to_string(),
+            format!("{:.1}", audit.total_gb()),
+            paper.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

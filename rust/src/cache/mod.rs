@@ -1,0 +1,179 @@
+//! Expert-cache policies for the offloading baselines (paper §2.2).
+//!
+//! OD-MoE itself is cache*less*; these policies exist to reproduce the
+//! systems it is compared against: LRU (Mixtral-Offloading/AdapMoE), LFU
+//! (MoE-Infinity), and HOBBIT's mixed-precision variant where evictions
+//! prefer low-precision copies.
+
+use std::collections::HashMap;
+
+/// A (layer, expert) cache key.
+pub type ExpertKey = (usize, usize);
+
+/// Eviction policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Lru,
+    Lfu,
+}
+
+/// Fixed-capacity expert cache with LRU/LFU eviction.
+///
+/// Capacity is in *expert slots* (the baselines size their GPU pools in
+/// whole experts). `touch` marks use; `insert` evicts as needed and
+/// reports the victims (the engine charges eviction/load time).
+#[derive(Debug)]
+pub struct ExpertCache {
+    capacity: usize,
+    policy: Policy,
+    /// key -> (last_use_tick, use_count)
+    entries: HashMap<ExpertKey, (u64, u64)>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ExpertCache {
+    pub fn new(capacity: usize, policy: Policy) -> Self {
+        Self { capacity, policy, entries: HashMap::new(), tick: 0, hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Record an access (for hit/miss stats + recency/frequency state).
+    /// Returns true on hit.
+    pub fn touch(&mut self, key: ExpertKey) -> bool {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.0 = self.tick;
+            e.1 += 1;
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Insert `key`, evicting per policy if full. Returns evicted keys.
+    pub fn insert(&mut self, key: ExpertKey) -> Vec<ExpertKey> {
+        self.tick += 1;
+        if self.entries.contains_key(&key) {
+            return Vec::new();
+        }
+        let mut evicted = Vec::new();
+        while self.entries.len() >= self.capacity && self.capacity > 0 {
+            let victim = *match self.policy {
+                Policy::Lru => self.entries.iter().min_by_key(|(_, v)| v.0).unwrap().0,
+                Policy::Lfu => self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, v)| (v.1, v.0))
+                    .unwrap()
+                    .0,
+            };
+            self.entries.remove(&victim);
+            evicted.push(victim);
+        }
+        if self.capacity > 0 {
+            self.entries.insert(key, (self.tick, 1));
+        }
+        evicted
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn clear_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &ExpertKey> {
+        self.entries.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = ExpertCache::new(2, Policy::Lru);
+        c.insert((0, 0));
+        c.insert((0, 1));
+        c.touch((0, 0)); // 0 most recent
+        let ev = c.insert((0, 2));
+        assert_eq!(ev, vec![(0, 1)]);
+        assert!(c.contains((0, 0)) && c.contains((0, 2)));
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut c = ExpertCache::new(2, Policy::Lfu);
+        c.insert((0, 0));
+        c.insert((0, 1));
+        c.touch((0, 0));
+        c.touch((0, 0));
+        c.touch((0, 1));
+        let ev = c.insert((0, 2));
+        assert_eq!(ev, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = ExpertCache::new(4, Policy::Lru);
+        assert!(!c.touch((1, 1)));
+        c.insert((1, 1));
+        assert!(c.touch((1, 1)));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let mut c = ExpertCache::new(3, Policy::Lru);
+        for e in 0..10 {
+            c.insert((0, e));
+            assert!(c.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn reinsert_is_noop() {
+        let mut c = ExpertCache::new(2, Policy::Lru);
+        c.insert((0, 0));
+        let ev = c.insert((0, 0));
+        assert!(ev.is_empty());
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = ExpertCache::new(0, Policy::Lru);
+        c.insert((0, 0));
+        assert!(c.is_empty());
+        assert!(!c.touch((0, 0)));
+    }
+}

@@ -1,0 +1,260 @@
+//! Virtual-time edge-cluster simulator.
+//!
+//! The paper's speed results are scheduling/queueing phenomena over four
+//! hardware quantities — main-node compute `t_M`, worker expert compute
+//! `t_W`, CPU→GPU expert-load time, and LAN message time. The simulator
+//! models each node's GPU and PCIe link plus the shared LAN as *resources
+//! with availability timestamps*; engines schedule tasks as
+//! `start = max(dependencies, resource_free)`, `end = start + duration`,
+//! exactly the dependency structure of the paper's Fig. 2/4/5 timing
+//! diagrams. Numerics (which expert, which token) come from real PJRT
+//! executions; only durations are simulated. See DESIGN.md §4.
+
+pub mod profile;
+
+pub use profile::HardwareProfile;
+
+use crate::trace::{EventKind, Trace};
+
+/// Milliseconds of virtual time.
+pub type Ms = f64;
+
+/// A serially-reusable resource (a GPU, a PCIe link, the LAN).
+///
+/// `acquire(earliest, duration)` books the resource for `duration` ms at
+/// the first instant >= both `earliest` and the resource's availability,
+/// returning the (start, end) of the booking.
+#[derive(Debug, Clone, Default)]
+pub struct Resource {
+    free_at: Ms,
+    busy_total: Ms,
+}
+
+impl Resource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn acquire(&mut self, earliest: Ms, duration: Ms) -> (Ms, Ms) {
+        debug_assert!(duration >= 0.0, "negative duration");
+        let start = self.free_at.max(earliest);
+        let end = start + duration;
+        self.free_at = end;
+        self.busy_total += duration;
+        (start, end)
+    }
+
+    /// Next instant this resource is idle.
+    pub fn free_at(&self) -> Ms {
+        self.free_at
+    }
+
+    /// Abort the in-flight booking at time `at`: the resource becomes free
+    /// at `at` if it was booked past it (mispredicted expert loads are
+    /// cancelled the moment the gate result disagrees — paper §3.1).
+    pub fn preempt(&mut self, at: Ms) {
+        if self.free_at > at {
+            self.busy_total -= self.free_at - at;
+            self.free_at = at;
+        }
+    }
+
+    /// Total booked time (utilization accounting).
+    pub fn busy_total(&self) -> Ms {
+        self.busy_total
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = 0.0;
+        self.busy_total = 0.0;
+    }
+}
+
+/// One edge node: a GPU (compute) + its private CPU→GPU link + a GPU
+/// memory ledger in *paper-scale* bytes (Table 2(ii) audit).
+#[derive(Debug)]
+pub struct Node {
+    pub id: usize,
+    pub gpu: Resource,
+    pub pcie: Resource,
+    /// Paper-scale bytes currently resident on the GPU.
+    pub gpu_bytes_used: u64,
+    /// High-water mark of `gpu_bytes_used`.
+    pub gpu_bytes_peak: u64,
+    /// Straggler injection: multiplies this node's PCIe transfer times
+    /// (1.0 = healthy; 3.0 = a degraded link; f64::INFINITY ~ dead link).
+    pub pcie_slowdown: f64,
+    /// Straggler injection for GPU compute on this node.
+    pub gpu_slowdown: f64,
+}
+
+impl Node {
+    pub fn new(id: usize) -> Self {
+        Self {
+            id,
+            gpu: Resource::new(),
+            pcie: Resource::new(),
+            gpu_bytes_used: 0,
+            gpu_bytes_peak: 0,
+            pcie_slowdown: 1.0,
+            gpu_slowdown: 1.0,
+        }
+    }
+
+    pub fn alloc(&mut self, bytes: u64) {
+        self.gpu_bytes_used += bytes;
+        self.gpu_bytes_peak = self.gpu_bytes_peak.max(self.gpu_bytes_used);
+    }
+
+    pub fn dealloc(&mut self, bytes: u64) {
+        debug_assert!(self.gpu_bytes_used >= bytes, "GPU memory underflow");
+        self.gpu_bytes_used = self.gpu_bytes_used.saturating_sub(bytes);
+    }
+
+    pub fn reset(&mut self) {
+        self.gpu.reset();
+        self.pcie.reset();
+        self.gpu_bytes_used = 0;
+        self.gpu_bytes_peak = 0;
+    }
+}
+
+/// The simulated testbed: main node, shadow node, `n_workers` workers and
+/// the shared LAN, with durations supplied by a [`HardwareProfile`].
+#[derive(Debug)]
+pub struct Cluster {
+    pub profile: HardwareProfile,
+    pub main: Node,
+    pub shadow: Node,
+    pub workers: Vec<Node>,
+    /// Shared Ethernet segment (the paper's 1 Gbps LAN).
+    pub lan: Resource,
+    pub trace: Trace,
+}
+
+impl Cluster {
+    pub fn new(profile: HardwareProfile, n_workers: usize) -> Self {
+        Self {
+            profile,
+            main: Node::new(0),
+            shadow: Node::new(1),
+            workers: (0..n_workers).map(|i| Node::new(2 + i)).collect(),
+            lan: Resource::new(),
+            trace: Trace::new(),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.main.reset();
+        self.shadow.reset();
+        for w in &mut self.workers {
+            w.reset();
+        }
+        self.lan.reset();
+        self.trace.clear();
+    }
+
+    /// Book a LAN message of `bytes`, earliest at `earliest`. Returns the
+    /// arrival time. Latency is paid per message; the shared segment is
+    /// serialized at its bandwidth.
+    pub fn lan_send(&mut self, earliest: Ms, bytes: f64, what: &'static str) -> Ms {
+        let dur = self.profile.lan_transfer_ms(bytes);
+        let (start, end) = self.lan.acquire(earliest, dur);
+        let arrival = end + self.profile.lan_lat_ms;
+        self.trace.push(EventKind::LanSend, usize::MAX, start, arrival, what);
+        arrival
+    }
+
+    /// Book an expert load over `worker`'s PCIe link starting no earlier
+    /// than `earliest`. Returns (start, done). Honors straggler injection.
+    pub fn expert_load(&mut self, worker: usize, earliest: Ms, bytes: f64) -> (Ms, Ms) {
+        let dur = self.profile.pcie_transfer_ms(bytes) * self.workers[worker].pcie_slowdown;
+        let (start, end) = self.workers[worker].pcie.acquire(earliest, dur);
+        self.trace
+            .push(EventKind::ExpertLoad, self.workers[worker].id, start, end, "EL");
+        (start, end)
+    }
+
+    /// Inject a straggler: worker `w`'s PCIe and GPU run `factor`x slower.
+    pub fn inject_straggler(&mut self, w: usize, factor: f64) {
+        assert!(factor >= 1.0, "straggler factor must be >= 1");
+        self.workers[w].pcie_slowdown = factor;
+        self.workers[w].gpu_slowdown = factor;
+    }
+
+    /// Peak paper-scale GPU bytes across all nodes (Table 2(ii)).
+    pub fn total_gpu_peak_bytes(&self) -> u64 {
+        self.main.gpu_bytes_peak
+            + self.shadow.gpu_bytes_peak
+            + self.workers.iter().map(|w| w.gpu_bytes_peak).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_serializes_bookings() {
+        let mut r = Resource::new();
+        let (s1, e1) = r.acquire(0.0, 10.0);
+        assert_eq!((s1, e1), (0.0, 10.0));
+        // Earliest 5 but resource busy until 10 -> starts at 10.
+        let (s2, e2) = r.acquire(5.0, 2.0);
+        assert_eq!((s2, e2), (10.0, 12.0));
+        // Idle gap respected.
+        let (s3, _) = r.acquire(20.0, 1.0);
+        assert_eq!(s3, 20.0);
+        assert_eq!(r.busy_total(), 13.0);
+    }
+
+    #[test]
+    fn node_memory_ledger() {
+        let mut n = Node::new(0);
+        n.alloc(100);
+        n.alloc(50);
+        n.dealloc(100);
+        n.alloc(20);
+        assert_eq!(n.gpu_bytes_used, 70);
+        assert_eq!(n.gpu_bytes_peak, 150);
+    }
+
+    #[test]
+    fn lan_is_shared_and_serialized() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let bytes = 1e6; // 1 MB over 1 Gbps = 8 ms
+        let a1 = c.lan_send(0.0, bytes, "m1");
+        let a2 = c.lan_send(0.0, bytes, "m2");
+        assert!(a2 > a1, "second message must queue behind the first");
+        let expected_first = c.profile.lan_transfer_ms(bytes) + c.profile.lan_lat_ms;
+        assert!((a1 - expected_first).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expert_loads_on_different_workers_overlap() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 4);
+        let bytes = c.profile.expert_bytes;
+        let (_, d0) = c.expert_load(0, 0.0, bytes);
+        let (_, d1) = c.expert_load(1, 0.0, bytes);
+        // Independent PCIe links: same finish time.
+        assert_eq!(d0, d1);
+        // Same worker serializes.
+        let (_, d2) = c.expert_load(0, 0.0, bytes);
+        assert!(d2 > d0);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        c.lan_send(0.0, 1e6, "x");
+        c.workers[0].alloc(10);
+        c.reset();
+        assert_eq!(c.lan.free_at(), 0.0);
+        assert_eq!(c.workers[0].gpu_bytes_used, 0);
+        assert_eq!(c.trace.len(), 0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Hardware profiles: the virtual-time duration model.
+//!
+//! All durations are *paper-scale*: they describe Mixtral-8x7B work units
+//! on the paper's testbed (RTX 3090/3080 nodes, PCIe 4.0 x16, 1 Gbps LAN),
+//! translated from the paper's own published figures:
+//!
+//! * fully-cached decode = 4.89 tok/s over 32 layers
+//!   → `t_nonexpert + 2*t_expert ≈ 6.3 ms/layer` on a 3090;
+//! * expert transfer ≈ 500 MB effective (FP16 weights + framing) over
+//!   PCIe 4.0 x16 at ≈ 25 GB/s → load ≈ 20.2 ms, just inside the Eq. (1)
+//!   no-stall window `4*t_M + 3*t_W ≈ 20.5 ms` — the knife's-edge the
+//!   whole design balances on;
+//! * llama.cpp CPU decode = 0.82 tok/s → ≈ 38 ms/layer on CPU;
+//! * LAN embedding message = 16 KB/token/hop, KV alignment = 256 KB/token.
+//!
+//! The calibration is recorded in EXPERIMENTS.md §Calibration. Simulated
+//! engines combine these quantities through the Fig. 2/4/5 dependency
+//! graphs; nothing else about speed is assumed.
+
+use super::Ms;
+
+/// Duration model for one testbed configuration.
+#[derive(Debug, Clone)]
+pub struct HardwareProfile {
+    pub name: &'static str,
+    /// Main-node non-expert compute per layer (attention, norms, gating).
+    pub t_nonexpert_ms: Ms,
+    /// One expert FFN (decode, 1 token) on a worker/main GPU.
+    pub t_expert_gpu_ms: Ms,
+    /// Final norm + LM head + sampling.
+    pub t_lm_head_ms: Ms,
+    /// One full shadow-model layer (quantized, incl. its experts) on the
+    /// shadow node. Must be < t_M + t_W for SEP to run ahead (paper §3.1).
+    pub t_shadow_layer_ms: Ms,
+    /// Bytes of one expert as *transferred/served on workers* at paper
+    /// scale: 500 MB effective (FP16 weights + transfer framing/buffer
+    /// overhead). The paper's own worker budget (<1 GB incl. workspace)
+    /// rules out raw FP32 (704 MB); 500 MB places the load time just
+    /// inside the Eq. (1) window — the knife's-edge the paper's design
+    /// balances on (numerics stay FP32 in this repo; in-flight precision
+    /// is a bandwidth property, see EXPERIMENTS.md §Calibration).
+    pub expert_bytes: f64,
+    /// Bytes of one FP32 expert (704 MB) — memory-audit + baseline
+    /// load-factor reference.
+    pub expert_bytes_fp32: f64,
+    /// Effective CPU→GPU bandwidth per node, GB/s.
+    pub pcie_gbps: f64,
+    /// Per-transfer PCIe latency.
+    pub pcie_lat_ms: Ms,
+    /// Shared LAN bandwidth, Gb/s.
+    pub lan_gbps: f64,
+    /// Per-message LAN latency.
+    pub lan_lat_ms: Ms,
+    /// Embedding message bytes per token per hop (paper §4.2: ~16 KB).
+    pub embed_msg_bytes: f64,
+    /// KV-cache alignment payload per token (paper §4.2: 256 KB).
+    pub kv_align_bytes: f64,
+    /// Token alignment payload (a few bytes).
+    pub token_msg_bytes: f64,
+    /// CPU-only per-layer times (llama.cpp reference).
+    pub cpu_nonexpert_ms: Ms,
+    pub cpu_expert_ms: Ms,
+    /// Batched-expert efficiency: computing a T-token batch on one expert
+    /// costs `t_expert * (1 + (T-1) * batch_marginal)` (GPU matmuls are
+    /// weight-bound at these sizes — a 128-token batch costs ~2x one
+    /// token, which is what makes the paper's Transformers TTFT(128) only
+    /// 447 ms).
+    pub batch_marginal: f64,
+    /// Same efficiency factor for the main node's batched prefill
+    /// attention.
+    pub prefill_attn_marginal: f64,
+    /// Paper-scale GPU-memory constants (Table 2(ii) audit).
+    pub nonexpert_bytes: f64,
+    pub shadow_model_bytes: f64,
+    pub activation_bytes: f64,
+}
+
+impl HardwareProfile {
+    /// The paper's main testbed: ten nodes with RTX 3090s.
+    pub fn rtx3090() -> Self {
+        Self {
+            name: "rtx3090",
+            t_nonexpert_ms: 3.5,
+            t_expert_gpu_ms: 1.4,
+            t_lm_head_ms: 2.0,
+            t_shadow_layer_ms: 2.8,
+            expert_bytes: 500e6,
+            expert_bytes_fp32: 704e6,
+            pcie_gbps: 25.0,
+            pcie_lat_ms: 0.2,
+            lan_gbps: 1.0,
+            lan_lat_ms: 0.15,
+            embed_msg_bytes: 16_384.0,
+            kv_align_bytes: 262_144.0,
+            token_msg_bytes: 64.0,
+            cpu_nonexpert_ms: 12.0,
+            cpu_expert_ms: 13.0,
+            batch_marginal: 0.02,
+            prefill_attn_marginal: 0.02,
+            nonexpert_bytes: 7e9,      // paper: 7 GB on the main node
+            shadow_model_bytes: 45e9,  // paper: 45 GB INT8 shadow
+            activation_bytes: 0.3e9,   // compute workspace per worker
+        }
+    }
+
+    /// Fig. 10 variant: worker GPUs replaced by RTX 3080s (slower expert
+    /// compute, slightly slower PCIe effective bandwidth).
+    pub fn rtx3080_workers() -> Self {
+        Self {
+            name: "rtx3080-workers",
+            t_expert_gpu_ms: 1.9,
+            pcie_gbps: 22.0,
+            ..Self::rtx3090()
+        }
+    }
+
+    /// Single-server reference for the baselines (8x3090 box; same GPU
+    /// speeds, one PCIe link for all offloading traffic).
+    pub fn gpu_server() -> Self {
+        Self { name: "gpu-server", ..Self::rtx3090() }
+    }
+
+    /// One expert-load over PCIe at `precision_factor` of FP32 bytes.
+    pub fn expert_load_ms(&self, precision_factor: f64) -> Ms {
+        self.pcie_lat_ms + self.pcie_transfer_ms(self.expert_bytes * precision_factor)
+    }
+
+    /// PCIe transfer time for `bytes`.
+    pub fn pcie_transfer_ms(&self, bytes: f64) -> Ms {
+        bytes / (self.pcie_gbps * 1e9) * 1e3
+    }
+
+    /// LAN serialization time for `bytes` (latency added per message by
+    /// the cluster).
+    pub fn lan_transfer_ms(&self, bytes: f64) -> Ms {
+        bytes * 8.0 / (self.lan_gbps * 1e9) * 1e3
+    }
+
+    /// Expert compute for a T-token batch (prefill mini-batches, §3.3).
+    pub fn expert_batch_ms(&self, t: usize) -> Ms {
+        if t == 0 {
+            return 0.0;
+        }
+        self.t_expert_gpu_ms * (1.0 + (t as f64 - 1.0) * self.batch_marginal)
+    }
+
+    /// Main-node task time `t_M` = non-expert compute + the two LAN hops
+    /// of one embedding message (paper Eq. 1 folds comm into t_M).
+    pub fn t_main_ms(&self) -> Ms {
+        self.t_nonexpert_ms
+            + 2.0 * (self.lan_lat_ms + self.lan_transfer_ms(self.embed_msg_bytes))
+    }
+
+    /// Worker task time `t_W` (experts in a group run in parallel).
+    pub fn t_worker_ms(&self) -> Ms {
+        self.t_expert_gpu_ms
+    }
+
+    /// Paper Eq. (1): max expert-load window without an I/O bottleneck for
+    /// `n_groups` staggered worker groups.
+    pub fn t_maxload_ms(&self, n_groups: usize) -> Ms {
+        n_groups as f64 * self.t_main_ms() + (n_groups as f64 - 1.0) * self.t_worker_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_cached_decode_matches_paper_calibration() {
+        // 32 layers * (t_nonexpert + 2*t_expert) + lm_head ≈ 204 ms/token
+        // → ~4.9 tok/s (paper Table 2: 4.89).
+        let p = HardwareProfile::rtx3090();
+        let ms = 32.0 * (p.t_nonexpert_ms + 2.0 * p.t_expert_gpu_ms) + p.t_lm_head_ms;
+        let tps = 1000.0 / ms;
+        assert!((tps - 4.89).abs() < 0.15, "calibration drifted: {tps}");
+    }
+
+    #[test]
+    fn expert_load_fits_inside_eq1_window() {
+        // The paper's design point: expert load fits the Eq. (1) window of
+        // 4 staggered groups — no steady-state stall, but with only
+        // moderate headroom (the stalls that remain come from alignment
+        // late-departures and mispredictions, not steady-state loading).
+        let p = HardwareProfile::rtx3090();
+        let load = p.expert_load_ms(1.0);
+        let window = p.t_maxload_ms(4);
+        assert!(load < window, "load {load} must fit in window {window}");
+        assert!(load > 0.5 * window, "design point should be tight-ish: {load} vs {window}");
+    }
+
+    #[test]
+    fn cpu_profile_matches_llamacpp_rate() {
+        let p = HardwareProfile::rtx3090();
+        let ms = 32.0 * (p.cpu_nonexpert_ms + 2.0 * p.cpu_expert_ms) + p.t_lm_head_ms;
+        let tps = 1000.0 / ms;
+        assert!((tps - 0.82).abs() < 0.08, "cpu calibration drifted: {tps}");
+    }
+
+    #[test]
+    fn shadow_runs_ahead_of_pipeline() {
+        let p = HardwareProfile::rtx3090();
+        assert!(p.t_shadow_layer_ms < p.t_main_ms() + p.t_worker_ms());
+    }
+
+    #[test]
+    fn lan_numbers() {
+        let p = HardwareProfile::rtx3090();
+        // 256 KB KV alignment over 1 Gbps ≈ 2.1 ms (paper §4.2).
+        let t = p.lan_transfer_ms(p.kv_align_bytes);
+        assert!((t - 2.097).abs() < 0.01, "{t}");
+        // 16 KB embedding ≈ 0.13 ms.
+        assert!((p.lan_transfer_ms(p.embed_msg_bytes) - 0.131).abs() < 0.01);
+    }
+
+    #[test]
+    fn batch_beats_sequential_but_not_free() {
+        let p = HardwareProfile::rtx3090();
+        let t8 = p.expert_batch_ms(8);
+        assert!(t8 < 8.0 * p.t_expert_gpu_ms, "batching must amortize");
+        assert!(t8 > p.t_expert_gpu_ms, "but not be free");
+    }
+
+    #[test]
+    fn rtx3080_is_slower_where_it_matters() {
+        let a = HardwareProfile::rtx3090();
+        let b = HardwareProfile::rtx3080_workers();
+        assert!(b.t_expert_gpu_ms > a.t_expert_gpu_ms);
+        assert!(b.pcie_gbps < a.pcie_gbps);
+        assert_eq!(a.t_nonexpert_ms, b.t_nonexpert_ms, "main node unchanged");
+    }
+}

@@ -1,0 +1,64 @@
+//! The serving engines: OD-MoE itself plus every baseline system the paper
+//! benchmarks against, all running real numerics over the PJRT runtime and
+//! virtual-time durations over the cluster simulator.
+
+pub mod baselines;
+pub mod odmoe;
+pub mod prefill;
+pub mod schedule;
+pub mod replication;
+pub mod server;
+
+pub use odmoe::{OdMoeConfig, OdMoeEngine, PredictorMode};
+pub use schedule::GroupSchedule;
+pub use server::{Request, Server, ServerStats};
+
+use crate::cluster::Ms;
+use anyhow::Result;
+
+/// Result of serving one prompt through an engine.
+#[derive(Debug, Clone, Default)]
+pub struct PromptResult {
+    /// Virtual time to first token (prefill), ms.
+    pub ttft_ms: Ms,
+    /// Virtual decode time for the remaining tokens, ms.
+    pub decode_ms: Ms,
+    /// All generated tokens (first produced by prefill).
+    pub tokens: Vec<u32>,
+    /// LM-head logits per generated token (only when requested).
+    pub step_logits: Vec<Vec<f32>>,
+    /// For predictor-driven engines: per decode iteration, per layer,
+    /// the number of correctly predicted experts (recall input, Eq. 2).
+    pub correct_per_token: Vec<Vec<usize>>,
+    /// Total I/O stall during decode (expert-wait beyond data arrival).
+    pub stall_ms: Ms,
+}
+
+impl PromptResult {
+    /// Decoded tokens per second (excludes the prefill token).
+    pub fn decode_tps(&self) -> f64 {
+        let n = self.tokens.len().saturating_sub(1);
+        if self.decode_ms <= 0.0 || n == 0 {
+            return 0.0;
+        }
+        n as f64 / (self.decode_ms / 1000.0)
+    }
+}
+
+/// A serving engine: prefill + autoregressive decode over one prompt.
+pub trait Engine {
+    fn name(&self) -> String;
+
+    /// Clear all per-request state (KV caches, virtual clocks, caches).
+    fn reset(&mut self) -> Result<()>;
+
+    /// Serve one prompt, generating `out_tokens` tokens (the first via
+    /// prefill). `collect_logits` retains per-step logits for fidelity
+    /// evaluation (memory-heavy; off for speed runs).
+    fn run_prompt(
+        &mut self,
+        prompt: &[u32],
+        out_tokens: usize,
+        collect_logits: bool,
+    ) -> Result<PromptResult>;
+}

@@ -1,0 +1,389 @@
+//! The OD-MoE engine: cacheless on-demand expert loading over distributed
+//! edge nodes (paper §3.1–§3.2).
+//!
+//! Per decode iteration the engine interleaves three concerns exactly as
+//! the paper's Fig. 2/4/5 timing diagrams do:
+//!
+//! 1. **Numerics** — the full-precision main model executes the real AOT
+//!    artifacts; the SEP shadow model runs its quantized replica.
+//! 2. **Prediction** — the shadow's routes become expert predictions with
+//!    availability times `shadow_start + (l+1) * t_shadow_layer`.
+//! 3. **Virtual time** — main-node blocks, LAN hops, per-worker expert
+//!    loads (PCIe), expert computes and mispredict reloads are booked on
+//!    the cluster's resources; each worker holds at most ONE expert at a
+//!    time (loaded just-in-time, evicted right after use — the cacheless
+//!    property).
+
+use anyhow::Result;
+
+use super::prefill::{simulate_odmoe_prefill, PrefillTiming};
+use super::schedule::GroupSchedule;
+use super::{Engine, PromptResult};
+use crate::cluster::{Cluster, HardwareProfile, Ms};
+use crate::engine::ModelState;
+use crate::metrics::correct_count;
+use crate::model::{Precision, WeightStore};
+use crate::predictor::baseline::RandomPredictor;
+use crate::predictor::{AlignmentConfig, Predictor, SepPredictor};
+use crate::runtime::Runtime;
+use crate::trace::EventKind;
+
+/// What drives expert prefetching (ablation cases of Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorMode {
+    /// SEP shadow model (cases 1–4 depending on alignment config).
+    Sep,
+    /// Random prefetch at token start, no shadow node (case 5).
+    Random,
+    /// No prefetch: load after the gate result only (case 6).
+    None,
+}
+
+/// Engine configuration (defaults = the paper's ten-node testbed).
+#[derive(Debug, Clone)]
+pub struct OdMoeConfig {
+    pub n_workers: usize,
+    pub shadow_precision: Precision,
+    pub align: AlignmentConfig,
+    pub predictor: PredictorMode,
+    /// Mini-batches per worker transfer during prefill (Fig. 7; 1 = one
+    /// large batch, 0 = adaptive per prompt length).
+    pub prefill_minibatches: usize,
+    pub profile: HardwareProfile,
+}
+
+impl Default for OdMoeConfig {
+    fn default() -> Self {
+        Self {
+            n_workers: 8,
+            shadow_precision: Precision::Int8,
+            align: AlignmentConfig::every_iteration(),
+            predictor: PredictorMode::Sep,
+            prefill_minibatches: 0, // adaptive
+            profile: HardwareProfile::rtx3090(),
+        }
+    }
+}
+
+/// Per-worker pipeline state carried across layers/tokens.
+#[derive(Debug, Clone, Copy)]
+struct WorkerState {
+    /// When this worker's previous expert compute ended (loads for its
+    /// next layer may only start then — single-expert residency).
+    last_ec_end: Ms,
+}
+
+/// The OD-MoE serving engine.
+pub struct OdMoeEngine<'rt> {
+    pub cfg: OdMoeConfig,
+    pub cluster: Cluster,
+    pub schedule: GroupSchedule,
+    main: ModelState<'rt>,
+    sep: Option<SepPredictor<'rt>>,
+    random: Option<RandomPredictor>,
+    workers: Vec<WorkerState>,
+    /// Virtual time at which the main node is ready for the next token.
+    now: Ms,
+    /// When the shadow node finished its previous iteration.
+    shadow_free: Ms,
+}
+
+impl<'rt> OdMoeEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, ws: WeightStore, cfg: OdMoeConfig) -> Result<Self> {
+        let schedule = GroupSchedule::new(cfg.n_workers, ws.cfg.top_k);
+        let cluster = Cluster::new(cfg.profile.clone(), cfg.n_workers);
+        let sep = match cfg.predictor {
+            PredictorMode::Sep => Some(SepPredictor::new(
+                rt,
+                &ws,
+                cfg.shadow_precision,
+                cfg.align,
+            )?),
+            _ => None,
+        };
+        let random = match cfg.predictor {
+            PredictorMode::Random => {
+                Some(RandomPredictor::new(0xACE, ws.cfg.n_experts, ws.cfg.top_k))
+            }
+            _ => None,
+        };
+        let main = ModelState::new(rt, ws)?;
+        let workers = vec![WorkerState { last_ec_end: 0.0 }; cfg.n_workers];
+        let mut engine = Self {
+            cfg,
+            cluster,
+            schedule,
+            main,
+            sep,
+            random,
+            workers,
+            now: 0.0,
+            shadow_free: 0.0,
+        };
+        engine.charge_static_memory();
+        Ok(engine)
+    }
+
+    fn charge_static_memory(&mut self) {
+        let p = &self.cluster.profile;
+        self.cluster.main.alloc(p.nonexpert_bytes as u64);
+        if self.sep.is_some() {
+            self.cluster.shadow.alloc(p.shadow_model_bytes as u64);
+        }
+        let act = p.activation_bytes as u64;
+        for w in &mut self.cluster.workers {
+            w.alloc(act);
+        }
+    }
+
+    /// Enable Fig. 2-style trace recording.
+    pub fn enable_trace(&mut self) {
+        self.cluster.trace.enabled = true;
+    }
+
+    pub fn recall_correct(&self) -> &ModelState<'rt> {
+        &self.main
+    }
+
+    /// One decode iteration: returns (output token, logits, per-layer
+    /// correct-prediction counts).
+    fn decode_iteration(
+        &mut self,
+        token: u32,
+        stall_ms: &mut Ms,
+    ) -> Result<(u32, Vec<f32>, Vec<usize>)> {
+        let cfg = self.main.cfg().clone();
+        let p = self.cluster.profile.clone();
+        let n_layers = cfg.n_layers;
+        let t0 = self.now;
+
+        // ---- Shadow node: alignment + emulation (numerics first). -------
+        let mut pred_routes: Vec<Option<Vec<usize>>> = vec![None; n_layers];
+        let mut pred_avail: Vec<Ms> = vec![f64::INFINITY; n_layers];
+        match self.cfg.predictor {
+            PredictorMode::Sep => {
+                let sep = self.sep.as_mut().unwrap();
+                sep.begin_token(&self.main, token)?;
+                // Late departure (Fig. 5): alignment payload must reach the
+                // shadow node before S_0 starts.
+                let align_delay = sep.alignment_delay_ms(&p);
+                let start = self.shadow_free.max(t0 + align_delay);
+                for l in 0..n_layers {
+                    let done = start + (l as f64 + 1.0) * p.t_shadow_layer_ms;
+                    pred_avail[l] = done + p.lan_lat_ms; // notify worker
+                    pred_routes[l] = Some(sep.predict(l).experts.clone());
+                    self.cluster.trace.push(
+                        EventKind::ShadowCompute,
+                        self.cluster.shadow.id,
+                        start + l as f64 * p.t_shadow_layer_ms,
+                        done,
+                        "S",
+                    );
+                }
+                self.shadow_free = start + n_layers as f64 * p.t_shadow_layer_ms;
+            }
+            PredictorMode::Random => {
+                let r = self.random.as_mut().unwrap();
+                for l in 0..n_layers {
+                    pred_routes[l] = r.predict(l);
+                    pred_avail[l] = t0;
+                }
+            }
+            PredictorMode::None => {}
+        }
+
+        // ---- Main model numerics (routes + token are ground truth). -----
+        let rec = self.main.decode_step(token)?;
+
+        // ---- Virtual-time pipeline over main + workers (Fig. 2). --------
+        let mut m_ready = t0; // when the main node may start M_l
+        let mut correct = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            // M_l: attention + gating on the main node.
+            let (m_start, m_end) =
+                self.cluster.main.gpu.acquire(m_ready, p.t_nonexpert_ms);
+            self.cluster
+                .trace
+                .push(EventKind::MainCompute, self.cluster.main.id, m_start, m_end, "M");
+
+            let actual = &rec.routes[l];
+            let predicted = pred_routes[l].as_deref().unwrap_or(&[]);
+            correct.push(correct_count(predicted, &actual.experts));
+
+            // Expert placement: slot j of the group takes predicted[j]
+            // (or the actual expert when prediction is late/absent/wrong).
+            let group = self.schedule.group_of(l);
+            let mut expert_ready: Ms = 0.0;
+            for slot in 0..self.schedule.group_size {
+                let w = self.schedule.worker_for(l, slot);
+                let ws = self.workers[w];
+                let predicted_e = predicted.get(slot).copied();
+                let actual_e = actual.experts[slot];
+                // The prediction-driven load can begin once the prediction
+                // reached the worker AND its previous expert was evicted.
+                // The reactive (gate-result-driven) path starts at M_l end.
+                let reactive_t = m_end + p.lan_lat_ms;
+                let ready = match predicted_e {
+                    Some(pe) if pred_avail[l] <= reactive_t => {
+                        let start_at = pred_avail[l].max(ws.last_ec_end);
+                        let (_, load_done) =
+                            self.cluster.expert_load(w, start_at, p.expert_bytes);
+                        self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                        if actual.experts.contains(&pe) {
+                            load_done
+                        } else {
+                            // Mispredict: abort any in-flight transfer the
+                            // moment the gate disagrees, evict, and reload
+                            // the correct expert.
+                            self.cluster.workers[w].dealloc(p.expert_bytes as u64);
+                            self.cluster.workers[w].pcie.preempt(reactive_t);
+                            let (_, reload_done) =
+                                self.cluster.expert_load(w, reactive_t, p.expert_bytes);
+                            self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                            reload_done
+                        }
+                    }
+                    _ => {
+                        // No usable prediction: load the actual expert on
+                        // the gate result (conventional offloading path).
+                        let start_at = reactive_t.max(ws.last_ec_end);
+                        let (_, load_done) =
+                            self.cluster.expert_load(w, start_at, p.expert_bytes);
+                        self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                        load_done
+                    }
+                };
+                let _ = actual_e;
+                expert_ready = expert_ready.max(ready);
+            }
+
+            // Embedding ships to the group after M_l.
+            let embed_arrival = self.cluster.lan_send(m_end, p.embed_msg_bytes, "embed");
+            let ec_earliest = embed_arrival.max(expert_ready);
+            *stall_ms += (expert_ready - embed_arrival).max(0.0);
+            if expert_ready > embed_arrival {
+                self.cluster.trace.push(
+                    EventKind::Stall,
+                    self.cluster.workers[self.schedule.worker_for(l, 0)].id,
+                    embed_arrival,
+                    expert_ready,
+                    "stall",
+                );
+            }
+
+            // EC_l on both devices of the group in parallel.
+            let mut ec_end_max = ec_earliest;
+            for slot in 0..self.schedule.group_size {
+                let w = self.schedule.worker_for(l, slot);
+                let ec_dur = p.t_expert_gpu_ms * self.cluster.workers[w].gpu_slowdown;
+                let (ec_start, ec_end) =
+                    self.cluster.workers[w].gpu.acquire(ec_earliest, ec_dur);
+                self.cluster.trace.push(
+                    EventKind::ExpertCompute,
+                    self.cluster.workers[w].id,
+                    ec_start,
+                    ec_end,
+                    "EC",
+                );
+                // Cacheless: evict immediately after compute.
+                self.cluster.workers[w].dealloc(p.expert_bytes as u64);
+                self.workers[w].last_ec_end = ec_end;
+                ec_end_max = ec_end_max.max(ec_end);
+            }
+            let _ = group;
+
+            // Combined expert output returns to the main node.
+            m_ready = self.cluster.lan_send(ec_end_max, p.embed_msg_bytes, "embed-back");
+        }
+
+        // LM head on the main node.
+        let (_, lm_end) = self.cluster.main.gpu.acquire(m_ready, p.t_lm_head_ms);
+        self.now = lm_end;
+        Ok((rec.token_out, rec.logits, correct))
+    }
+}
+
+impl<'rt> Engine for OdMoeEngine<'rt> {
+    fn name(&self) -> String {
+        let mode = match self.cfg.predictor {
+            PredictorMode::Sep => format!(
+                "sep-{}-T{}KV{}",
+                self.cfg.shadow_precision.label(),
+                fmt_period(self.cfg.align.token_period),
+                fmt_period(self.cfg.align.kv_period)
+            ),
+            PredictorMode::Random => "random-prefetch".into(),
+            PredictorMode::None => "no-prefetch".into(),
+        };
+        format!("od-moe({mode})")
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.main.reset();
+        if let Some(s) = self.sep.as_mut() {
+            s.reset();
+        }
+        self.cluster.reset();
+        for w in &mut self.workers {
+            w.last_ec_end = 0.0;
+        }
+        self.now = 0.0;
+        self.shadow_free = 0.0;
+        self.charge_static_memory();
+        Ok(())
+    }
+
+    fn run_prompt(
+        &mut self,
+        prompt: &[u32],
+        out_tokens: usize,
+        collect_logits: bool,
+    ) -> Result<PromptResult> {
+        anyhow::ensure!(out_tokens >= 1, "need at least one output token");
+        let mut res = PromptResult::default();
+
+        // ---- Prefill: numerics + §3.3 mini-batched virtual time. --------
+        let rec = self.main.prefill(prompt)?;
+        if let Some(s) = self.sep.as_mut() {
+            s.prefill(prompt)?;
+        }
+        let timing: PrefillTiming = simulate_odmoe_prefill(
+            &mut self.cluster,
+            self.main.cfg(),
+            prompt.len(),
+            self.cfg.prefill_minibatches,
+        );
+        res.ttft_ms = timing.ttft_ms;
+        self.now = timing.ttft_ms;
+        self.shadow_free = timing.ttft_ms;
+        res.tokens.push(rec.token_out);
+        if collect_logits {
+            res.step_logits.push(rec.logits.clone());
+        }
+
+        // ---- Decode. -----------------------------------------------------
+        let decode_start = self.now;
+        let mut token = rec.token_out;
+        let mut stall = 0.0;
+        for _ in 1..out_tokens {
+            let (next, logits, correct) = self.decode_iteration(token, &mut stall)?;
+            res.correct_per_token.push(correct);
+            res.tokens.push(next);
+            if collect_logits {
+                res.step_logits.push(logits);
+            }
+            token = next;
+        }
+        res.decode_ms = self.now - decode_start;
+        res.stall_ms = stall;
+        Ok(res)
+    }
+}
+
+fn fmt_period(p: usize) -> String {
+    if p == usize::MAX {
+        "∞".into()
+    } else {
+        p.to_string()
+    }
+}

@@ -1,0 +1,105 @@
+//! Worker grouping + round-robin layer assignment (paper §3.1, Fig. 2)
+//! and the Eq. (1) I/O-bottleneck condition.
+
+use crate::cluster::{HardwareProfile, Ms};
+
+/// Static group schedule: `n_workers` split into groups of `group_size`
+/// (= top-k, one expert per device); MoE layers are assigned to groups
+/// round-robin.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupSchedule {
+    pub n_workers: usize,
+    pub group_size: usize,
+}
+
+impl GroupSchedule {
+    pub fn new(n_workers: usize, group_size: usize) -> Self {
+        assert!(group_size > 0 && n_workers >= group_size,
+                "need at least one full group ({n_workers} workers, group {group_size})");
+        assert_eq!(n_workers % group_size, 0, "workers must split into equal groups");
+        Self { n_workers, group_size }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.n_workers / self.group_size
+    }
+
+    /// Group responsible for `layer` (round-robin, Fig. 2).
+    pub fn group_of(&self, layer: usize) -> usize {
+        layer % self.n_groups()
+    }
+
+    /// Worker ids of a group.
+    pub fn workers_of(&self, group: usize) -> std::ops::Range<usize> {
+        let g = group % self.n_groups();
+        g * self.group_size..(g + 1) * self.group_size
+    }
+
+    /// The worker that hosts slot `slot` (0..group_size) of `layer`.
+    pub fn worker_for(&self, layer: usize, slot: usize) -> usize {
+        debug_assert!(slot < self.group_size);
+        self.group_of(layer) * self.group_size + slot
+    }
+
+    /// Paper Eq. (1): maximum expert-load duration that causes no compute
+    /// stall, given the per-layer main/worker task times.
+    pub fn t_maxload(&self, t_main: Ms, t_worker: Ms) -> Ms {
+        let n = self.n_groups() as f64;
+        n * t_main + (n - 1.0) * t_worker
+    }
+
+    /// Is the pipeline I/O-bottleneck-free for `profile` at full
+    /// precision? (The §3.1 feasibility check.)
+    pub fn io_bottleneck_free(&self, p: &HardwareProfile) -> bool {
+        p.expert_load_ms(1.0) <= self.t_maxload(p.t_main_ms(), p.t_worker_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_grouping() {
+        // 8 workers, top-2 -> 4 groups of 2.
+        let s = GroupSchedule::new(8, 2);
+        assert_eq!(s.n_groups(), 4);
+        assert_eq!(s.group_of(0), 0);
+        assert_eq!(s.group_of(5), 1);
+        assert_eq!(s.workers_of(1), 2..4);
+        assert_eq!(s.worker_for(5, 1), 3);
+    }
+
+    #[test]
+    fn round_robin_covers_all_groups() {
+        let s = GroupSchedule::new(8, 2);
+        let groups: Vec<usize> = (0..8).map(|l| s.group_of(l)).collect();
+        assert_eq!(groups, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn eq1_matches_paper_example() {
+        // Paper: t_maxload(EL_{l+4}) = 4 t_M + 3 t_W for the 4-group testbed.
+        let s = GroupSchedule::new(8, 2);
+        assert_eq!(s.t_maxload(4.0, 2.0), 4.0 * 4.0 + 3.0 * 2.0);
+    }
+
+    #[test]
+    fn testbed_profile_is_feasible() {
+        let s = GroupSchedule::new(8, 2);
+        assert!(s.io_bottleneck_free(&HardwareProfile::rtx3090()));
+    }
+
+    #[test]
+    fn two_workers_single_group_is_io_bound() {
+        // With one group there is no staggered loading: window = t_M only.
+        let s = GroupSchedule::new(2, 2);
+        assert!(!s.io_bottleneck_free(&HardwareProfile::rtx3090()));
+    }
+
+    #[test]
+    #[should_panic(expected = "equal groups")]
+    fn uneven_split_rejected() {
+        GroupSchedule::new(7, 2);
+    }
+}

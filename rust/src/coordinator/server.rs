@@ -1,0 +1,207 @@
+//! Serving front-end: a request queue + FCFS scheduler over any
+//! [`Engine`] (the piece a deployment actually talks to; cf. the vLLM
+//! router split of API front-end vs model engine).
+//!
+//! Requests carry a prompt, a token budget and an arrival time (virtual
+//! ms). The server admits them FCFS — the paper's engines decode one
+//! sequence at a time (no batched decoding, matching §4.4's comparison
+//! setup) — and reports per-request queueing/service latency plus
+//! aggregate throughput. Time composes with the engines' virtual clocks:
+//! a request's service occupies the engine for its measured virtual
+//! duration.
+
+use anyhow::Result;
+
+use super::{Engine, PromptResult};
+use crate::cluster::Ms;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub out_tokens: usize,
+    /// Arrival time in virtual ms (relative to server start).
+    pub arrival_ms: Ms,
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub queued_ms: Ms,
+    pub ttft_ms: Ms,
+    pub total_ms: Ms,
+    pub tokens: Vec<u32>,
+    pub stall_ms: Ms,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub total_tokens: usize,
+    pub makespan_ms: Ms,
+    pub mean_queue_ms: Ms,
+    pub mean_ttft_ms: Ms,
+    pub p95_total_ms: Ms,
+}
+
+impl ServerStats {
+    /// End-to-end serving throughput (tokens per virtual second).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / (self.makespan_ms / 1000.0)
+    }
+}
+
+/// FCFS server over one engine.
+pub struct Server<'e> {
+    engine: &'e mut dyn Engine,
+    queue: Vec<Request>,
+}
+
+impl<'e> Server<'e> {
+    pub fn new(engine: &'e mut dyn Engine) -> Self {
+        Self { engine, queue: Vec::new() }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the queue FCFS (by arrival time, ties by id). Returns the
+    /// per-request completions and aggregate stats.
+    pub fn run(&mut self) -> Result<(Vec<Completion>, ServerStats)> {
+        self.queue.sort_by(|a, b| {
+            a.arrival_ms
+                .partial_cmp(&b.arrival_ms)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut completions = Vec::with_capacity(self.queue.len());
+        let mut clock: Ms = 0.0;
+        let mut total_tokens = 0usize;
+        for req in self.queue.drain(..) {
+            let start = clock.max(req.arrival_ms);
+            self.engine.reset()?;
+            let res: PromptResult = self.engine.run_prompt(&req.prompt, req.out_tokens, false)?;
+            let service = res.ttft_ms + res.decode_ms;
+            total_tokens += res.tokens.len();
+            completions.push(Completion {
+                id: req.id,
+                queued_ms: start - req.arrival_ms,
+                ttft_ms: start - req.arrival_ms + res.ttft_ms,
+                total_ms: start - req.arrival_ms + service,
+                tokens: res.tokens,
+                stall_ms: res.stall_ms,
+            });
+            clock = start + service;
+        }
+        let stats = summarize(&completions, clock, total_tokens);
+        Ok((completions, stats))
+    }
+}
+
+fn summarize(completions: &[Completion], makespan: Ms, total_tokens: usize) -> ServerStats {
+    if completions.is_empty() {
+        return ServerStats::default();
+    }
+    let n = completions.len() as f64;
+    let mut totals: Vec<Ms> = completions.iter().map(|c| c.total_ms).collect();
+    totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ServerStats {
+        served: completions.len(),
+        total_tokens,
+        makespan_ms: makespan,
+        mean_queue_ms: completions.iter().map(|c| c.queued_ms).sum::<Ms>() / n,
+        mean_ttft_ms: completions.iter().map(|c| c.ttft_ms).sum::<Ms>() / n,
+        p95_total_ms: totals[((totals.len() - 1) as f64 * 0.95) as usize],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Engine stub with fixed service times (server logic is engine-agnostic).
+    struct StubEngine {
+        ttft: Ms,
+        decode: Ms,
+    }
+
+    impl Engine for StubEngine {
+        fn name(&self) -> String {
+            "stub".into()
+        }
+        fn reset(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn run_prompt(&mut self, prompt: &[u32], out: usize, _: bool) -> Result<PromptResult> {
+            Ok(PromptResult {
+                ttft_ms: self.ttft,
+                decode_ms: self.decode,
+                tokens: vec![prompt[0]; out],
+                ..Default::default()
+            })
+        }
+    }
+
+    fn req(id: u64, arrival: Ms) -> Request {
+        Request { id, prompt: vec![1, 2, 3], out_tokens: 4, arrival_ms: arrival }
+    }
+
+    #[test]
+    fn fcfs_order_and_queueing() {
+        let mut e = StubEngine { ttft: 10.0, decode: 90.0 };
+        let mut s = Server::new(&mut e);
+        s.submit(req(1, 0.0));
+        s.submit(req(2, 0.0));
+        s.submit(req(3, 500.0)); // arrives after the first two finish
+        let (done, stats) = s.run().unwrap();
+        assert_eq!(done[0].queued_ms, 0.0);
+        assert_eq!(done[1].queued_ms, 100.0, "second waits for the first");
+        assert_eq!(done[2].queued_ms, 0.0, "late arrival finds an idle engine");
+        assert_eq!(stats.served, 3);
+        assert_eq!(stats.total_tokens, 12);
+        assert_eq!(stats.makespan_ms, 600.0);
+    }
+
+    #[test]
+    fn sorts_by_arrival_not_submission() {
+        let mut e = StubEngine { ttft: 1.0, decode: 1.0 };
+        let mut s = Server::new(&mut e);
+        s.submit(req(1, 100.0));
+        s.submit(req(2, 0.0));
+        let (done, _) = s.run().unwrap();
+        assert_eq!(done[0].id, 2);
+        assert_eq!(done[1].id, 1);
+    }
+
+    #[test]
+    fn throughput_accounts_makespan() {
+        let mut e = StubEngine { ttft: 0.0, decode: 1000.0 };
+        let mut s = Server::new(&mut e);
+        s.submit(req(1, 0.0));
+        s.submit(req(2, 0.0));
+        let (_, stats) = s.run().unwrap();
+        // 8 tokens over 2 virtual seconds.
+        assert!((stats.tokens_per_s() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_queue_is_fine() {
+        let mut e = StubEngine { ttft: 1.0, decode: 1.0 };
+        let mut s = Server::new(&mut e);
+        let (done, stats) = s.run().unwrap();
+        assert!(done.is_empty());
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.tokens_per_s(), 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Host-side padded KV cache for one layer.
+//!
+//! The cache is a fixed-capacity `[max_seq, n_kv_heads, head_dim]` buffer;
+//! the decode graph masks positions beyond the valid length. Rust owns the
+//! buffer (it is what SEP's KV alignment copies between nodes) and uploads
+//! it per decode call.
+
+use crate::model::ModelConfig;
+
+/// Fixed-capacity K/V buffers for one layer.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    row: usize,
+    /// Valid rows (tokens committed).
+    pub len: usize,
+    pub max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let row = cfg.n_kv_heads * cfg.head_dim;
+        Self {
+            k: vec![0.0; cfg.max_seq_len * row],
+            v: vec![0.0; cfg.max_seq_len * row],
+            row,
+            len: 0,
+            max_seq: cfg.max_seq_len,
+        }
+    }
+
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn reset(&mut self) {
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+        self.len = 0;
+    }
+
+    /// Commit the new token's K/V rows at position `pos`.
+    pub fn commit(&mut self, pos: usize, k_new: &[f32], v_new: &[f32]) {
+        assert!(pos < self.max_seq, "kv cache overflow at pos {pos}");
+        assert_eq!(k_new.len(), self.row);
+        assert_eq!(v_new.len(), self.row);
+        self.k[pos * self.row..(pos + 1) * self.row].copy_from_slice(k_new);
+        self.v[pos * self.row..(pos + 1) * self.row].copy_from_slice(v_new);
+        self.len = self.len.max(pos + 1);
+    }
+
+    /// Commit `count` rows starting at `start` (prefill path).
+    pub fn commit_block(&mut self, start: usize, count: usize, k_all: &[f32], v_all: &[f32]) {
+        assert!(start + count <= self.max_seq);
+        assert_eq!(k_all.len(), count * self.row);
+        let dst = start * self.row..(start + count) * self.row;
+        self.k[dst.clone()].copy_from_slice(k_all);
+        self.v[dst].copy_from_slice(v_all);
+        self.len = self.len.max(start + count);
+    }
+
+    /// Full-state copy (SEP KV alignment: shadow <- main).
+    pub fn copy_from(&mut self, other: &KvCache) {
+        debug_assert_eq!(self.row, other.row);
+        self.k.copy_from_slice(&other.k);
+        self.v.copy_from_slice(&other.v);
+        self.len = other.len;
+    }
+
+    /// Bytes a full-cache alignment transfer would ship for `tokens` rows
+    /// of one layer (2 tensors * row floats * 4 bytes).
+    pub fn align_bytes_per_token(&self) -> usize {
+        2 * self.row * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn cache() -> KvCache {
+        KvCache::new(&ModelConfig::default())
+    }
+
+    #[test]
+    fn commit_and_read_back() {
+        let mut c = cache();
+        let row: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        c.commit(0, &row, &row);
+        assert_eq!(c.len, 1);
+        assert_eq!(&c.k()[..32], row.as_slice());
+        assert_eq!(c.k()[32], 0.0);
+    }
+
+    #[test]
+    fn commit_block_matches_sequential_commits() {
+        let mut a = cache();
+        let mut b = cache();
+        let rows: Vec<f32> = (0..4 * 32).map(|i| i as f32 * 0.5).collect();
+        for t in 0..4 {
+            a.commit(t, &rows[t * 32..(t + 1) * 32], &rows[t * 32..(t + 1) * 32]);
+        }
+        b.commit_block(0, 4, &rows, &rows);
+        assert_eq!(a.k(), b.k());
+        assert_eq!(a.len, b.len);
+    }
+
+    #[test]
+    fn copy_from_replicates_state() {
+        let mut a = cache();
+        let row = vec![1.5f32; 32];
+        a.commit(0, &row, &row);
+        a.commit(1, &row, &row);
+        let mut b = cache();
+        b.copy_from(&a);
+        assert_eq!(b.len, 2);
+        assert_eq!(a.k(), b.k());
+    }
+
+    #[test]
+    #[should_panic(expected = "kv cache overflow")]
+    fn overflow_panics() {
+        let mut c = cache();
+        let row = vec![0f32; 32];
+        c.commit(512, &row, &row);
+    }
+
+    #[test]
+    fn align_bytes_matches_paper_formula_scaled() {
+        // Paper: 8 KB per token per layer at Mixtral scale (2 * 8 heads *
+        // 128 dim * 4 B = 8 KiB). Tiny-Mixtral: 2 * 2 * 16 * 4 = 256 B.
+        assert_eq!(cache().align_bytes_per_token(), 256);
+    }
+}

@@ -1,0 +1,279 @@
+//! Full-model forward over the PJRT runtime: KV caches, decode steps,
+//! prefill, greedy generation.
+//!
+//! [`ModelState`] is the numerics workhorse shared by every node role and
+//! engine: the full-precision main model, the quantized SEP shadow model,
+//! and all baseline engines drive one of these each. Virtual-time cost
+//! accounting lives elsewhere (`cluster`); this module is purely about
+//! getting the right numbers out of the AOT artifacts.
+
+pub mod kv;
+
+use anyhow::Result;
+
+use crate::model::{ModelConfig, WeightStore};
+use crate::runtime::{DeviceModel, Runtime, EXPERT_FFN_SIZES, PREFILL_SIZES};
+
+pub use kv::KvCache;
+
+/// Per-layer routing decision for one token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    /// Selected expert ids, descending router weight (`top_k` of them).
+    pub experts: Vec<usize>,
+    /// Softmax weights over the selection (same order).
+    pub weights: Vec<f32>,
+}
+
+/// Everything observed while decoding one token.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub token_in: u32,
+    pub token_out: u32,
+    /// Routing per layer (`n_layers` entries).
+    pub routes: Vec<Route>,
+    /// LM-head logits (`vocab_size`).
+    pub logits: Vec<f32>,
+}
+
+/// Hook controlling how the expert MLPs of one layer are executed.
+///
+/// Arguments: `(layer, route, x_resid[1,d], h_norm[1,d])`; returns the
+/// *combined* expert contribution `[1, d]` to add to the residual stream.
+/// Engines override this to skip experts (AdapMoE), run quantized tiers
+/// (HOBBIT), or pull weights from a different store; `x_resid` also feeds
+/// their lookahead predictors.
+pub type ExpertExec<'a> = dyn FnMut(usize, &Route, &[f32], &[f32]) -> Result<Vec<f32>> + 'a;
+
+/// Host-side state of one model replica (weights + KV caches + position).
+pub struct ModelState<'rt> {
+    pub rt: &'rt Runtime,
+    pub ws: WeightStore,
+    dm: DeviceModel,
+    pub caches: Vec<KvCache>,
+    /// Tokens consumed so far (== valid KV length).
+    pub pos: usize,
+}
+
+impl<'rt> ModelState<'rt> {
+    pub fn new(rt: &'rt Runtime, ws: WeightStore) -> Result<Self> {
+        let dm = DeviceModel::upload(rt, &ws)?;
+        let caches = (0..ws.cfg.n_layers).map(|_| KvCache::new(&ws.cfg)).collect();
+        Ok(Self { rt, ws, dm, caches, pos: 0 })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.ws.cfg
+    }
+
+    /// Clear caches and position for a fresh request.
+    pub fn reset(&mut self) {
+        for c in &mut self.caches {
+            c.reset();
+        }
+        self.pos = 0;
+    }
+
+    /// Default expert execution: run all selected experts from own weights
+    /// and combine with router weights.
+    pub fn run_experts(&self, layer: usize, route: &Route, h: &[f32]) -> Result<Vec<f32>> {
+        let d = self.cfg().d_model;
+        let mut acc = vec![0f32; d];
+        for (i, &e) in route.experts.iter().enumerate() {
+            let y = self.rt.expert_ffn(&self.dm, layer, e, h, 1)?;
+            let w = route.weights[i];
+            for j in 0..d {
+                acc[j] += w * y[j];
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Decode one token with the default expert execution.
+    pub fn decode_step(&mut self, token: u32) -> Result<StepRecord> {
+        self.decode_inner(token, None)
+    }
+
+    /// Decode one token, delegating expert execution to `exec`.
+    pub fn decode_step_with(&mut self, token: u32, exec: &mut ExpertExec) -> Result<StepRecord> {
+        self.decode_inner(token, Some(exec))
+    }
+
+    fn decode_inner(&mut self, token: u32, mut exec: Option<&mut ExpertExec>) -> Result<StepRecord> {
+        let cfg = self.cfg().clone();
+        anyhow::ensure!(self.pos < cfg.max_seq_len, "KV cache full");
+        let mut x = self.ws.embed(token).to_vec();
+        let mut routes = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let out = self.rt.main_block_decode(
+                &self.dm,
+                l,
+                &x,
+                self.caches[l].k(),
+                self.caches[l].v(),
+                self.pos,
+            )?;
+            self.caches[l].commit(self.pos, &out.k_new, &out.v_new);
+            let route = Route {
+                experts: out.route_idx.iter().map(|&i| i as usize).collect(),
+                weights: out.route_w.clone(),
+            };
+            let contrib = match exec.as_mut() {
+                Some(f) => f(l, &route, &out.x_resid, &out.h_norm)?,
+                None => self.run_experts(l, &route, &out.h_norm)?,
+            };
+            x = out.x_resid;
+            for j in 0..cfg.d_model {
+                x[j] += contrib[j];
+            }
+            routes.push(route);
+        }
+        let (logits, token_out) = self.rt.lm_head(&self.dm, &x)?;
+        self.pos += 1;
+        Ok(StepRecord { token_in: token, token_out, routes, logits })
+    }
+
+    /// Batched prefill over the whole prompt. Returns per-token records
+    /// (logits only for the last token) — mirrors the paper's §3.3 batched
+    /// prefill where all experts are exercised in grouped matmuls.
+    pub fn prefill(&mut self, prompt: &[u32]) -> Result<StepRecord> {
+        let cfg = self.cfg().clone();
+        let t = prompt.len();
+        anyhow::ensure!(
+            PREFILL_SIZES.contains(&t),
+            "no prefill executable for prompt length {t} (have {PREFILL_SIZES:?})"
+        );
+        anyhow::ensure!(self.pos == 0, "prefill requires a fresh state");
+        let d = cfg.d_model;
+        let mut x: Vec<f32> = Vec::with_capacity(t * d);
+        for &tok in prompt {
+            x.extend_from_slice(self.ws.embed(tok));
+        }
+        let mut last_routes = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let out = self.rt.main_block_prefill(&self.dm, l, &x, t)?;
+            self.caches[l].commit_block(0, t, &out.k_all, &out.v_all);
+            // Group tokens by expert and run batched expert FFNs (padded to
+            // the nearest specialized size).
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_experts];
+            for tok in 0..t {
+                for k in 0..cfg.top_k {
+                    groups[out.route_idx[tok * cfg.top_k + k] as usize].push(tok);
+                }
+            }
+            let mut xnew = out.x_resid.clone();
+            for (e, toks) in groups.iter().enumerate() {
+                if toks.is_empty() {
+                    continue;
+                }
+                let bt = padded_batch(toks.len());
+                let mut h = vec![0f32; bt * d];
+                for (row, &tok) in toks.iter().enumerate() {
+                    h[row * d..(row + 1) * d]
+                        .copy_from_slice(&out.h_norm[tok * d..(tok + 1) * d]);
+                }
+                let y = self.rt.expert_ffn(&self.dm, l, e, &h, bt)?;
+                for (row, &tok) in toks.iter().enumerate() {
+                    // Router weight of expert e for this token.
+                    let mut w = 0f32;
+                    for k in 0..cfg.top_k {
+                        if out.route_idx[tok * cfg.top_k + k] as usize == e {
+                            w = out.route_w[tok * cfg.top_k + k];
+                        }
+                    }
+                    for j in 0..d {
+                        xnew[tok * d + j] += w * y[row * d + j];
+                    }
+                }
+            }
+            x = xnew;
+            // Keep the last token's route for reporting.
+            let tok = t - 1;
+            last_routes.push(Route {
+                experts: (0..cfg.top_k)
+                    .map(|k| out.route_idx[tok * cfg.top_k + k] as usize)
+                    .collect(),
+                weights: (0..cfg.top_k)
+                    .map(|k| out.route_w[tok * cfg.top_k + k])
+                    .collect(),
+            });
+        }
+        let last = &x[(t - 1) * d..t * d];
+        let (logits, token_out) = self.rt.lm_head(&self.dm, last)?;
+        self.pos = t;
+        Ok(StepRecord { token_in: *prompt.last().unwrap(), token_out, routes: last_routes, logits })
+    }
+
+    /// Per-layer expert-activation sets across ALL prompt tokens during
+    /// prefill (for the §3.3 activation-count claim / bench).
+    pub fn prefill_activations(&mut self, prompt: &[u32]) -> Result<Vec<Vec<bool>>> {
+        let cfg = self.cfg().clone();
+        let t = prompt.len();
+        anyhow::ensure!(PREFILL_SIZES.contains(&t) && self.pos == 0);
+        let d = cfg.d_model;
+        let mut x: Vec<f32> = Vec::with_capacity(t * d);
+        for &tok in prompt {
+            x.extend_from_slice(self.ws.embed(tok));
+        }
+        let mut activations = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let out = self.rt.main_block_prefill(&self.dm, l, &x, t)?;
+            let mut act = vec![false; cfg.n_experts];
+            for v in &out.route_idx {
+                act[*v as usize] = true;
+            }
+            activations.push(act);
+            // Continue the residual stream exactly as prefill() does.
+            self.caches[l].commit_block(0, t, &out.k_all, &out.v_all);
+            let mut xnew = out.x_resid.clone();
+            for tok in 0..t {
+                for k in 0..cfg.top_k {
+                    let e = out.route_idx[tok * cfg.top_k + k] as usize;
+                    let w = out.route_w[tok * cfg.top_k + k];
+                    let h = &out.h_norm[tok * d..(tok + 1) * d];
+                    let mut hp = vec![0f32; d];
+                    hp.copy_from_slice(h);
+                    let y = self.rt.expert_ffn(&self.dm, l, e, &hp, 1)?;
+                    for j in 0..d {
+                        xnew[tok * d + j] += w * y[j];
+                    }
+                }
+            }
+            x = xnew;
+        }
+        self.reset();
+        Ok(activations)
+    }
+
+    /// Overwrite this model's KV caches with `other`'s (SEP KV alignment).
+    pub fn align_kv_from(&mut self, other: &ModelState) {
+        for (mine, theirs) in self.caches.iter_mut().zip(&other.caches) {
+            mine.copy_from(theirs);
+        }
+        self.pos = other.pos;
+    }
+}
+
+/// Smallest specialized expert-FFN batch size >= n (capped at the largest).
+pub fn padded_batch(n: usize) -> usize {
+    for &s in &EXPERT_FFN_SIZES {
+        if s >= n {
+            return s;
+        }
+    }
+    *EXPERT_FFN_SIZES.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_batch_picks_next_size() {
+        assert_eq!(padded_batch(1), 1);
+        assert_eq!(padded_batch(3), 4);
+        assert_eq!(padded_batch(9), 16);
+        assert_eq!(padded_batch(128), 128);
+        assert_eq!(padded_batch(129), 128); // capped; callers chunk
+    }
+}

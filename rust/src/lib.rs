@@ -1,0 +1,42 @@
+//! # OD-MoE — On-Demand Expert Loading for Cacheless Edge-Distributed MoE Inference
+//!
+//! Reproduction of the CS.DC 2025 paper as a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * **Layer 1/2 (build-time Python)** — Tiny-Mixtral compute graphs with
+//!   Pallas kernels for the hot spots, AOT-lowered to HLO text under
+//!   `artifacts/` by `make artifacts`.
+//! * **Layer 3 (this crate)** — the coordinator: PJRT runtime, virtual-time
+//!   edge-cluster simulator, SEP shadow-model predictor with token/KV
+//!   alignment, worker grouping + round-robin decode pipeline, prefill
+//!   mini-batching, and the full set of baseline engines and predictors
+//!   the paper benchmarks against.
+//!
+//! Quick tour:
+//! * [`runtime::Runtime`] — loads + executes the AOT artifacts on the PJRT
+//!   CPU client (Python never runs on the request path).
+//! * [`engine::ModelState`] — full-model forward (prefill + decode) over the
+//!   runtime; used both by the full-precision main node and the quantized
+//!   shadow node.
+//! * [`coordinator::OdMoeEngine`] — the paper's system: cacheless on-demand
+//!   expert loading driven by [`predictor::SepPredictor`].
+//! * [`coordinator::baselines`] — Mixtral-Offloading / MoE-Infinity /
+//!   HOBBIT / AdapMoE / fully-cached / CPU-only reference engines.
+//! * [`workload`] — prompt corpora and the speed/quality harnesses that
+//!   regenerate every table and figure of the paper's evaluation.
+
+pub mod cache;
+pub mod cluster;
+pub mod coordinator;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod predictor;
+pub mod quant;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+pub mod workload;
+
+pub use model::config::ModelConfig;
+pub use runtime::Runtime;

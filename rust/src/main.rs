@@ -1,0 +1,44 @@
+//! `od-moe` CLI — leader entrypoint for the OD-MoE reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's evaluation (see DESIGN.md §5):
+//!
+//! ```text
+//! od-moe serve      [--prompts N] [--out-tokens N]    end-to-end OD-MoE serving
+//! od-moe recall     [--prompts N] [--out-tokens N]    SEP recall curves (Fig. 3/6)
+//! od-moe speed      [--prompts N] [--out-tokens N]    decoding speed (Fig. 8/9/10)
+//! od-moe predictors [--prompts N] [--out-tokens N]    Table 1 comparison
+//! od-moe quality    [--prompts N] [--out-tokens N]    Table 2(iii) fidelity
+//! od-moe memory                                       Table 2(ii) GPU-memory audit
+//!
+//! global flags: --artifacts DIR   --seed N
+//! ```
+
+use anyhow::{bail, Result};
+use odmoe::util::cli::Args;
+
+mod cli;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.subcommand.clone() else {
+        eprintln!("usage: od-moe <serve|recall|speed|predictors|quality|memory> [--flags]");
+        bail!("missing subcommand");
+    };
+    let seed = args.u64_or("seed", 42)?;
+    if cmd == "memory" {
+        // No runtime needed for the static memory audit.
+        return cli::memory();
+    }
+    let rt = match args.get("artifacts") {
+        Some(dir) => odmoe::Runtime::load(dir)?,
+        None => odmoe::Runtime::load_default()?,
+    };
+    match cmd.as_str() {
+        "serve" => cli::serve(&rt, seed, &args),
+        "recall" => cli::recall(&rt, seed, &args),
+        "speed" => cli::speed(&rt, seed, &args),
+        "predictors" => cli::predictors(&rt, seed, &args),
+        "quality" => cli::quality(&rt, seed, &args),
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}

@@ -1,0 +1,112 @@
+//! GPU-memory audit at paper scale (Table 2(ii)).
+//!
+//! Deterministic accounting of what each serving system must keep
+//! GPU-resident for Mixtral-8x7B, using the paper's own constants
+//! (704 MB FP32 expert, 7 GB non-expert stack, 45 GB INT8 shadow model).
+
+use crate::cluster::HardwareProfile;
+
+/// GPU-memory breakdown of one serving system, bytes at paper scale.
+#[derive(Debug, Clone)]
+pub struct MemoryAudit {
+    pub system: &'static str,
+    pub per_node: Vec<(String, f64)>,
+}
+
+impl MemoryAudit {
+    pub fn total_gb(&self) -> f64 {
+        self.per_node.iter().map(|(_, b)| b).sum::<f64>() / 1e9
+    }
+}
+
+/// Mixtral-8x7B constants used by the audit.
+pub const PAPER_LAYERS: usize = 32;
+pub const PAPER_EXPERTS_PER_LAYER: usize = 8;
+
+/// OD-MoE: main node (non-experts) + shadow (quantized full model) + one
+/// in-flight expert + workspace per worker.
+pub fn odmoe(p: &HardwareProfile, n_workers: usize) -> MemoryAudit {
+    let mut per_node = vec![
+        ("main".to_string(), p.nonexpert_bytes),
+        ("shadow".to_string(), p.shadow_model_bytes),
+    ];
+    for i in 0..n_workers {
+        per_node.push((format!("worker{i}"), p.expert_bytes + p.activation_bytes));
+    }
+    MemoryAudit { system: "OD-MoE", per_node }
+}
+
+/// Fully GPU-cached full-precision deployment (Transformers reference).
+pub fn fully_cached(p: &HardwareProfile) -> MemoryAudit {
+    let experts = (PAPER_LAYERS * PAPER_EXPERTS_PER_LAYER) as f64 * p.expert_bytes_fp32;
+    MemoryAudit {
+        system: "Transformers",
+        per_node: vec![("server".into(), p.nonexpert_bytes + experts)],
+    }
+}
+
+/// Generic single-GPU offloading system: non-experts + a cache of
+/// `cached_experts` at `precision_factor` of FP32 bytes + workspace.
+pub fn offloading(
+    system: &'static str,
+    p: &HardwareProfile,
+    cached_experts: usize,
+    precision_factor: f64,
+    nonexpert_factor: f64,
+) -> MemoryAudit {
+    let cache = cached_experts as f64 * p.expert_bytes_fp32 * precision_factor;
+    MemoryAudit {
+        system,
+        per_node: vec![(
+            "server".into(),
+            p.nonexpert_bytes * nonexpert_factor + cache + p.activation_bytes,
+        )],
+    }
+}
+
+/// llama.cpp runs on CPU: zero GPU bytes.
+pub fn cpu_only() -> MemoryAudit {
+    MemoryAudit { system: "llama.cpp", per_node: vec![("server".into(), 0.0)] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn odmoe_uses_about_one_third_of_fully_cached() {
+        let p = HardwareProfile::rtx3090();
+        let od = odmoe(&p, 8).total_gb();
+        let full = fully_cached(&p).total_gb();
+        // Paper: 60 GB vs 180 GB.
+        assert!((od - 57.2).abs() < 4.0, "od-moe total {od}");
+        assert!((full - 187.0).abs() < 8.0, "fully cached total {full}");
+        let ratio = od / full;
+        assert!((ratio - 1.0 / 3.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn worker_nodes_stay_under_1gb_plus_expert() {
+        let p = HardwareProfile::rtx3090();
+        let audit = odmoe(&p, 8);
+        for (name, bytes) in &audit.per_node {
+            if name.starts_with("worker") {
+                // Paper: < 1 GB per worker (one fp32 expert + workspace).
+                assert!(*bytes <= 1.1e9, "{name}: {bytes}");
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_only_uses_no_gpu() {
+        assert_eq!(cpu_only().total_gb(), 0.0);
+    }
+
+    #[test]
+    fn offloading_memory_scales_with_cache() {
+        let p = HardwareProfile::rtx3090();
+        let small = offloading("a", &p, 16, 0.25, 0.5).total_gb();
+        let big = offloading("b", &p, 64, 0.25, 0.5).total_gb();
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,267 @@
+//! Evaluation metrics: recall (paper Eqs. 2–3), speed aggregation,
+//! GPU-memory audit (Table 2(ii)), and output fidelity (Table 2(iii)
+//! substitution — see DESIGN.md §2).
+
+pub mod memory;
+
+use crate::cluster::Ms;
+
+/// Recall accumulator for expert-activation prediction, following the
+/// paper's Eqs. (2)–(3): `c(q,n,l)` correctly-predicted experts out of
+/// `k*L` per (prompt, token), bucketed by output-token index `n`.
+#[derive(Debug, Clone)]
+pub struct RecallStats {
+    top_k: usize,
+    n_layers: usize,
+    /// Per token index: (sum of c(q,n,l) over q,l ; number of prompts seen).
+    per_token: Vec<(u64, u64)>,
+}
+
+impl RecallStats {
+    pub fn new(top_k: usize, n_layers: usize) -> Self {
+        Self { top_k, n_layers, per_token: Vec::new() }
+    }
+
+    /// Record one (prompt, token) observation: `correct[l]` = number of
+    /// correctly predicted experts at layer `l` (0..=top_k each).
+    pub fn record_token(&mut self, token_idx: usize, correct_per_layer: &[usize]) {
+        assert_eq!(correct_per_layer.len(), self.n_layers);
+        if self.per_token.len() <= token_idx {
+            self.per_token.resize(token_idx + 1, (0, 0));
+        }
+        let c: u64 = correct_per_layer.iter().map(|&c| {
+            assert!(c <= self.top_k, "c(q,n,l) > k");
+            c as u64
+        }).sum();
+        let slot = &mut self.per_token[token_idx];
+        slot.0 += c;
+        slot.1 += 1;
+    }
+
+    /// Eq. (2): recall for output-token index `n`.
+    pub fn recall_at(&self, n: usize) -> Option<f64> {
+        let (c, q) = *self.per_token.get(n)?;
+        if q == 0 {
+            return None;
+        }
+        Some(c as f64 / (self.top_k * self.n_layers) as f64 / q as f64)
+    }
+
+    /// Eq. (3): overall recall across all observed tokens.
+    pub fn recall(&self) -> f64 {
+        let c: u64 = self.per_token.iter().map(|&(c, _)| c).sum();
+        let q: u64 = self.per_token.iter().map(|&(_, q)| q).sum();
+        if q == 0 {
+            return 0.0;
+        }
+        c as f64 / (self.top_k * self.n_layers) as f64 / q as f64
+    }
+
+    /// Recall-vs-token-index curve (Fig. 3 series).
+    pub fn curve(&self) -> Vec<f64> {
+        (0..self.per_token.len())
+            .map(|n| self.recall_at(n).unwrap_or(f64::NAN))
+            .collect()
+    }
+
+    pub fn max_token(&self) -> usize {
+        self.per_token.len()
+    }
+}
+
+/// Count of correctly predicted experts: |predicted ∩ actual| (order and
+/// router weights are irrelevant for loading).
+pub fn correct_count(predicted: &[usize], actual: &[usize]) -> usize {
+    actual.iter().filter(|e| predicted.contains(e)).count()
+}
+
+/// Speed statistics for one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct SpeedStats {
+    /// Time-to-first-token per prompt (prefill latency), ms.
+    pub ttft_ms: Vec<Ms>,
+    /// Decode time per prompt (excluding prefill), ms, with token count.
+    pub decode: Vec<(Ms, usize)>,
+}
+
+impl SpeedStats {
+    pub fn record(&mut self, ttft: Ms, decode_ms: Ms, out_tokens: usize) {
+        self.ttft_ms.push(ttft);
+        self.decode.push((decode_ms, out_tokens));
+    }
+
+    pub fn mean_ttft_ms(&self) -> f64 {
+        mean(&self.ttft_ms)
+    }
+
+    /// Decoding throughput (paper's primary metric): decoded tokens per
+    /// second of decode time, averaged over prompts.
+    pub fn decode_tps(&self) -> f64 {
+        let per: Vec<f64> = self
+            .decode
+            .iter()
+            .filter(|(ms, n)| *ms > 0.0 && *n > 0)
+            .map(|(ms, n)| *n as f64 / (ms / 1000.0))
+            .collect();
+        mean(&per)
+    }
+
+    /// Output throughput over the whole request (prefill + decode).
+    pub fn output_tps(&self) -> f64 {
+        let per: Vec<f64> = self
+            .ttft_ms
+            .iter()
+            .zip(&self.decode)
+            .filter(|(t, (d, n))| *t + d > 0.0 && *n > 0)
+            .map(|(t, (d, n))| *n as f64 / ((t + d) / 1000.0))
+            .collect();
+        mean(&per)
+    }
+
+    pub fn decode_tps_std(&self) -> f64 {
+        let per: Vec<f64> = self
+            .decode
+            .iter()
+            .filter(|(ms, n)| *ms > 0.0 && *n > 0)
+            .map(|(ms, n)| *n as f64 / (ms / 1000.0))
+            .collect();
+        std_dev(&per)
+    }
+}
+
+/// Output-fidelity comparison vs the FP32 reference (Table 2(iii) proxy).
+#[derive(Debug, Clone, Default)]
+pub struct Fidelity {
+    /// Exact-match decisions (token agreed with reference).
+    pub token_matches: usize,
+    pub token_total: usize,
+    /// Sum of KL(ref || engine) over compared steps (natural log).
+    pub kl_sum: f64,
+    pub kl_steps: usize,
+    /// First token index at which the stream diverged, per prompt.
+    pub first_divergence: Vec<Option<usize>>,
+}
+
+impl Fidelity {
+    pub fn token_match_rate(&self) -> f64 {
+        if self.token_total == 0 {
+            return 1.0;
+        }
+        self.token_matches as f64 / self.token_total as f64
+    }
+
+    pub fn mean_kl(&self) -> f64 {
+        if self.kl_steps == 0 {
+            return 0.0;
+        }
+        self.kl_sum / self.kl_steps as f64
+    }
+
+    /// Record one decode step: reference vs engine logits + tokens.
+    pub fn record_step(&mut self, ref_logits: &[f32], logits: &[f32], ref_tok: u32, tok: u32) {
+        self.token_total += 1;
+        if ref_tok == tok {
+            self.token_matches += 1;
+        }
+        self.kl_sum += kl_divergence(ref_logits, logits);
+        self.kl_steps += 1;
+    }
+}
+
+/// KL(p || q) between softmax distributions of two logit vectors.
+pub fn kl_divergence(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    assert_eq!(p_logits.len(), q_logits.len());
+    let p = softmax(p_logits);
+    let q = softmax(q_logits);
+    p.iter()
+        .zip(&q)
+        .map(|(&pi, &qi)| {
+            if pi <= 0.0 {
+                0.0
+            } else {
+                pi * (pi / qi.max(1e-12)).ln()
+            }
+        })
+        .sum()
+}
+
+fn softmax(logits: &[f32]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+pub fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+pub fn std_dev(v: &[f64]) -> f64 {
+    if v.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(v);
+    (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (v.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_eq2_eq3() {
+        let mut r = RecallStats::new(2, 3);
+        // Prompt 1, token 0: all correct (6/6); token 1: half correct.
+        r.record_token(0, &[2, 2, 2]);
+        r.record_token(1, &[1, 1, 1]);
+        // Prompt 2 only reaches token 0 (A(q,n) handling).
+        r.record_token(0, &[2, 2, 2]);
+        assert_eq!(r.recall_at(0), Some(1.0));
+        assert_eq!(r.recall_at(1), Some(0.5));
+        assert_eq!(r.recall_at(2), None);
+        // Overall: (12 + 3) / (6 * 3 observations) = 15/18.
+        assert!((r.recall() - 15.0 / 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correct_count_is_set_intersection() {
+        assert_eq!(correct_count(&[1, 2], &[2, 1]), 2);
+        assert_eq!(correct_count(&[1, 2], &[3, 1]), 1);
+        assert_eq!(correct_count(&[4, 5], &[1, 2]), 0);
+    }
+
+    #[test]
+    fn speed_stats_throughputs() {
+        let mut s = SpeedStats::default();
+        s.record(1000.0, 4000.0, 8); // 2 tok/s decode, 1.6 tok/s output
+        assert!((s.decode_tps() - 2.0).abs() < 1e-9);
+        assert!((s.output_tps() - 1.6).abs() < 1e-9);
+        assert_eq!(s.mean_ttft_ms(), 1000.0);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let l = vec![0.1f32, -0.5, 2.0];
+        assert!(kl_divergence(&l, &l).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let p = vec![0.0f32, 0.0, 3.0];
+        let q = vec![3.0f32, 0.0, 0.0];
+        assert!(kl_divergence(&p, &q) > 0.5);
+    }
+
+    #[test]
+    fn fidelity_rates() {
+        let mut f = Fidelity::default();
+        let l = vec![0.0f32; 4];
+        f.record_step(&l, &l, 1, 1);
+        f.record_step(&l, &l, 1, 2);
+        assert_eq!(f.token_match_rate(), 0.5);
+        assert!(f.mean_kl() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny-Mixtral configuration. Mirrors `python/compile/config.py` — the
+//! runtime refuses to load artifacts built for a different config (the AOT
+//! step writes `artifacts/config.json` for exactly this check).
+
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Architecture hyper-parameters of the model all engines serve.
+///
+/// Defaults are the scale-reduced stand-in for Mixtral-8x7B (same component
+/// structure: RMSNorm, rotary GQA attention, softmax top-k router, SwiGLU
+/// experts — see DESIGN.md §2 for the substitution argument).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// Per-expert SwiGLU hidden size.
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    /// KV-cache capacity baked into the decode graphs.
+    pub max_seq_len: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            vocab_size: 256,
+            d_model: 64,
+            n_layers: 12,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            d_ff: 128,
+            n_experts: 8,
+            top_k: 2,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+            max_seq_len: 512,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Query projection width (`n_heads * head_dim`).
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Key/value projection width (`n_kv_heads * head_dim`).
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Parameters in one expert (w1 + w3 + w2).
+    pub fn expert_param_count(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    /// Bytes of one f32 expert — the unit of on-demand loading.
+    pub fn expert_bytes_f32(&self) -> usize {
+        self.expert_param_count() * 4
+    }
+
+    /// Load the config the artifacts were built for and verify it matches.
+    pub fn load_and_verify(artifact_dir: &Path) -> Result<Self> {
+        let path = artifact_dir.join("config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        let def = ModelConfig::default();
+        ensure!(
+            cfg == def,
+            "artifacts were built for a different config:\n  artifacts: {cfg:?}\n  crate:     {def:?}"
+        );
+        Ok(cfg)
+    }
+
+    /// Parse from the JSON written by `python/compile/aot.py`.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab_size: v.get("vocab_size")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            n_kv_heads: v.get("n_kv_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            n_experts: v.get("n_experts")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            rope_theta: v.get("rope_theta")?.as_f64()?,
+            rms_eps: v.get("rms_eps")?.as_f64()?,
+            max_seq_len: v.get("max_seq_len")?.as_usize()?,
+        })
+    }
+
+    /// Basic internal consistency (used by prop-tests and CLI overrides).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_heads % self.n_kv_heads == 0, "n_heads % n_kv_heads != 0");
+        ensure!(self.top_k >= 1 && self.top_k <= self.n_experts, "bad top_k");
+        ensure!(self.head_dim % 2 == 0, "rope needs even head_dim");
+        ensure!(self.max_seq_len > 0 && self.d_model > 0, "degenerate dims");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ModelConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn derived_dims() {
+        let c = ModelConfig::default();
+        assert_eq!(c.q_dim(), 64);
+        assert_eq!(c.kv_dim(), 32);
+        assert_eq!(c.expert_param_count(), 3 * 64 * 128);
+        assert_eq!(c.expert_bytes_f32(), 98304);
+    }
+
+    #[test]
+    fn rejects_bad_topk() {
+        let mut c = ModelConfig::default();
+        c.top_k = 9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn parses_aot_config_json() {
+        let src = r#"{"d_ff":128,"d_model":64,"head_dim":16,"max_seq_len":512,
+            "n_experts":8,"n_heads":4,"n_kv_heads":2,"n_layers":12,
+            "rms_eps":1e-05,"rope_theta":10000.0,"top_k":2,"vocab_size":256}"#;
+        let cfg = ModelConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg, ModelConfig::default());
+    }
+}

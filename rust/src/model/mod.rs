@@ -1,0 +1,9 @@
+//! Model substrate: configuration, deterministic weight generation, and the
+//! host-side weight store (the simulated "CPU memory" of every edge node).
+
+pub mod config;
+pub mod rng;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use weights::{ExpertWeights, LayerWeights, Precision, WeightStore};

@@ -1,0 +1,289 @@
+//! Host-side weight store — the simulated "CPU memory" holding every
+//! parameter of the model on each node (paper §1: experts live in DRAM and
+//! are loaded to GPU on demand; here "loading" is metered by the cluster
+//! simulator while the bytes feed PJRT executions directly).
+//!
+//! All matrices are row-major `[in, out]` (x @ W convention), matching the
+//! L2 graphs in `python/compile/model.py`.
+
+use crate::model::config::ModelConfig;
+use crate::model::rng::Rng;
+use crate::quant::fake_quant;
+
+pub use crate::quant::Precision;
+
+/// One expert's SwiGLU parameters.
+#[derive(Debug, Clone)]
+pub struct ExpertWeights {
+    /// Gate projection `[d_model, d_ff]`.
+    pub w1: Vec<f32>,
+    /// Up projection `[d_model, d_ff]`.
+    pub w3: Vec<f32>,
+    /// Down projection `[d_ff, d_model]`.
+    pub w2: Vec<f32>,
+}
+
+impl ExpertWeights {
+    pub fn param_count(&self) -> usize {
+        self.w1.len() + self.w3.len() + self.w2.len()
+    }
+}
+
+/// Per-layer non-expert parameters (what the paper's main node hosts).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// Attention-input RMSNorm gain `[d_model]`.
+    pub attn_norm: Vec<f32>,
+    /// Q/K/V/O projections: `[d, q_dim]`, `[d, kv_dim]`, `[d, kv_dim]`, `[q_dim, d]`.
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    /// Post-attention RMSNorm gain `[d_model]`.
+    pub ffn_norm: Vec<f32>,
+    /// Router `[d_model, n_experts]`.
+    pub w_gate: Vec<f32>,
+}
+
+/// Full model parameters: non-expert stack + `n_layers x n_experts` experts.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub cfg: ModelConfig,
+    /// Token embedding `[vocab, d_model]`.
+    pub embedding: Vec<f32>,
+    /// Final RMSNorm gain `[d_model]`.
+    pub final_norm: Vec<f32>,
+    /// LM head `[d_model, vocab]`.
+    pub w_out: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// `experts[layer][expert]`.
+    pub experts: Vec<Vec<ExpertWeights>>,
+    /// Precision this store was (fake-)quantized to.
+    pub precision: Precision,
+}
+
+impl WeightStore {
+    /// Generate deterministic full-precision weights from a seed.
+    ///
+    /// Init scale is `1/sqrt(fan_in)`-ish, with mild per-expert asymmetry in
+    /// the router path so expert popularity is non-uniform (as in real MoE
+    /// models — this is what makes LFU/statistical baselines meaningful).
+    pub fn generate(cfg: &ModelConfig, seed: u64) -> Self {
+        let base = Rng::new(seed);
+        let d = cfg.d_model;
+        let scale = |fan_in: usize| 1.0 / (fan_in as f32).sqrt();
+
+        let mut r = base.fork(0x0E);
+        let embedding = r.normal_vec(cfg.vocab_size * d, 1.0);
+        let final_norm = vec![1.0; d];
+        let w_out = r.normal_vec(d * cfg.vocab_size, scale(d));
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut experts = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut r = base.fork(0x100 + l as u64);
+            let mut gate = r.normal_vec(d * cfg.n_experts, scale(d));
+            // Skew router columns so activation frequencies are non-uniform.
+            for e in 0..cfg.n_experts {
+                let bias = 0.15 * ((e as f32 / cfg.n_experts as f32) - 0.5);
+                for row in 0..d {
+                    gate[row * cfg.n_experts + e] *= 1.0 + bias;
+                }
+            }
+            layers.push(LayerWeights {
+                attn_norm: vec![1.0; d],
+                wq: r.normal_vec(d * cfg.q_dim(), scale(d)),
+                wk: r.normal_vec(d * cfg.kv_dim(), scale(d)),
+                wv: r.normal_vec(d * cfg.kv_dim(), scale(d)),
+                wo: r.normal_vec(cfg.q_dim() * d, scale(cfg.q_dim())),
+                ffn_norm: vec![1.0; d],
+                w_gate: gate,
+            });
+            let mut lx = Vec::with_capacity(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                let mut r = base.fork(0x10_000 + (l * cfg.n_experts + e) as u64);
+                lx.push(ExpertWeights {
+                    w1: r.normal_vec(d * cfg.d_ff, scale(d)),
+                    w3: r.normal_vec(d * cfg.d_ff, scale(d)),
+                    w2: r.normal_vec(cfg.d_ff * d, scale(cfg.d_ff)),
+                });
+            }
+            experts.push(lx);
+        }
+        Self {
+            cfg: cfg.clone(),
+            embedding,
+            final_norm,
+            w_out,
+            layers,
+            experts,
+            precision: Precision::Fp32,
+        }
+    }
+
+    /// Build the shadow variant: every tensor quantize→dequantized at `p`
+    /// (the paper quantizes the whole shadow model, §2.3).
+    pub fn quantized(&self, p: Precision) -> Self {
+        if p == Precision::Fp32 {
+            return self.clone();
+        }
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let q = |w: &[f32], cols: usize| fake_quant(w, cols, p);
+        Self {
+            cfg: cfg.clone(),
+            embedding: q(&self.embedding, d),
+            final_norm: q(&self.final_norm, d),
+            w_out: q(&self.w_out, cfg.vocab_size),
+            layers: self
+                .layers
+                .iter()
+                .map(|lw| LayerWeights {
+                    attn_norm: q(&lw.attn_norm, d),
+                    wq: q(&lw.wq, cfg.q_dim()),
+                    wk: q(&lw.wk, cfg.kv_dim()),
+                    wv: q(&lw.wv, cfg.kv_dim()),
+                    wo: q(&lw.wo, d),
+                    ffn_norm: q(&lw.ffn_norm, d),
+                    w_gate: q(&lw.w_gate, cfg.n_experts),
+                })
+                .collect(),
+            experts: self
+                .experts
+                .iter()
+                .map(|lx| {
+                    lx.iter()
+                        .map(|e| ExpertWeights {
+                            w1: q(&e.w1, cfg.d_ff),
+                            w3: q(&e.w3, cfg.d_ff),
+                            w2: q(&e.w2, d),
+                        })
+                        .collect()
+                })
+                .collect(),
+            precision: p,
+        }
+    }
+
+    /// Quantize only the experts (HOBBIT/Mixtral-Offloading style baselines
+    /// keep attention full-precision and compress the offloaded experts).
+    pub fn with_quantized_experts(&self, p: Precision) -> Self {
+        let mut out = self.clone();
+        let cfg = &self.cfg;
+        for lx in &mut out.experts {
+            for e in lx.iter_mut() {
+                e.w1 = fake_quant(&e.w1, cfg.d_ff, p);
+                e.w3 = fake_quant(&e.w3, cfg.d_ff, p);
+                e.w2 = fake_quant(&e.w2, cfg.d_model, p);
+            }
+        }
+        out
+    }
+
+    /// Embedding row for a token (host-side lookup; exact row copy).
+    pub fn embed(&self, token: u32) -> &[f32] {
+        let d = self.cfg.d_model;
+        let i = token as usize;
+        assert!(i < self.cfg.vocab_size, "token {i} out of vocab");
+        &self.embedding[i * d..(i + 1) * d]
+    }
+
+    /// Total parameter count (for the memory audit, Table 2(ii)).
+    pub fn param_count(&self) -> usize {
+        let per_layer: usize = self
+            .layers
+            .first()
+            .map(|l| {
+                l.attn_norm.len()
+                    + l.wq.len()
+                    + l.wk.len()
+                    + l.wv.len()
+                    + l.wo.len()
+                    + l.ffn_norm.len()
+                    + l.w_gate.len()
+            })
+            .unwrap_or(0);
+        let experts: usize = self.experts.iter().flatten().map(|e| e.param_count()).sum();
+        self.embedding.len() + self.final_norm.len() + self.w_out.len()
+            + per_layer * self.layers.len()
+            + experts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::default()
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = WeightStore::generate(&cfg(), 42);
+        let b = WeightStore::generate(&cfg(), 42);
+        assert_eq!(a.embedding, b.embedding);
+        assert_eq!(a.experts[3][5].w2, b.experts[3][5].w2);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = WeightStore::generate(&cfg(), 1);
+        let b = WeightStore::generate(&cfg(), 2);
+        assert_ne!(a.layers[0].wq, b.layers[0].wq);
+    }
+
+    #[test]
+    fn shapes() {
+        let c = cfg();
+        let w = WeightStore::generate(&c, 0);
+        assert_eq!(w.layers.len(), c.n_layers);
+        assert_eq!(w.experts.len(), c.n_layers);
+        assert_eq!(w.experts[0].len(), c.n_experts);
+        assert_eq!(w.layers[0].wq.len(), c.d_model * c.q_dim());
+        assert_eq!(w.experts[0][0].w1.len(), c.d_model * c.d_ff);
+        assert_eq!(w.embed(5).len(), c.d_model);
+    }
+
+    #[test]
+    fn quantized_store_differs_but_tracks() {
+        let w = WeightStore::generate(&cfg(), 7);
+        let s = w.quantized(Precision::Int8);
+        assert_ne!(w.layers[0].wq, s.layers[0].wq);
+        let max_err = w.layers[0].wq.iter().zip(&s.layers[0].wq)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        // Error bounded well below weight scale (1/8).
+        assert!(max_err < 0.01, "int8 err {max_err}");
+    }
+
+    #[test]
+    fn fp32_quantized_is_identity() {
+        let w = WeightStore::generate(&cfg(), 7);
+        let s = w.quantized(Precision::Fp32);
+        assert_eq!(w.layers[0].wq, s.layers[0].wq);
+    }
+
+    #[test]
+    fn expert_only_quant_keeps_attention_exact() {
+        let w = WeightStore::generate(&cfg(), 7);
+        let s = w.with_quantized_experts(Precision::Nf4);
+        assert_eq!(w.layers[0].wq, s.layers[0].wq);
+        assert_ne!(w.experts[0][0].w1, s.experts[0][0].w1);
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        let c = cfg();
+        let w = WeightStore::generate(&c, 0);
+        let expected = c.vocab_size * c.d_model          // embedding
+            + c.d_model                                   // final norm
+            + c.d_model * c.vocab_size                    // lm head
+            + c.n_layers * (2 * c.d_model                 // norms
+                + c.d_model * c.q_dim() + 2 * c.d_model * c.kv_dim()
+                + c.q_dim() * c.d_model
+                + c.d_model * c.n_experts)                // router
+            + c.n_layers * c.n_experts * c.expert_param_count();
+        assert_eq!(w.param_count(), expected);
+    }
+}

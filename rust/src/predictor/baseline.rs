@@ -1,0 +1,286 @@
+//! Baseline expert-activation predictors (paper §2.3 / Table 1).
+//!
+//! * [`GateLookahead`] — AdapMoE/DAOP/Mixtral-Offloading family: feed the
+//!   current layer's hidden state to the *next* layer's gating network.
+//! * [`MultiLayerGate`] — HOBBIT family: chain the same hidden through the
+//!   gates of the next `depth` layers at once.
+//! * [`Statistical`] — EdgeMoE/fMoE family: per-layer expert popularity
+//!   from observed history.
+//! * [`RandomPredictor`] — the Fig. 8 Case-5 control (random prefetch).
+
+use super::math::{matvec, rms_norm, topk_idx};
+use super::Predictor;
+use crate::engine::Route;
+use crate::model::rng::Rng;
+use crate::model::WeightStore;
+
+/// Next-layer gate lookahead (AdapMoE-style, recall ≈ 0.86 in Table 1).
+pub struct GateLookahead {
+    /// (ffn_norm gain, w_gate) per layer, host copies.
+    gates: Vec<(Vec<f32>, Vec<f32>)>,
+    n_experts: usize,
+    top_k: usize,
+    eps: f32,
+    /// predictions[l] for the current token.
+    predictions: Vec<Option<Vec<usize>>>,
+}
+
+impl GateLookahead {
+    pub fn new(ws: &WeightStore) -> Self {
+        Self {
+            gates: ws
+                .layers
+                .iter()
+                .map(|l| (l.ffn_norm.clone(), l.w_gate.clone()))
+                .collect(),
+            n_experts: ws.cfg.n_experts,
+            top_k: ws.cfg.top_k,
+            eps: ws.cfg.rms_eps as f32,
+            predictions: vec![None; ws.cfg.n_layers],
+        }
+    }
+}
+
+impl Predictor for GateLookahead {
+    fn name(&self) -> &'static str {
+        "gate-lookahead"
+    }
+
+    fn begin_token(&mut self, _token: u32) {
+        self.predictions.fill(None);
+    }
+
+    fn predict(&mut self, layer: usize) -> Option<Vec<usize>> {
+        self.predictions[layer].clone()
+    }
+
+    fn observe(&mut self, layer: usize, x_resid: &[f32], _h_norm: &[f32], _route: &Route) {
+        // Feed this layer's residual into the NEXT layer's gate.
+        if layer + 1 < self.gates.len() {
+            let (g, wg) = &self.gates[layer + 1];
+            let h = rms_norm(x_resid, g, self.eps);
+            let logits = matvec(&h, wg, self.n_experts);
+            self.predictions[layer + 1] = Some(topk_idx(&logits, self.top_k));
+        }
+    }
+
+    fn lookahead(&self) -> usize {
+        1
+    }
+}
+
+/// HOBBIT-style multi-layer gate chaining (recall ≈ 0.91 up to 4 ahead).
+pub struct MultiLayerGate {
+    gates: Vec<(Vec<f32>, Vec<f32>)>,
+    n_experts: usize,
+    top_k: usize,
+    eps: f32,
+    depth: usize,
+    predictions: Vec<Option<Vec<usize>>>,
+}
+
+impl MultiLayerGate {
+    pub fn new(ws: &WeightStore, depth: usize) -> Self {
+        Self {
+            gates: ws
+                .layers
+                .iter()
+                .map(|l| (l.ffn_norm.clone(), l.w_gate.clone()))
+                .collect(),
+            n_experts: ws.cfg.n_experts,
+            top_k: ws.cfg.top_k,
+            eps: ws.cfg.rms_eps as f32,
+            depth,
+            predictions: vec![None; ws.cfg.n_layers],
+        }
+    }
+}
+
+impl Predictor for MultiLayerGate {
+    fn name(&self) -> &'static str {
+        "multi-layer-gate"
+    }
+
+    fn begin_token(&mut self, _token: u32) {
+        self.predictions.fill(None);
+    }
+
+    fn predict(&mut self, layer: usize) -> Option<Vec<usize>> {
+        self.predictions[layer].clone()
+    }
+
+    fn observe(&mut self, layer: usize, x_resid: &[f32], _h_norm: &[f32], _route: &Route) {
+        // Apply the gates of layers l+1..l+depth to this hidden state.
+        for j in 1..=self.depth {
+            let target = layer + j;
+            if target >= self.gates.len() {
+                break;
+            }
+            let (g, wg) = &self.gates[target];
+            let h = rms_norm(x_resid, g, self.eps);
+            let logits = matvec(&h, wg, self.n_experts);
+            self.predictions[target] = Some(topk_idx(&logits, self.top_k));
+        }
+    }
+
+    fn lookahead(&self) -> usize {
+        self.depth
+    }
+}
+
+/// Frequency-based prediction from observed history (EdgeMoE/fMoE family).
+pub struct Statistical {
+    /// counts[layer][expert].
+    counts: Vec<Vec<u64>>,
+    top_k: usize,
+}
+
+impl Statistical {
+    pub fn new(n_layers: usize, n_experts: usize, top_k: usize) -> Self {
+        Self { counts: vec![vec![0; n_experts]; n_layers], top_k }
+    }
+}
+
+impl Predictor for Statistical {
+    fn name(&self) -> &'static str {
+        "statistical"
+    }
+
+    fn begin_token(&mut self, _token: u32) {}
+
+    fn predict(&mut self, layer: usize) -> Option<Vec<usize>> {
+        let c = &self.counts[layer];
+        if c.iter().all(|&x| x == 0) {
+            return None;
+        }
+        let as_f: Vec<f32> = c.iter().map(|&x| x as f32).collect();
+        Some(topk_idx(&as_f, self.top_k))
+    }
+
+    fn observe(&mut self, layer: usize, _x: &[f32], _h: &[f32], route: &Route) {
+        for &e in &route.experts {
+            self.counts[layer][e] += 1;
+        }
+    }
+
+    fn lookahead(&self) -> usize {
+        usize::MAX // history-based: available for any layer at any time
+    }
+}
+
+/// Random prefetch (ablation Case 5). Expected recall = k / E.
+pub struct RandomPredictor {
+    rng: Rng,
+    n_experts: usize,
+    top_k: usize,
+}
+
+impl RandomPredictor {
+    pub fn new(seed: u64, n_experts: usize, top_k: usize) -> Self {
+        Self { rng: Rng::new(seed), n_experts, top_k }
+    }
+}
+
+impl Predictor for RandomPredictor {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn begin_token(&mut self, _token: u32) {}
+
+    fn predict(&mut self, _layer: usize) -> Option<Vec<usize>> {
+        let mut picks = Vec::with_capacity(self.top_k);
+        while picks.len() < self.top_k {
+            let e = self.rng.below(self.n_experts);
+            if !picks.contains(&e) {
+                picks.push(e);
+            }
+        }
+        Some(picks)
+    }
+
+    fn observe(&mut self, _l: usize, _x: &[f32], _h: &[f32], _r: &Route) {}
+
+    fn lookahead(&self) -> usize {
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn ws() -> WeightStore {
+        WeightStore::generate(&ModelConfig::default(), 3)
+    }
+
+    fn route(experts: Vec<usize>) -> Route {
+        let k = experts.len();
+        Route { experts, weights: vec![1.0 / k as f32; k] }
+    }
+
+    #[test]
+    fn gate_lookahead_predicts_only_next_layer() {
+        let w = ws();
+        let mut p = GateLookahead::new(&w);
+        p.begin_token(0);
+        assert_eq!(p.predict(0), None, "no prediction for layer 0");
+        let x = vec![0.1f32; 64];
+        p.observe(0, &x, &x, &route(vec![1, 2]));
+        assert!(p.predict(1).is_some());
+        assert_eq!(p.predict(2), None);
+        // New token clears state.
+        p.begin_token(1);
+        assert_eq!(p.predict(1), None);
+    }
+
+    #[test]
+    fn multi_layer_gate_predicts_depth_layers() {
+        let w = ws();
+        let mut p = MultiLayerGate::new(&w, 4);
+        p.begin_token(0);
+        let x = vec![0.1f32; 64];
+        p.observe(0, &x, &x, &route(vec![1, 2]));
+        for l in 1..=4 {
+            assert!(p.predict(l).is_some(), "layer {l}");
+        }
+        assert_eq!(p.predict(5), None);
+    }
+
+    #[test]
+    fn statistical_learns_popularity() {
+        let mut p = Statistical::new(2, 4, 2);
+        assert_eq!(p.predict(0), None, "cold start");
+        for _ in 0..5 {
+            p.observe(0, &[], &[], &route(vec![3, 1]));
+        }
+        p.observe(0, &[], &[], &route(vec![2, 1]));
+        let pred = p.predict(0).unwrap();
+        assert!(pred.contains(&1) && pred.contains(&3), "{pred:?}");
+    }
+
+    #[test]
+    fn random_predicts_distinct_valid_experts() {
+        let mut p = RandomPredictor::new(1, 8, 2);
+        for _ in 0..50 {
+            let pred = p.predict(0).unwrap();
+            assert_eq!(pred.len(), 2);
+            assert_ne!(pred[0], pred[1]);
+            assert!(pred.iter().all(|&e| e < 8));
+        }
+    }
+
+    #[test]
+    fn predictions_are_valid_expert_sets() {
+        let w = ws();
+        let mut p = GateLookahead::new(&w);
+        p.begin_token(0);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.3).sin()).collect();
+        p.observe(0, &x, &x, &route(vec![0, 1]));
+        let pred = p.predict(1).unwrap();
+        assert_eq!(pred.len(), 2);
+        assert_ne!(pred[0], pred[1]);
+        assert!(pred.iter().all(|&e| e < 8));
+    }
+}

@@ -1,0 +1,63 @@
+//! Small host-side f32 math used by the *baseline* predictors.
+//!
+//! These heuristics (gate lookahead, chained gates) are control-plane
+//! estimators in the original systems, not model computation — they run on
+//! host here exactly as the paper's baselines run them beside the model.
+//! All real model numerics go through the PJRT artifacts.
+
+/// RMSNorm over `x` with gain `g` (matches the model's norm).
+pub fn rms_norm(x: &[f32], g: &[f32], eps: f32) -> Vec<f32> {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    x.iter().zip(g).map(|(v, gi)| v * inv * gi).collect()
+}
+
+/// `x [d] @ w [d, out]` row-major.
+pub fn matvec(x: &[f32], w: &[f32], out: usize) -> Vec<f32> {
+    let d = x.len();
+    debug_assert_eq!(w.len(), d * out);
+    let mut y = vec![0f32; out];
+    for (i, &xi) in x.iter().enumerate() {
+        let row = &w[i * out..(i + 1) * out];
+        for j in 0..out {
+            y[j] += xi * row[j];
+        }
+    }
+    y
+}
+
+/// Indices of the top-k values (first-occurrence tie-break, matching the
+/// model's `topk_small`).
+pub fn topk_idx(v: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| v[b].partial_cmp(&v[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_small() {
+        // x=[1,2], w=[[1,0],[0,1]] -> [1,2]
+        assert_eq!(matvec(&[1.0, 2.0], &[1.0, 0.0, 0.0, 1.0], 2), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn topk_orders_desc_and_breaks_ties_low_index() {
+        assert_eq!(topk_idx(&[0.1, 0.9, 0.9, 0.5], 2), vec![1, 2]);
+        assert_eq!(topk_idx(&[3.0, 1.0, 2.0], 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn rms_norm_unit_scale() {
+        let x = vec![2.0f32; 4];
+        let g = vec![1.0f32; 4];
+        let y = rms_norm(&x, &g, 1e-5);
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Expert-activation predictors: SEP (the paper's contribution) and the
+//! baseline families it is compared against in Table 1.
+//!
+//! Baselines implement [`Predictor`]: they observe the main model's
+//! per-layer activations as decoding progresses and emit per-layer expert
+//! predictions. SEP ([`sep::SepPredictor`]) has a wider interface because
+//! it owns a whole shadow model and participates in alignment.
+
+pub mod baseline;
+pub mod math;
+pub mod sep;
+
+pub use baseline::{GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
+pub use sep::{AlignmentConfig, SepPredictor};
+
+use crate::engine::Route;
+
+/// A lookahead expert-activation predictor (baseline families §2.3).
+///
+/// Protocol per decode iteration:
+/// 1. `begin_token(input_token)`;
+/// 2. for each layer `l` (in order): the engine asks `predict(l)` *before*
+///    the main model runs layer `l`, then calls
+///    `observe(l, x_resid, h_norm, route)` with the actual outcome.
+pub trait Predictor {
+    fn name(&self) -> &'static str;
+
+    fn begin_token(&mut self, token: u32);
+
+    /// Predicted expert set for `layer` of the current token, or `None`
+    /// if this predictor has nothing yet (e.g. lookahead depth not
+    /// reached, no history).
+    fn predict(&mut self, layer: usize) -> Option<Vec<usize>>;
+
+    /// Observe the actual activations after the main model's gate ran.
+    /// `x_resid` is the post-attention residual stream, `h_norm` the
+    /// normalized hidden the gate consumed.
+    fn observe(&mut self, layer: usize, x_resid: &[f32], h_norm: &[f32], route: &Route);
+
+    /// How many layers ahead of the observed layer this predictor can
+    /// predict (1 for next-layer heuristics, 4 for HOBBIT-style, the full
+    /// model depth for SEP).
+    fn lookahead(&self) -> usize;
+}

@@ -1,0 +1,183 @@
+//! SEP — Scaled Emulative Prediction (the paper's §2.3/§3.2 contribution).
+//!
+//! A quantized *shadow* replica of the model decodes the same sequence a
+//! few layers ahead of the full-precision model; its router decisions are
+//! the predictions. Two alignment mechanisms stop autoregressive drift:
+//!
+//! * **token alignment** — the shadow adopts the main model's generated
+//!   token (instead of its own) every `token_period` iterations;
+//! * **KV alignment** — the shadow's KV caches are overwritten with the
+//!   main model's every `kv_period` iterations.
+//!
+//! Numerics are real: the shadow is a [`ModelState`] over fake-quantized
+//! weights executing the same AOT artifacts. The *timing* consequences
+//! (late departure, Fig. 5) are handled by the OD-MoE engine using
+//! [`SepPredictor::alignment_delay_ms`].
+
+use anyhow::Result;
+
+use crate::cluster::{HardwareProfile, Ms};
+use crate::engine::{ModelState, Route};
+use crate::model::{Precision, WeightStore};
+use crate::runtime::Runtime;
+
+/// Alignment periods in decode iterations; `usize::MAX` disables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlignmentConfig {
+    pub token_period: usize,
+    pub kv_period: usize,
+}
+
+impl AlignmentConfig {
+    /// The paper's best configuration on the 3090 testbed (T1_KV1).
+    pub fn every_iteration() -> Self {
+        Self { token_period: 1, kv_period: 1 }
+    }
+
+    pub fn none() -> Self {
+        Self { token_period: usize::MAX, kv_period: usize::MAX }
+    }
+
+    pub fn token_only() -> Self {
+        Self { token_period: 1, kv_period: usize::MAX }
+    }
+
+    pub fn kv_only() -> Self {
+        Self { token_period: usize::MAX, kv_period: 1 }
+    }
+
+    fn due(period: usize, iteration: usize) -> bool {
+        period != usize::MAX && iteration % period == 0
+    }
+}
+
+/// The shadow-model predictor.
+pub struct SepPredictor<'rt> {
+    pub shadow: ModelState<'rt>,
+    pub align: AlignmentConfig,
+    pub precision: Precision,
+    iteration: usize,
+    /// Shadow's own previous output token (its divergent stream).
+    own_prev: Option<u32>,
+    /// Shadow routes for the current iteration (one per layer).
+    routes: Vec<Route>,
+    /// Whether alignment happened at the start of the current iteration.
+    pub aligned_token: bool,
+    pub aligned_kv: bool,
+}
+
+impl<'rt> SepPredictor<'rt> {
+    /// Build the shadow from the full-precision store, quantized at `p`.
+    pub fn new(
+        rt: &'rt Runtime,
+        full: &WeightStore,
+        p: Precision,
+        align: AlignmentConfig,
+    ) -> Result<Self> {
+        let shadow = ModelState::new(rt, full.quantized(p))?;
+        Ok(Self {
+            shadow,
+            align,
+            precision: p,
+            iteration: 0,
+            own_prev: None,
+            routes: Vec::new(),
+            aligned_token: false,
+            aligned_kv: false,
+        })
+    }
+
+    /// Prefill the shadow with the prompt (it mirrors the main model's
+    /// prefill so decode-stage emulation starts from the same context).
+    pub fn prefill(&mut self, prompt: &[u32]) -> Result<()> {
+        let rec = self.shadow.prefill(prompt)?;
+        self.own_prev = Some(rec.token_out);
+        Ok(())
+    }
+
+    /// Run the shadow for one decode iteration.
+    ///
+    /// `main` is the full-precision model state *before* it decodes this
+    /// iteration (its caches hold the previous tokens — the freshest state
+    /// alignment can use); `main_input` is the token the main model will
+    /// decode now (its previous output / last prompt token).
+    pub fn begin_token(&mut self, main: &ModelState, main_input: u32) -> Result<()> {
+        self.aligned_token = AlignmentConfig::due(self.align.token_period, self.iteration);
+        self.aligned_kv = AlignmentConfig::due(self.align.kv_period, self.iteration);
+        if self.aligned_kv {
+            self.shadow.align_kv_from(main);
+        }
+        let token = if self.aligned_token {
+            main_input
+        } else {
+            self.own_prev.unwrap_or(main_input)
+        };
+        let rec = self.shadow.decode_step(token)?;
+        self.own_prev = Some(rec.token_out);
+        self.routes = rec.routes;
+        self.iteration += 1;
+        Ok(())
+    }
+
+    /// Predicted experts for `layer` of the current iteration.
+    pub fn predict(&self, layer: usize) -> &Route {
+        &self.routes[layer]
+    }
+
+    pub fn routes(&self) -> &[Route] {
+        &self.routes
+    }
+
+    /// Extra LAN payload shipped to the shadow node before it can start
+    /// this iteration (the Fig. 5 "late departure" input): KV alignment
+    /// ships the newly generated token's KV rows for every layer; token
+    /// alignment ships the token id.
+    pub fn alignment_delay_ms(&self, p: &HardwareProfile) -> Ms {
+        let mut bytes = 0.0;
+        if self.aligned_kv {
+            bytes += p.kv_align_bytes;
+        }
+        if self.aligned_token {
+            bytes += p.token_msg_bytes;
+        }
+        if bytes == 0.0 {
+            0.0
+        } else {
+            p.lan_lat_ms + p.lan_transfer_ms(bytes)
+        }
+    }
+
+    /// Reset for a fresh request.
+    pub fn reset(&mut self) {
+        self.shadow.reset();
+        self.iteration = 0;
+        self.own_prev = None;
+        self.routes.clear();
+        self.aligned_token = false;
+        self.aligned_kv = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn due_periods() {
+        assert!(AlignmentConfig::due(1, 0));
+        assert!(AlignmentConfig::due(1, 5));
+        assert!(AlignmentConfig::due(4, 8));
+        assert!(!AlignmentConfig::due(4, 9));
+        assert!(!AlignmentConfig::due(usize::MAX, 0));
+    }
+
+    #[test]
+    fn presets() {
+        let e = AlignmentConfig::every_iteration();
+        assert_eq!((e.token_period, e.kv_period), (1, 1));
+        let n = AlignmentConfig::none();
+        assert_eq!(n.token_period, usize::MAX);
+        assert_eq!(AlignmentConfig::token_only().kv_period, usize::MAX);
+        assert_eq!(AlignmentConfig::kv_only().token_period, usize::MAX);
+    }
+}

@@ -1,0 +1,296 @@
+//! Quantization substrate — mirrors `python/compile/kernels/ref.py` exactly
+//! (same NF4 codebook, same per-row INT8 absmax scheme, same tie-breaking),
+//! so shadow weights built here are bit-identical in behaviour to the
+//! quantized kernels validated in the Python test suite.
+//!
+//! The shadow model consumes *fake-quantized* (quantize→dequantize) f32
+//! weights: numerically identical to running the dequant-fused kernels on
+//! compressed weights, while letting one f32 HLO artifact serve every
+//! precision level (DESIGN.md §3).
+
+/// The 16 NF4 levels (QLoRA): quantiles of N(0,1) normalized to [-1, 1].
+pub const NF4_LEVELS: [f32; 16] = [
+    -1.0,
+    -0.696_192_8,
+    -0.525_073_05,
+    -0.394_917_5,
+    -0.284_441_38,
+    -0.184_773_43,
+    -0.091_050_036,
+    0.0,
+    0.079_580_3,
+    0.160_930_2,
+    0.246_112_3,
+    0.337_915_24,
+    0.440_709_83,
+    0.562_617,
+    0.722_956_84,
+    1.0,
+];
+
+/// NF4 block size (flattened row-major blocks), matching the Python oracle.
+pub const NF4_BLOCK: usize = 64;
+
+/// Precision levels the paper evaluates for the shadow model (plus FP32 for
+/// the full-precision path and the baselines' quantized expert tiers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+    Nf4,
+}
+
+impl Precision {
+    /// Bytes per parameter when stored/transferred at this precision
+    /// (NF4: 4-bit codes + one f32 scale per 64-element block).
+    pub fn bytes_per_param(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Fp16 => 2.0,
+            Precision::Int8 => 1.0 + 4.0 / NF4_BLOCK as f64, // + per-row scale amortized
+            Precision::Nf4 => 0.5 + 4.0 / NF4_BLOCK as f64,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+            Precision::Nf4 => "nf4",
+        }
+    }
+}
+
+/// f32 -> f16 -> f32 round trip (IEEE 754 binary16, round-to-nearest-even).
+pub fn fake_quant_fp16(w: &[f32]) -> Vec<f32> {
+    w.iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect()
+}
+
+/// Per-row symmetric absmax INT8 quantize→dequantize. `cols` is the row
+/// length; `w.len()` must be a multiple of it.
+pub fn fake_quant_int8(w: &[f32], cols: usize) -> Vec<f32> {
+    assert_eq!(w.len() % cols, 0, "int8: len not a multiple of cols");
+    let mut out = Vec::with_capacity(w.len());
+    for row in w.chunks(cols) {
+        let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        for &v in row {
+            let q = (v / scale).round().clamp(-127.0, 127.0);
+            out.push(q * scale);
+        }
+    }
+    out
+}
+
+/// Blockwise NF4 quantize→dequantize over the row-major flattening.
+pub fn fake_quant_nf4(w: &[f32]) -> Vec<f32> {
+    assert_eq!(w.len() % NF4_BLOCK, 0, "nf4: len not a multiple of block");
+    let mut out = Vec::with_capacity(w.len());
+    for block in w.chunks(NF4_BLOCK) {
+        let absmax = block.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        for &v in block {
+            let code = nearest_nf4(v / scale);
+            out.push(NF4_LEVELS[code] * scale);
+        }
+    }
+    out
+}
+
+/// Index of the nearest NF4 level (ties toward the lower index, matching
+/// `jnp.argmin` in the Python oracle).
+pub fn nearest_nf4(x: f32) -> usize {
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for (i, &l) in NF4_LEVELS.iter().enumerate() {
+        let d = (x - l).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Quantize→dequantize a weight matrix at the given precision.
+/// `cols` is the trailing dimension (INT8 scales are per leading row;
+/// 1-D tensors pass `cols = len`, matching `ref.fake_quant`).
+pub fn fake_quant(w: &[f32], cols: usize, p: Precision) -> Vec<f32> {
+    match p {
+        Precision::Fp32 => w.to_vec(),
+        Precision::Fp16 => fake_quant_fp16(w),
+        Precision::Int8 => fake_quant_int8(w, cols),
+        Precision::Nf4 => fake_quant_nf4(w),
+    }
+}
+
+// --- IEEE binary16 conversion (no `half` crate: keeps the dep tree lean) ---
+
+/// f32 -> f16 bits with round-to-nearest-even.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xFF) as i32;
+    let mut frac = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN.
+        return sign | 0x7C00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    exp -= 127 - 15;
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // Subnormal (or underflow to zero).
+        if exp < -10 {
+            return sign;
+        }
+        frac |= 0x80_0000; // implicit leading 1
+        let shift = (14 - exp) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let rounded = frac + half_ulp - 1 + ((frac >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // Normal: round mantissa 23 -> 10 bits, nearest-even.
+    let half_ulp = 0x0FFF + ((frac >> 13) & 1);
+    frac += half_ulp;
+    if frac & 0x80_0000 != 0 {
+        frac = 0;
+        exp += 1;
+        if exp >= 0x1F {
+            return sign | 0x7C00;
+        }
+    }
+    sign | ((exp as u16) << 10) | (frac >> 13) as u16
+}
+
+/// f16 bits -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = (h & 0x8000) as u32;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 16
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 16) | (((127 - 15 + e + 1) as u32) << 23) | ((f & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        (sign << 16) | 0x7F80_0000 | (frac << 13)
+    } else {
+        (sign << 16) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn fp16_error_bound() {
+        let mut rng = crate::model::rng::Rng::new(1);
+        for _ in 0..1000 {
+            let v = rng.normal() as f32;
+            let back = f16_to_f32(f32_to_f16(v));
+            // Relative error bounded by 2^-11 for normal range.
+            assert!((back - v).abs() <= v.abs() * 4.9e-4 + 1e-7, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn fp16_overflow_to_inf_and_nan() {
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(1e-12)), 0.0); // underflow
+    }
+
+    #[test]
+    fn int8_error_bound() {
+        let mut rng = crate::model::rng::Rng::new(2);
+        let w = rng.normal_vec(64 * 8, 1.0);
+        let back = fake_quant_int8(&w, 64);
+        for row in 0..8 {
+            let r = &w[row * 64..(row + 1) * 64];
+            let absmax = r.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let step = absmax / 127.0;
+            for i in 0..64 {
+                assert!((back[row * 64 + i] - r[i]).abs() <= step * 0.5 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_preserves_zero_rows() {
+        let w = vec![0f32; 128];
+        assert_eq!(fake_quant_int8(&w, 64), w);
+    }
+
+    #[test]
+    fn nf4_error_bound() {
+        let mut rng = crate::model::rng::Rng::new(3);
+        let w = rng.normal_vec(NF4_BLOCK * 16, 1.0);
+        let back = fake_quant_nf4(&w);
+        for b in 0..16 {
+            let blk = &w[b * NF4_BLOCK..(b + 1) * NF4_BLOCK];
+            let absmax = blk.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            for i in 0..NF4_BLOCK {
+                // Largest inter-level gap is ~0.3039 absmax; error <= half of it.
+                assert!((back[b * NF4_BLOCK + i] - blk[i]).abs() <= 0.16 * absmax + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn nf4_idempotent() {
+        let mut rng = crate::model::rng::Rng::new(4);
+        let w = rng.normal_vec(NF4_BLOCK * 4, 0.3);
+        let once = fake_quant_nf4(&w);
+        let twice = fake_quant_nf4(&once);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn error_ordering_fp16_int8_nf4() {
+        // Same invariant as python test_fake_quant_modes.
+        let mut rng = crate::model::rng::Rng::new(5);
+        let w = rng.normal_vec(64 * 64, 1.0);
+        let err = |back: &[f32]| -> f32 {
+            back.iter().zip(&w).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+        };
+        let e16 = err(&fake_quant_fp16(&w));
+        let e8 = err(&fake_quant_int8(&w, 64));
+        let e4 = err(&fake_quant_nf4(&w));
+        assert!(e16 < e8 && e8 < e4, "fp16={e16} int8={e8} nf4={e4}");
+    }
+
+    #[test]
+    fn nearest_nf4_endpoints_and_zero() {
+        assert_eq!(nearest_nf4(-2.0), 0);
+        assert_eq!(nearest_nf4(2.0), 15);
+        assert_eq!(nearest_nf4(0.0), 7);
+    }
+
+    #[test]
+    fn bytes_per_param_ordering() {
+        assert!(Precision::Fp32.bytes_per_param() > Precision::Fp16.bytes_per_param());
+        assert!(Precision::Fp16.bytes_per_param() > Precision::Int8.bytes_per_param());
+        assert!(Precision::Int8.bytes_per_param() > Precision::Nf4.bytes_per_param());
+    }
+}

@@ -1,0 +1,79 @@
+//! Device-resident weight buffers.
+//!
+//! Uploading every weight matrix once per [`crate::runtime::Runtime`] user
+//! and reusing the `PjRtBuffer`s across all calls keeps the per-step host
+//! traffic down to activations + KV cache (~130 KiB) instead of re-shipping
+//! ~180 KiB of weights per layer call — the single biggest L3 hot-path win
+//! (EXPERIMENTS.md §Perf).
+
+use anyhow::Result;
+
+use crate::model::{ModelConfig, WeightStore};
+use crate::runtime::Runtime;
+
+/// Per-layer non-expert weights on device.
+pub struct DeviceLayer {
+    pub attn_norm: xla::PjRtBuffer,
+    pub wq: xla::PjRtBuffer,
+    pub wk: xla::PjRtBuffer,
+    pub wv: xla::PjRtBuffer,
+    pub wo: xla::PjRtBuffer,
+    pub ffn_norm: xla::PjRtBuffer,
+    pub w_gate: xla::PjRtBuffer,
+}
+
+/// One expert's weights on device.
+pub struct DeviceExpert {
+    pub w1: xla::PjRtBuffer,
+    pub w3: xla::PjRtBuffer,
+    pub w2: xla::PjRtBuffer,
+}
+
+/// A full [`WeightStore`] uploaded to the PJRT device.
+///
+/// Note this is a *numerics* convenience: whether an expert is "loaded" on
+/// a simulated node's GPU is tracked by the cluster simulator's memory
+/// ledgers, not by this struct — CPU PJRT has no real VRAM to meter.
+pub struct DeviceModel {
+    pub layers: Vec<DeviceLayer>,
+    pub experts: Vec<Vec<DeviceExpert>>,
+    pub final_norm: xla::PjRtBuffer,
+    pub w_out: xla::PjRtBuffer,
+}
+
+impl DeviceModel {
+    /// Upload every tensor of `ws` to the device.
+    pub fn upload(rt: &Runtime, ws: &WeightStore) -> Result<Self> {
+        let c: &ModelConfig = &ws.cfg;
+        let mut layers = Vec::with_capacity(c.n_layers);
+        let mut experts = Vec::with_capacity(c.n_layers);
+        for l in 0..c.n_layers {
+            let lw = &ws.layers[l];
+            layers.push(DeviceLayer {
+                attn_norm: rt.upload_f32(&lw.attn_norm, &[c.d_model])?,
+                wq: rt.upload_f32(&lw.wq, &[c.d_model, c.q_dim()])?,
+                wk: rt.upload_f32(&lw.wk, &[c.d_model, c.kv_dim()])?,
+                wv: rt.upload_f32(&lw.wv, &[c.d_model, c.kv_dim()])?,
+                wo: rt.upload_f32(&lw.wo, &[c.q_dim(), c.d_model])?,
+                ffn_norm: rt.upload_f32(&lw.ffn_norm, &[c.d_model])?,
+                w_gate: rt.upload_f32(&lw.w_gate, &[c.d_model, c.n_experts])?,
+            });
+            let mut le = Vec::with_capacity(c.n_experts);
+            for e in 0..c.n_experts {
+                let ew = &ws.experts[l][e];
+                le.push(DeviceExpert {
+                    w1: rt.upload_f32(&ew.w1, &[c.d_model, c.d_ff])?,
+                    w3: rt.upload_f32(&ew.w3, &[c.d_model, c.d_ff])?,
+                    w2: rt.upload_f32(&ew.w2, &[c.d_ff, c.d_model])?,
+                });
+            }
+            experts.push(le);
+        }
+        Ok(Self {
+            layers,
+            experts,
+            final_norm: rt.upload_f32(&ws.final_norm, &[c.d_model])?,
+            w_out: rt.upload_f32(&ws.w_out, &[c.d_model, c.vocab_size])?,
+        })
+    }
+}

@@ -1,0 +1,251 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client. This is the only place the crate touches `xla`.
+//!
+//! Python runs only at build time (`make artifacts`); every request-path
+//! computation goes through the executables compiled here.
+
+pub mod device;
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelConfig;
+
+pub use device::DeviceModel;
+
+/// Expert-FFN batch sizes the AOT step specialized executables for
+/// (must match `python/compile/aot.py::EXPERT_FFN_SIZES`).
+pub const EXPERT_FFN_SIZES: [usize; 7] = [1, 4, 8, 16, 32, 64, 128];
+/// Prefill prompt lengths with specialized main-block executables.
+pub const PREFILL_SIZES: [usize; 2] = [16, 128];
+
+/// Execution counters (perf accounting, EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: Cell<u64>,
+    pub host_bytes_uploaded: Cell<u64>,
+}
+
+/// Outputs of one `main_block_decode` call (see python/compile/model.py).
+#[derive(Debug, Clone)]
+pub struct MainBlockOut {
+    /// Residual stream leaving attention `[1, d]` — experts add onto this.
+    pub x_resid: Vec<f32>,
+    /// Post-attention normalized hidden `[1, d]` — shipped to workers.
+    pub h_norm: Vec<f32>,
+    /// Router softmax weights over the top-k selection `[k]`.
+    pub route_w: Vec<f32>,
+    /// Selected expert ids `[k]`, descending router weight.
+    pub route_idx: Vec<i32>,
+    /// New KV rows `[n_kv, head_dim]` to commit into the host cache.
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// Outputs of one prefill main-block call over a T-token prompt.
+#[derive(Debug, Clone)]
+pub struct PrefillBlockOut {
+    pub x_resid: Vec<f32>,  // [T, d]
+    pub h_norm: Vec<f32>,   // [T, d]
+    pub route_w: Vec<f32>,  // [T, k]
+    pub route_idx: Vec<i32>, // [T, k]
+    pub k_all: Vec<f32>,    // [T, n_kv, head_dim]
+    pub v_all: Vec<f32>,    // [T, n_kv, head_dim]
+}
+
+/// The compiled model runtime: PJRT CPU client + one executable per
+/// artifact. Cheap to share behind a reference; engines typically hold
+/// `&Runtime` plus their own [`DeviceModel`] weight buffers.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub cfg: ModelConfig,
+    pub artifact_dir: PathBuf,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Load and compile every artifact under `artifact_dir`.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let cfg = ModelConfig::load_and_verify(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        let mut names: Vec<String> = vec!["main_block_decode".into(), "lm_head".into()];
+        names.extend(EXPERT_FFN_SIZES.iter().map(|t| format!("expert_ffn_t{t}")));
+        names.extend(PREFILL_SIZES.iter().map(|t| format!("main_block_prefill_t{t}")));
+        for name in names {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name, exe);
+        }
+        Ok(Self { client, exes, cfg, artifact_dir: dir, stats: RuntimeStats::default() })
+    }
+
+    /// Load from the repo-default `artifacts/` directory (next to Cargo.toml).
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("ODMOE_ARTIFACTS")
+            .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+        Self::load(dir)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable named {name}"))
+    }
+
+    /// Upload an f32 host tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats
+            .host_bytes_uploaded
+            .set(self.stats.host_bytes_uploaded.get() + (data.len() * 4) as u64);
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    /// Upload an i32 host tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats
+            .host_bytes_uploaded
+            .set(self.stats.host_bytes_uploaded.get() + (data.len() * 4) as u64);
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    /// Execute a named artifact on device buffers, returning the decomposed
+    /// output tuple as literals.
+    fn run(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        self.stats.executions.set(self.stats.executions.get() + 1);
+        let out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    fn f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("f32 literal: {e:?}"))
+    }
+
+    fn i32s(lit: &xla::Literal) -> Result<Vec<i32>> {
+        lit.to_vec::<i32>().map_err(|e| anyhow!("i32 literal: {e:?}"))
+    }
+
+    /// Non-expert per-layer decode step (the paper's main-node task `M_l`).
+    ///
+    /// `layer` indexes into `dm`'s per-layer weight buffers; `x` is the
+    /// `[1, d]` residual stream; the KV cache (`[max_seq, n_kv, hd]` each)
+    /// holds `pos` valid rows.
+    pub fn main_block_decode(
+        &self,
+        dm: &DeviceModel,
+        layer: usize,
+        x: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        pos: usize,
+    ) -> Result<MainBlockOut> {
+        let cfg = &self.cfg;
+        let xb = self.upload_f32(x, &[1, cfg.d_model])?;
+        let kb = self.upload_f32(k_cache, &[cfg.max_seq_len, cfg.n_kv_heads, cfg.head_dim])?;
+        let vb = self.upload_f32(v_cache, &[cfg.max_seq_len, cfg.n_kv_heads, cfg.head_dim])?;
+        let pb = self.upload_i32(&[pos as i32], &[1])?;
+        let lw = &dm.layers[layer];
+        let args: Vec<&xla::PjRtBuffer> = vec![
+            &xb, &lw.attn_norm, &lw.wq, &lw.wk, &lw.wv, &lw.wo, &lw.ffn_norm, &lw.w_gate,
+            &kb, &vb, &pb,
+        ];
+        let out = self.run("main_block_decode", &args)?;
+        anyhow::ensure!(out.len() == 6, "main_block_decode: expected 6 outputs");
+        Ok(MainBlockOut {
+            x_resid: Self::f32s(&out[0])?,
+            h_norm: Self::f32s(&out[1])?,
+            route_w: Self::f32s(&out[2])?,
+            route_idx: Self::i32s(&out[3])?,
+            k_new: Self::f32s(&out[4])?,
+            v_new: Self::f32s(&out[5])?,
+        })
+    }
+
+    /// Expert FFN (`EC_l` worker task) for a batch of `t` tokens. `t` must
+    /// be one of [`EXPERT_FFN_SIZES`]; `h` is `[t, d]` row-major.
+    pub fn expert_ffn(
+        &self,
+        dm: &DeviceModel,
+        layer: usize,
+        expert: usize,
+        h: &[f32],
+        t: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            EXPERT_FFN_SIZES.contains(&t),
+            "no expert_ffn executable for t={t}"
+        );
+        let hb = self.upload_f32(h, &[t, self.cfg.d_model])?;
+        let ew = &dm.experts[layer][expert];
+        let out = self.run(
+            &format!("expert_ffn_t{t}"),
+            &[&hb, &ew.w1, &ew.w3, &ew.w2],
+        )?;
+        Self::f32s(&out[0])
+    }
+
+    /// Prefill main block over a `t`-token prompt (t in [`PREFILL_SIZES`]).
+    pub fn main_block_prefill(
+        &self,
+        dm: &DeviceModel,
+        layer: usize,
+        x: &[f32],
+        t: usize,
+    ) -> Result<PrefillBlockOut> {
+        anyhow::ensure!(
+            PREFILL_SIZES.contains(&t),
+            "no prefill executable for t={t}"
+        );
+        let xb = self.upload_f32(x, &[t, self.cfg.d_model])?;
+        let lw = &dm.layers[layer];
+        let args: Vec<&xla::PjRtBuffer> = vec![
+            &xb, &lw.attn_norm, &lw.wq, &lw.wk, &lw.wv, &lw.wo, &lw.ffn_norm, &lw.w_gate,
+        ];
+        let out = self.run(&format!("main_block_prefill_t{t}"), &args)?;
+        anyhow::ensure!(out.len() == 6, "prefill: expected 6 outputs");
+        Ok(PrefillBlockOut {
+            x_resid: Self::f32s(&out[0])?,
+            h_norm: Self::f32s(&out[1])?,
+            route_w: Self::f32s(&out[2])?,
+            route_idx: Self::i32s(&out[3])?,
+            k_all: Self::f32s(&out[4])?,
+            v_all: Self::f32s(&out[5])?,
+        })
+    }
+
+    /// Final norm + logits + greedy argmax. Returns `(logits[vocab], token)`.
+    pub fn lm_head(&self, dm: &DeviceModel, x: &[f32]) -> Result<(Vec<f32>, u32)> {
+        let xb = self.upload_f32(x, &[1, self.cfg.d_model])?;
+        let out = self.run("lm_head", &[&xb, &dm.final_norm, &dm.w_out])?;
+        let logits = Self::f32s(&out[0])?;
+        let tok = Self::i32s(&out[1])?[0];
+        anyhow::ensure!(tok >= 0 && (tok as usize) < self.cfg.vocab_size);
+        Ok((logits, tok as u32))
+    }
+}

@@ -1,0 +1,151 @@
+//! Virtual-time event traces + ASCII timeline rendering.
+//!
+//! Every engine records its bookings here; `render_timeline` reproduces
+//! the paper's Fig. 2/4/5-style timing diagrams as text, which is how
+//! `examples/timing_analysis.rs` visualizes the round-robin pipeline and
+//! the late-departure effect.
+
+use crate::cluster::Ms;
+
+/// What a trace event represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Main-node non-expert computation `M_l`.
+    MainCompute,
+    /// Shadow-node layer step `S_l`.
+    ShadowCompute,
+    /// Worker expert loading `EL_l`.
+    ExpertLoad,
+    /// Worker expert computation `EC_l`.
+    ExpertCompute,
+    /// LAN message.
+    LanSend,
+    /// Stall (I/O bottleneck, misprediction reload, alignment wait).
+    Stall,
+}
+
+impl EventKind {
+    pub fn glyph(self) -> char {
+        match self {
+            EventKind::MainCompute => 'M',
+            EventKind::ShadowCompute => 'S',
+            EventKind::ExpertLoad => 'L',
+            EventKind::ExpertCompute => 'C',
+            EventKind::LanSend => '·',
+            EventKind::Stall => 'x',
+        }
+    }
+}
+
+/// One booked interval on one node.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Node id (usize::MAX = shared LAN).
+    pub node: usize,
+    pub start: Ms,
+    pub end: Ms,
+    pub label: &'static str,
+}
+
+/// Append-only event log.
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: Vec<Event>,
+    pub enabled: bool,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self { events: Vec::new(), enabled: false }
+    }
+
+    pub fn push(&mut self, kind: EventKind, node: usize, start: Ms, end: Ms, label: &'static str) {
+        if self.enabled {
+            self.events.push(Event { kind, node, start, end, label });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Render a Fig. 2-style ASCII timeline: one row per node, `cols`
+    /// character cells over `[t0, t1]` ms.
+    pub fn render_timeline(&self, t0: Ms, t1: Ms, cols: usize, node_names: &[String]) -> String {
+        let span = (t1 - t0).max(1e-9);
+        let mut rows: Vec<Vec<char>> = vec![vec![' '; cols]; node_names.len()];
+        for ev in &self.events {
+            if ev.node >= node_names.len() || ev.end < t0 || ev.start > t1 {
+                continue;
+            }
+            let a = (((ev.start - t0) / span) * cols as f64).floor().max(0.0) as usize;
+            let b = (((ev.end - t0) / span) * cols as f64).ceil().min(cols as f64) as usize;
+            for c in a..b.max(a + 1).min(cols) {
+                rows[ev.node][c] = ev.kind.glyph();
+            }
+        }
+        let mut out = String::new();
+        let width = node_names.iter().map(|n| n.len()).max().unwrap_or(0);
+        for (name, row) in node_names.iter().zip(rows) {
+            out.push_str(&format!("{name:>width$} |"));
+            out.extend(row);
+            out.push_str("|\n");
+        }
+        out.push_str(&format!(
+            "{:>width$}  {}\n",
+            "",
+            format!("[{t0:.1} ms .. {t1:.1} ms]  M=main S=shadow L=load C=expert x=stall")
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new();
+        t.push(EventKind::MainCompute, 0, 0.0, 1.0, "M0");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_records() {
+        let mut t = Trace::new();
+        t.enabled = true;
+        t.push(EventKind::MainCompute, 0, 0.0, 1.0, "M0");
+        t.push(EventKind::ExpertLoad, 1, 0.5, 2.0, "EL1");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn timeline_places_events() {
+        let mut t = Trace::new();
+        t.enabled = true;
+        t.push(EventKind::MainCompute, 0, 0.0, 5.0, "M");
+        t.push(EventKind::ExpertCompute, 1, 5.0, 10.0, "C");
+        let s = t.render_timeline(0.0, 10.0, 20, &["main".into(), "w1".into()]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].contains("MMMMMMMMMM"), "{s}");
+        assert!(lines[1].contains("CCCCCCCCCC"), "{s}");
+        // Main's Ms occupy the first half, worker's Cs the second.
+        let mpos = lines[0].find('M').unwrap();
+        let cpos = lines[1].find('C').unwrap();
+        assert!(cpos > mpos);
+    }
+}

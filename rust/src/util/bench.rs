@@ -1,0 +1,92 @@
+//! Micro-bench harness (criterion is not available offline).
+//!
+//! `Bench::run` warms up, then samples wall-clock over batched iterations
+//! and reports mean / p50 / p95 per iteration. Figure/table benches use
+//! [`crate::util::table`] for paper-style output instead; this harness is
+//! for the L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// One benchmark's timing summary (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub samples: usize,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95"
+    );
+    println!("{}", "-".repeat(84));
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` over `samples` batches of `iters_per_sample` iterations.
+pub fn run<F: FnMut()>(name: &str, samples: usize, iters_per_sample: usize, mut f: F) -> Summary {
+    // Warm-up.
+    for _ in 0..iters_per_sample.min(3) {
+        f();
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let p = |q: f64| per_iter[((per_iter.len() - 1) as f64 * q) as usize];
+    Summary {
+        name: name.to_string(),
+        mean_ns: mean,
+        p50_ns: p(0.5),
+        p95_ns: p(0.95),
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut x = 0u64;
+        let s = run("spin", 5, 100, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert_eq!(s.samples, 5);
+    }
+}

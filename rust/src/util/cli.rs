@@ -1,0 +1,115 @@
+//! Tiny `--flag value` CLI parser (clap is not available offline).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                }
+                _ => out.switches.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("recall --prompts 8 --out-tokens 64 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("recall"));
+        assert_eq!(a.usize_or("prompts", 0).unwrap(), 8);
+        assert_eq!(a.usize_or("out-tokens", 0).unwrap(), 64);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("speed");
+        assert_eq!(a.usize_or("prompts", 3).unwrap(), 3);
+        assert_eq!(a.f64_or("bw", 25.0).unwrap(), 25.0);
+        assert_eq!(a.get_or("engine", "odmoe"), "odmoe");
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--seed 7");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["x".into(), "y".into()]).is_err());
+    }
+}

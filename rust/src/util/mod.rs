@@ -1,0 +1,9 @@
+//! In-tree replacements for crates unavailable in this offline image:
+//! a minimal JSON parser/writer (`json`), a flag-style CLI parser (`cli`),
+//! a micro-bench harness (`bench`), and a property-test driver (`prop`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod table;

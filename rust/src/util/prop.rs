@@ -1,0 +1,60 @@
+//! Property-test driver (proptest is not available offline).
+//!
+//! `check` runs a property over `n` randomized cases from a seeded
+//! [`crate::model::rng::Rng`]; on failure it reports the case index and
+//! seed so the case replays deterministically. Coordinator invariants
+//! (routing, batching, scheduling) use this throughout `rust/tests/`.
+
+use crate::model::rng::Rng;
+
+/// Run `prop` over `n` random cases. Panics with the failing case's seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, n: usize, base_seed: u64, mut prop: F) {
+    for case in 0..n {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("uniform in range", 50, 1, |rng| {
+            let v = rng.uniform();
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn reports_failing_case() {
+        check("always fails eventually", 10, 2, |rng| {
+            if rng.uniform() < 0.95 {
+                Ok(())
+            } else {
+                Err("hit".into())
+            }
+        });
+    }
+}

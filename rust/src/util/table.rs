@@ -1,0 +1,108 @@
+//! Paper-style table/series printing for the figure and table benches —
+//! every bench prints the same rows/columns the paper reports, plus a
+//! `paper:` reference line so shape comparisons are one `diff` away.
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            widths: headers.iter().map(|h| h.len().max(8)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:<w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        println!(
+            "{}",
+            self.widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Print an (x, y) series as a compact aligned block (figure data).
+pub fn print_series(title: &str, xs: &[f64], ys: &[f64]) {
+    println!("# {title}");
+    for (x, y) in xs.iter().zip(ys) {
+        println!("{x:>10.3}  {y:>12.6}");
+    }
+}
+
+/// Render a unicode sparkline for quick visual shape checks in the logs.
+pub fn sparkline(ys: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if ys.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &y in ys {
+        lo = lo.min(y);
+        hi = hi.max(y);
+    }
+    let span = (hi - lo).max(1e-12);
+    ys.iter()
+        .map(|&y| BARS[(((y - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "hello".into()]);
+        t.row(&["2".into(), "world".into()]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        let chars: Vec<char> = s.chars().collect();
+        assert!(chars[0] < chars[2]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Deterministic synthetic prompt corpora.
+//!
+//! The paper's datasets only supply token streams — recall and speed
+//! statistics depend on router behaviour, not prompt semantics
+//! (DESIGN.md §2). Prompts are generated with a Markov-ish token walk so
+//! consecutive tokens are correlated (pure-uniform streams under-exercise
+//! the KV cache and produce unnaturally uniform expert churn).
+
+use crate::model::rng::Rng;
+
+/// A set of prompts of fixed length.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub prompts: Vec<Vec<u32>>,
+}
+
+impl Corpus {
+    /// `n` prompts of `len` tokens over `vocab`.
+    pub fn generate(seed: u64, n: usize, len: usize, vocab: u32) -> Self {
+        let mut prompts = Vec::with_capacity(n);
+        let base = Rng::new(seed ^ 0xC0FFEE);
+        for i in 0..n {
+            let mut rng = base.fork(i as u64 + 1);
+            let mut toks = Vec::with_capacity(len);
+            let mut cur = rng.below(vocab as usize) as u32;
+            for _ in 0..len {
+                toks.push(cur);
+                // Correlated walk: small step with p=0.7, jump otherwise.
+                cur = if rng.uniform() < 0.7 {
+                    let step = rng.below(7) as i64 - 3;
+                    (cur as i64 + step).rem_euclid(vocab as i64) as u32
+                } else {
+                    rng.below(vocab as usize) as u32
+                };
+            }
+            prompts.push(toks);
+        }
+        Self { prompts }
+    }
+
+    /// The paper's speed-test corpus shape: half short, half long prompts
+    /// (§4.1 inherits HOBBIT's 30x16-token + 30x128-token Alpaca subset).
+    pub fn speed_set(seed: u64, per_length: usize, vocab: u32) -> (Self, Self) {
+        (
+            Self::generate(seed, per_length, 16, vocab),
+            Self::generate(seed ^ 0x51, per_length, 128, vocab),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(7, 3, 16, 256);
+        let b = Corpus::generate(7, 3, 16, 256);
+        assert_eq!(a.prompts, b.prompts);
+    }
+
+    #[test]
+    fn shapes() {
+        let c = Corpus::generate(1, 5, 128, 256);
+        assert_eq!(c.prompts.len(), 5);
+        assert!(c.prompts.iter().all(|p| p.len() == 128));
+        assert!(c.prompts.iter().flatten().all(|&t| t < 256));
+    }
+
+    #[test]
+    fn prompts_differ_from_each_other() {
+        let c = Corpus::generate(1, 2, 32, 256);
+        assert_ne!(c.prompts[0], c.prompts[1]);
+    }
+
+    #[test]
+    fn tokens_are_correlated_but_not_constant() {
+        let c = Corpus::generate(3, 1, 128, 256);
+        let p = &c.prompts[0];
+        let distinct: std::collections::HashSet<_> = p.iter().collect();
+        assert!(distinct.len() > 10, "should not be constant");
+        // Majority of steps are small moves.
+        let small = p.windows(2).filter(|w| {
+            let d = (w[0] as i64 - w[1] as i64).rem_euclid(256);
+            d <= 3 || d >= 253
+        }).count();
+        assert!(small * 2 > p.len(), "walk should be mostly local: {small}");
+    }
+
+    #[test]
+    fn speed_set_has_both_lengths() {
+        let (short, long) = Corpus::speed_set(1, 3, 256);
+        assert_eq!(short.prompts[0].len(), 16);
+        assert_eq!(long.prompts[0].len(), 128);
+    }
+}

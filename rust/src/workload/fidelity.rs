@@ -1,0 +1,82 @@
+//! Output-fidelity harness (Table 2(iii) substitution, DESIGN.md §2).
+//!
+//! What the paper's quality benchmarks demonstrate is that OD-MoE serves
+//! the *exact* full-precision model while quantizing/skipping baselines
+//! degrade it. With a synthetic-scale model we measure that property
+//! directly: token-stream agreement and logit KL against the FP32
+//! greedy-decode reference, over a shared corpus.
+
+use anyhow::Result;
+
+use crate::coordinator::Engine;
+use crate::engine::ModelState;
+use crate::metrics::Fidelity;
+use crate::model::WeightStore;
+use crate::runtime::Runtime;
+use crate::workload::Corpus;
+
+/// Reference generations: FP32 greedy decode.
+pub struct Reference {
+    /// Per prompt: generated tokens (first from prefill).
+    pub tokens: Vec<Vec<u32>>,
+    /// Per prompt: per-step logits.
+    pub logits: Vec<Vec<Vec<f32>>>,
+}
+
+/// Produce the FP32 reference stream for a corpus.
+pub fn reference(
+    rt: &Runtime,
+    ws: &WeightStore,
+    corpus: &Corpus,
+    out_tokens: usize,
+) -> Result<Reference> {
+    let mut state = ModelState::new(rt, ws.clone())?;
+    let mut tokens = Vec::new();
+    let mut logits = Vec::new();
+    for prompt in &corpus.prompts {
+        state.reset();
+        let rec = state.prefill(prompt)?;
+        let mut toks = vec![rec.token_out];
+        let mut lgs = vec![rec.logits];
+        let mut t = rec.token_out;
+        for _ in 1..out_tokens {
+            let s = state.decode_step(t)?;
+            toks.push(s.token_out);
+            lgs.push(s.logits);
+            t = s.token_out;
+        }
+        tokens.push(toks);
+        logits.push(lgs);
+    }
+    Ok(Reference { tokens, logits })
+}
+
+/// Compare an engine's generations against the reference.
+pub fn evaluate(
+    engine: &mut dyn Engine,
+    reference: &Reference,
+    corpus: &Corpus,
+    out_tokens: usize,
+) -> Result<Fidelity> {
+    let mut fid = Fidelity::default();
+    for (pi, prompt) in corpus.prompts.iter().enumerate() {
+        engine.reset()?;
+        let res = engine.run_prompt(prompt, out_tokens, true)?;
+        let ref_toks = &reference.tokens[pi];
+        let ref_logits = &reference.logits[pi];
+        let mut diverged = None;
+        for i in 0..res.tokens.len().min(ref_toks.len()) {
+            fid.record_step(
+                &ref_logits[i],
+                &res.step_logits[i],
+                ref_toks[i],
+                res.tokens[i],
+            );
+            if diverged.is_none() && res.tokens[i] != ref_toks[i] {
+                diverged = Some(i);
+            }
+        }
+        fid.first_divergence.push(diverged);
+    }
+    Ok(fid)
+}

@@ -1,0 +1,11 @@
+//! Workloads + evaluation harnesses: prompt corpora (the stand-ins for
+//! the paper's LongWriter/Alpaca sets), the speed harness behind Table 2(i)
+//! and Figs. 8–10, the recall harness behind Figs. 3/6 and Table 1, and
+//! the fidelity harness behind Table 2(iii).
+
+pub mod corpus;
+pub mod fidelity;
+pub mod recall;
+pub mod speed;
+
+pub use corpus::Corpus;

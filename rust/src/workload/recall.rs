@@ -1,0 +1,103 @@
+//! Recall harness: runs the full-precision model beside one or more
+//! predictors and accumulates Eq. (2)/(3) statistics. Powers Fig. 3
+//! (quantization x alignment curves), Fig. 6 (alignment-period grid) and
+//! Table 1 (baseline predictor comparison).
+
+use anyhow::Result;
+
+use crate::engine::{ModelState, Route};
+use crate::metrics::{correct_count, RecallStats};
+use crate::model::{Precision, WeightStore};
+use crate::predictor::{AlignmentConfig, Predictor, SepPredictor};
+use crate::runtime::{DeviceModel, Runtime};
+use crate::workload::Corpus;
+
+/// Measure SEP recall for one (precision, alignment) configuration over a
+/// corpus, decoding `out_tokens` per prompt.
+pub fn sep_recall(
+    rt: &Runtime,
+    ws: &WeightStore,
+    precision: Precision,
+    align: AlignmentConfig,
+    corpus: &Corpus,
+    out_tokens: usize,
+) -> Result<RecallStats> {
+    let cfg = ws.cfg.clone();
+    let mut stats = RecallStats::new(cfg.top_k, cfg.n_layers);
+    let mut main = ModelState::new(rt, ws.clone())?;
+    let mut sep = SepPredictor::new(rt, ws, precision, align)?;
+    for prompt in &corpus.prompts {
+        main.reset();
+        sep.reset();
+        let rec = main.prefill(prompt)?;
+        sep.prefill(prompt)?;
+        let mut token = rec.token_out;
+        for n in 0..out_tokens {
+            sep.begin_token(&main, token)?;
+            let step = main.decode_step(token)?;
+            let correct: Vec<usize> = (0..cfg.n_layers)
+                .map(|l| correct_count(&sep.predict(l).experts, &step.routes[l].experts))
+                .collect();
+            stats.record_token(n, &correct);
+            token = step.token_out;
+        }
+    }
+    Ok(stats)
+}
+
+/// Measure a baseline predictor's recall over a corpus.
+///
+/// Predictions are requested just before each layer executes and the
+/// layer's true activations are fed back immediately after — the same
+/// online protocol the original systems use. Only layers for which the
+/// predictor produced a prediction are counted (HOBBIT's convention:
+/// recall over predicted layers). Returns `(recall, predictions_counted)`.
+pub fn baseline_recall(
+    rt: &Runtime,
+    ws: &WeightStore,
+    predictor: &mut dyn Predictor,
+    corpus: &Corpus,
+    out_tokens: usize,
+) -> Result<(f64, u64)> {
+    let cfg = ws.cfg.clone();
+    let dm = DeviceModel::upload(rt, ws)?;
+    let mut main = ModelState::new(rt, ws.clone())?;
+    let mut correct_sum: u64 = 0;
+    let mut total: u64 = 0;
+    for prompt in &corpus.prompts {
+        main.reset();
+        let rec = main.prefill(prompt)?;
+        let mut token = rec.token_out;
+        for _ in 0..out_tokens {
+            predictor.begin_token(token);
+            let pred_ref = &mut *predictor;
+            let (cs, tt) = (&mut correct_sum, &mut total);
+            let (d, k) = (cfg.d_model, cfg.top_k);
+            let mut exec = |layer: usize,
+                            route: &Route,
+                            x_resid: &[f32],
+                            h: &[f32]|
+             -> Result<Vec<f32>> {
+                if let Some(p) = pred_ref.predict(layer) {
+                    *cs += correct_count(&p, &route.experts) as u64;
+                    *tt += k as u64;
+                }
+                pred_ref.observe(layer, x_resid, h, route);
+                // Numerics: full-precision experts, unchanged.
+                let mut acc = vec![0f32; d];
+                for (i, &e) in route.experts.iter().enumerate() {
+                    let y = rt.expert_ffn(&dm, layer, e, h, 1)?;
+                    let w = route.weights[i];
+                    for j in 0..d {
+                        acc[j] += w * y[j];
+                    }
+                }
+                Ok(acc)
+            };
+            let step = main.decode_step_with(token, &mut exec)?;
+            token = step.token_out;
+        }
+    }
+    let recall = if total == 0 { 0.0 } else { correct_sum as f64 / total as f64 };
+    Ok((recall, total))
+}

@@ -1,0 +1,78 @@
+//! Speed harness: serve a corpus through any [`Engine`] and aggregate
+//! TTFT / decoding throughput / output throughput, at paper scale.
+//!
+//! Paper-scale conversion: the virtual-time model books per-layer work for
+//! our 12-layer Tiny-Mixtral; Mixtral-8x7B has 32 layers and per-token
+//! time is linear in depth, so reported milliseconds scale by 32/12.
+//! (Both raw and scaled values are retained.)
+
+use anyhow::Result;
+
+use crate::coordinator::{Engine, PromptResult};
+use crate::metrics::SpeedStats;
+use crate::workload::Corpus;
+
+/// Paper model depth / our model depth.
+pub const PAPER_LAYER_SCALE: f64 = 32.0 / 12.0;
+
+/// One (input_len, output_len) evaluation cell of Table 2(i).
+#[derive(Debug, Clone)]
+pub struct SpeedCell {
+    pub input_len: usize,
+    pub output_len: usize,
+    /// Raw virtual-time stats (12-layer model).
+    pub raw: SpeedStats,
+    /// Paper-scale stats (32-layer equivalent).
+    pub scaled: SpeedStats,
+    pub total_stall_ms: f64,
+}
+
+impl SpeedCell {
+    pub fn label(&self) -> String {
+        format!("({}, {})", self.input_len, self.output_len)
+    }
+}
+
+/// Run `engine` over a corpus, producing one Table 2(i) cell.
+pub fn run_speed_cell(
+    engine: &mut dyn Engine,
+    corpus: &Corpus,
+    out_tokens: usize,
+) -> Result<SpeedCell> {
+    let mut raw = SpeedStats::default();
+    let mut scaled = SpeedStats::default();
+    let mut stall = 0.0;
+    let input_len = corpus.prompts.first().map(|p| p.len()).unwrap_or(0);
+    for prompt in &corpus.prompts {
+        engine.reset()?;
+        let res: PromptResult = engine.run_prompt(prompt, out_tokens, false)?;
+        let n = res.tokens.len().saturating_sub(1);
+        raw.record(res.ttft_ms, res.decode_ms, n);
+        scaled.record(
+            res.ttft_ms * PAPER_LAYER_SCALE,
+            res.decode_ms * PAPER_LAYER_SCALE,
+            n,
+        );
+        stall += res.stall_ms;
+    }
+    Ok(SpeedCell { input_len, output_len: out_tokens, raw, scaled, total_stall_ms: stall })
+}
+
+/// The paper's four (input, output) cells for one engine.
+pub fn run_speed_table(
+    engine: &mut dyn Engine,
+    seed: u64,
+    prompts_per_len: usize,
+    vocab: u32,
+    out_lens: &[usize],
+) -> Result<Vec<SpeedCell>> {
+    let (short, long) = Corpus::speed_set(seed, prompts_per_len, vocab);
+    let mut cells = Vec::new();
+    for &out in out_lens {
+        cells.push(run_speed_cell(engine, &short, out)?);
+    }
+    for &out in out_lens {
+        cells.push(run_speed_cell(engine, &long, out)?);
+    }
+    Ok(cells)
+}

@@ -1,0 +1,260 @@
+//! Property tests over coordinator invariants (routing, batching,
+//! scheduling, caches, quantization) using the in-tree prop driver.
+
+use odmoe::cache::{ExpertCache, Policy};
+use odmoe::cluster::{HardwareProfile, Resource};
+use odmoe::coordinator::GroupSchedule;
+use odmoe::engine::padded_batch;
+use odmoe::metrics::{correct_count, kl_divergence, RecallStats};
+use odmoe::model::rng::Rng;
+use odmoe::model::{ModelConfig, Precision, WeightStore};
+use odmoe::quant;
+use odmoe::util::prop::check;
+
+const CASES: usize = 64;
+
+#[test]
+fn prop_resource_bookings_never_overlap() {
+    check("resource bookings disjoint", CASES, 11, |rng| {
+        let mut r = Resource::new();
+        let mut intervals: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..20 {
+            let earliest = rng.uniform() * 100.0;
+            let dur = rng.uniform() * 10.0;
+            let (s, e) = r.acquire(earliest, dur);
+            if s < earliest {
+                return Err(format!("start {s} before earliest {earliest}"));
+            }
+            for &(a, b) in &intervals {
+                if s < b && a < e && e - s > 0.0 {
+                    return Err(format!("overlap: ({s},{e}) vs ({a},{b})"));
+                }
+            }
+            intervals.push((s, e));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_resource_preempt_only_shrinks() {
+    check("preempt never extends bookings", CASES, 12, |rng| {
+        let mut r = Resource::new();
+        r.acquire(0.0, rng.uniform() * 20.0);
+        let before = r.free_at();
+        let at = rng.uniform() * 30.0;
+        r.preempt(at);
+        if r.free_at() > before {
+            return Err("free_at grew".into());
+        }
+        if r.free_at() > before.max(at) {
+            return Err("preempt left resource busy past both bounds".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_schedule_partitions_workers() {
+    check("groups partition workers", CASES, 13, |rng| {
+        let group_size = 1 + rng.below(4);
+        let n_groups = 1 + rng.below(6);
+        let s = GroupSchedule::new(group_size * n_groups, group_size);
+        // Every worker appears in exactly one group.
+        let mut seen = vec![0usize; s.n_workers];
+        for g in 0..s.n_groups() {
+            for w in s.workers_of(g) {
+                seen[w] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err(format!("not a partition: {seen:?}"));
+        }
+        // Round-robin covers all groups cyclically.
+        for l in 0..32 {
+            if s.group_of(l) != l % s.n_groups() {
+                return Err("round robin broken".into());
+            }
+            let w = s.worker_for(l, rng.below(group_size));
+            if !s.workers_of(s.group_of(l)).contains(&w) {
+                return Err("worker outside its group".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq1_window_monotone_in_groups() {
+    check("t_maxload grows with group count", CASES, 14, |rng| {
+        let t_m = rng.uniform() * 10.0 + 0.1;
+        let t_w = rng.uniform() * 10.0 + 0.1;
+        let g2 = GroupSchedule::new(4, 2).t_maxload(t_m, t_w);
+        let g4 = GroupSchedule::new(8, 2).t_maxload(t_m, t_w);
+        if g4 <= g2 {
+            return Err(format!("window must grow: {g2} vs {g4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_never_exceeds_capacity_and_counts_consistent() {
+    check("cache capacity + stats", CASES, 15, |rng| {
+        let cap = 1 + rng.below(8);
+        let policy = if rng.uniform() < 0.5 { Policy::Lru } else { Policy::Lfu };
+        let mut c = ExpertCache::new(cap, policy);
+        let mut ops = 0u64;
+        for _ in 0..100 {
+            let key = (rng.below(4), rng.below(8));
+            if rng.uniform() < 0.5 {
+                c.touch(key);
+                ops += 1;
+            } else {
+                c.insert(key);
+            }
+            if c.len() > cap {
+                return Err(format!("len {} > cap {cap}", c.len()));
+            }
+        }
+        if c.hits + c.misses != ops {
+            return Err("hit+miss != touches".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_error_ordering_any_seed() {
+    check("fp16 <= int8 <= nf4 error", 16, 16, |rng| {
+        let w = rng.normal_vec(64 * 8, 0.5);
+        let err = |q: &[f32]| -> f32 {
+            q.iter().zip(&w).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+        };
+        let e16 = err(&quant::fake_quant_fp16(&w));
+        let e8 = err(&quant::fake_quant_int8(&w, 64));
+        let e4 = err(&quant::fake_quant_nf4(&w));
+        if !(e16 <= e8 && e8 <= e4) {
+            return Err(format!("ordering broken: {e16} {e8} {e4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recall_stats_bounded() {
+    check("recall in [0,1]", CASES, 17, |rng| {
+        let k = 1 + rng.below(3);
+        let layers = 1 + rng.below(12);
+        let mut s = RecallStats::new(k, layers);
+        for n in 0..rng.below(20) + 1 {
+            let correct: Vec<usize> = (0..layers).map(|_| rng.below(k + 1)).collect();
+            s.record_token(n, &correct);
+        }
+        let r = s.recall();
+        if !(0.0..=1.0).contains(&r) {
+            return Err(format!("recall {r} out of range"));
+        }
+        for n in 0..s.max_token() {
+            if let Some(rn) = s.recall_at(n) {
+                if !(0.0..=1.0).contains(&rn) {
+                    return Err(format!("recall_at({n}) = {rn}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_correct_count_bounds() {
+    check("0 <= correct_count <= k", CASES, 18, |rng| {
+        let k = 1 + rng.below(3);
+        let pick = |rng: &mut Rng| -> Vec<usize> {
+            let mut v = Vec::new();
+            while v.len() < k {
+                let e = rng.below(8);
+                if !v.contains(&e) {
+                    v.push(e);
+                }
+            }
+            v
+        };
+        let a = pick(rng);
+        let b = pick(rng);
+        let c = correct_count(&a, &b);
+        if c > k {
+            return Err(format!("count {c} > k {k}"));
+        }
+        if correct_count(&a, &a) != k {
+            return Err("self-intersection must be k".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padded_batch_covers_and_is_supported() {
+    check("padded batch >= n and supported", CASES, 19, |rng| {
+        let n = 1 + rng.below(128);
+        let b = padded_batch(n);
+        if b < n {
+            return Err(format!("pad {b} < n {n}"));
+        }
+        if !odmoe::runtime::EXPERT_FFN_SIZES.contains(&b) {
+            return Err(format!("unsupported batch {b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kl_nonnegative() {
+    check("KL >= 0", CASES, 20, |rng| {
+        let p: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let q: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let kl = kl_divergence(&p, &q);
+        if kl < -1e-9 {
+            return Err(format!("negative KL {kl}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weight_quantization_preserves_shape_and_seed_determinism() {
+    check("quantized store shapes", 6, 21, |rng| {
+        let seed = rng.next_u64();
+        let cfg = ModelConfig::default();
+        let ws = WeightStore::generate(&cfg, seed);
+        for p in [Precision::Fp16, Precision::Int8, Precision::Nf4] {
+            let q = ws.quantized(p);
+            if q.layers.len() != ws.layers.len() {
+                return Err("layer count changed".into());
+            }
+            if q.experts[0][0].w1.len() != ws.experts[0][0].w1.len() {
+                return Err("expert shape changed".into());
+            }
+        }
+        let again = WeightStore::generate(&cfg, seed);
+        if again.embedding != ws.embedding {
+            return Err("generation not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq1_feasibility_matches_definition() {
+    check("io_bottleneck_free consistent with Eq. 1", CASES, 22, |rng| {
+        let mut p = HardwareProfile::rtx3090();
+        p.pcie_gbps = 1.0 + rng.uniform() * 50.0;
+        let s = GroupSchedule::new(8, 2);
+        let free = s.io_bottleneck_free(&p);
+        let manual = p.expert_load_ms(1.0) <= s.t_maxload(p.t_main_ms(), p.t_worker_ms());
+        if free != manual {
+            return Err("feasibility check disagrees with Eq. 1".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,163 @@
+//! Integration tests over the full Rust-side model engine: generation is
+//! deterministic, prefill and decode agree, and the quantized shadow model
+//! tracks the full-precision router (the SEP premise).
+
+use odmoe::engine::ModelState;
+use odmoe::model::{ModelConfig, Precision, WeightStore};
+use odmoe::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn state(rt: &Runtime, seed: u64) -> ModelState<'_> {
+    let ws = WeightStore::generate(&ModelConfig::default(), seed);
+    ModelState::new(rt, ws).unwrap()
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let rt = runtime();
+    let mut a = state(&rt, 42);
+    let mut b = state(&rt, 42);
+    let mut tok_a = 17u32;
+    let mut tok_b = 17u32;
+    for _ in 0..4 {
+        let ra = a.decode_step(tok_a).unwrap();
+        let rb = b.decode_step(tok_b).unwrap();
+        assert_eq!(ra.token_out, rb.token_out);
+        assert_eq!(ra.routes, rb.routes);
+        tok_a = ra.token_out;
+        tok_b = rb.token_out;
+    }
+}
+
+#[test]
+fn routes_are_valid_topk() {
+    let rt = runtime();
+    let cfg = ModelConfig::default();
+    let mut s = state(&rt, 7);
+    let rec = s.decode_step(3).unwrap();
+    assert_eq!(rec.routes.len(), cfg.n_layers);
+    for r in &rec.routes {
+        assert_eq!(r.experts.len(), cfg.top_k);
+        assert!(r.experts.iter().all(|&e| e < cfg.n_experts));
+        assert_ne!(r.experts[0], r.experts[1], "top-2 must be distinct");
+        let sum: f32 = r.weights.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "router weights must sum to 1");
+        assert!(r.weights[0] >= r.weights[1], "descending router weights");
+    }
+    assert_eq!(rec.logits.len(), cfg.vocab_size);
+}
+
+#[test]
+fn prefill_matches_sequential_decode() {
+    let rt = runtime();
+    let prompt: Vec<u32> = (0..16).map(|i| (i * 13 + 5) % 256).collect();
+
+    let mut via_prefill = state(&rt, 9);
+    let rec_p = via_prefill.prefill(&prompt).unwrap();
+
+    let mut via_decode = state(&rt, 9);
+    let mut last = None;
+    for &t in &prompt {
+        last = Some(via_decode.decode_step(t).unwrap());
+    }
+    let rec_d = last.unwrap();
+
+    assert_eq!(rec_p.token_out, rec_d.token_out, "greedy next token must agree");
+    // Per-layer routes of the last prompt token must agree.
+    for (l, (rp, rd)) in rec_p.routes.iter().zip(&rec_d.routes).enumerate() {
+        assert_eq!(rp.experts, rd.experts, "layer {l} route");
+    }
+    // And continued decode from both states must produce the same token.
+    let n1 = via_prefill.decode_step(rec_p.token_out).unwrap();
+    let n2 = via_decode.decode_step(rec_d.token_out).unwrap();
+    assert_eq!(n1.token_out, n2.token_out);
+}
+
+#[test]
+fn shadow_router_agreement_is_high() {
+    let rt = runtime();
+    let cfg = ModelConfig::default();
+    let full_ws = WeightStore::generate(&cfg, 11);
+    let mut full = ModelState::new(&rt, full_ws.clone()).unwrap();
+    let mut shadow = ModelState::new(&rt, full_ws.quantized(Precision::Fp16)).unwrap();
+
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let mut tok = 5u32;
+    for _ in 0..8 {
+        let rf = full.decode_step(tok).unwrap();
+        let rs = shadow.decode_step(tok).unwrap();
+        for (a, b) in rf.routes.iter().zip(&rs.routes) {
+            let mut ea = a.experts.clone();
+            let mut eb = b.experts.clone();
+            ea.sort_unstable();
+            eb.sort_unstable();
+            total += 2;
+            agree += ea.iter().filter(|e| eb.contains(e)).count();
+        }
+        // Keep the two models KV-aligned (this test isolates token drift).
+        shadow.align_kv_from(&full);
+        tok = rf.token_out;
+    }
+    let rate = agree as f64 / total as f64;
+    assert!(rate > 0.95, "fp16 shadow agreement {rate} too low");
+}
+
+#[test]
+fn kv_alignment_restores_divergence() {
+    let rt = runtime();
+    let cfg = ModelConfig::default();
+    let ws = WeightStore::generate(&cfg, 13);
+    let mut full = ModelState::new(&rt, ws.clone()).unwrap();
+    let mut shadow = ModelState::new(&rt, ws.quantized(Precision::Nf4)).unwrap();
+
+    let mut tok = 1u32;
+    for _ in 0..6 {
+        let r = full.decode_step(tok).unwrap();
+        let _ = shadow.decode_step(tok).unwrap();
+        tok = r.token_out;
+    }
+    // After alignment the caches must be bitwise identical.
+    shadow.align_kv_from(&full);
+    for (a, b) in shadow.caches.iter().zip(&full.caches) {
+        assert_eq!(a.k(), b.k());
+        assert_eq!(a.v(), b.v());
+        assert_eq!(a.len, b.len);
+    }
+    assert_eq!(shadow.pos, full.pos);
+}
+
+#[test]
+fn reset_gives_fresh_generation() {
+    let rt = runtime();
+    let mut s = state(&rt, 21);
+    let first = s.decode_step(9).unwrap();
+    for _ in 0..3 {
+        let _ = s.decode_step(0).unwrap();
+    }
+    s.reset();
+    let again = s.decode_step(9).unwrap();
+    assert_eq!(first.token_out, again.token_out);
+    assert_eq!(first.routes, again.routes);
+}
+
+#[test]
+fn prefill_activations_cover_most_experts() {
+    // Paper §3.3 footnote: 16-token prompts activate ~7.6/8 experts per
+    // layer; 128-token prompts activate ~8/8.
+    let rt = runtime();
+    let mut s = state(&rt, 23);
+    let prompt: Vec<u32> = (0..128).map(|i| (i * 7 + 31) % 256).collect();
+    let acts = s.prefill_activations(&prompt).unwrap();
+    let cfg = ModelConfig::default();
+    assert_eq!(acts.len(), cfg.n_layers);
+    let avg: f64 = acts
+        .iter()
+        .map(|layer| layer.iter().filter(|&&b| b).count() as f64)
+        .sum::<f64>()
+        / acts.len() as f64;
+    assert!(avg > 6.5, "long prompts should activate nearly all experts, got {avg}");
+}

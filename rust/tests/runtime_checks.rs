@@ -1,0 +1,170 @@
+//! Cross-language known-answer tests: execute every AOT artifact through
+//! the PJRT runtime on the inputs recorded by `aot.py` and compare with the
+//! outputs JAX produced at build time. This validates the entire
+//! python -> HLO-text -> rust -> PJRT round trip numerically.
+
+use anyhow::{anyhow, Result};
+use odmoe::util::json::Json;
+
+struct Check {
+    inputs: Vec<Vec<f64>>,
+    input_shapes: Vec<Vec<usize>>,
+    input_dtypes: Vec<String>,
+    outputs: Vec<Vec<f64>>,
+    output_dtypes: Vec<String>,
+}
+
+fn artifact_dir() -> String {
+    std::env::var("ODMOE_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn parse_check(v: &Json) -> Result<Check> {
+    let vecs = |key: &str| -> Result<Vec<Vec<f64>>> {
+        v.get(key)?.as_arr()?.iter().map(|a| a.as_f64_vec()).collect()
+    };
+    let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+        v.get(key)?.as_arr()?.iter().map(|a| a.as_usize_vec()).collect()
+    };
+    let strs = |key: &str| -> Result<Vec<String>> {
+        v.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect()
+    };
+    Ok(Check {
+        inputs: vecs("inputs")?,
+        input_shapes: shapes("input_shapes")?,
+        input_dtypes: strs("input_dtypes")?,
+        outputs: vecs("outputs")?,
+        output_dtypes: strs("output_dtypes")?,
+    })
+}
+
+fn load_checks() -> Result<Vec<(String, Check)>> {
+    let text = std::fs::read_to_string(format!("{}/checks.json", artifact_dir()))?;
+    let v = Json::parse(&text)?;
+    v.as_obj()?
+        .iter()
+        .map(|(k, c)| Ok((k.clone(), parse_check(c)?)))
+        .collect()
+}
+
+fn run_artifact(name: &str, check: &Check) -> Result<()> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+    let path = format!("{}/{}.hlo.txt", artifact_dir(), name);
+    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| anyhow!("{e:?}"))?;
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+
+    let mut bufs = Vec::new();
+    for ((vals, shape), dtype) in check
+        .inputs
+        .iter()
+        .zip(&check.input_shapes)
+        .zip(&check.input_dtypes)
+    {
+        let buf = match dtype.as_str() {
+            "float32" => {
+                let v: Vec<f32> = vals.iter().map(|&x| x as f32).collect();
+                client.buffer_from_host_buffer(&v, shape, None)
+            }
+            "int32" => {
+                let v: Vec<i32> = vals.iter().map(|&x| x as i32).collect();
+                client.buffer_from_host_buffer(&v, shape, None)
+            }
+            other => return Err(anyhow!("unhandled input dtype {other}")),
+        }
+        .map_err(|e| anyhow!("upload: {e:?}"))?;
+        bufs.push(buf);
+    }
+    let arg_refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let out = exe.execute_b(&arg_refs).map_err(|e| anyhow!("exec {name}: {e:?}"))?;
+    let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+    let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+    assert_eq!(parts.len(), check.outputs.len(), "{name}: output arity");
+
+    for (i, ((part, want), dtype)) in parts
+        .iter()
+        .zip(&check.outputs)
+        .zip(&check.output_dtypes)
+        .enumerate()
+    {
+        match dtype.as_str() {
+            "float32" => {
+                let got = part.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+                assert_eq!(got.len(), want.len(), "{name} out{i} length");
+                for (j, (g, w)) in got.iter().zip(want).enumerate() {
+                    let diff = (*g as f64 - w).abs();
+                    let tol = 1e-4 + 1e-4 * w.abs();
+                    assert!(
+                        diff <= tol,
+                        "{name} out{i}[{j}]: got {g}, want {w} (diff {diff:.3e})"
+                    );
+                }
+            }
+            "int32" => {
+                let got = part.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+                let want_i: Vec<i32> = want.iter().map(|&x| x as i32).collect();
+                assert_eq!(got, want_i, "{name} out{i}");
+            }
+            other => return Err(anyhow!("unhandled output dtype {other}")),
+        }
+    }
+    Ok(())
+}
+
+fn run_one(name: &str) {
+    let checks = load_checks().expect("artifacts missing — run `make artifacts`");
+    let c = checks
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("artifact {name} not in checks.json"));
+    run_artifact(name, &c.1).unwrap();
+}
+
+#[test]
+fn main_block_decode_matches_jax() {
+    run_one("main_block_decode");
+}
+
+#[test]
+fn lm_head_matches_jax() {
+    run_one("lm_head");
+}
+
+#[test]
+fn expert_ffn_t1_matches_jax() {
+    run_one("expert_ffn_t1");
+}
+
+#[test]
+fn expert_ffn_t16_matches_jax() {
+    run_one("expert_ffn_t16");
+}
+
+#[test]
+fn expert_ffn_t128_matches_jax() {
+    run_one("expert_ffn_t128");
+}
+
+#[test]
+fn prefill_t16_matches_jax() {
+    run_one("main_block_prefill_t16");
+}
+
+#[test]
+fn prefill_t128_matches_jax() {
+    run_one("main_block_prefill_t128");
+}
+
+#[test]
+fn all_checks_execute() {
+    let checks = load_checks().expect("artifacts missing — run `make artifacts`");
+    assert!(checks.len() >= 11, "expected >= 11 artifacts, got {}", checks.len());
+    for (name, c) in &checks {
+        run_artifact(name, c).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
