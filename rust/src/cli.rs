@@ -5,10 +5,14 @@
 use anyhow::{bail, Result};
 use odmoe::cluster::HardwareProfile;
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
-use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine, Request, Server};
+use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
 use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
 use odmoe::predictor::{AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
+use odmoe::serve::{
+    config_from_args, parse_rates, rate_sweep, sweep_json, write_bench, EngineService, Scheduler,
+    ServeReport, ServiceModel, SessionOutcome,
+};
 use odmoe::util::cli::Args;
 use odmoe::util::table::{sparkline, Table};
 use odmoe::workload::{fidelity, recall, speed, Corpus};
@@ -31,13 +35,11 @@ fn parse_period(s: &str) -> Result<usize> {
     Ok(s.parse()?)
 }
 
-/// `od-moe serve`: end-to-end OD-MoE serving through the FCFS request
-/// server (requests arrive at `--arrival-gap-ms` intervals).
+/// `od-moe serve`: load-test OD-MoE through the continuous scheduler.
+/// One rate by default; `--rates 0.5,2,8` sweeps OD-MoE against the
+/// fully-cached baseline and writes `BENCH_serve.json`.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
-    let prompts = a.usize_or("prompts", 4)?;
-    let out_tokens = a.usize_or("out-tokens", 32)?;
-    let input_len = a.usize_or("input-len", 16)?;
-    let gap = a.f64_or("arrival-gap-ms", 100.0)?;
+    let (spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
     let ws = WeightStore::generate(&rt.cfg, seed);
     let cfg = OdMoeConfig {
         shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
@@ -47,43 +49,87 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         },
         ..OdMoeConfig::default()
     };
-    let mut engine = OdMoeEngine::new(rt, ws, cfg)?;
-    println!("engine: {}", engine.name());
-    let corpus = Corpus::generate(seed, prompts, input_len, rt.cfg.vocab_size as u32);
+    let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
 
-    let mut server = Server::new(&mut engine);
-    for (i, prompt) in corpus.prompts.iter().enumerate() {
-        server.submit(Request {
-            id: i as u64,
-            prompt: prompt.clone(),
-            out_tokens,
-            arrival_ms: i as f64 * gap,
-        });
+    if let Some(rates) = a.get("rates") {
+        let rates = parse_rates(rates)?;
+        let mut baseline = FullyCachedEngine::new(rt, ws)?;
+        let mut od_svc = EngineService::new(&mut engine);
+        let mut ref_svc = EngineService::new(&mut baseline);
+        let mut systems: Vec<(String, &mut dyn ServiceModel)> =
+            vec![("od-moe".into(), &mut od_svc), ("transformers".into(), &mut ref_svc)];
+        let results = rate_sweep(&mut systems, &spec, &rates, &sched, seed)?;
+        print_sweep(&results);
+        let path = std::path::Path::new("BENCH_serve.json");
+        write_bench(path, &sweep_json(&results, &spec, &rates, &sched, seed))?;
+        println!("\nwrote {}", path.display());
+        return Ok(());
     }
-    let (done, stats) = server.run()?;
 
-    let mut t = Table::new(&["req", "queued (ms)", "ttft (ms)", "total (ms)", "stall (ms)", "tokens"]);
-    for c in &done {
-        let toks: Vec<String> = c.tokens.iter().take(8).map(|t| t.to_string()).collect();
+    println!("engine: {} | policy {} | {} replica(s) | {} arrivals @ {:.2} req/s",
+        engine.name(), sched.policy.label(), sched.n_replicas, spec.model.label(), rate);
+    let reqs = spec.generate(seed);
+    let mut service = EngineService::new(&mut engine);
+    let outcome = Scheduler::run(&sched, &mut service, &reqs)?;
+    let names: Vec<String> = spec.tenants.iter().map(|t| t.name.clone()).collect();
+    let report = ServeReport::from_outcome("od-moe", rate, &outcome, &names);
+
+    let mut t = Table::new(&[
+        "req", "tenant", "queued (ms)", "ttft (ms)", "e2e (ms)", "tok", "outcome", "slo",
+    ]);
+    for r in &outcome.records {
         t.row(&[
-            format!("#{}", c.id),
-            format!("{:.1}", c.queued_ms),
-            format!("{:.1}", c.ttft_ms),
-            format!("{:.1}", c.total_ms),
-            format!("{:.1}", c.stall_ms),
-            format!("{}…", toks.join(" ")),
+            format!("#{}", r.id),
+            names.get(r.tenant).cloned().unwrap_or_default(),
+            format!("{:.1}", r.queued_ms()),
+            r.ttft_ms().map_or("-".into(), |v| format!("{v:.1}")),
+            format!("{:.1}", r.e2e_ms()),
+            format!("{}/{}", r.tokens.len(), r.requested_tokens),
+            match r.outcome {
+                SessionOutcome::Completed => "ok".into(),
+                SessionOutcome::Preempted => "preempted".into(),
+                SessionOutcome::Rejected => "REJECTED".into(),
+            },
+            if r.slo_met() { "met".into() } else { "miss".to_string() },
         ]);
     }
     t.print();
     println!(
-        "\nserved {} requests | {} tokens | {:.2} tok/s end-to-end | mean queue {:.1} ms | p95 latency {:.1} ms",
-        stats.served,
-        stats.total_tokens,
-        stats.tokens_per_s(),
-        stats.mean_queue_ms,
-        stats.p95_total_ms
+        "\nserved {}/{} | {:.2} tok/s | goodput {:.2} tok/s | slo {:.0}% | ttft p50/p95/p99 = {:.0}/{:.0}/{:.0} ms | mean queue depth {:.2}",
+        report.completed,
+        report.offered,
+        report.throughput_tok_s,
+        report.goodput_tok_s,
+        report.slo_attainment * 100.0,
+        report.ttft.p50,
+        report.ttft.p95,
+        report.ttft.p99,
+        report.mean_queue_depth,
     );
     Ok(())
+}
+
+fn print_sweep(results: &[(String, Vec<ServeReport>)]) {
+    let mut t = Table::new(&[
+        "system", "rate req/s", "tok/s", "goodput tok/s", "slo %", "ttft p50", "ttft p95",
+        "ttft p99", "p99 tpot",
+    ]);
+    for (name, points) in results {
+        for p in points {
+            t.row(&[
+                name.clone(),
+                format!("{:.2}", p.rate_per_s),
+                format!("{:.2}", p.throughput_tok_s),
+                format!("{:.2}", p.goodput_tok_s),
+                format!("{:.0}", p.slo_attainment * 100.0),
+                format!("{:.0}", p.ttft.p50),
+                format!("{:.0}", p.ttft.p95),
+                format!("{:.0}", p.ttft.p99),
+                format!("{:.0}", p.tpot.p99),
+            ]);
+        }
+    }
+    t.print();
 }
 
 /// `od-moe recall`: Fig. 3-style recall curves.

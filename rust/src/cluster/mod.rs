@@ -106,9 +106,15 @@ impl Node {
         self.gpu_bytes_peak = self.gpu_bytes_peak.max(self.gpu_bytes_used);
     }
 
-    pub fn dealloc(&mut self, bytes: u64) {
+    /// Release `bytes` from the ledger, returning the bytes actually
+    /// freed. Debug builds assert on underflow; release builds clamp, and
+    /// the shortfall is visible in the return value so callers can detect
+    /// ledger drift instead of it silently accumulating.
+    pub fn dealloc(&mut self, bytes: u64) -> u64 {
         debug_assert!(self.gpu_bytes_used >= bytes, "GPU memory underflow");
-        self.gpu_bytes_used = self.gpu_bytes_used.saturating_sub(bytes);
+        let freed = bytes.min(self.gpu_bytes_used);
+        self.gpu_bytes_used -= freed;
+        freed
     }
 
     pub fn reset(&mut self) {
@@ -217,10 +223,12 @@ mod tests {
         let mut n = Node::new(0);
         n.alloc(100);
         n.alloc(50);
-        n.dealloc(100);
+        assert_eq!(n.dealloc(100), 100, "dealloc reports the bytes it freed");
         n.alloc(20);
         assert_eq!(n.gpu_bytes_used, 70);
         assert_eq!(n.gpu_bytes_peak, 150);
+        assert_eq!(n.dealloc(70), 70);
+        assert_eq!(n.gpu_bytes_used, 0);
     }
 
     #[test]

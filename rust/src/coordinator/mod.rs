@@ -11,6 +11,8 @@ pub mod server;
 
 pub use odmoe::{OdMoeConfig, OdMoeEngine, PredictorMode};
 pub use schedule::GroupSchedule;
+// `server` is a compatibility shim; the serving layer proper lives in
+// [`crate::serve`].
 pub use server::{Request, Server, ServerStats};
 
 use crate::cluster::Ms;

@@ -1,19 +1,17 @@
-//! Serving front-end: a request queue + FCFS scheduler over any
-//! [`Engine`] (the piece a deployment actually talks to; cf. the vLLM
-//! router split of API front-end vs model engine).
+//! Serving front-end compatibility shim.
 //!
-//! Requests carry a prompt, a token budget and an arrival time (virtual
-//! ms). The server admits them FCFS — the paper's engines decode one
-//! sequence at a time (no batched decoding, matching §4.4's comparison
-//! setup) — and reports per-request queueing/service latency plus
-//! aggregate throughput. Time composes with the engines' virtual clocks:
-//! a request's service occupies the engine for its measured virtual
-//! duration.
+//! The original single-engine FCFS drain now lives in [`crate::serve`] as
+//! a special case of the continuous scheduler (FCFS policy, one replica,
+//! no admission limits). This module keeps the seed API — [`Request`],
+//! [`Server`], [`ServerStats`] — for existing callers and benches; new
+//! code should use [`crate::serve`] directly for multi-replica pools,
+//! SJF/EDF policies, admission control, SLOs and rate sweeps.
 
 use anyhow::Result;
 
-use super::{Engine, PromptResult};
+use super::Engine;
 use crate::cluster::Ms;
+use crate::serve::{self, EngineService, Scheduler, SchedulerConfig};
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -57,7 +55,7 @@ impl ServerStats {
     }
 }
 
-/// FCFS server over one engine.
+/// FCFS server over one engine (shim over [`crate::serve::Scheduler`]).
 pub struct Server<'e> {
     engine: &'e mut dyn Engine,
     queue: Vec<Request>,
@@ -77,34 +75,34 @@ impl<'e> Server<'e> {
     }
 
     /// Drain the queue FCFS (by arrival time, ties by id). Returns the
-    /// per-request completions and aggregate stats.
+    /// per-request completions (in completion order) and aggregate stats.
     pub fn run(&mut self) -> Result<(Vec<Completion>, ServerStats)> {
-        self.queue.sort_by(|a, b| {
-            a.arrival_ms
-                .partial_cmp(&b.arrival_ms)
-                .unwrap()
-                .then(a.id.cmp(&b.id))
-        });
-        let mut completions = Vec::with_capacity(self.queue.len());
-        let mut clock: Ms = 0.0;
+        let reqs: Vec<serve::Request> = self
+            .queue
+            .drain(..)
+            .map(|r| serve::Request::open_loop(r.id, r.prompt, r.out_tokens, r.arrival_ms))
+            .collect();
+        let cfg = SchedulerConfig::default(); // FCFS, one replica, no limits
+        let mut service = EngineService::new(&mut *self.engine);
+        let outcome = Scheduler::run(&cfg, &mut service, &reqs)?;
+
         let mut total_tokens = 0usize;
-        for req in self.queue.drain(..) {
-            let start = clock.max(req.arrival_ms);
-            self.engine.reset()?;
-            let res: PromptResult = self.engine.run_prompt(&req.prompt, req.out_tokens, false)?;
-            let service = res.ttft_ms + res.decode_ms;
-            total_tokens += res.tokens.len();
-            completions.push(Completion {
-                id: req.id,
-                queued_ms: start - req.arrival_ms,
-                ttft_ms: start - req.arrival_ms + res.ttft_ms,
-                total_ms: start - req.arrival_ms + service,
-                tokens: res.tokens,
-                stall_ms: res.stall_ms,
-            });
-            clock = start + service;
-        }
-        let stats = summarize(&completions, clock, total_tokens);
+        let completions: Vec<Completion> = outcome
+            .records
+            .iter()
+            .map(|rec| {
+                total_tokens += rec.tokens.len();
+                Completion {
+                    id: rec.id,
+                    queued_ms: rec.queued_ms(),
+                    ttft_ms: rec.ttft_ms().unwrap_or_else(|| rec.e2e_ms()),
+                    total_ms: rec.e2e_ms(),
+                    tokens: rec.tokens.clone(),
+                    stall_ms: rec.stall_ms,
+                }
+            })
+            .collect();
+        let stats = summarize(&completions, outcome.makespan_ms, total_tokens);
         Ok((completions, stats))
     }
 }
@@ -114,21 +112,21 @@ fn summarize(completions: &[Completion], makespan: Ms, total_tokens: usize) -> S
         return ServerStats::default();
     }
     let n = completions.len() as f64;
-    let mut totals: Vec<Ms> = completions.iter().map(|c| c.total_ms).collect();
-    totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let totals: Vec<Ms> = completions.iter().map(|c| c.total_ms).collect();
     ServerStats {
         served: completions.len(),
         total_tokens,
         makespan_ms: makespan,
         mean_queue_ms: completions.iter().map(|c| c.queued_ms).sum::<Ms>() / n,
         mean_ttft_ms: completions.iter().map(|c| c.ttft_ms).sum::<Ms>() / n,
-        p95_total_ms: totals[((totals.len() - 1) as f64 * 0.95) as usize],
+        p95_total_ms: crate::metrics::percentile(&totals, 0.95),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::PromptResult;
 
     /// Engine stub with fixed service times (server logic is engine-agnostic).
     struct StubEngine {
@@ -203,5 +201,19 @@ mod tests {
         assert!(done.is_empty());
         assert_eq!(stats.served, 0);
         assert_eq!(stats.tokens_per_s(), 0.0);
+    }
+
+    #[test]
+    fn p95_uses_nearest_rank() {
+        // 10 identical-service requests arriving back to back: totals are
+        // 100, 200, ..., 1000; nearest-rank p95 is the 10th (1000), not
+        // the truncated 9th.
+        let mut e = StubEngine { ttft: 10.0, decode: 90.0 };
+        let mut s = Server::new(&mut e);
+        for i in 0..10 {
+            s.submit(req(i, 0.0));
+        }
+        let (_, stats) = s.run().unwrap();
+        assert_eq!(stats.p95_total_ms, 1000.0);
     }
 }

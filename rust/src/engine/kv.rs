@@ -79,6 +79,16 @@ impl KvCache {
     }
 }
 
+/// KV bytes one session of `tokens` occupies across *all* layers at model
+/// scale (2 tensors x `kv_dim` floats x 4 B per token per layer) — the
+/// per-session unit of the serving layer's admission ledger. The
+/// paper-scale equivalent is
+/// [`crate::cluster::HardwareProfile::kv_align_bytes`] per token, which
+/// [`crate::serve::MemoryModel::from_profile`] uses.
+pub fn session_kv_bytes(cfg: &ModelConfig, tokens: usize) -> u64 {
+    (2 * cfg.kv_dim() * 4 * cfg.n_layers * tokens) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +146,15 @@ mod tests {
         // Paper: 8 KB per token per layer at Mixtral scale (2 * 8 heads *
         // 128 dim * 4 B = 8 KiB). Tiny-Mixtral: 2 * 2 * 16 * 4 = 256 B.
         assert_eq!(cache().align_bytes_per_token(), 256);
+    }
+
+    #[test]
+    fn session_bytes_consistent_with_per_layer_cache() {
+        let cfg = ModelConfig::default();
+        // Per-layer per-token bytes x layers x tokens.
+        let per_layer = cache().align_bytes_per_token() as u64;
+        assert_eq!(session_kv_bytes(&cfg, 1), per_layer * cfg.n_layers as u64);
+        assert_eq!(session_kv_bytes(&cfg, 144), per_layer * cfg.n_layers as u64 * 144);
+        assert_eq!(session_kv_bytes(&cfg, 0), 0);
     }
 }

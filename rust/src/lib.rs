@@ -24,6 +24,12 @@
 //!   HOBBIT / AdapMoE / fully-cached / CPU-only reference engines.
 //! * [`workload`] — prompt corpora and the speed/quality harnesses that
 //!   regenerate every table and figure of the paper's evaluation.
+//! * [`serve`] — the multi-tenant load-test layer: seeded arrival traces
+//!   (Poisson / bursty / replayed / closed-loop), a continuous
+//!   virtual-time scheduler over engine-replica pools with FCFS/SJF/EDF
+//!   policies, ledger-backed admission control and over-budget
+//!   preemption, SLO metrics (exact p50/p95/p99 TTFT, goodput), and the
+//!   rate-sweep harness behind `BENCH_serve.json`.
 
 pub mod cache;
 pub mod cluster;
@@ -34,6 +40,7 @@ pub mod model;
 pub mod predictor;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod trace;
 pub mod util;
 pub mod workload;

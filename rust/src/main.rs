@@ -3,7 +3,11 @@
 //! Subcommands map 1:1 onto the paper's evaluation (see DESIGN.md §5):
 //!
 //! ```text
-//! od-moe serve      [--prompts N] [--out-tokens N]    end-to-end OD-MoE serving
+//! od-moe serve      [--requests N] [--rate R] [--rates R1,R2,..]   load-test serving
+//!                   [--policy fcfs|sjf|edf] [--replicas N]
+//!                   [--arrival poisson|bursty|trace|closed]
+//!                   [--slo-ttft-ms MS] [--slo-tpot-ms MS] [--tenants N]
+//!                   [--preempt-ms MS] [--mem-gb G]
 //! od-moe recall     [--prompts N] [--out-tokens N]    SEP recall curves (Fig. 3/6)
 //! od-moe speed      [--prompts N] [--out-tokens N]    decoding speed (Fig. 8/9/10)
 //! od-moe predictors [--prompts N] [--out-tokens N]    Table 1 comparison
@@ -11,6 +15,9 @@
 //! od-moe memory                                       Table 2(ii) GPU-memory audit
 //!
 //! global flags: --artifacts DIR   --seed N
+//!
+//! `serve --rates 0.5,2,8` sweeps OD-MoE against the fully-cached
+//! baseline and writes `BENCH_serve.json` (see `examples/load_test.rs`).
 //! ```
 
 use anyhow::{bail, Result};

@@ -192,6 +192,29 @@ fn softmax(logits: &[f32]) -> Vec<f64> {
     exps.into_iter().map(|e| e / z).collect()
 }
 
+/// Nearest-rank percentile (inclusive, `q` in `[0, 1]`): the smallest
+/// element with at least `⌈q·n⌉` of the sample at or below it. `values`
+/// need not be sorted. Returns 0 on an empty sample.
+///
+/// This replaces the old ad-hoc `((n - 1) as f64 * q) as usize` indexing,
+/// which *truncated* the rank and so under-reported upper quantiles
+/// (e.g. p95 of 10 samples picked the 9th value instead of the 10th).
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// [`percentile`] over an already-sorted ascending sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
 pub fn mean(v: &[f64]) -> f64 {
     if v.is_empty() {
         return 0.0;
@@ -240,6 +263,33 @@ mod tests {
         assert!((s.decode_tps() - 2.0).abs() < 1e-9);
         assert!((s.output_tps() - 1.6).abs() < 1e-9);
         assert_eq!(s.mean_ttft_ms(), 1000.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0, "rank clamps to the minimum");
+        assert_eq!(percentile(&[7.0], 0.95), 7.0);
+        assert_eq!(percentile(&[], 0.95), 0.0);
+    }
+
+    #[test]
+    fn percentile_fixes_truncation_bias() {
+        // 10 samples: nearest-rank p95 is the 10th value (ceil(9.5) = 10);
+        // the old truncating index picked the 9th.
+        let v: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.95), 10.0);
+        let old = v[((v.len() - 1) as f64 * 0.95) as usize];
+        assert_eq!(old, 9.0, "documents the bug this replaced");
+    }
+
+    #[test]
+    fn percentile_handles_unsorted_input() {
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.5), 2.0);
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Seeded workload generation: open-loop arrival processes (Poisson,
+//! bursty ON-OFF, replayed traces) and closed-loop clients with think
+//! time, with per-request prompt/output lengths drawn from
+//! [`crate::workload::Corpus`].
+//!
+//! Everything is generated from [`crate::model::rng::Rng`] streams, so
+//! the same seed yields a byte-identical request list — the property the
+//! whole load-test subsystem's determinism rests on.
+
+use anyhow::{bail, Result};
+
+use super::{Request, Slo};
+use crate::cluster::Ms;
+use crate::model::rng::Rng;
+use crate::workload::Corpus;
+
+/// Per-request length distribution.
+#[derive(Debug, Clone)]
+pub enum LenDist {
+    Fixed(usize),
+    /// Inclusive range.
+    Uniform(usize, usize),
+    /// The paper's corpus shape: short with probability `1 - p_long`.
+    Bimodal { short: usize, long: usize, p_long: f64 },
+}
+
+impl LenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LenDist::Fixed(n) => n,
+            LenDist::Uniform(lo, hi) => {
+                debug_assert!(lo <= hi);
+                lo + rng.below(hi - lo + 1)
+            }
+            LenDist::Bimodal { short, long, p_long } => {
+                if rng.uniform() < p_long {
+                    long
+                } else {
+                    short
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            LenDist::Fixed(n) => format!("fixed({n})"),
+            LenDist::Uniform(lo, hi) => format!("uniform({lo},{hi})"),
+            LenDist::Bimodal { short, long, p_long } => {
+                format!("bimodal({short},{long},p_long={p_long})")
+            }
+        }
+    }
+}
+
+/// When requests show up.
+#[derive(Debug, Clone)]
+pub enum ArrivalModel {
+    /// Open loop, exponential inter-arrival gaps at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Open loop, ON-OFF modulated Poisson: exponential ON windows (mean
+    /// `mean_on_ms`) with instantaneous rate `rate_per_s * burstiness`,
+    /// separated by silent OFF windows (mean `mean_off_ms`). Long-run
+    /// average rate is `rate_per_s * burstiness * on / (on + off)`.
+    Bursty { rate_per_s: f64, burstiness: f64, mean_on_ms: Ms, mean_off_ms: Ms },
+    /// Open loop, replayed inter-arrival gaps (cycled), scaled by
+    /// `scale`.
+    Trace { gaps_ms: Vec<Ms>, scale: f64 },
+    /// Closed loop: `clients` clients, each with one request outstanding,
+    /// issuing the next one an exponential think time (mean
+    /// `mean_think_ms`) after the previous completes.
+    ClosedLoop { clients: usize, mean_think_ms: Ms },
+}
+
+impl ArrivalModel {
+    /// A short human-ish recorded gap pattern (two bursts per cycle) for
+    /// the `--arrival trace` demo; rescale with [`ArrivalModel::with_rate`].
+    pub fn example_trace() -> Self {
+        ArrivalModel::Trace {
+            gaps_ms: vec![
+                120.0, 40.0, 60.0, 30.0, 1800.0, 90.0, 50.0, 45.0, 70.0, 2400.0,
+            ],
+            scale: 1.0,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalModel::Poisson { .. } => "poisson",
+            ArrivalModel::Bursty { .. } => "bursty",
+            ArrivalModel::Trace { .. } => "trace",
+            ArrivalModel::ClosedLoop { .. } => "closed-loop",
+        }
+    }
+
+    /// The same model at a different offered rate (the sweep driver's
+    /// knob). Closed-loop workloads are self-clocked and unchanged.
+    pub fn with_rate(&self, rate_per_s: f64) -> Self {
+        assert!(rate_per_s > 0.0, "rate must be positive");
+        match self {
+            ArrivalModel::Poisson { .. } => ArrivalModel::Poisson { rate_per_s },
+            ArrivalModel::Bursty { burstiness, mean_on_ms, mean_off_ms, .. } => {
+                ArrivalModel::Bursty {
+                    rate_per_s,
+                    burstiness: *burstiness,
+                    mean_on_ms: *mean_on_ms,
+                    mean_off_ms: *mean_off_ms,
+                }
+            }
+            ArrivalModel::Trace { gaps_ms, .. } => {
+                let mean = gaps_ms.iter().sum::<Ms>() / gaps_ms.len().max(1) as f64;
+                ArrivalModel::Trace {
+                    gaps_ms: gaps_ms.clone(),
+                    scale: if mean > 0.0 { 1000.0 / (rate_per_s * mean) } else { 1.0 },
+                }
+            }
+            ArrivalModel::ClosedLoop { .. } => self.clone(),
+        }
+    }
+
+    fn arrival_times(&self, rng: &mut Rng, n: usize) -> Vec<Ms> {
+        let mut t: Ms = 0.0;
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalModel::Poisson { rate_per_s } => {
+                let mean = 1000.0 / rate_per_s;
+                for _ in 0..n {
+                    t += exp_sample(rng, mean);
+                    out.push(t);
+                }
+            }
+            ArrivalModel::Bursty { rate_per_s, burstiness, mean_on_ms, mean_off_ms } => {
+                let mean_gap = 1000.0 / (rate_per_s * burstiness);
+                let mut on_left = exp_sample(rng, mean_on_ms);
+                for _ in 0..n {
+                    loop {
+                        let g = exp_sample(rng, mean_gap);
+                        if g <= on_left {
+                            on_left -= g;
+                            t += g;
+                            out.push(t);
+                            break;
+                        }
+                        t += on_left + exp_sample(rng, mean_off_ms);
+                        on_left = exp_sample(rng, mean_on_ms);
+                    }
+                }
+            }
+            ArrivalModel::Trace { ref gaps_ms, scale } => {
+                assert!(!gaps_ms.is_empty(), "empty trace");
+                for i in 0..n {
+                    t += gaps_ms[i % gaps_ms.len()] * scale;
+                    out.push(t);
+                }
+            }
+            ArrivalModel::ClosedLoop { .. } => out.resize(n, 0.0),
+        }
+        out
+    }
+}
+
+/// Exponential sample with the given mean (inverse CDF; `1 - u` avoids
+/// `ln(0)`).
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    -(1.0 - rng.uniform()).ln() * mean
+}
+
+/// One SLO class.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub slo: Slo,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, slo: Slo) -> Self {
+        Self { name: name.to_string(), slo }
+    }
+
+    /// Latency-sensitive class (budgets in raw 12-layer virtual ms; see
+    /// `workload::speed::PAPER_LAYER_SCALE` for the 32-layer conversion).
+    pub fn interactive() -> Self {
+        Self::new("interactive", Slo::new(1000.0, 150.0))
+    }
+
+    /// Throughput class with no latency objective.
+    pub fn batch() -> Self {
+        Self::new("batch", Slo::relaxed())
+    }
+}
+
+/// A complete workload description; [`WorkloadSpec::generate`] turns it
+/// into a concrete request stream.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub model: ArrivalModel,
+    pub n_requests: usize,
+    pub prompt_len: LenDist,
+    pub out_tokens: LenDist,
+    /// Requests cycle round-robin over tenants.
+    pub tenants: Vec<TenantSpec>,
+    pub vocab: u32,
+}
+
+impl WorkloadSpec {
+    /// Poisson arrivals over the paper's bimodal 16/128 corpus shape,
+    /// 16 output tokens, one relaxed tenant.
+    pub fn poisson(rate_per_s: f64, n_requests: usize, vocab: u32) -> Self {
+        Self {
+            model: ArrivalModel::Poisson { rate_per_s },
+            n_requests,
+            prompt_len: LenDist::Bimodal { short: 16, long: 128, p_long: 0.5 },
+            out_tokens: LenDist::Fixed(16),
+            tenants: vec![TenantSpec::new("default", Slo::relaxed())],
+            vocab,
+        }
+    }
+
+    /// Parse a CLI arrival-model name.
+    pub fn parse_model(
+        kind: &str,
+        rate_per_s: f64,
+        clients: usize,
+        mean_think_ms: Ms,
+    ) -> Result<ArrivalModel> {
+        Ok(match kind {
+            "poisson" => ArrivalModel::Poisson { rate_per_s },
+            "bursty" => ArrivalModel::Bursty {
+                rate_per_s,
+                burstiness: 4.0,
+                mean_on_ms: 2000.0,
+                mean_off_ms: 6000.0,
+            },
+            "trace" => ArrivalModel::example_trace().with_rate(rate_per_s),
+            "closed" | "closed-loop" => ArrivalModel::ClosedLoop { clients, mean_think_ms },
+            other => bail!("unknown arrival model {other:?} (poisson|bursty|trace|closed)"),
+        })
+    }
+
+    pub fn with_rate(&self, rate_per_s: f64) -> Self {
+        Self { model: self.model.with_rate(rate_per_s), ..self.clone() }
+    }
+
+    /// Generate the request stream. Same seed → byte-identical stream;
+    /// prompt `i` matches [`Corpus::generate`]'s prompt `i` whenever the
+    /// lengths agree.
+    pub fn generate(&self, seed: u64) -> Vec<Request> {
+        assert!(!self.tenants.is_empty(), "need at least one tenant");
+        let mut arr_rng = Rng::new(seed ^ 0xA117_11A1);
+        let mut len_rng = Rng::new(seed ^ 0x1E45_D157);
+        let arrivals = self.model.arrival_times(&mut arr_rng, self.n_requests);
+        let lens: Vec<usize> =
+            (0..self.n_requests).map(|_| self.prompt_len.sample(&mut len_rng)).collect();
+        let outs: Vec<usize> =
+            (0..self.n_requests).map(|_| self.out_tokens.sample(&mut len_rng).max(1)).collect();
+        let corpus = Corpus::generate_mixed(seed, &lens, self.vocab);
+        (0..self.n_requests)
+            .map(|i| {
+                let tenant = i % self.tenants.len();
+                let (client, think_ms) = match self.model {
+                    ArrivalModel::ClosedLoop { clients, mean_think_ms } => {
+                        ((i % clients.max(1)) as u64, exp_sample(&mut arr_rng, mean_think_ms))
+                    }
+                    _ => (i as u64, 0.0),
+                };
+                Request {
+                    id: i as u64,
+                    tenant,
+                    client,
+                    prompt: corpus.prompts[i].clone(),
+                    out_tokens: outs[i],
+                    arrival_ms: arrivals[i],
+                    think_ms,
+                    slo: self.tenants[tenant].slo,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_deterministic_and_increasing() {
+        let spec = WorkloadSpec::poisson(2.0, 32, 256);
+        let a = spec.generate(7);
+        let b = spec.generate(7);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        // Mean gap should be in the ballpark of 500 ms at 2 req/s.
+        let mean_gap = a.last().unwrap().arrival_ms / 32.0;
+        assert!((150.0..1500.0).contains(&mean_gap), "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = WorkloadSpec::poisson(2.0, 8, 256);
+        let a = spec.generate(1);
+        let b = spec.generate(2);
+        assert_ne!(
+            a.iter().map(|r| r.arrival_ms.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|r| r.arrival_ms.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn bimodal_prompts_use_both_lengths() {
+        let spec = WorkloadSpec::poisson(1.0, 64, 256);
+        let reqs = spec.generate(3);
+        let shorts = reqs.iter().filter(|r| r.prompt.len() == 16).count();
+        let longs = reqs.iter().filter(|r| r.prompt.len() == 128).count();
+        assert_eq!(shorts + longs, 64);
+        assert!(shorts > 0 && longs > 0);
+    }
+
+    #[test]
+    fn bursty_clusters_arrivals() {
+        let model = ArrivalModel::Bursty {
+            rate_per_s: 1.0,
+            burstiness: 8.0,
+            mean_on_ms: 1000.0,
+            mean_off_ms: 7000.0,
+        };
+        let mut rng = Rng::new(5);
+        let times = model.arrival_times(&mut rng, 64);
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let small = gaps.iter().filter(|&&g| g < 500.0).count();
+        let big = gaps.iter().filter(|&&g| g > 2000.0).count();
+        assert!(small > big, "bursty gaps should cluster: {small} small vs {big} big");
+        assert!(big > 0, "there should be off-window gaps");
+    }
+
+    #[test]
+    fn trace_replays_and_rescales() {
+        let model = ArrivalModel::Trace { gaps_ms: vec![100.0, 300.0], scale: 1.0 };
+        let mut rng = Rng::new(1);
+        let t = model.arrival_times(&mut rng, 4);
+        assert_eq!(t, vec![100.0, 400.0, 500.0, 800.0]);
+        // Rescaled to 10 req/s: mean gap becomes 100 ms.
+        let fast = model.with_rate(10.0);
+        let mut rng = Rng::new(1);
+        let t = fast.arrival_times(&mut rng, 2);
+        assert!((t[0] - 50.0).abs() < 1e-9);
+        assert!((t[1] - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn closed_loop_assigns_clients_and_think_times() {
+        let spec = WorkloadSpec {
+            model: ArrivalModel::ClosedLoop { clients: 3, mean_think_ms: 200.0 },
+            ..WorkloadSpec::poisson(1.0, 9, 256)
+        };
+        let reqs = spec.generate(11);
+        assert!(reqs.iter().all(|r| r.arrival_ms == 0.0));
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.client, (i % 3) as u64);
+            assert!(r.think_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn tenants_cycle_and_carry_slos() {
+        let spec = WorkloadSpec {
+            tenants: vec![TenantSpec::interactive(), TenantSpec::batch()],
+            ..WorkloadSpec::poisson(1.0, 6, 256)
+        };
+        let reqs = spec.generate(1);
+        assert_eq!(reqs[0].tenant, 0);
+        assert_eq!(reqs[1].tenant, 1);
+        assert_eq!(reqs[2].tenant, 0);
+        assert!(reqs[0].slo.ttft_ms.is_finite());
+        assert!(reqs[1].slo.ttft_ms.is_infinite());
+    }
+}

@@ -1,0 +1,208 @@
+//! Rate-sweep driver: run systems across arrival rates and emit
+//! `BENCH_serve.json` — "what does OD-MoE's cacheless loading buy you at
+//! 0.5–8 req/s?" as one deterministic artifact.
+//!
+//! Each (system, rate) point regenerates the workload at that rate from
+//! the *same* seed — prompts and lengths are identical across points
+//! (sharing [`super::EngineService`]'s measurement memo); only the
+//! arrival stream changes, through the rate parameter itself. All state
+//! is virtual-time, so the same seed yields a byte-identical JSON file.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
+use super::metrics::{num, obj, ServeReport};
+use super::scheduler::{MemoryModel, Policy, Scheduler, SchedulerConfig, ServiceModel};
+use super::Slo;
+use crate::cluster::HardwareProfile;
+use crate::runtime::PREFILL_SIZES;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Parse a `--rates 0.5,2,8` list (every rate must be finite and > 0).
+pub fn parse_rates(s: &str) -> Result<Vec<f64>> {
+    let rates: Vec<f64> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| p.trim().parse::<f64>())
+        .collect::<std::result::Result<_, _>>()?;
+    ensure!(!rates.is_empty(), "--rates needs at least one rate");
+    ensure!(
+        rates.iter().all(|r| r.is_finite() && *r > 0.0),
+        "arrival rates must be finite and positive, got {rates:?}"
+    );
+    Ok(rates)
+}
+
+/// Build the workload + scheduler configuration from CLI flags — shared
+/// by `od-moe serve` and `examples/load_test.rs` so the two cannot
+/// drift. Returns (spec, scheduler config, single-run offered rate).
+///
+/// Flags: `--requests` (24), `--rate` (2; or legacy `--arrival-gap-ms`),
+/// `--arrival poisson|bursty|trace|closed`, `--clients`, `--think-ms`,
+/// `--input-len` (else bimodal 16/128), `--out-tokens` (16),
+/// `--slo-ttft-ms`/`--slo-tpot-ms` (raw virtual ms), `--tenants` (1–2:
+/// single class, or interactive + batch), `--policy fcfs|sjf|edf`,
+/// `--replicas`, `--mem-gb`, `--preempt-ms`.
+pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, SchedulerConfig, f64)> {
+    // Back-compat: the old FCFS server took `--arrival-gap-ms`.
+    let rate = match a.get("arrival-gap-ms") {
+        Some(g) => 1000.0 / g.parse::<f64>()?,
+        None => a.f64_or("rate", 2.0)?,
+    };
+    ensure!(rate.is_finite() && rate > 0.0, "--rate must be finite and positive, got {rate}");
+    let requests = a.usize_or("requests", a.usize_or("prompts", 24)?)?;
+    let out_tokens = a.usize_or("out-tokens", 16)?;
+    let model = WorkloadSpec::parse_model(
+        a.get_or("arrival", "poisson"),
+        rate,
+        a.usize_or("clients", 4)?,
+        a.f64_or("think-ms", 500.0)?,
+    )?;
+    let prompt_len = match a.get("input-len") {
+        Some(s) => {
+            let len: usize = s.parse()?;
+            ensure!(
+                PREFILL_SIZES.contains(&len),
+                "no prefill executable for --input-len {len} (have {PREFILL_SIZES:?})"
+            );
+            LenDist::Fixed(len)
+        }
+        None => LenDist::Bimodal { short: 16, long: 128, p_long: 0.5 },
+    };
+    // SLO budgets are raw 12-layer virtual ms (x32/12 for paper scale).
+    let slo = Slo::new(a.f64_or("slo-ttft-ms", 1000.0)?, a.f64_or("slo-tpot-ms", 150.0)?);
+    let tenants = match a.usize_or("tenants", 1)? {
+        0 | 1 => vec![TenantSpec::new("default", slo)],
+        2 => vec![TenantSpec::new("interactive", slo), TenantSpec::batch()],
+        n => anyhow::bail!("--tenants supports 1 or 2 SLO classes, got {n}"),
+    };
+    let spec = WorkloadSpec {
+        model,
+        n_requests: requests,
+        prompt_len,
+        out_tokens: LenDist::Fixed(out_tokens),
+        tenants,
+        vocab,
+    };
+    let sched = SchedulerConfig {
+        policy: Policy::parse(a.get_or("policy", "fcfs"))?,
+        n_replicas: a.usize_or("replicas", 1)?,
+        memory: MemoryModel::from_profile(&HardwareProfile::rtx3090(), a.f64_or("mem-gb", 24.0)?),
+        preempt_budget_ms: a.get("preempt-ms").map(|s| s.parse::<f64>()).transpose()?,
+    };
+    Ok((spec, sched, rate))
+}
+
+/// Run every system at every rate. Systems are (label, service) pairs —
+/// wrap a real engine in [`super::EngineService`], or use
+/// [`super::SyntheticService`] for runtime-free scheduler studies.
+pub fn rate_sweep(
+    systems: &mut [(String, &mut dyn ServiceModel)],
+    base: &WorkloadSpec,
+    rates: &[f64],
+    sched: &SchedulerConfig,
+    seed: u64,
+) -> Result<Vec<(String, Vec<ServeReport>)>> {
+    ensure!(
+        !matches!(base.model, ArrivalModel::ClosedLoop { .. }) || rates.len() <= 1,
+        "closed-loop workloads are self-clocked: sweeping rates would relabel identical \
+         runs — use one rate or an open-loop arrival model"
+    );
+    let tenant_names: Vec<String> = base.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut out = Vec::with_capacity(systems.len());
+    for (name, service) in systems.iter_mut() {
+        let mut points = Vec::with_capacity(rates.len());
+        for &rate in rates {
+            let spec = base.with_rate(rate);
+            // One seed for every rate: prompts and lengths are identical
+            // across points (so EngineService's memo re-measures each
+            // distinct request once per sweep) while the arrival streams
+            // still differ through the rate parameter itself.
+            let reqs = spec.generate(seed);
+            let outcome = Scheduler::run(sched, &mut **service, &reqs)?;
+            points.push(ServeReport::from_outcome(name, rate, &outcome, &tenant_names));
+        }
+        out.push((name.clone(), points));
+    }
+    Ok(out)
+}
+
+/// Assemble the `BENCH_serve.json` document.
+pub fn sweep_json(
+    results: &[(String, Vec<ServeReport>)],
+    base: &WorkloadSpec,
+    rates: &[f64],
+    sched: &SchedulerConfig,
+    seed: u64,
+) -> Json {
+    let workload = obj(vec![
+        ("model", Json::Str(base.model.label().to_string())),
+        ("requests", Json::Num(base.n_requests as f64)),
+        ("prompt_len", Json::Str(base.prompt_len.label())),
+        ("out_tokens", Json::Str(base.out_tokens.label())),
+        (
+            "tenants",
+            Json::Arr(base.tenants.iter().map(|t| Json::Str(t.name.clone())).collect()),
+        ),
+    ]);
+    let systems = Json::Arr(
+        results
+            .iter()
+            .map(|(name, points)| {
+                obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("policy", Json::Str(sched.policy.label().to_string())),
+        ("replicas", Json::Num(sched.n_replicas as f64)),
+        (
+            "preempt_budget_ms",
+            sched.preempt_budget_ms.map_or(Json::Null, num),
+        ),
+        ("rates_per_s", Json::Arr(rates.iter().map(|&r| num(r)).collect())),
+        ("workload", workload),
+        ("systems", systems),
+    ])
+}
+
+/// Write a JSON document with a trailing newline.
+pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
+    std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::SyntheticService;
+
+    #[test]
+    fn sweep_is_deterministic_and_covers_all_points() {
+        let base = WorkloadSpec::poisson(1.0, 12, 256);
+        let rates = [0.5, 2.0, 8.0];
+        let sched = SchedulerConfig::default();
+        let run = |seed| {
+            let mut a = SyntheticService::new(20.0, 0.5, 30.0);
+            let mut b = SyntheticService::new(10.0, 0.25, 15.0);
+            let mut systems: Vec<(String, &mut dyn ServiceModel)> =
+                vec![("slow".into(), &mut a), ("fast".into(), &mut b)];
+            let results = rate_sweep(&mut systems, &base, &rates, &sched, seed).unwrap();
+            sweep_json(&results, &base, &rates, &sched, seed).to_string()
+        };
+        let x = run(42);
+        assert_eq!(x, run(42), "same seed must reproduce the file byte for byte");
+        assert_ne!(x, run(43));
+        assert!(x.contains("\"bench\":\"serve\""));
+        assert!(x.contains("\"name\":\"slow\""));
+        assert!(x.contains("\"p99\""));
+        assert!(x.contains("\"goodput_tok_s\""));
+    }
+}

@@ -1,0 +1,340 @@
+//! SLO metrics: streaming latency histograms with exact nearest-rank
+//! percentiles, goodput accounting, queue-depth timelines, and per-tenant
+//! breakdowns — the serving counterpart of the paper's per-prompt
+//! [`crate::metrics::SpeedStats`].
+
+use crate::cluster::Ms;
+use crate::metrics::percentile_sorted;
+use crate::util::json::Json;
+
+use super::scheduler::{ServeOutcome, SessionOutcome};
+
+/// Streaming sample sink with exact percentiles: O(1) append, one sort
+/// per read (the report reads each histogram exactly once, so sorting at
+/// read time beats keeping the vector sorted across every insertion).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sum += v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum / self.samples.len() as f64
+        }
+    }
+
+    /// Exact nearest-rank quantile (0 on an empty sample).
+    pub fn p(&self, q: f64) -> f64 {
+        crate::metrics::percentile(&self.samples, q)
+    }
+
+    pub fn summary(&self) -> Percentiles {
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            count: sorted.len(),
+            mean: self.mean(),
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Compact percentile summary of one latency series.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean", num(self.mean)),
+            ("p50", num(self.p50)),
+            ("p95", num(self.p95)),
+            ("p99", num(self.p99)),
+        ])
+    }
+}
+
+/// One tenant's slice of a serving run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub offered: usize,
+    pub completed: usize,
+    pub slo_attainment: f64,
+    pub goodput_tok_s: f64,
+    pub ttft: Percentiles,
+}
+
+impl TenantReport {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("slo_attainment", num(self.slo_attainment)),
+            ("goodput_tok_s", num(self.goodput_tok_s)),
+            ("ttft_ms", self.ttft.to_json()),
+        ])
+    }
+}
+
+/// Aggregate report for one (system, arrival-rate) serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub system: String,
+    pub rate_per_s: f64,
+    pub offered: usize,
+    pub completed: usize,
+    pub preempted: usize,
+    pub rejected: usize,
+    pub makespan_ms: Ms,
+    /// All generated tokens (including preempted sessions' partial
+    /// output).
+    pub total_tokens: usize,
+    /// Tokens of requests that met their SLO.
+    pub goodput_tokens: usize,
+    pub throughput_req_s: f64,
+    pub throughput_tok_s: f64,
+    pub goodput_tok_s: f64,
+    /// SLO-met fraction over all offered requests.
+    pub slo_attainment: f64,
+    pub ttft: Percentiles,
+    pub tpot: Percentiles,
+    pub e2e: Percentiles,
+    pub queued: Percentiles,
+    /// Time-weighted mean of the queue-depth timeline.
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    pub mean_stall_ms: f64,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl ServeReport {
+    pub fn from_outcome(
+        system: &str,
+        rate_per_s: f64,
+        out: &ServeOutcome,
+        tenant_names: &[String],
+    ) -> Self {
+        let mut ttft = Histogram::default();
+        let mut tpot = Histogram::default();
+        let mut e2e = Histogram::default();
+        let mut queued = Histogram::default();
+        let (mut completed, mut preempted, mut rejected) = (0usize, 0usize, 0usize);
+        let (mut total_tokens, mut goodput_tokens, mut slo_met) = (0usize, 0usize, 0usize);
+        let mut stall_sum = 0.0;
+
+        let nt = tenant_names.len().max(1);
+        let mut t_ttft: Vec<Histogram> = vec![Histogram::default(); nt];
+        let mut t_offered = vec![0usize; nt];
+        let mut t_completed = vec![0usize; nt];
+        let mut t_met = vec![0usize; nt];
+        let mut t_good = vec![0usize; nt];
+
+        for rec in &out.records {
+            let t = rec.tenant.min(nt - 1);
+            t_offered[t] += 1;
+            match rec.outcome {
+                SessionOutcome::Completed => completed += 1,
+                SessionOutcome::Preempted => preempted += 1,
+                SessionOutcome::Rejected => {
+                    rejected += 1;
+                    continue;
+                }
+            }
+            if let Some(v) = rec.ttft_ms() {
+                ttft.push(v);
+                t_ttft[t].push(v);
+            }
+            if let Some(v) = rec.tpot_ms() {
+                tpot.push(v);
+            }
+            e2e.push(rec.e2e_ms());
+            queued.push(rec.queued_ms());
+            total_tokens += rec.tokens.len();
+            stall_sum += rec.stall_ms;
+            if rec.outcome == SessionOutcome::Completed {
+                t_completed[t] += 1;
+            }
+            if rec.slo_met() {
+                slo_met += 1;
+                goodput_tokens += rec.tokens.len();
+                t_met[t] += 1;
+                t_good[t] += rec.tokens.len();
+            }
+        }
+
+        let offered = out.records.len();
+        let span_s = out.makespan_ms / 1000.0;
+        let per_s = |x: f64| if span_s > 0.0 { x / span_s } else { 0.0 };
+        let served = completed + preempted;
+
+        let tenants = (0..nt)
+            .map(|t| TenantReport {
+                name: tenant_names.get(t).cloned().unwrap_or_else(|| format!("tenant{t}")),
+                offered: t_offered[t],
+                completed: t_completed[t],
+                slo_attainment: if t_offered[t] > 0 {
+                    t_met[t] as f64 / t_offered[t] as f64
+                } else {
+                    0.0
+                },
+                goodput_tok_s: per_s(t_good[t] as f64),
+                ttft: t_ttft[t].summary(),
+            })
+            .collect();
+
+        Self {
+            system: system.to_string(),
+            rate_per_s,
+            offered,
+            completed,
+            preempted,
+            rejected,
+            makespan_ms: out.makespan_ms,
+            total_tokens,
+            goodput_tokens,
+            throughput_req_s: per_s(completed as f64),
+            throughput_tok_s: per_s(total_tokens as f64),
+            goodput_tok_s: per_s(goodput_tokens as f64),
+            slo_attainment: if offered > 0 { slo_met as f64 / offered as f64 } else { 0.0 },
+            ttft: ttft.summary(),
+            tpot: tpot.summary(),
+            e2e: e2e.summary(),
+            queued: queued.summary(),
+            mean_queue_depth: mean_depth(&out.queue_depth, out.makespan_ms),
+            max_queue_depth: out.queue_depth.iter().map(|&(_, d)| d).max().unwrap_or(0),
+            mean_stall_ms: if served > 0 { stall_sum / served as f64 } else { 0.0 },
+            tenants,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rate_per_s", num(self.rate_per_s)),
+            ("offered", Json::Num(self.offered as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("preempted", Json::Num(self.preempted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("makespan_ms", num(self.makespan_ms)),
+            ("total_tokens", Json::Num(self.total_tokens as f64)),
+            ("goodput_tokens", Json::Num(self.goodput_tokens as f64)),
+            ("throughput_req_s", num(self.throughput_req_s)),
+            ("throughput_tok_s", num(self.throughput_tok_s)),
+            ("goodput_tok_s", num(self.goodput_tok_s)),
+            ("slo_attainment", num(self.slo_attainment)),
+            ("ttft_ms", self.ttft.to_json()),
+            ("tpot_ms", self.tpot.to_json()),
+            ("e2e_ms", self.e2e.to_json()),
+            ("queued_ms", self.queued.to_json()),
+            ("mean_queue_depth", num(self.mean_queue_depth)),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            ("mean_stall_ms", num(self.mean_stall_ms)),
+            ("tenants", Json::Arr(self.tenants.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+}
+
+/// Time-weighted mean of a step timeline over `[0, makespan]`.
+fn mean_depth(timeline: &[(Ms, usize)], makespan: Ms) -> f64 {
+    if makespan <= 0.0 || timeline.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for w in timeline.windows(2) {
+        acc += w[0].1 as f64 * (w[1].0 - w[0].0);
+    }
+    let (t_last, d_last) = *timeline.last().expect("checked non-empty");
+    acc += d_last as f64 * (makespan - t_last).max(0.0);
+    acc / makespan
+}
+
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// JSON number rounded to 1e-6 (keeps the report readable without
+/// sacrificing determinism).
+pub(crate) fn num(v: f64) -> Json {
+    Json::Num((v * 1e6).round() / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::{Scheduler, SchedulerConfig, SyntheticService};
+    use crate::serve::{Request, Slo};
+
+    #[test]
+    fn histogram_exact_percentiles() {
+        let mut h = Histogram::default();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            h.push(v);
+        }
+        assert_eq!(h.len(), 5);
+        assert_eq!(h.p(0.5), 3.0);
+        assert_eq!(h.p(0.95), 5.0);
+        assert_eq!(h.mean(), 3.0);
+        assert_eq!(Histogram::default().p(0.99), 0.0);
+    }
+
+    #[test]
+    fn mean_depth_is_time_weighted() {
+        // depth 2 over [0,10), 0 over [10,20) -> mean 1.
+        let tl = vec![(0.0, 2), (10.0, 0)];
+        assert!((mean_depth(&tl, 20.0) - 1.0).abs() < 1e-12);
+        assert_eq!(mean_depth(&[], 10.0), 0.0);
+    }
+
+    #[test]
+    fn report_counts_goodput_only_within_slo() {
+        // Two requests back to back on one replica; service 40 ms each.
+        // SLO TTFT 30 ms: the first (ttft 10) meets it, the queued second
+        // (ttft 50) does not.
+        let slo = Slo::new(30.0, 20.0);
+        let mut reqs: Vec<Request> = (0..2)
+            .map(|i| Request::open_loop(i, vec![1, 2], 4, 0.0))
+            .collect();
+        for r in &mut reqs {
+            r.slo = slo;
+        }
+        let mut svc = SyntheticService::new(10.0, 0.0, 10.0);
+        let out = Scheduler::run(&SchedulerConfig::default(), &mut svc, &reqs).unwrap();
+        let rep =
+            ServeReport::from_outcome("stub", 1.0, &out, &["default".to_string()]);
+        assert_eq!(rep.offered, 2);
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.goodput_tokens, 4, "only the unqueued request's tokens count");
+        assert_eq!(rep.total_tokens, 8);
+        assert!((rep.slo_attainment - 0.5).abs() < 1e-12);
+        // 8 tokens over 80 ms makespan = 100 tok/s; goodput half of that.
+        assert!((rep.throughput_tok_s - 100.0).abs() < 1e-9);
+        assert!((rep.goodput_tok_s - 50.0).abs() < 1e-9);
+    }
+}

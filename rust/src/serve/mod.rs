@@ -1,0 +1,112 @@
+//! Multi-tenant load-test subsystem: arrival traces, continuous
+//! scheduling, and SLO metrics.
+//!
+//! The paper evaluates one sequence at a time (§4.4); this layer turns the
+//! repo into a load-testable inference *service* while keeping every
+//! result deterministic by seed, because all of it runs in virtual time:
+//!
+//! * [`arrivals`] — seeded open-loop workload generators (Poisson, bursty
+//!   ON-OFF, replayed traces) and closed-loop clients with think time,
+//!   drawing per-request prompt/output lengths from
+//!   [`crate::workload::Corpus`].
+//! * [`scheduler`] — a continuous virtual-time event loop that multiplexes
+//!   in-flight sessions across a pool of engine replicas, with pluggable
+//!   policies (FCFS / SJF / SLO-aware EDF), admission control backed by a
+//!   per-replica KV + expert-weight memory ledger
+//!   ([`crate::cluster::Node`]'s byte accounting), and preemption of
+//!   over-budget sessions at token boundaries.
+//! * [`metrics`] — streaming latency histograms with exact nearest-rank
+//!   p50/p95/p99 TTFT and TPOT, goodput (tokens meeting SLO), and
+//!   queue-depth timelines, broken down per tenant.
+//! * [`harness`] — a rate-sweep driver that runs any [`Engine`]
+//!   (OD-MoE and every baseline) across arrival rates and emits
+//!   `BENCH_serve.json`.
+//!
+//! How virtual time composes with engine clocks: each engine measures one
+//! session's service (TTFT + decode) on its own virtual clock, reset per
+//! request; the scheduler maps that measured profile onto the global
+//! serving timeline at dispatch time. Replicas of the same engine are
+//! identical by construction (engines are deterministic after `reset`),
+//! so one measuring instance backs any number of replica slots — see
+//! [`scheduler::ServiceModel`].
+//!
+//! [`Engine`]: crate::coordinator::Engine
+
+pub mod arrivals;
+pub mod harness;
+pub mod metrics;
+pub mod scheduler;
+
+pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
+pub use harness::{config_from_args, parse_rates, rate_sweep, sweep_json, write_bench};
+pub use metrics::{Histogram, Percentiles, ServeReport, TenantReport};
+pub use scheduler::{
+    EngineService, MemoryModel, Policy, Scheduler, SchedulerConfig, ServeOutcome, ServiceModel,
+    SessionOutcome, SessionProfile, SessionRecord, SyntheticService,
+};
+
+use crate::cluster::Ms;
+
+/// Latency service-level objective for one request: TTFT from eligibility
+/// and mean time-per-output-token budgets. A request meets its SLO iff it
+/// completes with both within budget (the goodput criterion).
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub ttft_ms: Ms,
+    pub tpot_ms: Ms,
+}
+
+impl Slo {
+    pub fn new(ttft_ms: Ms, tpot_ms: Ms) -> Self {
+        Self { ttft_ms, tpot_ms }
+    }
+
+    /// No latency objective: met by any completed request. (The goodput
+    /// predicate itself is [`scheduler::SessionRecord::slo_met`].)
+    pub fn relaxed() -> Self {
+        Self { ttft_ms: f64::INFINITY, tpot_ms: f64::INFINITY }
+    }
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Self::relaxed()
+    }
+}
+
+/// One serving request as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// SLO class (index into the workload's tenant list).
+    pub tenant: usize,
+    /// Logical client session. Open-loop generators use a unique client
+    /// per request; closed-loop clients issue their requests one at a
+    /// time, each `think_ms` after the previous one completes.
+    pub client: u64,
+    pub prompt: Vec<u32>,
+    pub out_tokens: usize,
+    /// Earliest arrival in virtual ms (closed-loop requests may become
+    /// eligible later, gated by their client's previous completion).
+    pub arrival_ms: Ms,
+    /// Closed-loop think time before this request, after the client's
+    /// previous completion. Zero for open-loop requests.
+    pub think_ms: Ms,
+    pub slo: Slo,
+}
+
+impl Request {
+    /// An open-loop request with no SLO (its own client, no think time).
+    pub fn open_loop(id: u64, prompt: Vec<u32>, out_tokens: usize, arrival_ms: Ms) -> Self {
+        Self {
+            id,
+            tenant: 0,
+            client: id,
+            prompt,
+            out_tokens,
+            arrival_ms,
+            think_ms: 0.0,
+            slo: Slo::relaxed(),
+        }
+    }
+}

@@ -1,0 +1,798 @@
+//! Continuous virtual-time scheduler over a pool of engine replicas.
+//!
+//! A discrete-event loop replaces the old FCFS drain: requests become
+//! eligible (open-loop arrival or closed-loop release), pass admission
+//! control against a per-replica memory ledger, are ordered by a pluggable
+//! policy, and occupy a replica slot for their measured service time.
+//! Every quantity is virtual-time, so the same seed yields byte-identical
+//! results.
+//!
+//! Structure of one event step (all work at the current clock, then the
+//! clock advances to the next completion or arrival):
+//!
+//! 1. **Completions** — finished sessions release their ledger bytes and,
+//!    for closed-loop clients, release the client's next request after its
+//!    think time.
+//! 2. **Arrivals** — eligible requests enter the waiting queue; requests
+//!    whose footprint can never fit a replica are rejected outright.
+//! 3. **Admission** — waiting requests are admitted in policy order onto
+//!    the least-loaded replica with ledger room (ties prefer free bytes),
+//!    until the head of the queue no longer fits anywhere (head-of-line
+//!    blocking is deliberate: bypassing it would starve large sessions).
+//! 4. **Dispatch** — each idle replica starts its best admitted session;
+//!    service is measured by the [`ServiceModel`] and mapped onto the
+//!    global timeline; sessions over the preemption budget are truncated
+//!    at a token boundary.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{Request, Slo};
+use crate::cluster::{HardwareProfile, Ms, Node};
+use crate::coordinator::Engine;
+
+/// Queue-ordering policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First come, first served (by eligibility time).
+    Fcfs,
+    /// Shortest job first, by the token-count service estimate (prompt
+    /// length + 8x output tokens: decode dominates service time).
+    Sjf,
+    /// SLO-aware earliest deadline first: deadline = eligibility +
+    /// TTFT budget + TPOT budget x output tokens. Requests without an SLO
+    /// have an infinite deadline and fall back to FCFS order.
+    Edf,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fcfs" => Policy::Fcfs,
+            "sjf" => Policy::Sjf,
+            "edf" => Policy::Edf,
+            other => bail!("unknown policy {other:?} (fcfs|sjf|edf)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::Sjf => "sjf",
+            Policy::Edf => "edf",
+        }
+    }
+
+    /// Total order over waiting requests (smaller = served earlier).
+    /// Keys may be infinite (relaxed SLOs) but never NaN — the
+    /// `out_tokens == 0` guard avoids `inf * 0` — so sorting with
+    /// [`key_cmp`] is a genuine total order.
+    fn key(self, r: &Request, eligible_ms: Ms) -> (f64, f64, u64) {
+        let primary = match self {
+            Policy::Fcfs => eligible_ms,
+            Policy::Sjf => (r.prompt.len() + 8 * r.out_tokens) as f64,
+            Policy::Edf => {
+                let decode_budget = if r.out_tokens == 0 {
+                    0.0
+                } else {
+                    r.slo.tpot_ms * r.out_tokens as f64
+                };
+                eligible_ms + r.slo.ttft_ms + decode_budget
+            }
+        };
+        (primary, eligible_ms, r.id)
+    }
+}
+
+fn key_cmp(a: (f64, f64, u64), b: (f64, f64, u64)) -> Ordering {
+    a.0.partial_cmp(&b.0)
+        .unwrap_or(Ordering::Equal)
+        .then(a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
+        .then(a.2.cmp(&b.2))
+}
+
+/// Per-session footprint model for admission control, in paper-scale
+/// bytes (the same unit as [`Node`]'s ledger): a fixed share (resident
+/// expert weights + activation workspace) plus KV bytes per prompt/output
+/// token. The tiny-model equivalent is
+/// [`crate::engine::kv::session_kv_bytes`].
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Ledger capacity per replica.
+    pub budget_bytes: u64,
+    pub kv_bytes_per_token: u64,
+    pub session_fixed_bytes: u64,
+}
+
+impl MemoryModel {
+    /// No admission control: every session fits.
+    pub fn unlimited() -> Self {
+        Self { budget_bytes: u64::MAX, kv_bytes_per_token: 0, session_fixed_bytes: 0 }
+    }
+
+    /// Paper-scale footprint from a hardware profile: KV alignment bytes
+    /// per token, one resident expert + activation workspace per session.
+    pub fn from_profile(p: &HardwareProfile, budget_gb: f64) -> Self {
+        Self {
+            budget_bytes: (budget_gb * 1e9) as u64,
+            kv_bytes_per_token: p.kv_align_bytes as u64,
+            session_fixed_bytes: (p.expert_bytes + p.activation_bytes) as u64,
+        }
+    }
+
+    pub fn session_bytes(&self, r: &Request) -> u64 {
+        self.session_fixed_bytes
+            + self.kv_bytes_per_token * (r.prompt.len() + r.out_tokens) as u64
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: Policy,
+    /// Replica slots in the pool (each serves one session at a time).
+    pub n_replicas: usize,
+    pub memory: MemoryModel,
+    /// Preempt sessions whose measured service exceeds this virtual
+    /// budget: the session is truncated at a token boundary, freeing its
+    /// replica and ledger bytes early.
+    pub preempt_budget_ms: Option<Ms>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::Fcfs,
+            n_replicas: 1,
+            memory: MemoryModel::unlimited(),
+            preempt_budget_ms: None,
+        }
+    }
+}
+
+/// One session's measured service: what an idle, reset replica does with
+/// the request on its own virtual clock.
+#[derive(Debug, Clone)]
+pub struct SessionProfile {
+    pub ttft_ms: Ms,
+    pub decode_ms: Ms,
+    pub tokens: Vec<u32>,
+    pub stall_ms: Ms,
+}
+
+impl SessionProfile {
+    pub fn service_ms(&self) -> Ms {
+        self.ttft_ms + self.decode_ms
+    }
+
+    /// Mean decode time per output token after the first (0 when absent).
+    pub fn tpot_ms(&self) -> Ms {
+        let n = self.tokens.len().saturating_sub(1);
+        if n == 0 {
+            0.0
+        } else {
+            self.decode_ms / n as f64
+        }
+    }
+}
+
+/// Where session service times come from.
+///
+/// Engines are deterministic once `reset`: serving a prompt on replica 3
+/// at virtual time T takes exactly as long as serving it on a fresh
+/// engine at time 0. The scheduler therefore books *slots* and asks one
+/// measuring instance for profiles, instead of cloning heavyweight
+/// engines per replica.
+pub trait ServiceModel {
+    /// Measure serving `req` on an idle, reset replica.
+    fn measure(&mut self, req: &Request) -> Result<SessionProfile>;
+}
+
+/// [`ServiceModel`] backed by a real [`Engine`], memoizing profiles per
+/// (prompt, output-length) so rate sweeps re-measure each distinct
+/// request once.
+pub struct EngineService<'e> {
+    engine: &'e mut dyn Engine,
+    memo: BTreeMap<(Vec<u32>, usize), SessionProfile>,
+}
+
+impl<'e> EngineService<'e> {
+    pub fn new(engine: &'e mut dyn Engine) -> Self {
+        Self { engine, memo: BTreeMap::new() }
+    }
+
+    pub fn engine_name(&self) -> String {
+        self.engine.name()
+    }
+}
+
+impl ServiceModel for EngineService<'_> {
+    fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
+        let key = (req.prompt.clone(), req.out_tokens);
+        if let Some(p) = self.memo.get(&key) {
+            return Ok(p.clone());
+        }
+        self.engine.reset()?;
+        let res = self.engine.run_prompt(&req.prompt, req.out_tokens, false)?;
+        let p = SessionProfile {
+            ttft_ms: res.ttft_ms,
+            decode_ms: res.decode_ms,
+            tokens: res.tokens,
+            stall_ms: res.stall_ms,
+        };
+        self.memo.insert(key, p.clone());
+        Ok(p)
+    }
+}
+
+/// Closed-form service model for tests and scheduler studies that do not
+/// need the PJRT runtime: TTFT affine in prompt length, constant TPOT.
+#[derive(Debug, Clone)]
+pub struct SyntheticService {
+    pub ttft_base_ms: Ms,
+    pub ttft_per_prompt_token_ms: Ms,
+    pub tpot_ms: Ms,
+}
+
+impl SyntheticService {
+    pub fn new(ttft_base_ms: Ms, ttft_per_prompt_token_ms: Ms, tpot_ms: Ms) -> Self {
+        Self { ttft_base_ms, ttft_per_prompt_token_ms, tpot_ms }
+    }
+}
+
+impl ServiceModel for SyntheticService {
+    fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
+        let n = req.out_tokens.max(1);
+        Ok(SessionProfile {
+            ttft_ms: self.ttft_base_ms + self.ttft_per_prompt_token_ms * req.prompt.len() as f64,
+            decode_ms: self.tpot_ms * (n - 1) as f64,
+            tokens: vec![req.prompt.first().copied().unwrap_or(0); n],
+            stall_ms: 0.0,
+        })
+    }
+}
+
+/// How a session ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionOutcome {
+    Completed,
+    /// Truncated at a token boundary by the preemption budget.
+    Preempted,
+    /// Refused at admission: footprint exceeds any replica's ledger.
+    Rejected,
+}
+
+/// Per-session serving record. Latencies reference `eligible_ms` (equal
+/// to `arrival_ms` for open-loop requests) — the instant the client was
+/// actually waiting from.
+#[derive(Debug, Clone)]
+pub struct SessionRecord {
+    pub id: u64,
+    pub tenant: usize,
+    /// Replica slot that served the session (`usize::MAX` if rejected).
+    pub replica: usize,
+    pub arrival_ms: Ms,
+    pub eligible_ms: Ms,
+    pub start_ms: Ms,
+    /// Absolute first-token time (None if preempted during prefill or
+    /// rejected).
+    pub first_token_ms: Option<Ms>,
+    pub finish_ms: Ms,
+    pub tokens: Vec<u32>,
+    pub requested_tokens: usize,
+    pub stall_ms: Ms,
+    pub slo: Slo,
+    pub outcome: SessionOutcome,
+}
+
+impl SessionRecord {
+    pub fn queued_ms(&self) -> Ms {
+        self.start_ms - self.eligible_ms
+    }
+
+    /// Time to first token, from eligibility.
+    pub fn ttft_ms(&self) -> Option<Ms> {
+        self.first_token_ms.map(|t| t - self.eligible_ms)
+    }
+
+    pub fn e2e_ms(&self) -> Ms {
+        self.finish_ms - self.eligible_ms
+    }
+
+    pub fn service_ms(&self) -> Ms {
+        self.finish_ms - self.start_ms
+    }
+
+    /// Mean decode time per generated token after the first.
+    pub fn tpot_ms(&self) -> Option<Ms> {
+        let n = self.tokens.len().saturating_sub(1);
+        match self.first_token_ms {
+            Some(t) if n > 0 => Some((self.finish_ms - t) / n as f64),
+            _ => None,
+        }
+    }
+
+    /// The goodput criterion: completed with TTFT and TPOT within SLO
+    /// (a one-token session has no TPOT and passes that half).
+    pub fn slo_met(&self) -> bool {
+        self.outcome == SessionOutcome::Completed
+            && self.ttft_ms().is_some_and(|t| t <= self.slo.ttft_ms)
+            && match self.tpot_ms() {
+                Some(t) => t <= self.slo.tpot_ms,
+                None => true,
+            }
+    }
+}
+
+/// Everything one scheduler run produced.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Records in completion order (finish time, then id).
+    pub records: Vec<SessionRecord>,
+    pub makespan_ms: Ms,
+    /// (time, eligible-but-not-running count) step timeline.
+    pub queue_depth: Vec<(Ms, usize)>,
+    pub replica_busy_ms: Vec<Ms>,
+    /// Per-replica (start, end, request id) service intervals, for
+    /// invariant checks.
+    pub bookings: Vec<Vec<(Ms, Ms, u64)>>,
+}
+
+/// Truncate a session at a token boundary when its measured service
+/// exceeds the preemption budget. Returns (tokens kept, charged service
+/// ms, preempted?).
+fn truncate(p: &SessionProfile, budget: Option<Ms>) -> (usize, Ms, bool) {
+    let full = p.service_ms();
+    let total = p.tokens.len();
+    let Some(b) = budget else { return (total, full, false) };
+    if full <= b {
+        return (total, full, false);
+    }
+    if p.ttft_ms > b || total == 0 {
+        return (0, b.min(full), true);
+    }
+    let tpot = p.tpot_ms();
+    let extra = if tpot <= 0.0 {
+        total - 1
+    } else {
+        (((b - p.ttft_ms) / tpot).floor() as usize).min(total - 1)
+    };
+    (1 + extra, p.ttft_ms + extra as f64 * tpot, true)
+}
+
+/// `future` is kept sorted descending by (time, id) so `pop()` yields the
+/// earliest event.
+fn insert_future(v: &mut Vec<(Ms, u64, usize)>, e: (Ms, u64, usize)) {
+    let at = v.partition_point(|x| x.0 > e.0 || (x.0 == e.0 && x.1 > e.1));
+    v.insert(at, e);
+}
+
+struct Replica {
+    node: Node,
+    /// Admitted (ledger bytes allocated) but not yet running.
+    admitted: Vec<usize>,
+    /// (request index, finish time).
+    running: Option<(usize, Ms)>,
+    busy_ms: Ms,
+    bookings: Vec<(Ms, Ms, u64)>,
+}
+
+/// The continuous scheduler. Stateless: one [`Scheduler::run`] call
+/// simulates one complete serving run.
+pub struct Scheduler;
+
+impl Scheduler {
+    pub fn run(
+        cfg: &SchedulerConfig,
+        service: &mut dyn ServiceModel,
+        requests: &[Request],
+    ) -> Result<ServeOutcome> {
+        assert!(cfg.n_replicas > 0, "need at least one replica");
+        let n = requests.len();
+
+        // Closed-loop chains: per client, requests become eligible in id
+        // order, each gated behind its predecessor's completion plus think
+        // time. Open-loop generators use a unique client per request, so
+        // every chain has length one and gating is a no-op.
+        let mut chains: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut by_id: Vec<usize> = (0..n).collect();
+        by_id.sort_by_key(|&i| requests[i].id);
+        for &i in &by_id {
+            chains.entry(requests[i].client).or_default().push(i);
+        }
+        // Next position to release per chain, and the pending-event list.
+        let mut chain_pos: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut future: Vec<(Ms, u64, usize)> = Vec::with_capacity(n);
+        for (client, chain) in &chains {
+            let idx = chain[0];
+            insert_future(&mut future, (requests[idx].arrival_ms, requests[idx].id, idx));
+            chain_pos.insert(*client, 1);
+        }
+
+        let mut reps: Vec<Replica> = (0..cfg.n_replicas)
+            .map(|i| Replica {
+                node: Node::new(i),
+                admitted: Vec::new(),
+                running: None,
+                busy_ms: 0.0,
+                bookings: Vec::new(),
+            })
+            .collect();
+
+        let mut waiting: Vec<usize> = Vec::new();
+        let mut eligible_at: Vec<Ms> = vec![0.0; n];
+        let mut records: Vec<Option<SessionRecord>> = vec![None; n];
+        let mut queue_depth: Vec<(Ms, usize)> = Vec::new();
+        let mut clock: Ms = 0.0;
+        let mut makespan: Ms = 0.0;
+        let mut done = 0usize;
+
+        // Release the next request of `client`'s chain after a completion
+        // (or rejection) at time `at`.
+        let release_next = |future: &mut Vec<(Ms, u64, usize)>,
+                            chain_pos: &mut BTreeMap<u64, usize>,
+                            client: u64,
+                            at: Ms| {
+            let chain = &chains[&client];
+            let pos = chain_pos.get_mut(&client).expect("chain position");
+            if *pos < chain.len() {
+                let idx = chain[*pos];
+                *pos += 1;
+                let req = &requests[idx];
+                let t = req.arrival_ms.max(at + req.think_ms);
+                insert_future(future, (t, req.id, idx));
+            }
+        };
+
+        loop {
+            // -- 1. completions due at `clock` ---------------------------
+            for r in reps.iter_mut() {
+                let Some((idx, end)) = r.running else { continue };
+                if end > clock {
+                    continue;
+                }
+                r.running = None;
+                let req = &requests[idx];
+                let bytes = cfg.memory.session_bytes(req);
+                let freed = r.node.dealloc(bytes);
+                debug_assert_eq!(freed, bytes, "memory ledger drift on request {}", req.id);
+                done += 1;
+                release_next(&mut future, &mut chain_pos, req.client, end);
+            }
+
+            // -- 2. arrivals due at `clock` ------------------------------
+            while let Some(&(t, _, _)) = future.last() {
+                if t > clock {
+                    break;
+                }
+                let (t, _, idx) = future.pop().expect("checked non-empty");
+                eligible_at[idx] = t;
+                let req = &requests[idx];
+                if cfg.memory.session_bytes(req) > cfg.memory.budget_bytes {
+                    records[idx] = Some(SessionRecord {
+                        id: req.id,
+                        tenant: req.tenant,
+                        replica: usize::MAX,
+                        arrival_ms: req.arrival_ms,
+                        eligible_ms: t,
+                        start_ms: t,
+                        first_token_ms: None,
+                        finish_ms: t,
+                        tokens: Vec::new(),
+                        requested_tokens: req.out_tokens,
+                        stall_ms: 0.0,
+                        slo: req.slo,
+                        outcome: SessionOutcome::Rejected,
+                    });
+                    done += 1;
+                    release_next(&mut future, &mut chain_pos, req.client, t);
+                } else {
+                    waiting.push(idx);
+                }
+            }
+
+            // -- 3. admission: waiting -> replica ledgers ----------------
+            waiting.sort_by(|&a, &b| {
+                key_cmp(
+                    cfg.policy.key(&requests[a], eligible_at[a]),
+                    cfg.policy.key(&requests[b], eligible_at[b]),
+                )
+            });
+            while let Some(&idx) = waiting.first() {
+                let bytes = cfg.memory.session_bytes(&requests[idx]);
+                // Least-loaded replica with ledger room; ties prefer the
+                // most free bytes, then the lowest index. (Load first:
+                // with equal free bytes — e.g. no memory limits — the
+                // session must still land on an idle replica for the
+                // pool to run in parallel.)
+                let mut best: Option<(usize, usize, u64)> = None;
+                for (ri, r) in reps.iter().enumerate() {
+                    let free = cfg.memory.budget_bytes.saturating_sub(r.node.gpu_bytes_used);
+                    if free < bytes {
+                        continue;
+                    }
+                    let load = r.admitted.len() + usize::from(r.running.is_some());
+                    let better = match best {
+                        None => true,
+                        Some((_, bl, bf)) => load < bl || (load == bl && free > bf),
+                    };
+                    if better {
+                        best = Some((ri, load, free));
+                    }
+                }
+                let Some((ri, _, _)) = best else { break };
+                reps[ri].node.alloc(bytes);
+                reps[ri].admitted.push(idx);
+                waiting.remove(0);
+            }
+
+            // -- 4. dispatch: each idle replica starts the globally best
+            // admitted session (work conserving: an idle replica steals
+            // admitted-but-queued sessions from its siblings' queues when
+            // they fit its own ledger, moving the reservation with them —
+            // admission-time binding must not leave a replica idle while
+            // work waits elsewhere).
+            for ri in 0..reps.len() {
+                if reps[ri].running.is_some() {
+                    continue;
+                }
+                let free_ri = cfg.memory.budget_bytes.saturating_sub(reps[ri].node.gpu_bytes_used);
+                let mut choice: Option<(usize, usize)> = None;
+                let mut choice_key = (0.0, 0.0, 0u64);
+                for qi in 0..reps.len() {
+                    for j in 0..reps[qi].admitted.len() {
+                        let idx = reps[qi].admitted[j];
+                        if qi != ri && cfg.memory.session_bytes(&requests[idx]) > free_ri {
+                            continue;
+                        }
+                        let k = cfg.policy.key(&requests[idx], eligible_at[idx]);
+                        if choice.is_none() || key_cmp(k, choice_key) == Ordering::Less {
+                            choice = Some((qi, j));
+                            choice_key = k;
+                        }
+                    }
+                }
+                let Some((qi, j)) = choice else { continue };
+                let idx = reps[qi].admitted.remove(j);
+                if qi != ri {
+                    let bytes = cfg.memory.session_bytes(&requests[idx]);
+                    let freed = reps[qi].node.dealloc(bytes);
+                    debug_assert_eq!(freed, bytes, "steal ledger drift on request {idx}");
+                    reps[ri].node.alloc(bytes);
+                }
+                let r = &mut reps[ri];
+                let req = &requests[idx];
+                let profile = service.measure(req)?;
+                let (kept, svc, preempted) = truncate(&profile, cfg.preempt_budget_ms);
+                let start = clock;
+                let finish = start + svc;
+                records[idx] = Some(SessionRecord {
+                    id: req.id,
+                    tenant: req.tenant,
+                    replica: ri,
+                    arrival_ms: req.arrival_ms,
+                    eligible_ms: eligible_at[idx],
+                    start_ms: start,
+                    first_token_ms: (kept > 0).then_some(start + profile.ttft_ms),
+                    finish_ms: finish,
+                    tokens: profile.tokens[..kept].to_vec(),
+                    requested_tokens: req.out_tokens,
+                    stall_ms: profile.stall_ms,
+                    slo: req.slo,
+                    outcome: if preempted {
+                        SessionOutcome::Preempted
+                    } else {
+                        SessionOutcome::Completed
+                    },
+                });
+                r.running = Some((idx, finish));
+                r.busy_ms += svc;
+                r.bookings.push((start, finish, req.id));
+                makespan = makespan.max(finish);
+            }
+
+            // -- 5. queue-depth sample -----------------------------------
+            let depth = waiting.len() + reps.iter().map(|r| r.admitted.len()).sum::<usize>();
+            if queue_depth.last().map(|&(_, d)| d) != Some(depth) {
+                queue_depth.push((clock, depth));
+            }
+
+            if done >= n {
+                break;
+            }
+
+            // -- 6. advance virtual time to the next event ---------------
+            let mut next = f64::INFINITY;
+            if let Some(&(t, _, _)) = future.last() {
+                next = next.min(t);
+            }
+            for r in &reps {
+                if let Some((_, end)) = r.running {
+                    next = next.min(end);
+                }
+            }
+            if !next.is_finite() {
+                // Unreachable: never-fitting requests are rejected at
+                // arrival and everything else eventually drains.
+                bail!("scheduler stalled with {} request(s) stuck waiting", waiting.len());
+            }
+            clock = next;
+        }
+
+        let mut out: Vec<SessionRecord> = records
+            .into_iter()
+            .map(|r| r.expect("every request resolves to a record"))
+            .collect();
+        out.sort_by(|a, b| {
+            a.finish_ms
+                .partial_cmp(&b.finish_ms)
+                .unwrap_or(Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        Ok(ServeOutcome {
+            records: out,
+            makespan_ms: makespan,
+            queue_depth,
+            replica_busy_ms: reps.iter().map(|r| r.busy_ms).collect(),
+            bookings: reps.into_iter().map(|r| r.bookings).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: Ms, out: usize) -> Request {
+        Request::open_loop(id, vec![1, 2, 3, 4], out, arrival)
+    }
+
+    fn svc() -> SyntheticService {
+        // service = 10 + 0*prompt + 10*(out-1)
+        SyntheticService::new(10.0, 0.0, 10.0)
+    }
+
+    #[test]
+    fn fcfs_single_replica_serializes() {
+        let cfg = SchedulerConfig::default();
+        let reqs = vec![req(0, 0.0, 4), req(1, 0.0, 4), req(2, 500.0, 4)];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        // service = 40 ms each
+        assert_eq!(out.records[0].id, 0);
+        assert_eq!(out.records[0].queued_ms(), 0.0);
+        assert_eq!(out.records[1].queued_ms(), 40.0);
+        assert_eq!(out.records[2].queued_ms(), 0.0, "late arrival finds an idle replica");
+        assert_eq!(out.makespan_ms, 540.0);
+    }
+
+    #[test]
+    fn two_replicas_run_in_parallel() {
+        let cfg = SchedulerConfig { n_replicas: 2, ..Default::default() };
+        let reqs = vec![req(0, 0.0, 4), req(1, 0.0, 4)];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        assert_eq!(out.records[0].queued_ms(), 0.0);
+        assert_eq!(out.records[1].queued_ms(), 0.0);
+        assert_eq!(out.makespan_ms, 40.0);
+    }
+
+    #[test]
+    fn dispatch_is_work_conserving_across_replicas() {
+        // A (long) and B (short) arrive together and bind to different
+        // replicas; C binds behind A. When B's replica idles it must
+        // steal C rather than leave it queued behind A.
+        let cfg = SchedulerConfig { n_replicas: 2, ..Default::default() };
+        let reqs = vec![req(0, 0.0, 19), req(1, 0.0, 1), req(2, 0.0, 1)];
+        // services: A = 10 + 18*10 = 190, B = C = 10.
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        let c = out.records.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(c.start_ms, 10.0, "C starts when the short replica idles");
+        assert_eq!(out.makespan_ms, 190.0);
+    }
+
+    #[test]
+    fn edf_key_handles_zero_output_tokens() {
+        // inf * 0 must not produce a NaN sort key.
+        let cfg = SchedulerConfig { policy: Policy::Edf, ..Default::default() };
+        let reqs = vec![req(0, 0.0, 0), req(1, 0.0, 4), req(2, 0.0, 0)];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        assert_eq!(out.records.len(), 3);
+        assert!(out.records.iter().all(|r| r.outcome == SessionOutcome::Completed));
+    }
+
+    #[test]
+    fn sjf_prefers_short_jobs() {
+        let cfg = SchedulerConfig { policy: Policy::Sjf, ..Default::default() };
+        // Long job arrives first but both are waiting when the replica
+        // frees: a seed job occupies [0, 40).
+        let reqs = vec![req(0, 0.0, 4), req(1, 1.0, 32), req(2, 2.0, 2)];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        let order: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 2, 1], "short job 2 overtakes long job 1");
+    }
+
+    #[test]
+    fn edf_prefers_urgent_jobs() {
+        let cfg = SchedulerConfig { policy: Policy::Edf, ..Default::default() };
+        let mut tight = req(1, 1.0, 4);
+        tight.slo = Slo::new(50.0, 10.0);
+        let reqs = vec![req(0, 0.0, 4), req(2, 2.0, 4), tight];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        let order: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2], "tight-SLO job served before relaxed job 2");
+    }
+
+    #[test]
+    fn preemption_truncates_at_token_boundary() {
+        let cfg = SchedulerConfig { preempt_budget_ms: Some(35.0), ..Default::default() };
+        let reqs = vec![req(0, 0.0, 10)]; // full service 10 + 90 = 100 ms
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        let r = &out.records[0];
+        assert_eq!(r.outcome, SessionOutcome::Preempted);
+        // ttft 10, then 2 full tokens of 10 ms fit in the 35 ms budget.
+        assert_eq!(r.tokens.len(), 3);
+        assert_eq!(r.finish_ms, 30.0);
+    }
+
+    #[test]
+    fn oversize_requests_are_rejected() {
+        let cfg = SchedulerConfig {
+            memory: MemoryModel {
+                budget_bytes: 100,
+                kv_bytes_per_token: 10,
+                session_fixed_bytes: 0,
+            },
+            ..Default::default()
+        };
+        // 4 prompt + 12 out = 16 tokens -> 160 bytes > 100.
+        let reqs = vec![req(0, 0.0, 12), req(1, 0.0, 2)];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        let rej = out.records.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(rej.outcome, SessionOutcome::Rejected);
+        assert!(rej.tokens.is_empty());
+        let ok = out.records.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(ok.outcome, SessionOutcome::Completed);
+    }
+
+    #[test]
+    fn admission_ledger_limits_in_flight_footprint() {
+        // Each session is 60 bytes; budget 100 -> at most one admitted at
+        // a time per replica, so the second waits in the global queue.
+        let cfg = SchedulerConfig {
+            memory: MemoryModel {
+                budget_bytes: 100,
+                kv_bytes_per_token: 10,
+                session_fixed_bytes: 0,
+            },
+            ..Default::default()
+        };
+        let reqs = vec![req(0, 0.0, 2), req(1, 0.0, 2)]; // 6 tokens = 60 B each
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        assert!(out.records.iter().all(|r| r.outcome == SessionOutcome::Completed));
+        // Serial anyway on one replica; the point is no ledger overflow.
+        assert_eq!(out.records[1].queued_ms(), 20.0);
+    }
+
+    #[test]
+    fn closed_loop_gates_on_think_time() {
+        // One client, two requests, think 100 ms: the second becomes
+        // eligible 100 ms after the first completes (service 40 ms).
+        let mut a = req(0, 0.0, 4);
+        let mut b = req(1, 0.0, 4);
+        a.client = 7;
+        b.client = 7;
+        b.think_ms = 100.0;
+        let out = Scheduler::run(&SchedulerConfig::default(), &mut svc(), &[a, b]).unwrap();
+        assert_eq!(out.records[1].eligible_ms, 140.0);
+        assert_eq!(out.records[1].start_ms, 140.0);
+        assert_eq!(out.records[1].queued_ms(), 0.0);
+    }
+
+    #[test]
+    fn empty_request_list_is_fine() {
+        let out = Scheduler::run(&SchedulerConfig::default(), &mut svc(), &[]).unwrap();
+        assert!(out.records.is_empty());
+        assert_eq!(out.makespan_ms, 0.0);
+    }
+}

@@ -65,7 +65,7 @@ pub fn run<F: FnMut()>(name: &str, samples: usize, iters_per_sample: usize, mut 
     }
     per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
-    let p = |q: f64| per_iter[((per_iter.len() - 1) as f64 * q) as usize];
+    let p = |q: f64| crate::metrics::percentile_sorted(&per_iter, q);
     Summary {
         name: name.to_string(),
         mean_ns: mean,

@@ -83,13 +83,6 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -141,6 +134,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`to_string()` comes with it).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -14,27 +14,43 @@ pub struct Corpus {
     pub prompts: Vec<Vec<u32>>,
 }
 
+/// The Markov-ish token walk both generators share.
+fn walk(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    let mut toks = Vec::with_capacity(len);
+    let mut cur = rng.below(vocab as usize) as u32;
+    for _ in 0..len {
+        toks.push(cur);
+        // Correlated walk: small step with p=0.7, jump otherwise.
+        cur = if rng.uniform() < 0.7 {
+            let step = rng.below(7) as i64 - 3;
+            (cur as i64 + step).rem_euclid(vocab as i64) as u32
+        } else {
+            rng.below(vocab as usize) as u32
+        };
+    }
+    toks
+}
+
 impl Corpus {
     /// `n` prompts of `len` tokens over `vocab`.
     pub fn generate(seed: u64, n: usize, len: usize, vocab: u32) -> Self {
-        let mut prompts = Vec::with_capacity(n);
+        Self::generate_mixed(seed, &vec![len; n], vocab)
+    }
+
+    /// One prompt per entry of `lens` (the serving workload generator
+    /// draws per-request lengths). RNG streams are forked per prompt, so
+    /// prompt `i` is identical to [`Corpus::generate`]'s prompt `i`
+    /// whenever the lengths agree.
+    pub fn generate_mixed(seed: u64, lens: &[usize], vocab: u32) -> Self {
         let base = Rng::new(seed ^ 0xC0FFEE);
-        for i in 0..n {
-            let mut rng = base.fork(i as u64 + 1);
-            let mut toks = Vec::with_capacity(len);
-            let mut cur = rng.below(vocab as usize) as u32;
-            for _ in 0..len {
-                toks.push(cur);
-                // Correlated walk: small step with p=0.7, jump otherwise.
-                cur = if rng.uniform() < 0.7 {
-                    let step = rng.below(7) as i64 - 3;
-                    (cur as i64 + step).rem_euclid(vocab as i64) as u32
-                } else {
-                    rng.below(vocab as usize) as u32
-                };
-            }
-            prompts.push(toks);
-        }
+        let prompts = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| {
+                let mut rng = base.fork(i as u64 + 1);
+                walk(&mut rng, len, vocab)
+            })
+            .collect();
         Self { prompts }
     }
 
@@ -85,6 +101,24 @@ mod tests {
             d <= 3 || d >= 253
         }).count();
         assert!(small * 2 > p.len(), "walk should be mostly local: {small}");
+    }
+
+    #[test]
+    fn mixed_matches_fixed_when_lengths_agree() {
+        let fixed = Corpus::generate(9, 3, 16, 256);
+        let mixed = Corpus::generate_mixed(9, &[16, 16, 16], 256);
+        assert_eq!(fixed.prompts, mixed.prompts);
+    }
+
+    #[test]
+    fn mixed_lengths_are_respected() {
+        let c = Corpus::generate_mixed(9, &[16, 128, 16], 256);
+        let lens: Vec<usize> = c.prompts.iter().map(|p| p.len()).collect();
+        assert_eq!(lens, vec![16, 128, 16]);
+        // Prefixes agree with the fixed-length generator (same fork per
+        // index, same walk).
+        let fixed = Corpus::generate(9, 3, 16, 256);
+        assert_eq!(&c.prompts[1][..16], fixed.prompts[1].as_slice());
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Property tests over the serving layer's scheduler invariants, using
+//! the in-tree prop driver and the runtime-free synthetic service model
+//! (no PJRT artifacts required).
+
+use odmoe::model::rng::Rng;
+use odmoe::serve::{
+    rate_sweep, sweep_json, ArrivalModel, MemoryModel, Policy, Request, Scheduler,
+    SchedulerConfig, ServiceModel, SessionOutcome, Slo, SyntheticService, TenantSpec,
+    WorkloadSpec,
+};
+use odmoe::util::prop::check;
+
+const CASES: usize = 48;
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    [Policy::Fcfs, Policy::Sjf, Policy::Edf][rng.below(3)]
+}
+
+fn random_workload(rng: &mut Rng, n: usize) -> Vec<Request> {
+    let rate = 0.5 + rng.uniform() * 8.0;
+    let mut spec = WorkloadSpec::poisson(rate, n, 256);
+    if rng.uniform() < 0.3 {
+        spec.tenants = vec![TenantSpec::interactive(), TenantSpec::batch()];
+    }
+    if rng.uniform() < 0.3 {
+        spec.model = ArrivalModel::ClosedLoop {
+            clients: 1 + rng.below(4),
+            mean_think_ms: 50.0 + rng.uniform() * 500.0,
+        };
+    }
+    spec.generate(rng.next_u64())
+}
+
+fn random_service(rng: &mut Rng) -> SyntheticService {
+    SyntheticService::new(
+        5.0 + rng.uniform() * 50.0,
+        rng.uniform() * 2.0,
+        5.0 + rng.uniform() * 100.0,
+    )
+}
+
+#[test]
+fn prop_no_replica_runs_two_sessions_at_once() {
+    check("replica bookings disjoint", CASES, 101, |rng| {
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(4),
+            memory: MemoryModel::unlimited(),
+            preempt_budget_ms: if rng.uniform() < 0.3 { Some(200.0) } else { None },
+        };
+        let reqs = random_workload(rng, 4 + rng.below(28));
+        let mut svc = random_service(rng);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        for (ri, bookings) in out.bookings.iter().enumerate() {
+            for w in bookings.windows(2) {
+                let ((_, end_a, id_a), (start_b, _, id_b)) = (w[0], w[1]);
+                if start_b < end_a {
+                    return Err(format!(
+                        "replica {ri}: request {id_b} started at {start_b} before \
+                         request {id_a} finished at {end_a}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_completions_conserve_requested_tokens() {
+    check("token conservation without preemption", CASES, 102, |rng| {
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(3),
+            ..Default::default()
+        };
+        let reqs = random_workload(rng, 4 + rng.below(20));
+        let requested: usize = reqs.iter().map(|r| r.out_tokens).sum();
+        let mut svc = random_service(rng);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        if out.records.len() != reqs.len() {
+            return Err(format!("{} records for {} requests", out.records.len(), reqs.len()));
+        }
+        let mut produced = 0usize;
+        for r in &out.records {
+            if r.outcome != SessionOutcome::Completed {
+                return Err(format!("request {} not completed: {:?}", r.id, r.outcome));
+            }
+            if r.tokens.len() != r.requested_tokens {
+                return Err(format!(
+                    "request {} produced {}/{} tokens",
+                    r.id,
+                    r.tokens.len(),
+                    r.requested_tokens
+                ));
+            }
+            produced += r.tokens.len();
+        }
+        if produced != requested {
+            return Err(format!("produced {produced} of {requested} requested tokens"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_queueing_when_capacity_exceeds_load() {
+    check("no queueing under capacity", CASES, 103, |rng| {
+        // Fixed service: ttft 10 + 5 ms per output token beyond the first.
+        let out_tokens = 1 + rng.below(8);
+        let service_ms = 10.0 + 5.0 * (out_tokens as f64 - 1.0);
+        // Arrival gaps strictly larger than the service time.
+        let gap = service_ms + 1.0 + rng.uniform() * 100.0;
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| Request::open_loop(i, vec![1, 2, 3], out_tokens, i as f64 * gap))
+            .collect();
+        let cfg = SchedulerConfig { policy: random_policy(rng), ..Default::default() };
+        let mut svc = SyntheticService::new(10.0, 0.0, 5.0);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        for r in &out.records {
+            if r.queued_ms() != 0.0 {
+                return Err(format!("request {} queued {} ms", r.id, r.queued_ms()));
+            }
+            if r.ttft_ms() != Some(10.0) {
+                return Err(format!("request {} ttft {:?}", r.id, r.ttft_ms()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_ledger_balances_to_zero() {
+    check("ledger drains fully", CASES, 104, |rng| {
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(3),
+            memory: MemoryModel {
+                budget_bytes: 2_000,
+                kv_bytes_per_token: 10,
+                session_fixed_bytes: 100,
+            },
+            preempt_budget_ms: None,
+        };
+        // Mixed sizes: some requests exceed the 2 000-byte budget and must
+        // be rejected; the rest must drain the ledger back to zero (the
+        // scheduler debug-asserts dealloc() frees exactly what was
+        // allocated, so a run that finishes proves balance).
+        let reqs: Vec<Request> = (0..16)
+            .map(|i| {
+                let long = rng.uniform() < 0.25;
+                let prompt_len = if long { 200 } else { 16 };
+                Request::open_loop(i, vec![1; prompt_len], 8, i as f64 * 20.0)
+            })
+            .collect();
+        let mut svc = random_service(rng);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        for r in &out.records {
+            let bytes = cfg
+                .memory
+                .session_bytes(reqs.iter().find(|q| q.id == r.id).expect("request exists"));
+            let should_reject = bytes > cfg.memory.budget_bytes;
+            let rejected = r.outcome == SessionOutcome::Rejected;
+            if should_reject != rejected {
+                return Err(format!(
+                    "request {} ({bytes} B, budget {}): rejected={rejected}",
+                    r.id, cfg.memory.budget_bytes
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_closed_loop_bounds_concurrency() {
+    check("closed loop <= clients in flight", CASES, 105, |rng| {
+        let clients = 1 + rng.below(3);
+        let spec = WorkloadSpec {
+            model: ArrivalModel::ClosedLoop { clients, mean_think_ms: 20.0 },
+            ..WorkloadSpec::poisson(1.0, 12, 256)
+        };
+        let reqs = spec.generate(rng.next_u64());
+        let cfg = SchedulerConfig { n_replicas: 4, ..Default::default() };
+        let mut svc = random_service(rng);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        // Count maximum overlap of service intervals across replicas.
+        let mut edges: Vec<(f64, i32)> = Vec::new();
+        for bookings in &out.bookings {
+            for &(s, e, _) in bookings {
+                edges.push((s, 1));
+                edges.push((e, -1));
+            }
+        }
+        edges.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let (mut cur, mut peak) = (0i32, 0i32);
+        for (_, d) in edges {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        if peak > clients as i32 {
+            return Err(format!("{peak} sessions in flight with only {clients} clients"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preemption_respects_budget() {
+    check("preempted sessions fit the budget", CASES, 106, |rng| {
+        let budget = 30.0 + rng.uniform() * 100.0;
+        let cfg = SchedulerConfig { preempt_budget_ms: Some(budget), ..Default::default() };
+        let reqs = random_workload(rng, 4 + rng.below(12));
+        let mut svc = random_service(rng);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        for r in &out.records {
+            if r.service_ms() > budget + 1e-9 {
+                return Err(format!(
+                    "request {} held its replica {} ms, budget {budget}",
+                    r.id,
+                    r.service_ms()
+                ));
+            }
+            if r.outcome == SessionOutcome::Preempted && r.tokens.len() >= r.requested_tokens {
+                return Err(format!("request {} preempted but complete", r.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_seed_yields_byte_identical_bench_json() {
+    let base = WorkloadSpec {
+        tenants: vec![TenantSpec::interactive(), TenantSpec::batch()],
+        ..WorkloadSpec::poisson(1.0, 16, 256)
+    };
+    let rates = [0.5, 2.0, 8.0];
+    let sched = SchedulerConfig {
+        policy: Policy::Edf,
+        n_replicas: 2,
+        memory: MemoryModel { budget_bytes: 10_000, kv_bytes_per_token: 5, session_fixed_bytes: 50 },
+        preempt_budget_ms: Some(500.0),
+    };
+    let run = || {
+        let mut od = SyntheticService::new(30.0, 0.8, 100.0);
+        let mut tr = SyntheticService::new(15.0, 0.4, 75.0);
+        let mut systems: Vec<(String, &mut dyn ServiceModel)> =
+            vec![("od-moe".into(), &mut od), ("transformers".into(), &mut tr)];
+        let results = rate_sweep(&mut systems, &base, &rates, &sched, 42).unwrap();
+        sweep_json(&results, &base, &rates, &sched, 42).to_string()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "BENCH_serve.json must be byte-identical for the same seed");
+    assert!(a.contains("\"policy\":\"edf\""));
+    assert!(a.contains("\"rates_per_s\":[0.5,2,8]"));
+}
+
+#[test]
+fn slo_separates_tenants_under_load() {
+    // Two tenants, tight vs relaxed SLO, overloaded single replica: the
+    // relaxed tenant keeps full attainment, the tight one loses some.
+    let spec = WorkloadSpec {
+        model: ArrivalModel::Poisson { rate_per_s: 20.0 },
+        tenants: vec![
+            TenantSpec::new("tight", Slo::new(50.0, 20.0)),
+            TenantSpec::new("loose", Slo::relaxed()),
+        ],
+        ..WorkloadSpec::poisson(20.0, 24, 256)
+    };
+    let reqs = spec.generate(9);
+    let mut svc = SyntheticService::new(20.0, 0.0, 10.0);
+    let out = Scheduler::run(&SchedulerConfig::default(), &mut svc, &reqs).unwrap();
+    let report = odmoe::serve::ServeReport::from_outcome(
+        "stub",
+        20.0,
+        &out,
+        &["tight".to_string(), "loose".to_string()],
+    );
+    assert_eq!(report.tenants.len(), 2);
+    assert!(report.tenants[1].slo_attainment > report.tenants[0].slo_attainment);
+    assert_eq!(report.tenants[1].slo_attainment, 1.0);
+}
