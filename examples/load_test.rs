@@ -13,6 +13,9 @@
 //! * `--rates R1,R2,..`  arrival rates in req/s (default `0.5,2,8`)
 //! * `--policy P`        `fcfs` | `sjf` | `edf` (default `fcfs`)
 //! * `--replicas N`      engine replica slots per system (default 1)
+//! * `--max-batch N`     sessions co-scheduled per replica dispatch
+//!   (default 1 = sequential; see `od-moe serve --batch-sweep` for the
+//!   dedicated batch-size sweep writing `BENCH_batch.json`)
 //! * `--requests N`      requests per point (default 24)
 //! * `--out-tokens N`    output tokens per request (default 16)
 //! * `--tenants N`       1 = single class, 2 = interactive + batch
@@ -27,7 +30,7 @@ use odmoe::coordinator::baselines::FullyCachedEngine;
 use odmoe::coordinator::{OdMoeConfig, OdMoeEngine};
 use odmoe::model::WeightStore;
 use odmoe::serve::{
-    config_from_args, parse_rates, rate_sweep, sweep_json, write_bench, EngineService,
+    config_from_args, parse_rates, rate_sweep, sweep_json, write_bench, BatchEngineService,
     ServiceModel,
 };
 use odmoe::util::cli::Args;
@@ -45,8 +48,8 @@ fn main() -> anyhow::Result<()> {
     let ws = WeightStore::generate(&rt.cfg, seed);
     let mut od = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default())?;
     let mut reference = FullyCachedEngine::new(&rt, ws)?;
-    let mut od_svc = EngineService::new(&mut od);
-    let mut ref_svc = EngineService::new(&mut reference);
+    let mut od_svc = BatchEngineService::new(&mut od);
+    let mut ref_svc = BatchEngineService::new(&mut reference);
     let mut systems: Vec<(String, &mut dyn ServiceModel)> =
         vec![("od-moe".into(), &mut od_svc), ("transformers".into(), &mut ref_svc)];
 

@@ -10,8 +10,9 @@ use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
 use odmoe::predictor::{AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
 use odmoe::serve::{
-    config_from_args, parse_rates, rate_sweep, sweep_json, write_bench, EngineService, Scheduler,
-    ServeReport, ServiceModel, SessionOutcome,
+    batch_sweep, batch_sweep_json, config_from_args, parse_batches, parse_rates, rate_sweep,
+    sweep_json, write_bench, BatchEngineService, BatchPoint, Scheduler, ServeReport, ServiceModel,
+    SessionOutcome,
 };
 use odmoe::util::cli::Args;
 use odmoe::util::table::{sparkline, Table};
@@ -37,9 +38,13 @@ fn parse_period(s: &str) -> Result<usize> {
 
 /// `od-moe serve`: load-test OD-MoE through the continuous scheduler.
 /// One rate by default; `--rates 0.5,2,8` sweeps OD-MoE against the
-/// fully-cached baseline and writes `BENCH_serve.json`.
+/// fully-cached baseline and writes `BENCH_serve.json`; `--batch-sweep`
+/// sweeps `--batches` x `--rates` with batched dispatch and writes
+/// `BENCH_batch.json` (requests share one prompt unless
+/// `--distinct-prompts` — shared routing is where load amortization is
+/// maximal). `--max-batch N` batches any of the other modes.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
-    let (spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
+    let (mut spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
     let ws = WeightStore::generate(&rt.cfg, seed);
     let cfg = OdMoeConfig {
         shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
@@ -51,11 +56,28 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     };
     let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
 
+    if a.has("batch-sweep") {
+        let batches = parse_batches(a.get_or("batches", "1,2,4,8"))?;
+        let rates = parse_rates(a.get_or("rates", "2,8"))?;
+        spec.shared_prompt = !a.has("distinct-prompts");
+        let mut baseline = FullyCachedEngine::new(rt, ws)?;
+        let mut od_svc = BatchEngineService::new(&mut engine);
+        let mut ref_svc = BatchEngineService::new(&mut baseline);
+        let mut systems: Vec<(String, &mut dyn ServiceModel)> =
+            vec![("od-moe".into(), &mut od_svc), ("transformers".into(), &mut ref_svc)];
+        let results = batch_sweep(&mut systems, &spec, &batches, &rates, &sched, seed)?;
+        print_batch_sweep(&results);
+        let path = std::path::Path::new("BENCH_batch.json");
+        write_bench(path, &batch_sweep_json(&results, &spec, &batches, &rates, &sched, seed))?;
+        println!("\nwrote {}", path.display());
+        return Ok(());
+    }
+
     if let Some(rates) = a.get("rates") {
         let rates = parse_rates(rates)?;
         let mut baseline = FullyCachedEngine::new(rt, ws)?;
-        let mut od_svc = EngineService::new(&mut engine);
-        let mut ref_svc = EngineService::new(&mut baseline);
+        let mut od_svc = BatchEngineService::new(&mut engine);
+        let mut ref_svc = BatchEngineService::new(&mut baseline);
         let mut systems: Vec<(String, &mut dyn ServiceModel)> =
             vec![("od-moe".into(), &mut od_svc), ("transformers".into(), &mut ref_svc)];
         let results = rate_sweep(&mut systems, &spec, &rates, &sched, seed)?;
@@ -66,10 +88,17 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         return Ok(());
     }
 
-    println!("engine: {} | policy {} | {} replica(s) | {} arrivals @ {:.2} req/s",
-        engine.name(), sched.policy.label(), sched.n_replicas, spec.model.label(), rate);
+    println!(
+        "engine: {} | policy {} | {} replica(s) | max batch {} | {} arrivals @ {:.2} req/s",
+        engine.name(),
+        sched.policy.label(),
+        sched.n_replicas,
+        sched.max_batch,
+        spec.model.label(),
+        rate
+    );
     let reqs = spec.generate(seed);
-    let mut service = EngineService::new(&mut engine);
+    let mut service = BatchEngineService::new(&mut engine);
     let outcome = Scheduler::run(&sched, &mut service, &reqs)?;
     let names: Vec<String> = spec.tenants.iter().map(|t| t.name.clone()).collect();
     let report = ServeReport::from_outcome("od-moe", rate, &outcome, &names);
@@ -107,6 +136,35 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         report.mean_queue_depth,
     );
     Ok(())
+}
+
+fn print_batch_sweep(results: &[(String, Vec<BatchPoint>)]) {
+    let mut t = Table::new(&[
+        "system", "max batch", "rate req/s", "tok/s", "goodput tok/s", "ttft p95", "p99 tpot",
+        "loads/token", "mean batch",
+    ]);
+    for (name, points) in results {
+        for p in points {
+            let (loads, mean_b) = match &p.stats {
+                Some(s) => {
+                    (format!("{:.2}", s.loads_per_token()), format!("{:.2}", s.mean_batch()))
+                }
+                None => ("-".into(), "-".into()),
+            };
+            t.row(&[
+                name.clone(),
+                format!("{}", p.max_batch),
+                format!("{:.2}", p.report.rate_per_s),
+                format!("{:.2}", p.report.throughput_tok_s),
+                format!("{:.2}", p.report.goodput_tok_s),
+                format!("{:.0}", p.report.ttft.p95),
+                format!("{:.0}", p.report.tpot.p99),
+                loads,
+                mean_b,
+            ]);
+        }
+    }
+    t.print();
 }
 
 fn print_sweep(results: &[(String, Vec<ServeReport>)]) {

@@ -138,10 +138,19 @@ impl HardwareProfile {
 
     /// Expert compute for a T-token batch (prefill mini-batches, §3.3).
     pub fn expert_batch_ms(&self, t: usize) -> Ms {
-        if t == 0 {
+        self.batched_ms(self.t_expert_gpu_ms, t)
+    }
+
+    /// Any GPU task of single-item duration `base` over an `n`-item batch:
+    /// `base * (1 + (n-1) * batch_marginal)` — the same weight-bound
+    /// efficiency model as [`HardwareProfile::expert_batch_ms`], also used
+    /// for batched-decode attention/LM-head/shadow time across concurrent
+    /// sessions (one token per session behaves like one batch row).
+    pub fn batched_ms(&self, base: Ms, n: usize) -> Ms {
+        if n == 0 {
             return 0.0;
         }
-        self.t_expert_gpu_ms * (1.0 + (t as f64 - 1.0) * self.batch_marginal)
+        base * (1.0 + (n as f64 - 1.0) * self.batch_marginal)
     }
 
     /// Main-node task time `t_M` = non-expert compute + the two LAN hops

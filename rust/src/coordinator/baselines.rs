@@ -5,10 +5,11 @@
 
 use anyhow::Result;
 
+use super::batch::{merge_distinct, BatchEngine, BatchRunResult};
 use super::{Engine, PromptResult};
 use crate::cache::{ExpertCache, Policy};
 use crate::cluster::{Cluster, HardwareProfile, Ms};
-use crate::engine::ModelState;
+use crate::engine::{BatchState, ModelState};
 use crate::model::{Precision, WeightStore};
 use crate::predictor::{GateLookahead, MultiLayerGate, Predictor, Statistical};
 use crate::runtime::{DeviceModel, Runtime};
@@ -445,6 +446,84 @@ impl<'rt> Engine for FullyCachedEngine<'rt> {
         }
         res.decode_ms = self.now - decode_start;
         Ok(res)
+    }
+}
+
+impl<'rt> BatchEngine for FullyCachedEngine<'rt> {
+    /// Batched decode on the fully-cached server — the fair ceiling for
+    /// OD-MoE's batched mode: zero expert loads by construction, so the
+    /// only batch effect is compute amortization (batched attention/LM
+    /// head plus one batched FFN per distinct expert per layer). A batch
+    /// of one reproduces `run_prompt` timings exactly.
+    fn run_batch(&mut self, sessions: &[(&[u32], usize)]) -> Result<BatchRunResult> {
+        anyhow::ensure!(!sessions.is_empty(), "batch needs at least one session");
+        let p = self.profile.clone();
+        let cfg = self.state.cfg().clone();
+        let mut batch = BatchState::new();
+        let mut out: Vec<PromptResult> =
+            (0..sessions.len()).map(|_| PromptResult::default()).collect();
+
+        // Prefills serialize on the one server.
+        for (i, &(prompt, target)) in sessions.iter().enumerate() {
+            batch.join(&mut self.state, i, prompt, target)?;
+            let t = prompt.len();
+            let tokens_per_expert =
+                ((t * cfg.top_k) as f64 / cfg.n_experts as f64).ceil() as usize;
+            let per_layer = p.t_nonexpert_ms * (1.0 + (t as f64 - 1.0) * p.prefill_attn_marginal)
+                + cfg.n_experts as f64 * p.expert_batch_ms(tokens_per_expert);
+            self.now += cfg.n_layers as f64 * per_layer + p.t_lm_head_ms;
+            out[i].ttft_ms = self.now;
+        }
+        let decode_start = self.now;
+
+        let mut decode_tokens = 0u64;
+        let mut decode_iterations = 0u64;
+        loop {
+            let active = batch.active();
+            if active.is_empty() {
+                break;
+            }
+            let b = active.len();
+            let mut recs = Vec::with_capacity(b);
+            for &s in &active {
+                let token = batch.slot(s).next_token;
+                batch.activate(s, &mut self.state);
+                let rec = self.state.decode_step(token);
+                batch.deactivate(s, &mut self.state);
+                let rec = rec?;
+                batch.record_token(s, rec.token_out);
+                recs.push(rec);
+            }
+            // Per layer: batched attention + one batched FFN per distinct
+            // expert over the sessions that routed to it.
+            let mut iter_ms = p.batched_ms(p.t_lm_head_ms, b);
+            for l in 0..cfg.n_layers {
+                iter_ms += p.batched_ms(p.t_nonexpert_ms, b);
+                for (_, cnt) in merge_distinct(recs.iter().map(|r| r.routes[l].experts.as_slice()))
+                {
+                    iter_ms += p.expert_batch_ms(cnt);
+                }
+            }
+            self.now += iter_ms;
+            decode_iterations += 1;
+            decode_tokens += b as u64;
+            for &s in &active {
+                if batch.slot(s).done() {
+                    out[s].decode_ms = self.now - out[s].ttft_ms;
+                }
+            }
+        }
+        for (i, res) in out.iter_mut().enumerate() {
+            res.tokens = batch.slot(i).tokens.clone();
+        }
+        Ok(BatchRunResult {
+            sessions: out,
+            expert_loads: 0,
+            aborted_loads: 0,
+            decode_tokens,
+            decode_iterations,
+            decode_span_ms: self.now - decode_start,
+        })
     }
 }
 

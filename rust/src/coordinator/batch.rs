@@ -1,0 +1,160 @@
+//! Multi-session batched decode: the engine-side contract and the
+//! route-merge / load-dedup helpers.
+//!
+//! The paper decodes one sequence at a time, but its cacheless design
+//! amortizes naturally: when several concurrent sessions route to the
+//! same expert in the same layer, one on-demand load serves all of them.
+//! A [`BatchEngine`] steps N sessions through each decode iteration
+//! together — numerics stay per-session exact (see
+//! [`crate::engine::batch::BatchState`]) while virtual time books a
+//! single expert load per **distinct** expert per layer per iteration,
+//! split across the layer's group workers as in sequential decode.
+//!
+//! The core invariant (asserted by [`merge_distinct`]'s unit tests and
+//! the `batch_props` integration tests): per layer per iteration,
+//!
+//! ```text
+//! distinct-expert loads  <=  sum over sessions of top_k loads
+//! ```
+//!
+//! with equality exactly when no two sessions share an expert. A batch of
+//! one merges to the session's own route, so `run_batch` over a single
+//! session reproduces sequential `run_prompt` token streams *and*
+//! timings exactly — the property the serving layer's `--max-batch 1`
+//! baseline rests on (see DESIGN.md §7).
+
+use anyhow::Result;
+
+use super::{Engine, PromptResult};
+use crate::cluster::Ms;
+
+/// Everything one co-scheduled batch run produced.
+#[derive(Debug, Clone, Default)]
+pub struct BatchRunResult {
+    /// Per-session results, in input order. `ttft_ms`/`decode_ms` are
+    /// measured from the batch's start on the engine's virtual clock
+    /// (prefills serialize on the main node, so later sessions' TTFTs
+    /// include their wait; a session's `decode_ms` spans from its first
+    /// token to its last).
+    pub sessions: Vec<PromptResult>,
+    /// Expert loads that completed and fed an expert compute (one per
+    /// distinct expert per layer per iteration, plus mispredict reloads).
+    pub expert_loads: u64,
+    /// Prediction-driven loads aborted at the gate result (mispredicts).
+    pub aborted_loads: u64,
+    /// Decode tokens produced across all sessions (prefill excluded).
+    pub decode_tokens: u64,
+    /// Decode iterations executed (the batch shrinks at token boundaries
+    /// as sessions complete, so this is less than `decode_tokens` whenever
+    /// any iteration ran more than one session).
+    pub decode_iterations: u64,
+    /// Virtual span of the decode phase (last token time minus the batch
+    /// decode start).
+    pub decode_span_ms: Ms,
+}
+
+impl BatchRunResult {
+    /// Mean completed expert loads per decode token — the quantity
+    /// batching amortizes (equals `top_k * n_layers` at batch 1 with
+    /// perfect prediction and no reloads).
+    pub fn loads_per_token(&self) -> f64 {
+        if self.decode_tokens == 0 {
+            0.0
+        } else {
+            self.expert_loads as f64 / self.decode_tokens as f64
+        }
+    }
+}
+
+/// An engine that can co-schedule several sessions through one decode
+/// loop, amortizing per-expert I/O across the batch.
+///
+/// Contract mirroring [`Engine::run_prompt`]: the caller `reset`s the
+/// engine first; `run_batch` prefills every session, then decodes all of
+/// them together, dropping each session from the batch at the token
+/// boundary where it reaches its target (the batch *shrinks*; it never
+/// admits new members mid-run — re-forming across dispatches is the
+/// scheduler's job, see [`crate::serve::scheduler`]).
+pub trait BatchEngine: Engine {
+    /// Serve `sessions` (prompt, total output tokens) as one batch.
+    fn run_batch(&mut self, sessions: &[(&[u32], usize)]) -> Result<BatchRunResult>;
+}
+
+/// Merge per-session expert selections for one layer into the distinct
+/// expert list, first-appearance order, with per-expert token counts
+/// (how many sessions routed to it — each session selects an expert at
+/// most once, so the count is also the expert's batch-FFN row count).
+///
+/// This is the load-dedup kernel: `result.len()` loads replace
+/// `sets.map(len).sum()` loads.
+pub fn merge_distinct<'a, I>(sets: I) -> Vec<(usize, usize)>
+where
+    I: IntoIterator<Item = &'a [usize]>,
+{
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for set in sets {
+        for &e in set {
+            match out.iter_mut().find(|(x, _)| *x == e) {
+                Some((_, n)) => *n += 1,
+                None => out.push((e, 1)),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_of_one_session_is_identity() {
+        let a = [3usize, 5];
+        let m = merge_distinct([a.as_slice()]);
+        assert_eq!(m, vec![(3, 1), (5, 1)]);
+    }
+
+    #[test]
+    fn merge_dedups_shared_experts() {
+        let a = [3usize, 5];
+        let b = [5usize, 1];
+        let c = [3usize, 5];
+        let m = merge_distinct([a.as_slice(), b.as_slice(), c.as_slice()]);
+        // First-appearance order, counts = sessions per expert.
+        assert_eq!(m, vec![(3, 2), (5, 3), (1, 1)]);
+    }
+
+    #[test]
+    fn distinct_loads_never_exceed_per_session_sum() {
+        // The §7 invariant over a few synthetic batches.
+        let batches: Vec<Vec<Vec<usize>>> = vec![
+            vec![vec![0, 1], vec![0, 1], vec![0, 1]],
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            vec![vec![1, 2], vec![2, 3], vec![3, 1]],
+            vec![vec![7, 0]],
+        ];
+        for sessions in &batches {
+            let total: usize = sessions.iter().map(|s| s.len()).sum();
+            let merged = merge_distinct(sessions.iter().map(|s| s.as_slice()));
+            assert!(merged.len() <= total, "{merged:?} vs {total}");
+            let count_sum: usize = merged.iter().map(|&(_, n)| n).sum();
+            assert_eq!(count_sum, total, "counts must conserve selections");
+        }
+    }
+
+    #[test]
+    fn shared_routing_amortizes_perfectly() {
+        // All sessions on the same route: distinct count stays top_k, so
+        // loads per token = top_k / b strictly decreases with batch size.
+        let route = [2usize, 6];
+        let mut prev = f64::INFINITY;
+        for b in 1..=8 {
+            let sessions: Vec<&[usize]> = (0..b).map(|_| route.as_slice()).collect();
+            let merged = merge_distinct(sessions);
+            assert_eq!(merged.len(), 2);
+            let loads_per_token = merged.len() as f64 / b as f64;
+            assert!(loads_per_token < prev, "batch {b}: {loads_per_token} !< {prev}");
+            prev = loads_per_token;
+        }
+    }
+}

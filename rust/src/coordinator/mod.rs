@@ -3,12 +3,14 @@
 //! virtual-time durations over the cluster simulator.
 
 pub mod baselines;
+pub mod batch;
 pub mod odmoe;
 pub mod prefill;
 pub mod schedule;
 pub mod replication;
 pub mod server;
 
+pub use batch::{BatchEngine, BatchRunResult};
 pub use odmoe::{OdMoeConfig, OdMoeEngine, PredictorMode};
 pub use schedule::GroupSchedule;
 // `server` is a compatibility shim; the serving layer proper lives in

@@ -13,14 +13,25 @@
 //!    the cluster's resources; each worker holds at most ONE expert at a
 //!    time (loaded just-in-time, evicted right after use — the cacheless
 //!    property).
+//!
+//! The engine also implements [`BatchEngine`]: `run_batch` steps several
+//! concurrent sessions through each decode iteration together, merging
+//! their per-layer routes so each *distinct* expert is loaded once per
+//! layer per iteration (DESIGN.md §7). When a layer's distinct experts
+//! exceed its group size, a worker runs several experts back to back and
+//! the next transfer overlaps the previous compute — residency briefly
+//! reaches two experts (current + in-flight); a batch of one preserves
+//! strict single-expert residency and reproduces sequential decode
+//! bookings exactly.
 
 use anyhow::Result;
 
+use super::batch::{merge_distinct, BatchEngine, BatchRunResult};
 use super::prefill::{simulate_odmoe_prefill, PrefillTiming};
 use super::schedule::GroupSchedule;
 use super::{Engine, PromptResult};
 use crate::cluster::{Cluster, HardwareProfile, Ms};
-use crate::engine::ModelState;
+use crate::engine::{BatchState, ModelState, StepRecord};
 use crate::metrics::correct_count;
 use crate::model::{Precision, WeightStore};
 use crate::predictor::baseline::RandomPredictor;
@@ -80,6 +91,11 @@ pub struct OdMoeEngine<'rt> {
     pub schedule: GroupSchedule,
     main: ModelState<'rt>,
     sep: Option<SepPredictor<'rt>>,
+    /// Per-session shadow predictors for batched decode, lazily built on
+    /// the first `run_batch` that needs them (same weights/quantization
+    /// as `sep`, so a batch of one is numerically identical to
+    /// sequential decode). Unused in sequential mode.
+    sep_slots: Vec<SepPredictor<'rt>>,
     random: Option<RandomPredictor>,
     workers: Vec<WorkerState>,
     /// Virtual time at which the main node is ready for the next token.
@@ -115,6 +131,7 @@ impl<'rt> OdMoeEngine<'rt> {
             schedule,
             main,
             sep,
+            sep_slots: Vec::new(),
             random,
             workers,
             now: 0.0,
@@ -147,6 +164,11 @@ impl<'rt> OdMoeEngine<'rt> {
 
     /// One decode iteration: returns (output token, logits, per-layer
     /// correct-prediction counts).
+    ///
+    /// NOTE: `decode_iteration_batch` mirrors this pipeline for N
+    /// sessions and must stay in timing lockstep — a batch of one books
+    /// the exact same resource sequence (pinned by
+    /// `batch_of_one_matches_sequential_odmoe`). Change them together.
     fn decode_iteration(
         &mut self,
         token: u32,
@@ -377,6 +399,332 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         res.decode_ms = self.now - decode_start;
         res.stall_ms = stall;
         Ok(res)
+    }
+}
+
+/// Load/abort tallies one batched run accumulates (DESIGN.md §7).
+#[derive(Debug, Default)]
+struct BatchCounters {
+    expert_loads: u64,
+    aborted_loads: u64,
+}
+
+impl<'rt> OdMoeEngine<'rt> {
+    /// One batched decode iteration: every session in `active` advances by
+    /// one token. Numerics are per-session exact (KV swapped per session);
+    /// virtual time merges the per-layer routes and books **one** load per
+    /// distinct expert per layer, so PCIe traffic amortizes across the
+    /// batch. With one active session this books exactly the sequence of
+    /// resource acquisitions `decode_iteration` would — the `--max-batch 1
+    /// == sequential` equivalence the tests pin down.
+    fn decode_iteration_batch(
+        &mut self,
+        batch: &mut BatchState,
+        active: &[usize],
+        counters: &mut BatchCounters,
+        out: &mut [PromptResult],
+    ) -> Result<()> {
+        let p = self.cluster.profile.clone();
+        let n_layers = self.main.cfg().n_layers;
+        let b = active.len();
+        let t0 = self.now;
+
+        // ---- Numerics: shadow + main model for every active session. ----
+        let mut recs: Vec<StepRecord> = Vec::with_capacity(b);
+        let mut align_bytes = 0.0;
+        for &s in active {
+            let token = batch.slot(s).next_token;
+            batch.activate(s, &mut self.main);
+            if self.cfg.predictor == PredictorMode::Sep {
+                let sep = &mut self.sep_slots[s];
+                sep.begin_token(&self.main, token)?;
+                align_bytes += sep.alignment_bytes(&p);
+            }
+            let rec = self.main.decode_step(token);
+            batch.deactivate(s, &mut self.main);
+            let rec = rec?;
+            batch.record_token(s, rec.token_out);
+            recs.push(rec);
+        }
+
+        // ---- Shadow node: one batched emulation pass for all sessions
+        // (late departure ships every session's alignment payload in one
+        // message; per-layer time scales by the batch-efficiency factor).
+        let mut pred: Vec<Vec<Option<Vec<usize>>>> = vec![vec![None; n_layers]; b];
+        let mut pred_avail: Vec<Ms> = vec![f64::INFINITY; n_layers];
+        match self.cfg.predictor {
+            PredictorMode::Sep => {
+                let delay = if align_bytes == 0.0 {
+                    0.0
+                } else {
+                    p.lan_lat_ms + p.lan_transfer_ms(align_bytes)
+                };
+                let start = self.shadow_free.max(t0 + delay);
+                let t_layer = p.batched_ms(p.t_shadow_layer_ms, b);
+                for l in 0..n_layers {
+                    let done = start + (l as f64 + 1.0) * t_layer;
+                    pred_avail[l] = done + p.lan_lat_ms;
+                    for (k, &s) in active.iter().enumerate() {
+                        pred[k][l] = Some(self.sep_slots[s].predict(l).experts.clone());
+                    }
+                    self.cluster.trace.push(
+                        EventKind::ShadowCompute,
+                        self.cluster.shadow.id,
+                        start + l as f64 * t_layer,
+                        done,
+                        "S",
+                    );
+                }
+                self.shadow_free = start + n_layers as f64 * t_layer;
+            }
+            PredictorMode::Random => {
+                let r = self.random.as_mut().unwrap();
+                for l in 0..n_layers {
+                    for row in pred.iter_mut() {
+                        row[l] = r.predict(l);
+                    }
+                    pred_avail[l] = t0;
+                }
+            }
+            PredictorMode::None => {}
+        }
+
+        // ---- Main/worker pipeline per layer (Fig. 2, batched). ----------
+        let group_size = self.schedule.group_size;
+        let mut m_ready = t0;
+        let mut stall_iter: Ms = 0.0;
+        let mut correct: Vec<Vec<usize>> = vec![Vec::with_capacity(n_layers); b];
+        for l in 0..n_layers {
+            let group_start = self.schedule.worker_for(l, 0);
+            // M_l: batched attention + gating for all B tokens.
+            let (m_start, m_end) = self
+                .cluster
+                .main
+                .gpu
+                .acquire(m_ready, p.batched_ms(p.t_nonexpert_ms, b));
+            self.cluster
+                .trace
+                .push(EventKind::MainCompute, self.cluster.main.id, m_start, m_end, "M");
+            let reactive_t = m_end + p.lan_lat_ms;
+            let usable = pred_avail[l] <= reactive_t;
+
+            for (k, c) in correct.iter_mut().enumerate() {
+                let predicted = pred[k][l].as_deref().unwrap_or(&[]);
+                c.push(correct_count(predicted, &recs[k].routes[l].experts));
+            }
+
+            // Route merge: distinct experts across the batch, with how
+            // many sessions route to each (their batch-FFN row count).
+            let actual_set = merge_distinct(recs.iter().map(|r| r.routes[l].experts.as_slice()));
+            let pred_set: Vec<(usize, usize)> = if usable {
+                merge_distinct(pred.iter().filter_map(|row| row[l].as_deref()))
+            } else {
+                Vec::new()
+            };
+
+            // Phase 1 — prediction-driven loads: ONE per distinct predicted
+            // expert, round-robin over the layer's group workers.
+            // (expert, worker, done, link free_at before this booking)
+            let mut pred_loaded: Vec<(usize, usize, Ms, Ms)> = Vec::new();
+            let mut last_booking: Vec<Option<usize>> = vec![None; group_size];
+            for (i, &(pe, _)) in pred_set.iter().enumerate() {
+                let slot = i % group_size;
+                let w = group_start + slot;
+                let start_at = pred_avail[l].max(self.workers[w].last_ec_end);
+                let free_before = self.cluster.workers[w].pcie.free_at();
+                let (_, done) = self.cluster.expert_load(w, start_at, p.expert_bytes);
+                self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                pred_loaded.push((pe, w, done, free_before));
+                last_booking[slot] = Some(i);
+            }
+
+            // Phase 2 — gate result: abort mispredicted transfers. Only
+            // the last in-flight transfer on a link can be cancelled
+            // mid-flight; earlier wasted transfers already completed
+            // behind it and are simply evicted. The cancellation never
+            // rewinds the link below work queued ahead of the aborted
+            // transfer (`free_before`), so confirmed loads keep their
+            // booked span; at batch 1 the pipeline guarantees
+            // `free_before < reactive_t` and this is exactly the
+            // sequential `preempt(reactive_t)`.
+            let in_actual = |e: usize| actual_set.iter().any(|&(a, _)| a == e);
+            for (i, &(pe, w, _, free_before)) in pred_loaded.iter().enumerate() {
+                if in_actual(pe) {
+                    continue;
+                }
+                counters.aborted_loads += 1;
+                self.cluster.workers[w].dealloc(p.expert_bytes as u64);
+                if last_booking[i % group_size] == Some(i) {
+                    self.cluster.workers[w].pcie.preempt(reactive_t.max(free_before));
+                }
+            }
+
+            // Phase 3 — place every distinct actual expert: inherit the
+            // confirmed predicted load, else load reactively on the
+            // least-loaded group worker. One load serves every session
+            // that routed to the expert — the amortization at the heart
+            // of batched decode.
+            let mut ec_count: Vec<usize> = vec![0; group_size];
+            let mut placed: Vec<(usize, usize, Ms)> = Vec::new(); // (count, worker, ready)
+            let mut pending: Vec<(usize, usize)> = Vec::new();
+            for &(ae, cnt) in &actual_set {
+                match pred_loaded.iter().find(|&&(pe, _, _, _)| pe == ae) {
+                    Some(&(_, w, done, _)) => {
+                        ec_count[w - group_start] += 1;
+                        counters.expert_loads += 1;
+                        placed.push((cnt, w, done));
+                    }
+                    None => pending.push((ae, cnt)),
+                }
+            }
+            for (_, cnt) in pending {
+                let slot = (0..group_size)
+                    .min_by_key(|&sl| (ec_count[sl], sl))
+                    .expect("group has at least one worker");
+                let w = group_start + slot;
+                ec_count[slot] += 1;
+                // Reactive path: on the gate result. With a usable (but
+                // wrong) prediction the link was just preempted, exactly
+                // like the sequential mispredict reload; without one the
+                // load also waits for the previous expert's eviction.
+                let start_at = if usable {
+                    reactive_t
+                } else {
+                    reactive_t.max(self.workers[w].last_ec_end)
+                };
+                let (_, done) = self.cluster.expert_load(w, start_at, p.expert_bytes);
+                self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                counters.expert_loads += 1;
+                placed.push((cnt, w, done));
+            }
+
+            // Embeddings for all B tokens ship to the group after M_l.
+            let expert_ready = placed.iter().fold(0.0f64, |m, &(_, _, r)| m.max(r));
+            let embed_arrival =
+                self.cluster.lan_send(m_end, p.embed_msg_bytes * b as f64, "embed");
+            let ec_earliest = embed_arrival.max(expert_ready);
+            stall_iter += (expert_ready - embed_arrival).max(0.0);
+            if expert_ready > embed_arrival {
+                self.cluster.trace.push(
+                    EventKind::Stall,
+                    self.cluster.workers[group_start].id,
+                    embed_arrival,
+                    expert_ready,
+                    "stall",
+                );
+            }
+
+            // EC_l: each distinct expert computes its routed tokens as one
+            // batched FFN; a worker hosting several experts runs them
+            // back to back (evicting each — cacheless — right after).
+            let mut ec_end_max = ec_earliest;
+            for &(cnt, w, _) in &placed {
+                let ec_dur = p.expert_batch_ms(cnt) * self.cluster.workers[w].gpu_slowdown;
+                let (ec_start, ec_end) = self.cluster.workers[w].gpu.acquire(ec_earliest, ec_dur);
+                self.cluster.trace.push(
+                    EventKind::ExpertCompute,
+                    self.cluster.workers[w].id,
+                    ec_start,
+                    ec_end,
+                    "EC",
+                );
+                self.cluster.workers[w].dealloc(p.expert_bytes as u64);
+                self.workers[w].last_ec_end = self.workers[w].last_ec_end.max(ec_end);
+                ec_end_max = ec_end_max.max(ec_end);
+            }
+
+            // Combined expert outputs return to the main node.
+            m_ready = self
+                .cluster
+                .lan_send(ec_end_max, p.embed_msg_bytes * b as f64, "embed-back");
+        }
+
+        // LM head for all B tokens.
+        let (_, lm_end) = self
+            .cluster
+            .main
+            .gpu
+            .acquire(m_ready, p.batched_ms(p.t_lm_head_ms, b));
+        self.now = lm_end;
+
+        for (&s, c) in active.iter().zip(correct) {
+            out[s].correct_per_token.push(c);
+            // The iteration's I/O stall is shared by the whole batch.
+            out[s].stall_ms += stall_iter / b as f64;
+        }
+        Ok(())
+    }
+}
+
+impl<'rt> BatchEngine for OdMoeEngine<'rt> {
+    fn run_batch(&mut self, sessions: &[(&[u32], usize)]) -> Result<BatchRunResult> {
+        anyhow::ensure!(!sessions.is_empty(), "batch needs at least one session");
+        if self.cfg.predictor == PredictorMode::Sep {
+            while self.sep_slots.len() < sessions.len() {
+                let sep = SepPredictor::new(
+                    self.main.rt,
+                    &self.main.ws,
+                    self.cfg.shadow_precision,
+                    self.cfg.align,
+                )?;
+                self.sep_slots.push(sep);
+            }
+        }
+
+        let mut batch = BatchState::new();
+        let mut out: Vec<PromptResult> =
+            (0..sessions.len()).map(|_| PromptResult::default()).collect();
+
+        // ---- Prefill: sessions serialize on the shared cluster (each
+        // books the §3.3 mini-batched prefill after its predecessor). ----
+        for (i, &(prompt, target)) in sessions.iter().enumerate() {
+            batch.join(&mut self.main, i, prompt, target)?;
+            if self.cfg.predictor == PredictorMode::Sep {
+                self.sep_slots[i].reset();
+                self.sep_slots[i].prefill(prompt)?;
+            }
+            let timing: PrefillTiming = simulate_odmoe_prefill(
+                &mut self.cluster,
+                self.main.cfg(),
+                prompt.len(),
+                self.cfg.prefill_minibatches,
+            );
+            out[i].ttft_ms = timing.ttft_ms;
+            self.now = timing.ttft_ms;
+        }
+        self.shadow_free = self.now;
+        let decode_start = self.now;
+
+        // ---- Decode: all sessions step together; the batch shrinks at
+        // the token boundary where a session reaches its target. ---------
+        let mut counters = BatchCounters::default();
+        let mut decode_tokens = 0u64;
+        let mut decode_iterations = 0u64;
+        loop {
+            let active = batch.active();
+            if active.is_empty() {
+                break;
+            }
+            self.decode_iteration_batch(&mut batch, &active, &mut counters, &mut out)?;
+            decode_iterations += 1;
+            decode_tokens += active.len() as u64;
+            for &s in &active {
+                if batch.slot(s).done() {
+                    out[s].decode_ms = self.now - out[s].ttft_ms;
+                }
+            }
+        }
+        for (i, res) in out.iter_mut().enumerate() {
+            res.tokens = batch.slot(i).tokens.clone();
+        }
+        Ok(BatchRunResult {
+            sessions: out,
+            expert_loads: counters.expert_loads,
+            aborted_loads: counters.aborted_loads,
+            decode_tokens,
+            decode_iterations,
+            decode_span_ms: self.now - decode_start,
+        })
     }
 }
 

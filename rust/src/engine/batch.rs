@@ -1,0 +1,128 @@
+//! Per-session numerics state for multi-session batched decode.
+//!
+//! [`BatchState`] lets one [`ModelState`] (one weight upload, one device
+//! model) serve N concurrent sessions with *per-session exact* numerics:
+//! each session owns its KV caches and position, and is swapped into the
+//! shared model for exactly one decode step at a time. A session's token
+//! stream is therefore bit-identical to what a dedicated `ModelState`
+//! decoding it alone would produce — batching changes *when* tokens are
+//! produced (virtual time, booked by the engines), never *which* tokens.
+//!
+//! This module is pure numerics. The batched virtual-time accounting —
+//! route merging, expert-load deduplication, batch-efficiency factors —
+//! lives with the engines in [`crate::coordinator::batch`] and its
+//! implementations.
+
+use anyhow::Result;
+
+use super::{KvCache, ModelState, StepRecord};
+
+/// One session's private decode state within a batch.
+#[derive(Debug)]
+pub struct BatchSlot {
+    /// Caller-chosen session index (position in the batch request list).
+    pub id: usize,
+    /// This session's KV caches (one per layer), swapped into the shared
+    /// model for the duration of one decode step.
+    caches: Vec<KvCache>,
+    /// Tokens consumed so far (the session's `ModelState::pos`).
+    pos: usize,
+    /// Input token for the session's next decode step.
+    pub next_token: u32,
+    /// All generated tokens (the first one produced by prefill).
+    pub tokens: Vec<u32>,
+    /// Total tokens requested (including the prefill token).
+    pub target: usize,
+}
+
+impl BatchSlot {
+    /// Has this session generated all requested tokens?
+    pub fn done(&self) -> bool {
+        self.tokens.len() >= self.target
+    }
+}
+
+/// Per-session KV/position bookkeeping for batched decode over one shared
+/// [`ModelState`].
+///
+/// Usage: [`BatchState::join`] prefills each session and captures its
+/// state; each decode iteration then brackets every active session's
+/// [`ModelState::decode_step`] with [`BatchState::activate`] /
+/// [`BatchState::deactivate`] and records the output via
+/// [`BatchState::record_token`].
+#[derive(Debug, Default)]
+pub struct BatchState {
+    slots: Vec<BatchSlot>,
+}
+
+impl BatchState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn slot(&self, i: usize) -> &BatchSlot {
+        &self.slots[i]
+    }
+
+    /// Prefill `prompt` on `model` (resetting it first) and capture the
+    /// resulting KV state as a new session slot generating `target` tokens
+    /// in total. Returns the prefill step record (first token + routes).
+    pub fn join(
+        &mut self,
+        model: &mut ModelState,
+        id: usize,
+        prompt: &[u32],
+        target: usize,
+    ) -> Result<StepRecord> {
+        anyhow::ensure!(target >= 1, "session needs at least one output token");
+        model.reset();
+        let rec = model.prefill(prompt)?;
+        self.slots.push(BatchSlot {
+            id,
+            caches: model.caches.clone(),
+            pos: model.pos,
+            next_token: rec.token_out,
+            tokens: vec![rec.token_out],
+            target,
+        });
+        Ok(rec)
+    }
+
+    /// Swap session `i`'s KV caches and position into the shared model.
+    /// The model's previous contents are parked in the slot until
+    /// [`BatchState::deactivate`] restores them; every activate must be
+    /// paired with a deactivate before the next session runs.
+    pub fn activate(&mut self, i: usize, model: &mut ModelState) {
+        let slot = &mut self.slots[i];
+        std::mem::swap(&mut slot.caches, &mut model.caches);
+        std::mem::swap(&mut slot.pos, &mut model.pos);
+    }
+
+    /// Capture the model's (advanced) KV state back into slot `i`.
+    pub fn deactivate(&mut self, i: usize, model: &mut ModelState) {
+        let slot = &mut self.slots[i];
+        std::mem::swap(&mut slot.caches, &mut model.caches);
+        std::mem::swap(&mut slot.pos, &mut model.pos);
+    }
+
+    /// Record the token produced for session `i` this iteration; it
+    /// becomes the session's next decode input.
+    pub fn record_token(&mut self, i: usize, token: u32) {
+        let slot = &mut self.slots[i];
+        slot.next_token = token;
+        slot.tokens.push(token);
+    }
+
+    /// Indices of sessions that still owe tokens, in slot order.
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| !self.slots[i].done()).collect()
+    }
+}

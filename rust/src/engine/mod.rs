@@ -7,6 +7,7 @@
 //! accounting lives elsewhere (`cluster`); this module is purely about
 //! getting the right numbers out of the AOT artifacts.
 
+pub mod batch;
 pub mod kv;
 
 use anyhow::Result;
@@ -14,6 +15,7 @@ use anyhow::Result;
 use crate::model::{ModelConfig, WeightStore};
 use crate::runtime::{DeviceModel, Runtime, EXPERT_FFN_SIZES, PREFILL_SIZES};
 
+pub use batch::{BatchSlot, BatchState};
 pub use kv::KvCache;
 
 /// Per-layer routing decision for one token.

@@ -27,9 +27,14 @@
 //! * [`serve`] — the multi-tenant load-test layer: seeded arrival traces
 //!   (Poisson / bursty / replayed / closed-loop), a continuous
 //!   virtual-time scheduler over engine-replica pools with FCFS/SJF/EDF
-//!   policies, ledger-backed admission control and over-budget
-//!   preemption, SLO metrics (exact p50/p95/p99 TTFT, goodput), and the
-//!   rate-sweep harness behind `BENCH_serve.json`.
+//!   policies, ledger-backed admission control, over-budget preemption
+//!   and multi-session batched dispatch, SLO metrics (exact p50/p95/p99
+//!   TTFT, goodput), and the sweep harnesses behind `BENCH_serve.json`
+//!   and `BENCH_batch.json`.
+//! * [`coordinator::BatchEngine`] — multi-session batched decode: N
+//!   sessions step through one decode iteration together with merged
+//!   routes, so one expert load serves every session that routed to it
+//!   (DESIGN.md §7).
 
 pub mod cache;
 pub mod cluster;

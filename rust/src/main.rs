@@ -4,10 +4,11 @@
 //!
 //! ```text
 //! od-moe serve      [--requests N] [--rate R] [--rates R1,R2,..]   load-test serving
-//!                   [--policy fcfs|sjf|edf] [--replicas N]
+//!                   [--policy fcfs|sjf|edf] [--replicas N] [--max-batch N]
 //!                   [--arrival poisson|bursty|trace|closed]
 //!                   [--slo-ttft-ms MS] [--slo-tpot-ms MS] [--tenants N]
 //!                   [--preempt-ms MS] [--mem-gb G]
+//!                   [--batch-sweep [--batches B1,B2,..] [--distinct-prompts]]
 //! od-moe recall     [--prompts N] [--out-tokens N]    SEP recall curves (Fig. 3/6)
 //! od-moe speed      [--prompts N] [--out-tokens N]    decoding speed (Fig. 8/9/10)
 //! od-moe predictors [--prompts N] [--out-tokens N]    Table 1 comparison
@@ -17,7 +18,10 @@
 //! global flags: --artifacts DIR   --seed N
 //!
 //! `serve --rates 0.5,2,8` sweeps OD-MoE against the fully-cached
-//! baseline and writes `BENCH_serve.json` (see `examples/load_test.rs`).
+//! baseline and writes `BENCH_serve.json` (see `examples/load_test.rs`);
+//! `serve --batch-sweep` sweeps batched decode over batch size x arrival
+//! rate and writes `BENCH_batch.json` (batch 1 = the sequential
+//! baseline).
 //! ```
 
 use anyhow::{bail, Result};

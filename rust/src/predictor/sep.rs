@@ -128,11 +128,11 @@ impl<'rt> SepPredictor<'rt> {
         &self.routes
     }
 
-    /// Extra LAN payload shipped to the shadow node before it can start
-    /// this iteration (the Fig. 5 "late departure" input): KV alignment
+    /// Alignment payload bytes for the current iteration: KV alignment
     /// ships the newly generated token's KV rows for every layer; token
-    /// alignment ships the token id.
-    pub fn alignment_delay_ms(&self, p: &HardwareProfile) -> Ms {
+    /// alignment ships the token id. Batched decode sums this over
+    /// co-scheduled sessions to price one combined late-departure message.
+    pub fn alignment_bytes(&self, p: &HardwareProfile) -> f64 {
         let mut bytes = 0.0;
         if self.aligned_kv {
             bytes += p.kv_align_bytes;
@@ -140,6 +140,13 @@ impl<'rt> SepPredictor<'rt> {
         if self.aligned_token {
             bytes += p.token_msg_bytes;
         }
+        bytes
+    }
+
+    /// Extra LAN delay before the shadow node can start this iteration
+    /// (the Fig. 5 "late departure" input), from [`Self::alignment_bytes`].
+    pub fn alignment_delay_ms(&self, p: &HardwareProfile) -> Ms {
+        let bytes = self.alignment_bytes(p);
         if bytes == 0.0 {
             0.0
         } else {

@@ -200,6 +200,12 @@ pub struct WorkloadSpec {
     /// Requests cycle round-robin over tenants.
     pub tenants: Vec<TenantSpec>,
     pub vocab: u32,
+    /// Every request decodes the *same* prompt (one length draw, one
+    /// corpus walk) — the shared-routing workload where batched decode's
+    /// expert-load amortization is maximal and easiest to read off
+    /// `BENCH_batch.json` (identical prompts route identically, so a
+    /// batch of B needs the same distinct experts as a batch of 1).
+    pub shared_prompt: bool,
 }
 
 impl WorkloadSpec {
@@ -213,6 +219,7 @@ impl WorkloadSpec {
             out_tokens: LenDist::Fixed(16),
             tenants: vec![TenantSpec::new("default", Slo::relaxed())],
             vocab,
+            shared_prompt: false,
         }
     }
 
@@ -249,11 +256,19 @@ impl WorkloadSpec {
         let mut arr_rng = Rng::new(seed ^ 0xA117_11A1);
         let mut len_rng = Rng::new(seed ^ 0x1E45_D157);
         let arrivals = self.model.arrival_times(&mut arr_rng, self.n_requests);
-        let lens: Vec<usize> =
-            (0..self.n_requests).map(|_| self.prompt_len.sample(&mut len_rng)).collect();
+        let lens: Vec<usize> = if self.shared_prompt {
+            let len = self.prompt_len.sample(&mut len_rng);
+            vec![len; self.n_requests]
+        } else {
+            (0..self.n_requests).map(|_| self.prompt_len.sample(&mut len_rng)).collect()
+        };
         let outs: Vec<usize> =
             (0..self.n_requests).map(|_| self.out_tokens.sample(&mut len_rng).max(1)).collect();
-        let corpus = Corpus::generate_mixed(seed, &lens, self.vocab);
+        let mut corpus = Corpus::generate_mixed(seed, &lens, self.vocab);
+        if self.shared_prompt && !corpus.prompts.is_empty() {
+            let first = corpus.prompts[0].clone();
+            corpus.prompts = vec![first; self.n_requests];
+        }
         (0..self.n_requests)
             .map(|i| {
                 let tenant = i % self.tenants.len();
@@ -362,6 +377,16 @@ mod tests {
             assert_eq!(r.client, (i % 3) as u64);
             assert!(r.think_ms > 0.0);
         }
+    }
+
+    #[test]
+    fn shared_prompt_repeats_one_walk() {
+        let spec = WorkloadSpec { shared_prompt: true, ..WorkloadSpec::poisson(1.0, 8, 256) };
+        let reqs = spec.generate(4);
+        assert_eq!(reqs.len(), 8);
+        assert!(reqs.iter().all(|r| r.prompt == reqs[0].prompt), "one prompt for all");
+        // Arrivals still spread out (the arrival stream is untouched).
+        assert!(reqs.last().unwrap().arrival_ms > 0.0);
     }
 
     #[test]

@@ -1,12 +1,17 @@
-//! Rate-sweep driver: run systems across arrival rates and emit
-//! `BENCH_serve.json` — "what does OD-MoE's cacheless loading buy you at
-//! 0.5–8 req/s?" as one deterministic artifact.
+//! Sweep drivers for the serving layer's two deterministic artifacts:
 //!
-//! Each (system, rate) point regenerates the workload at that rate from
+//! * [`rate_sweep`] → `BENCH_serve.json` — "what does OD-MoE's cacheless
+//!   loading buy you at 0.5–8 req/s?"
+//! * [`batch_sweep`] → `BENCH_batch.json` — "what does batched decode buy
+//!   on top?", sweeping batch size x arrival rate against the sequential
+//!   (`max_batch = 1`) baseline, with engine-side expert-loads-per-token
+//!   tallies showing the amortization directly.
+//!
+//! Each (system, point) run regenerates the workload at that rate from
 //! the *same* seed — prompts and lengths are identical across points
-//! (sharing [`super::EngineService`]'s measurement memo); only the
-//! arrival stream changes, through the rate parameter itself. All state
-//! is virtual-time, so the same seed yields a byte-identical JSON file.
+//! (sharing the service models' measurement memos); only the arrival
+//! stream and scheduler knobs change. All state is virtual-time, so the
+//! same seed yields byte-identical JSON files.
 
 use std::path::Path;
 
@@ -14,7 +19,7 @@ use anyhow::{ensure, Context, Result};
 
 use super::arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
 use super::metrics::{num, obj, ServeReport};
-use super::scheduler::{MemoryModel, Policy, Scheduler, SchedulerConfig, ServiceModel};
+use super::scheduler::{BatchStats, MemoryModel, Policy, Scheduler, SchedulerConfig, ServiceModel};
 use super::Slo;
 use crate::cluster::HardwareProfile;
 use crate::runtime::PREFILL_SIZES;
@@ -36,6 +41,22 @@ pub fn parse_rates(s: &str) -> Result<Vec<f64>> {
     Ok(rates)
 }
 
+/// Parse a `--batches 1,2,4,8` list. Batch 1 — the sequential baseline —
+/// is prepended when absent, so every sweep carries its own reference.
+pub fn parse_batches(s: &str) -> Result<Vec<usize>> {
+    let mut batches: Vec<usize> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()?;
+    ensure!(!batches.is_empty(), "--batches needs at least one batch size");
+    ensure!(batches.iter().all(|&b| b >= 1), "batch sizes must be >= 1, got {batches:?}");
+    if !batches.contains(&1) {
+        batches.insert(0, 1);
+    }
+    Ok(batches)
+}
+
 /// Build the workload + scheduler configuration from CLI flags — shared
 /// by `od-moe serve` and `examples/load_test.rs` so the two cannot
 /// drift. Returns (spec, scheduler config, single-run offered rate).
@@ -45,7 +66,9 @@ pub fn parse_rates(s: &str) -> Result<Vec<f64>> {
 /// `--input-len` (else bimodal 16/128), `--out-tokens` (16),
 /// `--slo-ttft-ms`/`--slo-tpot-ms` (raw virtual ms), `--tenants` (1–2:
 /// single class, or interactive + batch), `--policy fcfs|sjf|edf`,
-/// `--replicas`, `--mem-gb`, `--preempt-ms`.
+/// `--replicas`, `--mem-gb`, `--preempt-ms`, `--max-batch` (1 =
+/// sequential dispatch), `--shared-prompt` (every request decodes the
+/// same prompt — the shared-routing workload).
 pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, SchedulerConfig, f64)> {
     // Back-compat: the old FCFS server took `--arrival-gap-ms`.
     let rate = match a.get("arrival-gap-ms") {
@@ -86,12 +109,16 @@ pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, Scheduler
         out_tokens: LenDist::Fixed(out_tokens),
         tenants,
         vocab,
+        shared_prompt: a.has("shared-prompt"),
     };
+    let max_batch = a.usize_or("max-batch", 1)?;
+    ensure!(max_batch >= 1, "--max-batch must be >= 1, got {max_batch}");
     let sched = SchedulerConfig {
         policy: Policy::parse(a.get_or("policy", "fcfs"))?,
         n_replicas: a.usize_or("replicas", 1)?,
         memory: MemoryModel::from_profile(&HardwareProfile::rtx3090(), a.f64_or("mem-gb", 24.0)?),
         preempt_budget_ms: a.get("preempt-ms").map(|s| s.parse::<f64>()).transpose()?,
+        max_batch,
     };
     Ok((spec, sched, rate))
 }
@@ -174,6 +201,112 @@ pub fn sweep_json(
     ])
 }
 
+/// One (batch size, arrival rate) point of a [`batch_sweep`].
+#[derive(Debug, Clone)]
+pub struct BatchPoint {
+    pub max_batch: usize,
+    pub report: ServeReport,
+    /// Engine-side tallies for the point (None for service models that do
+    /// not track any, e.g. the synthetic one without an engine).
+    pub stats: Option<BatchStats>,
+}
+
+impl BatchPoint {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("max_batch", Json::Num(self.max_batch as f64))];
+        if let Some(s) = &self.stats {
+            pairs.push(("expert_loads", Json::Num(s.expert_loads as f64)));
+            pairs.push(("aborted_loads", Json::Num(s.aborted_loads as f64)));
+            pairs.push(("decode_tokens", Json::Num(s.decode_tokens as f64)));
+            pairs.push(("decode_iterations", Json::Num(s.decode_iterations as f64)));
+            pairs.push(("loads_per_token", num(s.loads_per_token())));
+            pairs.push(("mean_decode_batch", num(s.mean_batch())));
+        }
+        pairs.push(("serve", self.report.to_json()));
+        obj(pairs)
+    }
+}
+
+/// Run every system at every batch size x arrival rate, `max_batch = 1`
+/// being the sequential baseline every other point is read against.
+/// Stats are drained from each service per point, so a point's
+/// `loads_per_token` covers exactly the batches it dispatched.
+pub fn batch_sweep(
+    systems: &mut [(String, &mut dyn ServiceModel)],
+    base: &WorkloadSpec,
+    batches: &[usize],
+    rates: &[f64],
+    sched: &SchedulerConfig,
+    seed: u64,
+) -> Result<Vec<(String, Vec<BatchPoint>)>> {
+    ensure!(!batches.is_empty(), "need at least one batch size");
+    ensure!(
+        !matches!(base.model, ArrivalModel::ClosedLoop { .. }) || rates.len() <= 1,
+        "closed-loop workloads are self-clocked: sweeping rates would relabel identical \
+         runs — use one rate or an open-loop arrival model"
+    );
+    let tenant_names: Vec<String> = base.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut out = Vec::with_capacity(systems.len());
+    for (name, service) in systems.iter_mut() {
+        let mut points = Vec::with_capacity(batches.len() * rates.len());
+        for &max_batch in batches {
+            let sched = SchedulerConfig { max_batch, ..sched.clone() };
+            for &rate in rates {
+                let spec = base.with_rate(rate);
+                let reqs = spec.generate(seed);
+                let _ = service.take_stats(); // drop tallies from prior points
+                let outcome = Scheduler::run(&sched, &mut **service, &reqs)?;
+                let report = ServeReport::from_outcome(name, rate, &outcome, &tenant_names);
+                points.push(BatchPoint { max_batch, report, stats: service.take_stats() });
+            }
+        }
+        out.push((name.clone(), points));
+    }
+    Ok(out)
+}
+
+/// Assemble the `BENCH_batch.json` document.
+pub fn batch_sweep_json(
+    results: &[(String, Vec<BatchPoint>)],
+    base: &WorkloadSpec,
+    batches: &[usize],
+    rates: &[f64],
+    sched: &SchedulerConfig,
+    seed: u64,
+) -> Json {
+    let workload = obj(vec![
+        ("model", Json::Str(base.model.label().to_string())),
+        ("requests", Json::Num(base.n_requests as f64)),
+        ("prompt_len", Json::Str(base.prompt_len.label())),
+        ("out_tokens", Json::Str(base.out_tokens.label())),
+        (
+            "tenants",
+            Json::Arr(base.tenants.iter().map(|t| Json::Str(t.name.clone())).collect()),
+        ),
+    ]);
+    let systems = Json::Arr(
+        results
+            .iter()
+            .map(|(name, points)| {
+                obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("bench", Json::Str("batch".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("policy", Json::Str(sched.policy.label().to_string())),
+        ("replicas", Json::Num(sched.n_replicas as f64)),
+        ("batches", Json::Arr(batches.iter().map(|&b| Json::Num(b as f64)).collect())),
+        ("rates_per_s", Json::Arr(rates.iter().map(|&r| num(r)).collect())),
+        ("workload", workload),
+        ("systems", systems),
+    ])
+}
+
 /// Write a JSON document with a trailing newline.
 pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
     std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
@@ -204,5 +337,34 @@ mod tests {
         assert!(x.contains("\"name\":\"slow\""));
         assert!(x.contains("\"p99\""));
         assert!(x.contains("\"goodput_tok_s\""));
+    }
+
+    #[test]
+    fn parse_batches_injects_sequential_baseline() {
+        assert_eq!(parse_batches("2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_batches("1,8").unwrap(), vec![1, 8]);
+        assert!(parse_batches("0,2").is_err());
+        assert!(parse_batches("").is_err());
+    }
+
+    #[test]
+    fn batch_sweep_is_deterministic_and_tagged() {
+        let base = WorkloadSpec::poisson(4.0, 16, 256);
+        let batches = [1usize, 2, 4];
+        let rates = [2.0, 8.0];
+        let sched = SchedulerConfig::default();
+        let run = |seed| {
+            let mut s = SyntheticService::new(20.0, 0.5, 30.0).with_batch_marginal(0.1);
+            let mut systems: Vec<(String, &mut dyn ServiceModel)> =
+                vec![("synthetic".into(), &mut s)];
+            let results = batch_sweep(&mut systems, &base, &batches, &rates, &sched, seed).unwrap();
+            batch_sweep_json(&results, &base, &batches, &rates, &sched, seed).to_string()
+        };
+        let x = run(42);
+        assert_eq!(x, run(42), "same seed must reproduce the file byte for byte");
+        assert!(x.contains("\"bench\":\"batch\""));
+        assert!(x.contains("\"batches\":[1,2,4]"));
+        assert!(x.contains("\"max_batch\":1"));
+        assert!(x.contains("\"max_batch\":4"));
     }
 }

@@ -13,14 +13,18 @@
 //!   in-flight sessions across a pool of engine replicas, with pluggable
 //!   policies (FCFS / SJF / SLO-aware EDF), admission control backed by a
 //!   per-replica KV + expert-weight memory ledger
-//!   ([`crate::cluster::Node`]'s byte accounting), and preemption of
-//!   over-budget sessions at token boundaries.
+//!   ([`crate::cluster::Node`]'s byte accounting), preemption of
+//!   over-budget sessions at token boundaries, and multi-session batched
+//!   dispatch: an idle replica takes up to
+//!   [`scheduler::SchedulerConfig::max_batch`] admitted sessions as one
+//!   co-scheduled decode batch (see
+//!   [`crate::coordinator::BatchEngine`] and DESIGN.md §7).
 //! * [`metrics`] — streaming latency histograms with exact nearest-rank
 //!   p50/p95/p99 TTFT and TPOT, goodput (tokens meeting SLO), and
 //!   queue-depth timelines, broken down per tenant.
-//! * [`harness`] — a rate-sweep driver that runs any [`Engine`]
-//!   (OD-MoE and every baseline) across arrival rates and emits
-//!   `BENCH_serve.json`.
+//! * [`harness`] — sweep drivers that run any [`Engine`] (OD-MoE and
+//!   every baseline) across arrival rates and batch sizes, emitting the
+//!   deterministic `BENCH_serve.json` and `BENCH_batch.json` artifacts.
 //!
 //! How virtual time composes with engine clocks: each engine measures one
 //! session's service (TTFT + decode) on its own virtual clock, reset per
@@ -38,11 +42,15 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
-pub use harness::{config_from_args, parse_rates, rate_sweep, sweep_json, write_bench};
+pub use harness::{
+    batch_sweep, batch_sweep_json, config_from_args, parse_batches, parse_rates, rate_sweep,
+    sweep_json, write_bench, BatchPoint,
+};
 pub use metrics::{Histogram, Percentiles, ServeReport, TenantReport};
 pub use scheduler::{
-    EngineService, MemoryModel, Policy, Scheduler, SchedulerConfig, ServeOutcome, ServiceModel,
-    SessionOutcome, SessionProfile, SessionRecord, SyntheticService,
+    BatchEngineService, BatchStats, EngineService, MemoryModel, Policy, Scheduler,
+    SchedulerConfig, ServeOutcome, ServiceModel, SessionOutcome, SessionProfile, SessionRecord,
+    SyntheticService,
 };
 
 use crate::cluster::Ms;

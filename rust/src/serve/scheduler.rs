@@ -19,19 +19,25 @@
 //!    the least-loaded replica with ledger room (ties prefer free bytes),
 //!    until the head of the queue no longer fits anywhere (head-of-line
 //!    blocking is deliberate: bypassing it would starve large sessions).
-//! 4. **Dispatch** — each idle replica starts its best admitted session;
-//!    service is measured by the [`ServiceModel`] and mapped onto the
-//!    global timeline; sessions over the preemption budget are truncated
-//!    at a token boundary.
+//! 4. **Dispatch** — each idle replica starts up to
+//!    [`SchedulerConfig::max_batch`] of the best admitted sessions as one
+//!    co-scheduled batch; service is measured by the [`ServiceModel`]
+//!    (batch-capable engines amortize expert loads across the batch, see
+//!    [`BatchEngineService`]) and mapped onto the global timeline;
+//!    sessions over the preemption budget are truncated at a token
+//!    boundary. The batch shrinks inside the engine as members finish,
+//!    but the replica re-forms a *new* batch only once all members have
+//!    completed — the head-of-line-blocking fairness caveat documented in
+//!    DESIGN.md §7.
 
 use std::cmp::Ordering;
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::{Request, Slo};
 use crate::cluster::{HardwareProfile, Ms, Node};
-use crate::coordinator::Engine;
+use crate::coordinator::{BatchEngine, Engine};
 
 /// Queue-ordering policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,8 +143,14 @@ pub struct SchedulerConfig {
     pub memory: MemoryModel,
     /// Preempt sessions whose measured service exceeds this virtual
     /// budget: the session is truncated at a token boundary, freeing its
-    /// replica and ledger bytes early.
+    /// replica and ledger bytes early. Within a batch the truncation is
+    /// applied per session to its measured profile (co-batched sessions
+    /// keep their measured timings — a conservative approximation, since
+    /// an early exit would really shrink the batch and speed them up).
     pub preempt_budget_ms: Option<Ms>,
+    /// Sessions a replica may co-schedule per dispatch (1 = sequential,
+    /// the behavior of every pre-batching scheduler).
+    pub max_batch: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -148,6 +160,7 @@ impl Default for SchedulerConfig {
             n_replicas: 1,
             memory: MemoryModel::unlimited(),
             preempt_budget_ms: None,
+            max_batch: 1,
         }
     }
 }
@@ -188,6 +201,82 @@ impl SessionProfile {
 pub trait ServiceModel {
     /// Measure serving `req` on an idle, reset replica.
     fn measure(&mut self, req: &Request) -> Result<SessionProfile>;
+
+    /// Measure `reqs` co-scheduled as one batch on an idle, reset
+    /// replica; profile times are offsets from the batch's start. The
+    /// default has no batching capability: sessions run back to back, so
+    /// session `i`'s TTFT includes its predecessors' full services.
+    /// Batch-capable models ([`BatchEngineService`],
+    /// [`SyntheticService`]) override this with genuinely concurrent
+    /// decode. A one-session batch must match [`ServiceModel::measure`].
+    fn measure_batch(&mut self, reqs: &[&Request]) -> Result<Vec<SessionProfile>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut offset: Ms = 0.0;
+        for r in reqs {
+            let mut p = self.measure(r)?;
+            let service = p.service_ms();
+            p.ttft_ms += offset;
+            offset += service;
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    /// Engine-side batch statistics accumulated since the last call
+    /// (`None` for models that do not track any). Used by the
+    /// `BENCH_batch.json` sweep to report expert loads per token.
+    fn take_stats(&mut self) -> Option<BatchStats> {
+        None
+    }
+}
+
+/// Aggregate engine-side statistics over the batches a [`ServiceModel`]
+/// measured — the observable that makes load amortization legible:
+/// [`BatchStats::loads_per_token`] falls as batches grow.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchStats {
+    /// Batches measured (memoized repeats counted — they stand for real
+    /// dispatches in the modeled serving run).
+    pub batches: u64,
+    /// Sessions across those batches.
+    pub sessions: u64,
+    /// Completed expert loads that fed an expert compute.
+    pub expert_loads: u64,
+    /// Prediction-driven loads aborted at the gate result.
+    pub aborted_loads: u64,
+    /// Decode tokens produced (prefill tokens excluded).
+    pub decode_tokens: u64,
+    /// Decode iterations executed (batch-of-N iterations count once).
+    pub decode_iterations: u64,
+}
+
+impl BatchStats {
+    pub fn merge(&mut self, o: &BatchStats) {
+        self.batches += o.batches;
+        self.sessions += o.sessions;
+        self.expert_loads += o.expert_loads;
+        self.aborted_loads += o.aborted_loads;
+        self.decode_tokens += o.decode_tokens;
+        self.decode_iterations += o.decode_iterations;
+    }
+
+    /// Mean completed expert loads per decode token.
+    pub fn loads_per_token(&self) -> f64 {
+        if self.decode_tokens == 0 {
+            0.0
+        } else {
+            self.expert_loads as f64 / self.decode_tokens as f64
+        }
+    }
+
+    /// Mean decode batch size actually achieved.
+    pub fn mean_batch(&self) -> f64 {
+        if self.decode_iterations == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_iterations as f64
+        }
+    }
 }
 
 /// [`ServiceModel`] backed by a real [`Engine`], memoizing profiles per
@@ -227,18 +316,107 @@ impl ServiceModel for EngineService<'_> {
     }
 }
 
+/// [`ServiceModel`] backed by a real [`BatchEngine`]: the batched
+/// counterpart of [`EngineService`]. Profiles are memoized per batch
+/// *composition* (the ordered (prompt, output-length) list), and the
+/// engine's load/token tallies accumulate for [`ServiceModel::take_stats`]
+/// — memo hits re-count their stored tallies, since a repeated
+/// composition stands for a real repeated dispatch in the modeled run.
+pub struct BatchEngineService<'e> {
+    engine: &'e mut dyn BatchEngine,
+    memo: BTreeMap<BatchKey, (Vec<SessionProfile>, BatchStats)>,
+    stats: BatchStats,
+}
+
+/// Batch composition: the ordered (prompt, output-length) list — the
+/// memoization key for batched measurements.
+type BatchKey = Vec<(Vec<u32>, usize)>;
+
+impl<'e> BatchEngineService<'e> {
+    pub fn new(engine: &'e mut dyn BatchEngine) -> Self {
+        Self { engine, memo: BTreeMap::new(), stats: BatchStats::default() }
+    }
+
+    pub fn engine_name(&self) -> String {
+        self.engine.name()
+    }
+}
+
+impl ServiceModel for BatchEngineService<'_> {
+    fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
+        let mut profiles = self.measure_batch(&[req])?;
+        Ok(profiles.pop().expect("one profile per session"))
+    }
+
+    fn measure_batch(&mut self, reqs: &[&Request]) -> Result<Vec<SessionProfile>> {
+        let key: BatchKey = reqs.iter().map(|r| (r.prompt.clone(), r.out_tokens)).collect();
+        if let Some((profiles, tallies)) = self.memo.get(&key) {
+            self.stats.merge(tallies);
+            return Ok(profiles.clone());
+        }
+        self.engine.reset()?;
+        let sessions: Vec<(&[u32], usize)> =
+            reqs.iter().map(|r| (r.prompt.as_slice(), r.out_tokens)).collect();
+        let res = self.engine.run_batch(&sessions)?;
+        ensure!(res.sessions.len() == reqs.len(), "one result per batched session");
+        let profiles: Vec<SessionProfile> = res
+            .sessions
+            .iter()
+            .map(|pr| SessionProfile {
+                ttft_ms: pr.ttft_ms,
+                decode_ms: pr.decode_ms,
+                tokens: pr.tokens.clone(),
+                stall_ms: pr.stall_ms,
+            })
+            .collect();
+        let tallies = BatchStats {
+            batches: 1,
+            sessions: reqs.len() as u64,
+            expert_loads: res.expert_loads,
+            aborted_loads: res.aborted_loads,
+            decode_tokens: res.decode_tokens,
+            decode_iterations: res.decode_iterations,
+        };
+        self.stats.merge(&tallies);
+        self.memo.insert(key, (profiles.clone(), tallies));
+        Ok(profiles)
+    }
+
+    fn take_stats(&mut self) -> Option<BatchStats> {
+        Some(std::mem::take(&mut self.stats))
+    }
+}
+
 /// Closed-form service model for tests and scheduler studies that do not
 /// need the PJRT runtime: TTFT affine in prompt length, constant TPOT.
+/// Batched measurement mirrors the engines' shape — prefills serialize,
+/// then active sessions share decode iterations whose duration scales by
+/// `1 + (B-1) * batch_marginal` (the default marginal of 1.0 means
+/// batching buys nothing; see [`SyntheticService::with_batch_marginal`]).
 #[derive(Debug, Clone)]
 pub struct SyntheticService {
     pub ttft_base_ms: Ms,
     pub ttft_per_prompt_token_ms: Ms,
     pub tpot_ms: Ms,
+    /// Marginal cost of each extra co-scheduled session per decode
+    /// iteration (0 = perfect amortization, 1 = none).
+    pub batch_marginal: f64,
 }
 
 impl SyntheticService {
     pub fn new(ttft_base_ms: Ms, ttft_per_prompt_token_ms: Ms, tpot_ms: Ms) -> Self {
-        Self { ttft_base_ms, ttft_per_prompt_token_ms, tpot_ms }
+        Self { ttft_base_ms, ttft_per_prompt_token_ms, tpot_ms, batch_marginal: 1.0 }
+    }
+
+    /// Enable batching benefit: a B-session decode iteration costs
+    /// `tpot * (1 + (B-1) * marginal)` instead of `B * tpot`.
+    pub fn with_batch_marginal(mut self, marginal: f64) -> Self {
+        self.batch_marginal = marginal;
+        self
+    }
+
+    fn ttft(&self, req: &Request) -> Ms {
+        self.ttft_base_ms + self.ttft_per_prompt_token_ms * req.prompt.len() as f64
     }
 }
 
@@ -246,11 +424,49 @@ impl ServiceModel for SyntheticService {
     fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
         let n = req.out_tokens.max(1);
         Ok(SessionProfile {
-            ttft_ms: self.ttft_base_ms + self.ttft_per_prompt_token_ms * req.prompt.len() as f64,
+            ttft_ms: self.ttft(req),
             decode_ms: self.tpot_ms * (n - 1) as f64,
             tokens: vec![req.prompt.first().copied().unwrap_or(0); n],
             stall_ms: 0.0,
         })
+    }
+
+    fn measure_batch(&mut self, reqs: &[&Request]) -> Result<Vec<SessionProfile>> {
+        // Prefills serialize; decode iterations are shared by the active
+        // sessions and the batch shrinks as sessions finish — the same
+        // shape as `BatchEngine::run_batch`, in closed form.
+        let n = reqs.len();
+        let mut ttfts = Vec::with_capacity(n);
+        let mut clock: Ms = 0.0;
+        for r in reqs {
+            clock += self.ttft(r);
+            ttfts.push(clock);
+        }
+        let mut remaining: Vec<usize> = reqs.iter().map(|r| r.out_tokens.max(1) - 1).collect();
+        let mut finish: Vec<Ms> = ttfts.clone();
+        loop {
+            let b = remaining.iter().filter(|&&x| x > 0).count();
+            if b == 0 {
+                break;
+            }
+            clock += self.tpot_ms * (1.0 + (b as f64 - 1.0) * self.batch_marginal);
+            for (i, left) in remaining.iter_mut().enumerate() {
+                if *left > 0 {
+                    *left -= 1;
+                    if *left == 0 {
+                        finish[i] = clock;
+                    }
+                }
+            }
+        }
+        Ok((0..n)
+            .map(|i| SessionProfile {
+                ttft_ms: ttfts[i],
+                decode_ms: finish[i] - ttfts[i],
+                tokens: vec![reqs[i].prompt.first().copied().unwrap_or(0); reqs[i].out_tokens.max(1)],
+                stall_ms: 0.0,
+            })
+            .collect())
     }
 }
 
@@ -373,8 +589,10 @@ struct Replica {
     node: Node,
     /// Admitted (ledger bytes allocated) but not yet running.
     admitted: Vec<usize>,
-    /// (request index, finish time).
-    running: Option<(usize, Ms)>,
+    /// In-flight sessions of the current batch: (request index, finish
+    /// time). At most [`SchedulerConfig::max_batch`] entries; the replica
+    /// dispatches a new batch only once all of them completed.
+    running: Vec<(usize, Ms)>,
     busy_ms: Ms,
     bookings: Vec<(Ms, Ms, u64)>,
 }
@@ -390,6 +608,7 @@ impl Scheduler {
         requests: &[Request],
     ) -> Result<ServeOutcome> {
         assert!(cfg.n_replicas > 0, "need at least one replica");
+        assert!(cfg.max_batch > 0, "need a positive batch limit");
         let n = requests.len();
 
         // Closed-loop chains: per client, requests become eligible in id
@@ -415,7 +634,7 @@ impl Scheduler {
             .map(|i| Replica {
                 node: Node::new(i),
                 admitted: Vec::new(),
-                running: None,
+                running: Vec::new(),
                 busy_ms: 0.0,
                 bookings: Vec::new(),
             })
@@ -449,17 +668,21 @@ impl Scheduler {
         loop {
             // -- 1. completions due at `clock` ---------------------------
             for r in reps.iter_mut() {
-                let Some((idx, end)) = r.running else { continue };
-                if end > clock {
-                    continue;
+                let mut i = 0;
+                while i < r.running.len() {
+                    let (idx, end) = r.running[i];
+                    if end > clock {
+                        i += 1;
+                        continue;
+                    }
+                    r.running.remove(i);
+                    let req = &requests[idx];
+                    let bytes = cfg.memory.session_bytes(req);
+                    let freed = r.node.dealloc(bytes);
+                    debug_assert_eq!(freed, bytes, "memory ledger drift on request {}", req.id);
+                    done += 1;
+                    release_next(&mut future, &mut chain_pos, req.client, end);
                 }
-                r.running = None;
-                let req = &requests[idx];
-                let bytes = cfg.memory.session_bytes(req);
-                let freed = r.node.dealloc(bytes);
-                debug_assert_eq!(freed, bytes, "memory ledger drift on request {}", req.id);
-                done += 1;
-                release_next(&mut future, &mut chain_pos, req.client, end);
             }
 
             // -- 2. arrivals due at `clock` ------------------------------
@@ -513,7 +736,7 @@ impl Scheduler {
                     if free < bytes {
                         continue;
                     }
-                    let load = r.admitted.len() + usize::from(r.running.is_some());
+                    let load = r.admitted.len() + r.running.len();
                     let better = match best {
                         None => true,
                         Some((_, bl, bf)) => load < bl || (load == bl && free > bf),
@@ -529,68 +752,82 @@ impl Scheduler {
             }
 
             // -- 4. dispatch: each idle replica starts the globally best
-            // admitted session (work conserving: an idle replica steals
-            // admitted-but-queued sessions from its siblings' queues when
-            // they fit its own ledger, moving the reservation with them —
-            // admission-time binding must not leave a replica idle while
-            // work waits elsewhere).
+            // admitted sessions, up to `max_batch` of them co-scheduled
+            // as one decode batch (work conserving: an idle replica
+            // steals admitted-but-queued sessions from its siblings'
+            // queues when they fit its own ledger, moving the reservation
+            // with them — admission-time binding must not leave a replica
+            // idle while work waits elsewhere).
             for ri in 0..reps.len() {
-                if reps[ri].running.is_some() {
+                if !reps[ri].running.is_empty() {
                     continue;
                 }
-                let free_ri = cfg.memory.budget_bytes.saturating_sub(reps[ri].node.gpu_bytes_used);
-                let mut choice: Option<(usize, usize)> = None;
-                let mut choice_key = (0.0, 0.0, 0u64);
-                for qi in 0..reps.len() {
-                    for j in 0..reps[qi].admitted.len() {
-                        let idx = reps[qi].admitted[j];
-                        if qi != ri && cfg.memory.session_bytes(&requests[idx]) > free_ri {
-                            continue;
-                        }
-                        let k = cfg.policy.key(&requests[idx], eligible_at[idx]);
-                        if choice.is_none() || key_cmp(k, choice_key) == Ordering::Less {
-                            choice = Some((qi, j));
-                            choice_key = k;
+                let mut picked: Vec<usize> = Vec::new();
+                while picked.len() < cfg.max_batch {
+                    let free_ri =
+                        cfg.memory.budget_bytes.saturating_sub(reps[ri].node.gpu_bytes_used);
+                    let mut choice: Option<(usize, usize)> = None;
+                    let mut choice_key = (0.0, 0.0, 0u64);
+                    for qi in 0..reps.len() {
+                        for j in 0..reps[qi].admitted.len() {
+                            let idx = reps[qi].admitted[j];
+                            if qi != ri && cfg.memory.session_bytes(&requests[idx]) > free_ri {
+                                continue;
+                            }
+                            let k = cfg.policy.key(&requests[idx], eligible_at[idx]);
+                            if choice.is_none() || key_cmp(k, choice_key) == Ordering::Less {
+                                choice = Some((qi, j));
+                                choice_key = k;
+                            }
                         }
                     }
+                    let Some((qi, j)) = choice else { break };
+                    let idx = reps[qi].admitted.remove(j);
+                    if qi != ri {
+                        let bytes = cfg.memory.session_bytes(&requests[idx]);
+                        let freed = reps[qi].node.dealloc(bytes);
+                        debug_assert_eq!(freed, bytes, "steal ledger drift on request {idx}");
+                        reps[ri].node.alloc(bytes);
+                    }
+                    picked.push(idx);
                 }
-                let Some((qi, j)) = choice else { continue };
-                let idx = reps[qi].admitted.remove(j);
-                if qi != ri {
-                    let bytes = cfg.memory.session_bytes(&requests[idx]);
-                    let freed = reps[qi].node.dealloc(bytes);
-                    debug_assert_eq!(freed, bytes, "steal ledger drift on request {idx}");
-                    reps[ri].node.alloc(bytes);
+                if picked.is_empty() {
+                    continue;
                 }
-                let r = &mut reps[ri];
-                let req = &requests[idx];
-                let profile = service.measure(req)?;
-                let (kept, svc, preempted) = truncate(&profile, cfg.preempt_budget_ms);
+                let refs: Vec<&Request> = picked.iter().map(|&idx| &requests[idx]).collect();
+                let profiles = service.measure_batch(&refs)?;
+                ensure!(profiles.len() == picked.len(), "one profile per batched session");
                 let start = clock;
-                let finish = start + svc;
-                records[idx] = Some(SessionRecord {
-                    id: req.id,
-                    tenant: req.tenant,
-                    replica: ri,
-                    arrival_ms: req.arrival_ms,
-                    eligible_ms: eligible_at[idx],
-                    start_ms: start,
-                    first_token_ms: (kept > 0).then_some(start + profile.ttft_ms),
-                    finish_ms: finish,
-                    tokens: profile.tokens[..kept].to_vec(),
-                    requested_tokens: req.out_tokens,
-                    stall_ms: profile.stall_ms,
-                    slo: req.slo,
-                    outcome: if preempted {
-                        SessionOutcome::Preempted
-                    } else {
-                        SessionOutcome::Completed
-                    },
-                });
-                r.running = Some((idx, finish));
-                r.busy_ms += svc;
-                r.bookings.push((start, finish, req.id));
-                makespan = makespan.max(finish);
+                let mut batch_end = start;
+                for (profile, &idx) in profiles.iter().zip(&picked) {
+                    let req = &requests[idx];
+                    let (kept, svc, preempted) = truncate(profile, cfg.preempt_budget_ms);
+                    let finish = start + svc;
+                    records[idx] = Some(SessionRecord {
+                        id: req.id,
+                        tenant: req.tenant,
+                        replica: ri,
+                        arrival_ms: req.arrival_ms,
+                        eligible_ms: eligible_at[idx],
+                        start_ms: start,
+                        first_token_ms: (kept > 0).then_some(start + profile.ttft_ms),
+                        finish_ms: finish,
+                        tokens: profile.tokens[..kept].to_vec(),
+                        requested_tokens: req.out_tokens,
+                        stall_ms: profile.stall_ms,
+                        slo: req.slo,
+                        outcome: if preempted {
+                            SessionOutcome::Preempted
+                        } else {
+                            SessionOutcome::Completed
+                        },
+                    });
+                    reps[ri].running.push((idx, finish));
+                    reps[ri].bookings.push((start, finish, req.id));
+                    batch_end = batch_end.max(finish);
+                    makespan = makespan.max(finish);
+                }
+                reps[ri].busy_ms += batch_end - start;
             }
 
             // -- 5. queue-depth sample -----------------------------------
@@ -609,7 +846,7 @@ impl Scheduler {
                 next = next.min(t);
             }
             for r in &reps {
-                if let Some((_, end)) = r.running {
+                for &(_, end) in &r.running {
                     next = next.min(end);
                 }
             }
@@ -794,5 +1031,91 @@ mod tests {
         let out = Scheduler::run(&SchedulerConfig::default(), &mut svc(), &[]).unwrap();
         assert!(out.records.is_empty());
         assert_eq!(out.makespan_ms, 0.0);
+    }
+
+    #[test]
+    fn batch_of_one_matches_sequential_measure() {
+        let mut s = SyntheticService::new(10.0, 0.5, 10.0).with_batch_marginal(0.1);
+        let r = req(0, 0.0, 6);
+        let solo = s.measure(&r).unwrap();
+        let batched = s.measure_batch(&[&r]).unwrap().pop().unwrap();
+        assert_eq!(solo.ttft_ms, batched.ttft_ms);
+        assert_eq!(solo.decode_ms, batched.decode_ms);
+        assert_eq!(solo.tokens, batched.tokens);
+    }
+
+    #[test]
+    fn default_measure_batch_stacks_sequentially() {
+        /// Measure-only model: exercises the trait's fallback.
+        struct Fixed;
+        impl ServiceModel for Fixed {
+            fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
+                SyntheticService::new(10.0, 0.0, 10.0).measure(req)
+            }
+        }
+        let (a, b) = (req(0, 0.0, 4), req(1, 0.0, 4)); // service 40 ms each
+        let profiles = Fixed.measure_batch(&[&a, &b]).unwrap();
+        assert_eq!(profiles[0].ttft_ms, 10.0);
+        assert_eq!(profiles[1].ttft_ms, 50.0, "no batch capability: b waits out a");
+        assert_eq!(profiles[1].service_ms(), 80.0);
+    }
+
+    #[test]
+    fn dispatch_coschedules_up_to_max_batch() {
+        // Three identical requests at t=0, one replica, max_batch 2 with
+        // perfect amortization: two start together, the third waits for
+        // the whole batch (the §7 head-of-line re-form point).
+        let cfg = SchedulerConfig { max_batch: 2, ..Default::default() };
+        let reqs = vec![req(0, 0.0, 4), req(1, 0.0, 4), req(2, 0.0, 4)];
+        let mut svc = SyntheticService::new(10.0, 0.0, 10.0).with_batch_marginal(0.0);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).unwrap();
+        let by_id = |id| out.records.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(0).start_ms, 0.0);
+        assert_eq!(by_id(1).start_ms, 0.0, "co-scheduled with request 0");
+        // Prefills serialize (10 + 10), then 3 shared iterations of 10 ms.
+        assert_eq!(by_id(0).finish_ms, 50.0);
+        assert_eq!(by_id(1).finish_ms, 50.0);
+        assert_eq!(by_id(2).start_ms, 50.0, "third waits for the batch to drain");
+        assert_eq!(out.makespan_ms, 90.0);
+    }
+
+    #[test]
+    fn batching_cuts_makespan_under_overload() {
+        let reqs: Vec<Request> = (0..8).map(|i| req(i, 0.0, 8)).collect();
+        let run = |max_batch| {
+            let cfg = SchedulerConfig { max_batch, ..Default::default() };
+            let mut svc = SyntheticService::new(10.0, 0.0, 10.0).with_batch_marginal(0.1);
+            Scheduler::run(&cfg, &mut svc, &reqs).unwrap().makespan_ms
+        };
+        let sequential = run(1);
+        let batched = run(8);
+        assert_eq!(sequential, 640.0);
+        // 8 prefills (80 ms) + 7 iterations at 10 * (1 + 7*0.1) = 17 ms.
+        assert_eq!(batched, 199.0);
+        assert!(batched < sequential);
+    }
+
+    #[test]
+    fn batch_members_free_ledger_at_their_own_finish() {
+        // Two co-batched sessions of different lengths: the short one's
+        // completion releases its ledger bytes (and closed-loop successor)
+        // before the long one finishes.
+        let cfg = SchedulerConfig {
+            max_batch: 2,
+            memory: MemoryModel {
+                budget_bytes: 10_000,
+                kv_bytes_per_token: 10,
+                session_fixed_bytes: 0,
+            },
+            ..Default::default()
+        };
+        let reqs = vec![req(0, 0.0, 2), req(1, 0.0, 12)];
+        let mut svc = SyntheticService::new(10.0, 0.0, 10.0).with_batch_marginal(0.0);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).unwrap();
+        let short = out.records.iter().find(|r| r.id == 0).unwrap();
+        let long = out.records.iter().find(|r| r.id == 1).unwrap();
+        assert!(short.finish_ms < long.finish_ms);
+        assert_eq!(short.replica, long.replica);
+        assert_eq!(short.start_ms, long.start_ms, "dispatched as one batch");
     }
 }

@@ -1,0 +1,199 @@
+//! Property and equivalence tests for multi-session batched decode
+//! (DESIGN.md §7).
+//!
+//! The pure route-merge invariants run anywhere; the engine equivalence
+//! tests execute real numerics and need the AOT artifacts (same
+//! convention as `engine_integration.rs`: they panic with a pointer to
+//! `make artifacts` when the artifacts are absent).
+
+use odmoe::coordinator::batch::merge_distinct;
+use odmoe::coordinator::baselines::FullyCachedEngine;
+use odmoe::coordinator::{BatchEngine, Engine, OdMoeConfig, OdMoeEngine, PredictorMode};
+use odmoe::model::rng::Rng;
+use odmoe::model::WeightStore;
+use odmoe::util::prop::check;
+use odmoe::Runtime;
+
+// ---------------------------------------------------------------------
+// Pure merge invariants (no runtime needed).
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_distinct_loads_bounded_by_per_session_sum() {
+    check("distinct <= sum of per-session loads", 64, 201, |rng| {
+        let b = 1 + rng.below(8);
+        let top_k = 1 + rng.below(3);
+        let n_experts = top_k + 1 + rng.below(8);
+        let sessions: Vec<Vec<usize>> = (0..b)
+            .map(|_| {
+                let mut route = Vec::new();
+                while route.len() < top_k {
+                    let e = rng.below(n_experts);
+                    if !route.contains(&e) {
+                        route.push(e);
+                    }
+                }
+                route
+            })
+            .collect();
+        let merged = merge_distinct(sessions.iter().map(|s| s.as_slice()));
+        let total = b * top_k;
+        if merged.len() > total {
+            return Err(format!("{} distinct loads for {total} selections", merged.len()));
+        }
+        let conserved: usize = merged.iter().map(|&(_, n)| n).sum();
+        if conserved != total {
+            return Err(format!("counts sum to {conserved}, expected {total}"));
+        }
+        // Every expert appears at most once (truly distinct).
+        for (i, &(e, _)) in merged.iter().enumerate() {
+            if merged[i + 1..].iter().any(|&(x, _)| x == e) {
+                return Err(format!("expert {e} merged twice"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_of_single_session_is_identity() {
+    check("batch of one merges to its own route", 32, 202, |rng| {
+        let top_k = 1 + rng.below(4);
+        let mut route = Vec::new();
+        while route.len() < top_k {
+            let e = rng.below(8);
+            if !route.contains(&e) {
+                route.push(e);
+            }
+        }
+        let merged = merge_distinct([route.as_slice()]);
+        let back: Vec<usize> = merged.iter().map(|&(e, _)| e).collect();
+        if back != route || merged.iter().any(|&(_, n)| n != 1) {
+            return Err(format!("{merged:?} is not the identity of {route:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine equivalence (real numerics; needs `make artifacts`).
+// ---------------------------------------------------------------------
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn prompt(seed: u64, len: usize, vocab: u32) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as usize) as u32).collect()
+}
+
+/// `run_batch` over one session must reproduce `run_prompt` exactly:
+/// tokens, TTFT, decode time, stalls, and per-layer prediction recall.
+#[test]
+fn batch_of_one_matches_sequential_odmoe() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(7, 16, rt.cfg.vocab_size as u32);
+    for predictor in [PredictorMode::Sep, PredictorMode::None] {
+        let cfg = OdMoeConfig { predictor, ..OdMoeConfig::default() };
+        let mut engine = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+
+        engine.reset().unwrap();
+        let solo = engine.run_prompt(&p, 8, false).unwrap();
+        engine.reset().unwrap();
+        let batched = engine.run_batch(&[(p.as_slice(), 8)]).unwrap();
+        let b = &batched.sessions[0];
+
+        assert_eq!(solo.tokens, b.tokens, "{predictor:?}: token stream must match");
+        assert_eq!(solo.ttft_ms, b.ttft_ms, "{predictor:?}: ttft must match exactly");
+        assert_eq!(solo.decode_ms, b.decode_ms, "{predictor:?}: decode time must match exactly");
+        assert_eq!(solo.stall_ms, b.stall_ms, "{predictor:?}: stalls must match exactly");
+        assert_eq!(
+            solo.correct_per_token, b.correct_per_token,
+            "{predictor:?}: per-layer recall must match"
+        );
+        assert_eq!(batched.decode_tokens, 7);
+    }
+}
+
+#[test]
+fn batch_of_one_matches_sequential_fully_cached() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(9, 16, rt.cfg.vocab_size as u32);
+    let mut engine = FullyCachedEngine::new(&rt, ws).unwrap();
+
+    engine.reset().unwrap();
+    let solo = engine.run_prompt(&p, 6, false).unwrap();
+    engine.reset().unwrap();
+    let batched = engine.run_batch(&[(p.as_slice(), 6)]).unwrap();
+    let b = &batched.sessions[0];
+
+    assert_eq!(solo.tokens, b.tokens);
+    assert_eq!(solo.ttft_ms, b.ttft_ms);
+    assert_eq!(solo.decode_ms, b.decode_ms);
+    assert_eq!(batched.expert_loads, 0, "fully cached never loads");
+}
+
+/// Numerics stay per-session exact inside a mixed batch: every member's
+/// token stream equals its own sequential decode.
+#[test]
+fn batched_token_streams_are_per_session_exact() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let pa = prompt(1, 16, vocab);
+    let pb = prompt(2, 16, vocab);
+    let mut engine =
+        OdMoeEngine::new(&rt, ws, OdMoeConfig { predictor: PredictorMode::None, ..OdMoeConfig::default() })
+            .unwrap();
+
+    engine.reset().unwrap();
+    let solo_a = engine.run_prompt(&pa, 6, false).unwrap();
+    engine.reset().unwrap();
+    let solo_b = engine.run_prompt(&pb, 9, false).unwrap();
+
+    engine.reset().unwrap();
+    let batched = engine.run_batch(&[(pa.as_slice(), 6), (pb.as_slice(), 9)]).unwrap();
+    assert_eq!(batched.sessions[0].tokens, solo_a.tokens);
+    assert_eq!(batched.sessions[1].tokens, solo_b.tokens);
+    // The batch shrinks at a token boundary when the short session ends.
+    assert_eq!(batched.decode_tokens, 5 + 8);
+    assert_eq!(batched.decode_iterations, 8, "long session decodes alone after the short one");
+}
+
+/// The §7 amortization, end to end on the engine: identical sessions
+/// route identically, so expert loads per decode token fall strictly as
+/// the batch grows, while decode throughput rises.
+#[test]
+fn shared_routing_amortizes_loads_and_raises_throughput() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(5, 16, rt.cfg.vocab_size as u32);
+    let mut engine = OdMoeEngine::new(&rt, ws, OdMoeConfig::default()).unwrap();
+
+    let mut prev_lpt = f64::INFINITY;
+    let mut prev_tps = 0.0;
+    for b in [1usize, 2, 4] {
+        let sessions: Vec<(&[u32], usize)> = vec![(p.as_slice(), 8); b];
+        engine.reset().unwrap();
+        let res = engine.run_batch(&sessions).unwrap();
+        let lpt = res.loads_per_token();
+        let tps = res.decode_tokens as f64 / (res.decode_span_ms / 1000.0);
+        assert!(
+            lpt < prev_lpt,
+            "batch {b}: loads/token {lpt} must fall below {prev_lpt}"
+        );
+        assert!(
+            tps > prev_tps,
+            "batch {b}: decode throughput {tps} must rise above {prev_tps}"
+        );
+        // All members decode the same stream.
+        for s in &res.sessions[1..] {
+            assert_eq!(s.tokens, res.sessions[0].tokens);
+        }
+        prev_lpt = lpt;
+        prev_tps = tps;
+    }
+}

@@ -2,7 +2,7 @@
 //! deterministic, prefill and decode agree, and the quantized shadow model
 //! tracks the full-precision router (the SEP premise).
 
-use odmoe::engine::ModelState;
+use odmoe::engine::{BatchState, ModelState};
 use odmoe::model::{ModelConfig, Precision, WeightStore};
 use odmoe::Runtime;
 
@@ -160,4 +160,40 @@ fn prefill_activations_cover_most_experts() {
         .sum::<f64>()
         / acts.len() as f64;
     assert!(avg > 6.5, "long prompts should activate nearly all experts, got {avg}");
+}
+
+#[test]
+fn batch_state_sessions_match_dedicated_states() {
+    // Two sessions interleaved through ONE shared ModelState via KV swap
+    // must generate exactly what two dedicated states would: batching is
+    // a scheduling construct, never a numerics one.
+    let rt = runtime();
+    let pa: Vec<u32> = (0..16).map(|i| (i * 13 + 5) % 256).collect();
+    let pb: Vec<u32> = (0..16).map(|i| (i * 29 + 3) % 256).collect();
+
+    let mut shared = state(&rt, 42);
+    let mut batch = BatchState::new();
+    batch.join(&mut shared, 0, &pa, 5).unwrap();
+    batch.join(&mut shared, 1, &pb, 5).unwrap();
+    for _ in 0..4 {
+        for i in [0usize, 1] {
+            let token = batch.slot(i).next_token;
+            batch.activate(i, &mut shared);
+            let rec = shared.decode_step(token).unwrap();
+            batch.deactivate(i, &mut shared);
+            batch.record_token(i, rec.token_out);
+        }
+    }
+
+    for (i, prompt) in [(0usize, &pa), (1usize, &pb)] {
+        let mut solo = state(&rt, 42);
+        let first = solo.prefill(prompt).unwrap();
+        let mut tokens = vec![first.token_out];
+        for _ in 0..4 {
+            let rec = solo.decode_step(*tokens.last().unwrap()).unwrap();
+            tokens.push(rec.token_out);
+        }
+        assert_eq!(batch.slot(i).tokens, tokens, "session {i} diverged");
+        assert!(batch.slot(i).done());
+    }
 }

@@ -4,9 +4,9 @@
 
 use odmoe::model::rng::Rng;
 use odmoe::serve::{
-    rate_sweep, sweep_json, ArrivalModel, MemoryModel, Policy, Request, Scheduler,
-    SchedulerConfig, ServiceModel, SessionOutcome, Slo, SyntheticService, TenantSpec,
-    WorkloadSpec,
+    batch_sweep, batch_sweep_json, rate_sweep, sweep_json, ArrivalModel, MemoryModel, Policy,
+    Request, Scheduler, SchedulerConfig, ServiceModel, SessionOutcome, Slo, SyntheticService,
+    TenantSpec, WorkloadSpec,
 };
 use odmoe::util::prop::check;
 
@@ -47,6 +47,7 @@ fn prop_no_replica_runs_two_sessions_at_once() {
             n_replicas: 1 + rng.below(4),
             memory: MemoryModel::unlimited(),
             preempt_budget_ms: if rng.uniform() < 0.3 { Some(200.0) } else { None },
+            max_batch: 1,
         };
         let reqs = random_workload(rng, 4 + rng.below(28));
         let mut svc = random_service(rng);
@@ -141,6 +142,7 @@ fn prop_memory_ledger_balances_to_zero() {
                 session_fixed_bytes: 100,
             },
             preempt_budget_ms: None,
+            max_batch: 1 + rng.below(3),
         };
         // Mixed sizes: some requests exceed the 2 000-byte budget and must
         // be rejected; the rest must drain the ledger back to zero (the
@@ -241,6 +243,7 @@ fn same_seed_yields_byte_identical_bench_json() {
         n_replicas: 2,
         memory: MemoryModel { budget_bytes: 10_000, kv_bytes_per_token: 5, session_fixed_bytes: 50 },
         preempt_budget_ms: Some(500.0),
+        max_batch: 1,
     };
     let run = || {
         let mut od = SyntheticService::new(30.0, 0.8, 100.0);
@@ -255,6 +258,117 @@ fn same_seed_yields_byte_identical_bench_json() {
     assert_eq!(a, b, "BENCH_serve.json must be byte-identical for the same seed");
     assert!(a.contains("\"policy\":\"edf\""));
     assert!(a.contains("\"rates_per_s\":[0.5,2,8]"));
+}
+
+#[test]
+fn prop_max_batch_one_is_the_sequential_scheduler() {
+    // With `max_batch: 1` the batched dispatch path must be byte-for-byte
+    // the sequential scheduler: the service's batch efficiency can never
+    // matter for one-session batches.
+    check("max_batch 1 == sequential", CASES, 107, |rng| {
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(3),
+            ..Default::default()
+        };
+        let reqs = random_workload(rng, 4 + rng.below(16));
+        let base = random_service(rng);
+        let mut plain = base.clone();
+        let mut amortized = base.with_batch_marginal(0.1);
+        let a = Scheduler::run(&cfg, &mut plain, &reqs).map_err(|e| e.to_string())?;
+        let b = Scheduler::run(&cfg, &mut amortized, &reqs).map_err(|e| e.to_string())?;
+        for (x, y) in a.records.iter().zip(&b.records) {
+            if (x.id, x.start_ms, x.finish_ms, x.first_token_ms, &x.tokens)
+                != (y.id, y.start_ms, y.finish_ms, y.first_token_ms, &y.tokens)
+            {
+                return Err(format!("records diverge for request {} / {}", x.id, y.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_concurrency_bounded_and_tokens_conserved() {
+    check("<= max_batch in flight per replica", CASES, 108, |rng| {
+        let k = 1 + rng.below(4);
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(3),
+            max_batch: k,
+            ..Default::default()
+        };
+        let reqs = random_workload(rng, 4 + rng.below(20));
+        let mut svc = random_service(rng).with_batch_marginal(rng.uniform());
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        // Max overlap of service intervals per replica must stay <= k.
+        for (ri, bookings) in out.bookings.iter().enumerate() {
+            let mut edges: Vec<(f64, i32)> = Vec::new();
+            for &(s, e, _) in bookings {
+                edges.push((s, 1));
+                edges.push((e, -1));
+            }
+            edges.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let (mut cur, mut peak) = (0i32, 0i32);
+            for (_, d) in edges {
+                cur += d;
+                peak = peak.max(cur);
+            }
+            if peak > k as i32 {
+                return Err(format!("replica {ri}: {peak} sessions in flight, max_batch {k}"));
+            }
+        }
+        // Batching must not lose or invent tokens.
+        let requested: usize = reqs.iter().map(|r| r.out_tokens).sum();
+        let produced: usize = out.records.iter().map(|r| r.tokens.len()).sum();
+        if produced != requested {
+            return Err(format!("produced {produced} of {requested} requested tokens"));
+        }
+        if out.records.iter().any(|r| r.outcome != SessionOutcome::Completed) {
+            return Err("all sessions must complete without preemption/rejection".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batching_raises_throughput_under_overload() {
+    // Overloaded single replica: co-scheduling amortizes decode, so the
+    // same workload drains strictly faster with a larger batch limit.
+    let spec = WorkloadSpec { shared_prompt: true, ..WorkloadSpec::poisson(50.0, 24, 256) };
+    let reqs = spec.generate(17);
+    let run = |max_batch| {
+        let cfg = SchedulerConfig { max_batch, ..Default::default() };
+        let mut svc = SyntheticService::new(20.0, 0.0, 50.0).with_batch_marginal(0.05);
+        Scheduler::run(&cfg, &mut svc, &reqs).unwrap().makespan_ms
+    };
+    let sequential = run(1);
+    let batched = run(8);
+    assert!(
+        batched < sequential,
+        "batched makespan {batched} must beat sequential {sequential}"
+    );
+}
+
+#[test]
+fn same_seed_yields_byte_identical_batch_json() {
+    let base = WorkloadSpec { shared_prompt: true, ..WorkloadSpec::poisson(4.0, 16, 256) };
+    let batches = [1usize, 2, 4];
+    let rates = [2.0, 8.0];
+    let sched = SchedulerConfig::default();
+    let run = || {
+        let mut od = SyntheticService::new(30.0, 0.8, 100.0).with_batch_marginal(0.1);
+        let mut tr = SyntheticService::new(15.0, 0.4, 75.0).with_batch_marginal(0.05);
+        let mut systems: Vec<(String, &mut dyn ServiceModel)> =
+            vec![("od-moe".into(), &mut od), ("transformers".into(), &mut tr)];
+        let results = batch_sweep(&mut systems, &base, &batches, &rates, &sched, 42).unwrap();
+        batch_sweep_json(&results, &base, &batches, &rates, &sched, 42).to_string()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "BENCH_batch.json must be byte-identical for the same seed");
+    assert!(a.contains("\"bench\":\"batch\""));
+    assert!(a.contains("\"batches\":[1,2,4]"));
 }
 
 #[test]
