@@ -5,14 +5,14 @@
 use anyhow::{bail, Result};
 use odmoe::cluster::HardwareProfile;
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
-use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
+use odmoe::coordinator::{BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine};
 use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
 use odmoe::predictor::{AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
 use odmoe::serve::{
-    batch_sweep, batch_sweep_json, config_from_args, parse_batches, parse_rates, rate_sweep,
-    sweep_json, write_bench, BatchEngineService, BatchPoint, Scheduler, ServeReport, ServiceModel,
-    SessionOutcome,
+    batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep, parse_batches,
+    parse_rates, rate_sweep, sweep_json, write_bench, BatchEngineService, BatchPoint,
+    FailoverPoint, Scheduler, ServeReport, ServiceModel, SessionOutcome,
 };
 use odmoe::util::cli::Args;
 use odmoe::util::table::{sparkline, Table};
@@ -36,6 +36,20 @@ fn parse_period(s: &str) -> Result<usize> {
     Ok(s.parse()?)
 }
 
+/// Reject out-of-range `--fail worker<N>` targets with a CLI error
+/// before they reach the engine's (programmer-facing) asserts.
+fn validate_failures(specs: &[FailureSpec], n_workers: usize) -> Result<()> {
+    for f in specs {
+        if let FailureSpec::Worker { worker, .. } = f {
+            anyhow::ensure!(
+                *worker < n_workers,
+                "--fail worker{worker} out of range (cluster has {n_workers} workers)"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// `od-moe serve`: load-test OD-MoE through the continuous scheduler.
 /// One rate by default; `--rates 0.5,2,8` sweeps OD-MoE against the
 /// fully-cached baseline and writes `BENCH_serve.json`; `--batch-sweep`
@@ -43,6 +57,13 @@ fn parse_period(s: &str) -> Result<usize> {
 /// `BENCH_batch.json` (requests share one prompt unless
 /// `--distinct-prompts` — shared routing is where load amortization is
 /// maximal). `--max-batch N` batches any of the other modes.
+///
+/// Failure injection (DESIGN.md §8): `--fail worker3@500,shadow@800ms`
+/// fail-stops engine nodes on the virtual clock (tokens never change;
+/// only timing degrades), `--fail-replica 0@500` fail-stops a scheduler
+/// replica (its sessions re-queue), and `--failover-sweep` decodes one
+/// session at 0..=`--max-failed` dead workers and writes the
+/// deterministic `BENCH_failover.json`.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let (mut spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
     let ws = WeightStore::generate(&rt.cfg, seed);
@@ -54,7 +75,71 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         },
         ..OdMoeConfig::default()
     };
+
+    if a.has("failover-sweep") {
+        let max_failed = a.usize_or("max-failed", (cfg.n_workers - 1).min(4))?;
+        anyhow::ensure!(
+            max_failed < cfg.n_workers,
+            "--max-failed {max_failed} leaves no survivor among {} workers",
+            cfg.n_workers
+        );
+        let fail_at = a.f64_or("fail-at-ms", 0.0)?;
+        let out_tokens = a.usize_or("out-tokens", 16)?;
+        // A `--fail` plan is a fixed fault background for every sweep
+        // point (including the k = 0 baseline); the sweep kills workers
+        // 0..k on top of it.
+        let background = match a.get("fail") {
+            Some(s) => FailureSpec::parse_list(s)?,
+            None => Vec::new(),
+        };
+        validate_failures(&background, cfg.n_workers)?;
+        let mut doomed: Vec<usize> = background
+            .iter()
+            .filter_map(|f| match f {
+                FailureSpec::Worker { worker, .. } => Some(*worker),
+                FailureSpec::Shadow { .. } => None,
+            })
+            .collect();
+        doomed.extend(0..max_failed);
+        doomed.sort_unstable();
+        doomed.dedup();
+        anyhow::ensure!(
+            doomed.len() < cfg.n_workers,
+            "--failover-sweep plus --fail would leave no surviving worker among {}",
+            cfg.n_workers
+        );
+        let prompt = Corpus::generate(seed ^ 5, 1, 16, rt.cfg.vocab_size as u32)
+            .prompts
+            .pop()
+            .expect("one prompt");
+        let points = failover_sweep(max_failed, |k| {
+            let mut e = OdMoeEngine::new(rt, ws.clone(), cfg.clone())?;
+            for &f in &background {
+                e.inject_failure(f);
+            }
+            for w in 0..k {
+                e.inject_failure(FailureSpec::Worker { worker: w, at_ms: fail_at });
+            }
+            e.run_batch(&[(prompt.as_slice(), out_tokens)])
+        })?;
+        print_failover(&points);
+        let path = std::path::Path::new("BENCH_failover.json");
+        write_bench(
+            path,
+            &failover_json(&points, seed, cfg.n_workers, rt.cfg.top_k, fail_at, out_tokens),
+        )?;
+        println!("\nwrote {}", path.display());
+        return Ok(());
+    }
+
     let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
+    if let Some(s) = a.get("fail") {
+        let specs = FailureSpec::parse_list(s)?;
+        validate_failures(&specs, engine.cfg.n_workers)?;
+        for f in specs {
+            engine.inject_failure(f);
+        }
+    }
 
     if a.has("batch-sweep") {
         let batches = parse_batches(a.get_or("batches", "1,2,4,8"))?;
@@ -136,6 +221,25 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         report.mean_queue_depth,
     );
     Ok(())
+}
+
+fn print_failover(points: &[FailoverPoint]) {
+    let mut t = Table::new(&[
+        "failed workers", "decode (ms)", "slowdown", "stall (ms)", "loads/token", "failovers",
+        "tokens",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{}", p.failed_workers),
+            format!("{:.1}", p.decode_ms),
+            format!("{:.3}x", p.slowdown),
+            format!("{:.1}", p.stall_ms),
+            format!("{:.2}", p.loads_per_token),
+            format!("{}", p.failovers),
+            if p.tokens_match_healthy { "identical".into() } else { "DIVERGED".to_string() },
+        ]);
+    }
+    t.print();
 }
 
 fn print_batch_sweep(results: &[(String, Vec<BatchPoint>)]) {
@@ -368,6 +472,7 @@ pub fn memory() -> Result<()> {
     let mut t = Table::new(&["system", "GPU memory (GB)", "paper (GB)"]);
     let audits = [
         (memaudit::odmoe(&p, 8), "60"),
+        (memaudit::odmoe_batched(&p, 8, 2, 4), "-"),
         (memaudit::fully_cached(&p), "180"),
         (memaudit::offloading("mixtral-offloading", &p, 64, 0.143, 0.35), "11"),
         (memaudit::offloading("moe-infinity", &p, 42, 0.5, 0.35), "21.5"),

@@ -28,6 +28,9 @@ pub type Ms = f64;
 pub struct Resource {
     free_at: Ms,
     busy_total: Ms,
+    /// Start of the most recent booking — a preempt can only cancel work
+    /// inside it, never idle gaps or earlier completed bookings.
+    last_start: Ms,
 }
 
 impl Resource {
@@ -36,11 +39,21 @@ impl Resource {
     }
 
     pub fn acquire(&mut self, earliest: Ms, duration: Ms) -> (Ms, Ms) {
-        debug_assert!(duration >= 0.0, "negative duration");
+        // Non-finite bookings are always a modeling bug: an infinite
+        // duration pins `free_at` at +inf for the rest of the run (and a
+        // later preempt would drive `busy_total` to -inf/NaN). Dead nodes
+        // are modeled by [`NodeHealth`] / [`Cluster::fail_worker`], never
+        // by infinite durations.
+        assert!(
+            earliest.is_finite() && duration.is_finite() && duration >= 0.0,
+            "non-finite or negative booking (earliest {earliest}, duration {duration}); \
+             model dead nodes with NodeHealth, not infinite durations"
+        );
         let start = self.free_at.max(earliest);
         let end = start + duration;
         self.free_at = end;
         self.busy_total += duration;
+        self.last_start = start;
         (start, end)
     }
 
@@ -51,10 +64,19 @@ impl Resource {
 
     /// Abort the in-flight booking at time `at`: the resource becomes free
     /// at `at` if it was booked past it (mispredicted expert loads are
-    /// cancelled the moment the gate result disagrees — paper §3.1).
+    /// cancelled the moment the gate result disagrees — paper §3.1; node
+    /// failures freeze a dead node's resources the same way).
+    ///
+    /// Only time inside the last booking is reclaimed from `busy_total`:
+    /// rewinding past the booking's start cancels the whole booking but
+    /// never idle gaps or earlier completed work, and the reclaim is
+    /// additionally clamped to the booked total — `busy_total` stays
+    /// finite and non-negative under any preempt sequence.
     pub fn preempt(&mut self, at: Ms) {
+        assert!(at.is_finite(), "non-finite preempt instant {at}");
         if self.free_at > at {
-            self.busy_total -= self.free_at - at;
+            let reclaimed = (self.free_at - at.max(self.last_start)).min(self.busy_total);
+            self.busy_total -= reclaimed.max(0.0);
             self.free_at = at;
         }
     }
@@ -67,7 +89,20 @@ impl Resource {
     pub fn reset(&mut self) {
         self.free_at = 0.0;
         self.busy_total = 0.0;
+        self.last_start = 0.0;
     }
+}
+
+/// Liveness of one node under fail-stop fault injection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeHealth {
+    Healthy,
+    /// Fail-stop at the given virtual instant: the node's resources are
+    /// frozen at that time, its GPU memory contents are lost, and it
+    /// never books work again. (This replaces the old "infinite
+    /// slowdown ~ dead link" hack, which pinned `Resource::free_at` at
+    /// +inf and corrupted utilization accounting.)
+    Failed { at_ms: Ms },
 }
 
 /// One edge node: a GPU (compute) + its private CPU→GPU link + a GPU
@@ -82,10 +117,14 @@ pub struct Node {
     /// High-water mark of `gpu_bytes_used`.
     pub gpu_bytes_peak: u64,
     /// Straggler injection: multiplies this node's PCIe transfer times
-    /// (1.0 = healthy; 3.0 = a degraded link; f64::INFINITY ~ dead link).
+    /// (1.0 = healthy; 3.0 = a degraded link). Must be finite — dead
+    /// links are [`NodeHealth::Failed`] via [`Cluster::fail_worker`],
+    /// never an infinite slowdown.
     pub pcie_slowdown: f64,
     /// Straggler injection for GPU compute on this node.
     pub gpu_slowdown: f64,
+    /// Fail-stop state; consulted by every booking entry point.
+    pub health: NodeHealth,
 }
 
 impl Node {
@@ -98,7 +137,35 @@ impl Node {
             gpu_bytes_peak: 0,
             pcie_slowdown: 1.0,
             gpu_slowdown: 1.0,
+            health: NodeHealth::Healthy,
         }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.health == NodeHealth::Healthy
+    }
+
+    /// The fail-stop instant, if this node has failed.
+    pub fn failed_at(&self) -> Option<Ms> {
+        match self.health {
+            NodeHealth::Healthy => None,
+            NodeHealth::Failed { at_ms } => Some(at_ms),
+        }
+    }
+
+    /// Fail-stop this node at `at_ms`: freeze both resources at the
+    /// failure instant (work booked past it never happened) and drop the
+    /// GPU memory contents (the ledger keeps its peak for the audit).
+    /// Idempotent — a second failure of a dead node is a no-op.
+    pub fn fail(&mut self, at_ms: Ms) {
+        assert!(at_ms.is_finite() && at_ms >= 0.0, "bad failure time {at_ms}");
+        if !self.is_alive() {
+            return;
+        }
+        self.health = NodeHealth::Failed { at_ms };
+        self.gpu.preempt(at_ms);
+        self.pcie.preempt(at_ms);
+        self.gpu_bytes_used = 0;
     }
 
     pub fn alloc(&mut self, bytes: u64) {
@@ -122,6 +189,7 @@ impl Node {
         self.pcie.reset();
         self.gpu_bytes_used = 0;
         self.gpu_bytes_peak = 0;
+        self.health = NodeHealth::Healthy;
     }
 }
 
@@ -166,18 +234,27 @@ impl Cluster {
 
     /// Book a LAN message of `bytes`, earliest at `earliest`. Returns the
     /// arrival time. Latency is paid per message; the shared segment is
-    /// serialized at its bandwidth.
+    /// serialized at its bandwidth. The trace records the *booked*
+    /// interval (the span the shared segment is actually held for) —
+    /// propagation latency delays arrival but does not occupy the wire,
+    /// so rendered timelines and trace-derived utilization exclude it.
     pub fn lan_send(&mut self, earliest: Ms, bytes: f64, what: &'static str) -> Ms {
         let dur = self.profile.lan_transfer_ms(bytes);
         let (start, end) = self.lan.acquire(earliest, dur);
         let arrival = end + self.profile.lan_lat_ms;
-        self.trace.push(EventKind::LanSend, usize::MAX, start, arrival, what);
+        self.trace.push_lan(start, end, arrival, what);
         arrival
     }
 
     /// Book an expert load over `worker`'s PCIe link starting no earlier
     /// than `earliest`. Returns (start, done). Honors straggler injection.
+    /// Panics on a dead worker: callers must route around failed nodes
+    /// (see `coordinator::schedule::SlotMap`) before booking.
     pub fn expert_load(&mut self, worker: usize, earliest: Ms, bytes: f64) -> (Ms, Ms) {
+        assert!(
+            self.workers[worker].is_alive(),
+            "expert load booked on dead worker {worker}"
+        );
         let dur = self.profile.pcie_transfer_ms(bytes) * self.workers[worker].pcie_slowdown;
         let (start, end) = self.workers[worker].pcie.acquire(earliest, dur);
         self.trace
@@ -185,11 +262,60 @@ impl Cluster {
         (start, end)
     }
 
+    /// Book an expert compute of base duration `base_ms` on `worker`'s
+    /// GPU starting no earlier than `earliest`. Returns (start, end).
+    /// Honors straggler injection; panics on a dead worker.
+    pub fn expert_compute(&mut self, worker: usize, earliest: Ms, base_ms: Ms) -> (Ms, Ms) {
+        assert!(
+            self.workers[worker].is_alive(),
+            "expert compute booked on dead worker {worker}"
+        );
+        let dur = base_ms * self.workers[worker].gpu_slowdown;
+        let (start, end) = self.workers[worker].gpu.acquire(earliest, dur);
+        self.trace
+            .push(EventKind::ExpertCompute, self.workers[worker].id, start, end, "EC");
+        (start, end)
+    }
+
     /// Inject a straggler: worker `w`'s PCIe and GPU run `factor`x slower.
+    /// The factor must be finite — a dead node is [`Cluster::fail_worker`],
+    /// not an infinite slowdown (which would corrupt virtual time).
     pub fn inject_straggler(&mut self, w: usize, factor: f64) {
-        assert!(factor >= 1.0, "straggler factor must be >= 1");
+        assert!(
+            factor >= 1.0 && factor.is_finite(),
+            "straggler factor must be finite and >= 1 (got {factor}); \
+             use fail_worker for dead nodes"
+        );
         self.workers[w].pcie_slowdown = factor;
         self.workers[w].gpu_slowdown = factor;
+    }
+
+    /// Fail-stop worker `w` at virtual time `at_ms`: its resources freeze
+    /// at the failure instant, its GPU memory contents are lost, and every
+    /// later booking attempt on it panics. Idempotent.
+    pub fn fail_worker(&mut self, w: usize, at_ms: Ms) {
+        if !self.workers[w].is_alive() {
+            return;
+        }
+        self.workers[w].fail(at_ms);
+        let id = self.workers[w].id;
+        self.trace.push(EventKind::Failure, id, at_ms, at_ms, "fail");
+    }
+
+    /// Fail-stop the shadow node at `at_ms`. Engines consult this to fall
+    /// back from SEP prediction to reactive (gate-result-driven) loads.
+    pub fn fail_shadow(&mut self, at_ms: Ms) {
+        if !self.shadow.is_alive() {
+            return;
+        }
+        self.shadow.fail(at_ms);
+        let id = self.shadow.id;
+        self.trace.push(EventKind::Failure, id, at_ms, at_ms, "fail");
+    }
+
+    /// Number of workers still alive.
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.is_alive()).count()
     }
 
     /// Peak paper-scale GPU bytes across all nodes (Table 2(ii)).
@@ -260,9 +386,116 @@ mod tests {
         let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
         c.lan_send(0.0, 1e6, "x");
         c.workers[0].alloc(10);
+        c.fail_worker(1, 5.0);
         c.reset();
         assert_eq!(c.lan.free_at(), 0.0);
         assert_eq!(c.workers[0].gpu_bytes_used, 0);
+        assert!(c.workers[1].is_alive(), "reset resurrects failed nodes");
         assert_eq!(c.trace.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn infinite_booking_rejected() {
+        let mut r = Resource::new();
+        r.acquire(0.0, f64::INFINITY);
+    }
+
+    #[test]
+    fn preempt_clamps_busy_total() {
+        let mut r = Resource::new();
+        r.acquire(10.0, 5.0); // busy 5, free_at 15
+        // Rewind past the booking start AND the leading idle gap: the
+        // reclaimed span clamps to the booked total instead of driving
+        // busy_total to -5.
+        r.preempt(0.0);
+        assert_eq!(r.free_at(), 0.0);
+        assert_eq!(r.busy_total(), 0.0);
+        assert!(r.busy_total().is_finite());
+    }
+
+    #[test]
+    fn preempt_mid_booking_reclaims_exact_span() {
+        let mut r = Resource::new();
+        r.acquire(0.0, 10.0);
+        r.preempt(4.0);
+        assert_eq!(r.free_at(), 4.0);
+        assert_eq!(r.busy_total(), 4.0);
+        // Preempting an idle resource is a no-op.
+        r.preempt(9.0);
+        assert_eq!(r.busy_total(), 4.0);
+    }
+
+    #[test]
+    fn preempt_never_reclaims_completed_work_or_idle_gaps() {
+        // 40 ms of completed work, idle until a residency-gated booking
+        // at [100, 130); the node dies at t=60, before the booking even
+        // started. Only the cancelled booking's 30 ms is reclaimed — the
+        // completed 40 ms survives, and the idle gap is not "reclaimed".
+        let mut r = Resource::new();
+        r.acquire(0.0, 40.0);
+        r.acquire(100.0, 30.0);
+        assert_eq!(r.busy_total(), 70.0);
+        r.preempt(60.0);
+        assert_eq!(r.free_at(), 60.0);
+        assert_eq!(r.busy_total(), 40.0, "completed work must survive the preempt");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn infinite_straggler_rejected() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        c.inject_straggler(0, f64::INFINITY);
+    }
+
+    #[test]
+    fn fail_worker_freezes_resources_and_drops_memory() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let (_, done) = c.expert_load(0, 0.0, c.profile.expert_bytes);
+        c.workers[0].alloc(100);
+        let mid = done / 2.0;
+        c.fail_worker(0, mid);
+        assert!(!c.workers[0].is_alive());
+        assert_eq!(c.workers[0].failed_at(), Some(mid));
+        assert_eq!(c.workers[0].pcie.free_at(), mid, "in-flight transfer frozen");
+        assert!(c.workers[0].pcie.busy_total() >= 0.0);
+        assert!(c.workers[0].pcie.busy_total().is_finite());
+        assert_eq!(c.workers[0].gpu_bytes_used, 0, "contents lost with the node");
+        assert_eq!(c.workers[0].gpu_bytes_peak, 100, "peak survives for the audit");
+        // Idempotent: a second failure does not move the freeze point.
+        c.fail_worker(0, 0.0);
+        assert_eq!(c.workers[0].failed_at(), Some(mid));
+        assert_eq!(c.alive_workers(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead worker")]
+    fn booking_on_dead_worker_panics() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        c.fail_worker(0, 0.0);
+        c.expert_load(0, 1.0, c.profile.expert_bytes);
+    }
+
+    #[test]
+    fn lan_trace_records_booked_interval_not_propagation() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 1);
+        c.trace.enabled = true;
+        let bytes = 1e6;
+        let arrival = c.lan_send(0.0, bytes, "m");
+        let ev = &c.trace.events()[0];
+        assert_eq!(ev.end, c.lan.free_at(), "event spans the booked interval");
+        assert_eq!(ev.arrival, Some(arrival), "arrival carried separately");
+        assert!((arrival - (ev.end + c.profile.lan_lat_ms)).abs() < 1e-12);
+        assert!((ev.end - ev.start - c.profile.lan_transfer_ms(bytes)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expert_compute_honors_straggler_injection() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        c.inject_straggler(1, 3.0);
+        let (_, e0) = c.expert_compute(0, 0.0, 2.0);
+        let (_, e1) = c.expert_compute(1, 0.0, 2.0);
+        assert_eq!(e0, 2.0);
+        assert_eq!(e1, 6.0);
     }
 }

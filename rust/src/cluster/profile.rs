@@ -170,6 +170,16 @@ impl HardwareProfile {
     pub fn t_maxload_ms(&self, n_groups: usize) -> Ms {
         n_groups as f64 * self.t_main_ms() + (n_groups as f64 - 1.0) * self.t_worker_ms()
     }
+
+    /// Failover feasibility (DESIGN.md §8): can a worker serving `slots`
+    /// expert slots fit all of its per-cycle loads inside the
+    /// `n_groups`-stagger Eq. (1) window? A healthy worker serves one
+    /// slot; rerouting a dead worker's slot onto it doubles its per-cycle
+    /// load time, and `coordinator::schedule::SlotMap::fail` prefers
+    /// targets for which this still holds.
+    pub fn reroute_feasible(&self, slots: usize, n_groups: usize) -> bool {
+        slots as f64 * self.expert_load_ms(1.0) <= self.t_maxload_ms(n_groups)
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +239,19 @@ mod tests {
         let t8 = p.expert_batch_ms(8);
         assert!(t8 < 8.0 * p.t_expert_gpu_ms, "batching must amortize");
         assert!(t8 > p.t_expert_gpu_ms, "but not be free");
+    }
+
+    #[test]
+    fn reroute_on_paper_testbed_must_fall_back_to_degraded_mode() {
+        // The design point is knife's-edge: one slot per worker just fits
+        // the 4-group window, so absorbing a dead neighbour's slot cannot
+        // stay stall-free — failover is possible but degraded, which is
+        // exactly what the SlotMap's least-loaded fallback models.
+        let p = HardwareProfile::rtx3090();
+        assert!(p.reroute_feasible(1, 4), "healthy load fits Eq. (1)");
+        assert!(!p.reroute_feasible(2, 4), "a second slot breaks the window");
+        // More stagger groups widen the window enough to absorb one.
+        assert!(p.reroute_feasible(2, 8));
     }
 
     #[test]

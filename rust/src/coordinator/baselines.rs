@@ -520,6 +520,7 @@ impl<'rt> BatchEngine for FullyCachedEngine<'rt> {
             sessions: out,
             expert_loads: 0,
             aborted_loads: 0,
+            failovers: 0,
             decode_tokens,
             decode_iterations,
             decode_span_ms: self.now - decode_start,

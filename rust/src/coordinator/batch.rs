@@ -42,6 +42,9 @@ pub struct BatchRunResult {
     pub expert_loads: u64,
     /// Prediction-driven loads aborted at the gate result (mispredicts).
     pub aborted_loads: u64,
+    /// Loads/computes re-booked on a replacement worker after a node
+    /// died mid-flight (fault injection; see DESIGN.md §8).
+    pub failovers: u64,
     /// Decode tokens produced across all sessions (prefill excluded).
     pub decode_tokens: u64,
     /// Decode iterations executed (the batch shrinks at token boundaries

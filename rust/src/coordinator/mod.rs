@@ -11,8 +11,8 @@ pub mod replication;
 pub mod server;
 
 pub use batch::{BatchEngine, BatchRunResult};
-pub use odmoe::{OdMoeConfig, OdMoeEngine, PredictorMode};
-pub use schedule::GroupSchedule;
+pub use odmoe::{FailureSpec, OdMoeConfig, OdMoeEngine, PredictorMode};
+pub use schedule::{GroupSchedule, SlotMap};
 // `server` is a compatibility shim; the serving layer proper lives in
 // [`crate::serve`].
 pub use server::{Request, Server, ServerStats};

@@ -18,17 +18,31 @@
 //! concurrent sessions through each decode iteration together, merging
 //! their per-layer routes so each *distinct* expert is loaded once per
 //! layer per iteration (DESIGN.md §7). When a layer's distinct experts
-//! exceed its group size, a worker runs several experts back to back and
-//! the next transfer overlaps the previous compute — residency briefly
-//! reaches two experts (current + in-flight); a batch of one preserves
-//! strict single-expert residency and reproduces sequential decode
-//! bookings exactly.
+//! exceed its group size, a worker runs several experts back to back, so
+//! its transient residency reaches the number of loads it received that
+//! layer (up to `ceil(distinct / group_size)` experts — see
+//! `metrics::memory::odmoe_batched` for the honest audit); a batch of
+//! one preserves strict single-expert residency and reproduces
+//! sequential decode bookings exactly.
+//!
+//! **Failure model (DESIGN.md §8).** Fail-stop faults are injected with
+//! [`OdMoeEngine::inject_failure`] and act during decode: the coordinator
+//! heartbeats nodes at token boundaries and additionally notices a death
+//! the moment a transfer or compute on the dead node would have
+//! completed. A dead worker's slots reassign across survivors through
+//! [`SlotMap::fail`] (preferring targets whose projected load still fits
+//! the Eq. (1) no-stall window), in-flight work re-books on the
+//! replacement one LAN notification later, and a dead shadow node
+//! degrades prediction to the reactive no-prefetch path. Numerics never
+//! touch virtual time, so the served token stream is bit-identical to the
+//! healthy run. Both decode paths share the same failover helpers, which
+//! keeps the batch-of-one equivalence intact under failures.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, ensure, Result};
 
 use super::batch::{merge_distinct, BatchEngine, BatchRunResult};
 use super::prefill::{simulate_odmoe_prefill, PrefillTiming};
-use super::schedule::GroupSchedule;
+use super::schedule::{GroupSchedule, SlotMap};
 use super::{Engine, PromptResult};
 use crate::cluster::{Cluster, HardwareProfile, Ms};
 use crate::engine::{BatchState, ModelState, StepRecord};
@@ -48,6 +62,63 @@ pub enum PredictorMode {
     Random,
     /// No prefetch: load after the gate result only (case 6).
     None,
+}
+
+/// A scheduled fail-stop fault on the engine's virtual clock.
+///
+/// Failures act during decode (prefill models a broadcast that completed
+/// before the fault window); a time earlier than the decode start simply
+/// means "dead from the first decode iteration". The plan is re-armed by
+/// `reset`, so every serving run replays the same scenario on its own
+/// clock — which keeps the serve layer's per-request memoization sound.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureSpec {
+    /// Worker `worker` fail-stops at `at_ms`.
+    Worker { worker: usize, at_ms: Ms },
+    /// The shadow (SEP) node fail-stops at `at_ms`: prediction degrades
+    /// to reactive gate-result-driven loads, tokens unchanged.
+    Shadow { at_ms: Ms },
+}
+
+/// Split a `<target>@<ms>[ms]` failure spec into (target, ms) — the one
+/// grammar shared by engine failure specs (`worker3@500ms`) and the
+/// scheduler's replica failures (`0@500`), so the two CLI surfaces can
+/// never drift apart.
+pub(crate) fn parse_at_ms(s: &str) -> Result<(&str, f64)> {
+    let (who, at) = s
+        .split_once('@')
+        .ok_or_else(|| anyhow!("failure spec {s:?} needs <target>@<ms>"))?;
+    let at = at.trim().trim_end_matches("ms").trim();
+    let at_ms: f64 = at.parse().map_err(|_| anyhow!("bad failure time in {s:?}"))?;
+    ensure!(
+        at_ms.is_finite() && at_ms >= 0.0,
+        "failure time must be finite and >= 0 in {s:?}"
+    );
+    Ok((who.trim(), at_ms))
+}
+
+impl FailureSpec {
+    /// Parse `worker3@500`, `worker3@500ms`, or `shadow@800`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (who, at_ms) = parse_at_ms(s)?;
+        if who == "shadow" {
+            return Ok(FailureSpec::Shadow { at_ms });
+        }
+        if let Some(idx) = who.strip_prefix("worker") {
+            let worker: usize =
+                idx.parse().map_err(|_| anyhow!("bad worker index in {s:?}"))?;
+            return Ok(FailureSpec::Worker { worker, at_ms });
+        }
+        bail!("unknown failure target {who:?} (worker<N> | shadow)")
+    }
+
+    /// Parse a comma-separated list, e.g. `worker3@500,shadow@800ms`.
+    pub fn parse_list(s: &str) -> Result<Vec<Self>> {
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| Self::parse(p.trim()))
+            .collect()
+    }
 }
 
 /// Engine configuration (defaults = the paper's ten-node testbed).
@@ -88,7 +159,10 @@ struct WorkerState {
 pub struct OdMoeEngine<'rt> {
     pub cfg: OdMoeConfig,
     pub cluster: Cluster,
+    /// Healthy-cluster blueprint (Eq. (1) windows, group arithmetic).
     pub schedule: GroupSchedule,
+    /// Live slot→worker routing; diverges from `schedule` after failures.
+    pub slots: SlotMap,
     main: ModelState<'rt>,
     sep: Option<SepPredictor<'rt>>,
     /// Per-session shadow predictors for batched decode, lazily built on
@@ -102,11 +176,21 @@ pub struct OdMoeEngine<'rt> {
     now: Ms,
     /// When the shadow node finished its previous iteration.
     shadow_free: Ms,
+    /// The injected failure plan (survives `reset`, which re-arms it).
+    plan: Vec<FailureSpec>,
+    /// Worker failures not yet applied this run.
+    pending_fail: Vec<(usize, Ms)>,
+    /// Shadow failure not yet applied this run.
+    pending_shadow: Option<Ms>,
+    /// Loads/computes re-booked on a replacement worker after a
+    /// mid-flight node death, cumulative since the last reset.
+    failovers: u64,
 }
 
 impl<'rt> OdMoeEngine<'rt> {
     pub fn new(rt: &'rt Runtime, ws: WeightStore, cfg: OdMoeConfig) -> Result<Self> {
         let schedule = GroupSchedule::new(cfg.n_workers, ws.cfg.top_k);
+        let slots = SlotMap::from_schedule(&schedule);
         let cluster = Cluster::new(cfg.profile.clone(), cfg.n_workers);
         let sep = match cfg.predictor {
             PredictorMode::Sep => Some(SepPredictor::new(
@@ -129,6 +213,7 @@ impl<'rt> OdMoeEngine<'rt> {
             cfg,
             cluster,
             schedule,
+            slots,
             main,
             sep,
             sep_slots: Vec::new(),
@@ -136,6 +221,10 @@ impl<'rt> OdMoeEngine<'rt> {
             workers,
             now: 0.0,
             shadow_free: 0.0,
+            plan: Vec::new(),
+            pending_fail: Vec::new(),
+            pending_shadow: None,
+            failovers: 0,
         };
         engine.charge_static_memory();
         Ok(engine)
@@ -162,13 +251,243 @@ impl<'rt> OdMoeEngine<'rt> {
         &self.main
     }
 
+    /// Schedule a fail-stop fault (see [`FailureSpec`]). May be called
+    /// multiple times; `reset` re-arms the whole plan.
+    pub fn inject_failure(&mut self, f: FailureSpec) {
+        match f {
+            FailureSpec::Worker { worker, at_ms } => {
+                assert!(
+                    worker < self.cfg.n_workers,
+                    "worker {worker} out of range ({} workers)",
+                    self.cfg.n_workers
+                );
+                assert!(at_ms.is_finite() && at_ms >= 0.0, "bad failure time {at_ms}");
+            }
+            FailureSpec::Shadow { at_ms } => {
+                assert!(at_ms.is_finite() && at_ms >= 0.0, "bad failure time {at_ms}");
+            }
+        }
+        self.plan.push(f);
+        self.arm(f);
+    }
+
+    fn arm(&mut self, f: FailureSpec) {
+        match f {
+            FailureSpec::Worker { worker, at_ms } => self.pending_fail.push((worker, at_ms)),
+            FailureSpec::Shadow { at_ms } => {
+                self.pending_shadow = Some(self.pending_shadow.map_or(at_ms, |x| x.min(at_ms)));
+            }
+        }
+    }
+
+    /// Loads/computes re-booked on a replacement worker after a
+    /// mid-flight node death, cumulative since the last reset.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    // ---- Failure machinery (shared by both decode paths). ---------------
+
+    fn pending_worker_fail(&self, w: usize) -> Option<Ms> {
+        self.pending_fail
+            .iter()
+            .filter(|&&(pw, _)| pw == w)
+            .map(|&(_, at)| at)
+            .fold(None, |m: Option<Ms>, at| Some(m.map_or(at, |x| x.min(at))))
+    }
+
+    /// Fail-stop worker `w` at `at`: freeze its resources, drop its
+    /// memory contents, and reassign its slots across survivors,
+    /// preferring targets whose projected load still fits the Eq. (1)
+    /// no-stall window.
+    fn apply_worker_failure(&mut self, w: usize, at: Ms) {
+        self.pending_fail.retain(|&(pw, _)| pw != w);
+        self.cluster.fail_worker(w, at);
+        let p = self.cluster.profile.clone();
+        let n_groups = self.schedule.n_groups();
+        self.slots.fail(w, |slots| p.reroute_feasible(slots, n_groups));
+    }
+
+    /// Apply every worker failure due by `t` — the coordinator's
+    /// token-boundary heartbeat — in chronological order (ties break on
+    /// the worker id), NOT injection order: an earlier death must be
+    /// applied first so a later reroute never targets a node that was
+    /// already physically dead, and identical plans written in different
+    /// `--fail` flag orders replay identically. Mid-iteration deaths are
+    /// caught lazily by the failover helpers below.
+    fn apply_due_failures(&mut self, t: Ms) {
+        loop {
+            let due = self
+                .pending_fail
+                .iter()
+                .filter(|&&(_, at)| at <= t)
+                .copied()
+                .min_by(|a, b| {
+                    a.1.partial_cmp(&b.1)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.0.cmp(&b.0))
+                });
+            match due {
+                Some((w, at)) => self.apply_worker_failure(w, at),
+                None => break,
+            }
+        }
+    }
+
+    fn apply_shadow_failure(&mut self) {
+        if let Some(at) = self.pending_shadow.take() {
+            self.cluster.fail_shadow(at);
+            self.shadow_free = self.shadow_free.max(at);
+        }
+    }
+
+    /// Has the shadow node failed by time `t`? Applies the failure on
+    /// first notice; idempotent afterwards.
+    fn shadow_dead_by(&mut self, t: Ms) -> bool {
+        if let Some(at) = self.pending_shadow {
+            if at <= t {
+                self.apply_shadow_failure();
+            }
+        }
+        !self.cluster.shadow.is_alive()
+    }
+
+    /// Book one expert load for slot `(layer, slot)`, rerouting around
+    /// node deaths: a worker already dead when the load would be
+    /// dispatched was skipped by the slot map; a worker that dies
+    /// mid-transfer freezes at the failure instant, and the coordinator
+    /// re-dispatches the load to the slot's replacement one LAN
+    /// notification later. `respect_residency` gates the transfer start
+    /// behind the target's previous expert eviction (prediction-driven
+    /// and conventional reactive loads); mispredict reloads skip it,
+    /// exactly like the seed's reload path. Returns (worker, load done,
+    /// link free_at before the booking).
+    fn load_with_failover(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        mut earliest: Ms,
+        respect_residency: bool,
+    ) -> (usize, Ms, Ms) {
+        let bytes = self.cluster.profile.expert_bytes;
+        let lan_lat = self.cluster.profile.lan_lat_ms;
+        loop {
+            let w = self.slots.worker_for(layer, slot);
+            if let Some(at) = self.pending_worker_fail(w) {
+                if at <= earliest {
+                    self.apply_worker_failure(w, at);
+                    continue;
+                }
+            }
+            let start_at = if respect_residency {
+                earliest.max(self.workers[w].last_ec_end)
+            } else {
+                earliest
+            };
+            let free_before = self.cluster.workers[w].pcie.free_at();
+            let (_, done) = self.cluster.expert_load(w, start_at, bytes);
+            if let Some(at) = self.pending_worker_fail(w) {
+                if at < done {
+                    // The transfer dies with the node: the link freezes at
+                    // the failure instant; the replacement gets the load
+                    // after the failure notice reaches the coordinator.
+                    self.apply_worker_failure(w, at);
+                    self.failovers += 1;
+                    earliest = earliest.max(at + lan_lat);
+                    continue;
+                }
+            }
+            self.cluster.workers[w].alloc(bytes as u64);
+            return (w, done, free_before);
+        }
+    }
+
+    /// Gate result disagreed with a prediction-driven load that completed
+    /// at `done`: evict the wrong expert and cancel whatever is still in
+    /// flight on the link. Only the frontier transfer on a link can be
+    /// cancelled mid-flight (an earlier wasted transfer already completed
+    /// behind it and is simply evicted), and the cancellation never
+    /// rewinds the link below work queued ahead of the aborted transfer
+    /// (`free_before`). A worker that died meanwhile already lost both
+    /// the expert and the transfer with the node.
+    fn abort_predicted(&mut self, w: usize, done: Ms, reactive_t: Ms, free_before: Ms) {
+        if let Some(at) = self.pending_worker_fail(w) {
+            if at <= reactive_t {
+                self.apply_worker_failure(w, at);
+            }
+        }
+        if self.cluster.workers[w].is_alive() {
+            let bytes = self.cluster.profile.expert_bytes as u64;
+            self.cluster.workers[w].dealloc(bytes);
+            if self.cluster.workers[w].pcie.free_at() <= done {
+                self.cluster.workers[w].pcie.preempt(reactive_t.max(free_before));
+            }
+        }
+    }
+
+    /// Book the expert compute for slot `(layer, slot)` on `holder` (the
+    /// worker its expert was loaded on). If the holder dies before the
+    /// compute finishes, the expert is lost with the node: the slot's
+    /// replacement re-loads it (one LAN notification after the failure)
+    /// and computes there. Evicts the expert after the compute
+    /// (cacheless) and advances the worker's residency clock. Returns the
+    /// compute end.
+    fn compute_with_failover(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        mut holder: usize,
+        mut earliest: Ms,
+        base_ms: Ms,
+    ) -> Ms {
+        let bytes = self.cluster.profile.expert_bytes as u64;
+        let lan_lat = self.cluster.profile.lan_lat_ms;
+        loop {
+            // The holder may have died since its load completed (its own
+            // pending failure applied below, or another slot's failover):
+            // the expert is lost with the node, so the slot's replacement
+            // re-loads and recomputes. This branch is the single counting
+            // point for compute-side failovers — every compute recovery
+            // (including a mid-compute abort, which re-enters here) passes
+            // through it exactly once.
+            if let Some(at) = self.cluster.workers[holder].failed_at() {
+                self.failovers += 1;
+                let (w, done, _) = self.load_with_failover(layer, slot, at + lan_lat, false);
+                holder = w;
+                earliest = earliest.max(done);
+                continue;
+            }
+            if let Some(at) = self.pending_worker_fail(holder) {
+                if at <= earliest {
+                    self.apply_worker_failure(holder, at);
+                    continue;
+                }
+            }
+            let (_, ec_end) = self.cluster.expert_compute(holder, earliest, base_ms);
+            if let Some(at) = self.pending_worker_fail(holder) {
+                if at < ec_end {
+                    // Node dies mid-compute: freeze it; the dead-holder
+                    // branch above re-books (and counts) the recovery.
+                    self.apply_worker_failure(holder, at);
+                    continue;
+                }
+            }
+            self.cluster.workers[holder].dealloc(bytes);
+            self.workers[holder].last_ec_end = self.workers[holder].last_ec_end.max(ec_end);
+            return ec_end;
+        }
+    }
+
     /// One decode iteration: returns (output token, logits, per-layer
     /// correct-prediction counts).
     ///
     /// NOTE: `decode_iteration_batch` mirrors this pipeline for N
     /// sessions and must stay in timing lockstep — a batch of one books
     /// the exact same resource sequence (pinned by
-    /// `batch_of_one_matches_sequential_odmoe`). Change them together.
+    /// `batch_of_one_matches_sequential_odmoe`, healthy and under
+    /// failures). Both paths share the phase structure (predicted loads,
+    /// gate-result aborts, reloads, computes) and the failover helpers.
+    /// Change them together.
     fn decode_iteration(
         &mut self,
         token: u32,
@@ -178,20 +497,30 @@ impl<'rt> OdMoeEngine<'rt> {
         let p = self.cluster.profile.clone();
         let n_layers = cfg.n_layers;
         let t0 = self.now;
+        self.apply_due_failures(t0);
+        let shadow_alive = self.cfg.predictor != PredictorMode::Sep || !self.shadow_dead_by(t0);
 
         // ---- Shadow node: alignment + emulation (numerics first). -------
         let mut pred_routes: Vec<Option<Vec<usize>>> = vec![None; n_layers];
         let mut pred_avail: Vec<Ms> = vec![f64::INFINITY; n_layers];
         match self.cfg.predictor {
-            PredictorMode::Sep => {
+            PredictorMode::Sep if shadow_alive => {
+                let cutoff = self.pending_shadow.unwrap_or(f64::INFINITY);
                 let sep = self.sep.as_mut().unwrap();
                 sep.begin_token(&self.main, token)?;
                 // Late departure (Fig. 5): alignment payload must reach the
                 // shadow node before S_0 starts.
                 let align_delay = sep.alignment_delay_ms(&p);
                 let start = self.shadow_free.max(t0 + align_delay);
+                let mut died = false;
                 for l in 0..n_layers {
                     let done = start + (l as f64 + 1.0) * p.t_shadow_layer_ms;
+                    if done > cutoff {
+                        // Shadow dies mid-emulation: layers it never
+                        // reached stay unpredicted (reactive loads).
+                        died = true;
+                        break;
+                    }
                     pred_avail[l] = done + p.lan_lat_ms; // notify worker
                     pred_routes[l] = Some(sep.predict(l).experts.clone());
                     self.cluster.trace.push(
@@ -202,8 +531,16 @@ impl<'rt> OdMoeEngine<'rt> {
                         "S",
                     );
                 }
-                self.shadow_free = start + n_layers as f64 * p.t_shadow_layer_ms;
+                if died {
+                    self.apply_shadow_failure();
+                } else {
+                    self.shadow_free = start + n_layers as f64 * p.t_shadow_layer_ms;
+                }
             }
+            // Dead shadow: no predictions — every load degrades to the
+            // reactive (gate-result-driven) no-prefetch path; the token
+            // stream is unchanged because routes come from the main model.
+            PredictorMode::Sep => {}
             PredictorMode::Random => {
                 let r = self.random.as_mut().unwrap();
                 for l in 0..n_layers {
@@ -218,7 +555,8 @@ impl<'rt> OdMoeEngine<'rt> {
         let rec = self.main.decode_step(token)?;
 
         // ---- Virtual-time pipeline over main + workers (Fig. 2). --------
-        let mut m_ready = t0; // when the main node may start M_l
+        let group_size = self.slots.group_size();
+        let mut m_ready = t0;
         let mut correct = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
             // M_l: attention + gating on the main node.
@@ -234,50 +572,44 @@ impl<'rt> OdMoeEngine<'rt> {
 
             // Expert placement: slot j of the group takes predicted[j]
             // (or the actual expert when prediction is late/absent/wrong).
-            let group = self.schedule.group_of(l);
-            let mut expert_ready: Ms = 0.0;
-            for slot in 0..self.schedule.group_size {
-                let w = self.schedule.worker_for(l, slot);
-                let ws = self.workers[w];
-                let predicted_e = predicted.get(slot).copied();
-                let actual_e = actual.experts[slot];
-                // The prediction-driven load can begin once the prediction
-                // reached the worker AND its previous expert was evicted.
-                // The reactive (gate-result-driven) path starts at M_l end.
-                let reactive_t = m_end + p.lan_lat_ms;
-                let ready = match predicted_e {
+            // The prediction-driven load can begin once the prediction
+            // reached the worker AND its previous expert was evicted; the
+            // reactive (gate-result-driven) path starts at M_l end.
+            let reactive_t = m_end + p.lan_lat_ms;
+            // Phase 1 — prediction-driven loads, one per slot.
+            let mut holders: Vec<(usize, Ms)> = vec![(usize::MAX, 0.0); group_size];
+            let mut aborts: Vec<(usize, Ms, Ms)> = Vec::new(); // (worker, done, free_before)
+            let mut pending: Vec<(usize, bool)> = Vec::new(); // (slot, residency-gated)
+            for slot in 0..group_size {
+                match predicted.get(slot).copied() {
                     Some(pe) if pred_avail[l] <= reactive_t => {
-                        let start_at = pred_avail[l].max(ws.last_ec_end);
-                        let (_, load_done) =
-                            self.cluster.expert_load(w, start_at, p.expert_bytes);
-                        self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                        let (w, done, free_before) =
+                            self.load_with_failover(l, slot, pred_avail[l], true);
                         if actual.experts.contains(&pe) {
-                            load_done
+                            holders[slot] = (w, done);
                         } else {
-                            // Mispredict: abort any in-flight transfer the
-                            // moment the gate disagrees, evict, and reload
-                            // the correct expert.
-                            self.cluster.workers[w].dealloc(p.expert_bytes as u64);
-                            self.cluster.workers[w].pcie.preempt(reactive_t);
-                            let (_, reload_done) =
-                                self.cluster.expert_load(w, reactive_t, p.expert_bytes);
-                            self.cluster.workers[w].alloc(p.expert_bytes as u64);
-                            reload_done
+                            // Mispredict: the reload is gate-driven (the
+                            // link is cancelled first, so no residency
+                            // wait — the seed's reload path).
+                            aborts.push((w, done, free_before));
+                            pending.push((slot, false));
                         }
                     }
-                    _ => {
-                        // No usable prediction: load the actual expert on
-                        // the gate result (conventional offloading path).
-                        let start_at = reactive_t.max(ws.last_ec_end);
-                        let (_, load_done) =
-                            self.cluster.expert_load(w, start_at, p.expert_bytes);
-                        self.cluster.workers[w].alloc(p.expert_bytes as u64);
-                        load_done
-                    }
-                };
-                let _ = actual_e;
-                expert_ready = expert_ready.max(ready);
+                    // No usable prediction: load the actual expert on the
+                    // gate result (conventional offloading path).
+                    _ => pending.push((slot, true)),
+                }
             }
+            // Phase 2 — gate result: cancel mispredicted transfers.
+            for &(w, done, free_before) in &aborts {
+                self.abort_predicted(w, done, reactive_t, free_before);
+            }
+            // Phase 3 — reloads + reactive loads.
+            for &(slot, residency) in &pending {
+                let (w, done, _) = self.load_with_failover(l, slot, reactive_t, residency);
+                holders[slot] = (w, done);
+            }
+            let expert_ready = holders.iter().fold(0.0f64, |m, &(_, r)| m.max(r));
 
             // Embedding ships to the group after M_l.
             let embed_arrival = self.cluster.lan_send(m_end, p.embed_msg_bytes, "embed");
@@ -286,33 +618,22 @@ impl<'rt> OdMoeEngine<'rt> {
             if expert_ready > embed_arrival {
                 self.cluster.trace.push(
                     EventKind::Stall,
-                    self.cluster.workers[self.schedule.worker_for(l, 0)].id,
+                    self.cluster.workers[self.slots.worker_for(l, 0)].id,
                     embed_arrival,
                     expert_ready,
                     "stall",
                 );
             }
 
-            // EC_l on both devices of the group in parallel.
+            // EC_l on the group's devices (parallel while slots map to
+            // distinct workers; serialized where failures concentrated
+            // slots on one survivor).
             let mut ec_end_max = ec_earliest;
-            for slot in 0..self.schedule.group_size {
-                let w = self.schedule.worker_for(l, slot);
-                let ec_dur = p.t_expert_gpu_ms * self.cluster.workers[w].gpu_slowdown;
-                let (ec_start, ec_end) =
-                    self.cluster.workers[w].gpu.acquire(ec_earliest, ec_dur);
-                self.cluster.trace.push(
-                    EventKind::ExpertCompute,
-                    self.cluster.workers[w].id,
-                    ec_start,
-                    ec_end,
-                    "EC",
-                );
-                // Cacheless: evict immediately after compute.
-                self.cluster.workers[w].dealloc(p.expert_bytes as u64);
-                self.workers[w].last_ec_end = ec_end;
+            for (slot, &(w, _)) in holders.iter().enumerate() {
+                let ec_end =
+                    self.compute_with_failover(l, slot, w, ec_earliest, p.t_expert_gpu_ms);
                 ec_end_max = ec_end_max.max(ec_end);
             }
-            let _ = group;
 
             // Combined expert output returns to the main node.
             m_ready = self.cluster.lan_send(ec_end_max, p.embed_msg_bytes, "embed-back");
@@ -346,6 +667,13 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
             s.reset();
         }
         self.cluster.reset();
+        self.slots = SlotMap::from_schedule(&self.schedule);
+        self.pending_fail.clear();
+        self.pending_shadow = None;
+        for f in self.plan.clone() {
+            self.arm(f);
+        }
+        self.failovers = 0;
         for w in &mut self.workers {
             w.last_ec_end = 0.0;
         }
@@ -416,7 +744,8 @@ impl<'rt> OdMoeEngine<'rt> {
     /// distinct expert per layer, so PCIe traffic amortizes across the
     /// batch. With one active session this books exactly the sequence of
     /// resource acquisitions `decode_iteration` would — the `--max-batch 1
-    /// == sequential` equivalence the tests pin down.
+    /// == sequential` equivalence the tests pin down, healthy and under
+    /// injected failures (both paths share the failover helpers).
     fn decode_iteration_batch(
         &mut self,
         batch: &mut BatchState,
@@ -428,6 +757,8 @@ impl<'rt> OdMoeEngine<'rt> {
         let n_layers = self.main.cfg().n_layers;
         let b = active.len();
         let t0 = self.now;
+        self.apply_due_failures(t0);
+        let shadow_alive = self.cfg.predictor != PredictorMode::Sep || !self.shadow_dead_by(t0);
 
         // ---- Numerics: shadow + main model for every active session. ----
         let mut recs: Vec<StepRecord> = Vec::with_capacity(b);
@@ -435,7 +766,7 @@ impl<'rt> OdMoeEngine<'rt> {
         for &s in active {
             let token = batch.slot(s).next_token;
             batch.activate(s, &mut self.main);
-            if self.cfg.predictor == PredictorMode::Sep {
+            if self.cfg.predictor == PredictorMode::Sep && shadow_alive {
                 let sep = &mut self.sep_slots[s];
                 sep.begin_token(&self.main, token)?;
                 align_bytes += sep.alignment_bytes(&p);
@@ -453,7 +784,8 @@ impl<'rt> OdMoeEngine<'rt> {
         let mut pred: Vec<Vec<Option<Vec<usize>>>> = vec![vec![None; n_layers]; b];
         let mut pred_avail: Vec<Ms> = vec![f64::INFINITY; n_layers];
         match self.cfg.predictor {
-            PredictorMode::Sep => {
+            PredictorMode::Sep if shadow_alive => {
+                let cutoff = self.pending_shadow.unwrap_or(f64::INFINITY);
                 let delay = if align_bytes == 0.0 {
                     0.0
                 } else {
@@ -461,8 +793,13 @@ impl<'rt> OdMoeEngine<'rt> {
                 };
                 let start = self.shadow_free.max(t0 + delay);
                 let t_layer = p.batched_ms(p.t_shadow_layer_ms, b);
+                let mut died = false;
                 for l in 0..n_layers {
                     let done = start + (l as f64 + 1.0) * t_layer;
+                    if done > cutoff {
+                        died = true;
+                        break;
+                    }
                     pred_avail[l] = done + p.lan_lat_ms;
                     for (k, &s) in active.iter().enumerate() {
                         pred[k][l] = Some(self.sep_slots[s].predict(l).experts.clone());
@@ -475,8 +812,14 @@ impl<'rt> OdMoeEngine<'rt> {
                         "S",
                     );
                 }
-                self.shadow_free = start + n_layers as f64 * t_layer;
+                if died {
+                    self.apply_shadow_failure();
+                } else {
+                    self.shadow_free = start + n_layers as f64 * t_layer;
+                }
             }
+            // Dead shadow: reactive fallback, same as sequential decode.
+            PredictorMode::Sep => {}
             PredictorMode::Random => {
                 let r = self.random.as_mut().unwrap();
                 for l in 0..n_layers {
@@ -490,12 +833,11 @@ impl<'rt> OdMoeEngine<'rt> {
         }
 
         // ---- Main/worker pipeline per layer (Fig. 2, batched). ----------
-        let group_size = self.schedule.group_size;
+        let group_size = self.slots.group_size();
         let mut m_ready = t0;
         let mut stall_iter: Ms = 0.0;
         let mut correct: Vec<Vec<usize>> = vec![Vec::with_capacity(n_layers); b];
         for l in 0..n_layers {
-            let group_start = self.schedule.worker_for(l, 0);
             // M_l: batched attention + gating for all B tokens.
             let (m_start, m_end) = self
                 .cluster
@@ -523,83 +865,65 @@ impl<'rt> OdMoeEngine<'rt> {
             };
 
             // Phase 1 — prediction-driven loads: ONE per distinct predicted
-            // expert, round-robin over the layer's group workers.
-            // (expert, worker, done, link free_at before this booking)
-            let mut pred_loaded: Vec<(usize, usize, Ms, Ms)> = Vec::new();
-            let mut last_booking: Vec<Option<usize>> = vec![None; group_size];
+            // expert, round-robin over the layer's slots (the slot map
+            // routes each slot to its current live worker).
+            // (expert, slot, worker, done, link free_at before booking)
+            let mut pred_loaded: Vec<(usize, usize, usize, Ms, Ms)> = Vec::new();
             for (i, &(pe, _)) in pred_set.iter().enumerate() {
                 let slot = i % group_size;
-                let w = group_start + slot;
-                let start_at = pred_avail[l].max(self.workers[w].last_ec_end);
-                let free_before = self.cluster.workers[w].pcie.free_at();
-                let (_, done) = self.cluster.expert_load(w, start_at, p.expert_bytes);
-                self.cluster.workers[w].alloc(p.expert_bytes as u64);
-                pred_loaded.push((pe, w, done, free_before));
-                last_booking[slot] = Some(i);
+                let (w, done, free_before) =
+                    self.load_with_failover(l, slot, pred_avail[l], true);
+                pred_loaded.push((pe, slot, w, done, free_before));
             }
 
-            // Phase 2 — gate result: abort mispredicted transfers. Only
-            // the last in-flight transfer on a link can be cancelled
-            // mid-flight; earlier wasted transfers already completed
-            // behind it and are simply evicted. The cancellation never
-            // rewinds the link below work queued ahead of the aborted
-            // transfer (`free_before`), so confirmed loads keep their
-            // booked span; at batch 1 the pipeline guarantees
-            // `free_before < reactive_t` and this is exactly the
-            // sequential `preempt(reactive_t)`.
+            // Phase 2 — gate result: abort mispredicted transfers (only
+            // the frontier transfer on a link can be cancelled mid-flight;
+            // earlier wasted transfers already completed behind it and are
+            // simply evicted — see `abort_predicted`). At batch 1 this is
+            // exactly the sequential mispredict abort.
             let in_actual = |e: usize| actual_set.iter().any(|&(a, _)| a == e);
-            for (i, &(pe, w, _, free_before)) in pred_loaded.iter().enumerate() {
+            for &(pe, _, w, done, free_before) in &pred_loaded {
                 if in_actual(pe) {
                     continue;
                 }
                 counters.aborted_loads += 1;
-                self.cluster.workers[w].dealloc(p.expert_bytes as u64);
-                if last_booking[i % group_size] == Some(i) {
-                    self.cluster.workers[w].pcie.preempt(reactive_t.max(free_before));
-                }
+                self.abort_predicted(w, done, reactive_t, free_before);
             }
 
             // Phase 3 — place every distinct actual expert: inherit the
             // confirmed predicted load, else load reactively on the
-            // least-loaded group worker. One load serves every session
-            // that routed to the expert — the amortization at the heart
-            // of batched decode.
+            // least-loaded slot. One load serves every session that
+            // routed to the expert — the amortization at the heart of
+            // batched decode.
             let mut ec_count: Vec<usize> = vec![0; group_size];
-            let mut placed: Vec<(usize, usize, Ms)> = Vec::new(); // (count, worker, ready)
-            let mut pending: Vec<(usize, usize)> = Vec::new();
+            let mut placed: Vec<(usize, usize, usize, Ms)> = Vec::new(); // (rows, slot, worker, ready)
+            let mut pending: Vec<usize> = Vec::new(); // row counts needing a load
             for &(ae, cnt) in &actual_set {
-                match pred_loaded.iter().find(|&&(pe, _, _, _)| pe == ae) {
-                    Some(&(_, w, done, _)) => {
-                        ec_count[w - group_start] += 1;
+                match pred_loaded.iter().find(|&&(pe, _, _, _, _)| pe == ae) {
+                    Some(&(_, slot, w, done, _)) => {
+                        ec_count[slot] += 1;
                         counters.expert_loads += 1;
-                        placed.push((cnt, w, done));
+                        placed.push((cnt, slot, w, done));
                     }
-                    None => pending.push((ae, cnt)),
+                    None => pending.push(cnt),
                 }
             }
-            for (_, cnt) in pending {
+            for cnt in pending {
                 let slot = (0..group_size)
                     .min_by_key(|&sl| (ec_count[sl], sl))
-                    .expect("group has at least one worker");
-                let w = group_start + slot;
+                    .expect("group has at least one slot");
                 ec_count[slot] += 1;
                 // Reactive path: on the gate result. With a usable (but
-                // wrong) prediction the link was just preempted, exactly
+                // wrong) prediction the link was just cancelled, exactly
                 // like the sequential mispredict reload; without one the
                 // load also waits for the previous expert's eviction.
-                let start_at = if usable {
-                    reactive_t
-                } else {
-                    reactive_t.max(self.workers[w].last_ec_end)
-                };
-                let (_, done) = self.cluster.expert_load(w, start_at, p.expert_bytes);
-                self.cluster.workers[w].alloc(p.expert_bytes as u64);
+                let (w, done, _) = self.load_with_failover(l, slot, reactive_t, !usable);
                 counters.expert_loads += 1;
-                placed.push((cnt, w, done));
+                placed.push((cnt, slot, w, done));
             }
 
             // Embeddings for all B tokens ship to the group after M_l.
-            let expert_ready = placed.iter().fold(0.0f64, |m, &(_, _, r)| m.max(r));
+            let expert_ready = placed.iter().fold(0.0f64, |m, &(_, _, _, r)| m.max(r));
             let embed_arrival =
                 self.cluster.lan_send(m_end, p.embed_msg_bytes * b as f64, "embed");
             let ec_earliest = embed_arrival.max(expert_ready);
@@ -607,7 +931,7 @@ impl<'rt> OdMoeEngine<'rt> {
             if expert_ready > embed_arrival {
                 self.cluster.trace.push(
                     EventKind::Stall,
-                    self.cluster.workers[group_start].id,
+                    self.cluster.workers[self.slots.worker_for(l, 0)].id,
                     embed_arrival,
                     expert_ready,
                     "stall",
@@ -617,19 +941,14 @@ impl<'rt> OdMoeEngine<'rt> {
             // EC_l: each distinct expert computes its routed tokens as one
             // batched FFN; a worker hosting several experts runs them
             // back to back (evicting each — cacheless — right after).
+            // Slot order matches the sequential EC loop at batch 1; the
+            // order is aggregate-neutral otherwise (per-link bookings
+            // commute under max).
+            placed.sort_by_key(|&(_, slot, _, _)| slot);
             let mut ec_end_max = ec_earliest;
-            for &(cnt, w, _) in &placed {
-                let ec_dur = p.expert_batch_ms(cnt) * self.cluster.workers[w].gpu_slowdown;
-                let (ec_start, ec_end) = self.cluster.workers[w].gpu.acquire(ec_earliest, ec_dur);
-                self.cluster.trace.push(
-                    EventKind::ExpertCompute,
-                    self.cluster.workers[w].id,
-                    ec_start,
-                    ec_end,
-                    "EC",
-                );
-                self.cluster.workers[w].dealloc(p.expert_bytes as u64);
-                self.workers[w].last_ec_end = self.workers[w].last_ec_end.max(ec_end);
+            for &(cnt, slot, w, _) in &placed {
+                let ec_end =
+                    self.compute_with_failover(l, slot, w, ec_earliest, p.expert_batch_ms(cnt));
                 ec_end_max = ec_end_max.max(ec_end);
             }
 
@@ -694,6 +1013,7 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
         }
         self.shadow_free = self.now;
         let decode_start = self.now;
+        let failovers_before = self.failovers;
 
         // ---- Decode: all sessions step together; the batch shrinks at
         // the token boundary where a session reaches its target. ---------
@@ -721,6 +1041,7 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
             sessions: out,
             expert_loads: counters.expert_loads,
             aborted_loads: counters.aborted_loads,
+            failovers: self.failovers - failovers_before,
             decode_tokens,
             decode_iterations,
             decode_span_ms: self.now - decode_start,
@@ -733,5 +1054,43 @@ fn fmt_period(p: usize) -> String {
         "∞".into()
     } else {
         p.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_spec_parses_worker_and_shadow() {
+        assert_eq!(
+            FailureSpec::parse("worker3@500").unwrap(),
+            FailureSpec::Worker { worker: 3, at_ms: 500.0 }
+        );
+        assert_eq!(
+            FailureSpec::parse("worker0@12.5ms").unwrap(),
+            FailureSpec::Worker { worker: 0, at_ms: 12.5 }
+        );
+        assert_eq!(
+            FailureSpec::parse("shadow@800ms").unwrap(),
+            FailureSpec::Shadow { at_ms: 800.0 }
+        );
+        assert_eq!(
+            FailureSpec::parse_list("worker1@10, shadow@20,").unwrap(),
+            vec![
+                FailureSpec::Worker { worker: 1, at_ms: 10.0 },
+                FailureSpec::Shadow { at_ms: 20.0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn failure_spec_rejects_garbage() {
+        assert!(FailureSpec::parse("worker3").is_err(), "missing time");
+        assert!(FailureSpec::parse("main@10").is_err(), "main node cannot fail");
+        assert!(FailureSpec::parse("worker@10").is_err(), "missing index");
+        assert!(FailureSpec::parse("workerx@10").is_err());
+        assert!(FailureSpec::parse("worker1@inf").is_err(), "non-finite time");
+        assert!(FailureSpec::parse("worker1@-5").is_err(), "negative time");
     }
 }

@@ -1,11 +1,14 @@
-//! Worker grouping + round-robin layer assignment (paper §3.1, Fig. 2)
-//! and the Eq. (1) I/O-bottleneck condition.
+//! Worker grouping + round-robin layer assignment (paper §3.1, Fig. 2),
+//! the Eq. (1) I/O-bottleneck condition, and the dynamic [`SlotMap`] that
+//! routes expert slots around failed workers.
 
 use crate::cluster::{HardwareProfile, Ms};
 
 /// Static group schedule: `n_workers` split into groups of `group_size`
 /// (= top-k, one expert per device); MoE layers are assigned to groups
-/// round-robin.
+/// round-robin. This is the healthy-cluster *blueprint*; the engine
+/// routes through a [`SlotMap`] built from it, which can reassign a dead
+/// worker's slots at runtime.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GroupSchedule {
     pub n_workers: usize,
@@ -29,15 +32,19 @@ impl GroupSchedule {
         layer % self.n_groups()
     }
 
-    /// Worker ids of a group.
+    /// Worker ids of a group. Panics on an out-of-range group — callers
+    /// must map layers through [`GroupSchedule::group_of`] first (the old
+    /// silent `group % n_groups` wrap hid indexing bugs while
+    /// `worker_for` did not wrap, so the two could disagree).
     pub fn workers_of(&self, group: usize) -> std::ops::Range<usize> {
-        let g = group % self.n_groups();
-        g * self.group_size..(g + 1) * self.group_size
+        assert!(group < self.n_groups(), "group {group} out of range ({} groups)", self.n_groups());
+        group * self.group_size..(group + 1) * self.group_size
     }
 
     /// The worker that hosts slot `slot` (0..group_size) of `layer`.
+    /// Panics on an out-of-range slot.
     pub fn worker_for(&self, layer: usize, slot: usize) -> usize {
-        debug_assert!(slot < self.group_size);
+        assert!(slot < self.group_size, "slot {slot} out of range (group size {})", self.group_size);
         self.group_of(layer) * self.group_size + slot
     }
 
@@ -52,6 +59,139 @@ impl GroupSchedule {
     /// precision? (The §3.1 feasibility check.)
     pub fn io_bottleneck_free(&self, p: &HardwareProfile) -> bool {
         p.expert_load_ms(1.0) <= self.t_maxload(p.t_main_ms(), p.t_worker_ms())
+    }
+}
+
+/// Dynamic slot→worker assignment: the runtime counterpart of
+/// [`GroupSchedule`]. Construction is first-fit — groups of `group_size`
+/// fill from worker 0, and when the split is uneven the leftover workers
+/// start as idle spares (relaxing the blueprint's equal-split
+/// requirement). When a worker fail-stops, [`SlotMap::fail`] reassigns
+/// each of its slots to a survivor, preferring targets whose *projected*
+/// per-cycle load still fits the Eq. (1) no-stall window
+/// `N·t_M + (N−1)·t_W` (a worker serving `k` slots must fit `k` expert
+/// loads into the one-slot window), and falling back to the least-loaded
+/// survivor when no target fits — the same "which node serves this
+/// expert, under a deadline" decision SlimCaching/HOBBIT treat as a
+/// first-class online choice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotMap {
+    group_size: usize,
+    /// `assign[g * group_size + s]` = worker currently hosting slot `s`
+    /// of group `g`.
+    assign: Vec<usize>,
+    alive: Vec<bool>,
+}
+
+impl SlotMap {
+    /// First-fit identity assignment over `n_workers` (which need not
+    /// split evenly; leftovers become spares).
+    pub fn new(n_workers: usize, group_size: usize) -> Self {
+        assert!(
+            group_size > 0 && n_workers >= group_size,
+            "need at least one full group ({n_workers} workers, group {group_size})"
+        );
+        let n_groups = n_workers / group_size;
+        Self {
+            group_size,
+            assign: (0..n_groups * group_size).collect(),
+            alive: vec![true; n_workers],
+        }
+    }
+
+    pub fn from_schedule(s: &GroupSchedule) -> Self {
+        Self::new(s.n_workers, s.group_size)
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.assign.len() / self.group_size
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn group_of(&self, layer: usize) -> usize {
+        layer % self.n_groups()
+    }
+
+    /// The worker currently hosting slot `slot` of `layer`.
+    pub fn worker_for(&self, layer: usize, slot: usize) -> usize {
+        assert!(slot < self.group_size, "slot {slot} out of range (group size {})", self.group_size);
+        self.assign[self.group_of(layer) * self.group_size + slot]
+    }
+
+    /// Workers currently serving a group's slots (may repeat a worker
+    /// after failures concentrate slots).
+    pub fn workers_of(&self, group: usize) -> Vec<usize> {
+        assert!(group < self.n_groups(), "group {group} out of range ({} groups)", self.n_groups());
+        self.assign[group * self.group_size..(group + 1) * self.group_size].to_vec()
+    }
+
+    pub fn is_alive(&self, w: usize) -> bool {
+        self.alive[w]
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Slots currently assigned to worker `w` (its per-cycle load: one
+    /// expert load + compute per assigned slot every `n_groups` layers).
+    pub fn load_of(&self, w: usize) -> usize {
+        self.assign.iter().filter(|&&x| x == w).count()
+    }
+
+    /// Mark `w` dead and reassign each of its slots to a survivor.
+    /// `feasible(slots)` answers whether a worker serving `slots` expert
+    /// slots still fits all of its per-cycle loads in the Eq. (1)
+    /// no-stall window — pass
+    /// [`HardwareProfile::reroute_feasible`] with the schedule's group
+    /// count, the single source of truth for that predicate. Candidates
+    /// whose *projected* count stays feasible are preferred
+    /// (least-loaded, then lowest id); otherwise the least-loaded
+    /// survivor takes the slot anyway (degraded but live). Returns the
+    /// (group, slot, new worker) moves. Panics if no worker survives.
+    pub fn fail(
+        &mut self,
+        w: usize,
+        feasible: impl Fn(usize) -> bool,
+    ) -> Vec<(usize, usize, usize)> {
+        assert!(w < self.alive.len(), "worker {w} out of range");
+        if !self.alive[w] {
+            return Vec::new();
+        }
+        self.alive[w] = false;
+        assert!(self.n_alive() > 0, "no surviving workers to reroute to");
+        let mut moves = Vec::new();
+        for i in 0..self.assign.len() {
+            if self.assign[i] != w {
+                continue;
+            }
+            let target = self.choose_target(&feasible);
+            self.assign[i] = target;
+            moves.push((i / self.group_size, i % self.group_size, target));
+        }
+        moves
+    }
+
+    /// Least-loaded feasible survivor, else least-loaded survivor
+    /// (ties break on the lowest worker id — deterministic).
+    fn choose_target(&self, feasible: &impl Fn(usize) -> bool) -> usize {
+        let candidates = || {
+            (0..self.alive.len())
+                .filter(|&c| self.alive[c])
+                .map(|c| (self.load_of(c), c))
+        };
+        let best = candidates()
+            .filter(|&(slots, _)| feasible(slots + 1))
+            .min();
+        let (_, target) = best.or_else(|| candidates().min()).expect("a survivor exists");
+        target
     }
 }
 
@@ -101,5 +241,106 @@ mod tests {
     #[should_panic(expected = "equal groups")]
     fn uneven_split_rejected() {
         GroupSchedule::new(7, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn workers_of_rejects_out_of_range_group() {
+        // The old implementation silently wrapped `group % n_groups()`
+        // while `worker_for` did not — the two could disagree.
+        GroupSchedule::new(8, 2).workers_of(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn worker_for_rejects_out_of_range_slot() {
+        GroupSchedule::new(8, 2).worker_for(0, 2);
+    }
+
+    #[test]
+    fn slotmap_identity_matches_blueprint() {
+        let s = GroupSchedule::new(8, 2);
+        let m = SlotMap::from_schedule(&s);
+        for l in 0..16 {
+            for slot in 0..2 {
+                assert_eq!(m.worker_for(l, slot), s.worker_for(l, slot));
+            }
+        }
+        assert_eq!(m.n_groups(), 4);
+        assert_eq!(m.n_alive(), 8);
+    }
+
+    #[test]
+    fn slotmap_first_fit_accepts_uneven_split_with_spares() {
+        // 7 workers, groups of 2: three full groups, worker 6 a spare.
+        let m = SlotMap::new(7, 2);
+        assert_eq!(m.n_groups(), 3);
+        assert_eq!(m.load_of(6), 0, "leftover worker starts idle");
+        // A failure reroutes onto the idle spare first (least loaded).
+        let mut m = m;
+        let moves = m.fail(1, |slots| slots as f64 * 10.0 <= 100.0);
+        assert_eq!(moves, vec![(0, 1, 6)]);
+        assert_eq!(m.worker_for(0, 1), 6);
+    }
+
+    #[test]
+    fn fail_prefers_window_feasible_target() {
+        // load 10, window 25: a worker with 1 slot projects 2*10 <= 25
+        // (feasible); with 2 slots projects 3*10 > 25. Kill two workers:
+        // the second reroute must skip the now-2-slot worker 0 and pick
+        // the feasible least-loaded survivor.
+        let fits = |slots: usize| slots as f64 * 10.0 <= 25.0;
+        let mut m = SlotMap::new(8, 2);
+        let moves = m.fail(1, fits);
+        assert_eq!(moves, vec![(0, 1, 0)], "least-loaded feasible = worker 0");
+        assert_eq!(m.load_of(0), 2);
+        let moves = m.fail(2, fits);
+        assert_eq!(moves, vec![(1, 0, 3)], "worker 0 now infeasible; 3 is next");
+    }
+
+    #[test]
+    fn fail_falls_back_to_least_loaded_when_nothing_fits() {
+        // Window smaller than a single load: nothing is ever feasible,
+        // but slots must still land somewhere (least-loaded, lowest id).
+        let never = |_slots: usize| false;
+        let mut m = SlotMap::new(4, 2);
+        let moves = m.fail(3, never);
+        assert_eq!(moves, vec![(1, 1, 0)]);
+        assert_eq!(m.load_of(0), 2);
+        // Worker of the same group can end up hosting both slots.
+        let moves = m.fail(2, never);
+        assert_eq!(moves, vec![(1, 0, 1)]);
+        assert_eq!(m.workers_of(1), vec![1, 0]);
+    }
+
+    #[test]
+    fn fail_uses_the_profile_feasibility_predicate() {
+        // The engine passes HardwareProfile::reroute_feasible directly:
+        // on the knife's-edge paper profile nothing absorbs a second
+        // slot, so the reroute falls back to the least-loaded survivor.
+        let p = HardwareProfile::rtx3090();
+        let mut m = SlotMap::new(8, 2);
+        let moves = m.fail(7, |slots| p.reroute_feasible(slots, 4));
+        assert_eq!(moves, vec![(3, 1, 0)], "least-loaded fallback, lowest id");
+    }
+
+    #[test]
+    fn fail_is_idempotent_and_survivors_cover_all_slots() {
+        let mut m = SlotMap::new(8, 2);
+        m.fail(5, |_| true);
+        assert!(m.fail(5, |_| true).is_empty(), "second failure is a no-op");
+        for g in 0..m.n_groups() {
+            for w in m.workers_of(g) {
+                assert!(m.is_alive(w), "group {g} routed to dead worker {w}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no surviving workers")]
+    fn losing_every_worker_panics() {
+        let mut m = SlotMap::new(2, 2);
+        m.fail(0, |_| true);
+        m.fail(1, |_| true);
     }
 }

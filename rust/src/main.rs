@@ -9,6 +9,8 @@
 //!                   [--slo-ttft-ms MS] [--slo-tpot-ms MS] [--tenants N]
 //!                   [--preempt-ms MS] [--mem-gb G]
 //!                   [--batch-sweep [--batches B1,B2,..] [--distinct-prompts]]
+//!                   [--fail worker3@500,shadow@800] [--fail-replica 0@500]
+//!                   [--failover-sweep [--max-failed K] [--fail-at-ms MS]]
 //! od-moe recall     [--prompts N] [--out-tokens N]    SEP recall curves (Fig. 3/6)
 //! od-moe speed      [--prompts N] [--out-tokens N]    decoding speed (Fig. 8/9/10)
 //! od-moe predictors [--prompts N] [--out-tokens N]    Table 1 comparison
@@ -21,7 +23,8 @@
 //! baseline and writes `BENCH_serve.json` (see `examples/load_test.rs`);
 //! `serve --batch-sweep` sweeps batched decode over batch size x arrival
 //! rate and writes `BENCH_batch.json` (batch 1 = the sequential
-//! baseline).
+//! baseline); `serve --failover-sweep` decodes under 0..=K fail-stopped
+//! workers and writes `BENCH_failover.json` (DESIGN.md §8).
 //! ```
 
 use anyhow::{bail, Result};

@@ -41,6 +41,22 @@ pub fn parse_rates(s: &str) -> Result<Vec<f64>> {
     Ok(rates)
 }
 
+/// Parse a `--fail-replica 0@500,1@900ms` list into
+/// [`SchedulerConfig::replica_failures`] entries. The `@<ms>` grammar is
+/// shared with the engine's failure specs
+/// (`crate::coordinator::odmoe::parse_at_ms`).
+pub fn parse_replica_failures(s: &str) -> Result<Vec<(usize, f64)>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let (ri, at) = crate::coordinator::odmoe::parse_at_ms(p.trim())?;
+            let ri: usize =
+                ri.parse().with_context(|| format!("bad replica index in {p:?}"))?;
+            Ok((ri, at))
+        })
+        .collect()
+}
+
 /// Parse a `--batches 1,2,4,8` list. Batch 1 — the sequential baseline —
 /// is prepended when absent, so every sweep carries its own reference.
 pub fn parse_batches(s: &str) -> Result<Vec<usize>> {
@@ -68,7 +84,8 @@ pub fn parse_batches(s: &str) -> Result<Vec<usize>> {
 /// single class, or interactive + batch), `--policy fcfs|sjf|edf`,
 /// `--replicas`, `--mem-gb`, `--preempt-ms`, `--max-batch` (1 =
 /// sequential dispatch), `--shared-prompt` (every request decodes the
-/// same prompt — the shared-routing workload).
+/// same prompt — the shared-routing workload), `--fail-replica N@MS`
+/// (fail-stop replica N at virtual time MS; its sessions re-queue).
 pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, SchedulerConfig, f64)> {
     // Back-compat: the old FCFS server took `--arrival-gap-ms`.
     let rate = match a.get("arrival-gap-ms") {
@@ -119,6 +136,10 @@ pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, Scheduler
         memory: MemoryModel::from_profile(&HardwareProfile::rtx3090(), a.f64_or("mem-gb", 24.0)?),
         preempt_budget_ms: a.get("preempt-ms").map(|s| s.parse::<f64>()).transpose()?,
         max_batch,
+        replica_failures: match a.get("fail-replica") {
+            Some(s) => parse_replica_failures(s)?,
+            None => Vec::new(),
+        },
     };
     Ok((spec, sched, rate))
 }
@@ -217,6 +238,7 @@ impl BatchPoint {
         if let Some(s) = &self.stats {
             pairs.push(("expert_loads", Json::Num(s.expert_loads as f64)));
             pairs.push(("aborted_loads", Json::Num(s.aborted_loads as f64)));
+            pairs.push(("failovers", Json::Num(s.failovers as f64)));
             pairs.push(("decode_tokens", Json::Num(s.decode_tokens as f64)));
             pairs.push(("decode_iterations", Json::Num(s.decode_iterations as f64)));
             pairs.push(("loads_per_token", num(s.loads_per_token())));
@@ -307,6 +329,96 @@ pub fn batch_sweep_json(
     ])
 }
 
+/// One point of a [`failover_sweep`]: decode under `failed_workers`
+/// fail-stopped workers, read against the healthy (0-failure) baseline.
+#[derive(Debug, Clone)]
+pub struct FailoverPoint {
+    pub failed_workers: usize,
+    pub decode_ms: f64,
+    /// `decode_ms / healthy decode_ms` (1.0 at zero failures).
+    pub slowdown: f64,
+    pub stall_ms: f64,
+    pub loads_per_token: f64,
+    /// Loads/computes re-booked after a mid-flight node death.
+    pub failovers: u64,
+    /// The fault-tolerance contract: the served stream never changes.
+    pub tokens_match_healthy: bool,
+}
+
+impl FailoverPoint {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("failed_workers", Json::Num(self.failed_workers as f64)),
+            ("decode_ms", num(self.decode_ms)),
+            ("slowdown", num(self.slowdown)),
+            ("stall_ms", num(self.stall_ms)),
+            ("loads_per_token", num(self.loads_per_token)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("tokens_match_healthy", Json::Bool(self.tokens_match_healthy)),
+        ])
+    }
+}
+
+/// Run one decode session at every failure count `0..=max_failed` and
+/// report slowdown against the healthy baseline. `run(k)` must execute
+/// the *same* session on a fresh engine with `k` workers fail-stopped
+/// (the CLI kills workers `0..k`; see `od-moe serve --failover-sweep`).
+/// The closure boundary keeps the sweep engine-agnostic and unit-testable
+/// without the PJRT runtime.
+pub fn failover_sweep<F>(max_failed: usize, mut run: F) -> Result<Vec<FailoverPoint>>
+where
+    F: FnMut(usize) -> Result<crate::coordinator::BatchRunResult>,
+{
+    let healthy = run(0)?;
+    ensure!(
+        healthy.sessions.len() == 1,
+        "failover sweep measures one session per run, got {}",
+        healthy.sessions.len()
+    );
+    let base = healthy.sessions[0].decode_ms;
+    ensure!(base.is_finite() && base > 0.0, "healthy decode span must be finite and positive");
+    let mut points = Vec::with_capacity(max_failed + 1);
+    for k in 0..=max_failed {
+        let res = if k == 0 { healthy.clone() } else { run(k)? };
+        ensure!(res.sessions.len() == 1, "one session per failover run");
+        let s = &res.sessions[0];
+        ensure!(
+            s.decode_ms.is_finite() && s.stall_ms.is_finite(),
+            "non-finite decode under {k} failed worker(s) — the failure model regressed"
+        );
+        points.push(FailoverPoint {
+            failed_workers: k,
+            decode_ms: s.decode_ms,
+            slowdown: s.decode_ms / base,
+            stall_ms: s.stall_ms,
+            loads_per_token: res.loads_per_token(),
+            failovers: res.failovers,
+            tokens_match_healthy: s.tokens == healthy.sessions[0].tokens,
+        });
+    }
+    Ok(points)
+}
+
+/// Assemble the `BENCH_failover.json` document.
+pub fn failover_json(
+    points: &[FailoverPoint],
+    seed: u64,
+    n_workers: usize,
+    group_size: usize,
+    fail_at_ms: f64,
+    out_tokens: usize,
+) -> Json {
+    obj(vec![
+        ("bench", Json::Str("failover".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("n_workers", Json::Num(n_workers as f64)),
+        ("group_size", Json::Num(group_size as f64)),
+        ("fail_at_ms", num(fail_at_ms)),
+        ("out_tokens", Json::Num(out_tokens as f64)),
+        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ])
+}
+
 /// Write a JSON document with a trailing newline.
 pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
     std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
@@ -345,6 +457,58 @@ mod tests {
         assert_eq!(parse_batches("1,8").unwrap(), vec![1, 8]);
         assert!(parse_batches("0,2").is_err());
         assert!(parse_batches("").is_err());
+    }
+
+    #[test]
+    fn parse_replica_failures_accepts_ms_suffix() {
+        assert_eq!(
+            parse_replica_failures("0@500,1@900ms").unwrap(),
+            vec![(0, 500.0), (1, 900.0)]
+        );
+        assert!(parse_replica_failures("0").is_err(), "missing time");
+        assert!(parse_replica_failures("x@5").is_err(), "bad index");
+        assert!(parse_replica_failures("0@inf").is_err(), "non-finite time");
+    }
+
+    #[test]
+    fn failover_sweep_is_deterministic_and_flags_token_drift() {
+        use crate::coordinator::{BatchRunResult, PromptResult};
+        // Synthetic engine: decode slows 20% per failed worker; one run
+        // ("drift") returns a different stream to prove the flag trips.
+        let fake = |k: usize, tokens: Vec<u32>| BatchRunResult {
+            sessions: vec![PromptResult {
+                ttft_ms: 100.0,
+                decode_ms: 200.0 * (1.0 + 0.2 * k as f64),
+                tokens,
+                stall_ms: 5.0 * k as f64,
+                ..PromptResult::default()
+            }],
+            expert_loads: 24,
+            aborted_loads: 2,
+            failovers: k as u64,
+            decode_tokens: 8,
+            decode_iterations: 8,
+            decode_span_ms: 0.0,
+        };
+        let run = || {
+            let points =
+                failover_sweep(3, |k| Ok(fake(k, vec![1, 2, 3]))).unwrap();
+            failover_json(&points, 42, 8, 2, 0.0, 8).to_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same inputs must reproduce the file byte for byte");
+        assert!(a.contains("\"bench\":\"failover\""));
+        assert!(a.contains("\"failed_workers\":3"));
+        assert!(a.contains("\"tokens_match_healthy\":true"));
+        let points = failover_sweep(3, |k| Ok(fake(k, vec![1, 2, 3]))).unwrap();
+        assert_eq!(points[0].slowdown, 1.0);
+        for w in points.windows(2) {
+            assert!(w[1].slowdown > w[0].slowdown);
+        }
+        // A run whose tokens drift under failure must be flagged.
+        let drift =
+            failover_sweep(1, |k| Ok(fake(k, if k == 0 { vec![1] } else { vec![2] }))).unwrap();
+        assert!(!drift[1].tokens_match_healthy);
     }
 
     #[test]

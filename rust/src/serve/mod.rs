@@ -23,8 +23,15 @@
 //!   p50/p95/p99 TTFT and TPOT, goodput (tokens meeting SLO), and
 //!   queue-depth timelines, broken down per tenant.
 //! * [`harness`] — sweep drivers that run any [`Engine`] (OD-MoE and
-//!   every baseline) across arrival rates and batch sizes, emitting the
-//!   deterministic `BENCH_serve.json` and `BENCH_batch.json` artifacts.
+//!   every baseline) across arrival rates, batch sizes and worker-failure
+//!   counts, emitting the deterministic `BENCH_serve.json`,
+//!   `BENCH_batch.json` and `BENCH_failover.json` artifacts.
+//!
+//! Failures surface at two levels: engine-level node faults
+//! ([`crate::coordinator::FailureSpec`], DESIGN.md §8) reroute expert
+//! loads inside a replica, and scheduler-level replica fail-stops
+//! ([`scheduler::SchedulerConfig::replica_failures`]) re-queue a dead
+//! replica's admitted sessions with their ledger bytes released.
 //!
 //! How virtual time composes with engine clocks: each engine measures one
 //! session's service (TTFT + decode) on its own virtual clock, reset per
@@ -43,8 +50,9 @@ pub mod scheduler;
 
 pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
 pub use harness::{
-    batch_sweep, batch_sweep_json, config_from_args, parse_batches, parse_rates, rate_sweep,
-    sweep_json, write_bench, BatchPoint,
+    batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep,
+    parse_batches, parse_rates, parse_replica_failures, rate_sweep, sweep_json, write_bench,
+    BatchPoint, FailoverPoint,
 };
 pub use metrics::{Histogram, Percentiles, ServeReport, TenantReport};
 pub use scheduler::{

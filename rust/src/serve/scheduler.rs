@@ -151,6 +151,15 @@ pub struct SchedulerConfig {
     /// Sessions a replica may co-schedule per dispatch (1 = sequential,
     /// the behavior of every pre-batching scheduler).
     pub max_batch: usize,
+    /// Replica fail-stop injection: (replica index, virtual failure
+    /// time). At the failure instant the replica stops serving — its
+    /// in-flight batch members and admitted-but-queued sessions return to
+    /// the global waiting queue with their ledger bytes released, and it
+    /// never admits or dispatches again. Completions due exactly at the
+    /// failure instant count as completed (completions process first).
+    /// At least one replica must survive to drain outstanding work, else
+    /// the run errors out.
+    pub replica_failures: Vec<(usize, Ms)>,
 }
 
 impl Default for SchedulerConfig {
@@ -161,6 +170,7 @@ impl Default for SchedulerConfig {
             memory: MemoryModel::unlimited(),
             preempt_budget_ms: None,
             max_batch: 1,
+            replica_failures: Vec::new(),
         }
     }
 }
@@ -244,6 +254,8 @@ pub struct BatchStats {
     pub expert_loads: u64,
     /// Prediction-driven loads aborted at the gate result.
     pub aborted_loads: u64,
+    /// Loads/computes re-booked after a mid-flight node death.
+    pub failovers: u64,
     /// Decode tokens produced (prefill tokens excluded).
     pub decode_tokens: u64,
     /// Decode iterations executed (batch-of-N iterations count once).
@@ -256,6 +268,7 @@ impl BatchStats {
         self.sessions += o.sessions;
         self.expert_loads += o.expert_loads;
         self.aborted_loads += o.aborted_loads;
+        self.failovers += o.failovers;
         self.decode_tokens += o.decode_tokens;
         self.decode_iterations += o.decode_iterations;
     }
@@ -374,6 +387,7 @@ impl ServiceModel for BatchEngineService<'_> {
             sessions: reqs.len() as u64,
             expert_loads: res.expert_loads,
             aborted_loads: res.aborted_loads,
+            failovers: res.failovers,
             decode_tokens: res.decode_tokens,
             decode_iterations: res.decode_iterations,
         };
@@ -552,8 +566,14 @@ pub struct ServeOutcome {
     pub queue_depth: Vec<(Ms, usize)>,
     pub replica_busy_ms: Vec<Ms>,
     /// Per-replica (start, end, request id) service intervals, for
-    /// invariant checks.
+    /// invariant checks. A failed replica's aborted (unfinished)
+    /// bookings are removed — only service that actually completed there
+    /// remains.
     pub bookings: Vec<Vec<(Ms, Ms, u64)>>,
+    /// Sessions whose replica failed under them and that were re-queued
+    /// (each re-queue counts once; a session can re-queue repeatedly if
+    /// several replicas fail).
+    pub requeued: usize,
 }
 
 /// Truncate a session at a token boundary when its measured service
@@ -595,6 +615,8 @@ struct Replica {
     running: Vec<(usize, Ms)>,
     busy_ms: Ms,
     bookings: Vec<(Ms, Ms, u64)>,
+    /// Fail-stopped: never admits or dispatches again.
+    dead: bool,
 }
 
 /// The continuous scheduler. Stateless: one [`Scheduler::run`] call
@@ -630,6 +652,12 @@ impl Scheduler {
             chain_pos.insert(*client, 1);
         }
 
+        let mut fail_at: Vec<Ms> = vec![f64::INFINITY; cfg.n_replicas];
+        for &(ri, at) in &cfg.replica_failures {
+            ensure!(ri < cfg.n_replicas, "replica failure targets replica {ri} of {}", cfg.n_replicas);
+            ensure!(at.is_finite() && at >= 0.0, "bad replica failure time {at}");
+            fail_at[ri] = fail_at[ri].min(at);
+        }
         let mut reps: Vec<Replica> = (0..cfg.n_replicas)
             .map(|i| Replica {
                 node: Node::new(i),
@@ -637,8 +665,10 @@ impl Scheduler {
                 running: Vec::new(),
                 busy_ms: 0.0,
                 bookings: Vec::new(),
+                dead: false,
             })
             .collect();
+        let mut requeued = 0usize;
 
         let mut waiting: Vec<usize> = Vec::new();
         let mut eligible_at: Vec<Ms> = vec![0.0; n];
@@ -683,6 +713,47 @@ impl Scheduler {
                     done += 1;
                     release_next(&mut future, &mut chain_pos, req.client, end);
                 }
+            }
+
+            // -- 1b. replica failures due at `clock` (after completions:
+            // a session finishing exactly at the failure instant counts
+            // as completed). Unfinished batch members and admitted
+            // sessions re-queue with their ledger bytes released; their
+            // eligibility is unchanged, so re-service is policy-ordered.
+            for r in reps.iter_mut() {
+                let ri = r.node.id;
+                if r.dead || fail_at[ri] > clock {
+                    continue;
+                }
+                r.dead = true;
+                let mut batch_end = clock;
+                for (idx, end) in r.running.drain(..) {
+                    batch_end = batch_end.max(end);
+                    let bytes = cfg.memory.session_bytes(&requests[idx]);
+                    r.node.dealloc(bytes);
+                    records[idx] = None;
+                    requeued += 1;
+                    waiting.push(idx);
+                }
+                // The replica was only busy until it died; drop the
+                // aborted tail from its utilization and its bookings.
+                r.busy_ms -= (batch_end - clock).max(0.0);
+                r.bookings.retain(|&(_, end, _)| end <= clock);
+                for idx in r.admitted.drain(..) {
+                    let bytes = cfg.memory.session_bytes(&requests[idx]);
+                    r.node.dealloc(bytes);
+                    requeued += 1;
+                    waiting.push(idx);
+                }
+                // Aborted dispatches may have advanced the makespan past
+                // anything that will actually finish; rebuild it from the
+                // records that survive.
+                makespan = records
+                    .iter()
+                    .flatten()
+                    .filter(|rec| rec.outcome != SessionOutcome::Rejected)
+                    .map(|rec| rec.finish_ms)
+                    .fold(0.0, f64::max);
             }
 
             // -- 2. arrivals due at `clock` ------------------------------
@@ -732,6 +803,9 @@ impl Scheduler {
                 // pool to run in parallel.)
                 let mut best: Option<(usize, usize, u64)> = None;
                 for (ri, r) in reps.iter().enumerate() {
+                    if r.dead {
+                        continue;
+                    }
                     let free = cfg.memory.budget_bytes.saturating_sub(r.node.gpu_bytes_used);
                     if free < bytes {
                         continue;
@@ -759,7 +833,7 @@ impl Scheduler {
             // with them — admission-time binding must not leave a replica
             // idle while work waits elsewhere).
             for ri in 0..reps.len() {
-                if !reps[ri].running.is_empty() {
+                if reps[ri].dead || !reps[ri].running.is_empty() {
                     continue;
                 }
                 let mut picked: Vec<usize> = Vec::new();
@@ -849,11 +923,20 @@ impl Scheduler {
                 for &(_, end) in &r.running {
                     next = next.min(end);
                 }
+                if !r.dead {
+                    next = next.min(fail_at[r.node.id]);
+                }
             }
             if !next.is_finite() {
-                // Unreachable: never-fitting requests are rejected at
-                // arrival and everything else eventually drains.
-                bail!("scheduler stalled with {} request(s) stuck waiting", waiting.len());
+                // Reachable only when failures killed every replica that
+                // could serve the remaining queue; never-fitting requests
+                // are rejected at arrival and everything else drains.
+                bail!(
+                    "scheduler stalled with {} request(s) stuck waiting ({} of {} replica(s) dead)",
+                    waiting.len(),
+                    reps.iter().filter(|r| r.dead).count(),
+                    reps.len()
+                );
             }
             clock = next;
         }
@@ -874,6 +957,7 @@ impl Scheduler {
             queue_depth,
             replica_busy_ms: reps.iter().map(|r| r.busy_ms).collect(),
             bookings: reps.into_iter().map(|r| r.bookings).collect(),
+            requeued,
         })
     }
 }
@@ -1093,6 +1177,82 @@ mod tests {
         // 8 prefills (80 ms) + 7 iterations at 10 * (1 + 7*0.1) = 17 ms.
         assert_eq!(batched, 199.0);
         assert!(batched < sequential);
+    }
+
+    #[test]
+    fn replica_failure_requeues_and_survivor_completes_everything() {
+        // Two replicas, two long jobs dispatched at t=0 (one each).
+        // Replica 0 dies at t=15, mid-service: its session re-queues and
+        // re-runs on replica 1 after that replica's own job drains.
+        let cfg = SchedulerConfig {
+            n_replicas: 2,
+            replica_failures: vec![(0, 15.0)],
+            ..Default::default()
+        };
+        let reqs = vec![req(0, 0.0, 4), req(1, 0.0, 4)]; // service 40 ms each
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        assert_eq!(out.requeued, 1);
+        assert!(out.records.iter().all(|r| r.outcome == SessionOutcome::Completed));
+        // Request 0 (bound to replica 0 first) re-ran on replica 1.
+        let r0 = out.records.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(r0.replica, 1);
+        assert_eq!(r0.start_ms, 40.0, "re-served after the survivor drains");
+        assert_eq!(r0.finish_ms, 80.0);
+        assert_eq!(out.makespan_ms, 80.0);
+        // The dead replica keeps no aborted bookings.
+        assert!(out.bookings[0].iter().all(|&(_, end, _)| end <= 15.0));
+        // Its utilization covers only the span it actually served.
+        assert!((out.replica_busy_ms[0] - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completion_at_failure_instant_counts_as_completed() {
+        // Service ends exactly when the replica dies: completions are
+        // processed first, so nothing re-queues.
+        let cfg = SchedulerConfig {
+            replica_failures: vec![(0, 40.0)],
+            ..Default::default()
+        };
+        let reqs = vec![req(0, 0.0, 4)]; // service exactly 40 ms
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        assert_eq!(out.requeued, 0);
+        assert_eq!(out.records[0].outcome, SessionOutcome::Completed);
+        assert_eq!(out.records[0].finish_ms, 40.0);
+    }
+
+    #[test]
+    fn failure_releases_admitted_ledger_bytes() {
+        // Tight ledger, two sessions bound to the doomed replica (one
+        // running, one admitted). Both re-queue and complete on the
+        // survivor; a leaked reservation would deadlock the re-admission.
+        let cfg = SchedulerConfig {
+            n_replicas: 2,
+            memory: MemoryModel {
+                budget_bytes: 200,
+                kv_bytes_per_token: 10,
+                session_fixed_bytes: 0,
+            },
+            replica_failures: vec![(0, 5.0)],
+            ..Default::default()
+        };
+        // 4 prompt + 4 out = 80 bytes each: two fit a replica, barely.
+        let reqs = vec![req(0, 0.0, 4), req(1, 0.0, 4), req(2, 0.0, 4)];
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        assert!(out.requeued >= 1);
+        assert!(out.records.iter().all(|r| r.outcome == SessionOutcome::Completed));
+        let produced: usize = out.records.iter().map(|r| r.tokens.len()).sum();
+        assert_eq!(produced, 12);
+    }
+
+    #[test]
+    fn all_replicas_dead_with_pending_work_errors() {
+        let cfg = SchedulerConfig {
+            replica_failures: vec![(0, 5.0)],
+            ..Default::default()
+        };
+        let reqs = vec![req(0, 0.0, 4)]; // service 40 ms > 5
+        let err = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap_err();
+        assert!(err.to_string().contains("stalled"), "{err}");
     }
 
     #[test]

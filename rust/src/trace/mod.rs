@@ -22,6 +22,8 @@ pub enum EventKind {
     LanSend,
     /// Stall (I/O bottleneck, misprediction reload, alignment wait).
     Stall,
+    /// Fail-stop of a node (zero-width marker at the failure instant).
+    Failure,
 }
 
 impl EventKind {
@@ -33,6 +35,7 @@ impl EventKind {
             EventKind::ExpertCompute => 'C',
             EventKind::LanSend => '·',
             EventKind::Stall => 'x',
+            EventKind::Failure => '!',
         }
     }
 }
@@ -45,6 +48,13 @@ pub struct Event {
     pub node: usize,
     pub start: Ms,
     pub end: Ms,
+    /// For LAN messages: when the payload reaches its destination
+    /// (`end` + propagation latency). The shared segment is held only
+    /// for `[start, end]` — arrival is carried separately so timelines
+    /// and trace-derived utilization never count propagation as busy
+    /// span, yet consumers can still explain why a dependent event
+    /// starts after the wire freed.
+    pub arrival: Option<Ms>,
     pub label: &'static str,
 }
 
@@ -62,7 +72,22 @@ impl Trace {
 
     pub fn push(&mut self, kind: EventKind, node: usize, start: Ms, end: Ms, label: &'static str) {
         if self.enabled {
-            self.events.push(Event { kind, node, start, end, label });
+            self.events.push(Event { kind, node, start, end, arrival: None, label });
+        }
+    }
+
+    /// Record a LAN message: the booked wire interval `[start, end]`
+    /// plus the (later) arrival instant at the destination.
+    pub fn push_lan(&mut self, start: Ms, end: Ms, arrival: Ms, label: &'static str) {
+        if self.enabled {
+            self.events.push(Event {
+                kind: EventKind::LanSend,
+                node: usize::MAX,
+                start,
+                end,
+                arrival: Some(arrival),
+                label,
+            });
         }
     }
 
@@ -107,7 +132,7 @@ impl Trace {
         out.push_str(&format!(
             "{:>width$}  {}\n",
             "",
-            format!("[{t0:.1} ms .. {t1:.1} ms]  M=main S=shadow L=load C=expert x=stall")
+            format!("[{t0:.1} ms .. {t1:.1} ms]  M=main S=shadow L=load C=expert x=stall !=fail")
         ));
         out
     }

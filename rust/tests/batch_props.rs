@@ -6,9 +6,13 @@
 //! convention as `engine_integration.rs`: they panic with a pointer to
 //! `make artifacts` when the artifacts are absent).
 
+use odmoe::cluster::HardwareProfile;
 use odmoe::coordinator::batch::merge_distinct;
 use odmoe::coordinator::baselines::FullyCachedEngine;
-use odmoe::coordinator::{BatchEngine, Engine, OdMoeConfig, OdMoeEngine, PredictorMode};
+use odmoe::coordinator::{
+    BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine, PredictorMode,
+};
+use odmoe::metrics::memory as memaudit;
 use odmoe::model::rng::Rng;
 use odmoe::model::WeightStore;
 use odmoe::util::prop::check;
@@ -161,6 +165,97 @@ fn batched_token_streams_are_per_session_exact() {
     // The batch shrinks at a token boundary when the short session ends.
     assert_eq!(batched.decode_tokens, 5 + 8);
     assert_eq!(batched.decode_iterations, 8, "long session decodes alone after the short one");
+}
+
+/// Fault tolerance must not break the batch-of-one contract: with the
+/// same failure plan injected, `run_batch` over one session reproduces
+/// sequential decode bookings exactly — both paths share the failover
+/// helpers (DESIGN.md §8), and this pins that they stay in lockstep.
+#[test]
+fn batch_of_one_matches_sequential_under_failures() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(7, 16, rt.cfg.vocab_size as u32);
+    let healthy = {
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+        e.run_prompt(&p, 8, false).unwrap()
+    };
+    let mid = healthy.ttft_ms + healthy.decode_ms / 2.0;
+
+    let plans: Vec<Vec<FailureSpec>> = vec![
+        vec![FailureSpec::Worker { worker: 2, at_ms: 0.0 }],
+        vec![FailureSpec::Worker { worker: 5, at_ms: mid }],
+        vec![FailureSpec::Shadow { at_ms: mid }],
+        vec![
+            FailureSpec::Worker { worker: 0, at_ms: mid },
+            FailureSpec::Shadow { at_ms: 0.0 },
+        ],
+    ];
+    for plan in &plans {
+        let mut engine = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+        for &f in plan {
+            engine.inject_failure(f);
+        }
+        engine.reset().unwrap();
+        let solo = engine.run_prompt(&p, 8, false).unwrap();
+        engine.reset().unwrap();
+        let batched = engine.run_batch(&[(p.as_slice(), 8)]).unwrap();
+        let b = &batched.sessions[0];
+
+        assert_eq!(solo.tokens, b.tokens, "{plan:?}: token stream must match");
+        assert_eq!(solo.tokens, healthy.tokens, "{plan:?}: failures never change the stream");
+        assert_eq!(solo.ttft_ms, b.ttft_ms, "{plan:?}: ttft must match exactly");
+        assert_eq!(solo.decode_ms, b.decode_ms, "{plan:?}: decode time must match exactly");
+        assert_eq!(solo.stall_ms, b.stall_ms, "{plan:?}: stalls must match exactly");
+        assert!(b.decode_ms.is_finite() && b.decode_ms >= healthy.decode_ms - 1e-6);
+    }
+}
+
+/// The memory audit vs the engine's byte ledger: sequential decode keeps
+/// strict single-expert residency per worker (the `metrics::memory::odmoe`
+/// row), while batched decode transiently holds every expert a worker
+/// loads for a layer — bounded by `metrics::memory::odmoe_batched`'s
+/// honest `ceil(distinct / group_size)` worst case, NOT the old "two
+/// experts" folklore.
+#[test]
+fn ledger_peaks_reconcile_with_memory_audit() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let hp = HardwareProfile::rtx3090();
+    let act = hp.activation_bytes as u64;
+    let expert = hp.expert_bytes as u64;
+
+    // Sequential: every worker's peak is exactly one expert + workspace.
+    let mut engine = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    engine.run_prompt(&prompt(3, 16, vocab), 6, false).unwrap();
+    let audit = memaudit::odmoe(&hp, 8);
+    for (i, w) in engine.cluster.workers.iter().enumerate() {
+        assert_eq!(
+            w.gpu_bytes_peak,
+            act + expert,
+            "worker {i}: sequential peak must match the audit row"
+        );
+        let (_, audited) = &audit.per_node[2 + i];
+        assert_eq!(w.gpu_bytes_peak, *audited as u64);
+    }
+
+    // Batched (4 distinct sessions): the peak may exceed one expert but
+    // never the batched audit's bound.
+    let prompts: Vec<Vec<u32>> = (1..=4).map(|s| prompt(s, 16, vocab)).collect();
+    let sessions: Vec<(&[u32], usize)> = prompts.iter().map(|p| (p.as_slice(), 6)).collect();
+    engine.reset().unwrap();
+    engine.run_batch(&sessions).unwrap();
+    let batched = memaudit::odmoe_batched(&hp, 8, 2, 4);
+    for (i, w) in engine.cluster.workers.iter().enumerate() {
+        let (_, bound) = &batched.per_node[2 + i];
+        assert!(
+            w.gpu_bytes_peak <= *bound as u64,
+            "worker {i}: batched peak {} exceeds the audited bound {bound}",
+            w.gpu_bytes_peak
+        );
+        assert!(w.gpu_bytes_peak >= act + expert, "worker {i} never loaded?");
+    }
 }
 
 /// The §7 amortization, end to end on the engine: identical sessions

@@ -3,7 +3,7 @@
 
 use odmoe::cache::{ExpertCache, Policy};
 use odmoe::cluster::{HardwareProfile, Resource};
-use odmoe::coordinator::GroupSchedule;
+use odmoe::coordinator::{GroupSchedule, SlotMap};
 use odmoe::engine::padded_batch;
 use odmoe::metrics::{correct_count, kl_divergence, RecallStats};
 use odmoe::model::rng::Rng;
@@ -78,6 +78,74 @@ fn prop_group_schedule_partitions_workers() {
             let w = s.worker_for(l, rng.below(group_size));
             if !s.workers_of(s.group_of(l)).contains(&w) {
                 return Err("worker outside its group".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_worker_for_lies_in_its_group() {
+    // The satellite invariant: `worker_for(layer, slot)` is a member of
+    // `workers_of(group_of(layer))` for ALL layers and slots — both for
+    // the static blueprint and for the dynamic slot map, healthy or not.
+    check("worker_for ∈ workers_of(group_of)", CASES, 23, |rng| {
+        let group_size = 1 + rng.below(4);
+        let n_groups = 1 + rng.below(6);
+        let s = GroupSchedule::new(group_size * n_groups, group_size);
+        let m = SlotMap::from_schedule(&s);
+        for l in 0..64 {
+            for slot in 0..group_size {
+                let w = s.worker_for(l, slot);
+                if !s.workers_of(s.group_of(l)).contains(&w) {
+                    return Err(format!("static: worker {w} outside group of layer {l}"));
+                }
+                if m.worker_for(l, slot) != w {
+                    return Err("healthy slot map must match the blueprint".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slotmap_survives_failures_with_full_coverage() {
+    check("slots always route to live workers", CASES, 24, |rng| {
+        let group_size = 1 + rng.below(3);
+        // Sometimes uneven: spares exercise the first-fit relaxation.
+        let n_workers = group_size * (1 + rng.below(5)) + rng.below(group_size);
+        let mut m = SlotMap::new(n_workers, group_size);
+        let total_slots = m.n_groups() * group_size;
+        let load_ms = 1.0 + rng.uniform() * 20.0;
+        let window_ms = rng.uniform() * 60.0;
+        let kills = rng.below(n_workers); // always leaves >= 1 survivor
+        for _ in 0..kills {
+            let alive: Vec<usize> = (0..n_workers).filter(|&w| m.is_alive(w)).collect();
+            let victim = alive[rng.below(alive.len())];
+            m.fail(victim, |slots| slots as f64 * load_ms <= window_ms);
+            // Every slot maps into its group's current worker list, and
+            // only live workers serve.
+            for l in 0..32 {
+                for slot in 0..group_size {
+                    let w = m.worker_for(l, slot);
+                    if !m.is_alive(w) {
+                        return Err(format!("layer {l} slot {slot} on dead worker {w}"));
+                    }
+                    if !m.workers_of(m.group_of(l)).contains(&w) {
+                        return Err(format!("worker {w} outside group of layer {l}"));
+                    }
+                }
+            }
+            // Slot conservation: reassignment never loses or invents work.
+            let assigned: usize = (0..n_workers).map(|w| m.load_of(w)).sum();
+            if assigned != total_slots {
+                return Err(format!("{assigned} slots assigned, expected {total_slots}"));
+            }
+            let dead_load: usize =
+                (0..n_workers).filter(|&w| !m.is_alive(w)).map(|w| m.load_of(w)).sum();
+            if dead_load != 0 {
+                return Err(format!("{dead_load} slots still on dead workers"));
             }
         }
         Ok(())

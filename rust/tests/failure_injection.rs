@@ -1,12 +1,35 @@
-//! Failure/straggler injection over the OD-MoE pipeline: degraded links
-//! and slow workers must degrade *throughput only* — numerics (the served
-//! token stream) must be bit-identical, because the scheduler's fallback
-//! path (reactive loads) preserves correctness by construction.
+//! Failure/straggler injection over the OD-MoE pipeline: degraded links,
+//! slow workers and fail-stopped nodes must degrade *throughput only* —
+//! numerics (the served token stream) must be bit-identical, because the
+//! scheduler's fallback paths (reactive loads, slot rerouting) preserve
+//! correctness by construction (DESIGN.md §8).
 
-use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine, Request, Server};
+use odmoe::cluster::Cluster;
+use odmoe::coordinator::{
+    Engine, FailureSpec, OdMoeConfig, OdMoeEngine, PredictorMode, Request, Server,
+};
 use odmoe::model::WeightStore;
 use odmoe::workload::Corpus;
 use odmoe::Runtime;
+
+/// Every resource in the cluster must carry finite, non-negative time
+/// accounting — the invariant the old "infinite slowdown ~ dead link"
+/// hack violated.
+fn assert_virtual_time_sane(c: &Cluster) {
+    let nodes = c.workers.iter().chain([&c.main, &c.shadow]);
+    for n in nodes {
+        for r in [&n.gpu, &n.pcie] {
+            assert!(r.free_at().is_finite(), "node {}: free_at diverged", n.id);
+            assert!(
+                r.busy_total().is_finite() && r.busy_total() >= 0.0,
+                "node {}: busy_total corrupted: {}",
+                n.id,
+                r.busy_total()
+            );
+        }
+    }
+    assert!(c.lan.busy_total().is_finite() && c.lan.busy_total() >= 0.0);
+}
 
 fn runtime() -> Runtime {
     Runtime::load_default().expect("artifacts missing — run `make artifacts`")
@@ -78,6 +101,164 @@ fn straggler_on_idle_worker_count_is_cheaper_than_on_hot_path() {
     let one = run(&[0]);
     let two = run(&[0, 2]);
     assert!(two >= one - 1e-6, "two stragglers {two} vs one {one}");
+}
+
+#[test]
+fn killing_any_single_worker_mid_decode_reroutes_without_corruption() {
+    // The acceptance bar for the failure model: a dead worker yields a
+    // finite decode time, finite non-negative per-resource accounting,
+    // and a token stream bit-identical to the healthy run — for EVERY
+    // choice of victim.
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let out = 10;
+    let mut healthy = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let h = healthy.run_prompt(&p, out, false).unwrap();
+    let mid = h.ttft_ms + h.decode_ms / 2.0;
+
+    for victim in 0..8 {
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+        e.inject_failure(FailureSpec::Worker { worker: victim, at_ms: mid });
+        let d = e.run_prompt(&p, out, false).unwrap();
+        assert_eq!(h.tokens, d.tokens, "worker {victim} death must not change the stream");
+        assert!(
+            d.decode_ms.is_finite() && d.decode_ms > 0.0,
+            "worker {victim}: decode_ms = {}",
+            d.decode_ms
+        );
+        assert!(
+            d.decode_ms >= h.decode_ms - 1e-6,
+            "worker {victim}: rerouting cannot beat the healthy run ({} vs {})",
+            d.decode_ms,
+            h.decode_ms
+        );
+        assert_virtual_time_sane(&e.cluster);
+        assert_eq!(e.cluster.alive_workers(), 7, "worker {victim} must be dead");
+        assert!(!e.slots.is_alive(victim));
+        // Every slot routes to a survivor.
+        for g in 0..e.slots.n_groups() {
+            for w in e.slots.workers_of(g) {
+                assert!(e.slots.is_alive(w), "group {g} routed to dead worker {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_slowdown_is_monotone_in_failed_worker_count() {
+    // The acceptance criterion behind `--failover-sweep`: killing workers
+    // 0..k (from the first decode iteration) yields a decode time that
+    // never decreases as k grows — each extra death only concentrates
+    // load on the survivors — while the stream stays bit-identical.
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let mut tokens_ref: Option<Vec<u32>> = None;
+    let mut last = 0.0f64;
+    for k in 0..=3 {
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+        for w in 0..k {
+            e.inject_failure(FailureSpec::Worker { worker: w, at_ms: 0.0 });
+        }
+        let r = e.run_prompt(&p, 8, false).unwrap();
+        assert!(r.decode_ms.is_finite(), "k={k}: decode_ms = {}", r.decode_ms);
+        assert!(
+            r.decode_ms >= last - 1e-6,
+            "slowdown must be monotone: k={k} took {} after {last}",
+            r.decode_ms
+        );
+        last = r.decode_ms;
+        match &tokens_ref {
+            None => tokens_ref = Some(r.tokens),
+            Some(t) => assert_eq!(t, &r.tokens, "k={k}: stream must never change"),
+        }
+        assert_virtual_time_sane(&e.cluster);
+    }
+}
+
+#[test]
+fn dead_from_start_worker_concentrates_load_but_stays_exact() {
+    // at_ms = 0: the worker is gone from the first decode iteration; its
+    // slots live on a survivor for the whole run.
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let mut healthy = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let h = healthy.run_prompt(&p, 8, false).unwrap();
+    let mut e = OdMoeEngine::new(&rt, ws, OdMoeConfig::default()).unwrap();
+    e.inject_failure(FailureSpec::Worker { worker: 3, at_ms: 0.0 });
+    let d = e.run_prompt(&p, 8, false).unwrap();
+    assert_eq!(h.tokens, d.tokens);
+    assert!(d.decode_ms.is_finite() && d.decode_ms >= h.decode_ms - 1e-6);
+    assert_virtual_time_sane(&e.cluster);
+}
+
+#[test]
+fn shadow_death_falls_back_to_no_prefetch_timing_with_identical_tokens() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let out = 8;
+
+    let mut sep = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let h = sep.run_prompt(&p, out, false).unwrap();
+
+    let mut none = OdMoeEngine::new(
+        &rt,
+        ws.clone(),
+        OdMoeConfig { predictor: PredictorMode::None, ..OdMoeConfig::default() },
+    )
+    .unwrap();
+    let n = none.run_prompt(&p, out, false).unwrap();
+
+    // Shadow dead before decode starts: every iteration must book the
+    // exact no-prefetch timing path.
+    let mut dead = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    dead.inject_failure(FailureSpec::Shadow { at_ms: 0.0 });
+    let d = dead.run_prompt(&p, out, false).unwrap();
+    assert_eq!(d.tokens, h.tokens, "shadow death must not change the stream");
+    assert_eq!(d.ttft_ms, n.ttft_ms, "prefill is predictor-independent");
+    assert_eq!(d.decode_ms, n.decode_ms, "dead shadow == no-prefetch timing");
+    assert!(d.decode_ms >= h.decode_ms - 1e-6, "losing prediction cannot speed decode");
+    assert!(!dead.cluster.shadow.is_alive());
+
+    // Shadow dying mid-decode: prefix predicted, suffix reactive.
+    let mut mid = OdMoeEngine::new(&rt, ws, OdMoeConfig::default()).unwrap();
+    mid.inject_failure(FailureSpec::Shadow { at_ms: h.ttft_ms + h.decode_ms / 2.0 });
+    let m = mid.run_prompt(&p, out, false).unwrap();
+    assert_eq!(m.tokens, h.tokens);
+    assert!(m.decode_ms.is_finite());
+    assert!(m.decode_ms >= h.decode_ms - 1e-6);
+    assert!(m.decode_ms <= n.decode_ms + 1e-6, "partial prediction beats none");
+    assert_virtual_time_sane(&mid.cluster);
+}
+
+#[test]
+fn worker_and_shadow_failures_compose() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let mut healthy = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let h = healthy.run_prompt(&p, 8, false).unwrap();
+    let mid = h.ttft_ms + h.decode_ms / 3.0;
+
+    let mut e = OdMoeEngine::new(&rt, ws, OdMoeConfig::default()).unwrap();
+    e.inject_failure(FailureSpec::Worker { worker: 0, at_ms: mid });
+    e.inject_failure(FailureSpec::Worker { worker: 5, at_ms: mid * 1.2 });
+    e.inject_failure(FailureSpec::Shadow { at_ms: mid });
+    let d = e.run_prompt(&p, 8, false).unwrap();
+    assert_eq!(h.tokens, d.tokens, "composed failures must not change the stream");
+    assert!(d.decode_ms.is_finite() && d.decode_ms >= h.decode_ms - 1e-6);
+    assert_eq!(e.cluster.alive_workers(), 6);
+    assert_virtual_time_sane(&e.cluster);
+    // reset resurrects the cluster and re-arms the same plan: the replay
+    // is deterministic (what the serve layer's memoization relies on).
+    e.reset().unwrap();
+    let d2 = e.run_prompt(&p, 8, false).unwrap();
+    assert_eq!(d.tokens, d2.tokens);
+    assert_eq!(d.decode_ms, d2.decode_ms, "failure replay must be deterministic");
+    assert_eq!(d.stall_ms, d2.stall_ms);
 }
 
 #[test]

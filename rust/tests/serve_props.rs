@@ -48,6 +48,7 @@ fn prop_no_replica_runs_two_sessions_at_once() {
             memory: MemoryModel::unlimited(),
             preempt_budget_ms: if rng.uniform() < 0.3 { Some(200.0) } else { None },
             max_batch: 1,
+            ..Default::default()
         };
         let reqs = random_workload(rng, 4 + rng.below(28));
         let mut svc = random_service(rng);
@@ -143,6 +144,7 @@ fn prop_memory_ledger_balances_to_zero() {
             },
             preempt_budget_ms: None,
             max_batch: 1 + rng.below(3),
+            ..Default::default()
         };
         // Mixed sizes: some requests exceed the 2 000-byte budget and must
         // be rejected; the rest must drain the ledger back to zero (the
@@ -244,6 +246,7 @@ fn same_seed_yields_byte_identical_bench_json() {
         memory: MemoryModel { budget_bytes: 10_000, kv_bytes_per_token: 5, session_fixed_bytes: 50 },
         preempt_budget_ms: Some(500.0),
         max_batch: 1,
+        ..Default::default()
     };
     let run = || {
         let mut od = SyntheticService::new(30.0, 0.8, 100.0);
@@ -326,6 +329,43 @@ fn prop_batched_concurrency_bounded_and_tokens_conserved() {
         }
         if out.records.iter().any(|r| r.outcome != SessionOutcome::Completed) {
             return Err("all sessions must complete without preemption/rejection".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replica_failure_loses_no_work_and_dead_replica_stays_dead() {
+    check("replica failure requeues, survivors drain", CASES, 109, |rng| {
+        let n_replicas = 2 + rng.below(3);
+        let fail_ri = rng.below(n_replicas - 1); // replica n-1 always survives
+        let fail_ms = rng.uniform() * 400.0;
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas,
+            max_batch: 1 + rng.below(3),
+            replica_failures: vec![(fail_ri, fail_ms)],
+            ..Default::default()
+        };
+        let reqs = random_workload(rng, 4 + rng.below(20));
+        let mut svc = random_service(rng);
+        let out = Scheduler::run(&cfg, &mut svc, &reqs).map_err(|e| e.to_string())?;
+        // No work lost: every request completes with its full token count.
+        let requested: usize = reqs.iter().map(|r| r.out_tokens).sum();
+        let produced: usize = out.records.iter().map(|r| r.tokens.len()).sum();
+        if produced != requested {
+            return Err(format!("produced {produced} of {requested} requested tokens"));
+        }
+        if out.records.iter().any(|r| r.outcome != SessionOutcome::Completed) {
+            return Err("every session must still complete".into());
+        }
+        // The dead replica serves nothing past its failure instant.
+        for &(start, end, id) in &out.bookings[fail_ri] {
+            if end > fail_ms + 1e-9 {
+                return Err(format!(
+                    "request {id} booked on dead replica {fail_ri}: [{start}, {end}] past {fail_ms}"
+                ));
+            }
         }
         Ok(())
     });
