@@ -10,9 +10,10 @@ use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
 use odmoe::predictor::{AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
 use odmoe::serve::{
-    batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep, parse_batches,
-    parse_rates, rate_sweep, sweep_json, write_bench, BatchEngineService, BatchPoint,
-    FailoverPoint, Scheduler, ServeReport, ServiceModel, SessionOutcome,
+    batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep, overlap_json,
+    overlap_sweep, parse_batches, parse_chunk_counts, parse_depths, parse_rates, rate_sweep,
+    sweep_json, write_bench, BatchEngineService, BatchPoint, FailoverPoint, OverlapPoint,
+    Scheduler, ServeReport, ServiceModel, SessionOutcome,
 };
 use odmoe::util::cli::Args;
 use odmoe::util::table::{sparkline, Table};
@@ -73,8 +74,11 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
             token_period: parse_period(a.get_or("token-period", "1"))?,
             kv_period: parse_period(a.get_or("kv-period", "1"))?,
         },
+        chunks: a.usize_or("chunks", 1)?,
+        prefetch_depth: a.usize_or("prefetch-depth", 0)?,
         ..OdMoeConfig::default()
     };
+    anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
 
     if a.has("failover-sweep") {
         let max_failed = a.usize_or("max-failed", (cfg.n_workers - 1).min(4))?;
@@ -290,6 +294,95 @@ fn print_sweep(results: &[(String, Vec<ServeReport>)]) {
                 format!("{:.0}", p.tpot.p99),
             ]);
         }
+    }
+    t.print();
+}
+
+/// `od-moe decode`: single-session decode under chunked expert streaming
+/// (DESIGN.md §9). By default runs one session at `--chunks K`
+/// `--prefetch-depth D` and prints ms/token against the fully-cached
+/// ceiling; `--overlap-sweep` sweeps `--chunks 1,2,4,8` x `--depths 0,1`
+/// and writes the deterministic `BENCH_overlap.json` (the monolithic
+/// chunks-1/depth-0 point is bit-identical — tokens AND timings — to the
+/// pre-chunking engine; every point's token stream is checked against
+/// it). Baseline engines are untouched by chunking, so the
+/// fraction-of-fully-cached comparison stays fair.
+pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
+    let out_tokens = a.usize_or("out-tokens", 24)?;
+    anyhow::ensure!(out_tokens >= 2, "--out-tokens must be >= 2 to measure decode");
+    let ws = WeightStore::generate(&rt.cfg, seed);
+    let prompt = Corpus::generate(seed ^ 6, 1, 16, rt.cfg.vocab_size as u32)
+        .prompts
+        .pop()
+        .expect("one prompt");
+    let base_cfg = OdMoeConfig {
+        shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
+        ..OdMoeConfig::default()
+    };
+
+    // Fully-cached ceiling on the same session (untouched by chunking).
+    let fc_ms_per_token = {
+        let mut e = FullyCachedEngine::new(rt, ws.clone())?;
+        let res = e.run_batch(&[(prompt.as_slice(), out_tokens)])?;
+        res.sessions[0].decode_ms / res.decode_tokens as f64
+    };
+
+    if a.has("overlap-sweep") {
+        let chunk_counts = parse_chunk_counts(a.get_or("chunks", "1,2,4,8"))?;
+        let depths = parse_depths(a.get_or("depths", "0,1"))?;
+        let points = overlap_sweep(&chunk_counts, &depths, fc_ms_per_token, |chunks, depth| {
+            let cfg = OdMoeConfig { chunks, prefetch_depth: depth, ..base_cfg.clone() };
+            let mut e = OdMoeEngine::new(rt, ws.clone(), cfg)?;
+            e.run_batch(&[(prompt.as_slice(), out_tokens)])
+        })?;
+        print_overlap(&points);
+        let path = std::path::Path::new("BENCH_overlap.json");
+        write_bench(
+            path,
+            &overlap_json(&points, seed, &chunk_counts, &depths, out_tokens, fc_ms_per_token),
+        )?;
+        println!("\nwrote {}", path.display());
+        return Ok(());
+    }
+
+    let cfg = OdMoeConfig {
+        chunks: a.usize_or("chunks", 1)?,
+        prefetch_depth: a.usize_or("prefetch-depth", 0)?,
+        ..base_cfg
+    };
+    anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
+    let mut e = OdMoeEngine::new(rt, ws, cfg)?;
+    let name = e.name();
+    let res = e.run_batch(&[(prompt.as_slice(), out_tokens)])?;
+    let s = &res.sessions[0];
+    let ms_per_token = s.decode_ms / res.decode_tokens as f64;
+    println!(
+        "{name}: {:.2} ms/token ({:.1}% of fully-cached) | stall {:.1} ms | \
+         {:.2} loads/token | {} aborted stream(s)",
+        ms_per_token,
+        100.0 * fc_ms_per_token / ms_per_token,
+        s.stall_ms,
+        res.loads_per_token(),
+        res.aborted_loads,
+    );
+    Ok(())
+}
+
+fn print_overlap(points: &[OverlapPoint]) {
+    let mut t = Table::new(&[
+        "chunks", "prefetch depth", "ms/token", "of fully-cached", "stall (ms)", "aborts",
+        "tokens",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{}", p.chunks),
+            format!("{}", p.prefetch_depth),
+            format!("{:.2}", p.ms_per_token),
+            format!("{:.1}%", p.frac_of_fully_cached * 100.0),
+            format!("{:.1}", p.stall_ms),
+            format!("{}", p.aborted_loads),
+            if p.tokens_match_baseline { "identical".into() } else { "DIVERGED".to_string() },
+        ]);
     }
     t.print();
 }

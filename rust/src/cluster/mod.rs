@@ -24,13 +24,29 @@ pub type Ms = f64;
 /// `acquire(earliest, duration)` books the resource for `duration` ms at
 /// the first instant >= both `earliest` and the resource's availability,
 /// returning the (start, end) of the booking.
+///
+/// The resource remembers its booked spans (ascending, non-overlapping;
+/// back-to-back bookings — e.g. the chunks of one streamed expert
+/// transfer — merge into one span), so [`Resource::preempt`] can cancel
+/// *every* booking past the preempt instant and reclaim exactly the
+/// cancelled time: completed work and idle gaps are never reclaimed, and
+/// `busy_total` equals the surviving spans under any preempt sequence.
+/// (The old single-`last_start` model could only cancel the most recent
+/// booking, which breaks down once a transfer is a train of chunks.)
 #[derive(Debug, Clone, Default)]
 pub struct Resource {
     free_at: Ms,
     busy_total: Ms,
-    /// Start of the most recent booking — a preempt can only cancel work
-    /// inside it, never idle gaps or earlier completed bookings.
-    last_start: Ms,
+    /// Booked (start, end) spans, ascending and disjoint; contiguous
+    /// bookings are merged so a K-chunk train stays one entry. Spans are
+    /// retained until `reset` on purpose: a fail-stop can preempt at an
+    /// arbitrarily early instant (e.g. `--fail worker3@0` noticed after
+    /// prefill booked far ahead), so any compaction of "old" spans would
+    /// leave cancelled time stuck in `busy_total`. The cost is one pair
+    /// per non-contiguous booking between resets — tens of KB per
+    /// resource on the longest bench runs, and engines reset per
+    /// request.
+    spans: Vec<(Ms, Ms)>,
 }
 
 impl Resource {
@@ -53,7 +69,11 @@ impl Resource {
         let end = start + duration;
         self.free_at = end;
         self.busy_total += duration;
-        self.last_start = start;
+        match self.spans.last_mut() {
+            // Back-to-back booking (chunk trains, saturated links): extend.
+            Some(last) if last.1 == start => last.1 = end,
+            _ => self.spans.push((start, end)),
+        }
         (start, end)
     }
 
@@ -62,23 +82,39 @@ impl Resource {
         self.free_at
     }
 
-    /// Abort the in-flight booking at time `at`: the resource becomes free
-    /// at `at` if it was booked past it (mispredicted expert loads are
+    /// Cancel everything booked past `at`: the resource becomes free at
+    /// `at` if it was booked past it (mispredicted expert loads are
     /// cancelled the moment the gate result disagrees — paper §3.1; node
     /// failures freeze a dead node's resources the same way).
     ///
-    /// Only time inside the last booking is reclaimed from `busy_total`:
-    /// rewinding past the booking's start cancels the whole booking but
-    /// never idle gaps or earlier completed work, and the reclaim is
-    /// additionally clamped to the booked total — `busy_total` stays
-    /// finite and non-negative under any preempt sequence.
+    /// Reclaims from `busy_total` exactly the booked time inside
+    /// `[at, free_at)`: a straddled booking keeps its delivered prefix
+    /// (chunks that already landed stay busy — and wasted), bookings that
+    /// had not started are cancelled whole, and completed work or idle
+    /// gaps before `at` are never touched — `busy_total` stays finite and
+    /// non-negative under any preempt sequence.
     pub fn preempt(&mut self, at: Ms) {
         assert!(at.is_finite(), "non-finite preempt instant {at}");
-        if self.free_at > at {
-            let reclaimed = (self.free_at - at.max(self.last_start)).min(self.busy_total);
-            self.busy_total -= reclaimed.max(0.0);
-            self.free_at = at;
+        if self.free_at <= at {
+            return;
         }
+        let mut reclaimed = 0.0;
+        while let Some(&(start, end)) = self.spans.last() {
+            if start >= at {
+                // Unstarted from `at`'s point of view: cancelled whole.
+                reclaimed += end - start;
+                self.spans.pop();
+            } else {
+                if end > at {
+                    // In flight at `at`: the delivered prefix survives.
+                    reclaimed += end - at;
+                    self.spans.last_mut().expect("just peeked").1 = at;
+                }
+                break;
+            }
+        }
+        self.busy_total = (self.busy_total - reclaimed).max(0.0);
+        self.free_at = at;
     }
 
     /// Total booked time (utilization accounting).
@@ -89,7 +125,44 @@ impl Resource {
     pub fn reset(&mut self) {
         self.free_at = 0.0;
         self.busy_total = 0.0;
-        self.last_start = 0.0;
+        self.spans.clear();
+    }
+}
+
+/// One expert transfer booked as a train of dependent chunks on a
+/// worker's PCIe link (DESIGN.md §9). Carries the per-chunk completion
+/// times so schedulers can gate expert-compute tiles on individual
+/// chunks, abort mid-stream reclaiming only undelivered chunks, and
+/// resume a dead worker's stream on its replacement from the first
+/// undelivered chunk. A 1-chunk train is exactly the monolithic booking.
+#[derive(Debug, Clone)]
+pub struct ChunkedTransfer {
+    /// Worker whose link carries (and whose memory receives) the stream.
+    pub worker: usize,
+    /// Start of the first chunk.
+    pub start: Ms,
+    /// Completion time of each chunk, ascending.
+    pub chunk_ends: Vec<Ms>,
+    /// The link's `free_at` before this train was booked — the floor an
+    /// abort may rewind the link to (never below work queued ahead).
+    pub free_before: Ms,
+}
+
+impl ChunkedTransfer {
+    /// When the last chunk lands (the whole expert is resident).
+    pub fn done(&self) -> Ms {
+        *self.chunk_ends.last().expect("a transfer has at least one chunk")
+    }
+
+    /// When the first chunk lands (expert compute may begin).
+    pub fn first_ready(&self) -> Ms {
+        self.chunk_ends[0]
+    }
+
+    /// Chunks fully delivered by `at` (an in-flight chunk counts as
+    /// undelivered — its bytes die with a node that fails mid-chunk).
+    pub fn delivered_by(&self, at: Ms) -> usize {
+        self.chunk_ends.iter().filter(|&&e| e <= at).count()
     }
 }
 
@@ -250,16 +323,67 @@ impl Cluster {
     /// than `earliest`. Returns (start, done). Honors straggler injection.
     /// Panics on a dead worker: callers must route around failed nodes
     /// (see `coordinator::schedule::SlotMap`) before booking.
+    ///
+    /// This is the monolithic (single-chunk) special case of
+    /// [`Cluster::expert_load_chunked`]; the two book identically at
+    /// chunk count 1.
     pub fn expert_load(&mut self, worker: usize, earliest: Ms, bytes: f64) -> (Ms, Ms) {
+        let t = self.expert_load_chunked(worker, earliest, bytes, 1, EventKind::ExpertLoad);
+        (t.start, t.done())
+    }
+
+    /// Book an expert transfer as `chunks` dependent sub-transfers on
+    /// `worker`'s PCIe link (DESIGN.md §9): the expert's `w1/w3/w2` tiles
+    /// stream back to back, each chunk's completion visible to the
+    /// scheduler so expert compute can begin once its first input tile is
+    /// resident instead of waiting for the last byte. `kind` tags the
+    /// trace events ([`EventKind::ExpertLoad`] for demand loads,
+    /// [`EventKind::Prefetch`] for speculative streams). Chunk durations
+    /// come from [`HardwareProfile::chunk_durations`]; at `chunks == 1`
+    /// the booking is bit-identical to the monolithic [`Cluster::expert_load`].
+    pub fn expert_load_chunked(
+        &mut self,
+        worker: usize,
+        earliest: Ms,
+        bytes: f64,
+        chunks: usize,
+        kind: EventKind,
+    ) -> ChunkedTransfer {
+        let durs = self.profile.chunk_durations(bytes, chunks);
+        self.expert_load_chunks(worker, earliest, &durs, kind)
+    }
+
+    /// Book a chunk train with explicit per-chunk durations — the resume
+    /// path of a failover re-books only the chunks the dead worker hadn't
+    /// delivered (DESIGN.md §9). Durations are pre-slowdown; this method
+    /// applies the worker's straggler factor. Panics on a dead worker or
+    /// an empty train.
+    pub fn expert_load_chunks(
+        &mut self,
+        worker: usize,
+        earliest: Ms,
+        durations: &[Ms],
+        kind: EventKind,
+    ) -> ChunkedTransfer {
         assert!(
             self.workers[worker].is_alive(),
             "expert load booked on dead worker {worker}"
         );
-        let dur = self.profile.pcie_transfer_ms(bytes) * self.workers[worker].pcie_slowdown;
-        let (start, end) = self.workers[worker].pcie.acquire(earliest, dur);
-        self.trace
-            .push(EventKind::ExpertLoad, self.workers[worker].id, start, end, "EL");
-        (start, end)
+        assert!(!durations.is_empty(), "a transfer needs at least one chunk");
+        let slowdown = self.workers[worker].pcie_slowdown;
+        let id = self.workers[worker].id;
+        let free_before = self.workers[worker].pcie.free_at();
+        let mut chunk_ends = Vec::with_capacity(durations.len());
+        let mut first_start = Ms::INFINITY;
+        let mut next = earliest;
+        for &d in durations {
+            let (s, e) = self.workers[worker].pcie.acquire(next, d * slowdown);
+            self.trace.push(kind, id, s, e, "EL");
+            first_start = first_start.min(s);
+            chunk_ends.push(e);
+            next = e;
+        }
+        ChunkedTransfer { worker, start: first_start, chunk_ends, free_before }
     }
 
     /// Book an expert compute of base duration `base_ms` on `worker`'s
@@ -275,6 +399,40 @@ impl Cluster {
         self.trace
             .push(EventKind::ExpertCompute, self.workers[worker].id, start, end, "EC");
         (start, end)
+    }
+
+    /// Book an expert compute as one tile per input chunk (DESIGN.md §9):
+    /// tile `i` (duration `base_ms / gates.len()`) starts no earlier than
+    /// `earliest` *and* its chunk's arrival `gates[i]`, so the FFN
+    /// pipelines behind the streaming transfer instead of waiting for the
+    /// whole expert. With a single gate this is exactly
+    /// [`Cluster::expert_compute`] at `max(earliest, gates[0])`, and the
+    /// pipelined end never exceeds the monolithic
+    /// `max(earliest, last gate) + base_ms` (chunking only ever pulls
+    /// compute earlier). Returns (first tile start, last tile end).
+    pub fn expert_compute_chunked(
+        &mut self,
+        worker: usize,
+        earliest: Ms,
+        base_ms: Ms,
+        gates: &[Ms],
+    ) -> (Ms, Ms) {
+        assert!(
+            self.workers[worker].is_alive(),
+            "expert compute booked on dead worker {worker}"
+        );
+        assert!(!gates.is_empty(), "a compute needs at least one tile");
+        let tile = base_ms / gates.len() as f64 * self.workers[worker].gpu_slowdown;
+        let id = self.workers[worker].id;
+        let mut first_start = Ms::INFINITY;
+        let mut end = earliest;
+        for &g in gates {
+            let (s, e) = self.workers[worker].gpu.acquire(earliest.max(g), tile);
+            self.trace.push(EventKind::ExpertCompute, id, s, e, "EC");
+            first_start = first_start.min(s);
+            end = e;
+        }
+        (first_start, end)
     }
 
     /// Inject a straggler: worker `w`'s PCIe and GPU run `factor`x slower.
@@ -487,6 +645,80 @@ mod tests {
         assert_eq!(ev.arrival, Some(arrival), "arrival carried separately");
         assert!((arrival - (ev.end + c.profile.lan_lat_ms)).abs() < 1e-12);
         assert!((ev.end - ev.start - c.profile.lan_transfer_ms(bytes)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_load_of_one_chunk_is_the_monolithic_booking() {
+        let mut a = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let mut b = Cluster::new(HardwareProfile::rtx3090(), 2);
+        a.inject_straggler(0, 2.5);
+        b.inject_straggler(0, 2.5);
+        let bytes = a.profile.expert_bytes;
+        let (s, e) = a.expert_load(0, 3.0, bytes);
+        let t = b.expert_load_chunked(0, 3.0, bytes, 1, EventKind::ExpertLoad);
+        assert_eq!((s, e), (t.start, t.done()));
+        assert_eq!(t.first_ready(), t.done(), "one chunk: first == last");
+        assert_eq!(
+            a.workers[0].pcie.busy_total(),
+            b.workers[0].pcie.busy_total(),
+            "identical link accounting"
+        );
+    }
+
+    #[test]
+    fn chunk_train_is_contiguous_and_first_chunk_lands_early() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 1);
+        let bytes = c.profile.expert_bytes;
+        let mono = c.profile.pcie_transfer_ms(bytes);
+        let t = c.expert_load_chunked(0, 0.0, bytes, 4, EventKind::ExpertLoad);
+        assert_eq!(t.chunk_ends.len(), 4);
+        assert!(t.first_ready() < mono / 3.0, "first tile resident ~4x earlier");
+        let expected_done = mono + 3.0 * c.profile.chunk_overhead_ms;
+        assert!((t.done() - expected_done).abs() < 1e-9, "{} vs {expected_done}", t.done());
+        for w in t.chunk_ends.windows(2) {
+            assert!(w[1] > w[0], "chunks complete in order");
+        }
+        assert_eq!(t.delivered_by(t.chunk_ends[1]), 2);
+        assert_eq!(t.delivered_by(t.chunk_ends[1] - 1e-9), 1, "in-flight chunk not delivered");
+    }
+
+    #[test]
+    fn abort_of_chunk_train_reclaims_only_undelivered_chunks() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 1);
+        let bytes = c.profile.expert_bytes;
+        let t = c.expert_load_chunked(0, 0.0, bytes, 4, EventKind::ExpertLoad);
+        // Abort mid third chunk: two delivered chunks stay busy (wasted
+        // but transferred), the in-flight tail and the fourth chunk are
+        // reclaimed.
+        let at = (t.chunk_ends[1] + t.chunk_ends[2]) / 2.0;
+        c.workers[0].pcie.preempt(at.max(t.free_before));
+        assert_eq!(c.workers[0].pcie.free_at(), at);
+        assert!((c.workers[0].pcie.busy_total() - at).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_compute_pipelines_behind_the_stream() {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 1);
+        let bytes = c.profile.expert_bytes;
+        let base = c.profile.t_expert_gpu_ms;
+        let t = c.expert_load_chunked(0, 0.0, bytes, 4, EventKind::ExpertLoad);
+        let (start, end) = c.expert_compute_chunked(0, 0.0, base, &t.chunk_ends);
+        assert_eq!(start, t.first_ready(), "first tile starts on the first chunk");
+        // The transfer is the pipeline bottleneck: the last tile runs
+        // right after the last chunk, so the end beats done + base.
+        assert!(end < t.done() + base);
+        assert!((end - (t.done() + base / 4.0)).abs() < 1e-9);
+        // GPU busy time is exactly one FFN regardless of tiling.
+        assert!((c.workers[0].gpu.busy_total() - base).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_compute_with_one_gate_matches_monolithic() {
+        let mut a = Cluster::new(HardwareProfile::rtx3090(), 1);
+        let mut b = Cluster::new(HardwareProfile::rtx3090(), 1);
+        let (s1, e1) = a.expert_compute(0, 5.0, 2.0);
+        let (s2, e2) = b.expert_compute_chunked(0, 5.0, 2.0, &[4.0]);
+        assert_eq!((s1, e1), (s2, e2));
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct HardwareProfile {
     pub pcie_gbps: f64,
     /// Per-transfer PCIe latency.
     pub pcie_lat_ms: Ms,
+    /// Re-issue overhead of each sub-expert chunk after the first when a
+    /// transfer streams as K chunks (descriptor setup / ring doorbell —
+    /// far below the full per-transfer latency). A K-chunk stream costs
+    /// `pcie_transfer_ms(bytes) + (K-1) * chunk_overhead_ms` total, so
+    /// chunk count 1 is exactly the monolithic transfer (DESIGN.md §9).
+    pub chunk_overhead_ms: Ms,
     /// Shared LAN bandwidth, Gb/s.
     pub lan_gbps: f64,
     /// Per-message LAN latency.
@@ -88,6 +94,7 @@ impl HardwareProfile {
             expert_bytes_fp32: 704e6,
             pcie_gbps: 25.0,
             pcie_lat_ms: 0.2,
+            chunk_overhead_ms: 0.01,
             lan_gbps: 1.0,
             lan_lat_ms: 0.15,
             embed_msg_bytes: 16_384.0,
@@ -128,6 +135,42 @@ impl HardwareProfile {
     /// PCIe transfer time for `bytes`.
     pub fn pcie_transfer_ms(&self, bytes: f64) -> Ms {
         bytes / (self.pcie_gbps * 1e9) * 1e3
+    }
+
+    /// Per-chunk durations of a `bytes` transfer streamed as `chunks`
+    /// equal sub-transfers: every chunk moves `1/chunks` of the payload,
+    /// and each chunk after the first pays [`chunk_overhead_ms`]
+    /// (re-issue cost). At `chunks == 1` the single duration is exactly
+    /// [`Self::pcie_transfer_ms`] — the monolithic booking.
+    ///
+    /// [`chunk_overhead_ms`]: HardwareProfile::chunk_overhead_ms
+    pub fn chunk_durations(&self, bytes: f64, chunks: usize) -> Vec<Ms> {
+        assert!(chunks >= 1, "a transfer needs at least one chunk");
+        let per = self.pcie_transfer_ms(bytes) / chunks as f64;
+        (0..chunks)
+            .map(|i| if i == 0 { per } else { per + self.chunk_overhead_ms })
+            .collect()
+    }
+
+    /// Expert-load latency as seen by the decode critical path when the
+    /// transfer streams as `chunks` sub-transfers and the expert FFN
+    /// pipelines behind it (DESIGN.md §9): all but the first chunk can
+    /// hide behind compute, capped by the compute's own length, so the
+    /// effective latency is the full stream minus
+    /// `min(stream - first_chunk, t_expert)`. At `chunks == 1` this is
+    /// exactly [`Self::expert_load_ms`] — nothing hides. The result is
+    /// additionally capped at the monolithic latency: past the point
+    /// where per-chunk overhead outweighs what the pipeline hides
+    /// (absurd chunk counts), a coordinator would fall back to the
+    /// monolithic transfer rather than stream at a loss, so chunking
+    /// never *worsens* the deadline this models.
+    pub fn effective_load_ms(&self, chunks: usize) -> Ms {
+        assert!(chunks >= 1, "a transfer needs at least one chunk");
+        let mono = self.expert_load_ms(1.0);
+        let total = mono + (chunks as f64 - 1.0) * self.chunk_overhead_ms;
+        let first = self.pcie_lat_ms + self.pcie_transfer_ms(self.expert_bytes) / chunks as f64;
+        let hidden = (total - first).min(self.t_expert_gpu_ms).max(0.0);
+        (total - hidden).min(mono)
     }
 
     /// LAN serialization time for `bytes` (latency added per message by
@@ -171,14 +214,19 @@ impl HardwareProfile {
         n_groups as f64 * self.t_main_ms() + (n_groups as f64 - 1.0) * self.t_worker_ms()
     }
 
-    /// Failover feasibility (DESIGN.md §8): can a worker serving `slots`
-    /// expert slots fit all of its per-cycle loads inside the
+    /// Failover feasibility (DESIGN.md §8/§9): can a worker serving
+    /// `slots` expert slots fit all of its per-cycle loads inside the
     /// `n_groups`-stagger Eq. (1) window? A healthy worker serves one
     /// slot; rerouting a dead worker's slot onto it doubles its per-cycle
     /// load time, and `coordinator::schedule::SlotMap::fail` prefers
-    /// targets for which this still holds.
-    pub fn reroute_feasible(&self, slots: usize, n_groups: usize) -> bool {
-        slots as f64 * self.expert_load_ms(1.0) <= self.t_maxload_ms(n_groups)
+    /// targets for which this still holds. The deadline is
+    /// *earliest-first-chunk* aware: with chunked streaming the compute
+    /// pipeline hides all but the first chunk (up to the FFN length), so
+    /// each slot charges [`Self::effective_load_ms`] rather than the
+    /// whole-expert latency — at `chunks == 1` this is the original
+    /// whole-expert-deadline predicate.
+    pub fn reroute_feasible(&self, slots: usize, n_groups: usize, chunks: usize) -> bool {
+        slots as f64 * self.effective_load_ms(chunks) <= self.t_maxload_ms(n_groups)
     }
 }
 
@@ -248,10 +296,60 @@ mod tests {
         // stay stall-free — failover is possible but degraded, which is
         // exactly what the SlotMap's least-loaded fallback models.
         let p = HardwareProfile::rtx3090();
-        assert!(p.reroute_feasible(1, 4), "healthy load fits Eq. (1)");
-        assert!(!p.reroute_feasible(2, 4), "a second slot breaks the window");
+        assert!(p.reroute_feasible(1, 4, 1), "healthy load fits Eq. (1)");
+        assert!(!p.reroute_feasible(2, 4, 1), "a second slot breaks the window");
         // More stagger groups widen the window enough to absorb one.
-        assert!(p.reroute_feasible(2, 8));
+        assert!(p.reroute_feasible(2, 8, 1));
+    }
+
+    #[test]
+    fn chunk_durations_sum_to_transfer_plus_overheads() {
+        let p = HardwareProfile::rtx3090();
+        let total = p.pcie_transfer_ms(p.expert_bytes);
+        assert_eq!(p.chunk_durations(p.expert_bytes, 1), vec![total]);
+        for k in [2usize, 4, 8] {
+            let durs = p.chunk_durations(p.expert_bytes, k);
+            assert_eq!(durs.len(), k);
+            let sum: f64 = durs.iter().sum();
+            let expected = total + (k as f64 - 1.0) * p.chunk_overhead_ms;
+            assert!((sum - expected).abs() < 1e-9, "k={k}: {sum} vs {expected}");
+            // First chunk lands ~K times earlier than the whole expert.
+            assert!(durs[0] < total / (k as f64 - 0.5));
+        }
+    }
+
+    #[test]
+    fn effective_load_shrinks_with_chunking_but_never_below_stream_minus_ffn() {
+        // The pipeline hides at most one FFN worth of transfer, so the
+        // effective latency drops by ~t_expert at K = 2 and then creeps
+        // back up by the per-chunk overhead — always strictly below the
+        // monolithic latency, but not monotone in K.
+        let p = HardwareProfile::rtx3090();
+        assert_eq!(p.effective_load_ms(1), p.expert_load_ms(1.0));
+        for k in [2usize, 4, 8] {
+            let eff = p.effective_load_ms(k);
+            assert!(
+                eff < p.expert_load_ms(1.0),
+                "chunking must shrink the effective latency: {eff}"
+            );
+            let floor = p.expert_load_ms(1.0) + (k as f64 - 1.0) * p.chunk_overhead_ms
+                - p.t_expert_gpu_ms;
+            assert!((eff - floor).abs() < 1e-9, "hiding is FFN-capped on this profile");
+        }
+        // Absurd chunk counts (overhead outweighs the hideable FFN): the
+        // model falls back to the monolithic transfer rather than
+        // streaming at a loss — the deadline never exceeds monolithic.
+        assert_eq!(p.effective_load_ms(1000), p.expert_load_ms(1.0));
+    }
+
+    #[test]
+    fn chunked_streaming_widens_the_effective_eq1_window() {
+        // A profile whose monolithic load *misses* the 4-group window but
+        // whose chunked stream fits: the reroute predicate must notice.
+        let p = HardwareProfile { pcie_gbps: 24.0, ..HardwareProfile::rtx3090() };
+        assert!(p.expert_load_ms(1.0) > p.t_maxload_ms(4), "monolithic load misses");
+        assert!(!p.reroute_feasible(1, 4, 1));
+        assert!(p.reroute_feasible(1, 4, 8), "first-chunk deadline fits the window");
     }
 
     #[test]

@@ -9,10 +9,14 @@
 //! 2. **Prediction** — the shadow's routes become expert predictions with
 //!    availability times `shadow_start + (l+1) * t_shadow_layer`.
 //! 3. **Virtual time** — main-node blocks, LAN hops, per-worker expert
-//!    loads (PCIe), expert computes and mispredict reloads are booked on
-//!    the cluster's resources; each worker holds at most ONE expert at a
+//!    streams (PCIe chunk trains — [`OdMoeConfig::chunks`]; one chunk =
+//!    the monolithic seed booking), tile-pipelined expert computes and
+//!    mispredict aborts/reloads are booked on the cluster's resources;
+//!    at the default depth 0 each worker holds at most ONE expert at a
 //!    time (loaded just-in-time, evicted right after use — the cacheless
-//!    property).
+//!    property), while [`OdMoeConfig::prefetch_depth`] `>= 1` lets SEP's
+//!    predicted next experts stream into residual link slack ahead of
+//!    eviction (DESIGN.md §9).
 //!
 //! The engine also implements [`BatchEngine`]: `run_batch` steps several
 //! concurrent sessions through each decode iteration together, merging
@@ -44,7 +48,7 @@ use super::batch::{merge_distinct, BatchEngine, BatchRunResult};
 use super::prefill::{simulate_odmoe_prefill, PrefillTiming};
 use super::schedule::{GroupSchedule, SlotMap};
 use super::{Engine, PromptResult};
-use crate::cluster::{Cluster, HardwareProfile, Ms};
+use crate::cluster::{ChunkedTransfer, Cluster, HardwareProfile, Ms};
 use crate::engine::{BatchState, ModelState, StepRecord};
 use crate::metrics::correct_count;
 use crate::model::{Precision, WeightStore};
@@ -131,6 +135,20 @@ pub struct OdMoeConfig {
     /// Mini-batches per worker transfer during prefill (Fig. 7; 1 = one
     /// large batch, 0 = adaptive per prompt length).
     pub prefill_minibatches: usize,
+    /// Sub-expert transfer chunks per expert load (DESIGN.md §9): 1 =
+    /// one monolithic PCIe booking (the original behavior, bit-identical
+    /// in tokens AND timings); K > 1 streams the expert's `w1/w3/w2`
+    /// tiles as K dependent chunks and pipelines the expert FFN behind
+    /// them, so compute begins once the first tile is resident.
+    pub chunks: usize,
+    /// Speculative staging depth (DESIGN.md §9): how many predicted
+    /// future experts a worker may stream beyond the one it is still
+    /// computing. 0 = strict single-expert residency (the cacheless
+    /// seed behavior); D >= 1 lets SEP's top-ranked next candidates fill
+    /// residual PCIe slack ahead of eviction — cheap to abort mid-stream
+    /// on mispredict, at the cost of up to D+1 transient experts per
+    /// worker.
+    pub prefetch_depth: usize,
     pub profile: HardwareProfile,
 }
 
@@ -142,17 +160,23 @@ impl Default for OdMoeConfig {
             align: AlignmentConfig::every_iteration(),
             predictor: PredictorMode::Sep,
             prefill_minibatches: 0, // adaptive
+            chunks: 1,
+            prefetch_depth: 0,
             profile: HardwareProfile::rtx3090(),
         }
     }
 }
 
 /// Per-worker pipeline state carried across layers/tokens.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Default)]
 struct WorkerState {
-    /// When this worker's previous expert compute ended (loads for its
-    /// next layer may only start then — single-expert residency).
-    last_ec_end: Ms,
+    /// Completion times of this worker's expert computes, in booking
+    /// order (non-decreasing — the GPU serializes). Prediction-driven
+    /// loads gate on the entry `prefetch_depth` from the end: at depth 0
+    /// the next load waits for the previous expert's eviction (strict
+    /// single-expert residency, the seed behavior); at depth D the link
+    /// may stream up to D future experts while older ones still compute.
+    ec_ends: Vec<Ms>,
 }
 
 /// The OD-MoE serving engine.
@@ -172,6 +196,11 @@ pub struct OdMoeEngine<'rt> {
     sep_slots: Vec<SepPredictor<'rt>>,
     random: Option<RandomPredictor>,
     workers: Vec<WorkerState>,
+    /// Precomputed per-chunk durations of one expert transfer (profile
+    /// and `cfg.chunks` are fixed for the engine's lifetime): the hot
+    /// load path streams straight off this without allocating; only the
+    /// rare failover branch materializes an owned suffix.
+    chunk_durs: Vec<Ms>,
     /// Virtual time at which the main node is ready for the next token.
     now: Ms,
     /// When the shadow node finished its previous iteration.
@@ -189,6 +218,7 @@ pub struct OdMoeEngine<'rt> {
 
 impl<'rt> OdMoeEngine<'rt> {
     pub fn new(rt: &'rt Runtime, ws: WeightStore, cfg: OdMoeConfig) -> Result<Self> {
+        ensure!(cfg.chunks >= 1, "expert transfers need at least one chunk");
         let schedule = GroupSchedule::new(cfg.n_workers, ws.cfg.top_k);
         let slots = SlotMap::from_schedule(&schedule);
         let cluster = Cluster::new(cfg.profile.clone(), cfg.n_workers);
@@ -208,7 +238,8 @@ impl<'rt> OdMoeEngine<'rt> {
             _ => None,
         };
         let main = ModelState::new(rt, ws)?;
-        let workers = vec![WorkerState { last_ec_end: 0.0 }; cfg.n_workers];
+        let workers = vec![WorkerState::default(); cfg.n_workers];
+        let chunk_durs = cfg.profile.chunk_durations(cfg.profile.expert_bytes, cfg.chunks);
         let mut engine = Self {
             cfg,
             cluster,
@@ -219,6 +250,7 @@ impl<'rt> OdMoeEngine<'rt> {
             sep_slots: Vec::new(),
             random,
             workers,
+            chunk_durs,
             now: 0.0,
             shadow_free: 0.0,
             plan: Vec::new(),
@@ -299,13 +331,15 @@ impl<'rt> OdMoeEngine<'rt> {
     /// Fail-stop worker `w` at `at`: freeze its resources, drop its
     /// memory contents, and reassign its slots across survivors,
     /// preferring targets whose projected load still fits the Eq. (1)
-    /// no-stall window.
+    /// no-stall window (earliest-first-chunk aware when transfers are
+    /// chunked — see [`HardwareProfile::reroute_feasible`]).
     fn apply_worker_failure(&mut self, w: usize, at: Ms) {
         self.pending_fail.retain(|&(pw, _)| pw != w);
         self.cluster.fail_worker(w, at);
         let p = self.cluster.profile.clone();
         let n_groups = self.schedule.n_groups();
-        self.slots.fail(w, |slots| p.reroute_feasible(slots, n_groups));
+        let chunks = self.cfg.chunks;
+        self.slots.fail(w, |slots| p.reroute_feasible(slots, n_groups, chunks));
     }
 
     /// Apply every worker failure due by `t` — the coordinator's
@@ -352,25 +386,45 @@ impl<'rt> OdMoeEngine<'rt> {
         !self.cluster.shadow.is_alive()
     }
 
-    /// Book one expert load for slot `(layer, slot)`, rerouting around
-    /// node deaths: a worker already dead when the load would be
-    /// dispatched was skipped by the slot map; a worker that dies
-    /// mid-transfer freezes at the failure instant, and the coordinator
-    /// re-dispatches the load to the slot's replacement one LAN
-    /// notification later. `respect_residency` gates the transfer start
-    /// behind the target's previous expert eviction (prediction-driven
-    /// and conventional reactive loads); mispredict reloads skip it,
-    /// exactly like the seed's reload path. Returns (worker, load done,
-    /// link free_at before the booking).
+    /// The instant slot loads targeting worker `w` may start streaming:
+    /// the eviction of the expert `prefetch_depth` computes back. Depth 0
+    /// is the previous expert's eviction (strict single-expert residency,
+    /// the seed behavior); depth D lets D future experts stream while
+    /// older ones still compute (DESIGN.md §9).
+    fn residency_gate(&self, w: usize) -> Ms {
+        let ends = &self.workers[w].ec_ends;
+        match ends.len().checked_sub(1 + self.cfg.prefetch_depth) {
+            Some(i) => ends[i],
+            None => 0.0,
+        }
+    }
+
+    /// Book one expert load for slot `(layer, slot)` as a chunk train
+    /// (`cfg.chunks` chunks; one chunk = the monolithic booking),
+    /// rerouting around node deaths: a worker already dead when the load
+    /// would be dispatched was skipped by the slot map; a worker that
+    /// dies mid-transfer freezes at the failure instant, and the
+    /// coordinator re-books **only the chunks the dead worker hadn't
+    /// delivered** on the slot's replacement one LAN notification later
+    /// (in-flight streams are mirrored at the slot's failover target;
+    /// the mirror is dropped once the stream completes — cacheless — so
+    /// a post-stream death re-streams in full, see DESIGN.md §9).
+    /// `respect_residency` gates the
+    /// stream start behind the target's residency window (prediction-
+    /// driven and conventional reactive loads); mispredict reloads skip
+    /// it, exactly like the seed's reload path.
     fn load_with_failover(
         &mut self,
         layer: usize,
         slot: usize,
         mut earliest: Ms,
         respect_residency: bool,
-    ) -> (usize, Ms, Ms) {
+    ) -> ChunkedTransfer {
         let bytes = self.cluster.profile.expert_bytes;
         let lan_lat = self.cluster.profile.lan_lat_ms;
+        // Owned suffix only materializes on the rare failover branch;
+        // the common case streams off the precomputed train.
+        let mut remaining: Option<Vec<Ms>> = None;
         loop {
             let w = self.slots.worker_for(layer, slot);
             if let Some(at) = self.pending_worker_fail(w) {
@@ -380,37 +434,74 @@ impl<'rt> OdMoeEngine<'rt> {
                 }
             }
             let start_at = if respect_residency {
-                earliest.max(self.workers[w].last_ec_end)
+                earliest.max(self.residency_gate(w))
             } else {
                 earliest
             };
-            let free_before = self.cluster.workers[w].pcie.free_at();
-            let (_, done) = self.cluster.expert_load(w, start_at, bytes);
+            // A stream that jumps the residency gate (depth >= 1) is the
+            // speculative slack-filler; tag it so timelines show it.
+            let kind = if respect_residency
+                && self.cfg.prefetch_depth > 0
+                && start_at < self.workers[w].ec_ends.last().copied().unwrap_or(0.0)
+            {
+                EventKind::Prefetch
+            } else {
+                EventKind::ExpertLoad
+            };
+            let durs: &[Ms] = match &remaining {
+                Some(d) => d,
+                None => &self.chunk_durs,
+            };
+            let t = self.cluster.expert_load_chunks(w, start_at, durs, kind);
             if let Some(at) = self.pending_worker_fail(w) {
-                if at < done {
-                    // The transfer dies with the node: the link freezes at
-                    // the failure instant; the replacement gets the load
-                    // after the failure notice reaches the coordinator.
+                if at < t.done() {
+                    // The stream dies with the node: the link freezes at
+                    // the failure instant; the replacement re-books the
+                    // undelivered suffix of the train after the failure
+                    // notice reaches the coordinator.
+                    let delivered = t.delivered_by(at);
+                    let suffix = match &remaining {
+                        Some(d) => d[delivered..].to_vec(),
+                        None => self.chunk_durs[delivered..].to_vec(),
+                    };
                     self.apply_worker_failure(w, at);
                     self.failovers += 1;
+                    remaining = Some(suffix);
                     earliest = earliest.max(at + lan_lat);
                     continue;
                 }
             }
             self.cluster.workers[w].alloc(bytes as u64);
-            return (w, done, free_before);
+            // The ledger mutates in program order, but a stream that
+            // jumped the residency gate co-resides (in virtual time)
+            // with every expert still computing when its booking began —
+            // their deallocs already happened in program order. Record
+            // the true transient peak without moving steady-state usage.
+            // (`t.start`, the actual booked start, not the requested
+            // `start_at`: a backlogged link can begin far later, by when
+            // older experts have genuinely left.)
+            let overlap = self.workers[w].ec_ends.iter().filter(|&&e| e > t.start).count();
+            if overlap > 0 {
+                let extra = overlap as u64 * bytes as u64;
+                self.cluster.workers[w].alloc(extra);
+                self.cluster.workers[w].dealloc(extra);
+            }
+            return t;
         }
     }
 
-    /// Gate result disagreed with a prediction-driven load that completed
-    /// at `done`: evict the wrong expert and cancel whatever is still in
-    /// flight on the link. Only the frontier transfer on a link can be
-    /// cancelled mid-flight (an earlier wasted transfer already completed
-    /// behind it and is simply evicted), and the cancellation never
-    /// rewinds the link below work queued ahead of the aborted transfer
-    /// (`free_before`). A worker that died meanwhile already lost both
-    /// the expert and the transfer with the node.
-    fn abort_predicted(&mut self, w: usize, done: Ms, reactive_t: Ms, free_before: Ms) {
+    /// Gate result disagreed with a prediction-driven stream: evict the
+    /// wrong expert and cancel whatever of its train is still in flight
+    /// on the link. Chunks delivered before the abort stay booked (wasted
+    /// but transferred); the in-flight chunk's tail and every unstarted
+    /// chunk are reclaimed, and the cancellation never rewinds the link
+    /// below work queued ahead of the aborted train (`free_before`). Only
+    /// the frontier train on a link can be cancelled mid-flight (an
+    /// earlier wasted train already completed behind it and is simply
+    /// evicted). A worker that died meanwhile already lost both the
+    /// expert and the stream with the node.
+    fn abort_predicted(&mut self, t: &ChunkedTransfer, reactive_t: Ms) {
+        let w = t.worker;
         if let Some(at) = self.pending_worker_fail(w) {
             if at <= reactive_t {
                 self.apply_worker_failure(w, at);
@@ -419,42 +510,48 @@ impl<'rt> OdMoeEngine<'rt> {
         if self.cluster.workers[w].is_alive() {
             let bytes = self.cluster.profile.expert_bytes as u64;
             self.cluster.workers[w].dealloc(bytes);
-            if self.cluster.workers[w].pcie.free_at() <= done {
-                self.cluster.workers[w].pcie.preempt(reactive_t.max(free_before));
+            if self.cluster.workers[w].pcie.free_at() <= t.done() {
+                self.cluster.workers[w].pcie.preempt(reactive_t.max(t.free_before));
             }
         }
     }
 
     /// Book the expert compute for slot `(layer, slot)` on `holder` (the
-    /// worker its expert was loaded on). If the holder dies before the
-    /// compute finishes, the expert is lost with the node: the slot's
-    /// replacement re-loads it (one LAN notification after the failure)
-    /// and computes there. Evicts the expert after the compute
-    /// (cacheless) and advances the worker's residency clock. Returns the
-    /// compute end.
+    /// worker its expert was streamed to), one tile per chunk gated on
+    /// that chunk's arrival (`gates`) — the FFN pipelines behind the
+    /// transfer and ends no later than the monolithic compute would. If
+    /// the holder dies before the compute finishes, the expert is lost
+    /// with the node: the slot's replacement re-streams it (one LAN
+    /// notification after the failure) and the tiles re-gate on the new
+    /// train. Evicts the expert after the compute (cacheless) and
+    /// advances the worker's residency history. Returns the compute end.
     fn compute_with_failover(
         &mut self,
         layer: usize,
         slot: usize,
         mut holder: usize,
-        mut earliest: Ms,
+        earliest: Ms,
         base_ms: Ms,
+        gates: &[Ms],
     ) -> Ms {
         let bytes = self.cluster.profile.expert_bytes as u64;
         let lan_lat = self.cluster.profile.lan_lat_ms;
+        // Owned gates only materialize on the (rare) failover branch —
+        // the common case computes straight off the caller's slice.
+        let mut restreamed: Option<Vec<Ms>> = None;
         loop {
-            // The holder may have died since its load completed (its own
+            // The holder may have died since its stream completed (its own
             // pending failure applied below, or another slot's failover):
             // the expert is lost with the node, so the slot's replacement
-            // re-loads and recomputes. This branch is the single counting
-            // point for compute-side failovers — every compute recovery
-            // (including a mid-compute abort, which re-enters here) passes
-            // through it exactly once.
+            // re-streams and recomputes. This branch is the single
+            // counting point for compute-side failovers — every compute
+            // recovery (including a mid-compute abort, which re-enters
+            // here) passes through it exactly once.
             if let Some(at) = self.cluster.workers[holder].failed_at() {
                 self.failovers += 1;
-                let (w, done, _) = self.load_with_failover(layer, slot, at + lan_lat, false);
-                holder = w;
-                earliest = earliest.max(done);
+                let t = self.load_with_failover(layer, slot, at + lan_lat, false);
+                holder = t.worker;
+                restreamed = Some(t.chunk_ends);
                 continue;
             }
             if let Some(at) = self.pending_worker_fail(holder) {
@@ -463,7 +560,9 @@ impl<'rt> OdMoeEngine<'rt> {
                     continue;
                 }
             }
-            let (_, ec_end) = self.cluster.expert_compute(holder, earliest, base_ms);
+            let tile_gates = restreamed.as_deref().unwrap_or(gates);
+            let (_, ec_end) =
+                self.cluster.expert_compute_chunked(holder, earliest, base_ms, tile_gates);
             if let Some(at) = self.pending_worker_fail(holder) {
                 if at < ec_end {
                     // Node dies mid-compute: freeze it; the dead-holder
@@ -473,7 +572,19 @@ impl<'rt> OdMoeEngine<'rt> {
                 }
             }
             self.cluster.workers[holder].dealloc(bytes);
-            self.workers[holder].last_ec_end = self.workers[holder].last_ec_end.max(ec_end);
+            let ends = &mut self.workers[holder].ec_ends;
+            ends.push(ec_end);
+            // Only the freshest entries are ever read: the residency
+            // gate wants the (depth+1)-th newest, and the overlap count
+            // involves experts still computing at a new stream's start —
+            // which the gate bounds to the newest depth entries (plus
+            // one for ungated reloads). Truncating keeps both reads
+            // exact for gated loads and O(1) per token.
+            let keep = self.cfg.prefetch_depth + 2;
+            if ends.len() > keep {
+                let drop = ends.len() - keep;
+                ends.drain(..drop);
+            }
             return ec_end;
         }
     }
@@ -576,22 +687,22 @@ impl<'rt> OdMoeEngine<'rt> {
             // reached the worker AND its previous expert was evicted; the
             // reactive (gate-result-driven) path starts at M_l end.
             let reactive_t = m_end + p.lan_lat_ms;
-            // Phase 1 — prediction-driven loads, one per slot.
-            let mut holders: Vec<(usize, Ms)> = vec![(usize::MAX, 0.0); group_size];
-            let mut aborts: Vec<(usize, Ms, Ms)> = Vec::new(); // (worker, done, free_before)
+            // Phase 1 — prediction-driven streams, one per slot.
+            let mut holders: Vec<Option<ChunkedTransfer>> =
+                (0..group_size).map(|_| None).collect();
+            let mut aborts: Vec<ChunkedTransfer> = Vec::new();
             let mut pending: Vec<(usize, bool)> = Vec::new(); // (slot, residency-gated)
             for slot in 0..group_size {
                 match predicted.get(slot).copied() {
                     Some(pe) if pred_avail[l] <= reactive_t => {
-                        let (w, done, free_before) =
-                            self.load_with_failover(l, slot, pred_avail[l], true);
+                        let t = self.load_with_failover(l, slot, pred_avail[l], true);
                         if actual.experts.contains(&pe) {
-                            holders[slot] = (w, done);
+                            holders[slot] = Some(t);
                         } else {
                             // Mispredict: the reload is gate-driven (the
                             // link is cancelled first, so no residency
                             // wait — the seed's reload path).
-                            aborts.push((w, done, free_before));
+                            aborts.push(t);
                             pending.push((slot, false));
                         }
                     }
@@ -600,16 +711,24 @@ impl<'rt> OdMoeEngine<'rt> {
                     _ => pending.push((slot, true)),
                 }
             }
-            // Phase 2 — gate result: cancel mispredicted transfers.
-            for &(w, done, free_before) in &aborts {
-                self.abort_predicted(w, done, reactive_t, free_before);
+            // Phase 2 — gate result: cancel mispredicted streams (their
+            // undelivered chunks are reclaimed; delivered chunks stay
+            // booked and are simply evicted).
+            for t in &aborts {
+                self.abort_predicted(t, reactive_t);
             }
             // Phase 3 — reloads + reactive loads.
             for &(slot, residency) in &pending {
-                let (w, done, _) = self.load_with_failover(l, slot, reactive_t, residency);
-                holders[slot] = (w, done);
+                let t = self.load_with_failover(l, slot, reactive_t, residency);
+                holders[slot] = Some(t);
             }
-            let expert_ready = holders.iter().fold(0.0f64, |m, &(_, r)| m.max(r));
+            let holders: Vec<ChunkedTransfer> =
+                holders.into_iter().map(|h| h.expect("every slot placed")).collect();
+            // EC may begin once every expert's FIRST chunk is resident
+            // (at chunk count 1, first == last — the seed's whole-expert
+            // gate); later tiles gate on their own chunks below.
+            let expert_ready =
+                holders.iter().fold(0.0f64, |m, t| m.max(t.first_ready()));
 
             // Embedding ships to the group after M_l.
             let embed_arrival = self.cluster.lan_send(m_end, p.embed_msg_bytes, "embed");
@@ -627,11 +746,17 @@ impl<'rt> OdMoeEngine<'rt> {
 
             // EC_l on the group's devices (parallel while slots map to
             // distinct workers; serialized where failures concentrated
-            // slots on one survivor).
+            // slots on one survivor), tile-pipelined behind each stream.
             let mut ec_end_max = ec_earliest;
-            for (slot, &(w, _)) in holders.iter().enumerate() {
-                let ec_end =
-                    self.compute_with_failover(l, slot, w, ec_earliest, p.t_expert_gpu_ms);
+            for (slot, t) in holders.iter().enumerate() {
+                let ec_end = self.compute_with_failover(
+                    l,
+                    slot,
+                    t.worker,
+                    ec_earliest,
+                    p.t_expert_gpu_ms,
+                    &t.chunk_ends,
+                );
                 ec_end_max = ec_end_max.max(ec_end);
             }
 
@@ -658,7 +783,14 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
             PredictorMode::Random => "random-prefetch".into(),
             PredictorMode::None => "no-prefetch".into(),
         };
-        format!("od-moe({mode})")
+        if self.cfg.chunks > 1 || self.cfg.prefetch_depth > 0 {
+            format!(
+                "od-moe({mode},chunks{},depth{})",
+                self.cfg.chunks, self.cfg.prefetch_depth
+            )
+        } else {
+            format!("od-moe({mode})")
+        }
     }
 
     fn reset(&mut self) -> Result<()> {
@@ -675,7 +807,7 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         }
         self.failovers = 0;
         for w in &mut self.workers {
-            w.last_ec_end = 0.0;
+            w.ec_ends.clear();
         }
         self.now = 0.0;
         self.shadow_free = 0.0;
@@ -864,46 +996,45 @@ impl<'rt> OdMoeEngine<'rt> {
                 Vec::new()
             };
 
-            // Phase 1 — prediction-driven loads: ONE per distinct predicted
-            // expert, round-robin over the layer's slots (the slot map
-            // routes each slot to its current live worker).
-            // (expert, slot, worker, done, link free_at before booking)
-            let mut pred_loaded: Vec<(usize, usize, usize, Ms, Ms)> = Vec::new();
+            // Phase 1 — prediction-driven streams: ONE per distinct
+            // predicted expert, round-robin over the layer's slots (the
+            // slot map routes each slot to its current live worker).
+            let mut pred_loaded: Vec<(usize, usize, ChunkedTransfer)> = Vec::new();
             for (i, &(pe, _)) in pred_set.iter().enumerate() {
                 let slot = i % group_size;
-                let (w, done, free_before) =
-                    self.load_with_failover(l, slot, pred_avail[l], true);
-                pred_loaded.push((pe, slot, w, done, free_before));
+                let t = self.load_with_failover(l, slot, pred_avail[l], true);
+                pred_loaded.push((pe, slot, t));
             }
 
-            // Phase 2 — gate result: abort mispredicted transfers (only
-            // the frontier transfer on a link can be cancelled mid-flight;
-            // earlier wasted transfers already completed behind it and are
-            // simply evicted — see `abort_predicted`). At batch 1 this is
-            // exactly the sequential mispredict abort.
+            // Phase 2 — gate result: abort mispredicted streams (only the
+            // frontier train on a link can be cancelled mid-flight;
+            // earlier wasted trains already completed behind it and are
+            // simply evicted — see `abort_predicted`; delivered chunks of
+            // the frontier train stay booked). At batch 1 this is exactly
+            // the sequential mispredict abort.
             let in_actual = |e: usize| actual_set.iter().any(|&(a, _)| a == e);
-            for &(pe, _, w, done, free_before) in &pred_loaded {
-                if in_actual(pe) {
+            for entry in &pred_loaded {
+                if in_actual(entry.0) {
                     continue;
                 }
                 counters.aborted_loads += 1;
-                self.abort_predicted(w, done, reactive_t, free_before);
+                self.abort_predicted(&entry.2, reactive_t);
             }
 
             // Phase 3 — place every distinct actual expert: inherit the
-            // confirmed predicted load, else load reactively on the
+            // confirmed predicted stream, else load reactively on the
             // least-loaded slot. One load serves every session that
             // routed to the expert — the amortization at the heart of
             // batched decode.
             let mut ec_count: Vec<usize> = vec![0; group_size];
-            let mut placed: Vec<(usize, usize, usize, Ms)> = Vec::new(); // (rows, slot, worker, ready)
+            let mut placed: Vec<(usize, usize, ChunkedTransfer)> = Vec::new(); // (rows, slot, stream)
             let mut pending: Vec<usize> = Vec::new(); // row counts needing a load
             for &(ae, cnt) in &actual_set {
-                match pred_loaded.iter().find(|&&(pe, _, _, _, _)| pe == ae) {
-                    Some(&(_, slot, w, done, _)) => {
-                        ec_count[slot] += 1;
+                match pred_loaded.iter().find(|entry| entry.0 == ae) {
+                    Some(entry) => {
+                        ec_count[entry.1] += 1;
                         counters.expert_loads += 1;
-                        placed.push((cnt, slot, w, done));
+                        placed.push((cnt, entry.1, entry.2.clone()));
                     }
                     None => pending.push(cnt),
                 }
@@ -916,14 +1047,17 @@ impl<'rt> OdMoeEngine<'rt> {
                 // Reactive path: on the gate result. With a usable (but
                 // wrong) prediction the link was just cancelled, exactly
                 // like the sequential mispredict reload; without one the
-                // load also waits for the previous expert's eviction.
-                let (w, done, _) = self.load_with_failover(l, slot, reactive_t, !usable);
+                // load also waits for the residency window.
+                let t = self.load_with_failover(l, slot, reactive_t, !usable);
                 counters.expert_loads += 1;
-                placed.push((cnt, slot, w, done));
+                placed.push((cnt, slot, t));
             }
 
             // Embeddings for all B tokens ship to the group after M_l.
-            let expert_ready = placed.iter().fold(0.0f64, |m, &(_, _, _, r)| m.max(r));
+            // EC gates on every placed expert's FIRST chunk (== the whole
+            // expert at chunk count 1, the seed's gate).
+            let expert_ready =
+                placed.iter().fold(0.0f64, |m, (_, _, t)| m.max(t.first_ready()));
             let embed_arrival =
                 self.cluster.lan_send(m_end, p.embed_msg_bytes * b as f64, "embed");
             let ec_earliest = embed_arrival.max(expert_ready);
@@ -939,16 +1073,23 @@ impl<'rt> OdMoeEngine<'rt> {
             }
 
             // EC_l: each distinct expert computes its routed tokens as one
-            // batched FFN; a worker hosting several experts runs them
-            // back to back (evicting each — cacheless — right after).
-            // Slot order matches the sequential EC loop at batch 1; the
-            // order is aggregate-neutral otherwise (per-link bookings
-            // commute under max).
-            placed.sort_by_key(|&(_, slot, _, _)| slot);
+            // batched FFN, tile-pipelined behind its stream; a worker
+            // hosting several experts runs them back to back (evicting
+            // each — cacheless — right after). Slot order matches the
+            // sequential EC loop at batch 1; the order is
+            // aggregate-neutral otherwise (per-link bookings commute
+            // under max).
+            placed.sort_by_key(|&(_, slot, _)| slot);
             let mut ec_end_max = ec_earliest;
-            for &(cnt, slot, w, _) in &placed {
-                let ec_end =
-                    self.compute_with_failover(l, slot, w, ec_earliest, p.expert_batch_ms(cnt));
+            for (cnt, slot, t) in &placed {
+                let ec_end = self.compute_with_failover(
+                    l,
+                    *slot,
+                    t.worker,
+                    ec_earliest,
+                    p.expert_batch_ms(*cnt),
+                    &t.chunk_ends,
+                );
                 ec_end_max = ec_end_max.max(ec_end);
             }
 
@@ -1082,6 +1223,13 @@ mod tests {
                 FailureSpec::Shadow { at_ms: 20.0 },
             ]
         );
+    }
+
+    #[test]
+    fn default_config_is_the_seed_behavior() {
+        let cfg = OdMoeConfig::default();
+        assert_eq!(cfg.chunks, 1, "default = monolithic transfers");
+        assert_eq!(cfg.prefetch_depth, 0, "default = strict single-expert residency");
     }
 
     #[test]

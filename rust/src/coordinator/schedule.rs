@@ -317,11 +317,33 @@ mod tests {
     fn fail_uses_the_profile_feasibility_predicate() {
         // The engine passes HardwareProfile::reroute_feasible directly:
         // on the knife's-edge paper profile nothing absorbs a second
-        // slot, so the reroute falls back to the least-loaded survivor.
+        // slot monolithically, so the reroute falls back to the
+        // least-loaded survivor.
         let p = HardwareProfile::rtx3090();
         let mut m = SlotMap::new(8, 2);
-        let moves = m.fail(7, |slots| p.reroute_feasible(slots, 4));
+        let moves = m.fail(7, |slots| p.reroute_feasible(slots, 4, 1));
         assert_eq!(moves, vec![(3, 1, 0)], "least-loaded fallback, lowest id");
+    }
+
+    #[test]
+    fn chunked_feasibility_is_never_stricter_than_monolithic() {
+        // Earliest-first-chunk deadlines only ever widen the window: any
+        // (slots, groups) pair feasible monolithically stays feasible
+        // under chunked streaming.
+        let p = HardwareProfile::rtx3090();
+        for slots in 1..4usize {
+            for groups in [2usize, 4, 8] {
+                for chunks in [2usize, 4, 8] {
+                    if p.reroute_feasible(slots, groups, 1) {
+                        assert!(
+                            p.reroute_feasible(slots, groups, chunks),
+                            "chunking ({chunks}) must not shrink the window \
+                             ({slots} slots, {groups} groups)"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

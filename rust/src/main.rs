@@ -11,6 +11,9 @@
 //!                   [--batch-sweep [--batches B1,B2,..] [--distinct-prompts]]
 //!                   [--fail worker3@500,shadow@800] [--fail-replica 0@500]
 //!                   [--failover-sweep [--max-failed K] [--fail-at-ms MS]]
+//! od-moe decode     [--out-tokens N] [--chunks K] [--prefetch-depth D]
+//!                   [--overlap-sweep [--chunks K1,K2,..] [--depths D1,D2,..]]
+//!                                                     chunked-streaming decode (§9)
 //! od-moe recall     [--prompts N] [--out-tokens N]    SEP recall curves (Fig. 3/6)
 //! od-moe speed      [--prompts N] [--out-tokens N]    decoding speed (Fig. 8/9/10)
 //! od-moe predictors [--prompts N] [--out-tokens N]    Table 1 comparison
@@ -24,7 +27,10 @@
 //! `serve --batch-sweep` sweeps batched decode over batch size x arrival
 //! rate and writes `BENCH_batch.json` (batch 1 = the sequential
 //! baseline); `serve --failover-sweep` decodes under 0..=K fail-stopped
-//! workers and writes `BENCH_failover.json` (DESIGN.md §8).
+//! workers and writes `BENCH_failover.json` (DESIGN.md §8);
+//! `decode --overlap-sweep` sweeps chunked expert streaming over chunk
+//! count x prefetch depth and writes `BENCH_overlap.json` (chunks 1 =
+//! the monolithic baseline, DESIGN.md §9).
 //! ```
 
 use anyhow::{bail, Result};
@@ -35,7 +41,7 @@ mod cli;
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let Some(cmd) = args.subcommand.clone() else {
-        eprintln!("usage: od-moe <serve|recall|speed|predictors|quality|memory> [--flags]");
+        eprintln!("usage: od-moe <serve|decode|recall|speed|predictors|quality|memory> [--flags]");
         bail!("missing subcommand");
     };
     let seed = args.u64_or("seed", 42)?;
@@ -49,6 +55,7 @@ fn main() -> Result<()> {
     };
     match cmd.as_str() {
         "serve" => cli::serve(&rt, seed, &args),
+        "decode" => cli::decode(&rt, seed, &args),
         "recall" => cli::recall(&rt, seed, &args),
         "speed" => cli::speed(&rt, seed, &args),
         "predictors" => cli::predictors(&rt, seed, &args),

@@ -42,14 +42,25 @@ pub enum Precision {
 }
 
 impl Precision {
-    /// Bytes per parameter when stored/transferred at this precision
-    /// (NF4: 4-bit codes + one f32 scale per 64-element block).
-    pub fn bytes_per_param(self) -> f64 {
+    /// Bytes per parameter when stored/transferred at this precision,
+    /// for weight rows of `row_len` elements.
+    ///
+    /// Scale metadata follows the actual quantization schemes in this
+    /// module: INT8 keeps ONE f32 absmax per *row* (see
+    /// [`fake_quant_int8`]), so its overhead is `4 / row_len` and
+    /// depends on the matrix shape; NF4 keeps one f32 scale per
+    /// [`NF4_BLOCK`]-element block regardless of row length (see
+    /// [`fake_quant_nf4`]). (The old formula amortized the INT8 scale
+    /// per `NF4_BLOCK` elements — the NF4 constant — contradicting the
+    /// documented per-row scheme; a 4096-wide row really costs
+    /// ~1.001 B/param, not 1.0625.)
+    pub fn bytes_per_param(self, row_len: usize) -> f64 {
+        assert!(row_len > 0, "a weight row has at least one element");
         match self {
             Precision::Fp32 => 4.0,
             Precision::Fp16 => 2.0,
-            Precision::Int8 => 1.0 + 4.0 / NF4_BLOCK as f64, // + per-row scale amortized
-            Precision::Nf4 => 0.5 + 4.0 / NF4_BLOCK as f64,
+            Precision::Int8 => 1.0 + 4.0 / row_len as f64, // one f32 absmax per row
+            Precision::Nf4 => 0.5 + 4.0 / NF4_BLOCK as f64, // one f32 scale per block
         }
     }
 
@@ -289,8 +300,42 @@ mod tests {
 
     #[test]
     fn bytes_per_param_ordering() {
-        assert!(Precision::Fp32.bytes_per_param() > Precision::Fp16.bytes_per_param());
-        assert!(Precision::Fp16.bytes_per_param() > Precision::Int8.bytes_per_param());
-        assert!(Precision::Int8.bytes_per_param() > Precision::Nf4.bytes_per_param());
+        // Any row length wide enough for INT8's per-row scale to beat
+        // FP16 (row_len > 4) preserves the precision ordering.
+        for row_len in [8usize, 64, 4096] {
+            assert!(
+                Precision::Fp32.bytes_per_param(row_len)
+                    > Precision::Fp16.bytes_per_param(row_len)
+            );
+            assert!(
+                Precision::Fp16.bytes_per_param(row_len)
+                    > Precision::Int8.bytes_per_param(row_len)
+            );
+            assert!(
+                Precision::Int8.bytes_per_param(row_len)
+                    > Precision::Nf4.bytes_per_param(row_len)
+            );
+        }
+    }
+
+    #[test]
+    fn int8_scale_overhead_is_per_row_not_per_nf4_block() {
+        // The per-row absmax scheme: exactly one f32 per row, so the
+        // amortized overhead shrinks with row length — unlike NF4, whose
+        // block size is fixed.
+        assert_eq!(Precision::Int8.bytes_per_param(64), 1.0 + 4.0 / 64.0);
+        assert_eq!(Precision::Int8.bytes_per_param(4096), 1.0 + 4.0 / 4096.0);
+        assert!(
+            Precision::Int8.bytes_per_param(4096) < Precision::Int8.bytes_per_param(64),
+            "wider rows amortize the per-row scale further"
+        );
+        // NF4's overhead is row-length independent.
+        assert_eq!(
+            Precision::Nf4.bytes_per_param(64),
+            Precision::Nf4.bytes_per_param(4096)
+        );
+        // One 64-wide row happens to match the old constant — the bug
+        // only showed on rows wider than one NF4 block.
+        assert!((Precision::Int8.bytes_per_param(64) - 1.0625).abs() < 1e-12);
     }
 }

@@ -1,4 +1,4 @@
-//! Sweep drivers for the serving layer's two deterministic artifacts:
+//! Sweep drivers for the serving layer's deterministic artifacts:
 //!
 //! * [`rate_sweep`] → `BENCH_serve.json` — "what does OD-MoE's cacheless
 //!   loading buy you at 0.5–8 req/s?"
@@ -6,6 +6,12 @@
 //!   on top?", sweeping batch size x arrival rate against the sequential
 //!   (`max_batch = 1`) baseline, with engine-side expert-loads-per-token
 //!   tallies showing the amortization directly.
+//! * [`failover_sweep`] → `BENCH_failover.json` — decode under 0..=K
+//!   fail-stopped workers (DESIGN.md §8).
+//! * [`overlap_sweep`] → `BENCH_overlap.json` — ms/token and
+//!   fraction-of-fully-cached vs. transfer chunk count and speculative
+//!   prefetch depth (DESIGN.md §9), read against the monolithic
+//!   (chunks 1, depth 0) baseline.
 //!
 //! Each (system, point) run regenerates the workload at that rate from
 //! the *same* seed — prompts and lengths are identical across points
@@ -57,20 +63,46 @@ pub fn parse_replica_failures(s: &str) -> Result<Vec<(usize, f64)>> {
         .collect()
 }
 
-/// Parse a `--batches 1,2,4,8` list. Batch 1 — the sequential baseline —
-/// is prepended when absent, so every sweep carries its own reference.
-pub fn parse_batches(s: &str) -> Result<Vec<usize>> {
-    let mut batches: Vec<usize> = s
+/// Parse a comma-separated usize sweep list, enforcing a minimum value
+/// and prepending the sweep's `baseline` point when absent — the one
+/// grammar behind `--batches`, `--chunks` and `--depths`, so their
+/// validation cannot drift apart.
+fn parse_usize_sweep(s: &str, what: &str, min: usize, baseline: usize) -> Result<Vec<usize>> {
+    let mut values: Vec<usize> = s
         .split(',')
         .filter(|p| !p.trim().is_empty())
         .map(|p| p.trim().parse::<usize>())
-        .collect::<std::result::Result<_, _>>()?;
-    ensure!(!batches.is_empty(), "--batches needs at least one batch size");
-    ensure!(batches.iter().all(|&b| b >= 1), "batch sizes must be >= 1, got {batches:?}");
-    if !batches.contains(&1) {
-        batches.insert(0, 1);
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad {what} list {s:?}"))?;
+    ensure!(!values.is_empty(), "{what} list needs at least one entry");
+    ensure!(
+        values.iter().all(|&v| v >= min),
+        "every {what} must be >= {min}, got {values:?}"
+    );
+    if !values.contains(&baseline) {
+        values.insert(0, baseline);
     }
-    Ok(batches)
+    Ok(values)
+}
+
+/// Parse a `--batches 1,2,4,8` list. Batch 1 — the sequential baseline —
+/// is prepended when absent, so every sweep carries its own reference.
+pub fn parse_batches(s: &str) -> Result<Vec<usize>> {
+    parse_usize_sweep(s, "batch size", 1, 1)
+}
+
+/// Parse a `--chunks 1,2,4,8` list for the overlap sweep. Chunk count 1
+/// — the monolithic baseline every other point is read against — is
+/// prepended when absent.
+pub fn parse_chunk_counts(s: &str) -> Result<Vec<usize>> {
+    parse_usize_sweep(s, "chunk count", 1, 1)
+}
+
+/// Parse a `--depths 0,1,2` prefetch-depth list for the overlap sweep.
+/// Depth 0 — strict single-expert residency, the seed behavior — is
+/// prepended when absent.
+pub fn parse_depths(s: &str) -> Result<Vec<usize>> {
+    parse_usize_sweep(s, "prefetch depth", 0, 0)
 }
 
 /// Build the workload + scheduler configuration from CLI flags — shared
@@ -419,6 +451,138 @@ pub fn failover_json(
     ])
 }
 
+/// One point of an [`overlap_sweep`]: decode with expert transfers
+/// streamed as `chunks` chunks at speculative staging depth
+/// `prefetch_depth`, read against the monolithic (1, 0) baseline and the
+/// fully-cached ceiling (DESIGN.md §9).
+#[derive(Debug, Clone)]
+pub struct OverlapPoint {
+    pub chunks: usize,
+    pub prefetch_depth: usize,
+    pub decode_ms: f64,
+    /// Decode virtual time per generated token.
+    pub ms_per_token: f64,
+    /// `fully-cached ms/token / this point's ms/token` — the paper's
+    /// headline "fraction of fully-cached decode speed" (≈ 0.75 for the
+    /// monolithic baseline on the default profile; chunking closes the
+    /// gap).
+    pub frac_of_fully_cached: f64,
+    pub stall_ms: f64,
+    /// Prediction-driven streams aborted at the gate result.
+    pub aborted_loads: u64,
+    /// The overlap contract: chunking changes *when* bytes move, never
+    /// *which* tokens decode.
+    pub tokens_match_baseline: bool,
+}
+
+impl OverlapPoint {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("chunks", Json::Num(self.chunks as f64)),
+            ("prefetch_depth", Json::Num(self.prefetch_depth as f64)),
+            ("decode_ms", num(self.decode_ms)),
+            ("ms_per_token", num(self.ms_per_token)),
+            ("frac_of_fully_cached", num(self.frac_of_fully_cached)),
+            ("stall_ms", num(self.stall_ms)),
+            ("aborted_loads", Json::Num(self.aborted_loads as f64)),
+            ("tokens_match_baseline", Json::Bool(self.tokens_match_baseline)),
+        ])
+    }
+}
+
+/// Run one decode session at every (prefetch depth x chunk count) and
+/// report ms/token against the fully-cached ceiling. `run(chunks, depth)`
+/// must execute the *same* session on a fresh engine configured with
+/// that chunk count and staging depth; `(1, 0)` — which both parse
+/// helpers guarantee is present — is the monolithic baseline, booked
+/// bit-identically to the pre-chunking engine, and every other point's
+/// token stream is checked against it. `fully_cached_ms_per_token` is
+/// the ceiling from the fully-cached reference engine on the same
+/// session. The closure boundary keeps the sweep engine-agnostic and
+/// unit-testable without the PJRT runtime.
+pub fn overlap_sweep<F>(
+    chunk_counts: &[usize],
+    depths: &[usize],
+    fully_cached_ms_per_token: f64,
+    mut run: F,
+) -> Result<Vec<OverlapPoint>>
+where
+    F: FnMut(usize, usize) -> Result<crate::coordinator::BatchRunResult>,
+{
+    ensure!(
+        chunk_counts.contains(&1) && depths.contains(&0),
+        "the sweep needs the monolithic (chunks 1, depth 0) baseline point"
+    );
+    ensure!(
+        fully_cached_ms_per_token.is_finite() && fully_cached_ms_per_token > 0.0,
+        "fully-cached reference ms/token must be finite and positive"
+    );
+    let baseline = run(1, 0)?;
+    ensure!(
+        baseline.sessions.len() == 1,
+        "overlap sweep measures one session per run, got {}",
+        baseline.sessions.len()
+    );
+    ensure!(
+        baseline.decode_tokens > 0 && baseline.sessions[0].decode_ms > 0.0,
+        "baseline decode must produce tokens in positive time"
+    );
+    let mut points = Vec::with_capacity(chunk_counts.len() * depths.len());
+    for &depth in depths {
+        for &chunks in chunk_counts {
+            let res = if (chunks, depth) == (1, 0) {
+                baseline.clone()
+            } else {
+                run(chunks, depth)?
+            };
+            ensure!(res.sessions.len() == 1, "one session per overlap run");
+            let s = &res.sessions[0];
+            ensure!(
+                s.decode_ms.is_finite() && s.stall_ms.is_finite() && res.decode_tokens > 0,
+                "non-finite decode at chunks {chunks}, depth {depth}"
+            );
+            let ms_per_token = s.decode_ms / res.decode_tokens as f64;
+            points.push(OverlapPoint {
+                chunks,
+                prefetch_depth: depth,
+                decode_ms: s.decode_ms,
+                ms_per_token,
+                frac_of_fully_cached: fully_cached_ms_per_token / ms_per_token,
+                stall_ms: s.stall_ms,
+                aborted_loads: res.aborted_loads,
+                tokens_match_baseline: s.tokens == baseline.sessions[0].tokens,
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Assemble the `BENCH_overlap.json` document.
+pub fn overlap_json(
+    points: &[OverlapPoint],
+    seed: u64,
+    chunk_counts: &[usize],
+    depths: &[usize],
+    out_tokens: usize,
+    fully_cached_ms_per_token: f64,
+) -> Json {
+    obj(vec![
+        ("bench", Json::Str("overlap".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        (
+            "chunk_counts",
+            Json::Arr(chunk_counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        (
+            "prefetch_depths",
+            Json::Arr(depths.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        ("out_tokens", Json::Num(out_tokens as f64)),
+        ("fully_cached_ms_per_token", num(fully_cached_ms_per_token)),
+        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ])
+}
+
 /// Write a JSON document with a trailing newline.
 pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
     std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
@@ -509,6 +673,73 @@ mod tests {
         let drift =
             failover_sweep(1, |k| Ok(fake(k, if k == 0 { vec![1] } else { vec![2] }))).unwrap();
         assert!(!drift[1].tokens_match_healthy);
+    }
+
+    #[test]
+    fn parse_chunk_and_depth_lists_inject_baselines() {
+        assert_eq!(parse_chunk_counts("2,4,8").unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(parse_chunk_counts("1,4").unwrap(), vec![1, 4]);
+        assert!(parse_chunk_counts("0,2").is_err());
+        assert!(parse_chunk_counts("").is_err());
+        assert_eq!(parse_depths("1,2").unwrap(), vec![0, 1, 2]);
+        assert_eq!(parse_depths("0").unwrap(), vec![0]);
+        assert!(parse_depths("").is_err());
+    }
+
+    #[test]
+    fn overlap_sweep_is_deterministic_and_flags_token_drift() {
+        use crate::coordinator::{BatchRunResult, PromptResult};
+        // Synthetic engine: each chunk doubling shaves 5% off decode,
+        // each depth step another 2%; tokens never change.
+        let fake = |chunks: usize, depth: usize, tokens: Vec<u32>| BatchRunResult {
+            sessions: vec![PromptResult {
+                ttft_ms: 100.0,
+                decode_ms: 320.0 * (1.0 - 0.05 * (chunks as f64).log2())
+                    * (1.0 - 0.02 * depth as f64),
+                tokens,
+                stall_ms: 40.0 / chunks as f64,
+                ..PromptResult::default()
+            }],
+            expert_loads: 24,
+            aborted_loads: 2,
+            failovers: 0,
+            decode_tokens: 8,
+            decode_iterations: 8,
+            decode_span_ms: 0.0,
+        };
+        let chunk_counts = [1usize, 2, 4, 8];
+        let depths = [0usize, 1];
+        let run = || {
+            let points = overlap_sweep(&chunk_counts, &depths, 30.0, |c, d| {
+                Ok(fake(c, d, vec![1, 2, 3]))
+            })
+            .unwrap();
+            overlap_json(&points, 42, &chunk_counts, &depths, 8, 30.0).to_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same inputs must reproduce the file byte for byte");
+        assert!(a.contains("\"bench\":\"overlap\""));
+        assert!(a.contains("\"chunk_counts\":[1,2,4,8]"));
+        assert!(a.contains("\"tokens_match_baseline\":true"));
+
+        let points =
+            overlap_sweep(&chunk_counts, &depths, 30.0, |c, d| Ok(fake(c, d, vec![1, 2, 3])))
+                .unwrap();
+        assert_eq!(points.len(), 8);
+        assert_eq!((points[0].chunks, points[0].prefetch_depth), (1, 0));
+        assert!((points[0].ms_per_token - 40.0).abs() < 1e-9);
+        assert!((points[0].frac_of_fully_cached - 0.75).abs() < 1e-9);
+        // ms/token strictly improves along the chunk axis at depth 0.
+        for w in points[..4].windows(2) {
+            assert!(w[1].ms_per_token < w[0].ms_per_token);
+            assert!(w[1].frac_of_fully_cached > w[0].frac_of_fully_cached);
+        }
+        // A run whose tokens drift under chunking must be flagged.
+        let drift = overlap_sweep(&[1, 2], &[0], 30.0, |c, _| {
+            Ok(fake(c, 0, if c == 1 { vec![1] } else { vec![2] }))
+        })
+        .unwrap();
+        assert!(!drift[1].tokens_match_baseline);
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //!    the least-loaded replica with ledger room (ties prefer free bytes),
 //!    until the head of the queue no longer fits anywhere (head-of-line
 //!    blocking is deliberate: bypassing it would starve large sessions).
+//!    The queue is an incrementally maintained ordered index (a
+//!    `BTreeSet` over policy keys) — keys are fixed at eligibility, so
+//!    nothing is re-sorted per event.
 //! 4. **Dispatch** — each idle replica starts up to
 //!    [`SchedulerConfig::max_batch`] of the best admitted sessions as one
 //!    co-scheduled batch; service is measured by the [`ServiceModel`]
@@ -31,7 +34,7 @@
 //!    DESIGN.md §7.
 
 use std::cmp::Ordering;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, ensure, Result};
 
@@ -97,6 +100,45 @@ fn key_cmp(a: (f64, f64, u64), b: (f64, f64, u64)) -> Ordering {
         .unwrap_or(Ordering::Equal)
         .then(a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
         .then(a.2.cmp(&b.2))
+}
+
+/// [`Policy::key`] wrapped as a total order so the waiting queue can live
+/// in a `BTreeSet` instead of being fully re-sorted inside every
+/// admission round (the old `waiting.sort_by` was O(n log n) *per
+/// event*). A request's key is fixed once it becomes eligible — policies
+/// read only the request and its eligibility time — so the index stays
+/// valid across rounds; inserts happen at arrival/re-queue, removals at
+/// admission.
+///
+/// Totality: keys may be `+inf` (relaxed-SLO EDF deadlines) but never
+/// NaN (`Policy::key` guards the `inf * 0` case) and never `-0.0` (every
+/// input is a non-negative time/count, and products of non-negative
+/// finites cannot be negative zero), so [`key_cmp`] — the exact
+/// comparator the full sorts used — is antisymmetric and transitive
+/// here, and the `BTreeSet` iterates in the same order those sorts
+/// produced: `BENCH_serve.json` stays byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct QueueKey(f64, f64, u64);
+
+impl QueueKey {
+    fn new(k: (f64, f64, u64)) -> Self {
+        debug_assert!(!k.0.is_nan() && !k.1.is_nan(), "NaN policy key breaks the total order");
+        QueueKey(k.0, k.1, k.2)
+    }
+}
+
+impl Eq for QueueKey {}
+
+impl PartialOrd for QueueKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueueKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        key_cmp((self.0, self.1, self.2), (other.0, other.1, other.2))
+    }
 }
 
 /// Per-session footprint model for admission control, in paper-scale
@@ -670,7 +712,10 @@ impl Scheduler {
             .collect();
         let mut requeued = 0usize;
 
-        let mut waiting: Vec<usize> = Vec::new();
+        // Waiting queue: an incrementally maintained ordered index over
+        // (policy key, request index) — see [`QueueKey`]. Inserted at
+        // arrival/re-queue, removed at admission; never re-sorted.
+        let mut waiting: BTreeSet<(QueueKey, usize)> = BTreeSet::new();
         let mut eligible_at: Vec<Ms> = vec![0.0; n];
         let mut records: Vec<Option<SessionRecord>> = vec![None; n];
         let mut queue_depth: Vec<(Ms, usize)> = Vec::new();
@@ -733,7 +778,8 @@ impl Scheduler {
                     r.node.dealloc(bytes);
                     records[idx] = None;
                     requeued += 1;
-                    waiting.push(idx);
+                    let key = QueueKey::new(cfg.policy.key(&requests[idx], eligible_at[idx]));
+                    waiting.insert((key, idx));
                 }
                 // The replica was only busy until it died; drop the
                 // aborted tail from its utilization and its bookings.
@@ -743,7 +789,8 @@ impl Scheduler {
                     let bytes = cfg.memory.session_bytes(&requests[idx]);
                     r.node.dealloc(bytes);
                     requeued += 1;
-                    waiting.push(idx);
+                    let key = QueueKey::new(cfg.policy.key(&requests[idx], eligible_at[idx]));
+                    waiting.insert((key, idx));
                 }
                 // Aborted dispatches may have advanced the makespan past
                 // anything that will actually finish; rebuild it from the
@@ -783,18 +830,15 @@ impl Scheduler {
                     done += 1;
                     release_next(&mut future, &mut chain_pos, req.client, t);
                 } else {
-                    waiting.push(idx);
+                    let key = QueueKey::new(cfg.policy.key(&requests[idx], eligible_at[idx]));
+                    waiting.insert((key, idx));
                 }
             }
 
-            // -- 3. admission: waiting -> replica ledgers ----------------
-            waiting.sort_by(|&a, &b| {
-                key_cmp(
-                    cfg.policy.key(&requests[a], eligible_at[a]),
-                    cfg.policy.key(&requests[b], eligible_at[b]),
-                )
-            });
-            while let Some(&idx) = waiting.first() {
+            // -- 3. admission: waiting -> replica ledgers, in index order
+            // (the BTreeSet iterates exactly as the old per-round full
+            // sort ordered — same comparator, stable keys) ---------------
+            while let Some(&(key, idx)) = waiting.first() {
                 let bytes = cfg.memory.session_bytes(&requests[idx]);
                 // Least-loaded replica with ledger room; ties prefer the
                 // most free bytes, then the lowest index. (Load first:
@@ -822,7 +866,7 @@ impl Scheduler {
                 let Some((ri, _, _)) = best else { break };
                 reps[ri].node.alloc(bytes);
                 reps[ri].admitted.push(idx);
-                waiting.remove(0);
+                waiting.remove(&(key, idx));
             }
 
             // -- 4. dispatch: each idle replica starts the globally best
@@ -973,6 +1017,54 @@ mod tests {
     fn svc() -> SyntheticService {
         // service = 10 + 0*prompt + 10*(out-1)
         SyntheticService::new(10.0, 0.0, 10.0)
+    }
+
+    /// The ordered waiting index must reproduce the old per-round full
+    /// sort exactly: same comparator, same order — including +inf EDF
+    /// deadlines and tied eligibilities. This is the equivalence the
+    /// byte-identical `BENCH_serve.json` pin rests on.
+    #[test]
+    fn queue_index_iterates_in_full_sort_order() {
+        use crate::model::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for case in 0..200 {
+            let n = 1 + rng.below(24);
+            let mut keys: Vec<(QueueKey, usize)> = Vec::with_capacity(n);
+            for idx in 0..n {
+                // Adversarial key pool: duplicates, zeros, +inf primaries.
+                let primary = match rng.below(4) {
+                    0 => f64::INFINITY,
+                    1 => 0.0,
+                    2 => (rng.below(3)) as f64, // forced collisions
+                    _ => rng.uniform() * 100.0,
+                };
+                let eligible = (rng.below(4)) as f64;
+                keys.push((QueueKey::new((primary, eligible, idx as u64)), idx));
+            }
+            let index: BTreeSet<(QueueKey, usize)> = keys.iter().copied().collect();
+            let mut sorted = keys.clone();
+            sorted.sort_by(|a, b| {
+                key_cmp((a.0 .0, a.0 .1, a.0 .2), (b.0 .0, b.0 .1, b.0 .2))
+            });
+            let from_index: Vec<usize> = index.iter().map(|&(_, idx)| idx).collect();
+            let from_sort: Vec<usize> = sorted.iter().map(|&(_, idx)| idx).collect();
+            assert_eq!(from_index, from_sort, "case {case}: index order diverged from sort");
+        }
+    }
+
+    #[test]
+    fn edf_infinite_deadlines_tie_break_deterministically() {
+        // Zero-output EDF requests have finite keys; requests without an
+        // SLO budget get +inf deadlines and must still serve in
+        // (eligibility, id) order through the BTreeSet index.
+        let mut reqs: Vec<Request> = (0..4).map(|i| req(i, 0.0, 4)).collect();
+        for r in &mut reqs {
+            r.slo = Slo::new(f64::INFINITY, f64::INFINITY);
+        }
+        let cfg = SchedulerConfig { policy: Policy::Edf, ..Default::default() };
+        let out = Scheduler::run(&cfg, &mut svc(), &reqs).unwrap();
+        let order: Vec<u64> = out.records.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "inf deadlines fall back to FCFS-by-id");
     }
 
     #[test]

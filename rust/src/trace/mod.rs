@@ -16,6 +16,11 @@ pub enum EventKind {
     ShadowCompute,
     /// Worker expert loading `EL_l`.
     ExpertLoad,
+    /// Speculative chunk stream: a predicted expert's chunks filling
+    /// residual PCIe slack ahead of the worker's previous eviction
+    /// (prefetch depth >= 1, DESIGN.md §9). Cancelled chunks simply
+    /// vanish from the booked spans.
+    Prefetch,
     /// Worker expert computation `EC_l`.
     ExpertCompute,
     /// LAN message.
@@ -32,6 +37,7 @@ impl EventKind {
             EventKind::MainCompute => 'M',
             EventKind::ShadowCompute => 'S',
             EventKind::ExpertLoad => 'L',
+            EventKind::Prefetch => 'p',
             EventKind::ExpertCompute => 'C',
             EventKind::LanSend => '·',
             EventKind::Stall => 'x',
@@ -132,7 +138,9 @@ impl Trace {
         out.push_str(&format!(
             "{:>width$}  {}\n",
             "",
-            format!("[{t0:.1} ms .. {t1:.1} ms]  M=main S=shadow L=load C=expert x=stall !=fail")
+            format!(
+                "[{t0:.1} ms .. {t1:.1} ms]  M=main S=shadow L=load p=prefetch C=expert x=stall !=fail"
+            )
         ));
         out
     }

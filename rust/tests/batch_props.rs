@@ -211,6 +211,80 @@ fn batch_of_one_matches_sequential_under_failures() {
     }
 }
 
+/// Chunked streaming must not break the batch-of-one contract: with
+/// expert transfers split into chunks and speculative staging enabled,
+/// `run_batch` over one session still reproduces sequential decode
+/// bookings exactly (both paths share the chunk-aware failover helpers,
+/// DESIGN.md §9).
+#[test]
+fn batch_of_one_matches_sequential_under_chunking() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(7, 16, rt.cfg.vocab_size as u32);
+    for (chunks, depth) in [(4usize, 0usize), (4, 1), (8, 2)] {
+        let cfg = OdMoeConfig { chunks, prefetch_depth: depth, ..OdMoeConfig::default() };
+        let mut engine = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+
+        engine.reset().unwrap();
+        let solo = engine.run_prompt(&p, 8, false).unwrap();
+        engine.reset().unwrap();
+        let batched = engine.run_batch(&[(p.as_slice(), 8)]).unwrap();
+        let b = &batched.sessions[0];
+
+        assert_eq!(solo.tokens, b.tokens, "chunks {chunks}/depth {depth}: tokens must match");
+        assert_eq!(solo.ttft_ms, b.ttft_ms, "chunks {chunks}/depth {depth}: ttft");
+        assert_eq!(solo.decode_ms, b.decode_ms, "chunks {chunks}/depth {depth}: decode time");
+        assert_eq!(solo.stall_ms, b.stall_ms, "chunks {chunks}/depth {depth}: stalls");
+    }
+}
+
+/// Chunk count 1 at depth 0 is the seed engine, bit-identically: tokens
+/// AND timings equal an engine built with the default (monolithic)
+/// config — the contract `BENCH_overlap.json`'s baseline row rests on.
+#[test]
+fn chunk_count_one_reproduces_monolithic_engine_exactly() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(7, 16, rt.cfg.vocab_size as u32);
+    let mut mono = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let m = mono.run_prompt(&p, 8, false).unwrap();
+    let cfg = OdMoeConfig { chunks: 1, prefetch_depth: 0, ..OdMoeConfig::default() };
+    let mut one = OdMoeEngine::new(&rt, ws, cfg).unwrap();
+    let o = one.run_prompt(&p, 8, false).unwrap();
+    assert_eq!(m.tokens, o.tokens);
+    assert_eq!(m.ttft_ms, o.ttft_ms);
+    assert_eq!(m.decode_ms, o.decode_ms, "chunk count 1 must book identically");
+    assert_eq!(m.stall_ms, o.stall_ms);
+    assert_eq!(m.correct_per_token, o.correct_per_token);
+}
+
+/// Chunking with overlap strictly improves decode on the default
+/// profile (the BENCH_overlap acceptance bar): more chunks hide more of
+/// each stalled load behind compute, and the token stream never moves.
+#[test]
+fn chunked_decode_strictly_improves_over_monolithic() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(5, 16, rt.cfg.vocab_size as u32);
+    let mut tokens_ref: Option<Vec<u32>> = None;
+    let mut last = f64::INFINITY;
+    for chunks in [1usize, 2, 4, 8] {
+        let cfg = OdMoeConfig { chunks, ..OdMoeConfig::default() };
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+        let r = e.run_prompt(&p, 12, false).unwrap();
+        assert!(
+            r.decode_ms < last,
+            "chunks {chunks}: decode {} must beat {last}",
+            r.decode_ms
+        );
+        last = r.decode_ms;
+        match &tokens_ref {
+            None => tokens_ref = Some(r.tokens),
+            Some(t) => assert_eq!(t, &r.tokens, "chunks {chunks}: stream must never change"),
+        }
+    }
+}
+
 /// The memory audit vs the engine's byte ledger: sequential decode keeps
 /// strict single-expert residency per worker (the `metrics::memory::odmoe`
 /// row), while batched decode transiently holds every expert a worker

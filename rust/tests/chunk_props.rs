@@ -1,0 +1,202 @@
+//! Property tests for chunked expert streaming (DESIGN.md §9): abort
+//! accounting on the span-aware [`Resource`], chunk-count-1 equivalence
+//! with the monolithic path, and the tile-pipeline bound. All of these
+//! run without the PJRT runtime — the engine-level equivalences live in
+//! `batch_props.rs` / `failure_injection.rs` next to their monolithic
+//! counterparts.
+
+use odmoe::cluster::{Cluster, HardwareProfile, Resource};
+use odmoe::trace::EventKind;
+use odmoe::util::prop::check;
+
+const CASES: usize = 64;
+
+/// `busy_total` must equal the surviving booked spans under ANY
+/// interleaving of chunk-train bookings and aborts — aborted speculative
+/// chunks never inflate it, and it stays finite and non-negative.
+#[test]
+fn prop_aborted_chunks_never_inflate_busy_total() {
+    check("abort accounting exact", CASES, 301, |rng| {
+        let mut r = Resource::new();
+        // Shadow model: the spans we believe are booked.
+        let mut spans: Vec<(f64, f64)> = Vec::new();
+        for _ in 0..30 {
+            if rng.uniform() < 0.65 || spans.is_empty() {
+                // Book a chunk train: 1..=8 chunks back to back.
+                let chunks = 1 + rng.below(8);
+                let earliest = rng.uniform() * 50.0;
+                for _ in 0..chunks {
+                    let dur = rng.uniform() * 5.0;
+                    let (s, e) = r.acquire(earliest, dur);
+                    spans.push((s, e));
+                }
+            } else {
+                // Mispredict storm: abort at a random instant, possibly
+                // mid-chunk, possibly before every booking.
+                let at = rng.uniform() * r.free_at().max(1.0);
+                r.preempt(at);
+                // Mirror on the shadow: drop/trim spans past `at`.
+                spans.retain(|&(s, _)| s < at);
+                if let Some(last) = spans.last_mut() {
+                    if last.1 > at {
+                        last.1 = at;
+                    }
+                }
+                if r.free_at() > at {
+                    return Err(format!("free_at {} after preempt({at})", r.free_at()));
+                }
+            }
+            let expected: f64 = spans.iter().map(|&(s, e)| e - s).sum();
+            let busy = r.busy_total();
+            if !busy.is_finite() || busy < 0.0 {
+                return Err(format!("busy_total corrupted: {busy}"));
+            }
+            if (busy - expected).abs() > 1e-6 {
+                return Err(format!("busy {busy} != surviving spans {expected}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Chunk count 1 must reproduce today's monolithic-load timings exactly:
+/// same (start, done), same link accounting, under random stragglers and
+/// random link contention.
+#[test]
+fn prop_chunk_count_one_is_bit_identical_to_monolithic() {
+    check("chunks=1 == monolithic", CASES, 302, |rng| {
+        let mut a = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let mut b = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let slow = 1.0 + rng.uniform() * 4.0;
+        a.inject_straggler(0, slow);
+        b.inject_straggler(0, slow);
+        for _ in 0..8 {
+            let w = rng.below(2);
+            let earliest = rng.uniform() * 100.0;
+            let bytes = 1e6 + rng.uniform() * 1e9;
+            let (s1, e1) = a.expert_load(w, earliest, bytes);
+            let t = b.expert_load_chunked(w, earliest, bytes, 1, EventKind::ExpertLoad);
+            if (s1, e1) != (t.start, t.done()) {
+                return Err(format!("({s1},{e1}) vs ({},{})", t.start, t.done()));
+            }
+            if t.first_ready() != t.done() {
+                return Err("one chunk must mean first == last".into());
+            }
+        }
+        for w in 0..2 {
+            let (ba, bb) =
+                (a.workers[w].pcie.busy_total(), b.workers[w].pcie.busy_total());
+            if ba != bb {
+                return Err(format!("worker {w} busy {ba} vs {bb}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Mispredict storms over chunk trains on a live cluster: delivered
+/// chunks stay busy, undelivered ones are reclaimed, floors protect work
+/// queued ahead, and accounting survives straggler slowdowns.
+#[test]
+fn prop_mispredict_storms_keep_cluster_accounting_sane() {
+    check("chunked mispredict storm", CASES, 303, |rng| {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 3);
+        if rng.uniform() < 0.5 {
+            c.inject_straggler(rng.below(3), 1.0 + rng.uniform() * 7.0);
+        }
+        for _ in 0..20 {
+            let w = rng.below(3);
+            let chunks = 1 + rng.below(8);
+            let earliest = rng.uniform() * 40.0;
+            let bytes = c.profile.expert_bytes * (0.2 + rng.uniform());
+            let t = c.expert_load_chunked(w, earliest, bytes, chunks, EventKind::ExpertLoad);
+            if rng.uniform() < 0.5 {
+                // Gate result disagreed: cancel the undelivered suffix,
+                // floored at the train's own start era.
+                let at = t.start + rng.uniform() * (t.done() - t.start);
+                c.workers[w].pcie.preempt(at.max(t.free_before));
+            }
+            for node in &c.workers {
+                let busy = node.pcie.busy_total();
+                if !busy.is_finite() || busy < 0.0 {
+                    return Err(format!("worker {} busy corrupted: {busy}", node.id));
+                }
+                if node.pcie.free_at() > 1e9 || !node.pcie.free_at().is_finite() {
+                    return Err(format!("worker {} free_at diverged", node.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The tile pipeline never finishes later than the monolithic compute
+/// gated on the last chunk: `end <= max(earliest, last_gate) + base`.
+#[test]
+fn prop_chunked_compute_bounded_by_monolithic() {
+    check("tile pipeline bound", CASES, 304, |rng| {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 1);
+        let base = 0.5 + rng.uniform() * 4.0;
+        let earliest = rng.uniform() * 20.0;
+        let k = 1 + rng.below(8);
+        // Ascending random gates (chunk completion times).
+        let mut gates: Vec<f64> = Vec::with_capacity(k);
+        let mut t = rng.uniform() * 30.0;
+        for _ in 0..k {
+            t += rng.uniform() * 10.0;
+            gates.push(t);
+        }
+        let (_, end) = c.expert_compute_chunked(0, earliest, base, &gates);
+        let last_gate = *gates.last().expect("k >= 1");
+        let mono_end = earliest.max(last_gate) + base;
+        if end > mono_end + 1e-9 {
+            return Err(format!("pipelined end {end} beats nothing: mono {mono_end}"));
+        }
+        // GPU busy time is exactly one FFN regardless of tiling.
+        let busy = c.workers[0].gpu.busy_total();
+        if (busy - base).abs() > 1e-9 {
+            return Err(format!("gpu busy {busy} != base {base}"));
+        }
+        Ok(())
+    });
+}
+
+/// Resuming a dead worker's stream re-books only the undelivered chunks:
+/// the resumed train moves exactly the remaining durations.
+#[test]
+fn prop_failover_resume_books_only_undelivered_chunks() {
+    check("failover resumes the suffix", CASES, 305, |rng| {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let chunks = 2 + rng.below(7);
+        let bytes = c.profile.expert_bytes;
+        let durs = c.profile.chunk_durations(bytes, chunks);
+        let t = c.expert_load_chunked(0, 0.0, bytes, chunks, EventKind::ExpertLoad);
+        // Kill worker 0 somewhere inside the stream.
+        let at = t.start + rng.uniform() * (t.done() - t.start - 1e-9);
+        let delivered = t.delivered_by(at);
+        c.fail_worker(0, at);
+        if delivered >= chunks {
+            return Err("a stream that died cannot have delivered every chunk".into());
+        }
+        // The replacement books only the suffix.
+        let resume = c.expert_load_chunks(1, at, &durs[delivered..], EventKind::ExpertLoad);
+        let expected: f64 = durs[delivered..].iter().sum();
+        let booked = c.workers[1].pcie.busy_total();
+        if (booked - expected).abs() > 1e-9 {
+            return Err(format!("resumed {booked} ms, expected suffix {expected}"));
+        }
+        if resume.chunk_ends.len() != chunks - delivered {
+            return Err(format!(
+                "{} resumed chunks, expected {}",
+                resume.chunk_ends.len(),
+                chunks - delivered
+            ));
+        }
+        // The dead link keeps only what it actually moved.
+        let dead_busy = c.workers[0].pcie.busy_total();
+        if !dead_busy.is_finite() || dead_busy < 0.0 || dead_busy > at + 1e-9 {
+            return Err(format!("dead link busy {dead_busy} vs freeze at {at}"));
+        }
+        Ok(())
+    });
+}

@@ -235,6 +235,41 @@ fn shadow_death_falls_back_to_no_prefetch_timing_with_identical_tokens() {
 }
 
 #[test]
+fn killing_workers_under_chunked_streaming_stays_exact() {
+    // The §9 x §8 interaction: with chunked transfers and speculative
+    // staging, a worker death mid-decode re-books only the undelivered
+    // chunks on the replacement — the stream stays bit-identical, the
+    // accounting finite, and rerouting never beats the healthy run.
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let out = 10;
+    let cfg = OdMoeConfig { chunks: 4, prefetch_depth: 1, ..OdMoeConfig::default() };
+    let mut healthy = OdMoeEngine::new(&rt, ws.clone(), cfg.clone()).unwrap();
+    let h = healthy.run_prompt(&p, out, false).unwrap();
+    let mid = h.ttft_ms + h.decode_ms / 2.0;
+
+    for victim in [0usize, 3, 7] {
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), cfg.clone()).unwrap();
+        e.inject_failure(FailureSpec::Worker { worker: victim, at_ms: mid });
+        let d = e.run_prompt(&p, out, false).unwrap();
+        assert_eq!(h.tokens, d.tokens, "worker {victim}: chunked stream must not change");
+        assert!(d.decode_ms.is_finite() && d.decode_ms >= h.decode_ms - 1e-6);
+        assert_virtual_time_sane(&e.cluster);
+        assert_eq!(e.cluster.alive_workers(), 7);
+    }
+
+    // Shadow death under chunking: degrades to the reactive path with
+    // identical tokens, like the monolithic engine.
+    let mut dead = OdMoeEngine::new(&rt, ws, cfg).unwrap();
+    dead.inject_failure(FailureSpec::Shadow { at_ms: mid });
+    let d = dead.run_prompt(&p, out, false).unwrap();
+    assert_eq!(d.tokens, h.tokens);
+    assert!(d.decode_ms.is_finite() && d.decode_ms >= h.decode_ms - 1e-6);
+    assert_virtual_time_sane(&dead.cluster);
+}
+
+#[test]
 fn worker_and_shadow_failures_compose() {
     let rt = runtime();
     let ws = WeightStore::generate(&rt.cfg, 42);
