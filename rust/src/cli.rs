@@ -2,10 +2,11 @@
 //! evaluations; the benches under `rust/benches/` reuse the same library
 //! harnesses with the full parameter grids.
 
-use anyhow::{bail, Result};
+use anyhow::{ensure, Result};
 use odmoe::cluster::HardwareProfile;
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
 use odmoe::coordinator::{BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine};
+use odmoe::fleet::{planner, FleetSpec, PlanChoice, PlanGrid, PlanMeasurement};
 use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
 use odmoe::predictor::{AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
@@ -13,7 +14,7 @@ use odmoe::serve::{
     batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep, overlap_json,
     overlap_sweep, parse_batches, parse_chunk_counts, parse_depths, parse_rates, rate_sweep,
     sweep_json, write_bench, BatchEngineService, BatchPoint, FailoverPoint, OverlapPoint,
-    Scheduler, ServeReport, ServiceModel, SessionOutcome,
+    Scheduler, SchedulerConfig, ServeReport, ServiceModel, SessionOutcome,
 };
 use odmoe::util::cli::Args;
 use odmoe::util::table::{sparkline, Table};
@@ -21,13 +22,68 @@ use odmoe::workload::{fidelity, recall, speed, Corpus};
 use odmoe::Runtime;
 
 fn parse_precision(s: &str) -> Result<Precision> {
-    Ok(match s {
-        "fp32" => Precision::Fp32,
-        "fp16" => Precision::Fp16,
-        "int8" => Precision::Int8,
-        "nf4" => Precision::Nf4,
-        other => bail!("unknown precision {other:?} (fp32|fp16|int8|nf4)"),
-    })
+    Precision::parse(s)
+}
+
+/// Apply `--fleet <spec>` / `--plan <file>` to an engine config (+ the
+/// scheduler's replica count for a plan): the one place the two flags
+/// are interpreted, shared by `serve` and `decode` so a chosen plan runs
+/// identically through either. A plan supplies the fleet and transfer
+/// precision unconditionally, but its chunks/depth/replicas are
+/// *defaults*: an explicitly passed `--chunks`/`--prefetch-depth`/
+/// `--replicas` wins, so overriding one knob of a plan does not silently
+/// discard the flag. Returns a banner describing what was applied.
+fn apply_fleet_flags(
+    a: &Args,
+    cfg: &mut OdMoeConfig,
+    replicas: Option<&mut usize>,
+) -> Result<Option<String>> {
+    anyhow::ensure!(
+        !(a.has("plan") && a.get("plan").is_none()),
+        "--plan needs a file path (e.g. --plan BENCH_plan.json)"
+    );
+    anyhow::ensure!(
+        !(a.has("fleet") && a.get("fleet").is_none()),
+        "--fleet needs a spec (e.g. --fleet rtx3080:4,jetson:4,nano:2)"
+    );
+    match (a.get("plan"), a.get("fleet")) {
+        (Some(_), Some(_)) => anyhow::bail!("--plan and --fleet are mutually exclusive"),
+        (Some(path), None) => {
+            let choice = PlanChoice::load(std::path::Path::new(path))?;
+            cfg.profile = choice.scaled_profile(&cfg.profile);
+            if a.get("chunks").is_none() {
+                cfg.chunks = choice.chunks;
+            }
+            if a.get("prefetch-depth").is_none() {
+                cfg.prefetch_depth = choice.prefetch_depth;
+            }
+            cfg.n_workers = choice.fleet.n_nodes();
+            let banner = format!(
+                "plan: fleet {} | {} transfers | chunks {} | depth {} | {} replica(s) | claimed p99 tpot {:.1} ms",
+                choice.fleet.label(),
+                choice.precision.label(),
+                choice.chunks,
+                choice.prefetch_depth,
+                choice.replicas,
+                choice.claimed_tpot_p99_ms,
+            );
+            cfg.fleet = Some(choice.fleet);
+            if let Some(r) = replicas {
+                if a.get("replicas").is_none() {
+                    *r = choice.replicas;
+                }
+            }
+            Ok(Some(banner))
+        }
+        (None, Some(spec)) => {
+            let fleet = FleetSpec::parse(spec)?;
+            cfg.n_workers = fleet.n_nodes();
+            let banner = format!("fleet: {}", fleet.label());
+            cfg.fleet = Some(fleet);
+            Ok(Some(banner))
+        }
+        (None, None) => Ok(None),
+    }
 }
 
 fn parse_period(s: &str) -> Result<usize> {
@@ -65,10 +121,15 @@ fn validate_failures(specs: &[FailureSpec], n_workers: usize) -> Result<()> {
 /// replica (its sessions re-queue), and `--failover-sweep` decodes one
 /// session at 0..=`--max-failed` dead workers and writes the
 /// deterministic `BENCH_failover.json`.
+///
+/// Fleets (DESIGN.md §10): `--fleet rtx3080:4,jetson:4,nano:2` serves on
+/// a heterogeneous cluster (per-class durations, capability-aware
+/// slots); `--plan BENCH_plan.json` re-runs the deployment `od-moe plan`
+/// chose — fleet, transfer precision, chunks, depth, and replicas.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
-    let (mut spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
+    let (mut spec, mut sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
     let ws = WeightStore::generate(&rt.cfg, seed);
-    let cfg = OdMoeConfig {
+    let mut cfg = OdMoeConfig {
         shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
         align: AlignmentConfig {
             token_period: parse_period(a.get_or("token-period", "1"))?,
@@ -79,6 +140,12 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         ..OdMoeConfig::default()
     };
     anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
+    // `--fleet rtx3080:4,jetson:4,nano:2` runs on a heterogeneous
+    // fleet; `--plan BENCH_plan.json` re-runs the planner's chosen
+    // deployment (fleet + precision + chunks + depth + replicas).
+    if let Some(banner) = apply_fleet_flags(a, &mut cfg, Some(&mut sched.n_replicas))? {
+        println!("{banner}");
+    }
 
     if a.has("failover-sweep") {
         let max_failed = a.usize_or("max-failed", (cfg.n_workers - 1).min(4))?;
@@ -315,10 +382,17 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         .prompts
         .pop()
         .expect("one prompt");
-    let base_cfg = OdMoeConfig {
+    let mut base_cfg = OdMoeConfig {
         shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
         ..OdMoeConfig::default()
     };
+    anyhow::ensure!(
+        !(a.has("overlap-sweep") && a.has("plan")),
+        "--overlap-sweep sweeps chunks/depths itself; run --plan without it"
+    );
+    if let Some(banner) = apply_fleet_flags(a, &mut base_cfg, None)? {
+        println!("{banner}");
+    }
 
     // Fully-cached ceiling on the same session (untouched by chunking).
     let fc_ms_per_token = {
@@ -345,9 +419,11 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // Defaults fall back to the base config so a `--plan`'s chunk count
+    // and staging depth survive unless explicitly overridden.
     let cfg = OdMoeConfig {
-        chunks: a.usize_or("chunks", 1)?,
-        prefetch_depth: a.usize_or("prefetch-depth", 0)?,
+        chunks: a.usize_or("chunks", base_cfg.chunks)?,
+        prefetch_depth: a.usize_or("prefetch-depth", base_cfg.prefetch_depth)?,
         ..base_cfg
     };
     anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
@@ -559,9 +635,48 @@ pub fn quality(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `od-moe memory`: Table 2(ii) audit.
-pub fn memory() -> Result<()> {
+/// `od-moe memory`: Table 2(ii) audit. With `--fleet` (plus optional
+/// `--precision`/`--max-batch`/`--prefetch-depth`), audits a
+/// heterogeneous fleet per node against each class's memory budget
+/// instead of the paper presets.
+pub fn memory(a: &Args) -> Result<()> {
     let p = HardwareProfile::rtx3090();
+    if let Some(spec) = a.get("fleet") {
+        let fleet = FleetSpec::parse(spec)?;
+        let precision = parse_precision(a.get_or("precision", "fp16"))?;
+        let max_batch = a.usize_or("max-batch", 1)?;
+        let depth = a.usize_or("prefetch-depth", 0)?;
+        let scaled = planner::precision_scaled(&p, precision);
+        let audit = memaudit::odmoe_fleet(
+            &scaled,
+            &fleet,
+            memaudit::PAPER_TOP_K,
+            max_batch,
+            depth,
+        );
+        let budgets: Vec<f64> = fleet.node_classes().iter().map(|c| c.mem_bytes).collect();
+        let mut t = Table::new(&["node", "GPU memory (GB)", "budget (GB)", "fits"]);
+        for (i, (node, bytes)) in audit.per_node.iter().enumerate() {
+            // First two rows are main/shadow (no class budget).
+            let budget = i.checked_sub(2).map(|w| budgets[w]);
+            t.row(&[
+                node.clone(),
+                format!("{:.2}", bytes / 1e9),
+                budget.map_or("-".into(), |b| format!("{:.1}", b / 1e9)),
+                budget.map_or("-".into(), |b| {
+                    if *bytes <= b { "yes".into() } else { "OVER".to_string() }
+                }),
+            ]);
+        }
+        t.print();
+        println!(
+            "\nfleet {} | {} transfers | max batch {max_batch} | depth {depth} | total {:.1} GB",
+            fleet.label(),
+            precision.label(),
+            audit.total_gb()
+        );
+        return Ok(());
+    }
     let mut t = Table::new(&["system", "GPU memory (GB)", "paper (GB)"]);
     let audits = [
         (memaudit::odmoe(&p, 8), "60"),
@@ -586,5 +701,141 @@ pub fn memory() -> Result<()> {
     for (node, bytes) in &od.per_node {
         println!("  od-moe {node}: {:.2} GB", bytes / 1e9);
     }
+    Ok(())
+}
+
+/// `od-moe plan`: the SLO-driven fleet deployment planner (DESIGN.md
+/// §10). Searches (class subset, transfer precision, chunk count,
+/// prefetch depth, replica count) over `--fleet`, pruning candidates
+/// whose classes miss their Eq. (1) window or memory budget, and scores
+/// survivors by running the real engine through the serving scheduler in
+/// virtual time on the same workload grammar as `od-moe serve`. Emits
+/// the deterministic `BENCH_plan.json` (Pareto frontier + chosen plan);
+/// `od-moe serve --plan BENCH_plan.json` re-runs the choice directly.
+pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
+    let fleet = FleetSpec::parse(a.get_or("fleet", "rtx3080:4,jetson:4,nano:2"))?;
+    let slo_p99 = a.f64_or("slo-p99", 250.0)?;
+    let (spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
+    let grid = PlanGrid {
+        precisions: a
+            .get_or("precisions", "fp16,int8,nf4")
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| parse_precision(s.trim()))
+            .collect::<Result<_>>()?,
+        chunk_counts: parse_chunk_counts(a.get_or("chunk-grid", "1,8"))?,
+        depths: parse_depths(a.get_or("depth-grid", "0,1"))?,
+        replicas: parse_batches(a.get_or("replica-grid", "1"))?,
+    };
+    let ws = WeightStore::generate(&rt.cfg, seed);
+    let base = OdMoeConfig::default().profile;
+    let group_size = rt.cfg.top_k;
+    let out_tokens = a.usize_or("out-tokens", 16)?;
+    ensure!(
+        out_tokens >= 2,
+        "--out-tokens must be >= 2 so the planner can measure decode (TPOT needs a second token)"
+    );
+    let probe_prompt = Corpus::generate(seed ^ 7, 1, 16, rt.cfg.vocab_size as u32)
+        .prompts
+        .pop()
+        .expect("one probe prompt");
+    let tenant_names: Vec<String> = spec.tenants.iter().map(|t| t.name.clone()).collect();
+
+    println!(
+        "planning over {} | target p99 tpot {slo_p99} ms | {} req @ {rate} req/s | max batch {}",
+        fleet.label(),
+        spec.n_requests,
+        sched.max_batch
+    );
+    let max_batch = sched.max_batch;
+    let report = planner::search(&fleet, &base, group_size, max_batch, slo_p99, &grid, |cand| {
+        let cfg = OdMoeConfig {
+            n_workers: cand.fleet.n_nodes(),
+            chunks: cand.chunks,
+            prefetch_depth: cand.prefetch_depth,
+            profile: cand.scaled_profile(&base),
+            fleet: Some(cand.fleet.clone()),
+            ..OdMoeConfig::default()
+        };
+        let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
+        // Memory probe: one full-batch decode captures the honest
+        // per-node ledger peaks the budget check runs against.
+        let probe: Vec<(&[u32], usize)> =
+            vec![(probe_prompt.as_slice(), out_tokens); sched.max_batch];
+        engine.run_batch(&probe)?;
+        let main_peak_bytes = engine.cluster.main.gpu_bytes_peak as f64;
+        let shadow_peak_bytes = engine.cluster.shadow.gpu_bytes_peak as f64;
+        let worker_peak_bytes: Vec<f64> =
+            engine.cluster.workers.iter().map(|w| w.gpu_bytes_peak as f64).collect();
+        // Latency: the serving scheduler at the candidate's replica
+        // count, same workload for every candidate (same seed).
+        let cand_sched = SchedulerConfig { n_replicas: cand.replicas, ..sched.clone() };
+        let reqs = spec.generate(seed);
+        let mut svc = BatchEngineService::new(&mut engine);
+        let outcome = Scheduler::run(&cand_sched, &mut svc, &reqs)?;
+        let rep = ServeReport::from_outcome("plan", rate, &outcome, &tenant_names);
+        let mut decode_ms = 0.0;
+        let mut decode_tokens = 0u64;
+        for r in &outcome.records {
+            if let Some(ft) = r.first_token_ms {
+                if r.tokens.len() > 1 {
+                    decode_ms += r.finish_ms - ft;
+                    decode_tokens += (r.tokens.len() - 1) as u64;
+                }
+            }
+        }
+        ensure!(decode_tokens > 0, "plan workload produced no decode tokens");
+        Ok(PlanMeasurement {
+            ms_per_token: decode_ms / decode_tokens as f64,
+            ttft_p99_ms: rep.ttft.p99,
+            tpot_p99_ms: rep.tpot.p99,
+            slo_attainment: rep.slo_attainment,
+            main_peak_bytes,
+            shadow_peak_bytes,
+            worker_peak_bytes,
+        })
+    })?;
+
+    let mut t = Table::new(&[
+        "fleet", "prec", "chunks", "depth", "repl", "ms/tok", "p99 tpot", "GB", "cost", "mem",
+        "slo", "pareto",
+    ]);
+    for (i, pt) in report.points.iter().enumerate() {
+        let marker = if report.chosen == Some(i) { " <= CHOSEN" } else { "" };
+        t.row(&[
+            pt.candidate.fleet.label(),
+            pt.candidate.precision.label().to_string(),
+            format!("{}", pt.candidate.chunks),
+            format!("{}", pt.candidate.prefetch_depth),
+            format!("{}", pt.candidate.replicas),
+            format!("{:.1}", pt.meas.ms_per_token),
+            format!("{:.0}", pt.meas.tpot_p99_ms),
+            format!("{:.1}", pt.total_gpu_bytes / 1e9),
+            format!("{:.2}", pt.cost),
+            if pt.mem_ok { "ok".into() } else { "OVER".to_string() },
+            if pt.meets_slo { "met".into() } else { "miss".to_string() },
+            format!("{}{marker}", if pt.pareto { "*" } else { "" }),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n{} candidate(s) measured, {} pruned analytically",
+        report.points.len(),
+        report.pruned
+    );
+    match report.chosen_point() {
+        Some(p) => println!(
+            "chosen: {} — p99 tpot {:.0} ms (target {slo_p99}), cost {:.2}",
+            p.candidate.label(),
+            p.meas.tpot_p99_ms,
+            p.cost
+        ),
+        None => println!(
+            "no candidate meets the SLO within budget — relax --slo-p99 or grow the fleet"
+        ),
+    }
+    let path = std::path::Path::new("BENCH_plan.json");
+    write_bench(path, &planner::plan_json(&report, &fleet, &grid, seed))?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -12,7 +12,7 @@
 
 pub mod profile;
 
-pub use profile::HardwareProfile;
+pub use profile::{HardwareProfile, NodeClass};
 
 use crate::trace::{EventKind, Trace};
 
@@ -267,7 +267,14 @@ impl Node {
 }
 
 /// The simulated testbed: main node, shadow node, `n_workers` workers and
-/// the shared LAN, with durations supplied by a [`HardwareProfile`].
+/// the shared LAN. Durations come from the base [`HardwareProfile`] for
+/// main/shadow/LAN work and from each worker's [`NodeClass`] for
+/// worker-side work: [`Cluster::expert_load_chunked`] and the
+/// expert-compute helpers consult the owning node's class profile, so a
+/// mixed fleet books honest per-class times. [`Cluster::new`] builds the
+/// uniform (single-class) cluster, whose per-worker profiles are
+/// field-for-field identical to the base — the shared-profile path is
+/// the single-class special case, bit-identical by construction.
 #[derive(Debug)]
 pub struct Cluster {
     pub profile: HardwareProfile,
@@ -277,22 +284,70 @@ pub struct Cluster {
     /// Shared Ethernet segment (the paper's 1 Gbps LAN).
     pub lan: Resource,
     pub trace: Trace,
+    /// Per-worker hardware class (uniform class of `profile` by default).
+    classes: Vec<NodeClass>,
+    /// Materialized per-worker duration models
+    /// ([`NodeClass::worker_profile`] over the base profile), consulted
+    /// by every worker-side booking.
+    worker_profiles: Vec<HardwareProfile>,
 }
 
 impl Cluster {
     pub fn new(profile: HardwareProfile, n_workers: usize) -> Self {
+        let uniform = NodeClass::of_profile(&profile);
+        Self::with_classes(profile, vec![uniform; n_workers])
+    }
+
+    /// A heterogeneous cluster: worker `i` is a node of `classes[i]`.
+    /// On a mixed fleet the trace tags each worker node with its class
+    /// name so `!`/`p`/LAN lines stay readable (uniform clusters are left
+    /// untagged — their rendering is pinned by older tests).
+    pub fn with_classes(profile: HardwareProfile, classes: Vec<NodeClass>) -> Self {
+        let worker_profiles: Vec<HardwareProfile> =
+            classes.iter().map(|c| c.worker_profile(&profile)).collect();
+        let mut trace = Trace::new();
+        if classes.iter().any(|c| c.name != profile.name) {
+            for (i, c) in classes.iter().enumerate() {
+                trace.tag_node(2 + i, c.name);
+            }
+        }
         Self {
             profile,
             main: Node::new(0),
             shadow: Node::new(1),
-            workers: (0..n_workers).map(|i| Node::new(2 + i)).collect(),
+            workers: (0..classes.len()).map(|i| Node::new(2 + i)).collect(),
             lan: Resource::new(),
-            trace: Trace::new(),
+            trace,
+            classes,
+            worker_profiles,
         }
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The duration model of worker `w`'s node class — what every
+    /// worker-side booking on `w` consults.
+    pub fn worker_profile(&self, w: usize) -> &HardwareProfile {
+        &self.worker_profiles[w]
+    }
+
+    /// Worker `w`'s hardware class.
+    pub fn worker_class(&self, w: usize) -> &NodeClass {
+        &self.classes[w]
+    }
+
+    /// Extra LAN attach latency for messages to/from worker `w`.
+    pub fn lan_extra(&self, w: usize) -> Ms {
+        self.classes[w].lan_extra_ms
+    }
+
+    /// One expert FFN over a `rows`-token batch on worker `w`'s GPU class
+    /// (pre-slowdown base duration; `rows == 1` is exactly the class's
+    /// `t_expert_gpu_ms`).
+    pub fn expert_ffn_ms(&self, w: usize, rows: usize) -> Ms {
+        self.worker_profiles[w].expert_batch_ms(rows)
     }
 
     pub fn reset(&mut self) {
@@ -339,8 +394,11 @@ impl Cluster {
     /// resident instead of waiting for the last byte. `kind` tags the
     /// trace events ([`EventKind::ExpertLoad`] for demand loads,
     /// [`EventKind::Prefetch`] for speculative streams). Chunk durations
-    /// come from [`HardwareProfile::chunk_durations`]; at `chunks == 1`
-    /// the booking is bit-identical to the monolithic [`Cluster::expert_load`].
+    /// come from the *owning node's class profile*
+    /// ([`HardwareProfile::chunk_durations`] of
+    /// [`Cluster::worker_profile`]; identical to the base profile on a
+    /// uniform cluster); at `chunks == 1` the booking is bit-identical to
+    /// the monolithic [`Cluster::expert_load`].
     pub fn expert_load_chunked(
         &mut self,
         worker: usize,
@@ -349,7 +407,7 @@ impl Cluster {
         chunks: usize,
         kind: EventKind,
     ) -> ChunkedTransfer {
-        let durs = self.profile.chunk_durations(bytes, chunks);
+        let durs = self.worker_profiles[worker].chunk_durations(bytes, chunks);
         self.expert_load_chunks(worker, earliest, &durs, kind)
     }
 
@@ -719,6 +777,43 @@ mod tests {
         let (s1, e1) = a.expert_compute(0, 5.0, 2.0);
         let (s2, e2) = b.expert_compute_chunked(0, 5.0, 2.0, &[4.0]);
         assert_eq!((s1, e1), (s2, e2));
+    }
+
+    #[test]
+    fn uniform_cluster_worker_profiles_match_the_base() {
+        let base = HardwareProfile::rtx3090();
+        let c = Cluster::new(base.clone(), 3);
+        for w in 0..3 {
+            let wp = c.worker_profile(w);
+            assert_eq!(wp.t_expert_gpu_ms, base.t_expert_gpu_ms);
+            assert_eq!(wp.pcie_gbps, base.pcie_gbps);
+            assert_eq!(
+                wp.chunk_durations(base.expert_bytes, 4),
+                base.chunk_durations(base.expert_bytes, 4),
+                "single-class chunk trains are the shared-profile trains"
+            );
+            assert_eq!(c.lan_extra(w), 0.0);
+            assert_eq!(c.expert_ffn_ms(w, 1), base.t_expert_gpu_ms);
+        }
+        assert!(c.trace.class_of(2).is_none(), "uniform clusters stay untagged");
+    }
+
+    #[test]
+    fn heterogeneous_workers_book_their_class_durations() {
+        let base = HardwareProfile::rtx3090();
+        let mut c =
+            Cluster::with_classes(base.clone(), vec![NodeClass::rtx3090(), NodeClass::jetson()]);
+        let bytes = base.expert_bytes;
+        let (_, d0) = c.expert_load(0, 0.0, bytes);
+        let (_, d1) = c.expert_load(1, 0.0, bytes);
+        assert!((d0 - base.pcie_transfer_ms(bytes)).abs() < 1e-9);
+        assert!(d1 > 3.0 * d0, "jetson's thin link books honestly: {d1} vs {d0}");
+        assert_eq!(c.worker_class(1).name, "jetson");
+        assert!(c.lan_extra(1) > 0.0 && c.lan_extra(0) == 0.0);
+        assert!(c.expert_ffn_ms(1, 1) > c.expert_ffn_ms(0, 1), "slower FFN class");
+        // Mixed fleets tag trace nodes with their class.
+        assert_eq!(c.trace.class_of(2), Some("rtx3090"));
+        assert_eq!(c.trace.class_of(3), Some("jetson"));
     }
 
     #[test]

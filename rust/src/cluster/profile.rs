@@ -17,6 +17,8 @@
 //! engines combine these quantities through the Fig. 2/4/5 dependency
 //! graphs; nothing else about speed is assumed.
 
+use anyhow::{ensure, Result};
+
 use super::Ms;
 
 /// Duration model for one testbed configuration.
@@ -82,9 +84,62 @@ pub struct HardwareProfile {
 }
 
 impl HardwareProfile {
+    /// Enforce the §3.1 invariants that used to live only in doc
+    /// comments: every duration/bandwidth is finite and positive where it
+    /// must be, batching marginals stay in `[0, 1]`, and the shadow node
+    /// runs ahead of the pipeline (`t_shadow_layer < t_M + t_W`, the
+    /// precondition for SEP predictions to arrive before they are
+    /// needed). Presets assert this at construction; `FleetSpec` parsing
+    /// and the planner validate every materialized per-class profile.
+    pub fn validate(&self) -> Result<()> {
+        let pos = |v: f64, what: &str| -> Result<()> {
+            ensure!(v.is_finite() && v > 0.0, "{what} must be finite and > 0, got {v}");
+            Ok(())
+        };
+        let nonneg = |v: f64, what: &str| -> Result<()> {
+            ensure!(v.is_finite() && v >= 0.0, "{what} must be finite and >= 0, got {v}");
+            Ok(())
+        };
+        pos(self.t_nonexpert_ms, "t_nonexpert_ms")?;
+        pos(self.t_expert_gpu_ms, "t_expert_gpu_ms")?;
+        pos(self.t_lm_head_ms, "t_lm_head_ms")?;
+        pos(self.t_shadow_layer_ms, "t_shadow_layer_ms")?;
+        pos(self.cpu_nonexpert_ms, "cpu_nonexpert_ms")?;
+        pos(self.cpu_expert_ms, "cpu_expert_ms")?;
+        pos(self.pcie_gbps, "pcie_gbps")?;
+        pos(self.lan_gbps, "lan_gbps")?;
+        pos(self.expert_bytes, "expert_bytes")?;
+        pos(self.expert_bytes_fp32, "expert_bytes_fp32")?;
+        nonneg(self.pcie_lat_ms, "pcie_lat_ms")?;
+        nonneg(self.chunk_overhead_ms, "chunk_overhead_ms")?;
+        nonneg(self.lan_lat_ms, "lan_lat_ms")?;
+        nonneg(self.embed_msg_bytes, "embed_msg_bytes")?;
+        nonneg(self.kv_align_bytes, "kv_align_bytes")?;
+        nonneg(self.token_msg_bytes, "token_msg_bytes")?;
+        nonneg(self.nonexpert_bytes, "nonexpert_bytes")?;
+        nonneg(self.shadow_model_bytes, "shadow_model_bytes")?;
+        nonneg(self.activation_bytes, "activation_bytes")?;
+        for (v, what) in [
+            (self.batch_marginal, "batch_marginal"),
+            (self.prefill_attn_marginal, "prefill_attn_marginal"),
+        ] {
+            ensure!(
+                v.is_finite() && (0.0..=1.0).contains(&v),
+                "{what} must lie in [0, 1], got {v}"
+            );
+        }
+        ensure!(
+            self.t_shadow_layer_ms < self.t_main_ms() + self.t_worker_ms(),
+            "SEP cannot run ahead: t_shadow_layer_ms {} >= t_M + t_W {} (paper §3.1)",
+            self.t_shadow_layer_ms,
+            self.t_main_ms() + self.t_worker_ms()
+        );
+        Ok(())
+    }
+
     /// The paper's main testbed: ten nodes with RTX 3090s.
     pub fn rtx3090() -> Self {
-        Self {
+        let p = Self {
             name: "rtx3090",
             t_nonexpert_ms: 3.5,
             t_expert_gpu_ms: 1.4,
@@ -107,18 +162,22 @@ impl HardwareProfile {
             nonexpert_bytes: 7e9,      // paper: 7 GB on the main node
             shadow_model_bytes: 45e9,  // paper: 45 GB INT8 shadow
             activation_bytes: 0.3e9,   // compute workspace per worker
-        }
+        };
+        p.validate().expect("rtx3090 preset violates §3.1 invariants");
+        p
     }
 
     /// Fig. 10 variant: worker GPUs replaced by RTX 3080s (slower expert
     /// compute, slightly slower PCIe effective bandwidth).
     pub fn rtx3080_workers() -> Self {
-        Self {
+        let p = Self {
             name: "rtx3080-workers",
             t_expert_gpu_ms: 1.9,
             pcie_gbps: 22.0,
             ..Self::rtx3090()
-        }
+        };
+        p.validate().expect("rtx3080-workers preset violates §3.1 invariants");
+        p
     }
 
     /// Single-server reference for the baselines (8x3090 box; same GPU
@@ -227,6 +286,165 @@ impl HardwareProfile {
     /// whole-expert-deadline predicate.
     pub fn reroute_feasible(&self, slots: usize, n_groups: usize, chunks: usize) -> bool {
         slots as f64 * self.effective_load_ms(chunks) <= self.t_maxload_ms(n_groups)
+    }
+}
+
+/// One hardware class of fleet workers (DESIGN.md §10): the per-node
+/// knobs that differ across a heterogeneous edge fleet — GPU speed, PCIe
+/// bandwidth/latency, provisioned memory, and the LAN attach. Main-node,
+/// shadow-node and shared-LAN constants stay on the cluster's *base*
+/// [`HardwareProfile`]; [`NodeClass::worker_profile`] materializes the
+/// full duration model for one node of this class. The uniform class
+/// built by [`NodeClass::of_profile`] reproduces the base profile
+/// bit-identically, which is how the single-class fleet stays pinned to
+/// the shared-profile behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeClass {
+    pub name: &'static str,
+    /// One expert FFN (decode, 1 token) on this class's GPU.
+    pub t_expert_gpu_ms: Ms,
+    /// Effective CPU→GPU bandwidth of this class, GB/s.
+    pub pcie_gbps: f64,
+    /// Per-transfer PCIe latency.
+    pub pcie_lat_ms: Ms,
+    /// Per-chunk re-issue overhead when transfers stream (DESIGN.md §9).
+    pub chunk_overhead_ms: Ms,
+    /// Batched-FFN efficiency of this class's GPU.
+    pub batch_marginal: f64,
+    /// Provisioned GPU memory per node, bytes at paper scale — the
+    /// planner's per-node budget. `f64::INFINITY` = unchecked (the
+    /// uniform class, where the budget question does not arise).
+    pub mem_bytes: f64,
+    /// Extra LAN attach latency for messages to/from nodes of this class
+    /// (e.g. a Wi-Fi hop instead of wired Ethernet).
+    pub lan_extra_ms: Ms,
+    /// Relative per-node cost, in deployment bill units (rtx3090 = 1.0).
+    pub unit_cost: f64,
+}
+
+impl NodeClass {
+    /// The uniform class of a base profile: every field copied verbatim,
+    /// memory unchecked, wired LAN. `worker_profile(base)` of this class
+    /// is field-for-field identical to `base`.
+    pub fn of_profile(p: &HardwareProfile) -> Self {
+        Self {
+            name: p.name,
+            t_expert_gpu_ms: p.t_expert_gpu_ms,
+            pcie_gbps: p.pcie_gbps,
+            pcie_lat_ms: p.pcie_lat_ms,
+            chunk_overhead_ms: p.chunk_overhead_ms,
+            batch_marginal: p.batch_marginal,
+            mem_bytes: f64::INFINITY,
+            lan_extra_ms: 0.0,
+            unit_cost: 1.0,
+        }
+    }
+
+    /// The paper's main worker class (24 GB card, PCIe 4.0 x16).
+    pub fn rtx3090() -> Self {
+        Self { mem_bytes: 24e9, ..Self::of_profile(&HardwareProfile::rtx3090()) }
+    }
+
+    /// Fig. 10's cheaper workers: slower FFN, slightly slower link, 10 GB.
+    pub fn rtx3080() -> Self {
+        Self {
+            name: "rtx3080",
+            t_expert_gpu_ms: 1.9,
+            pcie_gbps: 22.0,
+            mem_bytes: 10e9,
+            unit_cost: 0.6,
+            ..Self::rtx3090()
+        }
+    }
+
+    /// Embedded-class edge node (Jetson-like): slow shared-memory
+    /// "PCIe", slower FFN, Wi-Fi attach. Cannot hold the Eq. (1) window
+    /// at full transfer precision — the planner's precision/chunking
+    /// knobs are what make this class deployable.
+    pub fn jetson() -> Self {
+        Self {
+            name: "jetson",
+            t_expert_gpu_ms: 3.2,
+            pcie_gbps: 8.0,
+            pcie_lat_ms: 0.4,
+            chunk_overhead_ms: 0.02,
+            batch_marginal: 0.05,
+            mem_bytes: 4e9,
+            lan_extra_ms: 0.1,
+            unit_cost: 0.35,
+        }
+    }
+
+    /// Bottom-tier edge node (Nano-like): the paper's "less-than-1 GB"
+    /// worker taken literally. Memory binds before bandwidth does.
+    pub fn nano() -> Self {
+        Self {
+            name: "nano",
+            t_expert_gpu_ms: 6.5,
+            pcie_gbps: 4.0,
+            pcie_lat_ms: 0.6,
+            chunk_overhead_ms: 0.04,
+            batch_marginal: 0.08,
+            mem_bytes: 1e9,
+            lan_extra_ms: 0.2,
+            unit_cost: 0.15,
+        }
+    }
+
+    /// Preset lookup for `FleetSpec` parsing.
+    pub fn preset(name: &str) -> Option<Self> {
+        Some(match name {
+            "rtx3090" => Self::rtx3090(),
+            "rtx3080" => Self::rtx3080(),
+            "jetson" => Self::jetson(),
+            "nano" => Self::nano(),
+            _ => return None,
+        })
+    }
+
+    /// Names `preset` accepts, for error messages.
+    pub const PRESET_NAMES: &'static [&'static str] =
+        &["rtx3090", "rtx3080", "jetson", "nano"];
+
+    /// Class-level invariants (profile-level ones are enforced by
+    /// [`HardwareProfile::validate`] on the materialized worker profile).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "node class needs a name");
+        ensure!(
+            self.mem_bytes > 0.0 && !self.mem_bytes.is_nan(),
+            "{}: mem_bytes must be positive, got {}",
+            self.name,
+            self.mem_bytes
+        );
+        ensure!(
+            self.lan_extra_ms.is_finite() && self.lan_extra_ms >= 0.0,
+            "{}: lan_extra_ms must be finite and >= 0, got {}",
+            self.name,
+            self.lan_extra_ms
+        );
+        ensure!(
+            self.unit_cost.is_finite() && self.unit_cost >= 0.0,
+            "{}: unit_cost must be finite and >= 0, got {}",
+            self.name,
+            self.unit_cost
+        );
+        Ok(())
+    }
+
+    /// Materialize the full duration model for one node of this class:
+    /// this class's worker-side knobs over `base`'s main/shadow/LAN/model
+    /// constants. The result is what [`super::Cluster`] consults for
+    /// every booking on a node of this class.
+    pub fn worker_profile(&self, base: &HardwareProfile) -> HardwareProfile {
+        HardwareProfile {
+            name: self.name,
+            t_expert_gpu_ms: self.t_expert_gpu_ms,
+            pcie_gbps: self.pcie_gbps,
+            pcie_lat_ms: self.pcie_lat_ms,
+            chunk_overhead_ms: self.chunk_overhead_ms,
+            batch_marginal: self.batch_marginal,
+            ..base.clone()
+        }
     }
 }
 
@@ -359,5 +577,104 @@ mod tests {
         assert!(b.t_expert_gpu_ms > a.t_expert_gpu_ms);
         assert!(b.pcie_gbps < a.pcie_gbps);
         assert_eq!(a.t_nonexpert_ms, b.t_nonexpert_ms, "main node unchanged");
+    }
+
+    #[test]
+    fn presets_validate() {
+        for p in [
+            HardwareProfile::rtx3090(),
+            HardwareProfile::rtx3080_workers(),
+            HardwareProfile::gpu_server(),
+        ] {
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_each_invariant_breach() {
+        let base = HardwareProfile::rtx3090;
+        // Non-positive / non-finite durations and bandwidths.
+        assert!(HardwareProfile { t_expert_gpu_ms: 0.0, ..base() }.validate().is_err());
+        assert!(HardwareProfile { t_nonexpert_ms: -1.0, ..base() }.validate().is_err());
+        assert!(HardwareProfile { pcie_gbps: 0.0, ..base() }.validate().is_err());
+        assert!(HardwareProfile { pcie_gbps: f64::INFINITY, ..base() }.validate().is_err());
+        assert!(HardwareProfile { lan_gbps: f64::NAN, ..base() }.validate().is_err());
+        assert!(HardwareProfile { expert_bytes: 0.0, ..base() }.validate().is_err());
+        // Negative latencies / overheads.
+        assert!(HardwareProfile { pcie_lat_ms: -0.1, ..base() }.validate().is_err());
+        assert!(HardwareProfile { chunk_overhead_ms: -0.01, ..base() }.validate().is_err());
+        // Marginals outside [0, 1].
+        assert!(HardwareProfile { batch_marginal: 1.5, ..base() }.validate().is_err());
+        assert!(HardwareProfile { prefill_attn_marginal: -0.1, ..base() }.validate().is_err());
+        // The §3.1 shadow-lead invariant that was previously only a doc
+        // comment: a shadow slower than t_M + t_W cannot run ahead.
+        let p = base();
+        let too_slow = p.t_main_ms() + p.t_worker_ms() + 0.1;
+        let err = HardwareProfile { t_shadow_layer_ms: too_slow, ..base() }
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("SEP cannot run ahead"), "{err}");
+    }
+
+    #[test]
+    fn uniform_node_class_reproduces_the_base_profile_exactly() {
+        let base = HardwareProfile::rtx3090();
+        let c = NodeClass::of_profile(&base);
+        let wp = c.worker_profile(&base);
+        // Field-for-field identity on everything the cluster consults —
+        // the bit-identical single-class pin rests on this.
+        assert_eq!(wp.name, base.name);
+        assert_eq!(wp.t_expert_gpu_ms, base.t_expert_gpu_ms);
+        assert_eq!(wp.pcie_gbps, base.pcie_gbps);
+        assert_eq!(wp.pcie_lat_ms, base.pcie_lat_ms);
+        assert_eq!(wp.chunk_overhead_ms, base.chunk_overhead_ms);
+        assert_eq!(wp.batch_marginal, base.batch_marginal);
+        assert_eq!(wp.expert_bytes, base.expert_bytes);
+        assert_eq!(
+            wp.chunk_durations(base.expert_bytes, 4),
+            base.chunk_durations(base.expert_bytes, 4)
+        );
+        assert_eq!(c.lan_extra_ms, 0.0);
+    }
+
+    #[test]
+    fn class_presets_validate_and_are_ordered_by_capability() {
+        let base = HardwareProfile::rtx3090();
+        let classes = [
+            NodeClass::rtx3090(),
+            NodeClass::rtx3080(),
+            NodeClass::jetson(),
+            NodeClass::nano(),
+        ];
+        for c in &classes {
+            c.validate().unwrap_or_else(|e| panic!("{}: {e}", c.name));
+            c.worker_profile(&base)
+                .validate()
+                .unwrap_or_else(|e| panic!("{} profile: {e}", c.name));
+            assert_eq!(NodeClass::preset(c.name).as_ref(), Some(c), "{} round-trips", c.name);
+        }
+        assert!(NodeClass::preset("gtx1080").is_none());
+        // Monotone down the tier list: slower FFN, thinner link, less
+        // memory, cheaper.
+        for w in classes.windows(2) {
+            assert!(w[1].t_expert_gpu_ms >= w[0].t_expert_gpu_ms);
+            assert!(w[1].pcie_gbps <= w[0].pcie_gbps);
+            assert!(w[1].mem_bytes <= w[0].mem_bytes);
+            assert!(w[1].unit_cost <= w[0].unit_cost);
+        }
+    }
+
+    #[test]
+    fn jetson_needs_precision_or_chunking_to_hold_the_window() {
+        // The planner's whole reason to exist: the embedded class misses
+        // the Eq. (1) window at full transfer precision but fits once the
+        // transfer shrinks (HOBBIT's precision knob) — so deployability
+        // is a *configuration* question, not a hardware constant.
+        let base = HardwareProfile::rtx3090();
+        let jetson = NodeClass::jetson().worker_profile(&base);
+        assert!(!jetson.reroute_feasible(1, 5, 1), "full-precision jetson misses");
+        assert!(!jetson.reroute_feasible(1, 5, 8), "chunking alone is not enough");
+        let nf4 = HardwareProfile { expert_bytes: base.expert_bytes * 0.28, ..jetson };
+        assert!(nf4.reroute_feasible(1, 5, 1), "nf4-sized transfers fit the window");
     }
 }

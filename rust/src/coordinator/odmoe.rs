@@ -50,6 +50,7 @@ use super::schedule::{GroupSchedule, SlotMap};
 use super::{Engine, PromptResult};
 use crate::cluster::{ChunkedTransfer, Cluster, HardwareProfile, Ms};
 use crate::engine::{BatchState, ModelState, StepRecord};
+use crate::fleet::{capability_slots, FleetSpec};
 use crate::metrics::correct_count;
 use crate::model::{Precision, WeightStore};
 use crate::predictor::baseline::RandomPredictor;
@@ -150,6 +151,16 @@ pub struct OdMoeConfig {
     /// worker.
     pub prefetch_depth: usize,
     pub profile: HardwareProfile,
+    /// Heterogeneous fleet composition (DESIGN.md §10). `None` — the
+    /// default — is the uniform cluster built from `profile`, the
+    /// original shared-profile path. `Some(fleet)` gives each worker its
+    /// own [`crate::cluster::NodeClass`] duration model and builds the
+    /// slot map capability-aware (slots prefer nodes whose class holds
+    /// the Eq. (1) window; see [`capability_slots`]); `n_workers` must
+    /// equal the fleet's node count. A single-class fleet of the base
+    /// profile's class reproduces `None` bit-identically — tokens AND
+    /// timings — which `rust/tests/fleet_props.rs` pins.
+    pub fleet: Option<FleetSpec>,
 }
 
 impl Default for OdMoeConfig {
@@ -163,6 +174,7 @@ impl Default for OdMoeConfig {
             chunks: 1,
             prefetch_depth: 0,
             profile: HardwareProfile::rtx3090(),
+            fleet: None,
         }
     }
 }
@@ -187,6 +199,9 @@ pub struct OdMoeEngine<'rt> {
     pub schedule: GroupSchedule,
     /// Live slot→worker routing; diverges from `schedule` after failures.
     pub slots: SlotMap,
+    /// Healthy slot map `reset` restores (identity on a uniform cluster;
+    /// capability-aware first-fit on a fleet).
+    slots_blueprint: SlotMap,
     main: ModelState<'rt>,
     sep: Option<SepPredictor<'rt>>,
     /// Per-session shadow predictors for batched decode, lazily built on
@@ -196,11 +211,14 @@ pub struct OdMoeEngine<'rt> {
     sep_slots: Vec<SepPredictor<'rt>>,
     random: Option<RandomPredictor>,
     workers: Vec<WorkerState>,
-    /// Precomputed per-chunk durations of one expert transfer (profile
-    /// and `cfg.chunks` are fixed for the engine's lifetime): the hot
-    /// load path streams straight off this without allocating; only the
-    /// rare failover branch materializes an owned suffix.
-    chunk_durs: Vec<Ms>,
+    /// Precomputed per-chunk durations of one expert transfer, per
+    /// worker (each worker's *class* profile and `cfg.chunks` are fixed
+    /// for the engine's lifetime; uniform clusters hold identical
+    /// trains): the hot load path streams straight off this without
+    /// allocating; the failover branch indexes the undelivered suffix of
+    /// the *replacement's* train, so a resumed stream pays the new
+    /// class's honest per-chunk times.
+    chunk_durs: Vec<Vec<Ms>>,
     /// Virtual time at which the main node is ready for the next token.
     now: Ms,
     /// When the shadow node finished its previous iteration.
@@ -219,9 +237,40 @@ pub struct OdMoeEngine<'rt> {
 impl<'rt> OdMoeEngine<'rt> {
     pub fn new(rt: &'rt Runtime, ws: WeightStore, cfg: OdMoeConfig) -> Result<Self> {
         ensure!(cfg.chunks >= 1, "expert transfers need at least one chunk");
-        let schedule = GroupSchedule::new(cfg.n_workers, ws.cfg.top_k);
-        let slots = SlotMap::from_schedule(&schedule);
-        let cluster = Cluster::new(cfg.profile.clone(), cfg.n_workers);
+        let group_size = ws.cfg.top_k;
+        let (schedule, slots, cluster) = match &cfg.fleet {
+            // Uniform cluster: the original shared-profile path, asserts
+            // and all (equal split, identity slot map) — bit-identical.
+            None => {
+                let schedule = GroupSchedule::new(cfg.n_workers, group_size);
+                let slots = SlotMap::from_schedule(&schedule);
+                let cluster = Cluster::new(cfg.profile.clone(), cfg.n_workers);
+                (schedule, slots, cluster)
+            }
+            // Heterogeneous fleet: per-worker class profiles, groups
+            // rounded down over however many nodes the fleet brings
+            // (leftovers are spares), slots capability-aware.
+            Some(fleet) => {
+                fleet.validate(&cfg.profile)?;
+                ensure!(
+                    cfg.n_workers == fleet.n_nodes(),
+                    "n_workers {} must match the fleet's {} nodes ({})",
+                    cfg.n_workers,
+                    fleet.n_nodes(),
+                    fleet.label()
+                );
+                let cluster = Cluster::with_classes(cfg.profile.clone(), fleet.node_classes());
+                let n_groups = cfg.n_workers / group_size;
+                ensure!(
+                    n_groups >= 1,
+                    "fleet {} has fewer nodes than one group of {group_size}",
+                    fleet.label()
+                );
+                let slots = capability_slots(&cluster, group_size, cfg.chunks);
+                let schedule = GroupSchedule::new(n_groups * group_size, group_size);
+                (schedule, slots, cluster)
+            }
+        };
         let sep = match cfg.predictor {
             PredictorMode::Sep => Some(SepPredictor::new(
                 rt,
@@ -239,12 +288,18 @@ impl<'rt> OdMoeEngine<'rt> {
         };
         let main = ModelState::new(rt, ws)?;
         let workers = vec![WorkerState::default(); cfg.n_workers];
-        let chunk_durs = cfg.profile.chunk_durations(cfg.profile.expert_bytes, cfg.chunks);
+        let chunk_durs = (0..cfg.n_workers)
+            .map(|w| {
+                cluster.worker_profile(w).chunk_durations(cfg.profile.expert_bytes, cfg.chunks)
+            })
+            .collect();
+        let slots_blueprint = slots.clone();
         let mut engine = Self {
             cfg,
             cluster,
             schedule,
             slots,
+            slots_blueprint,
             main,
             sep,
             sep_slots: Vec::new(),
@@ -330,16 +385,24 @@ impl<'rt> OdMoeEngine<'rt> {
 
     /// Fail-stop worker `w` at `at`: freeze its resources, drop its
     /// memory contents, and reassign its slots across survivors,
-    /// preferring targets whose projected load still fits the Eq. (1)
-    /// no-stall window (earliest-first-chunk aware when transfers are
-    /// chunked — see [`HardwareProfile::reroute_feasible`]).
+    /// preferring targets whose *own class* keeps the projected load
+    /// inside the Eq. (1) no-stall window (earliest-first-chunk aware
+    /// when transfers are chunked — see
+    /// [`HardwareProfile::reroute_feasible`]), least projected load
+    /// *time* first — on a mixed fleet a fast survivor already carrying
+    /// a slot can beat an empty slow one. Uniform clusters order exactly
+    /// as the old shared-profile reroute did.
     fn apply_worker_failure(&mut self, w: usize, at: Ms) {
         self.pending_fail.retain(|&(pw, _)| pw != w);
         self.cluster.fail_worker(w, at);
-        let p = self.cluster.profile.clone();
         let n_groups = self.schedule.n_groups();
         let chunks = self.cfg.chunks;
-        self.slots.fail(w, |slots| p.reroute_feasible(slots, n_groups, chunks));
+        let cluster = &self.cluster;
+        self.slots.fail_with(
+            w,
+            |c, slots| cluster.worker_profile(c).reroute_feasible(slots, n_groups, chunks),
+            |c| cluster.worker_profile(c).effective_load_ms(chunks),
+        );
     }
 
     /// Apply every worker failure due by `t` — the coordinator's
@@ -422,21 +485,27 @@ impl<'rt> OdMoeEngine<'rt> {
     ) -> ChunkedTransfer {
         let bytes = self.cluster.profile.expert_bytes;
         let lan_lat = self.cluster.profile.lan_lat_ms;
-        // Owned suffix only materializes on the rare failover branch;
-        // the common case streams off the precomputed train.
-        let mut remaining: Option<Vec<Ms>> = None;
+        // Chunks already delivered before a failover; the replacement
+        // re-books only the undelivered suffix — of ITS OWN class's
+        // train, so a resumed stream pays the new link's honest times
+        // (identical to the dead worker's on a uniform cluster).
+        let mut done_chunks = 0usize;
         loop {
             let w = self.slots.worker_for(layer, slot);
+            // The dispatch notice reaches a class-c worker its LAN
+            // attach latency later (0 on wired classes and every uniform
+            // cluster — bit-identical there).
+            let notice = earliest + self.cluster.lan_extra(w);
             if let Some(at) = self.pending_worker_fail(w) {
-                if at <= earliest {
+                if at <= notice {
                     self.apply_worker_failure(w, at);
                     continue;
                 }
             }
             let start_at = if respect_residency {
-                earliest.max(self.residency_gate(w))
+                notice.max(self.residency_gate(w))
             } else {
-                earliest
+                notice
             };
             // A stream that jumps the residency gate (depth >= 1) is the
             // speculative slack-filler; tag it so timelines show it.
@@ -448,10 +517,7 @@ impl<'rt> OdMoeEngine<'rt> {
             } else {
                 EventKind::ExpertLoad
             };
-            let durs: &[Ms] = match &remaining {
-                Some(d) => d,
-                None => &self.chunk_durs,
-            };
+            let durs: &[Ms] = &self.chunk_durs[w][done_chunks..];
             let t = self.cluster.expert_load_chunks(w, start_at, durs, kind);
             if let Some(at) = self.pending_worker_fail(w) {
                 if at < t.done() {
@@ -459,14 +525,9 @@ impl<'rt> OdMoeEngine<'rt> {
                     // the failure instant; the replacement re-books the
                     // undelivered suffix of the train after the failure
                     // notice reaches the coordinator.
-                    let delivered = t.delivered_by(at);
-                    let suffix = match &remaining {
-                        Some(d) => d[delivered..].to_vec(),
-                        None => self.chunk_durs[delivered..].to_vec(),
-                    };
+                    done_chunks += t.delivered_by(at);
                     self.apply_worker_failure(w, at);
                     self.failovers += 1;
-                    remaining = Some(suffix);
                     earliest = earliest.max(at + lan_lat);
                     continue;
                 }
@@ -519,27 +580,39 @@ impl<'rt> OdMoeEngine<'rt> {
     /// Book the expert compute for slot `(layer, slot)` on `holder` (the
     /// worker its expert was streamed to), one tile per chunk gated on
     /// that chunk's arrival (`gates`) — the FFN pipelines behind the
-    /// transfer and ends no later than the monolithic compute would. If
+    /// transfer and ends no later than the monolithic compute would. The
+    /// FFN base duration is the *holder's class* time for a `rows`-token
+    /// batched FFN ([`Cluster::expert_ffn_ms`]; `rows == 1` is the
+    /// class's plain `t_expert_gpu_ms`), re-derived after a failover so
+    /// a replacement of a different class computes at its own speed, and
+    /// the compute gates on the embedding's arrival at the *current*
+    /// holder's class (`ec_floor.max(embed_arrival + lan_extra)` — a
+    /// replacement behind a slower LAN attach honestly waits for its own
+    /// copy of the embedding; all extras are 0 on a uniform cluster). If
     /// the holder dies before the compute finishes, the expert is lost
     /// with the node: the slot's replacement re-streams it (one LAN
     /// notification after the failure) and the tiles re-gate on the new
     /// train. Evicts the expert after the compute (cacheless) and
-    /// advances the worker's residency history. Returns the compute end.
+    /// advances the worker's residency history. Returns the final
+    /// (holder, compute end).
+    #[allow(clippy::too_many_arguments)]
     fn compute_with_failover(
         &mut self,
         layer: usize,
         slot: usize,
         mut holder: usize,
-        earliest: Ms,
-        base_ms: Ms,
+        ec_floor: Ms,
+        embed_arrival: Ms,
+        rows: usize,
         gates: &[Ms],
-    ) -> Ms {
+    ) -> (usize, Ms) {
         let bytes = self.cluster.profile.expert_bytes as u64;
         let lan_lat = self.cluster.profile.lan_lat_ms;
         // Owned gates only materialize on the (rare) failover branch —
         // the common case computes straight off the caller's slice.
         let mut restreamed: Option<Vec<Ms>> = None;
         loop {
+            let earliest = ec_floor.max(embed_arrival + self.cluster.lan_extra(holder));
             // The holder may have died since its stream completed (its own
             // pending failure applied below, or another slot's failover):
             // the expert is lost with the node, so the slot's replacement
@@ -561,6 +634,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 }
             }
             let tile_gates = restreamed.as_deref().unwrap_or(gates);
+            let base_ms = self.cluster.expert_ffn_ms(holder, rows);
             let (_, ec_end) =
                 self.cluster.expert_compute_chunked(holder, earliest, base_ms, tile_gates);
             if let Some(at) = self.pending_worker_fail(holder) {
@@ -585,7 +659,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 let drop = ends.len() - keep;
                 ends.drain(..drop);
             }
-            return ec_end;
+            return (holder, ec_end);
         }
     }
 
@@ -747,21 +821,28 @@ impl<'rt> OdMoeEngine<'rt> {
             // EC_l on the group's devices (parallel while slots map to
             // distinct workers; serialized where failures concentrated
             // slots on one survivor), tile-pipelined behind each stream.
-            let mut ec_end_max = ec_earliest;
+            // Each holder computes at ITS class's FFN speed, gated on
+            // the embedding's arrival at that class (wired + its LAN
+            // attach extra); the combined output can leave for the main
+            // node once the last holder's result reaches the wire —
+            // again its attach extra later. All the extras are 0 on a
+            // uniform cluster, collapsing to the old expressions.
+            let mut out_ready = ec_earliest;
             for (slot, t) in holders.iter().enumerate() {
-                let ec_end = self.compute_with_failover(
+                let (holder, ec_end) = self.compute_with_failover(
                     l,
                     slot,
                     t.worker,
                     ec_earliest,
-                    p.t_expert_gpu_ms,
+                    embed_arrival,
+                    1,
                     &t.chunk_ends,
                 );
-                ec_end_max = ec_end_max.max(ec_end);
+                out_ready = out_ready.max(ec_end + self.cluster.lan_extra(holder));
             }
 
             // Combined expert output returns to the main node.
-            m_ready = self.cluster.lan_send(ec_end_max, p.embed_msg_bytes, "embed-back");
+            m_ready = self.cluster.lan_send(out_ready, p.embed_msg_bytes, "embed-back");
         }
 
         // LM head on the main node.
@@ -783,13 +864,17 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
             PredictorMode::Random => "random-prefetch".into(),
             PredictorMode::None => "no-prefetch".into(),
         };
-        if self.cfg.chunks > 1 || self.cfg.prefetch_depth > 0 {
+        let name = if self.cfg.chunks > 1 || self.cfg.prefetch_depth > 0 {
             format!(
                 "od-moe({mode},chunks{},depth{})",
                 self.cfg.chunks, self.cfg.prefetch_depth
             )
         } else {
             format!("od-moe({mode})")
+        };
+        match &self.cfg.fleet {
+            Some(f) => format!("{name}@{}", f.label()),
+            None => name,
         }
     }
 
@@ -799,7 +884,7 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
             s.reset();
         }
         self.cluster.reset();
-        self.slots = SlotMap::from_schedule(&self.schedule);
+        self.slots = self.slots_blueprint.clone();
         self.pending_fail.clear();
         self.pending_shadow = None;
         for f in self.plan.clone() {
@@ -1073,30 +1158,33 @@ impl<'rt> OdMoeEngine<'rt> {
             }
 
             // EC_l: each distinct expert computes its routed tokens as one
-            // batched FFN, tile-pipelined behind its stream; a worker
-            // hosting several experts runs them back to back (evicting
-            // each — cacheless — right after). Slot order matches the
-            // sequential EC loop at batch 1; the order is
-            // aggregate-neutral otherwise (per-link bookings commute
-            // under max).
+            // batched FFN at its holder's class speed, tile-pipelined
+            // behind its stream; a worker hosting several experts runs
+            // them back to back (evicting each — cacheless — right
+            // after). Slot order matches the sequential EC loop at batch
+            // 1; the order is aggregate-neutral otherwise (per-link
+            // bookings commute under max). Embed arrival and the return
+            // hop honor each holder's LAN attach extra, 0 on uniform
+            // clusters — same collapse as sequential decode.
             placed.sort_by_key(|&(_, slot, _)| slot);
-            let mut ec_end_max = ec_earliest;
+            let mut out_ready = ec_earliest;
             for (cnt, slot, t) in &placed {
-                let ec_end = self.compute_with_failover(
+                let (holder, ec_end) = self.compute_with_failover(
                     l,
                     *slot,
                     t.worker,
                     ec_earliest,
-                    p.expert_batch_ms(*cnt),
+                    embed_arrival,
+                    *cnt,
                     &t.chunk_ends,
                 );
-                ec_end_max = ec_end_max.max(ec_end);
+                out_ready = out_ready.max(ec_end + self.cluster.lan_extra(holder));
             }
 
             // Combined expert outputs return to the main node.
             m_ready = self
                 .cluster
-                .lan_send(ec_end_max, p.embed_msg_bytes * b as f64, "embed-back");
+                .lan_send(out_ready, p.embed_msg_bytes * b as f64, "embed-back");
         }
 
         // LM head for all B tokens.
@@ -1230,6 +1318,7 @@ mod tests {
         let cfg = OdMoeConfig::default();
         assert_eq!(cfg.chunks, 1, "default = monolithic transfers");
         assert_eq!(cfg.prefetch_depth, 0, "default = strict single-expert residency");
+        assert!(cfg.fleet.is_none(), "default = the uniform shared-profile cluster");
     }
 
     #[test]

@@ -62,7 +62,10 @@ pub fn simulate_odmoe_prefill(
 
         // Each worker loads this layer's expert over its own PCIe link
         // (pipelines with the previous layer's compute automatically via
-        // the per-worker link resource).
+        // the per-worker link resource). Load and FFN durations come
+        // from the owning node's class (== the base profile on a
+        // uniform cluster), and embeddings reach a class's workers its
+        // LAN attach extra later.
         let mut layer_end: Ms = 0.0;
         for w in 0..n_workers {
             let (_, load_done) = cluster.expert_load(w, 0.0, p.expert_bytes);
@@ -72,14 +75,15 @@ pub fn simulate_odmoe_prefill(
             // behind the arrivals (Fig. 7b).
             let mut compute_free = worker_free[w].max(load_done);
             let mut sent_from = m_end;
+            let lan_extra = cluster.lan_extra(w);
+            let dur = cluster.worker_profile(w).expert_batch_ms(chunk_tokens);
             for _chunk in 0..b {
-                let arrival = cluster.lan_send(sent_from, chunk_bytes, "prefill-embed");
+                let arrival = cluster.lan_send(sent_from, chunk_bytes, "prefill-embed") + lan_extra;
                 sent_from = arrival;
                 if arrival > compute_free {
                     worker_wait += arrival - compute_free;
                 }
                 let start = arrival.max(compute_free);
-                let dur = p.expert_batch_ms(chunk_tokens);
                 let (_, end) = cluster.workers[w].gpu.acquire(start.max(start), dur);
                 compute_free = end;
             }
@@ -135,6 +139,26 @@ mod tests {
         let b16 = run(128, 16);
         assert!(b4.ttft_ms < b1.ttft_ms, "some mini-batching must help");
         assert!(b16.ttft_ms > b4.ttft_ms, "excessive chunking must cost");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_prefill_books_honest_class_times() {
+        use crate::cluster::NodeClass;
+        let base = HardwareProfile::rtx3090();
+        let uniform = run(64, 4).ttft_ms;
+        // Same worker count, half the nodes swapped for jetsons: their
+        // thin links and slow FFNs must show up in TTFT.
+        let mut classes = vec![NodeClass::of_profile(&base); 4];
+        classes.extend(vec![NodeClass::jetson(); 4]);
+        let mut c = Cluster::with_classes(base.clone(), classes);
+        let het = simulate_odmoe_prefill(&mut c, &ModelConfig::default(), 64, 4).ttft_ms;
+        assert!(het > uniform, "jetson links must slow prefill: {het} vs {uniform}");
+        // An all-uniform class list reproduces the shared-profile TTFT
+        // exactly (the bit-identical single-class pin, prefill edition).
+        let mut c =
+            Cluster::with_classes(base.clone(), vec![NodeClass::of_profile(&base); 8]);
+        let same = simulate_odmoe_prefill(&mut c, &ModelConfig::default(), 64, 4).ttft_ms;
+        assert_eq!(same, uniform);
     }
 
     #[test]

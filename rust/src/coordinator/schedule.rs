@@ -92,11 +92,38 @@ impl SlotMap {
             "need at least one full group ({n_workers} workers, group {group_size})"
         );
         let n_groups = n_workers / group_size;
-        Self {
-            group_size,
-            assign: (0..n_groups * group_size).collect(),
-            alive: vec![true; n_workers],
+        Self::first_fit(n_workers, group_size, n_groups, |_| true)
+    }
+
+    /// Capability-aware first-fit over a heterogeneous fleet: slots fill
+    /// from the lowest-id worker whose class `capable(w)` — i.e. whose
+    /// class keeps [`HardwareProfile::reroute_feasible`] true for one
+    /// slot — and only fall back to incapable workers (still in id
+    /// order) when capable ones run out, so under-provisioned node
+    /// classes start as spares instead of hosting slots. With every
+    /// worker capable this is the identity assignment — the single-class
+    /// special case [`SlotMap::new`] delegates to.
+    pub fn first_fit(
+        n_workers: usize,
+        group_size: usize,
+        n_groups: usize,
+        capable: impl Fn(usize) -> bool,
+    ) -> Self {
+        assert!(
+            group_size > 0 && n_groups > 0 && n_groups * group_size <= n_workers,
+            "{n_groups} groups of {group_size} need <= {n_workers} workers"
+        );
+        let n_slots = n_groups * group_size;
+        let mut assign = Vec::with_capacity(n_slots);
+        assign.extend((0..n_workers).filter(|&w| capable(w)).take(n_slots));
+        if assign.len() < n_slots {
+            // Not enough capable nodes: the remaining slots land on
+            // incapable workers anyway (degraded but live), id order.
+            let short = n_slots - assign.len();
+            assign.extend((0..n_workers).filter(|&w| !capable(w)).take(short));
         }
+        assert_eq!(assign.len(), n_slots, "every slot must find a host");
+        Self { group_size, assign, alive: vec![true; n_workers] }
     }
 
     pub fn from_schedule(s: &GroupSchedule) -> Self {
@@ -149,17 +176,37 @@ impl SlotMap {
     /// Mark `w` dead and reassign each of its slots to a survivor.
     /// `feasible(slots)` answers whether a worker serving `slots` expert
     /// slots still fits all of its per-cycle loads in the Eq. (1)
-    /// no-stall window — pass
-    /// [`HardwareProfile::reroute_feasible`] with the schedule's group
-    /// count, the single source of truth for that predicate. Candidates
-    /// whose *projected* count stays feasible are preferred
-    /// (least-loaded, then lowest id); otherwise the least-loaded
-    /// survivor takes the slot anyway (degraded but live). Returns the
-    /// (group, slot, new worker) moves. Panics if no worker survives.
+    /// no-stall window. This is the homogeneous-fleet entry point (every
+    /// worker shares one predicate and one load time); heterogeneous
+    /// fleets use [`SlotMap::fail_with`], which this delegates to.
     pub fn fail(
         &mut self,
         w: usize,
         feasible: impl Fn(usize) -> bool,
+    ) -> Vec<(usize, usize, usize)> {
+        self.fail_with(w, |_, slots| feasible(slots), |_| 1.0)
+    }
+
+    /// Capability-aware failure rerouting: mark `w` dead and reassign
+    /// each of its slots to a survivor. `feasible(worker, slots)` is the
+    /// per-class Eq. (1) predicate — pass the candidate's own
+    /// [`HardwareProfile::reroute_feasible`], so a slot only lands on a
+    /// node whose *class* keeps the no-stall window; `load_ms(worker)`
+    /// is one slot's per-cycle load time on that worker's class
+    /// (`effective_load_ms` under the current chunking). Among feasible
+    /// candidates the one with the least *projected load time* wins —
+    /// `(slots + 1) * load_ms(w)`, not the bare slot count, so a fast
+    /// survivor carrying two slots can beat a slow empty one — with ties
+    /// broken by slot count then lowest id; when nothing is feasible the
+    /// least-loaded-by-time survivor takes the slot anyway (degraded but
+    /// live). With a uniform `load_ms` this is exactly the old
+    /// least-loaded-by-count order. Returns the (group, slot, new
+    /// worker) moves. Panics if no worker survives.
+    pub fn fail_with(
+        &mut self,
+        w: usize,
+        feasible: impl Fn(usize, usize) -> bool,
+        load_ms: impl Fn(usize) -> Ms,
     ) -> Vec<(usize, usize, usize)> {
         assert!(w < self.alive.len(), "worker {w} out of range");
         if !self.alive[w] {
@@ -172,25 +219,38 @@ impl SlotMap {
             if self.assign[i] != w {
                 continue;
             }
-            let target = self.choose_target(&feasible);
+            let target = self.choose_target(&feasible, &load_ms);
             self.assign[i] = target;
             moves.push((i / self.group_size, i % self.group_size, target));
         }
         moves
     }
 
-    /// Least-loaded feasible survivor, else least-loaded survivor
-    /// (ties break on the lowest worker id — deterministic).
-    fn choose_target(&self, feasible: &impl Fn(usize) -> bool) -> usize {
-        let candidates = || {
-            (0..self.alive.len())
-                .filter(|&c| self.alive[c])
-                .map(|c| (self.load_of(c), c))
+    /// Least projected-load-time feasible survivor, else least loaded by
+    /// time outright (ties: slot count, then lowest id — deterministic).
+    fn choose_target(
+        &self,
+        feasible: &impl Fn(usize, usize) -> bool,
+        load_ms: &impl Fn(usize) -> Ms,
+    ) -> usize {
+        let score = |c: usize| {
+            let slots = self.load_of(c);
+            let t = (slots + 1) as f64 * load_ms(c);
+            debug_assert!(t.is_finite() && t >= 0.0, "worker {c}: bad load time {t}");
+            (t, slots, c)
         };
+        let by_time = |a: &(Ms, usize, usize), b: &(Ms, usize, usize)| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        };
+        let candidates = || (0..self.alive.len()).filter(|&c| self.alive[c]).map(score);
         let best = candidates()
-            .filter(|&(slots, _)| feasible(slots + 1))
-            .min();
-        let (_, target) = best.or_else(|| candidates().min()).expect("a survivor exists");
+            .filter(|&(_, slots, c)| feasible(c, slots + 1))
+            .min_by(by_time);
+        let (_, _, target) =
+            best.or_else(|| candidates().min_by(by_time)).expect("a survivor exists");
         target
     }
 }
@@ -344,6 +404,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn first_fit_prefers_capable_workers_and_falls_back_in_order() {
+        // 6 workers, groups of 2, 2 groups (4 slots); workers 1 and 3
+        // incapable: slots fill from {0, 2, 4, 5}, incapable start idle.
+        let capable = |w: usize| w != 1 && w != 3;
+        let m = SlotMap::first_fit(6, 2, 2, capable);
+        assert_eq!(m.workers_of(0), vec![0, 2]);
+        assert_eq!(m.workers_of(1), vec![4, 5]);
+        assert_eq!(m.load_of(1), 0, "incapable worker starts as a spare");
+        assert_eq!(m.load_of(3), 0);
+        // Not enough capable nodes: the shortfall lands on incapable
+        // workers in id order (degraded but live).
+        let m = SlotMap::first_fit(4, 2, 2, |w| w >= 3);
+        assert_eq!(m.workers_of(0), vec![3, 0]);
+        assert_eq!(m.workers_of(1), vec![1, 2]);
+        // All capable == the identity assignment SlotMap::new builds.
+        assert_eq!(SlotMap::first_fit(8, 2, 4, |_| true), SlotMap::new(8, 2));
+    }
+
+    #[test]
+    fn fail_with_prefers_least_projected_load_time_not_slot_count() {
+        // Worker 0 is 4x faster than workers 2..: after absorbing one
+        // slot (2 total, projected 3 * 10 = 30) it still beats an
+        // empty slow worker (projected 1 * 45 = 45) — the by-count order
+        // would have picked the empty one.
+        let load_ms = |w: usize| if w == 0 { 10.0 } else { 45.0 };
+        let mut m = SlotMap::new(6, 2);
+        let moves = m.fail_with(1, |_, _| true, load_ms);
+        assert_eq!(moves, vec![(0, 1, 0)]);
+        assert_eq!(m.load_of(0), 2);
+        let moves = m.fail_with(2, |_, _| true, load_ms);
+        assert_eq!(moves, vec![(1, 0, 0)], "fast worker wins again by time");
+        assert_eq!(m.load_of(0), 3);
+    }
+
+    #[test]
+    fn fail_with_per_worker_feasibility_skips_incapable_classes() {
+        // Per-candidate predicate: worker 0's class can never absorb a
+        // second slot, worker 3's can. The slot must land on 3 even
+        // though 0 and 3 tie on load.
+        let feasible = |c: usize, slots: usize| match c {
+            0 => slots <= 1,
+            _ => slots <= 3,
+        };
+        let mut m = SlotMap::new(4, 2);
+        let moves = m.fail_with(1, feasible, |_| 1.0);
+        assert_eq!(moves, vec![(0, 1, 2)], "first feasible-by-class candidate");
+        let moves = m.fail_with(3, feasible, |_| 1.0);
+        assert_eq!(moves, vec![(1, 1, 2)], "worker 0 skipped: its class cannot absorb");
+        assert_eq!(m.load_of(2), 3);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Heterogeneous fleet composition and the SLO-driven deployment
+//! planner (DESIGN.md §10).
+//!
+//! The paper promises MoE inference on *low-cost, mixed* edge hardware,
+//! which makes deployment a configuration-search problem: which fleet
+//! composition keeps the Eq. (1) no-stall window feasible, at what
+//! transfer precision and chunking, and at what memory/cost? This module
+//! supplies the two halves:
+//!
+//! * [`FleetSpec`] — a named composition of [`NodeClass`]es
+//!   (`rtx3080:4,jetson:4,nano:2`), parsed from the CLI, validated
+//!   against the §3.1 profile invariants, and threaded into
+//!   [`crate::cluster::Cluster`] / [`crate::coordinator::OdMoeConfig`] so
+//!   every worker books its own class's durations.
+//! * [`planner`] — a grid search over (class subset, transfer precision,
+//!   chunk count, prefetch depth, replica count) that scores candidates
+//!   with the real engine in virtual time, prunes by the per-class
+//!   Eq. (1) window and per-node memory budgets, and emits a
+//!   deterministic Pareto frontier (`BENCH_plan.json`) plus a chosen
+//!   plan `od-moe serve --plan` can run directly.
+//!
+//! SlimCaching (arXiv 2507.06567) frames the expert-placement-across-
+//! heterogeneous-devices optimization this reifies; HOBBIT
+//! (arXiv 2411.01433) is where precision-as-a-deployment-knob comes
+//! from.
+
+pub mod planner;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::{Cluster, HardwareProfile, NodeClass};
+use crate::coordinator::SlotMap;
+
+pub use planner::{PlanCandidate, PlanChoice, PlanGrid, PlanMeasurement, PlanReport};
+
+/// A named fleet composition: node classes with counts, in declaration
+/// order. Worker ids are assigned by expanding the entries in order
+/// (`rtx3080:4,jetson:2` → workers 0..4 are rtx3080, 4..6 jetson).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    entries: Vec<(NodeClass, usize)>,
+}
+
+impl FleetSpec {
+    /// Parse a `class:count[,class:count..]` spec (`count` defaults to 1
+    /// when omitted). Class names resolve through [`NodeClass::preset`];
+    /// duplicate classes are rejected so the canonical [`FleetSpec::label`]
+    /// round-trips through this parser.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let part = part.trim();
+            let (name, count) = match part.split_once(':') {
+                Some((n, c)) => {
+                    let count: usize = c
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad node count in {part:?}"))?;
+                    (n.trim(), count)
+                }
+                None => (part, 1),
+            };
+            let Some(class) = NodeClass::preset(name) else {
+                bail!(
+                    "unknown node class {name:?} (have {})",
+                    NodeClass::PRESET_NAMES.join("|")
+                );
+            };
+            ensure!(count >= 1, "node class {name:?} needs a count >= 1");
+            ensure!(
+                !entries.iter().any(|(c, _): &(NodeClass, usize)| c.name == name),
+                "node class {name:?} listed twice — merge the counts"
+            );
+            entries.push((class, count));
+        }
+        Self::from_entries(entries)
+    }
+
+    /// Build from explicit entries (tests and the planner's subsets).
+    /// Each class is validated both at the class level and as a
+    /// materialized worker profile over the paper's base testbed
+    /// ([`HardwareProfile::validate`] — the §3.1 invariants), so a bad
+    /// preset fails at parse time, not mid-simulation; engines
+    /// re-validate against their actual base profile.
+    pub fn from_entries(entries: Vec<(NodeClass, usize)>) -> Result<Self> {
+        ensure!(!entries.is_empty(), "a fleet needs at least one node class");
+        let base = HardwareProfile::rtx3090();
+        for (c, count) in &entries {
+            c.validate()?;
+            c.worker_profile(&base).validate()?;
+            ensure!(*count >= 1, "node class {:?} needs a count >= 1", c.name);
+        }
+        Ok(Self { entries })
+    }
+
+    /// A single-class fleet of `count` nodes.
+    pub fn uniform(class: NodeClass, count: usize) -> Result<Self> {
+        Self::from_entries(vec![(class, count)])
+    }
+
+    /// Validate every class and its materialized worker profile against
+    /// `base` ([`HardwareProfile::validate`] — the §3.1 invariants).
+    pub fn validate(&self, base: &HardwareProfile) -> Result<()> {
+        for (c, _) in &self.entries {
+            c.validate()?;
+            c.worker_profile(base).validate()?;
+        }
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[(NodeClass, usize)] {
+        &self.entries
+    }
+
+    /// Total worker nodes in the fleet.
+    pub fn n_nodes(&self) -> usize {
+        self.entries.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Canonical spec string (`class:count,..` in declaration order);
+    /// [`FleetSpec::parse`] of this is the identity, which is what lets
+    /// `BENCH_plan.json` carry a chosen sub-fleet as plain text.
+    pub fn label(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(c, n)| format!("{}:{n}", c.name))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// One [`NodeClass`] per worker, in worker-id order.
+    pub fn node_classes(&self) -> Vec<NodeClass> {
+        let mut out = Vec::with_capacity(self.n_nodes());
+        for (c, n) in &self.entries {
+            out.extend(vec![c.clone(); *n]);
+        }
+        out
+    }
+
+    /// The sub-fleet keeping only the entries whose index is set in
+    /// `mask` (bit `i` = entry `i`); `None` when the mask selects
+    /// nothing. The planner enumerates these.
+    pub fn subset(&self, mask: usize) -> Option<FleetSpec> {
+        let entries: Vec<(NodeClass, usize)> = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, e)| e.clone())
+            .collect();
+        if entries.is_empty() {
+            None
+        } else {
+            Some(FleetSpec { entries })
+        }
+    }
+
+    /// The per-replica node-class bill: Σ count × unit cost.
+    pub fn bill(&self) -> f64 {
+        self.entries.iter().map(|(c, n)| c.unit_cost * *n as f64).sum()
+    }
+}
+
+/// Capability-aware slot construction over a heterogeneous cluster:
+/// first-fit, preferring workers whose class keeps the one-slot Eq. (1)
+/// window feasible under the engine's chunking
+/// ([`HardwareProfile::reroute_feasible`] on the node's own class
+/// profile), so under-provisioned classes start as spares whenever the
+/// fleet has more nodes than slots. On a uniform cluster every worker is
+/// equally (in)capable and this reduces to the identity assignment —
+/// bit-identical to [`SlotMap::new`].
+pub fn capability_slots(cluster: &Cluster, group_size: usize, chunks: usize) -> SlotMap {
+    let n = cluster.n_workers();
+    let n_groups = n / group_size;
+    SlotMap::first_fit(n, group_size, n_groups, |w| {
+        cluster.worker_profile(w).reroute_feasible(1, n_groups, chunks)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_through_the_canonical_label() {
+        let f = FleetSpec::parse("rtx3080:4,jetson:4,nano:2").unwrap();
+        assert_eq!(f.n_nodes(), 10);
+        assert_eq!(f.label(), "rtx3080:4,jetson:4,nano:2");
+        assert_eq!(FleetSpec::parse(&f.label()).unwrap(), f);
+        // Count defaults to 1; whitespace tolerated.
+        let g = FleetSpec::parse(" rtx3090 , nano:3 ").unwrap();
+        assert_eq!(g.label(), "rtx3090:1,nano:3");
+        assert_eq!(g.n_nodes(), 4);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FleetSpec::parse("").is_err(), "empty fleet");
+        assert!(FleetSpec::parse("gtx1080:4").is_err(), "unknown class");
+        assert!(FleetSpec::parse("rtx3090:0").is_err(), "zero count");
+        assert!(FleetSpec::parse("rtx3090:x").is_err(), "bad count");
+        assert!(FleetSpec::parse("nano:1,nano:2").is_err(), "duplicate class");
+    }
+
+    #[test]
+    fn node_classes_expand_in_worker_id_order() {
+        let f = FleetSpec::parse("rtx3080:2,nano:1").unwrap();
+        let names: Vec<&str> = f.node_classes().iter().map(|c| c.name).collect();
+        assert_eq!(names, ["rtx3080", "rtx3080", "nano"]);
+        f.validate(&HardwareProfile::rtx3090()).unwrap();
+    }
+
+    #[test]
+    fn subsets_and_bill() {
+        let f = FleetSpec::parse("rtx3080:4,jetson:4,nano:2").unwrap();
+        assert_eq!(f.subset(0), None);
+        assert_eq!(f.subset(0b001).unwrap().label(), "rtx3080:4");
+        assert_eq!(f.subset(0b110).unwrap().label(), "jetson:4,nano:2");
+        assert_eq!(f.subset(0b111).unwrap(), f);
+        let bill = f.bill();
+        assert!((bill - (4.0 * 0.6 + 4.0 * 0.35 + 2.0 * 0.15)).abs() < 1e-12, "{bill}");
+        assert!(f.subset(0b001).unwrap().bill() < bill);
+    }
+
+    #[test]
+    fn capability_slots_spare_the_incapable_classes() {
+        let base = HardwareProfile::rtx3090();
+        // Jetsons listed FIRST, so id order alone would hand them the
+        // first slots; they miss the Eq. (1) window at full precision
+        // while the 3090s hold it at 5 groups, so the capable 3090s take
+        // the first 8 slots and the jetsons host only the shortfall.
+        let f = FleetSpec::parse("jetson:2,rtx3090:8").unwrap();
+        let cluster = Cluster::with_classes(base.clone(), f.node_classes());
+        let m = capability_slots(&cluster, 2, 1);
+        assert_eq!(m.n_groups(), 5);
+        assert_eq!(m.workers_of(0), vec![2, 3], "3090s first despite higher ids");
+        assert_eq!(m.workers_of(4), vec![0, 1], "jetsons host only the shortfall");
+
+        // With one jetson and an uneven split, the spare slot is exactly
+        // the incapable node: it starts idle instead of hosting.
+        let f = FleetSpec::parse("jetson:1,rtx3090:8").unwrap();
+        let cluster = Cluster::with_classes(base, f.node_classes());
+        let m = capability_slots(&cluster, 2, 1);
+        assert_eq!(m.n_groups(), 4);
+        assert_eq!(m.load_of(0), 0, "incapable jetson starts as the spare");
+        for g in 0..4 {
+            for w in m.workers_of(g) {
+                assert!(w >= 1, "every slot on a window-capable 3090");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_capability_slots_are_the_identity_map() {
+        let cluster = Cluster::new(HardwareProfile::rtx3090(), 8);
+        assert_eq!(capability_slots(&cluster, 2, 1), SlotMap::new(8, 2));
+        assert_eq!(capability_slots(&cluster, 2, 8), SlotMap::new(8, 2));
+    }
+}

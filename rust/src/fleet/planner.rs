@@ -1,0 +1,595 @@
+//! SLO-driven deployment planner (DESIGN.md §10).
+//!
+//! A candidate deployment is (class subset, transfer precision, chunk
+//! count, prefetch depth, replica count) over a [`FleetSpec`]. The
+//! planner prunes analytically — every included class must hold the
+//! per-class Eq. (1) no-stall window at the candidate's precision and
+//! chunking, and steady expert residency must fit each class's memory
+//! budget — then scores the survivors with a caller-supplied evaluator
+//! (the CLI wires [`crate::coordinator::OdMoeEngine`] through the
+//! serving scheduler in virtual time; tests wire a closed form). The
+//! output is a deterministic Pareto frontier over (p99 TPOT, total GPU
+//! bytes, node-class bill) and a chosen plan — the cheapest candidate
+//! meeting the target SLO — emitted as `BENCH_plan.json`, which
+//! `od-moe serve --plan` re-runs directly.
+//!
+//! Everything here is pure bookkeeping over the measurements: same seed,
+//! same fleet, same grid → byte-identical JSON (CI diffs two runs).
+
+use anyhow::{ensure, Context, Result};
+
+use super::FleetSpec;
+use crate::cluster::HardwareProfile;
+use crate::quant::Precision;
+use crate::util::json::Json;
+
+/// The planner's search grid. Defaults cover the knobs the last four
+/// PRs built: precision (HOBBIT's lever), chunked streaming, speculative
+/// prefetch, and replica count.
+#[derive(Debug, Clone)]
+pub struct PlanGrid {
+    pub precisions: Vec<Precision>,
+    pub chunk_counts: Vec<usize>,
+    pub depths: Vec<usize>,
+    pub replicas: Vec<usize>,
+}
+
+impl Default for PlanGrid {
+    fn default() -> Self {
+        Self {
+            precisions: vec![Precision::Fp16, Precision::Int8, Precision::Nf4],
+            chunk_counts: vec![1, 8],
+            depths: vec![0, 1],
+            replicas: vec![1],
+        }
+    }
+}
+
+impl PlanGrid {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.precisions.is_empty(), "grid needs at least one precision");
+        ensure!(
+            self.chunk_counts.iter().all(|&c| c >= 1) && !self.chunk_counts.is_empty(),
+            "chunk counts must be >= 1"
+        );
+        ensure!(!self.depths.is_empty(), "grid needs at least one prefetch depth");
+        ensure!(
+            self.replicas.iter().all(|&r| r >= 1) && !self.replicas.is_empty(),
+            "replica counts must be >= 1"
+        );
+        Ok(())
+    }
+}
+
+/// One point of the search space: a runnable deployment configuration.
+#[derive(Debug, Clone)]
+pub struct PlanCandidate {
+    /// The sub-fleet whose nodes serve expert slots.
+    pub fleet: FleetSpec,
+    /// In-flight expert transfer precision (scales
+    /// [`HardwareProfile::expert_bytes`] by
+    /// [`Precision::transfer_factor`]; numerics stay FP32).
+    pub precision: Precision,
+    pub chunks: usize,
+    pub prefetch_depth: usize,
+    pub replicas: usize,
+}
+
+/// `base` with an in-flight transfer precision applied: `expert_bytes`
+/// scaled by [`Precision::transfer_factor`] (numerics stay FP32 — the
+/// stream shrinks, nothing else). The single constructor behind plan
+/// candidates, plan re-runs (`--plan`), and the `memory --fleet` audit,
+/// so the three surfaces cannot scale differently.
+pub fn precision_scaled(base: &HardwareProfile, precision: Precision) -> HardwareProfile {
+    HardwareProfile {
+        expert_bytes: base.expert_bytes * precision.transfer_factor(),
+        ..base.clone()
+    }
+}
+
+impl PlanCandidate {
+    /// Human-readable candidate id, also the deterministic tie-breaker.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/c{}/d{}/r{}",
+            self.fleet.label(),
+            self.precision.label(),
+            self.chunks,
+            self.prefetch_depth,
+            self.replicas
+        )
+    }
+
+    /// The base profile with this candidate's transfer precision applied.
+    pub fn scaled_profile(&self, base: &HardwareProfile) -> HardwareProfile {
+        precision_scaled(base, self.precision)
+    }
+}
+
+/// What the evaluator measured for one candidate, all in virtual time.
+#[derive(Debug, Clone)]
+pub struct PlanMeasurement {
+    /// Mean decode ms per token across served sessions.
+    pub ms_per_token: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// Fraction of requests meeting the workload's SLO.
+    pub slo_attainment: f64,
+    /// Ledger peaks at paper scale (the `metrics::memory` ground truth).
+    pub main_peak_bytes: f64,
+    pub shadow_peak_bytes: f64,
+    /// One entry per worker, worker-id order.
+    pub worker_peak_bytes: Vec<f64>,
+}
+
+/// A measured candidate with its derived verdicts.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub candidate: PlanCandidate,
+    pub meas: PlanMeasurement,
+    /// Σ ledger peaks across main + shadow + workers, × replicas.
+    pub total_gpu_bytes: f64,
+    /// Node-class bill: Σ count × unit cost × replicas.
+    pub cost: f64,
+    /// Every worker's ledger peak within its class's memory budget.
+    pub mem_ok: bool,
+    /// Ledger peaks also within the analytic `metrics::memory` fleet
+    /// audit bound — the cross-check that the audit formula and the
+    /// engine's byte ledger agree.
+    pub ledger_within_audit: bool,
+    pub meets_slo: bool,
+    /// On the (tpot p99, total bytes, cost) Pareto frontier among
+    /// mem-feasible points.
+    pub pareto: bool,
+}
+
+/// Everything one planner run produced.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub slo_p99_tpot_ms: f64,
+    /// Measured points, in deterministic search order.
+    pub points: Vec<PlanPoint>,
+    /// Candidates removed by the analytic window/memory prefilter.
+    pub pruned: usize,
+    /// Index into `points` of the chosen plan (cheapest SLO-meeting,
+    /// memory-feasible candidate), if any qualifies.
+    pub chosen: Option<usize>,
+}
+
+impl PlanReport {
+    pub fn chosen_point(&self) -> Option<&PlanPoint> {
+        self.chosen.map(|i| &self.points[i])
+    }
+}
+
+/// Exhaustive deterministic search. `eval` measures one candidate (the
+/// CLI runs the real engine through the scheduler; tests use a closed
+/// form); it is called only for candidates that survive the analytic
+/// prefilter, in a fixed order (subset mask ascending, then grid order),
+/// so the emitted JSON is byte-stable for a given seed. `max_batch` is
+/// the serving batch limit the deployment will run with — it sizes the
+/// memory bound a worker must fit.
+#[allow(clippy::too_many_arguments)]
+pub fn search(
+    fleet: &FleetSpec,
+    base: &HardwareProfile,
+    group_size: usize,
+    max_batch: usize,
+    slo_p99_tpot_ms: f64,
+    grid: &PlanGrid,
+    mut eval: impl FnMut(&PlanCandidate) -> Result<PlanMeasurement>,
+) -> Result<PlanReport> {
+    ensure!(group_size >= 1, "need a positive group size");
+    ensure!(max_batch >= 1, "need a positive batch limit");
+    ensure!(
+        slo_p99_tpot_ms.is_finite() && slo_p99_tpot_ms > 0.0,
+        "SLO target must be finite and positive, got {slo_p99_tpot_ms}"
+    );
+    grid.validate()?;
+    fleet.validate(base)?;
+
+    let n_entries = fleet.entries().len();
+    ensure!(n_entries <= 8, "planner supports up to 8 node classes, got {n_entries}");
+    let mut points: Vec<PlanPoint> = Vec::new();
+    let mut pruned = 0usize;
+
+    for mask in 1usize..(1 << n_entries) {
+        let Some(sub) = fleet.subset(mask) else { continue };
+        if sub.n_nodes() < group_size {
+            pruned += 1;
+            continue;
+        }
+        let n_groups = sub.n_nodes() / group_size;
+        for &precision in &grid.precisions {
+            for &chunks in &grid.chunk_counts {
+                for &prefetch_depth in &grid.depths {
+                    for &replicas in &grid.replicas {
+                        let cand = PlanCandidate {
+                            fleet: sub.clone(),
+                            precision,
+                            chunks,
+                            prefetch_depth,
+                            replicas,
+                        };
+                        let scaled = cand.scaled_profile(base);
+                        // Window prefilter: every included class must
+                        // hold one slot inside its own Eq. (1) window
+                        // (the subset without an incapable class is its
+                        // own candidate, so pruning loses nothing).
+                        let window_ok = sub.entries().iter().all(|(c, _)| {
+                            c.worker_profile(&scaled).reroute_feasible(1, n_groups, chunks)
+                        });
+                        // Memory prefilter: steady residency (depth + 1
+                        // staged experts + workspace) within each
+                        // class's budget.
+                        let mem_floor_ok = sub.entries().iter().all(|(c, _)| {
+                            (prefetch_depth + 1) as f64 * scaled.expert_bytes
+                                + scaled.activation_bytes
+                                <= c.mem_bytes
+                        });
+                        if !window_ok || !mem_floor_ok {
+                            pruned += 1;
+                            continue;
+                        }
+                        let meas = eval(&cand)
+                            .with_context(|| format!("evaluating plan {}", cand.label()))?;
+                        ensure!(
+                            meas.worker_peak_bytes.len() == sub.n_nodes(),
+                            "{}: one worker peak per node ({} vs {})",
+                            cand.label(),
+                            meas.worker_peak_bytes.len(),
+                            sub.n_nodes()
+                        );
+                        let classes = sub.node_classes();
+                        let mem_ok = classes
+                            .iter()
+                            .zip(&meas.worker_peak_bytes)
+                            .all(|(c, &peak)| peak <= c.mem_bytes);
+                        let bound = crate::metrics::memory::fleet_worker_bound_bytes(
+                            &scaled,
+                            group_size,
+                            max_batch,
+                            prefetch_depth,
+                        );
+                        let ledger_within_audit =
+                            meas.worker_peak_bytes.iter().all(|&peak| peak <= bound + 0.5);
+                        let total_gpu_bytes = (meas.main_peak_bytes
+                            + meas.shadow_peak_bytes
+                            + meas.worker_peak_bytes.iter().sum::<f64>())
+                            * replicas as f64;
+                        let cost = sub.bill() * replicas as f64;
+                        let meets_slo = meas.tpot_p99_ms <= slo_p99_tpot_ms;
+                        points.push(PlanPoint {
+                            candidate: cand,
+                            meas,
+                            total_gpu_bytes,
+                            cost,
+                            mem_ok,
+                            ledger_within_audit,
+                            meets_slo,
+                            pareto: false,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // Pareto frontier over (tpot p99 ↓, total bytes ↓, cost ↓) among
+    // memory-feasible points.
+    let key = |p: &PlanPoint| (p.meas.tpot_p99_ms, p.total_gpu_bytes, p.cost);
+    for i in 0..points.len() {
+        if !points[i].mem_ok {
+            continue;
+        }
+        let (t, b, c) = key(&points[i]);
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            if i == j || !q.mem_ok {
+                return false;
+            }
+            let (t2, b2, c2) = key(q);
+            t2 <= t && b2 <= b && c2 <= c && (t2 < t || b2 < b || c2 < c)
+        });
+        points[i].pareto = !dominated;
+    }
+
+    // Chosen plan: cheapest memory-feasible candidate meeting the SLO;
+    // ties break on p99, then ms/token, then the candidate label.
+    let chosen = points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.mem_ok && p.meets_slo)
+        .min_by(|(_, a), (_, b)| {
+            let f = |x: f64, y: f64| x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal);
+            f(a.cost, b.cost)
+                .then(f(a.meas.tpot_p99_ms, b.meas.tpot_p99_ms))
+                .then(f(a.meas.ms_per_token, b.meas.ms_per_token))
+                .then(a.candidate.label().cmp(&b.candidate.label()))
+        })
+        .map(|(i, _)| i);
+
+    Ok(PlanReport { slo_p99_tpot_ms, points, pruned, chosen })
+}
+
+fn candidate_json(c: &PlanCandidate) -> Vec<(&'static str, Json)> {
+    vec![
+        ("fleet", Json::Str(c.fleet.label())),
+        ("precision", Json::Str(c.precision.label().to_string())),
+        ("chunks", Json::Num(c.chunks as f64)),
+        ("prefetch_depth", Json::Num(c.prefetch_depth as f64)),
+        ("replicas", Json::Num(c.replicas as f64)),
+    ]
+}
+
+fn num(v: f64) -> Json {
+    // Mirror serve::metrics::num — keep NaN/inf out of the artifact.
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Assemble the `BENCH_plan.json` document.
+pub fn plan_json(report: &PlanReport, fleet: &FleetSpec, grid: &PlanGrid, seed: u64) -> Json {
+    let obj = |pairs: Vec<(&str, Json)>| {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    };
+    let grid_json = obj(vec![
+        (
+            "precisions",
+            Json::Arr(grid.precisions.iter().map(|p| Json::Str(p.label().to_string())).collect()),
+        ),
+        (
+            "chunk_counts",
+            Json::Arr(grid.chunk_counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        ("depths", Json::Arr(grid.depths.iter().map(|&d| Json::Num(d as f64)).collect())),
+        ("replicas", Json::Arr(grid.replicas.iter().map(|&r| Json::Num(r as f64)).collect())),
+    ]);
+    let points = Json::Arr(
+        report
+            .points
+            .iter()
+            .map(|p| {
+                let mut pairs = candidate_json(&p.candidate);
+                pairs.push(("ms_per_token", num(p.meas.ms_per_token)));
+                pairs.push(("ttft_p99_ms", num(p.meas.ttft_p99_ms)));
+                pairs.push(("tpot_p99_ms", num(p.meas.tpot_p99_ms)));
+                pairs.push(("slo_attainment", num(p.meas.slo_attainment)));
+                pairs.push(("total_gpu_bytes", num(p.total_gpu_bytes)));
+                pairs.push(("cost", num(p.cost)));
+                pairs.push(("mem_ok", Json::Bool(p.mem_ok)));
+                pairs.push(("ledger_within_audit", Json::Bool(p.ledger_within_audit)));
+                pairs.push(("meets_slo", Json::Bool(p.meets_slo)));
+                pairs.push(("pareto", Json::Bool(p.pareto)));
+                pairs.push((
+                    "worker_peak_bytes",
+                    Json::Arr(p.meas.worker_peak_bytes.iter().map(|&b| num(b)).collect()),
+                ));
+                obj(pairs)
+            })
+            .collect(),
+    );
+    let chosen = match report.chosen_point() {
+        Some(p) => {
+            let mut pairs = candidate_json(&p.candidate);
+            pairs.push(("tpot_p99_ms", num(p.meas.tpot_p99_ms)));
+            pairs.push(("ms_per_token", num(p.meas.ms_per_token)));
+            pairs.push(("cost", num(p.cost)));
+            obj(pairs)
+        }
+        None => Json::Null,
+    };
+    obj(vec![
+        ("bench", Json::Str("plan".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("fleet", Json::Str(fleet.label())),
+        ("slo_p99_tpot_ms", num(report.slo_p99_tpot_ms)),
+        ("grid", grid_json),
+        ("pruned", Json::Num(report.pruned as f64)),
+        ("points", points),
+        ("chosen", chosen),
+    ])
+}
+
+/// A chosen plan read back from `BENCH_plan.json` — what
+/// `od-moe serve --plan` / `decode --plan` runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanChoice {
+    pub fleet: FleetSpec,
+    pub precision: Precision,
+    pub chunks: usize,
+    pub prefetch_depth: usize,
+    pub replicas: usize,
+    /// The p99 TPOT the plan claimed when it was chosen (re-simulation
+    /// should reproduce it — virtual time is deterministic).
+    pub claimed_tpot_p99_ms: f64,
+}
+
+impl PlanChoice {
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let chosen = doc.get("chosen")?;
+        ensure!(
+            !matches!(chosen, Json::Null),
+            "plan file chose no deployment (no candidate met the SLO within budget)"
+        );
+        Ok(Self {
+            fleet: FleetSpec::parse(chosen.get("fleet")?.as_str()?)?,
+            precision: Precision::parse(chosen.get("precision")?.as_str()?)?,
+            chunks: chosen.get("chunks")?.as_usize()?,
+            prefetch_depth: chosen.get("prefetch_depth")?.as_usize()?,
+            replicas: chosen.get("replicas")?.as_usize()?,
+            claimed_tpot_p99_ms: chosen.get("tpot_p99_ms")?.as_f64()?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading plan {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// The base profile with the plan's transfer precision applied.
+    pub fn scaled_profile(&self, base: &HardwareProfile) -> HardwareProfile {
+        precision_scaled(base, self.precision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeClass;
+
+    fn fleet() -> FleetSpec {
+        FleetSpec::parse("rtx3080:4,jetson:4,nano:2").unwrap()
+    }
+
+    /// Closed-form evaluator: faster/bigger fleets decode faster, memory
+    /// peaks follow the staged-resident formula. Deterministic in the
+    /// candidate alone.
+    fn fake_eval(c: &PlanCandidate, base: &HardwareProfile) -> PlanMeasurement {
+        let scaled = c.scaled_profile(base);
+        let n = c.fleet.n_nodes() as f64;
+        let slow = c
+            .fleet
+            .entries()
+            .iter()
+            .map(|(cl, _)| cl.worker_profile(&scaled).effective_load_ms(c.chunks))
+            .fold(0.0f64, f64::max);
+        let ms = 40.0 + slow / n - 2.0 * c.prefetch_depth as f64;
+        let peak = (c.prefetch_depth + 1) as f64 * scaled.expert_bytes + scaled.activation_bytes;
+        PlanMeasurement {
+            ms_per_token: ms,
+            ttft_p99_ms: 500.0 / c.replicas as f64,
+            tpot_p99_ms: ms * 1.2 / c.replicas as f64,
+            slo_attainment: 0.9,
+            main_peak_bytes: base.nonexpert_bytes,
+            shadow_peak_bytes: base.shadow_model_bytes,
+            worker_peak_bytes: vec![peak; c.fleet.n_nodes()],
+        }
+    }
+
+    fn run(slo: f64) -> PlanReport {
+        let base = HardwareProfile::rtx3090();
+        let grid = PlanGrid::default();
+        search(&fleet(), &base, 2, 4, slo, &grid, |c| Ok(fake_eval(c, &base))).unwrap()
+    }
+
+    #[test]
+    fn search_prunes_window_infeasible_candidates() {
+        let r = run(80.0);
+        assert!(r.pruned > 0, "fp16 jetson/nano subsets must be pruned");
+        assert!(!r.points.is_empty(), "nf4/int8 candidates survive");
+        for p in &r.points {
+            // Every surviving candidate's classes hold their window.
+            let scaled = p.candidate.scaled_profile(&HardwareProfile::rtx3090());
+            let n_groups = p.candidate.fleet.n_nodes() / 2;
+            for (c, _) in p.candidate.fleet.entries() {
+                assert!(
+                    c.worker_profile(&scaled).reroute_feasible(1, n_groups, p.candidate.chunks),
+                    "{} slipped through the window prefilter",
+                    p.candidate.label()
+                );
+            }
+        }
+        // The full fp16 fleet is never measured (jetson misses its
+        // window at every chunk count in the default grid).
+        assert!(r.points.iter().all(|p| {
+            !(p.candidate.precision == Precision::Fp16
+                && p.candidate.fleet.entries().iter().any(|(c, _)| c.name == "jetson"))
+        }));
+    }
+
+    #[test]
+    fn pareto_frontier_has_no_dominated_member() {
+        let r = run(80.0);
+        let front: Vec<&PlanPoint> = r.points.iter().filter(|p| p.pareto).collect();
+        assert!(!front.is_empty());
+        for a in &front {
+            for b in r.points.iter().filter(|p| p.mem_ok) {
+                let dominates = b.meas.tpot_p99_ms <= a.meas.tpot_p99_ms
+                    && b.total_gpu_bytes <= a.total_gpu_bytes
+                    && b.cost <= a.cost
+                    && (b.meas.tpot_p99_ms < a.meas.tpot_p99_ms
+                        || b.total_gpu_bytes < a.total_gpu_bytes
+                        || b.cost < a.cost);
+                assert!(!dominates, "{} dominated by {}", a.candidate.label(), b.candidate.label());
+            }
+        }
+    }
+
+    #[test]
+    fn chosen_plan_is_cheapest_slo_meeting_candidate() {
+        let r = run(80.0);
+        let chosen = r.chosen_point().expect("a plan qualifies at a loose SLO");
+        assert!(chosen.meets_slo && chosen.mem_ok);
+        for p in r.points.iter().filter(|p| p.mem_ok && p.meets_slo) {
+            assert!(chosen.cost <= p.cost, "chosen must be cheapest");
+        }
+        // An impossible SLO chooses nothing.
+        assert!(run(0.001).chosen.is_none());
+    }
+
+    #[test]
+    fn plan_json_is_deterministic_and_round_trips_the_choice() {
+        let base = HardwareProfile::rtx3090();
+        let grid = PlanGrid::default();
+        let go = || {
+            let r = search(&fleet(), &base, 2, 4, 80.0, &grid, |c| Ok(fake_eval(c, &base)))
+                .unwrap();
+            plan_json(&r, &fleet(), &grid, 42).to_string()
+        };
+        let a = go();
+        assert_eq!(a, go(), "same inputs must reproduce the file byte for byte");
+        assert!(a.contains("\"bench\":\"plan\""));
+        assert!(a.contains("\"chosen\":{"));
+        assert!(a.contains("\"pareto\":true"));
+
+        let doc = Json::parse(&a).unwrap();
+        let choice = PlanChoice::from_json(&doc).unwrap();
+        let r = search(&fleet(), &base, 2, 4, 80.0, &grid, |c| Ok(fake_eval(c, &base))).unwrap();
+        let chosen = r.chosen_point().unwrap();
+        assert_eq!(choice.fleet, chosen.candidate.fleet);
+        assert_eq!(choice.precision, chosen.candidate.precision);
+        assert_eq!(choice.chunks, chosen.candidate.chunks);
+        assert_eq!(choice.replicas, chosen.candidate.replicas);
+        assert!((choice.claimed_tpot_p99_ms - chosen.meas.tpot_p99_ms).abs() < 1e-9);
+        // A plan that chose nothing refuses to load.
+        let none = search(&fleet(), &base, 2, 4, 0.001, &grid, |c| Ok(fake_eval(c, &base)))
+            .unwrap();
+        let doc = plan_json(&none, &fleet(), &grid, 42);
+        assert!(PlanChoice::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn memory_budget_marks_over_peak_candidates() {
+        // An evaluator whose measured peaks blow past jetson's 4 GB
+        // budget: those candidates must be flagged mem_ok = false and
+        // never chosen (a 10-jetson fleet at nf4 *is* window-feasible,
+        // so it survives the prefilter and gets measured).
+        let base = HardwareProfile::rtx3090();
+        let f = FleetSpec::uniform(NodeClass::jetson(), 10).unwrap();
+        let grid = PlanGrid {
+            precisions: vec![Precision::Nf4],
+            chunk_counts: vec![1],
+            depths: vec![0],
+            replicas: vec![1],
+        };
+        let r = search(&f, &base, 2, 4, 1e6, &grid, |c| {
+            let mut m = fake_eval(c, &base);
+            for p in &mut m.worker_peak_bytes {
+                *p = 5e9; // over jetson's 4 GB budget
+            }
+            Ok(m)
+        })
+        .unwrap();
+        assert!(!r.points.is_empty(), "the nf4 jetson fleet must be measured");
+        assert!(r.points.iter().all(|p| !p.mem_ok));
+        assert!(r.chosen.is_none(), "over-budget plans are never chosen");
+        assert!(
+            r.points.iter().all(|p| !p.ledger_within_audit),
+            "5 GB peaks also exceed the analytic audit bound"
+        );
+    }
+}

@@ -35,11 +35,17 @@
 //!   sessions step through one decode iteration together with merged
 //!   routes, so one expert load serves every session that routed to it
 //!   (DESIGN.md §7).
+//! * [`fleet`] — heterogeneous node classes ([`cluster::NodeClass`],
+//!   `FleetSpec` compositions like `rtx3080:4,jetson:4,nano:2`) threaded
+//!   through the cluster so each worker books its own class's durations,
+//!   plus the SLO-driven deployment planner behind `BENCH_plan.json`
+//!   and `od-moe serve --plan` (DESIGN.md §10).
 
 pub mod cache;
 pub mod cluster;
 pub mod coordinator;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod predictor;

@@ -1,53 +1,207 @@
 //! `od-moe` CLI — leader entrypoint for the OD-MoE reproduction.
 //!
-//! Subcommands map 1:1 onto the paper's evaluation (see DESIGN.md §5):
+//! Subcommands map 1:1 onto the paper's evaluation (see DESIGN.md §5);
+//! run `od-moe help` for the full flag table. Usage text is *generated*
+//! from the `COMMANDS` table below and every invocation validates its
+//! flags against the same table (`Args::validate_against`), so the
+//! four PRs' accumulated sweep flags (`--rates`, `--batch-sweep`,
+//! `--fail*`, `--chunks`, `--overlap-sweep`, `--fleet`/`--plan`) cannot
+//! drift from the parser: a flag missing from the table errors out
+//! loudly instead of being silently ignored.
 //!
-//! ```text
-//! od-moe serve      [--requests N] [--rate R] [--rates R1,R2,..]   load-test serving
-//!                   [--policy fcfs|sjf|edf] [--replicas N] [--max-batch N]
-//!                   [--arrival poisson|bursty|trace|closed]
-//!                   [--slo-ttft-ms MS] [--slo-tpot-ms MS] [--tenants N]
-//!                   [--preempt-ms MS] [--mem-gb G]
-//!                   [--batch-sweep [--batches B1,B2,..] [--distinct-prompts]]
-//!                   [--fail worker3@500,shadow@800] [--fail-replica 0@500]
-//!                   [--failover-sweep [--max-failed K] [--fail-at-ms MS]]
-//! od-moe decode     [--out-tokens N] [--chunks K] [--prefetch-depth D]
-//!                   [--overlap-sweep [--chunks K1,K2,..] [--depths D1,D2,..]]
-//!                                                     chunked-streaming decode (§9)
-//! od-moe recall     [--prompts N] [--out-tokens N]    SEP recall curves (Fig. 3/6)
-//! od-moe speed      [--prompts N] [--out-tokens N]    decoding speed (Fig. 8/9/10)
-//! od-moe predictors [--prompts N] [--out-tokens N]    Table 1 comparison
-//! od-moe quality    [--prompts N] [--out-tokens N]    Table 2(iii) fidelity
-//! od-moe memory                                       Table 2(ii) GPU-memory audit
-//!
-//! global flags: --artifacts DIR   --seed N
-//!
-//! `serve --rates 0.5,2,8` sweeps OD-MoE against the fully-cached
-//! baseline and writes `BENCH_serve.json` (see `examples/load_test.rs`);
-//! `serve --batch-sweep` sweeps batched decode over batch size x arrival
-//! rate and writes `BENCH_batch.json` (batch 1 = the sequential
-//! baseline); `serve --failover-sweep` decodes under 0..=K fail-stopped
-//! workers and writes `BENCH_failover.json` (DESIGN.md §8);
-//! `decode --overlap-sweep` sweeps chunked expert streaming over chunk
-//! count x prefetch depth and writes `BENCH_overlap.json` (chunks 1 =
-//! the monolithic baseline, DESIGN.md §9).
-//! ```
+//! Artifacts the sweep subcommands write: `BENCH_serve.json`
+//! (`serve --rates`), `BENCH_batch.json` (`serve --batch-sweep`),
+//! `BENCH_failover.json` (`serve --failover-sweep`), `BENCH_overlap.json`
+//! (`decode --overlap-sweep`), `BENCH_plan.json` (`plan`, DESIGN.md §10).
 
 use anyhow::{bail, Result};
-use odmoe::util::cli::Args;
+use odmoe::util::cli::{render_usage, Args, CommandSpec, Flag};
 
 mod cli;
+
+const fn val(name: &'static str, value: &'static str, help: &'static str) -> Flag {
+    Flag { name, value: Some(value), help }
+}
+
+const fn switch(name: &'static str, help: &'static str) -> Flag {
+    Flag { name, value: None, help }
+}
+
+const GLOBAL_FLAGS: &[Flag] = &[
+    val("artifacts", "DIR", "AOT artifact directory (default ./artifacts)"),
+    val("seed", "N", "deterministic seed (default 42)"),
+    switch("help", "print this flag table"),
+];
+
+/// Workload + scheduler flags shared by `serve` and `plan` (parsed by
+/// `serve::config_from_args`). Kept as a macro expanding to flag rows so
+/// the two subcommands' tables cannot diverge.
+macro_rules! workload_flags {
+    () => {
+        [
+            val("requests", "N", "arrivals to generate (default 24)"),
+            val("prompts", "N", "legacy alias for --requests"),
+            val("rate", "R", "offered arrival rate, req/s (default 2)"),
+            val("arrival-gap-ms", "MS", "legacy: fixed gap instead of --rate"),
+            val("arrival", "KIND", "poisson|bursty|trace|closed (default poisson)"),
+            val("clients", "N", "closed-loop client count (default 4)"),
+            val("think-ms", "MS", "closed-loop think time (default 500)"),
+            val("input-len", "N", "fixed prompt length (default bimodal 16/128)"),
+            val("out-tokens", "N", "decode tokens per request (default 16)"),
+            val("slo-ttft-ms", "MS", "TTFT SLO budget, raw virtual ms (default 1000)"),
+            val("slo-tpot-ms", "MS", "TPOT SLO budget, raw virtual ms (default 150)"),
+            val("tenants", "N", "SLO classes: 1 or 2 (default 1)"),
+            val("policy", "P", "queue policy fcfs|sjf|edf (default fcfs)"),
+            val("replicas", "N", "engine replica slots (default 1)"),
+            val("mem-gb", "G", "per-replica admission ledger (default 24)"),
+            val("preempt-ms", "MS", "preemption budget (default off)"),
+            val("max-batch", "N", "co-scheduled sessions per dispatch (default 1)"),
+            switch("shared-prompt", "every request decodes one shared prompt"),
+            val("fail-replica", "R@MS", "fail-stop scheduler replicas, e.g. 0@500"),
+        ]
+    };
+    (+ $($extra:expr),* $(,)?) => {{
+        const W: [Flag; 19] = workload_flags!();
+        const E: &[Flag] = &[$($extra),*];
+        const N: usize = W.len() + E.len();
+        const OUT: [Flag; N] = {
+            let mut out = [Flag { name: "", value: None, help: "" }; N];
+            let mut i = 0;
+            while i < W.len() {
+                out[i] = W[i];
+                i += 1;
+            }
+            let mut j = 0;
+            while j < E.len() {
+                out[W.len() + j] = E[j];
+                j += 1;
+            }
+            out
+        };
+        &OUT
+    }};
+}
+
+const SERVE_FLAGS: &[Flag] = workload_flags![+
+    val("shadow", "P", "shadow precision fp16|int8|nf4 (default int8)"),
+    val("token-period", "N", "SEP token-alignment period (default 1)"),
+    val("kv-period", "N", "SEP KV-alignment period (default 1)"),
+    val("chunks", "K", "expert transfer chunks (default 1 = monolithic)"),
+    val("prefetch-depth", "D", "speculative staging depth (default 0)"),
+    val("rates", "R1,R2,..", "rate sweep vs fully-cached; writes BENCH_serve.json"),
+    switch("batch-sweep", "batch x rate sweep; writes BENCH_batch.json"),
+    val("batches", "B1,B2,..", "batch sizes for --batch-sweep (default 1,2,4,8)"),
+    switch("distinct-prompts", "batch sweep without the shared prompt"),
+    val("fail", "SPEC", "engine faults, e.g. worker3@500,shadow@800ms"),
+    switch("failover-sweep", "decode under 0..=K dead workers; BENCH_failover.json"),
+    val("max-failed", "K", "failover sweep ceiling (default min(workers-1, 4))"),
+    val("fail-at-ms", "MS", "failover sweep fault instant (default 0)"),
+    val("fleet", "SPEC", "heterogeneous fleet, e.g. rtx3080:4,jetson:4,nano:2"),
+    val("plan", "FILE", "run the deployment chosen in BENCH_plan.json"),
+];
+
+const DECODE_FLAGS: &[Flag] = &[
+    val("out-tokens", "N", "decode tokens (default 24)"),
+    val("shadow", "P", "shadow precision fp16|int8|nf4 (default int8)"),
+    val("chunks", "K", "transfer chunks; with --overlap-sweep a K1,K2,.. list"),
+    val("prefetch-depth", "D", "speculative staging depth (default 0)"),
+    switch("overlap-sweep", "chunk x depth sweep; writes BENCH_overlap.json"),
+    val("depths", "D1,D2,..", "depths for --overlap-sweep (default 0,1)"),
+    val("fleet", "SPEC", "heterogeneous fleet, e.g. rtx3080:4,jetson:4,nano:2"),
+    val("plan", "FILE", "decode on the deployment chosen in BENCH_plan.json"),
+];
+
+const EVAL_FLAGS: &[Flag] = &[
+    val("prompts", "N", "prompt count"),
+    val("out-tokens", "N", "decode tokens per prompt"),
+];
+
+const MEMORY_FLAGS: &[Flag] = &[
+    val("fleet", "SPEC", "audit a heterogeneous fleet instead of the presets"),
+    val("precision", "P", "transfer precision for the fleet audit (default fp16)"),
+    val("max-batch", "N", "batched residency bound for the fleet audit (default 1)"),
+    val("prefetch-depth", "D", "staging depth for the fleet audit (default 0)"),
+];
+
+const PLAN_FLAGS: &[Flag] = workload_flags![+
+    val("fleet", "SPEC", "fleet to plan over (default rtx3080:4,jetson:4,nano:2)"),
+    val("slo-p99", "MS", "target p99 TPOT, raw virtual ms (default 250)"),
+    val("precisions", "P1,P2,..", "transfer precisions to search (default fp16,int8,nf4)"),
+    val("chunk-grid", "K1,K2,..", "chunk counts to search (default 1,8)"),
+    val("depth-grid", "D1,D2,..", "prefetch depths to search (default 0,1)"),
+    val("replica-grid", "R1,R2,..", "replica counts to search (default 1)"),
+];
+
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "serve",
+        summary: "load-test serving through the continuous scheduler",
+        flags: SERVE_FLAGS,
+    },
+    CommandSpec {
+        name: "decode",
+        summary: "chunked-streaming decode (DESIGN.md §9)",
+        flags: DECODE_FLAGS,
+    },
+    CommandSpec {
+        name: "plan",
+        summary: "SLO-driven fleet deployment planner; writes BENCH_plan.json (§10)",
+        flags: PLAN_FLAGS,
+    },
+    CommandSpec {
+        name: "recall",
+        summary: "SEP recall curves (Fig. 3/6)",
+        flags: EVAL_FLAGS,
+    },
+    CommandSpec {
+        name: "speed",
+        summary: "decoding speed comparison (Fig. 8/9/10)",
+        flags: EVAL_FLAGS,
+    },
+    CommandSpec {
+        name: "predictors",
+        summary: "predictor comparison (Table 1)",
+        flags: EVAL_FLAGS,
+    },
+    CommandSpec {
+        name: "quality",
+        summary: "output fidelity (Table 2(iii))",
+        flags: EVAL_FLAGS,
+    },
+    CommandSpec {
+        name: "memory",
+        summary: "GPU-memory audit (Table 2(ii)); --fleet for a class audit",
+        flags: MEMORY_FLAGS,
+    },
+];
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let Some(cmd) = args.subcommand.clone() else {
-        eprintln!("usage: od-moe <serve|decode|recall|speed|predictors|quality|memory> [--flags]");
+        if args.has("help") {
+            print!("{}", render_usage(COMMANDS, GLOBAL_FLAGS));
+            return Ok(());
+        }
+        eprint!("{}", render_usage(COMMANDS, GLOBAL_FLAGS));
         bail!("missing subcommand");
     };
+    if cmd == "help" {
+        print!("{}", render_usage(COMMANDS, GLOBAL_FLAGS));
+        return Ok(());
+    }
+    let Some(spec) = COMMANDS.iter().find(|c| c.name == cmd) else {
+        eprint!("{}", render_usage(COMMANDS, GLOBAL_FLAGS));
+        bail!("unknown subcommand {cmd:?}");
+    };
+    if args.has("help") {
+        print!("{}", spec.usage());
+        return Ok(());
+    }
+    args.validate_against(spec, GLOBAL_FLAGS)?;
     let seed = args.u64_or("seed", 42)?;
     if cmd == "memory" {
         // No runtime needed for the static memory audit.
-        return cli::memory();
+        return cli::memory(&args);
     }
     let rt = match args.get("artifacts") {
         Some(dir) => odmoe::Runtime::load(dir)?,
@@ -56,6 +210,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "serve" => cli::serve(&rt, seed, &args),
         "decode" => cli::decode(&rt, seed, &args),
+        "plan" => cli::plan(&rt, seed, &args),
         "recall" => cli::recall(&rt, seed, &args),
         "speed" => cli::speed(&rt, seed, &args),
         "predictors" => cli::predictors(&rt, seed, &args),

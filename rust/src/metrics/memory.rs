@@ -5,6 +5,7 @@
 //! (704 MB FP32 expert, 7 GB non-expert stack, 45 GB INT8 shadow model).
 
 use crate::cluster::HardwareProfile;
+use crate::fleet::FleetSpec;
 
 /// GPU-memory breakdown of one serving system, bytes at paper scale.
 #[derive(Debug, Clone)]
@@ -69,6 +70,48 @@ pub fn odmoe_batched(
         ));
     }
     MemoryAudit { system: "OD-MoE (batched)", per_node }
+}
+
+/// OD-MoE residency across a heterogeneous fleet (DESIGN.md §10): one
+/// entry per node, labelled `class/worker<i>`, bounding the transient
+/// per-worker residency at `ceil(distinct / group_size) + depth` staged
+/// experts (batched co-residency — see [`odmoe_batched`] — plus the
+/// speculative prefetch depth) in *`p`-scaled* expert payloads. Pass the
+/// planner candidate's precision-scaled profile to audit a plan; the
+/// planner cross-checks engine ledger peaks against this bound and each
+/// class's `mem_bytes` budget.
+pub fn odmoe_fleet(
+    p: &HardwareProfile,
+    fleet: &FleetSpec,
+    group_size: usize,
+    max_batch: usize,
+    prefetch_depth: usize,
+) -> MemoryAudit {
+    let bound = fleet_worker_bound_bytes(p, group_size, max_batch, prefetch_depth);
+    let mut per_node = vec![
+        ("main".to_string(), p.nonexpert_bytes),
+        ("shadow".to_string(), p.shadow_model_bytes),
+    ];
+    for (i, class) in fleet.node_classes().iter().enumerate() {
+        per_node.push((format!("{}/worker{i}", class.name), bound));
+    }
+    MemoryAudit { system: "OD-MoE (fleet)", per_node }
+}
+
+/// The per-worker transient residency bound behind [`odmoe_fleet`]:
+/// `ceil(distinct / group_size) + prefetch_depth` staged experts (in
+/// `p`-scaled payloads) plus workspace. The single formula both the
+/// audit and the planner's `ledger_within_audit` cross-check consult —
+/// sharing it is what makes that cross-check meaningful.
+pub fn fleet_worker_bound_bytes(
+    p: &HardwareProfile,
+    group_size: usize,
+    max_batch: usize,
+    prefetch_depth: usize,
+) -> f64 {
+    assert!(group_size > 0 && max_batch > 0, "need a group and a batch");
+    let distinct = (PAPER_TOP_K * max_batch).min(PAPER_EXPERTS_PER_LAYER);
+    (distinct.div_ceil(group_size) + prefetch_depth) as f64 * p.expert_bytes + p.activation_bytes
 }
 
 /// Fully GPU-cached full-precision deployment (Transformers reference).
@@ -156,6 +199,29 @@ mod tests {
         // 8 experts / group of 2 -> at most 4 in flight per worker.
         assert_eq!(worker(4), worker(64));
         assert_eq!(worker(64), 4.0 * p.expert_bytes + p.activation_bytes);
+    }
+
+    #[test]
+    fn fleet_audit_names_classes_and_respects_budgets_at_nf4() {
+        let base = HardwareProfile::rtx3090();
+        let fleet = FleetSpec::parse("rtx3080:2,nano:1").unwrap();
+        // Sequential, no prefetch, full precision: same per-worker bound
+        // as the uniform sequential audit.
+        let a = odmoe_fleet(&base, &fleet, 2, 1, 0);
+        assert_eq!(a.per_node[2].0, "rtx3080/worker0");
+        assert_eq!(a.per_node[4].0, "nano/worker2");
+        assert_eq!(a.per_node[2].1, base.expert_bytes + base.activation_bytes);
+        // nf4-scaled transfers keep even the 1 GB nano inside budget with
+        // one staged expert; fp16 with prefetch does not.
+        let nf4 = HardwareProfile { expert_bytes: base.expert_bytes * 0.28, ..base.clone() };
+        let nano_budget = 1e9;
+        let tight = odmoe_fleet(&nf4, &fleet, 2, 1, 1);
+        assert!(tight.per_node[4].1 <= nano_budget, "{}", tight.per_node[4].1);
+        let loose = odmoe_fleet(&base, &fleet, 2, 1, 1);
+        assert!(loose.per_node[4].1 > nano_budget, "fp16 + depth 1 must blow the budget");
+        // Batched residency adds on top of prefetch depth.
+        let batched = odmoe_fleet(&base, &fleet, 2, 4, 1);
+        assert!(batched.per_node[2].1 > loose.per_node[2].1);
     }
 
     #[test]

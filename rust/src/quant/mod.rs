@@ -72,7 +72,34 @@ impl Precision {
             Precision::Nf4 => "nf4",
         }
     }
+
+    /// Parse a `fp32|fp16|int8|nf4` CLI token.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "fp32" => Precision::Fp32,
+            "fp16" => Precision::Fp16,
+            "int8" => Precision::Int8,
+            "nf4" => Precision::Nf4,
+            other => anyhow::bail!("unknown precision {other:?} (fp32|fp16|int8|nf4)"),
+        })
+    }
+
+    /// In-flight expert-transfer size at this precision, as a fraction of
+    /// the FP16 transfer (`HardwareProfile::expert_bytes` is calibrated
+    /// as the FP16-plus-framing payload, so FP16 is the unit). Evaluated
+    /// at the paper's 4096-wide expert rows ([`PAPER_EXPERT_ROW`]).
+    /// Numerics in this repo stay FP32 — in-flight precision is a
+    /// bandwidth property (EXPERIMENTS.md §Calibration), which is
+    /// exactly what makes it a *deployment knob* the fleet planner can
+    /// search over (HOBBIT, arXiv 2411.01433).
+    pub fn transfer_factor(self) -> f64 {
+        self.bytes_per_param(PAPER_EXPERT_ROW) / Precision::Fp16.bytes_per_param(PAPER_EXPERT_ROW)
+    }
 }
+
+/// Mixtral-8x7B expert weight-row width (the `w1/w3` trailing dim), the
+/// row length [`Precision::transfer_factor`] amortizes scales over.
+pub const PAPER_EXPERT_ROW: usize = 4096;
 
 /// f32 -> f16 -> f32 round trip (IEEE 754 binary16, round-to-nearest-even).
 pub fn fake_quant_fp16(w: &[f32]) -> Vec<f32> {
@@ -316,6 +343,25 @@ mod tests {
                     > Precision::Nf4.bytes_per_param(row_len)
             );
         }
+    }
+
+    #[test]
+    fn transfer_factor_is_unit_at_fp16_and_ordered() {
+        assert_eq!(Precision::Fp16.transfer_factor(), 1.0);
+        assert!((Precision::Fp32.transfer_factor() - 2.0).abs() < 1e-2);
+        let int8 = Precision::Int8.transfer_factor();
+        let nf4 = Precision::Nf4.transfer_factor();
+        assert!((int8 - 0.5).abs() < 1e-2, "int8 halves the stream: {int8}");
+        assert!((nf4 - 0.28).abs() < 1e-2, "nf4 is ~0.28 of fp16: {nf4}");
+        assert!(nf4 < int8 && int8 < 1.0);
+    }
+
+    #[test]
+    fn precision_parse_round_trips() {
+        for p in [Precision::Fp32, Precision::Fp16, Precision::Int8, Precision::Nf4] {
+            assert_eq!(Precision::parse(p.label()).unwrap(), p);
+        }
+        assert!(Precision::parse("fp8").is_err());
     }
 
     #[test]

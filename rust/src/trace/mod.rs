@@ -5,6 +5,8 @@
 //! `examples/timing_analysis.rs` visualizes the round-robin pipeline and
 //! the late-departure effect.
 
+use std::collections::BTreeMap;
+
 use crate::cluster::Ms;
 
 /// What a trace event represents.
@@ -62,6 +64,12 @@ pub struct Event {
     /// starts after the wire freed.
     pub arrival: Option<Ms>,
     pub label: &'static str,
+    /// Hardware class of the node the event booked on, when the cluster
+    /// registered one (mixed fleets — see [`Trace::tag_node`]); `None`
+    /// on uniform clusters and for shared-LAN events. Makes `!`
+    /// (failure) and `p` (prefetch) lines attributable on fleets where
+    /// "worker 3" alone no longer says what kind of node died.
+    pub class: Option<&'static str>,
 }
 
 /// Append-only event log.
@@ -69,16 +77,31 @@ pub struct Event {
 pub struct Trace {
     events: Vec<Event>,
     pub enabled: bool,
+    /// Node id → hardware-class name (survives [`Trace::clear`]: the
+    /// cluster's composition does not change between runs).
+    node_class: BTreeMap<usize, &'static str>,
 }
 
 impl Trace {
     pub fn new() -> Self {
-        Self { events: Vec::new(), enabled: false }
+        Self::default()
+    }
+
+    /// Register `node`'s hardware class; every later event on that node
+    /// carries it, and [`Trace::render_timeline`] annotates the row.
+    pub fn tag_node(&mut self, node: usize, class: &'static str) {
+        self.node_class.insert(node, class);
+    }
+
+    /// The registered class of `node`, if any.
+    pub fn class_of(&self, node: usize) -> Option<&'static str> {
+        self.node_class.get(&node).copied()
     }
 
     pub fn push(&mut self, kind: EventKind, node: usize, start: Ms, end: Ms, label: &'static str) {
         if self.enabled {
-            self.events.push(Event { kind, node, start, end, arrival: None, label });
+            let class = self.class_of(node);
+            self.events.push(Event { kind, node, start, end, arrival: None, label, class });
         }
     }
 
@@ -93,6 +116,7 @@ impl Trace {
                 end,
                 arrival: Some(arrival),
                 label,
+                class: None,
             });
         }
     }
@@ -114,7 +138,10 @@ impl Trace {
     }
 
     /// Render a Fig. 2-style ASCII timeline: one row per node, `cols`
-    /// character cells over `[t0, t1]` ms.
+    /// character cells over `[t0, t1]` ms. Rows of nodes with a
+    /// registered hardware class ([`Trace::tag_node`]) are labelled
+    /// `name·class`, so mixed-fleet timelines say *what kind* of node a
+    /// `!`/`p` line belongs to.
     pub fn render_timeline(&self, t0: Ms, t1: Ms, cols: usize, node_names: &[String]) -> String {
         let span = (t1 - t0).max(1e-9);
         let mut rows: Vec<Vec<char>> = vec![vec![' '; cols]; node_names.len()];
@@ -128,9 +155,17 @@ impl Trace {
                 rows[ev.node][c] = ev.kind.glyph();
             }
         }
+        let labels: Vec<String> = node_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| match self.class_of(i) {
+                Some(c) => format!("{n}·{c}"),
+                None => n.clone(),
+            })
+            .collect();
         let mut out = String::new();
-        let width = node_names.iter().map(|n| n.len()).max().unwrap_or(0);
-        for (name, row) in node_names.iter().zip(rows) {
+        let width = labels.iter().map(|n| n.len()).max().unwrap_or(0);
+        for (name, row) in labels.iter().zip(rows) {
             out.push_str(&format!("{name:>width$} |"));
             out.extend(row);
             out.push_str("|\n");
@@ -164,6 +199,24 @@ mod tests {
         t.push(EventKind::MainCompute, 0, 0.0, 1.0, "M0");
         t.push(EventKind::ExpertLoad, 1, 0.5, 2.0, "EL1");
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn tagged_nodes_carry_their_class_and_annotate_rows() {
+        let mut t = Trace::new();
+        t.enabled = true;
+        t.tag_node(1, "jetson");
+        t.push(EventKind::Failure, 1, 3.0, 3.0, "fail");
+        t.push(EventKind::Prefetch, 0, 0.0, 1.0, "EL");
+        assert_eq!(t.events()[0].class, Some("jetson"), "! events name the class");
+        assert_eq!(t.events()[1].class, None, "untagged node stays bare");
+        let s = t.render_timeline(0.0, 4.0, 8, &["main".into(), "w0".into()]);
+        assert!(s.contains("w0·jetson |"), "{s}");
+        assert!(s.lines().next().unwrap().contains("main |"), "{s}");
+        // The registry survives clear(): composition outlives one run.
+        t.clear();
+        assert_eq!(t.class_of(1), Some("jetson"));
+        assert!(t.is_empty());
     }
 
     #[test]

@@ -1,7 +1,67 @@
-//! Tiny `--flag value` CLI parser (clap is not available offline).
+//! Tiny `--flag value` CLI parser (clap is not available offline), plus
+//! the single flag table `od-moe --help` renders from.
+//!
+//! Usage text and flag validation share one [`CommandSpec`] table (see
+//! `rust/src/main.rs`): the help section for each subcommand is
+//! *generated* from the table, and [`Args::validate_against`] rejects any
+//! provided flag the table does not list — so the accumulated sweep
+//! flags (`--rates`, `--batch-sweep`, `--fail*`, `--chunks`,
+//! `--overlap-sweep`, `--fleet`/`--plan`, …) cannot drift from the
+//! parser: an undocumented flag is an error, not silence.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+
+/// One CLI flag: name (without `--`), an optional value placeholder
+/// (`None` = boolean switch), and a one-line help string (conventions:
+/// include the default in parentheses).
+#[derive(Debug, Clone, Copy)]
+pub struct Flag {
+    pub name: &'static str,
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// One subcommand's row in the flag table.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [Flag],
+}
+
+impl CommandSpec {
+    /// Render this subcommand's help section.
+    pub fn usage(&self) -> String {
+        let mut out = format!("od-moe {:<11} {}\n", self.name, self.summary);
+        for f in self.flags {
+            let head = match f.value {
+                Some(v) => format!("--{} {v}", f.name),
+                None => format!("--{}", f.name),
+            };
+            out.push_str(&format!("  {head:<26} {}\n", f.help));
+        }
+        out
+    }
+}
+
+/// Render the full `od-moe` usage text from the flag table.
+pub fn render_usage(commands: &[CommandSpec], globals: &[Flag]) -> String {
+    let mut out = String::from("usage: od-moe <command> [--flags]\n\n");
+    for c in commands {
+        out.push_str(&c.usage());
+        out.push('\n');
+    }
+    out.push_str("global flags (any command):\n");
+    for f in globals {
+        let head = match f.value {
+            Some(v) => format!("--{} {v}", f.name),
+            None => format!("--{}", f.name),
+        };
+        out.push_str(&format!("  {head:<26} {}\n", f.help));
+    }
+    out
+}
 
 /// Parsed command line: a subcommand plus `--key value` / `--switch` flags.
 #[derive(Debug, Default, Clone)]
@@ -73,6 +133,29 @@ impl Args {
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
     }
+
+    /// Every flag/switch name the user provided (deduplicated order not
+    /// guaranteed; used for table validation).
+    pub fn provided(&self) -> impl Iterator<Item = &str> {
+        self.flags.keys().map(|s| s.as_str()).chain(self.switches.iter().map(|s| s.as_str()))
+    }
+
+    /// Reject any provided flag that is neither in `cmd`'s table row nor
+    /// a global — the mechanism that keeps usage text and parser in
+    /// lockstep (a flag added to the code without a table entry fails
+    /// loudly on first use).
+    pub fn validate_against(&self, cmd: &CommandSpec, globals: &[Flag]) -> Result<()> {
+        for name in self.provided() {
+            let known = cmd.flags.iter().chain(globals).any(|f| f.name == name);
+            if !known {
+                bail!(
+                    "unknown flag --{name} for `od-moe {}` (run `od-moe help` for the flag table)",
+                    cmd.name
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +194,37 @@ mod tests {
     #[test]
     fn rejects_stray_positional() {
         assert!(Args::parse(["x".into(), "y".into()]).is_err());
+    }
+
+    const TEST_CMD: CommandSpec = CommandSpec {
+        name: "demo",
+        summary: "a test command",
+        flags: &[
+            Flag { name: "prompts", value: Some("N"), help: "prompt count (default 8)" },
+            Flag { name: "verbose", value: None, help: "chatty output" },
+        ],
+    };
+    const TEST_GLOBALS: &[Flag] =
+        &[Flag { name: "seed", value: Some("N"), help: "deterministic seed" }];
+
+    #[test]
+    fn validate_against_accepts_table_flags_and_rejects_strays() {
+        let ok = parse("demo --prompts 4 --verbose --seed 7");
+        ok.validate_against(&TEST_CMD, TEST_GLOBALS).unwrap();
+        let bad = parse("demo --prompst 4");
+        let err = bad.validate_against(&TEST_CMD, TEST_GLOBALS).unwrap_err();
+        assert!(err.to_string().contains("--prompst"), "{err}");
+        assert!(err.to_string().contains("demo"), "{err}");
+    }
+
+    #[test]
+    fn usage_renders_every_table_row() {
+        let text = render_usage(&[TEST_CMD], TEST_GLOBALS);
+        assert!(text.contains("od-moe demo"), "{text}");
+        assert!(text.contains("--prompts N"), "{text}");
+        assert!(text.contains("--verbose"), "{text}");
+        assert!(text.contains("prompt count (default 8)"), "{text}");
+        assert!(text.contains("global flags"), "{text}");
+        assert!(text.contains("--seed N"), "{text}");
     }
 }

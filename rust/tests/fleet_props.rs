@@ -1,0 +1,375 @@
+//! Fleet heterogeneity properties (DESIGN.md §10).
+//!
+//! The pure window/slot invariants run anywhere; the engine equivalence
+//! suite — the "single-class fleet is bit-identical to the shared
+//! profile" pin the whole subsystem rests on — executes real numerics
+//! and needs the AOT artifacts (same convention as
+//! `engine_integration.rs`: it panics with a pointer to `make artifacts`
+//! when they are absent).
+
+use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
+use odmoe::coordinator::{
+    BatchEngine, Engine, FailureSpec, GroupSchedule, OdMoeConfig, OdMoeEngine, PredictorMode,
+    SlotMap,
+};
+use odmoe::fleet::{capability_slots, FleetSpec};
+use odmoe::metrics::memory as memaudit;
+use odmoe::model::rng::Rng;
+use odmoe::model::WeightStore;
+use odmoe::util::prop::check;
+use odmoe::Runtime;
+
+const CASES: usize = 64;
+
+// ---------------------------------------------------------------------
+// Window properties (no runtime needed) — satellite: t_maxload /
+// io_bottleneck_free under uneven worker counts and per-class profiles.
+// ---------------------------------------------------------------------
+
+/// Random worker-side profile: the base testbed with PCIe bandwidth,
+/// expert size and FFN time jittered into plausible edge ranges.
+fn random_profile(rng: &mut Rng) -> HardwareProfile {
+    HardwareProfile {
+        pcie_gbps: 3.0 + rng.uniform() * 37.0,
+        pcie_lat_ms: rng.uniform() * 0.8,
+        t_expert_gpu_ms: 0.5 + rng.uniform() * 6.0,
+        expert_bytes: (0.2 + rng.uniform() * 0.8) * 500e6,
+        ..HardwareProfile::rtx3090()
+    }
+}
+
+#[test]
+fn prop_t_maxload_monotone_in_group_count() {
+    check("Eq.(1) window grows with stagger groups", CASES, 31, |rng| {
+        let group_size = 1 + rng.below(4);
+        let t_main = rng.uniform() * 10.0;
+        let t_worker = rng.uniform() * 8.0;
+        let mut prev = f64::NEG_INFINITY;
+        for n_groups in 1..6 {
+            let s = GroupSchedule::new(n_groups * group_size, group_size);
+            let w = s.t_maxload(t_main, t_worker);
+            if w < prev {
+                return Err(format!("window shrank at {n_groups} groups: {w} < {prev}"));
+            }
+            prev = w;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_io_bottleneck_feasibility_monotone_in_pcie_bandwidth() {
+    // The satellite invariant: widening a node's PCIe pipe can never
+    // flip a feasible schedule infeasible — for the schedule-level
+    // predicate AND the per-class reroute predicate at every chunking.
+    check("feasibility monotone in pcie_gbps", CASES, 32, |rng| {
+        let p = random_profile(rng);
+        let group_size = 1 + rng.below(3);
+        let n_groups = 1 + rng.below(5);
+        let s = GroupSchedule::new(n_groups * group_size, group_size);
+        let chunks = 1 + rng.below(8);
+        let slots = 1 + rng.below(3);
+        let mut prev_sched = false;
+        let mut prev_reroute = false;
+        for step in 0..6 {
+            let wider = HardwareProfile {
+                pcie_gbps: p.pcie_gbps * (1.0 + step as f64 * 0.5),
+                ..p.clone()
+            };
+            let now_sched = s.io_bottleneck_free(&wider);
+            let now_reroute = wider.reroute_feasible(slots, n_groups, chunks);
+            if prev_sched && !now_sched {
+                return Err(format!("io_bottleneck_free flipped at step {step}"));
+            }
+            if prev_reroute && !now_reroute {
+                return Err(format!("reroute_feasible flipped at step {step}"));
+            }
+            prev_sched = now_sched;
+            prev_reroute = now_reroute;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_class_presets_feasibility_monotone_in_bandwidth_and_groups() {
+    check("preset classes: more bandwidth/groups never hurts", CASES, 33, |rng| {
+        let base = random_profile(rng);
+        let chunks = 1 + rng.below(8);
+        for class in ["rtx3090", "rtx3080", "jetson", "nano"] {
+            let c = NodeClass::preset(class).expect("preset");
+            let wp = c.worker_profile(&base);
+            for n_groups in 1..5 {
+                if wp.reroute_feasible(1, n_groups, chunks)
+                    && !wp.reroute_feasible(1, n_groups + 1, chunks)
+                {
+                    return Err(format!("{class}: extra stagger group broke feasibility"));
+                }
+                let wider = HardwareProfile { pcie_gbps: wp.pcie_gbps * 2.0, ..wp.clone() };
+                if wp.reroute_feasible(1, n_groups, chunks)
+                    && !wider.reroute_feasible(1, n_groups, chunks)
+                {
+                    return Err(format!("{class}: doubling bandwidth broke feasibility"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Slot-map properties under uneven fleets.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_first_fit_covers_slots_and_prefers_capable_workers() {
+    check("first-fit capability invariants", CASES, 34, |rng| {
+        let group_size = 1 + rng.below(3);
+        let n_groups = 1 + rng.below(4);
+        // Uneven on purpose: up to group_size - 1 leftover workers, plus
+        // extra spares beyond the needed slots.
+        let n_workers = n_groups * group_size + rng.below(group_size + 3);
+        let capable: Vec<bool> = (0..n_workers).map(|_| rng.uniform() < 0.6).collect();
+        let m = SlotMap::first_fit(n_workers, group_size, n_groups, |w| capable[w]);
+        let n_slots = n_groups * group_size;
+        // Coverage: n_slots distinct workers host exactly one slot each.
+        let mut hosts: Vec<usize> = (0..n_groups).flat_map(|g| m.workers_of(g)).collect();
+        hosts.sort_unstable();
+        let mut dedup = hosts.clone();
+        dedup.dedup();
+        if hosts.len() != n_slots || dedup.len() != n_slots {
+            return Err(format!("slots not covered 1:1: {hosts:?}"));
+        }
+        // Preference: an incapable worker hosts a slot only if every
+        // capable worker already hosts one.
+        let n_capable = capable.iter().filter(|&&c| c).count();
+        let incapable_hosting = hosts.iter().filter(|&&w| !capable[w]).count();
+        if n_capable >= n_slots && incapable_hosting > 0 {
+            return Err(format!(
+                "{incapable_hosting} incapable host(s) despite {n_capable} capable workers"
+            ));
+        }
+        if n_capable < n_slots && incapable_hosting != n_slots - n_capable {
+            return Err("shortfall must be exactly the missing capable hosts".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fail_with_keeps_slots_on_live_workers_and_is_deterministic() {
+    check("capability-aware failover invariants", CASES, 35, |rng| {
+        let group_size = 1 + rng.below(3);
+        let n_workers = group_size * (1 + rng.below(4)) + rng.below(group_size);
+        let load_ms: Vec<f64> = (0..n_workers).map(|_| 1.0 + rng.uniform() * 60.0).collect();
+        let window = rng.uniform() * 120.0;
+        let kills: Vec<usize> = {
+            let mut ks = Vec::new();
+            let mut alive: Vec<usize> = (0..n_workers).collect();
+            for _ in 0..rng.below(n_workers) {
+                let v = alive.remove(rng.below(alive.len()));
+                ks.push(v);
+            }
+            ks
+        };
+        let run = || {
+            let mut m = SlotMap::new(n_workers, group_size);
+            for &v in &kills {
+                m.fail_with(
+                    v,
+                    |c, slots| slots as f64 * load_ms[c] <= window,
+                    |c| load_ms[c],
+                );
+            }
+            m
+        };
+        let m = run();
+        if m != run() {
+            return Err("identical kill sequences must produce identical maps".into());
+        }
+        for l in 0..24 {
+            for slot in 0..group_size {
+                let w = m.worker_for(l, slot);
+                if !m.is_alive(w) {
+                    return Err(format!("layer {l} slot {slot} routed to dead worker {w}"));
+                }
+            }
+        }
+        // Conservation: every original slot still has exactly one host.
+        let total: usize = (0..n_workers).map(|w| m.load_of(w)).sum();
+        if total != m.n_groups() * group_size {
+            return Err(format!("slot count drifted to {total}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine equivalence (real numerics; needs `make artifacts`).
+// ---------------------------------------------------------------------
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn prompt(seed: u64, len: usize, vocab: u32) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as usize) as u32).collect()
+}
+
+fn uniform_fleet() -> FleetSpec {
+    FleetSpec::uniform(NodeClass::rtx3090(), 8).unwrap()
+}
+
+fn assert_same(
+    a: &odmoe::coordinator::PromptResult,
+    b: &odmoe::coordinator::PromptResult,
+    what: &str,
+) {
+    assert_eq!(a.tokens, b.tokens, "{what}: token stream must match");
+    assert_eq!(a.ttft_ms, b.ttft_ms, "{what}: ttft must match bit-for-bit");
+    assert_eq!(a.decode_ms, b.decode_ms, "{what}: decode time must match bit-for-bit");
+    assert_eq!(a.stall_ms, b.stall_ms, "{what}: stalls must match bit-for-bit");
+    assert_eq!(a.correct_per_token, b.correct_per_token, "{what}: recall must match");
+}
+
+/// The acceptance pin: a single-class fleet of the base profile's class
+/// reproduces the shared-profile engine bit-identically — tokens AND
+/// timings — on the sequential, chunked, batched, and
+/// failure-injection paths.
+#[test]
+fn single_class_fleet_is_bit_identical_to_shared_profile() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let p = prompt(11, 16, vocab);
+
+    let configs: Vec<(&str, OdMoeConfig)> = vec![
+        ("sequential/sep", OdMoeConfig::default()),
+        (
+            "sequential/no-prefetch",
+            OdMoeConfig { predictor: PredictorMode::None, ..OdMoeConfig::default() },
+        ),
+        (
+            "chunked+staged",
+            OdMoeConfig { chunks: 4, prefetch_depth: 1, ..OdMoeConfig::default() },
+        ),
+    ];
+    for (what, cfg) in configs {
+        let mut shared = OdMoeEngine::new(&rt, ws.clone(), cfg.clone()).unwrap();
+        let fleet_cfg = OdMoeConfig { fleet: Some(uniform_fleet()), ..cfg };
+        let mut fleet = OdMoeEngine::new(&rt, ws.clone(), fleet_cfg).unwrap();
+        let a = shared.run_prompt(&p, 8, false).unwrap();
+        let b = fleet.run_prompt(&p, 8, false).unwrap();
+        assert_same(&a, &b, what);
+    }
+
+    // Batched decode: three mixed sessions, load/abort tallies included.
+    let pa = prompt(1, 16, vocab);
+    let pb = prompt(2, 16, vocab);
+    let pc = prompt(3, 16, vocab);
+    let sessions: Vec<(&[u32], usize)> =
+        vec![(pa.as_slice(), 6), (pb.as_slice(), 9), (pc.as_slice(), 4)];
+    let mut shared = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let fleet_cfg = OdMoeConfig { fleet: Some(uniform_fleet()), ..OdMoeConfig::default() };
+    let mut fleet = OdMoeEngine::new(&rt, ws.clone(), fleet_cfg.clone()).unwrap();
+    let a = shared.run_batch(&sessions).unwrap();
+    let b = fleet.run_batch(&sessions).unwrap();
+    for (x, y) in a.sessions.iter().zip(&b.sessions) {
+        assert_same(x, y, "batched");
+    }
+    assert_eq!(a.expert_loads, b.expert_loads);
+    assert_eq!(a.aborted_loads, b.aborted_loads);
+    assert_eq!(a.failovers, b.failovers);
+    assert_eq!(a.decode_span_ms, b.decode_span_ms);
+
+    // Failure injection: worker + shadow deaths mid-decode reroute
+    // identically (the capability-aware fail_with must order targets
+    // exactly as the shared-profile reroute did).
+    let healthy = a.sessions[1].clone();
+    let mid = healthy.ttft_ms + healthy.decode_ms / 2.0;
+    for spec in [
+        FailureSpec::Worker { worker: 2, at_ms: mid },
+        FailureSpec::Worker { worker: 0, at_ms: 0.0 },
+        FailureSpec::Shadow { at_ms: mid },
+    ] {
+        let mut shared = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+        shared.inject_failure(spec);
+        let mut fleet = OdMoeEngine::new(&rt, ws.clone(), fleet_cfg.clone()).unwrap();
+        fleet.inject_failure(spec);
+        let x = shared.run_prompt(&pb, 9, false).unwrap();
+        let y = fleet.run_prompt(&pb, 9, false).unwrap();
+        assert_same(&x, &y, &format!("failure {spec:?}"));
+        assert_eq!(shared.failovers(), fleet.failovers(), "failover counts match");
+    }
+}
+
+/// A mixed fleet serves the same tokens (numerics never touch virtual
+/// time) but books honest per-class durations: decode on
+/// rtx3090s + jetsons is no faster than on rtx3090s alone, and the
+/// jetson nodes' ledger peaks stay within the fleet memory audit.
+#[test]
+fn mixed_fleet_decodes_same_tokens_slower_and_within_audit() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let p = prompt(21, 16, vocab);
+
+    let mut uniform =
+        OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let u = uniform.run_prompt(&p, 8, false).unwrap();
+
+    let mixed = FleetSpec::parse("rtx3090:4,jetson:4").unwrap();
+    let cfg = OdMoeConfig { fleet: Some(mixed.clone()), ..OdMoeConfig::default() };
+    let mut engine = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+    let m = engine.run_prompt(&p, 8, false).unwrap();
+
+    assert_eq!(u.tokens, m.tokens, "virtual time never touches numerics");
+    assert!(m.decode_ms.is_finite() && m.decode_ms > 0.0);
+    assert!(
+        m.decode_ms >= u.decode_ms - 1e-6,
+        "jetson links cannot make decode faster: {} vs {}",
+        m.decode_ms,
+        u.decode_ms
+    );
+
+    // Ledger peaks within the fleet audit bound, per node.
+    let hp = HardwareProfile::rtx3090();
+    let audit = memaudit::odmoe_fleet(&hp, &mixed, rt.cfg.top_k, 1, 0);
+    for (i, w) in engine.cluster.workers.iter().enumerate() {
+        let (label, bound) = &audit.per_node[2 + i];
+        assert!(
+            w.gpu_bytes_peak as f64 <= *bound,
+            "{label}: peak {} exceeds audit bound {bound}",
+            w.gpu_bytes_peak
+        );
+    }
+    // Trace rows carry class names on the mixed fleet.
+    assert_eq!(engine.cluster.trace.class_of(2), Some("rtx3090"));
+    assert_eq!(engine.cluster.trace.class_of(2 + 7), Some("jetson"));
+}
+
+/// Capability-aware construction through the engine: with jetsons listed
+/// first at full transfer precision, every slot lands on a 3090 and the
+/// jetsons start as spares (they miss the Eq. (1) window monolithically).
+#[test]
+fn engine_slots_prefer_window_capable_classes() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let fleet = FleetSpec::parse("jetson:2,rtx3090:8").unwrap();
+    let cfg = OdMoeConfig {
+        n_workers: 10,
+        fleet: Some(fleet),
+        ..OdMoeConfig::default()
+    };
+    let engine = OdMoeEngine::new(&rt, ws, cfg).unwrap();
+    let cluster = Cluster::with_classes(
+        HardwareProfile::rtx3090(),
+        FleetSpec::parse("jetson:2,rtx3090:8").unwrap().node_classes(),
+    );
+    assert_eq!(engine.slots, capability_slots(&cluster, rt.cfg.top_k, 1));
+    // 10 workers, 5 groups of 2: all ten host, but the capable 3090s
+    // take the first slots and the jetsons only the shortfall.
+    assert_eq!(engine.slots.workers_of(0), vec![2, 3]);
+    assert_eq!(engine.slots.workers_of(4), vec![0, 1]);
+}
