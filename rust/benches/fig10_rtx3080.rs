@@ -7,7 +7,7 @@ mod common;
 
 use odmoe::cluster::HardwareProfile;
 use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
-use odmoe::predictor::AlignmentConfig;
+use odmoe::predictor::{AlignPeriod, AlignmentConfig};
 use odmoe::util::table::Table;
 use odmoe::workload::speed::PAPER_LAYER_SCALE;
 use odmoe::workload::Corpus;
@@ -26,7 +26,10 @@ fn main() -> anyhow::Result<()> {
         let mut row = vec![kp.to_string()];
         for profile in [HardwareProfile::rtx3080_workers(), HardwareProfile::rtx3090()] {
             let cfg = OdMoeConfig {
-                align: AlignmentConfig { token_period: 1, kv_period: kp },
+                align: AlignmentConfig {
+                    token_period: AlignPeriod::Every(1),
+                    kv_period: AlignPeriod::Every(kp),
+                },
                 profile: profile.clone(),
                 ..OdMoeConfig::default()
             };

@@ -6,7 +6,7 @@
 mod common;
 
 use odmoe::model::Precision;
-use odmoe::predictor::AlignmentConfig;
+use odmoe::predictor::{AlignPeriod, AlignmentConfig};
 use odmoe::util::table::Table;
 use odmoe::workload::{recall, Corpus};
 
@@ -26,7 +26,10 @@ fn main() -> anyhow::Result<()> {
     for &tp in &periods {
         let mut row = vec![format!("T={tp}")];
         for &kp in &periods {
-            let align = AlignmentConfig { token_period: tp, kv_period: kp };
+            let align = AlignmentConfig {
+                token_period: AlignPeriod::Every(tp),
+                kv_period: AlignPeriod::Every(kp),
+            };
             let stats =
                 recall::sep_recall(&s.rt, &ws, Precision::Int8, align, &corpus, out_tokens)?;
             row.push(format!("{:.4}", stats.recall()));

@@ -5,7 +5,7 @@
 mod common;
 
 use odmoe::coordinator::{Engine, OdMoeConfig, OdMoeEngine};
-use odmoe::predictor::AlignmentConfig;
+use odmoe::predictor::{AlignPeriod, AlignmentConfig};
 use odmoe::util::table::Table;
 use odmoe::workload::speed::PAPER_LAYER_SCALE;
 use odmoe::workload::Corpus;
@@ -29,7 +29,10 @@ fn main() -> anyhow::Result<()> {
         let mut row = vec![format!("T={tp}")];
         for &kp in &periods {
             let cfg = OdMoeConfig {
-                align: AlignmentConfig { token_period: tp, kv_period: kp },
+                align: AlignmentConfig {
+                    token_period: AlignPeriod::Every(tp),
+                    kv_period: AlignPeriod::Every(kp),
+                },
                 ..OdMoeConfig::default()
             };
             let mut engine = OdMoeEngine::new(&s.rt, ws.clone(), cfg)?;

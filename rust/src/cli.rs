@@ -2,21 +2,28 @@
 //! evaluations; the benches under `rust/benches/` reuse the same library
 //! harnesses with the full parameter grids.
 
-use anyhow::{ensure, Result};
-use odmoe::cluster::HardwareProfile;
+use anyhow::{ensure, Context, Result};
+use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
 use odmoe::coordinator::{BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine};
 use odmoe::fleet::{planner, FleetSpec, PlanChoice, PlanGrid, PlanMeasurement};
 use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
-use odmoe::predictor::{AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
-use odmoe::serve::{
-    batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep, overlap_json,
-    overlap_sweep, parse_batches, parse_chunk_counts, parse_depths, parse_rates, rate_sweep,
-    sweep_json, write_bench, BatchEngineService, BatchPoint, FailoverPoint, OverlapPoint,
-    Scheduler, SchedulerConfig, ServeReport, ServiceModel, SessionOutcome,
+use odmoe::predictor::{
+    AlignPeriod, AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical,
 };
+use odmoe::serve::{
+    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, config_from_args, failover_json,
+    failover_sweep, overlap_json, overlap_sweep, parse_batches, parse_chunk_counts, parse_depths,
+    parse_rates, rate_sweep, sweep_json, write_bench, ArrivalModel, AttribPoint,
+    BatchEngineService, BatchPoint, FailoverPoint, Histogram, OverlapPoint, Scheduler,
+    SchedulerConfig, ServeReport, ServiceModel, SessionOutcome, SyntheticService, WorkloadSpec,
+};
+use odmoe::telemetry::{self, Phase, Registry};
+use odmoe::trace::EventKind;
+use odmoe::util::bench as bench_util;
 use odmoe::util::cli::Args;
+use odmoe::util::json::{num, obj, Json};
 use odmoe::util::table::{sparkline, Table};
 use odmoe::workload::{fidelity, recall, speed, Corpus};
 use odmoe::Runtime;
@@ -86,11 +93,22 @@ fn apply_fleet_flags(
     }
 }
 
-fn parse_period(s: &str) -> Result<usize> {
+fn parse_period(s: &str) -> Result<AlignPeriod> {
     if s == "inf" || s == "never" {
-        return Ok(usize::MAX);
+        return Ok(AlignPeriod::Never);
     }
-    Ok(s.parse()?)
+    let n: usize = s.parse()?;
+    ensure!(n >= 1, "alignment period must be >= 1 (or inf/never), got {n}");
+    Ok(AlignPeriod::Every(n))
+}
+
+/// Export a registry as `METRICS_<source>.jsonl` (the one JSONL schema
+/// shared by `decode`, `serve`, and `plan` — DESIGN.md §11).
+fn write_metrics(source: &str, reg: &Registry) -> Result<()> {
+    let path = format!("METRICS_{source}.jsonl");
+    std::fs::write(&path, reg.export_jsonl(source)).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 /// Reject out-of-range `--fail worker<N>` targets with a CLI error
@@ -203,6 +221,50 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // `--attribution` (DESIGN.md §11): decode every rate's workload on a
+    // trace-enabled engine (the whole request set as one co-scheduled
+    // batch, so per-iteration spans cover all sessions), attribute each
+    // token's time to its binding phase, and aggregate per rate into the
+    // deterministic `BENCH_attrib.json`.
+    if a.has("attribution") {
+        let rates = parse_rates(a.get_or("rates", "2"))?;
+        ensure!(
+            !matches!(spec.model, ArrivalModel::ClosedLoop { .. }) || rates.len() <= 1,
+            "closed-loop workloads are self-clocked: attribute one rate or use an open-loop \
+             arrival model"
+        );
+        let mut e = OdMoeEngine::new(rt, ws.clone(), cfg)?;
+        if let Some(s) = a.get("fail") {
+            let specs = FailureSpec::parse_list(s)?;
+            validate_failures(&specs, e.cfg.n_workers)?;
+            for f in specs {
+                e.inject_failure(f);
+            }
+        }
+        e.enable_trace();
+        let points = attribution_sweep(&rates, |rate| {
+            let reqs = spec.with_rate(rate).generate(seed);
+            let batch: Vec<(&[u32], usize)> =
+                reqs.iter().map(|r| (r.prompt.as_slice(), r.out_tokens)).collect();
+            e.run_batch(&batch)?;
+            let attrib = telemetry::attribute(&e.cluster.trace, e.token_spans());
+            Ok((reqs.len(), attrib))
+        })?;
+        print_attrib(&points);
+        let fleet_label = e
+            .cfg
+            .fleet
+            .as_ref()
+            .map_or_else(|| format!("uniform:{}", e.cfg.n_workers), |f| f.label());
+        let path = std::path::Path::new("BENCH_attrib.json");
+        write_bench(path, &attrib_json(&points, seed, &fleet_label))?;
+        println!("\nwrote {}", path.display());
+        if a.has("metrics") {
+            write_metrics("serve", e.registry())?;
+        }
+        return Ok(());
+    }
+
     let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
     if let Some(s) = a.get("fail") {
         let specs = FailureSpec::parse_list(s)?;
@@ -226,6 +288,9 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         let path = std::path::Path::new("BENCH_batch.json");
         write_bench(path, &batch_sweep_json(&results, &spec, &batches, &rates, &sched, seed))?;
         println!("\nwrote {}", path.display());
+        if a.has("metrics") {
+            write_metrics("serve", engine.registry())?;
+        }
         return Ok(());
     }
 
@@ -241,6 +306,9 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         let path = std::path::Path::new("BENCH_serve.json");
         write_bench(path, &sweep_json(&results, &spec, &rates, &sched, seed))?;
         println!("\nwrote {}", path.display());
+        if a.has("metrics") {
+            write_metrics("serve", engine.registry())?;
+        }
         return Ok(());
     }
 
@@ -291,7 +359,39 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         report.ttft.p99,
         report.mean_queue_depth,
     );
+    if a.has("metrics") {
+        // Engine-level counters plus the scheduler's outcome metrics, one
+        // merged export: the registry is the shared vocabulary.
+        let mut reg = engine.registry().clone();
+        reg.counter_add("scheduler.offered", report.offered as u64);
+        reg.counter_add("scheduler.completed", report.completed as u64);
+        reg.gauge_set("scheduler.goodput_tok_s", report.goodput_tok_s);
+        reg.gauge_set("scheduler.slo_attainment", report.slo_attainment);
+        for r in &outcome.records {
+            reg.observe("scheduler.e2e_ms", r.e2e_ms());
+        }
+        write_metrics("serve", &reg)?;
+    }
     Ok(())
+}
+
+/// The `serve --attribution` per-rate summary table.
+fn print_attrib(points: &[AttribPoint]) {
+    let mut t = Table::new(&["rate req/s", "sessions", "tokens", "token ms", "bound", "share"]);
+    for p in points {
+        let bound = p.bound();
+        let total = p.total_ms();
+        let share = if total > 0.0 { p.phase_ms[bound.idx()] / total } else { 0.0 };
+        t.row(&[
+            format!("{:.2}", p.rate),
+            format!("{}", p.sessions),
+            format!("{}", p.tokens),
+            format!("{:.1}", total),
+            bound.name().to_string(),
+            format!("{:.0}%", 100.0 * share),
+        ]);
+    }
+    t.print();
 }
 
 fn print_failover(points: &[FailoverPoint]) {
@@ -390,6 +490,10 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         !(a.has("overlap-sweep") && a.has("plan")),
         "--overlap-sweep sweeps chunks/depths itself; run --plan without it"
     );
+    anyhow::ensure!(
+        !(a.has("overlap-sweep") && a.has("attribution")),
+        "--attribution attributes the single-session decode; run it without --overlap-sweep"
+    );
     if let Some(banner) = apply_fleet_flags(a, &mut base_cfg, None)? {
         println!("{banner}");
     }
@@ -428,6 +532,9 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     };
     anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
     let mut e = OdMoeEngine::new(rt, ws, cfg)?;
+    if a.has("attribution") {
+        e.enable_trace();
+    }
     let name = e.name();
     let res = e.run_batch(&[(prompt.as_slice(), out_tokens)])?;
     let s = &res.sessions[0];
@@ -441,6 +548,19 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         res.loads_per_token(),
         res.aborted_loads,
     );
+    // `--attribution` (DESIGN.md §11): walk the trace and print the exact
+    // per-token time decomposition (phases partition each token's
+    // latency; the critical path partitions the makespan).
+    if a.has("attribution") {
+        let attrib = telemetry::attribute(&e.cluster.trace, e.token_spans());
+        print!("{}", attrib.render_table());
+        let path = std::path::Path::new("ATTRIB.json");
+        write_bench(path, &attrib.to_json())?;
+        println!("wrote {}", path.display());
+    }
+    if a.has("metrics") {
+        write_metrics("decode", e.registry())?;
+    }
     Ok(())
 }
 
@@ -748,6 +868,9 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         sched.max_batch
     );
     let max_batch = sched.max_batch;
+    // Aggregate every measured candidate's engine counters (loads,
+    // aborts, failovers) into one registry for `--metrics`.
+    let mut plan_reg = Registry::new();
     let report = planner::search(&fleet, &base, group_size, max_batch, slo_p99, &grid, |cand| {
         let cfg = OdMoeConfig {
             n_workers: cand.fleet.n_nodes(),
@@ -774,6 +897,7 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         let mut svc = BatchEngineService::new(&mut engine);
         let outcome = Scheduler::run(&cand_sched, &mut svc, &reqs)?;
         let rep = ServeReport::from_outcome("plan", rate, &outcome, &tenant_names);
+        plan_reg.merge(engine.registry());
         let mut decode_ms = 0.0;
         let mut decode_tokens = 0u64;
         for r in &outcome.records {
@@ -837,5 +961,175 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let path = std::path::Path::new("BENCH_plan.json");
     write_bench(path, &planner::plan_json(&report, &fleet, &grid, seed))?;
     println!("wrote {}", path.display());
+    if a.has("metrics") {
+        plan_reg.counter_add("plan.candidates_measured", report.points.len() as u64);
+        plan_reg.counter_add("plan.pruned", report.pruned as u64);
+        if let Some(p) = report.chosen_point() {
+            plan_reg.gauge_set("plan.chosen_tpot_p99_ms", p.meas.tpot_p99_ms);
+            plan_reg.gauge_set("plan.chosen_cost", p.cost);
+        }
+        write_metrics("plan", &plan_reg)?;
+    }
+    Ok(())
+}
+
+/// Book a 16-layer round-robin expert stream (LAN dispatch, chunked
+/// load, pipelined FFN tiles, LAN return) on a trace-enabled cluster.
+/// Purely virtual-time and deterministic; returns the cluster (for
+/// attribution/microbench reuse) and the pipeline makespan.
+fn stream_pipeline(classes: Vec<NodeClass>, chunks: usize) -> (Cluster, f64) {
+    let mut c = Cluster::with_classes(HardwareProfile::rtx3090(), classes);
+    c.trace.enabled = true;
+    let n = c.workers.len();
+    let expert_bytes = 48.0 * 1024.0 * 1024.0;
+    let embed_bytes = 16.0 * 1024.0;
+    let mut t = 0.0;
+    for l in 0..16 {
+        let w = l % n;
+        let arrival = c.lan_send(t, embed_bytes, "embed");
+        let tr = c.expert_load_chunked(w, arrival, expert_bytes, chunks, EventKind::ExpertLoad);
+        let (_, compute_end) = c.expert_compute_chunked(w, tr.start, 0.6, &tr.chunk_ends);
+        t = c.lan_send(compute_end, embed_bytes, "embed-back");
+    }
+    (c, t)
+}
+
+/// `od-moe bench`: the perf benchmark runner + regression gate
+/// (DESIGN.md §11). Runtime-free (no PJRT artifacts needed).
+///
+/// `BENCH_perf.json` has two sections: `"virtual"` holds deterministic
+/// virtual-time metrics — chunked-stream makespans on uniform and mixed
+/// fleets, scheduler sweep percentiles through the synthetic service, and
+/// the attribution decomposition of the stream trace — byte-identical
+/// given `--seed`. `"wall"` holds wall-clock microbench distributions
+/// (mean/p50/p95 plus min/max/stddev over `--samples` invocations of
+/// `--iters` iterations); machine-dependent and never gated.
+///
+/// `--ci` diffs the virtual section against the committed baseline
+/// (`--baseline`, default `rust/benches/perf_baseline.json`) with a
+/// relative `--band` noise band and exits nonzero on a regression or a
+/// silently dropped metric. `--write-baseline` pins the current numbers —
+/// the documented escape hatch for intentional perf changes (commit the
+/// refreshed file).
+pub fn bench(a: &Args) -> Result<()> {
+    let seed = a.u64_or("seed", 42)?;
+    let band = a.f64_or("band", 0.02)?;
+    let samples = a.usize_or("samples", 7)?;
+    let iters = a.usize_or("iters", 100)?;
+    ensure!(samples >= 2, "--samples must be >= 2 to report a distribution");
+    ensure!(iters >= 1, "--iters must be >= 1");
+
+    // "virtual" section: deterministic virtual-time metrics — the only
+    // numbers the gate compares.
+    let mut virt: Vec<(String, f64)> = Vec::new();
+    let fleets: [(&str, Vec<NodeClass>); 2] = [
+        ("uniform-3090x4", vec![NodeClass::rtx3090(); 4]),
+        (
+            "mixed-3090x2-jetsonx2",
+            vec![
+                NodeClass::rtx3090(),
+                NodeClass::jetson(),
+                NodeClass::rtx3090(),
+                NodeClass::jetson(),
+            ],
+        ),
+    ];
+    for (name, classes) in &fleets {
+        for chunks in [1usize, 4] {
+            let (_, makespan) = stream_pipeline(classes.clone(), chunks);
+            virt.push((format!("stream/{name}/c{chunks}/makespan_ms"), makespan));
+        }
+    }
+    // Attribution of the uniform 4-chunk stream: the decomposition and
+    // critical path are gated metrics themselves (and double as the
+    // microbench workload below).
+    let (cluster, end) = stream_pipeline(vec![NodeClass::rtx3090(); 4], 4);
+    let phase_ms = telemetry::decompose(&cluster.trace, 0.0, end);
+    virt.push(("attrib/uniform-c4/expert_load_ms".into(), phase_ms[Phase::ExpertLoad.idx()]));
+    virt.push(("attrib/uniform-c4/idle_ms".into(), phase_ms[Phase::Idle.idx()]));
+    let cp = telemetry::critical_path(&cluster.trace, 0.0, end);
+    virt.push(("attrib/uniform-c4/critical_segments".into(), cp.len() as f64));
+
+    // Scheduler percentiles through the synthetic service.
+    let spec = WorkloadSpec::poisson(4.0, 32, 256);
+    let tenant_names: Vec<String> = spec.tenants.iter().map(|t| t.name.clone()).collect();
+    let sched = SchedulerConfig { n_replicas: 2, max_batch: 2, ..SchedulerConfig::default() };
+    for rate in [2.0, 8.0] {
+        let reqs = spec.with_rate(rate).generate(seed);
+        let mut svc = SyntheticService::new(5.0, 0.05, 3.0).with_batch_marginal(0.3);
+        let outcome = Scheduler::run(&sched, &mut svc, &reqs)?;
+        let rep = ServeReport::from_outcome("bench", rate, &outcome, &tenant_names);
+        virt.push((format!("sched/poisson-r{rate}/ttft_p99_ms"), rep.ttft.p99));
+        virt.push((format!("sched/poisson-r{rate}/tpot_p99_ms"), rep.tpot.p99));
+    }
+
+    let mut t = Table::new(&["virtual metric (gated)", "value"]);
+    for (k, v) in &virt {
+        t.row(&[k.clone(), format!("{v:.4}")]);
+    }
+    t.print();
+
+    // "wall" section: wall-clock microbench distributions (informational;
+    // machine-dependent, so never gated).
+    println!();
+    bench_util::header();
+    let mut wall: Vec<bench_util::Summary> = Vec::new();
+    wall.push(bench_util::run("telemetry/decompose/16-layer-trace", samples, iters, || {
+        std::hint::black_box(telemetry::decompose(&cluster.trace, 0.0, end));
+    }));
+    wall.push(bench_util::run("telemetry/critical-path/16-layer-trace", samples, iters, || {
+        std::hint::black_box(telemetry::critical_path(&cluster.trace, 0.0, end));
+    }));
+    wall.push(bench_util::run("metrics/histogram-256-push-summary", samples, iters, || {
+        let mut h = Histogram::default();
+        let mut x = seed | 1;
+        for _ in 0..256 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            h.push((x >> 33) as f64);
+        }
+        std::hint::black_box(h.summary());
+    }));
+    let virt_obj = obj(virt.iter().map(|(k, v)| (k.as_str(), num(*v))).collect());
+    let virt_text = virt_obj.to_string();
+    wall.push(bench_util::run("json/parse-virtual-section", samples, iters, || {
+        std::hint::black_box(Json::parse(&virt_text).expect("valid json"));
+    }));
+    for s in &wall {
+        s.print();
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("perf".into())),
+        ("schema", Json::Str("odmoe.bench.v1".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("virtual", virt_obj.clone()),
+        ("wall", Json::Arr(wall.iter().map(|s| s.to_json()).collect())),
+    ]);
+    let out = a.get_or("out", "BENCH_perf.json");
+    write_bench(std::path::Path::new(out), &doc)?;
+    println!("\nwrote {out}");
+
+    let baseline_path = a.get_or("baseline", "rust/benches/perf_baseline.json");
+    if a.has("write-baseline") {
+        let base =
+            obj(vec![("schema", Json::Str("odmoe.bench.v1".into())), ("virtual", virt_obj)]);
+        write_bench(std::path::Path::new(baseline_path), &base)?;
+        println!("pinned baseline {baseline_path}");
+        return Ok(());
+    }
+    if a.has("ci") {
+        let text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path} (pin: --write-baseline)"))?;
+        let baseline = Json::parse(&text)?;
+        let outcome = telemetry::gate(&doc, &baseline, band)?;
+        print!("{}", outcome.report(band));
+        if !outcome.passed() {
+            anyhow::bail!(
+                "perf gate failed: {} regression(s), {} missing metric(s)",
+                outcome.regressions.len(),
+                outcome.missing.len()
+            );
+        }
+    }
     Ok(())
 }

@@ -56,6 +56,7 @@ use crate::model::{Precision, WeightStore};
 use crate::predictor::baseline::RandomPredictor;
 use crate::predictor::{AlignmentConfig, Predictor, SepPredictor};
 use crate::runtime::Runtime;
+use crate::telemetry::Registry;
 use crate::trace::EventKind;
 
 /// What drives expert prefetching (ablation cases of Fig. 8).
@@ -229,9 +230,15 @@ pub struct OdMoeEngine<'rt> {
     pending_fail: Vec<(usize, Ms)>,
     /// Shadow failure not yet applied this run.
     pending_shadow: Option<Ms>,
-    /// Loads/computes re-booked on a replacement worker after a
-    /// mid-flight node death, cumulative since the last reset.
-    failovers: u64,
+    /// Named engine counters (`engine.expert_loads`,
+    /// `engine.aborted_loads`, `engine.failovers`), incremented at the
+    /// event sites and cleared by `reset` — the telemetry registry that
+    /// replaced the old ad-hoc per-field plumbing (DESIGN.md §11).
+    registry: Registry,
+    /// Decode iteration windows `(start, end)` on the virtual clock,
+    /// in order, since the last reset — the per-token windows
+    /// [`crate::telemetry::attribute`] decomposes.
+    token_spans: Vec<(Ms, Ms)>,
 }
 
 impl<'rt> OdMoeEngine<'rt> {
@@ -311,7 +318,8 @@ impl<'rt> OdMoeEngine<'rt> {
             plan: Vec::new(),
             pending_fail: Vec::new(),
             pending_shadow: None,
-            failovers: 0,
+            registry: Registry::new(),
+            token_spans: Vec::new(),
         };
         engine.charge_static_memory();
         Ok(engine)
@@ -370,7 +378,19 @@ impl<'rt> OdMoeEngine<'rt> {
     /// Loads/computes re-booked on a replacement worker after a
     /// mid-flight node death, cumulative since the last reset.
     pub fn failovers(&self) -> u64 {
-        self.failovers
+        self.registry.counter("engine.failovers")
+    }
+
+    /// The engine's metrics registry (counters since the last reset).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Decode iteration windows on the virtual clock since the last
+    /// reset, in decode order — feed these (with the trace from
+    /// [`Self::enable_trace`]) to [`crate::telemetry::attribute`].
+    pub fn token_spans(&self) -> &[(Ms, Ms)] {
+        &self.token_spans
     }
 
     // ---- Failure machinery (shared by both decode paths). ---------------
@@ -527,7 +547,7 @@ impl<'rt> OdMoeEngine<'rt> {
                     // notice reaches the coordinator.
                     done_chunks += t.delivered_by(at);
                     self.apply_worker_failure(w, at);
-                    self.failovers += 1;
+                    self.registry.counter_add("engine.failovers", 1);
                     earliest = earliest.max(at + lan_lat);
                     continue;
                 }
@@ -621,7 +641,7 @@ impl<'rt> OdMoeEngine<'rt> {
             // recovery (including a mid-compute abort, which re-enters
             // here) passes through it exactly once.
             if let Some(at) = self.cluster.workers[holder].failed_at() {
-                self.failovers += 1;
+                self.registry.counter_add("engine.failovers", 1);
                 let t = self.load_with_failover(layer, slot, at + lan_lat, false);
                 holder = t.worker;
                 restreamed = Some(t.chunk_ends);
@@ -771,11 +791,13 @@ impl<'rt> OdMoeEngine<'rt> {
                     Some(pe) if pred_avail[l] <= reactive_t => {
                         let t = self.load_with_failover(l, slot, pred_avail[l], true);
                         if actual.experts.contains(&pe) {
+                            self.registry.counter_add("engine.expert_loads", 1);
                             holders[slot] = Some(t);
                         } else {
                             // Mispredict: the reload is gate-driven (the
                             // link is cancelled first, so no residency
                             // wait — the seed's reload path).
+                            self.registry.counter_add("engine.aborted_loads", 1);
                             aborts.push(t);
                             pending.push((slot, false));
                         }
@@ -794,6 +816,7 @@ impl<'rt> OdMoeEngine<'rt> {
             // Phase 3 — reloads + reactive loads.
             for &(slot, residency) in &pending {
                 let t = self.load_with_failover(l, slot, reactive_t, residency);
+                self.registry.counter_add("engine.expert_loads", 1);
                 holders[slot] = Some(t);
             }
             let holders: Vec<ChunkedTransfer> =
@@ -858,8 +881,8 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
             PredictorMode::Sep => format!(
                 "sep-{}-T{}KV{}",
                 self.cfg.shadow_precision.label(),
-                fmt_period(self.cfg.align.token_period),
-                fmt_period(self.cfg.align.kv_period)
+                self.cfg.align.token_period.label(),
+                self.cfg.align.kv_period.label()
             ),
             PredictorMode::Random => "random-prefetch".into(),
             PredictorMode::None => "no-prefetch".into(),
@@ -890,7 +913,8 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         for f in self.plan.clone() {
             self.arm(f);
         }
-        self.failovers = 0;
+        self.registry.clear();
+        self.token_spans.clear();
         for w in &mut self.workers {
             w.ec_ends.clear();
         }
@@ -933,7 +957,9 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         let mut token = rec.token_out;
         let mut stall = 0.0;
         for _ in 1..out_tokens {
+            let span_start = self.now;
             let (next, logits, correct) = self.decode_iteration(token, &mut stall)?;
+            self.token_spans.push((span_start, self.now));
             res.correct_per_token.push(correct);
             res.tokens.push(next);
             if collect_logits {
@@ -945,13 +971,6 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         res.stall_ms = stall;
         Ok(res)
     }
-}
-
-/// Load/abort tallies one batched run accumulates (DESIGN.md §7).
-#[derive(Debug, Default)]
-struct BatchCounters {
-    expert_loads: u64,
-    aborted_loads: u64,
 }
 
 impl<'rt> OdMoeEngine<'rt> {
@@ -967,7 +986,6 @@ impl<'rt> OdMoeEngine<'rt> {
         &mut self,
         batch: &mut BatchState,
         active: &[usize],
-        counters: &mut BatchCounters,
         out: &mut [PromptResult],
     ) -> Result<()> {
         let p = self.cluster.profile.clone();
@@ -1102,7 +1120,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 if in_actual(entry.0) {
                     continue;
                 }
-                counters.aborted_loads += 1;
+                self.registry.counter_add("engine.aborted_loads", 1);
                 self.abort_predicted(&entry.2, reactive_t);
             }
 
@@ -1118,7 +1136,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 match pred_loaded.iter().find(|entry| entry.0 == ae) {
                     Some(entry) => {
                         ec_count[entry.1] += 1;
-                        counters.expert_loads += 1;
+                        self.registry.counter_add("engine.expert_loads", 1);
                         placed.push((cnt, entry.1, entry.2.clone()));
                     }
                     None => pending.push(cnt),
@@ -1134,7 +1152,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 // like the sequential mispredict reload; without one the
                 // load also waits for the residency window.
                 let t = self.load_with_failover(l, slot, reactive_t, !usable);
-                counters.expert_loads += 1;
+                self.registry.counter_add("engine.expert_loads", 1);
                 placed.push((cnt, slot, t));
             }
 
@@ -1242,11 +1260,14 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
         }
         self.shadow_free = self.now;
         let decode_start = self.now;
-        let failovers_before = self.failovers;
+        // Counter snapshots: the registry accumulates since reset, the
+        // run result reports this run's deltas (DESIGN.md §7 tallies).
+        let loads_before = self.registry.counter("engine.expert_loads");
+        let aborts_before = self.registry.counter("engine.aborted_loads");
+        let failovers_before = self.registry.counter("engine.failovers");
 
         // ---- Decode: all sessions step together; the batch shrinks at
         // the token boundary where a session reaches its target. ---------
-        let mut counters = BatchCounters::default();
         let mut decode_tokens = 0u64;
         let mut decode_iterations = 0u64;
         loop {
@@ -1254,7 +1275,9 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
             if active.is_empty() {
                 break;
             }
-            self.decode_iteration_batch(&mut batch, &active, &mut counters, &mut out)?;
+            let span_start = self.now;
+            self.decode_iteration_batch(&mut batch, &active, &mut out)?;
+            self.token_spans.push((span_start, self.now));
             decode_iterations += 1;
             decode_tokens += active.len() as u64;
             for &s in &active {
@@ -1266,23 +1289,20 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
         for (i, res) in out.iter_mut().enumerate() {
             res.tokens = batch.slot(i).tokens.clone();
         }
+        let expert_loads = self.registry.counter("engine.expert_loads") - loads_before;
+        if decode_tokens > 0 {
+            let lpt = expert_loads as f64 / decode_tokens as f64;
+            self.registry.gauge_set("engine.loads_per_token", lpt);
+        }
         Ok(BatchRunResult {
             sessions: out,
-            expert_loads: counters.expert_loads,
-            aborted_loads: counters.aborted_loads,
-            failovers: self.failovers - failovers_before,
+            expert_loads,
+            aborted_loads: self.registry.counter("engine.aborted_loads") - aborts_before,
+            failovers: self.registry.counter("engine.failovers") - failovers_before,
             decode_tokens,
             decode_iterations,
             decode_span_ms: self.now - decode_start,
         })
-    }
-}
-
-fn fmt_period(p: usize) -> String {
-    if p == usize::MAX {
-        "∞".into()
-    } else {
-        p.to_string()
     }
 }
 

@@ -322,7 +322,8 @@ fn candidate_json(c: &PlanCandidate) -> Vec<(&'static str, Json)> {
 }
 
 fn num(v: f64) -> Json {
-    // Mirror serve::metrics::num — keep NaN/inf out of the artifact.
+    // Unlike util::json::num (which only rounds), this keeps NaN/inf
+    // out of the artifact: an unmeasurable metric serializes as null.
     if v.is_finite() {
         Json::Num(v)
     } else {

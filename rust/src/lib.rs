@@ -40,6 +40,10 @@
 //!   through the cluster so each worker books its own class's durations,
 //!   plus the SLO-driven deployment planner behind `BENCH_plan.json`
 //!   and `od-moe serve --plan` (DESIGN.md §10).
+//! * [`telemetry`] — observability: per-token critical-path attribution
+//!   over traces (`od-moe decode --attribution`, `BENCH_attrib.json`), a
+//!   unified metrics registry with one JSONL export schema, and the
+//!   `od-moe bench` perf-regression gate (DESIGN.md §11).
 
 pub mod cache;
 pub mod cluster;
@@ -52,6 +56,7 @@ pub mod predictor;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod workload;

@@ -12,7 +12,10 @@
 //! Artifacts the sweep subcommands write: `BENCH_serve.json`
 //! (`serve --rates`), `BENCH_batch.json` (`serve --batch-sweep`),
 //! `BENCH_failover.json` (`serve --failover-sweep`), `BENCH_overlap.json`
-//! (`decode --overlap-sweep`), `BENCH_plan.json` (`plan`, DESIGN.md §10).
+//! (`decode --overlap-sweep`), `BENCH_plan.json` (`plan`, DESIGN.md §10),
+//! `BENCH_attrib.json` (`serve --attribution`), `ATTRIB.json`
+//! (`decode --attribution`), `BENCH_perf.json` (`bench`), and
+//! `METRICS_<cmd>.jsonl` (`--metrics`, DESIGN.md §11).
 
 use anyhow::{bail, Result};
 use odmoe::util::cli::{render_usage, Args, CommandSpec, Flag};
@@ -98,6 +101,8 @@ const SERVE_FLAGS: &[Flag] = workload_flags![+
     val("fail-at-ms", "MS", "failover sweep fault instant (default 0)"),
     val("fleet", "SPEC", "heterogeneous fleet, e.g. rtx3080:4,jetson:4,nano:2"),
     val("plan", "FILE", "run the deployment chosen in BENCH_plan.json"),
+    switch("attribution", "per-rate attribution sweep; writes BENCH_attrib.json"),
+    switch("metrics", "export the metrics registry to METRICS_serve.jsonl"),
 ];
 
 const DECODE_FLAGS: &[Flag] = &[
@@ -109,6 +114,18 @@ const DECODE_FLAGS: &[Flag] = &[
     val("depths", "D1,D2,..", "depths for --overlap-sweep (default 0,1)"),
     val("fleet", "SPEC", "heterogeneous fleet, e.g. rtx3080:4,jetson:4,nano:2"),
     val("plan", "FILE", "decode on the deployment chosen in BENCH_plan.json"),
+    switch("attribution", "per-token critical-path table; writes ATTRIB.json"),
+    switch("metrics", "export the metrics registry to METRICS_decode.jsonl"),
+];
+
+const BENCH_FLAGS: &[Flag] = &[
+    switch("ci", "gate the virtual section against the baseline; nonzero on regression"),
+    switch("write-baseline", "pin the current virtual section as the committed baseline"),
+    val("baseline", "FILE", "baseline path (default rust/benches/perf_baseline.json)"),
+    val("band", "F", "relative noise band for --ci (default 0.02)"),
+    val("out", "FILE", "output path (default BENCH_perf.json)"),
+    val("samples", "N", "wall-clock invocations per microbench (default 7)"),
+    val("iters", "N", "iterations per invocation (default 100)"),
 ];
 
 const EVAL_FLAGS: &[Flag] = &[
@@ -130,6 +147,7 @@ const PLAN_FLAGS: &[Flag] = workload_flags![+
     val("chunk-grid", "K1,K2,..", "chunk counts to search (default 1,8)"),
     val("depth-grid", "D1,D2,..", "prefetch depths to search (default 0,1)"),
     val("replica-grid", "R1,R2,..", "replica counts to search (default 1)"),
+    switch("metrics", "export planner + engine metrics to METRICS_plan.jsonl"),
 ];
 
 const COMMANDS: &[CommandSpec] = &[
@@ -173,6 +191,11 @@ const COMMANDS: &[CommandSpec] = &[
         summary: "GPU-memory audit (Table 2(ii)); --fleet for a class audit",
         flags: MEMORY_FLAGS,
     },
+    CommandSpec {
+        name: "bench",
+        summary: "perf benches + regression gate; writes BENCH_perf.json (§11)",
+        flags: BENCH_FLAGS,
+    },
 ];
 
 fn main() -> Result<()> {
@@ -202,6 +225,10 @@ fn main() -> Result<()> {
     if cmd == "memory" {
         // No runtime needed for the static memory audit.
         return cli::memory(&args);
+    }
+    if cmd == "bench" {
+        // Runtime-free: virtual-time metrics + wall-clock microbenches.
+        return cli::bench(&args);
     }
     let rt = match args.get("artifacts") {
         Some(dir) => odmoe::Runtime::load(dir)?,

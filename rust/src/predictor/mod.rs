@@ -11,7 +11,7 @@ pub mod math;
 pub mod sep;
 
 pub use baseline::{GateLookahead, MultiLayerGate, RandomPredictor, Statistical};
-pub use sep::{AlignmentConfig, SepPredictor};
+pub use sep::{AlignPeriod, AlignmentConfig, SepPredictor};
 
 use crate::engine::Route;
 

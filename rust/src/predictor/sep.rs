@@ -21,33 +21,59 @@ use crate::engine::{ModelState, Route};
 use crate::model::{Precision, WeightStore};
 use crate::runtime::Runtime;
 
-/// Alignment periods in decode iterations; `usize::MAX` disables.
+/// How often one alignment mechanism fires, in decode iterations. A
+/// typed period instead of the old `usize::MAX` sentinel: "disabled" is
+/// a variant the compiler can see, not a magic value every consumer must
+/// remember to test for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlignPeriod {
+    /// Align every `n` decode iterations (`n >= 1`).
+    Every(usize),
+    /// Alignment disabled.
+    Never,
+}
+
+impl AlignPeriod {
+    /// Does alignment fire on this (0-based) decode iteration?
+    pub fn due(self, iteration: usize) -> bool {
+        match self {
+            AlignPeriod::Every(n) => n > 0 && iteration % n == 0,
+            AlignPeriod::Never => false,
+        }
+    }
+
+    /// Short label for engine names and tables (`∞` when disabled).
+    pub fn label(self) -> String {
+        match self {
+            AlignPeriod::Every(n) => n.to_string(),
+            AlignPeriod::Never => "∞".into(),
+        }
+    }
+}
+
+/// Alignment periods in decode iterations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AlignmentConfig {
-    pub token_period: usize,
-    pub kv_period: usize,
+    pub token_period: AlignPeriod,
+    pub kv_period: AlignPeriod,
 }
 
 impl AlignmentConfig {
     /// The paper's best configuration on the 3090 testbed (T1_KV1).
     pub fn every_iteration() -> Self {
-        Self { token_period: 1, kv_period: 1 }
+        Self { token_period: AlignPeriod::Every(1), kv_period: AlignPeriod::Every(1) }
     }
 
     pub fn none() -> Self {
-        Self { token_period: usize::MAX, kv_period: usize::MAX }
+        Self { token_period: AlignPeriod::Never, kv_period: AlignPeriod::Never }
     }
 
     pub fn token_only() -> Self {
-        Self { token_period: 1, kv_period: usize::MAX }
+        Self { token_period: AlignPeriod::Every(1), kv_period: AlignPeriod::Never }
     }
 
     pub fn kv_only() -> Self {
-        Self { token_period: usize::MAX, kv_period: 1 }
-    }
-
-    fn due(period: usize, iteration: usize) -> bool {
-        period != usize::MAX && iteration % period == 0
+        Self { token_period: AlignPeriod::Never, kv_period: AlignPeriod::Every(1) }
     }
 }
 
@@ -102,8 +128,8 @@ impl<'rt> SepPredictor<'rt> {
     /// alignment can use); `main_input` is the token the main model will
     /// decode now (its previous output / last prompt token).
     pub fn begin_token(&mut self, main: &ModelState, main_input: u32) -> Result<()> {
-        self.aligned_token = AlignmentConfig::due(self.align.token_period, self.iteration);
-        self.aligned_kv = AlignmentConfig::due(self.align.kv_period, self.iteration);
+        self.aligned_token = self.align.token_period.due(self.iteration);
+        self.aligned_kv = self.align.kv_period.due(self.iteration);
         if self.aligned_kv {
             self.shadow.align_kv_from(main);
         }
@@ -171,20 +197,24 @@ mod tests {
 
     #[test]
     fn due_periods() {
-        assert!(AlignmentConfig::due(1, 0));
-        assert!(AlignmentConfig::due(1, 5));
-        assert!(AlignmentConfig::due(4, 8));
-        assert!(!AlignmentConfig::due(4, 9));
-        assert!(!AlignmentConfig::due(usize::MAX, 0));
+        assert!(AlignPeriod::Every(1).due(0));
+        assert!(AlignPeriod::Every(1).due(5));
+        assert!(AlignPeriod::Every(4).due(8));
+        assert!(!AlignPeriod::Every(4).due(9));
+        assert!(!AlignPeriod::Never.due(0));
+        assert!(!AlignPeriod::Every(0).due(0), "degenerate period never fires");
+        assert_eq!(AlignPeriod::Every(16).label(), "16");
+        assert_eq!(AlignPeriod::Never.label(), "∞");
     }
 
     #[test]
     fn presets() {
         let e = AlignmentConfig::every_iteration();
-        assert_eq!((e.token_period, e.kv_period), (1, 1));
+        let one = AlignPeriod::Every(1);
+        assert_eq!((e.token_period, e.kv_period), (one, one));
         let n = AlignmentConfig::none();
-        assert_eq!(n.token_period, usize::MAX);
-        assert_eq!(AlignmentConfig::token_only().kv_period, usize::MAX);
-        assert_eq!(AlignmentConfig::kv_only().token_period, usize::MAX);
+        assert_eq!(n.token_period, AlignPeriod::Never);
+        assert_eq!(AlignmentConfig::token_only().kv_period, AlignPeriod::Never);
+        assert_eq!(AlignmentConfig::kv_only().token_period, AlignPeriod::Never);
     }
 }

@@ -29,6 +29,7 @@ use super::scheduler::{BatchStats, MemoryModel, Policy, Scheduler, SchedulerConf
 use super::Slo;
 use crate::cluster::HardwareProfile;
 use crate::runtime::PREFILL_SIZES;
+use crate::telemetry::{DecodeAttribution, Phase, NPHASES};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -583,6 +584,95 @@ pub fn overlap_json(
     ])
 }
 
+/// One arrival rate's aggregate critical-path attribution in an
+/// [`attribution_sweep`]: per-phase time summed over every decoded token
+/// of every session served at that rate (DESIGN.md §11).
+#[derive(Debug, Clone)]
+pub struct AttribPoint {
+    pub rate: f64,
+    pub sessions: usize,
+    pub tokens: usize,
+    /// Summed per-phase token time, [`Phase::ALL`] order.
+    pub phase_ms: [f64; NPHASES],
+}
+
+impl AttribPoint {
+    /// Total attributed token time at this point.
+    pub fn total_ms(&self) -> f64 {
+        self.phase_ms.iter().sum()
+    }
+
+    /// The phase binding the largest share of token time.
+    pub fn bound(&self) -> Phase {
+        let mut best = Phase::Idle;
+        let mut best_ms = f64::NEG_INFINITY;
+        for p in Phase::ALL {
+            if self.phase_ms[p.idx()] > best_ms {
+                best = p;
+                best_ms = self.phase_ms[p.idx()];
+            }
+        }
+        best
+    }
+
+    pub fn to_json(&self) -> Json {
+        let total = self.total_ms();
+        let phases =
+            obj(Phase::ALL.iter().map(|p| (p.name(), num(self.phase_ms[p.idx()]))).collect());
+        let fracs = obj(Phase::ALL
+            .iter()
+            .map(|p| {
+                let f = if total > 0.0 { self.phase_ms[p.idx()] / total } else { 0.0 };
+                (p.name(), num(f))
+            })
+            .collect());
+        obj(vec![
+            ("rate_per_s", num(self.rate)),
+            ("sessions", Json::Num(self.sessions as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("total_ms", num(total)),
+            ("phases_ms", phases),
+            ("phase_frac", fracs),
+            ("bound", Json::Str(self.bound().name().into())),
+        ])
+    }
+}
+
+/// Aggregate per-token attribution across sessions at every rate.
+/// `run(rate)` must decode the rate's whole workload on a trace-enabled
+/// engine and return (sessions served, the decode's attribution) — see
+/// `od-moe serve --attribution`. The closure boundary keeps the sweep
+/// engine-agnostic and unit-testable without the PJRT runtime.
+pub fn attribution_sweep<F>(rates: &[f64], mut run: F) -> Result<Vec<AttribPoint>>
+where
+    F: FnMut(f64) -> Result<(usize, DecodeAttribution)>,
+{
+    ensure!(!rates.is_empty(), "attribution sweep needs at least one rate");
+    let mut points = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let (sessions, attrib) = run(rate)?;
+        points.push(AttribPoint {
+            rate,
+            sessions,
+            tokens: attrib.tokens.len(),
+            phase_ms: attrib.phase_totals(),
+        });
+    }
+    Ok(points)
+}
+
+/// Assemble the `BENCH_attrib.json` document: the fraction of token time
+/// bound by each resource, per rate, for one fleet.
+pub fn attrib_json(points: &[AttribPoint], seed: u64, fleet: &str) -> Json {
+    obj(vec![
+        ("bench", Json::Str("attrib".to_string())),
+        ("schema", Json::Str("odmoe.attrib.v1".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("fleet", Json::Str(fleet.to_string())),
+        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ])
+}
+
 /// Write a JSON document with a trailing newline.
 pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
     std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
@@ -740,6 +830,38 @@ mod tests {
         })
         .unwrap();
         assert!(!drift[1].tokens_match_baseline);
+    }
+
+    #[test]
+    fn attribution_sweep_aggregates_and_is_deterministic() {
+        use crate::trace::{EventKind, Trace};
+        // Synthetic one-token decode per rate: main [0,4), expert load
+        // [2, 10+rate) — the load binds the token.
+        let mk = |rate: f64| {
+            let mut t = Trace::new();
+            t.enabled = true;
+            t.push(EventKind::MainCompute, 0, 0.0, 4.0, "M");
+            t.push(EventKind::ExpertLoad, 2, 2.0, 10.0 + rate, "EL");
+            let attrib = crate::telemetry::attribute(&t, &[(0.0, 10.0 + rate)]);
+            Ok((3usize, attrib))
+        };
+        let rates = [0.5, 2.0];
+        let run = || {
+            let points = attribution_sweep(&rates, mk).unwrap();
+            attrib_json(&points, 42, "uniform:8").to_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same inputs must reproduce the file byte for byte");
+        assert!(a.contains("\"bench\":\"attrib\""));
+        assert!(a.contains("\"fleet\":\"uniform:8\""));
+        assert!(a.contains("\"bound\":\"expert_load\""));
+        let points = attribution_sweep(&rates, mk).unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].sessions, 3);
+        assert_eq!(points[0].tokens, 1);
+        assert_eq!(points[0].bound(), Phase::ExpertLoad);
+        assert!((points[0].total_ms() - 10.5).abs() < 1e-9, "phases partition the window");
+        assert!(attribution_sweep(&[], mk).is_err(), "empty rate list rejected");
     }
 
     #[test]

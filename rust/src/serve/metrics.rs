@@ -9,19 +9,24 @@ use crate::util::json::Json;
 
 use super::scheduler::{ServeOutcome, SessionOutcome};
 
-/// Streaming sample sink with exact percentiles: O(1) append, one sort
-/// per read (the report reads each histogram exactly once, so sorting at
-/// read time beats keeping the vector sorted across every insertion).
+/// Streaming sample sink with exact percentiles: O(1) append, and a
+/// cached sorted snapshot (dirty-flagged) shared by every read, so
+/// interleaved `p()` / `summary()` calls sort once per batch of pushes
+/// instead of cloning + re-sorting the whole series per call.
 #[derive(Debug, Clone, Default)]
 pub struct Histogram {
     samples: Vec<f64>,
     sum: f64,
+    /// Sorted snapshot of `samples`; stale iff `dirty`.
+    sorted: Vec<f64>,
+    dirty: bool,
 }
 
 impl Histogram {
     pub fn push(&mut self, v: f64) {
         self.samples.push(v);
         self.sum += v;
+        self.dirty = true;
     }
 
     pub fn len(&self) -> usize {
@@ -40,20 +45,31 @@ impl Histogram {
         }
     }
 
-    /// Exact nearest-rank quantile (0 on an empty sample).
-    pub fn p(&self, q: f64) -> f64 {
-        crate::metrics::percentile(&self.samples, q)
+    /// The cached sorted view, rebuilt only after new pushes.
+    fn sorted(&mut self) -> &[f64] {
+        if self.dirty {
+            self.sorted.clear();
+            self.sorted.extend_from_slice(&self.samples);
+            self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.dirty = false;
+        }
+        &self.sorted
     }
 
-    pub fn summary(&self) -> Percentiles {
-        let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    /// Exact nearest-rank quantile (0 on an empty sample).
+    pub fn p(&mut self, q: f64) -> f64 {
+        percentile_sorted(self.sorted(), q)
+    }
+
+    pub fn summary(&mut self) -> Percentiles {
+        let mean = self.mean();
+        let sorted = self.sorted();
         Percentiles {
             count: sorted.len(),
-            mean: self.mean(),
-            p50: percentile_sorted(&sorted, 0.50),
-            p95: percentile_sorted(&sorted, 0.95),
-            p99: percentile_sorted(&sorted, 0.99),
+            mean,
+            p50: percentile_sorted(sorted, 0.50),
+            p95: percentile_sorted(sorted, 0.95),
+            p99: percentile_sorted(sorted, 0.99),
         }
     }
 }
@@ -275,15 +291,10 @@ fn mean_depth(timeline: &[(Ms, usize)], makespan: Ms) -> f64 {
     acc / makespan
 }
 
-pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
-    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
-}
-
-/// JSON number rounded to 1e-6 (keeps the report readable without
-/// sacrificing determinism).
-pub(crate) fn num(v: f64) -> Json {
-    Json::Num((v * 1e6).round() / 1e6)
-}
+// The serve layer's JSON builders grew into the shared helpers in
+// [`crate::util::json`]; re-exported here so serve modules keep their
+// short paths.
+pub(crate) use crate::util::json::{num, obj};
 
 #[cfg(test)]
 mod tests {
@@ -302,6 +313,32 @@ mod tests {
         assert_eq!(h.p(0.95), 5.0);
         assert_eq!(h.mean(), 3.0);
         assert_eq!(Histogram::default().p(0.99), 0.0);
+    }
+
+    #[test]
+    fn cached_percentiles_match_a_fresh_sort() {
+        // Pin the cached-sort read path against the clone-and-sort
+        // reference, with reads interleaved between pushes so the dirty
+        // flag is exercised on every rebuild.
+        let mut h = Histogram::default();
+        let mut raw: Vec<f64> = Vec::new();
+        let mut x = 7u64;
+        for i in 0..64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = (x >> 33) as f64 / 1e6;
+            h.push(v);
+            raw.push(v);
+            if i % 7 == 0 {
+                for q in [0.5, 0.95, 0.99] {
+                    assert_eq!(h.p(q), crate::metrics::percentile(&raw, q));
+                }
+            }
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 64);
+        assert_eq!(s.p50, crate::metrics::percentile(&raw, 0.5));
+        assert_eq!(s.p95, crate::metrics::percentile(&raw, 0.95));
+        assert_eq!(s.p99, crate::metrics::percentile(&raw, 0.99));
     }
 
     #[test]

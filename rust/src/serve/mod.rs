@@ -50,10 +50,10 @@ pub mod scheduler;
 
 pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
 pub use harness::{
-    batch_sweep, batch_sweep_json, config_from_args, failover_json, failover_sweep,
-    overlap_json, overlap_sweep, parse_batches, parse_chunk_counts, parse_depths, parse_rates,
-    parse_replica_failures, rate_sweep, sweep_json, write_bench, BatchPoint, FailoverPoint,
-    OverlapPoint,
+    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, config_from_args,
+    failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
+    parse_chunk_counts, parse_depths, parse_rates, parse_replica_failures, rate_sweep,
+    sweep_json, write_bench, AttribPoint, BatchPoint, FailoverPoint, OverlapPoint,
 };
 pub use metrics::{Histogram, Percentiles, ServeReport, TenantReport};
 pub use scheduler::{

@@ -543,8 +543,8 @@ pub enum SessionOutcome {
 pub struct SessionRecord {
     pub id: u64,
     pub tenant: usize,
-    /// Replica slot that served the session (`usize::MAX` if rejected).
-    pub replica: usize,
+    /// Replica slot that served the session (`None` if rejected).
+    pub replica: Option<usize>,
     pub arrival_ms: Ms,
     pub eligible_ms: Ms,
     pub start_ms: Ms,
@@ -815,7 +815,7 @@ impl Scheduler {
                     records[idx] = Some(SessionRecord {
                         id: req.id,
                         tenant: req.tenant,
-                        replica: usize::MAX,
+                        replica: None,
                         arrival_ms: req.arrival_ms,
                         eligible_ms: t,
                         start_ms: t,
@@ -924,7 +924,7 @@ impl Scheduler {
                     records[idx] = Some(SessionRecord {
                         id: req.id,
                         tenant: req.tenant,
-                        replica: ri,
+                        replica: Some(ri),
                         arrival_ms: req.arrival_ms,
                         eligible_ms: eligible_at[idx],
                         start_ms: start,
@@ -1287,7 +1287,7 @@ mod tests {
         assert!(out.records.iter().all(|r| r.outcome == SessionOutcome::Completed));
         // Request 0 (bound to replica 0 first) re-ran on replica 1.
         let r0 = out.records.iter().find(|r| r.id == 0).unwrap();
-        assert_eq!(r0.replica, 1);
+        assert_eq!(r0.replica, Some(1));
         assert_eq!(r0.start_ms, 40.0, "re-served after the survivor drains");
         assert_eq!(r0.finish_ms, 80.0);
         assert_eq!(out.makespan_ms, 80.0);

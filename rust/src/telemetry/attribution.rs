@@ -1,0 +1,577 @@
+//! Per-token critical-path attribution over virtual-time traces.
+//!
+//! After a decode, the engine's [`Trace`] holds every booked interval
+//! (main compute, shadow steps, expert loads / chunk streams, FFN tiles,
+//! LAN holds, stalls). This module turns that log into answers to "which
+//! resource bound this token?":
+//!
+//! * [`decompose`] — an exact time decomposition of one window: every
+//!   elementary interval between event boundaries is attributed to the
+//!   highest-priority phase active anywhere in the cluster during it
+//!   (stall > expert load > prefetch > expert compute > LAN > shadow >
+//!   main > idle), so the per-phase times partition the window: they sum
+//!   to the window length to f64 resolution (DESIGN.md §11 invariant A).
+//! * [`critical_path`] — a backward walk from the window's end through
+//!   the binding chain of events; the returned segments partition the
+//!   window, so their total equals the makespan (invariant B).
+//! * [`attribute`] — both of the above per token (plus a per-layer split
+//!   at the `embed-back` LAN arrivals, the layer boundaries of the
+//!   OD-MoE pipeline), packaged as [`DecodeAttribution`] with table and
+//!   JSON renderers for `od-moe decode --attribution`.
+
+use crate::cluster::Ms;
+use crate::trace::{Event, EventKind, NodeRef, Trace};
+use crate::util::json::{num, obj, Json};
+
+/// Number of attribution phases (the length of [`Phase::ALL`]).
+pub const NPHASES: usize = 8;
+
+/// What a slice of wall-clock decode time was spent on. Variant order is
+/// *binding priority*: when intervals overlap across nodes, the earlier
+/// variant wins the attribution (an expert load that overlaps main
+/// compute is the scarce resource — hiding loads behind compute is the
+/// paper's whole mechanism, so overlapped time counts against the load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Explicit I/O stall booked by the engine (expert wait past arrival).
+    Stall,
+    /// Demand expert weight transfer on a worker PCIe link.
+    ExpertLoad,
+    /// Speculative chunk stream (prefetch depth >= 1).
+    Prefetch,
+    /// Worker FFN tile.
+    ExpertCompute,
+    /// Shared LAN wire held.
+    Lan,
+    /// Shadow-node predictor step.
+    ShadowCompute,
+    /// Main-node non-expert compute.
+    MainCompute,
+    /// Nothing booked anywhere: a dependency wait.
+    Idle,
+}
+
+impl Phase {
+    /// All phases, highest binding priority first.
+    pub const ALL: [Phase; NPHASES] = [
+        Phase::Stall,
+        Phase::ExpertLoad,
+        Phase::Prefetch,
+        Phase::ExpertCompute,
+        Phase::Lan,
+        Phase::ShadowCompute,
+        Phase::MainCompute,
+        Phase::Idle,
+    ];
+
+    /// The phase a trace event belongs to (`None` for zero-width failure
+    /// markers, which occupy no time).
+    pub fn of(kind: EventKind) -> Option<Phase> {
+        Some(match kind {
+            EventKind::Stall => Phase::Stall,
+            EventKind::ExpertLoad => Phase::ExpertLoad,
+            EventKind::Prefetch => Phase::Prefetch,
+            EventKind::ExpertCompute => Phase::ExpertCompute,
+            EventKind::LanSend => Phase::Lan,
+            EventKind::ShadowCompute => Phase::ShadowCompute,
+            EventKind::MainCompute => Phase::MainCompute,
+            EventKind::Failure => return None,
+        })
+    }
+
+    /// Index into a `[_; NPHASES]` bucket array (priority order).
+    pub fn idx(self) -> usize {
+        Phase::ALL.iter().position(|&p| p == self).expect("phase in ALL")
+    }
+
+    /// Stable snake_case name (the JSON schema key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Stall => "stall",
+            Phase::ExpertLoad => "expert_load",
+            Phase::Prefetch => "prefetch",
+            Phase::ExpertCompute => "expert_compute",
+            Phase::Lan => "lan",
+            Phase::ShadowCompute => "shadow",
+            Phase::MainCompute => "main",
+            Phase::Idle => "idle",
+        }
+    }
+}
+
+/// Events that occupy time and overlap `(t0, t1)`, as clipped spans.
+fn clipped<'a>(trace: &'a Trace, t0: Ms, t1: Ms) -> Vec<(&'a Event, Ms, Ms, Phase)> {
+    trace
+        .events()
+        .iter()
+        .filter_map(|ev| {
+            let phase = Phase::of(ev.kind)?;
+            if ev.end <= ev.start || ev.end <= t0 || ev.start >= t1 {
+                return None;
+            }
+            Some((ev, ev.start.max(t0), ev.end.min(t1), phase))
+        })
+        .collect()
+}
+
+/// Exact phase decomposition of `[t0, t1]`: per-phase busy time under the
+/// priority rule, partitioning the window (the buckets sum to `t1 - t0`
+/// up to f64 rounding; property-tested in `rust/tests/telemetry_props.rs`).
+pub fn decompose(trace: &Trace, t0: Ms, t1: Ms) -> [Ms; NPHASES] {
+    let mut out = [0.0; NPHASES];
+    if t1 <= t0 {
+        return out;
+    }
+    let evs = clipped(trace, t0, t1);
+    let mut cuts: Vec<Ms> = Vec::with_capacity(2 * evs.len() + 2);
+    cuts.push(t0);
+    cuts.push(t1);
+    for &(_, s, e, _) in &evs {
+        cuts.push(s);
+        cuts.push(e);
+    }
+    cuts.sort_by(|a, b| a.partial_cmp(b).expect("finite trace times"));
+    cuts.dedup();
+    for w in cuts.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if b <= a {
+            continue;
+        }
+        // Consecutive cuts: any event overlapping (a, b) covers it whole,
+        // so the binding phase is constant on the interval.
+        let mut best = Phase::Idle;
+        for &(_, s, e, phase) in &evs {
+            if s <= a && e >= b && phase < best {
+                best = phase;
+            }
+        }
+        out[best.idx()] += b - a;
+    }
+    out
+}
+
+/// One link of the binding chain: either a booked event (clipped to the
+/// walk) or a dependency gap with nothing booked anywhere.
+#[derive(Debug, Clone)]
+pub struct CpSegment {
+    pub phase: Phase,
+    /// The node the binding event booked on (`None` for gaps).
+    pub node: Option<NodeRef>,
+    pub label: &'static str,
+    pub start: Ms,
+    pub end: Ms,
+}
+
+impl CpSegment {
+    pub fn dur(&self) -> Ms {
+        self.end - self.start
+    }
+}
+
+/// Walk the binding chain backward from `t1`: at each cursor, follow the
+/// highest-priority event covering it (earliest start wins ties — the
+/// resource was continuously held); where nothing covers the cursor,
+/// emit an [`Phase::Idle`] gap back to the latest earlier event end. The
+/// segments partition `[t0, t1]`, so their lengths sum to the makespan.
+pub fn critical_path(trace: &Trace, t0: Ms, t1: Ms) -> Vec<CpSegment> {
+    let evs = clipped(trace, t0, t1);
+    let mut segs: Vec<CpSegment> = Vec::new();
+    let mut cursor = t1;
+    while cursor > t0 {
+        let mut best: Option<(Phase, Ms, NodeRef, &'static str)> = None;
+        for &(ev, s, e, phase) in &evs {
+            if s < cursor && e >= cursor {
+                let cand = (phase, s, ev.node, ev.label);
+                best = Some(match best {
+                    None => cand,
+                    Some(b) if (cand.0, cand.1, cand.2) < (b.0, b.1, b.2) => cand,
+                    Some(b) => b,
+                });
+            }
+        }
+        match best {
+            Some((phase, s, node, label)) => {
+                segs.push(CpSegment { phase, node: Some(node), label, start: s, end: cursor });
+                cursor = s;
+            }
+            None => {
+                let prev = evs
+                    .iter()
+                    .map(|&(_, _, e, _)| e)
+                    .filter(|&e| e < cursor)
+                    .fold(t0, Ms::max);
+                segs.push(CpSegment {
+                    phase: Phase::Idle,
+                    node: None,
+                    label: "wait",
+                    start: prev,
+                    end: cursor,
+                });
+                cursor = prev;
+            }
+        }
+    }
+    segs.reverse();
+    segs
+}
+
+/// Phase decomposition of one slice of a token (between two consecutive
+/// `embed-back` arrivals = one expert layer; the tail past the last
+/// arrival is the LM head, `layer: None`).
+#[derive(Debug, Clone)]
+pub struct LayerSlice {
+    /// Expert layer index, or `None` for the LM-head tail.
+    pub layer: Option<usize>,
+    pub start: Ms,
+    pub end: Ms,
+    pub phase_ms: [Ms; NPHASES],
+}
+
+/// One decode iteration's attribution.
+#[derive(Debug, Clone)]
+pub struct TokenAttribution {
+    /// Decode iteration index (0 = first decoded token after prefill).
+    pub index: usize,
+    pub start: Ms,
+    pub end: Ms,
+    pub phase_ms: [Ms; NPHASES],
+    /// Per-layer split when the trace carries `embed-back` boundaries
+    /// (empty for engines without the OD-MoE layer pipeline).
+    pub layers: Vec<LayerSlice>,
+}
+
+impl TokenAttribution {
+    /// Measured iteration latency (the window length).
+    pub fn latency(&self) -> Ms {
+        self.end - self.start
+    }
+
+    /// Sum of the phase buckets (== latency, the invariant under test).
+    pub fn phases_total(&self) -> Ms {
+        self.phase_ms.iter().sum()
+    }
+
+    /// The dominant phase (largest bucket; binding priority breaks ties).
+    pub fn bound(&self) -> Phase {
+        let mut best = Phase::Idle;
+        let mut best_ms = f64::NEG_INFINITY;
+        for p in Phase::ALL {
+            let ms = self.phase_ms[p.idx()];
+            if ms > best_ms {
+                best = p;
+                best_ms = ms;
+            }
+        }
+        best
+    }
+}
+
+/// Attribution of a full decode: per-token decompositions plus the
+/// binding chain over the whole decode window.
+#[derive(Debug, Clone)]
+pub struct DecodeAttribution {
+    pub tokens: Vec<TokenAttribution>,
+    pub critical: Vec<CpSegment>,
+    /// Decode window start (first token span's start).
+    pub t0: Ms,
+    /// Decode window end (= makespan instant).
+    pub t1: Ms,
+}
+
+/// Attribute a decode from its trace and the engine's recorded per-token
+/// spans ([`crate::coordinator::OdMoeEngine::token_spans`]).
+pub fn attribute(trace: &Trace, spans: &[(Ms, Ms)]) -> DecodeAttribution {
+    let t0 = spans.first().map_or(0.0, |s| s.0);
+    let t1 = spans.last().map_or(0.0, |s| s.1);
+    let tokens = spans
+        .iter()
+        .enumerate()
+        .map(|(index, &(s, e))| {
+            let phase_ms = decompose(trace, s, e);
+            let layers = layer_slices(trace, s, e);
+            TokenAttribution { index, start: s, end: e, phase_ms, layers }
+        })
+        .collect();
+    DecodeAttribution { tokens, critical: critical_path(trace, t0, t1), t0, t1 }
+}
+
+/// Split `[t0, t1]` at the `embed-back` LAN arrivals inside it.
+fn layer_slices(trace: &Trace, t0: Ms, t1: Ms) -> Vec<LayerSlice> {
+    let mut bounds: Vec<Ms> = trace
+        .events()
+        .iter()
+        .filter(|ev| ev.kind == EventKind::LanSend && ev.label == "embed-back")
+        .filter_map(|ev| ev.arrival)
+        .filter(|&a| a > t0 && a <= t1)
+        .collect();
+    bounds.sort_by(|a, b| a.partial_cmp(b).expect("finite arrivals"));
+    bounds.dedup();
+    if bounds.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(bounds.len() + 1);
+    let mut prev = t0;
+    for (l, &b) in bounds.iter().enumerate() {
+        let phase_ms = decompose(trace, prev, b);
+        out.push(LayerSlice { layer: Some(l), start: prev, end: b, phase_ms });
+        prev = b;
+    }
+    if t1 > prev {
+        let phase_ms = decompose(trace, prev, t1);
+        out.push(LayerSlice { layer: None, start: prev, end: t1, phase_ms });
+    }
+    out
+}
+
+impl DecodeAttribution {
+    /// Total decode time attributed (sum over token windows).
+    pub fn total_ms(&self) -> Ms {
+        self.tokens.iter().map(|t| t.latency()).sum()
+    }
+
+    /// Per-phase totals across all tokens.
+    pub fn phase_totals(&self) -> [Ms; NPHASES] {
+        let mut out = [0.0; NPHASES];
+        for t in &self.tokens {
+            for i in 0..NPHASES {
+                out[i] += t.phase_ms[i];
+            }
+        }
+        out
+    }
+
+    /// Sum of critical-path segment lengths (== `t1 - t0`, invariant B).
+    pub fn critical_total(&self) -> Ms {
+        self.critical.iter().map(|s| s.dur()).sum()
+    }
+
+    /// Per-phase share of the critical path.
+    pub fn critical_by_phase(&self) -> [Ms; NPHASES] {
+        let mut out = [0.0; NPHASES];
+        for s in &self.critical {
+            out[s.phase.idx()] += s.dur();
+        }
+        out
+    }
+
+    /// The `--attribution` text table: one row per token, a totals row,
+    /// and the critical-path summary line.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:>5} {:>9}", "tok", "ms"));
+        for p in Phase::ALL {
+            out.push_str(&format!(" {:>9}", p.name()));
+        }
+        out.push_str("  bound\n");
+        out.push_str(&"-".repeat(15 + 10 * NPHASES + 7));
+        out.push('\n');
+        for t in &self.tokens {
+            out.push_str(&format!("{:>5} {:>9.3}", t.index, t.latency()));
+            for p in Phase::ALL {
+                out.push_str(&format!(" {:>9.3}", t.phase_ms[p.idx()]));
+            }
+            out.push_str(&format!("  {}\n", t.bound().name()));
+        }
+        let totals = self.phase_totals();
+        out.push_str(&format!("{:>5} {:>9.3}", "all", self.total_ms()));
+        for p in Phase::ALL {
+            out.push_str(&format!(" {:>9.3}", totals[p.idx()]));
+        }
+        out.push('\n');
+        let makespan = self.t1 - self.t0;
+        let cp = self.critical_by_phase();
+        let mut shares: Vec<String> = Vec::new();
+        if makespan > 0.0 {
+            for p in Phase::ALL {
+                let frac = cp[p.idx()] / makespan;
+                if frac > 0.005 {
+                    shares.push(format!("{} {:.1}%", p.name(), 100.0 * frac));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "critical path {:.3} ms over {} segments: {}\n",
+            self.critical_total(),
+            self.critical.len(),
+            shares.join(", ")
+        ));
+        out
+    }
+
+    /// The `--attribution` JSON document (schema in DESIGN.md §11).
+    pub fn to_json(&self) -> Json {
+        let phases_obj = |ms: &[Ms; NPHASES]| {
+            obj(Phase::ALL.iter().map(|p| (p.name(), num(ms[p.idx()]))).collect())
+        };
+        let tokens: Vec<Json> = self
+            .tokens
+            .iter()
+            .map(|t| {
+                let layers: Vec<Json> = t
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        obj(vec![
+                            (
+                                "layer",
+                                match l.layer {
+                                    Some(i) => Json::Num(i as f64),
+                                    None => Json::Str("lm_head".into()),
+                                },
+                            ),
+                            ("start_ms", num(l.start)),
+                            ("end_ms", num(l.end)),
+                            ("phases_ms", phases_obj(&l.phase_ms)),
+                        ])
+                    })
+                    .collect();
+                obj(vec![
+                    ("token", Json::Num(t.index as f64)),
+                    ("start_ms", num(t.start)),
+                    ("end_ms", num(t.end)),
+                    ("latency_ms", num(t.latency())),
+                    ("phases_ms", phases_obj(&t.phase_ms)),
+                    ("bound", Json::Str(t.bound().name().into())),
+                    ("layers", Json::Arr(layers)),
+                ])
+            })
+            .collect();
+        let critical: Vec<Json> = self
+            .critical
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("phase", Json::Str(s.phase.name().into())),
+                    (
+                        "node",
+                        match s.node {
+                            Some(NodeRef::Node(n)) => Json::Num(n as f64),
+                            Some(NodeRef::Lan) => Json::Str("lan".into()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("label", Json::Str(s.label.into())),
+                    ("start_ms", num(s.start)),
+                    ("end_ms", num(s.end)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str("odmoe.attribution.v1".into())),
+            ("makespan_ms", num(self.t1 - self.t0)),
+            ("total_ms", num(self.total_ms())),
+            ("phase_totals_ms", phases_obj(&self.phase_totals())),
+            ("critical_by_phase_ms", phases_obj(&self.critical_by_phase())),
+            ("tokens", Json::Arr(tokens)),
+            ("critical_path", Json::Arr(critical)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> Trace {
+        let mut t = Trace::new();
+        t.enabled = true;
+        // main [0,4), load [2,10) on worker 0 (overlap -> load wins [2,4)),
+        // gap [10,11), expert compute [11,14).
+        t.push(EventKind::MainCompute, 0, 0.0, 4.0, "M");
+        t.push(EventKind::ExpertLoad, 2, 2.0, 10.0, "EL");
+        t.push(EventKind::ExpertCompute, 2, 11.0, 14.0, "EC");
+        t
+    }
+
+    #[test]
+    fn decompose_partitions_the_window() {
+        let t = demo_trace();
+        let d = decompose(&t, 0.0, 14.0);
+        assert!((d[Phase::MainCompute.idx()] - 2.0).abs() < 1e-12, "{d:?}");
+        assert!((d[Phase::ExpertLoad.idx()] - 8.0).abs() < 1e-12, "{d:?}");
+        assert!((d[Phase::ExpertCompute.idx()] - 3.0).abs() < 1e-12, "{d:?}");
+        assert!((d[Phase::Idle.idx()] - 1.0).abs() < 1e-12, "{d:?}");
+        let sum: f64 = d.iter().sum();
+        assert!((sum - 14.0).abs() < 1e-9, "conservation: {sum}");
+    }
+
+    #[test]
+    fn decompose_clips_to_the_window() {
+        let t = demo_trace();
+        let d = decompose(&t, 3.0, 9.0);
+        assert!((d.iter().sum::<f64>() - 6.0).abs() < 1e-9);
+        assert_eq!(d[Phase::MainCompute.idx()], 0.0, "main fully shadowed by the load");
+        assert!((d[Phase::ExpertLoad.idx()] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_partitions_the_makespan() {
+        let t = demo_trace();
+        let cp = critical_path(&t, 0.0, 14.0);
+        let total: f64 = cp.iter().map(|s| s.dur()).sum();
+        assert!((total - 14.0).abs() < 1e-9, "{cp:?}");
+        // Chain: main-ish prefix, load, gap, compute — contiguous.
+        for w in cp.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "segments must be contiguous");
+        }
+        assert_eq!(cp.first().unwrap().start, 0.0);
+        assert_eq!(cp.last().unwrap().end, 14.0);
+        assert_eq!(cp.last().unwrap().phase, Phase::ExpertCompute);
+        assert!(cp.iter().any(|s| s.phase == Phase::Idle && s.label == "wait"));
+    }
+
+    #[test]
+    fn failure_markers_occupy_no_time() {
+        let mut t = demo_trace();
+        t.push(EventKind::Failure, 2, 5.0, 5.0, "fail");
+        let d = decompose(&t, 0.0, 14.0);
+        assert!((d.iter().sum::<f64>() - 14.0).abs() < 1e-9);
+        let cp = critical_path(&t, 0.0, 14.0);
+        assert!(cp.iter().all(|s| s.label != "fail"));
+    }
+
+    #[test]
+    fn attribute_splits_layers_at_embed_back_arrivals() {
+        let mut t = demo_trace();
+        // Two layer boundaries inside the token, then an LM-head tail.
+        t.push_lan(3.9, 4.0, 6.0, "embed-back");
+        t.push_lan(9.0, 9.5, 10.0, "embed-back");
+        let a = attribute(&t, &[(0.0, 14.0)]);
+        assert_eq!(a.tokens.len(), 1);
+        let tok = &a.tokens[0];
+        assert!((tok.phases_total() - tok.latency()).abs() < 1e-9);
+        assert_eq!(tok.layers.len(), 3);
+        assert_eq!(tok.layers[0].layer, Some(0));
+        assert_eq!(tok.layers[1].layer, Some(1));
+        assert_eq!(tok.layers[2].layer, None, "tail is the LM head");
+        assert_eq!(tok.layers[0].end, 6.0);
+        assert_eq!(tok.layers[2].end, 14.0);
+        let sliced: f64 = tok.layers.iter().map(|l| l.end - l.start).sum();
+        assert!((sliced - tok.latency()).abs() < 1e-9);
+        assert_eq!(tok.bound(), Phase::ExpertLoad);
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let t = demo_trace();
+        let a = attribute(&t, &[(0.0, 10.0), (10.0, 14.0)]);
+        let table = a.render_table();
+        assert!(table.contains("expert_load"), "{table}");
+        assert!(table.contains("critical path"), "{table}");
+        let j = a.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "odmoe.attribution.v1");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn empty_trace_is_all_idle() {
+        let t = Trace::new();
+        let d = decompose(&t, 0.0, 5.0);
+        assert_eq!(d[Phase::Idle.idx()], 5.0);
+        let cp = critical_path(&t, 0.0, 5.0);
+        assert_eq!(cp.len(), 1);
+        assert_eq!(cp[0].phase, Phase::Idle);
+    }
+}

@@ -1,0 +1,227 @@
+//! Regression gate for `od-moe bench`: diff a fresh `BENCH_perf.json`
+//! against the committed baseline with a relative noise band.
+//!
+//! `BENCH_perf.json` has two sections (DESIGN.md §11):
+//!
+//! * `"virtual"` — deterministic virtual-time metrics (simulated decode
+//!   makespans, scheduler sweep percentiles). These only move when the
+//!   *modeled* performance changes, so the gate compares them key by key:
+//!   a relative increase beyond the noise band is a regression and
+//!   `od-moe bench --ci` exits nonzero.
+//! * `"wall"` — wall-clock microbench distributions. Machine-dependent,
+//!   never gated; kept for humans reading the step summary.
+//!
+//! A baseline containing `"bootstrap": true` (the state this repo ships
+//! in until a real baseline is committed) makes the gate a no-op that
+//! prints regeneration instructions — the documented escape hatch for
+//! intentional perf changes is the same command:
+//! `od-moe bench --write-baseline`.
+
+use anyhow::{bail, Result};
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One metric's baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct GateDelta {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// `(current - baseline) / baseline` (positive = slower).
+    pub delta_frac: f64,
+}
+
+/// Outcome of gating one `BENCH_perf.json` against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct GateOutcome {
+    /// Metrics present in both files and compared.
+    pub checked: usize,
+    /// Beyond the band in the slow direction.
+    pub regressions: Vec<GateDelta>,
+    /// Beyond the band in the fast direction (informational; a candidate
+    /// for a deliberate baseline refresh).
+    pub improvements: Vec<GateDelta>,
+    /// Baseline keys missing from the current run (a silently dropped
+    /// benchmark is treated as a failure, not a pass).
+    pub missing: Vec<String>,
+    /// The baseline was a bootstrap placeholder; nothing was compared.
+    pub bootstrap: bool,
+}
+
+impl GateOutcome {
+    /// True iff the gate allows the change through.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+
+    /// Human-readable report for the CLI.
+    pub fn report(&self, band: f64) -> String {
+        let mut out = String::new();
+        if self.bootstrap {
+            out.push_str(
+                "perf gate: baseline is a bootstrap placeholder — nothing compared.\n\
+                 Pin it with `od-moe bench --write-baseline` and commit the file.\n",
+            );
+            return out;
+        }
+        let _ = writeln!(
+            out,
+            "perf gate: {} metric(s) checked, band ±{:.1}%: {} regression(s), \
+             {} improvement(s), {} missing",
+            self.checked,
+            100.0 * band,
+            self.regressions.len(),
+            self.improvements.len(),
+            self.missing.len(),
+        );
+        for d in &self.regressions {
+            let _ = writeln!(
+                out,
+                "  REGRESSION {:<44} {:>12.6} -> {:>12.6} ({:+.1}%)",
+                d.name,
+                d.baseline,
+                d.current,
+                100.0 * d.delta_frac
+            );
+        }
+        for d in &self.improvements {
+            let _ = writeln!(
+                out,
+                "  improved   {:<44} {:>12.6} -> {:>12.6} ({:+.1}%)",
+                d.name,
+                d.baseline,
+                d.current,
+                100.0 * d.delta_frac
+            );
+        }
+        for name in &self.missing {
+            let _ = writeln!(out, "  MISSING    {name} (in baseline, not produced by this run)");
+        }
+        if !self.passed() {
+            out.push_str(
+                "intentional change? regenerate with `od-moe bench --write-baseline` \
+                 and commit the updated baseline.\n",
+            );
+        }
+        out
+    }
+}
+
+/// Compare the `"virtual"` sections of two `BENCH_perf.json` documents.
+/// `band` is the relative noise band (e.g. 0.02 = ±2%).
+pub fn gate(current: &Json, baseline: &Json, band: f64) -> Result<GateOutcome> {
+    if !(0.0..1.0).contains(&band) {
+        bail!("noise band must be in [0, 1), got {band}");
+    }
+    let mut out = GateOutcome::default();
+    if let Ok(b) = baseline.get("bootstrap") {
+        if *b == Json::Bool(true) {
+            out.bootstrap = true;
+            return Ok(out);
+        }
+    }
+    let base = baseline.get("virtual")?.as_obj()?;
+    let cur = current.get("virtual")?.as_obj()?;
+    for (name, bv) in base {
+        let b = bv.as_f64()?;
+        let Some(cv) = cur.get(name) else {
+            out.missing.push(name.clone());
+            continue;
+        };
+        let c = cv.as_f64()?;
+        out.checked += 1;
+        let delta_frac = (c - b) / b.abs().max(1e-12);
+        let d = GateDelta { name: name.clone(), baseline: b, current: c, delta_frac };
+        if delta_frac > band {
+            out.regressions.push(d);
+        } else if delta_frac < -band {
+            out.improvements.push(d);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perf(pairs: &[(&str, f64)]) -> Json {
+        let virt: std::collections::BTreeMap<String, Json> =
+            pairs.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect();
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("virtual".to_string(), Json::Obj(virt));
+        Json::Obj(top)
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let a = perf(&[("decode/uniform", 100.0), ("serve/p99", 250.0)]);
+        let g = gate(&a, &a, 0.02).unwrap();
+        assert!(g.passed());
+        assert_eq!(g.checked, 2);
+        assert!(g.regressions.is_empty() && g.improvements.is_empty());
+    }
+
+    #[test]
+    fn injected_slowdown_beyond_band_fails() {
+        // The acceptance-criterion test: a synthetic 10% slowdown on one
+        // metric must trip a 2% band.
+        let base = perf(&[("decode/uniform", 100.0), ("serve/p99", 250.0)]);
+        let cur = perf(&[("decode/uniform", 110.0), ("serve/p99", 250.0)]);
+        let g = gate(&cur, &base, 0.02).unwrap();
+        assert!(!g.passed());
+        assert_eq!(g.regressions.len(), 1);
+        assert_eq!(g.regressions[0].name, "decode/uniform");
+        assert!((g.regressions[0].delta_frac - 0.10).abs() < 1e-12);
+        assert!(g.report(0.02).contains("REGRESSION decode/uniform"), "{}", g.report(0.02));
+    }
+
+    #[test]
+    fn slowdown_within_band_passes() {
+        let base = perf(&[("decode/uniform", 100.0)]);
+        let cur = perf(&[("decode/uniform", 101.0)]);
+        let g = gate(&cur, &base, 0.02).unwrap();
+        assert!(g.passed(), "1% is inside a 2% band");
+    }
+
+    #[test]
+    fn speedup_is_reported_but_passes() {
+        let base = perf(&[("decode/uniform", 100.0)]);
+        let cur = perf(&[("decode/uniform", 80.0)]);
+        let g = gate(&cur, &base, 0.02).unwrap();
+        assert!(g.passed());
+        assert_eq!(g.improvements.len(), 1);
+    }
+
+    #[test]
+    fn dropped_benchmark_fails() {
+        let base = perf(&[("decode/uniform", 100.0), ("gone", 5.0)]);
+        let cur = perf(&[("decode/uniform", 100.0)]);
+        let g = gate(&cur, &base, 0.02).unwrap();
+        assert!(!g.passed());
+        assert_eq!(g.missing, vec!["gone".to_string()]);
+    }
+
+    #[test]
+    fn new_benchmark_in_current_is_fine() {
+        let base = perf(&[("decode/uniform", 100.0)]);
+        let cur = perf(&[("decode/uniform", 100.0), ("brand_new", 1.0)]);
+        assert!(gate(&cur, &base, 0.02).unwrap().passed());
+    }
+
+    #[test]
+    fn bootstrap_baseline_skips_comparison() {
+        let base = Json::parse(r#"{"bootstrap": true}"#).unwrap();
+        let cur = perf(&[("decode/uniform", 100.0)]);
+        let g = gate(&cur, &base, 0.02).unwrap();
+        assert!(g.bootstrap && g.passed());
+        assert!(g.report(0.02).contains("bootstrap"));
+    }
+
+    #[test]
+    fn bad_band_rejected() {
+        let a = perf(&[]);
+        assert!(gate(&a, &a, 1.5).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability layer: critical-path attribution, a unified metrics
+//! registry, and the perf-regression gate behind `od-moe bench`
+//! (DESIGN.md §11).
+//!
+//! Three pillars, all virtual-time-native and dependency-free:
+//!
+//! * [`attribution`] — walk a [`crate::trace::Trace`] after a decode and
+//!   decompose every token (and layer) into binding phases, with two
+//!   machine-checked invariants: phase times partition the measured
+//!   iteration latency, and the critical path partitions the makespan.
+//!   Surfaced by `od-moe decode --attribution` and aggregated per rate ×
+//!   fleet into `BENCH_attrib.json` by the serve harness.
+//! * [`registry`] — named counters/gauges/histograms with one JSONL
+//!   export schema shared by `decode`, `serve`, and `plan`
+//!   (`METRICS_<cmd>.jsonl`), replacing ad-hoc counter plumbing.
+//! * [`gate`] — the `od-moe bench --ci` regression gate: diff the
+//!   deterministic `"virtual"` section of `BENCH_perf.json` against the
+//!   committed baseline with a relative noise band, exit nonzero on a
+//!   regression or a silently dropped benchmark.
+
+pub mod attribution;
+pub mod gate;
+pub mod registry;
+
+pub use attribution::{
+    attribute, critical_path, decompose, CpSegment, DecodeAttribution, LayerSlice, Phase,
+    TokenAttribution, NPHASES,
+};
+pub use gate::{gate, GateDelta, GateOutcome};
+pub use registry::Registry;

@@ -1,0 +1,206 @@
+//! Unified metrics registry: named counters, gauges, and histograms with
+//! one structured JSONL export schema shared by `decode`, `serve`, and
+//! `plan` (DESIGN.md §11).
+//!
+//! The registry replaces ad-hoc counter plumbing (the engine's private
+//! `failovers` field, loose abort/load counters threaded through return
+//! structs): producers increment named metrics at the event site, and any
+//! consumer — a CLI summary line, a `METRICS_*.jsonl` artifact, a test —
+//! reads them back by name. Names are dotted paths
+//! (`engine.failovers`, `scheduler.rejected`, `plan.candidates`);
+//! everything is `BTreeMap`-backed so exports are deterministically
+//! ordered.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{num, obj, Json};
+
+/// A process-local metrics registry. Cheap to create; `Default` is empty.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Vec<f64>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to the named counter (creating it at zero).
+    pub fn counter_add(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current value of a counter (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge_set(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one observation into the named histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Raw samples of a histogram (empty if never observed).
+    pub fn histogram(&self, name: &str) -> &[f64] {
+        self.histograms.get(name).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Fold `other` into `self`: counters add, gauges take `other`'s
+    /// value, histogram samples append.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().extend_from_slice(v);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.gauges.clear();
+        self.histograms.clear();
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Export every metric as JSON Lines, one object per line, counters
+    /// then gauges then histograms, each sorted by name. `source` tags
+    /// which subcommand produced the line — the one schema shared by
+    /// `decode`, `serve`, and `plan`:
+    ///
+    /// ```text
+    /// {"kind":"counter","name":"engine.failovers","source":"decode","value":2}
+    /// {"kind":"gauge","name":"engine.loads_per_token","source":"decode","value":3.9}
+    /// {"kind":"histogram","name":"...","source":"...","count":..,"mean":..,
+    ///  "min":..,"max":..,"p50":..,"p95":..,"p99":..}
+    /// ```
+    pub fn export_jsonl(&self, source: &str) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let line = obj(vec![
+                ("kind", Json::Str("counter".into())),
+                ("name", Json::Str(name.clone())),
+                ("source", Json::Str(source.into())),
+                ("value", Json::Num(*v as f64)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        for (name, v) in &self.gauges {
+            let line = obj(vec![
+                ("kind", Json::Str("gauge".into())),
+                ("name", Json::Str(name.clone())),
+                ("source", Json::Str(source.into())),
+                ("value", num(*v)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        for (name, samples) in &self.histograms {
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+            let p = |q: f64| crate::metrics::percentile_sorted(&sorted, q);
+            let line = obj(vec![
+                ("kind", Json::Str("histogram".into())),
+                ("name", Json::Str(name.clone())),
+                ("source", Json::Str(source.into())),
+                ("count", Json::Num(samples.len() as f64)),
+                ("mean", num(crate::metrics::mean(samples))),
+                ("min", num(sorted.first().copied().unwrap_or(0.0))),
+                ("max", num(sorted.last().copied().unwrap_or(0.0))),
+                ("p50", num(p(0.5))),
+                ("p95", num(p(0.95))),
+                ("p99", num(p(0.99))),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_roundtrip() {
+        let mut r = Registry::new();
+        r.counter_add("engine.failovers", 2);
+        r.counter_add("engine.failovers", 3);
+        r.gauge_set("engine.loads_per_token", 3.5);
+        r.gauge_set("engine.loads_per_token", 3.9);
+        r.observe("serve.ttft_ms", 10.0);
+        r.observe("serve.ttft_ms", 30.0);
+        assert_eq!(r.counter("engine.failovers"), 5);
+        assert_eq!(r.counter("never.touched"), 0);
+        assert_eq!(r.gauge("engine.loads_per_token"), Some(3.9));
+        assert_eq!(r.histogram("serve.ttft_ms"), &[10.0, 30.0]);
+        assert!(!r.is_empty());
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn merge_adds_counters_and_appends_samples() {
+        let mut a = Registry::new();
+        a.counter_add("c", 1);
+        a.observe("h", 1.0);
+        a.gauge_set("g", 1.0);
+        let mut b = Registry::new();
+        b.counter_add("c", 2);
+        b.observe("h", 2.0);
+        b.gauge_set("g", 2.0);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3);
+        assert_eq!(a.histogram("h"), &[1.0, 2.0]);
+        assert_eq!(a.gauge("g"), Some(2.0), "gauge takes the newer value");
+    }
+
+    #[test]
+    fn jsonl_export_is_one_valid_object_per_line() {
+        let mut r = Registry::new();
+        r.counter_add("b.count", 7);
+        r.counter_add("a.count", 1);
+        r.gauge_set("z.gauge", 0.25);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.observe("lat_ms", v);
+        }
+        let text = r.export_jsonl("decode");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // Counters sorted by name, then gauges, then histograms.
+        assert!(lines[0].contains("\"a.count\""), "{text}");
+        assert!(lines[1].contains("\"b.count\""), "{text}");
+        assert!(lines[2].contains("\"z.gauge\""), "{text}");
+        assert!(lines[3].contains("\"histogram\""), "{text}");
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("source").unwrap().as_str().unwrap(), "decode");
+            assert!(j.get("kind").is_ok() && j.get("name").is_ok());
+        }
+        let h = Json::parse(lines[3]).unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(h.get("min").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(h.get("max").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(h.get("p50").unwrap().as_f64().unwrap(), 2.0);
+    }
+}

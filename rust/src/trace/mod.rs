@@ -48,12 +48,35 @@ impl EventKind {
     }
 }
 
+/// Where an event was booked: a numbered node, or the shared LAN wire.
+///
+/// Replaces the old `usize::MAX = shared LAN` sentinel so consumers
+/// (timeline rendering, critical-path attribution) match on the variant
+/// instead of comparing against a magic id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum NodeRef {
+    /// A cluster node by id (0 = main, 1 = shadow, 2+i = worker i).
+    Node(usize),
+    /// The shared LAN segment (no per-node row).
+    Lan,
+}
+
+impl NodeRef {
+    /// The node id, when this is a [`NodeRef::Node`].
+    pub fn index(self) -> Option<usize> {
+        match self {
+            NodeRef::Node(n) => Some(n),
+            NodeRef::Lan => None,
+        }
+    }
+}
+
 /// One booked interval on one node.
 #[derive(Debug, Clone)]
 pub struct Event {
     pub kind: EventKind,
-    /// Node id (usize::MAX = shared LAN).
-    pub node: usize,
+    /// Where the interval was booked ([`NodeRef::Lan`] = shared wire).
+    pub node: NodeRef,
     pub start: Ms,
     pub end: Ms,
     /// For LAN messages: when the payload reaches its destination
@@ -101,7 +124,15 @@ impl Trace {
     pub fn push(&mut self, kind: EventKind, node: usize, start: Ms, end: Ms, label: &'static str) {
         if self.enabled {
             let class = self.class_of(node);
-            self.events.push(Event { kind, node, start, end, arrival: None, label, class });
+            self.events.push(Event {
+                kind,
+                node: NodeRef::Node(node),
+                start,
+                end,
+                arrival: None,
+                label,
+                class,
+            });
         }
     }
 
@@ -111,7 +142,7 @@ impl Trace {
         if self.enabled {
             self.events.push(Event {
                 kind: EventKind::LanSend,
-                node: usize::MAX,
+                node: NodeRef::Lan,
                 start,
                 end,
                 arrival: Some(arrival),
@@ -146,13 +177,16 @@ impl Trace {
         let span = (t1 - t0).max(1e-9);
         let mut rows: Vec<Vec<char>> = vec![vec![' '; cols]; node_names.len()];
         for ev in &self.events {
-            if ev.node >= node_names.len() || ev.end < t0 || ev.start > t1 {
+            let Some(node) = ev.node.index().filter(|&n| n < node_names.len()) else {
+                continue;
+            };
+            if ev.end < t0 || ev.start > t1 {
                 continue;
             }
             let a = (((ev.start - t0) / span) * cols as f64).floor().max(0.0) as usize;
             let b = (((ev.end - t0) / span) * cols as f64).ceil().min(cols as f64) as usize;
             for c in a..b.max(a + 1).min(cols) {
-                rows[ev.node][c] = ev.kind.glyph();
+                rows[node][c] = ev.kind.glyph();
             }
         }
         let labels: Vec<String> = node_names
@@ -217,6 +251,21 @@ mod tests {
         t.clear();
         assert_eq!(t.class_of(1), Some("jetson"));
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn lan_events_have_no_node_row() {
+        let mut t = Trace::new();
+        t.enabled = true;
+        t.push(EventKind::MainCompute, 0, 0.0, 1.0, "M0");
+        t.push_lan(1.0, 2.0, 2.5, "embed");
+        assert_eq!(t.events()[0].node, NodeRef::Node(0));
+        assert_eq!(t.events()[0].node.index(), Some(0));
+        assert_eq!(t.events()[1].node, NodeRef::Lan);
+        assert_eq!(t.events()[1].node.index(), None);
+        // A LAN event never paints a row, even with rows present.
+        let s = t.render_timeline(0.0, 3.0, 12, &["main".into()]);
+        assert!(!s.contains('·'), "{s}");
     }
 
     #[test]

@@ -7,13 +7,21 @@
 
 use std::time::Instant;
 
-/// One benchmark's timing summary (nanoseconds per iteration).
+use crate::util::json::{num, obj, Json};
+
+/// One benchmark's timing summary (nanoseconds per iteration), carrying
+/// the full per-invocation distribution shape (min/max/stddev alongside
+/// mean/p50/p95) so `od-moe bench` can export honest wall-clock spreads
+/// instead of a single point estimate.
 #[derive(Debug, Clone)]
 pub struct Summary {
     pub name: String,
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
     pub samples: usize,
 }
 
@@ -26,6 +34,20 @@ impl Summary {
             fmt_ns(self.p50_ns),
             fmt_ns(self.p95_ns),
         );
+    }
+
+    /// JSON export for `BENCH_perf.json`'s wall-clock section.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ns", num(self.mean_ns)),
+            ("p50_ns", num(self.p50_ns)),
+            ("p95_ns", num(self.p95_ns)),
+            ("min_ns", num(self.min_ns)),
+            ("max_ns", num(self.max_ns)),
+            ("stddev_ns", num(self.stddev_ns)),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
     }
 }
 
@@ -71,6 +93,9 @@ pub fn run<F: FnMut()>(name: &str, samples: usize, iters_per_sample: usize, mut 
         mean_ns: mean,
         p50_ns: p(0.5),
         p95_ns: p(0.95),
+        min_ns: per_iter.first().copied().unwrap_or(0.0),
+        max_ns: per_iter.last().copied().unwrap_or(0.0),
+        stddev_ns: crate::metrics::std_dev(&per_iter),
         samples,
     }
 }
@@ -88,5 +113,12 @@ mod tests {
         assert!(s.mean_ns > 0.0);
         assert!(s.p50_ns <= s.p95_ns);
         assert_eq!(s.samples, 5);
+        assert!(s.min_ns <= s.p50_ns && s.p95_ns <= s.max_ns);
+        assert!(s.stddev_ns >= 0.0 && s.stddev_ns.is_finite());
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "spin");
+        assert_eq!(j.get("samples").unwrap().as_usize().unwrap(), 5);
+        let (lo, hi) = (j.get("min_ns").unwrap(), j.get("max_ns").unwrap());
+        assert!(lo.as_f64().unwrap() <= hi.as_f64().unwrap());
     }
 }

@@ -146,6 +146,19 @@ impl std::fmt::Display for Json {
     }
 }
 
+/// Build a [`Json::Obj`] from `(key, value)` pairs (duplicate keys keep
+/// the last value, matching JSON object semantics).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// A [`Json::Num`] rounded to 1e-6 so artifact files stay byte-stable
+/// across platforms (last-digit FP noise would otherwise leak into the
+/// committed BENCH_*.json diffs).
+pub fn num(v: f64) -> Json {
+    Json::Num((v * 1e6).round() / 1e6)
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -351,6 +364,13 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn obj_and_num_builders() {
+        let v = obj(vec![("a", num(1.0000000004)), ("b", Json::Str("x".into()))]);
+        assert_eq!(v.to_string(), r#"{"a":1,"b":"x"}"#, "num rounds to 1e-6");
+        assert_eq!(num(0.1234567).to_string(), "0.123457");
     }
 
     #[test]

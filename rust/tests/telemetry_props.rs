@@ -1,0 +1,293 @@
+//! Property tests for critical-path attribution (DESIGN.md §11): the two
+//! conservation invariants — phase decompositions partition every token
+//! window (A) and the critical path partitions the makespan (B) — plus
+//! chunks=1 equivalence with the monolithic load path, over randomized
+//! decode-shaped booking pipelines on uniform and mixed fleets and under
+//! injected fail-stop worker failures. Runtime-free: everything runs at
+//! the [`Cluster`] level.
+
+use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
+use odmoe::model::rng::Rng;
+use odmoe::telemetry::{attribute, critical_path, decompose, Phase};
+use odmoe::trace::EventKind;
+use odmoe::util::prop::check;
+
+const CASES: usize = 64;
+const EMBED_BYTES: f64 = 16.0 * 1024.0;
+
+fn random_class(rng: &mut Rng) -> NodeClass {
+    if rng.uniform() < 0.5 {
+        NodeClass::rtx3090()
+    } else {
+        NodeClass::jetson()
+    }
+}
+
+/// A uniform RTX-3090 fleet or a mixed 3090 + Jetson fleet, trace on.
+fn random_fleet(rng: &mut Rng) -> Cluster {
+    let mut c = if rng.uniform() < 0.5 {
+        Cluster::new(HardwareProfile::rtx3090(), 2 + rng.below(3))
+    } else {
+        let mut classes = vec![NodeClass::rtx3090(), NodeClass::jetson()];
+        for _ in 0..rng.below(3) {
+            classes.push(random_class(rng));
+        }
+        Cluster::with_classes(HardwareProfile::rtx3090(), classes)
+    };
+    c.trace.enabled = true;
+    c
+}
+
+/// First alive worker at or after `pref` (wrapping).
+fn alive_worker(c: &Cluster, pref: usize) -> usize {
+    let n = c.workers.len();
+    for i in 0..n {
+        let w = (pref + i) % n;
+        if c.workers[w].is_alive() {
+            return w;
+        }
+    }
+    panic!("no alive worker");
+}
+
+/// Book a decode-shaped pipeline: per token, a few expert layers (embed
+/// broadcast -> expert stream -> FFN -> embed-back) plus main/shadow
+/// work and engine-style stall markers. With `inject_failure`, one
+/// worker fail-stops at a random token boundary and later layers route
+/// around it. Returns the recorded per-token spans.
+fn book_decode(c: &mut Cluster, rng: &mut Rng, inject_failure: bool) -> Vec<(f64, f64)> {
+    let n = c.workers.len();
+    let tokens = 2 + rng.below(3);
+    let layers = 2 + rng.below(3);
+    let mut fail_after_token = None;
+    if inject_failure && n > 1 {
+        fail_after_token = Some(rng.below(tokens));
+    }
+    let mut spans = Vec::with_capacity(tokens);
+    let mut t = 0.0_f64;
+    for tok in 0..tokens {
+        let t0 = t;
+        if fail_after_token == Some(tok) && c.alive_workers() > 1 {
+            c.fail_worker(rng.below(n), t);
+        }
+        if rng.uniform() < 0.7 {
+            let dur = 0.05 + rng.uniform() * 0.5;
+            c.trace.push(EventKind::ShadowCompute, c.shadow.id, t, t + dur, "sep");
+        }
+        for _ in 0..layers {
+            let w = alive_worker(c, rng.below(n));
+            let arrival = c.lan_send(t, EMBED_BYTES, "embed");
+            let bytes = c.profile.expert_bytes * (0.3 + rng.uniform());
+            let done = if rng.uniform() < 0.5 {
+                let chunks = 1 + rng.below(4);
+                c.expert_load_chunked(w, arrival, bytes, chunks, EventKind::ExpertLoad).done()
+            } else {
+                c.expert_load(w, arrival, bytes).1
+            };
+            if done > arrival {
+                c.trace.push(EventKind::Stall, c.workers[w].id, arrival, done, "stall");
+            }
+            let (_, fin) = c.expert_compute(w, done, 0.3 + rng.uniform() * 1.5);
+            t = c.lan_send(fin, EMBED_BYTES, "embed-back");
+        }
+        let head = 0.05 + rng.uniform() * 0.3;
+        c.trace.push(EventKind::MainCompute, c.main.id, t, t + head, "lm-head");
+        t += head;
+        spans.push((t0, t));
+    }
+    spans
+}
+
+/// Invariant A: per-token phase buckets are non-negative and sum to the
+/// measured iteration latency, for every token and every layer slice, on
+/// uniform and mixed fleets with random failure injection.
+#[test]
+fn prop_token_decomposition_sums_to_latency() {
+    check("phase buckets partition each token", CASES, 601, |rng| {
+        let mut c = random_fleet(rng);
+        let inject = rng.uniform() < 0.4;
+        let spans = book_decode(&mut c, rng, inject);
+        let a = attribute(&c.trace, &spans);
+        for tok in &a.tokens {
+            if tok.phase_ms.iter().any(|&ms| ms < 0.0) {
+                return Err(format!("negative bucket in token {}: {:?}", tok.index, tok.phase_ms));
+            }
+            let (sum, lat) = (tok.phases_total(), tok.latency());
+            if (sum - lat).abs() > 1e-9 {
+                return Err(format!("token {}: phases {sum} != latency {lat}", tok.index));
+            }
+            for l in &tok.layers {
+                let lsum: f64 = l.phase_ms.iter().sum();
+                if (lsum - (l.end - l.start)).abs() > 1e-9 {
+                    return Err(format!("layer slice {:?}: {lsum} != span", l.layer));
+                }
+            }
+        }
+        // The totals row of the rendered table obeys the same invariant.
+        let grand: f64 = a.phase_totals().iter().sum();
+        if (grand - a.total_ms()).abs() > 1e-9 {
+            return Err(format!("phase totals {grand} != total {}", a.total_ms()));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant B: the critical path is a contiguous partition of
+/// `[t0, t1]` — segments abut exactly, the first starts at the window
+/// start, the last ends at the makespan instant, and the lengths sum to
+/// the makespan. Failure markers never appear on the chain.
+#[test]
+fn prop_critical_path_partitions_the_makespan() {
+    check("critical path == makespan", CASES, 602, |rng| {
+        let mut c = random_fleet(rng);
+        let inject = rng.uniform() < 0.4;
+        let spans = book_decode(&mut c, rng, inject);
+        let t0 = spans.first().expect("tokens").0;
+        let t1 = spans.last().expect("tokens").1;
+        let cp = critical_path(&c.trace, t0, t1);
+        if cp.is_empty() {
+            return Err("empty critical path over a non-empty decode".into());
+        }
+        for w in cp.windows(2) {
+            if w[0].end != w[1].start {
+                return Err(format!("gap in chain: {} -> {}", w[0].end, w[1].start));
+            }
+        }
+        let first = cp.first().expect("non-empty");
+        let last = cp.last().expect("non-empty");
+        if first.start != t0 || last.end != t1 {
+            return Err(format!("chain [{}, {}] != window [{t0}, {t1}]", first.start, last.end));
+        }
+        let total: f64 = cp.iter().map(|s| s.dur()).sum();
+        if (total - (t1 - t0)).abs() > 1e-9 {
+            return Err(format!("critical total {total} != makespan {}", t1 - t0));
+        }
+        if cp.iter().any(|s| s.label == "fail") {
+            return Err("zero-width failure marker on the critical path".into());
+        }
+        // Idle gaps carry no node; booked segments always do.
+        for s in &cp {
+            if (s.phase == Phase::Idle) != s.node.is_none() {
+                return Err(format!("node/phase mismatch: {:?} on {:?}", s.node, s.phase));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One random per-layer booking op, shared by both sides of the chunks=1
+/// equivalence: (worker, dispatch gap, bytes, FFN ms).
+type LayerOp = (usize, f64, f64, f64);
+
+fn random_plan(rng: &mut Rng, n_workers: usize) -> Vec<Vec<LayerOp>> {
+    let mut plan = Vec::new();
+    for _ in 0..2 + rng.below(2) {
+        let mut ops = Vec::new();
+        for _ in 0..2 + rng.below(3) {
+            let w = rng.below(n_workers);
+            let gap = rng.uniform() * 2.0;
+            let bytes = 1e6 + rng.uniform() * 1e8;
+            let base = 0.3 + rng.uniform() * 1.5;
+            ops.push((w, gap, bytes, base));
+        }
+        plan.push(ops);
+    }
+    plan
+}
+
+fn apply_plan(c: &mut Cluster, plan: &[Vec<LayerOp>], chunked: bool) -> Vec<(f64, f64)> {
+    let mut spans = Vec::with_capacity(plan.len());
+    let mut t = 0.0_f64;
+    for tok in plan {
+        let t0 = t;
+        for &(w, gap, bytes, base) in tok {
+            let arrival = c.lan_send(t + gap, EMBED_BYTES, "embed");
+            let done = if chunked {
+                c.expert_load_chunked(w, arrival, bytes, 1, EventKind::ExpertLoad).done()
+            } else {
+                c.expert_load(w, arrival, bytes).1
+            };
+            let (_, fin) = c.expert_compute(w, done, base);
+            t = c.lan_send(fin, EMBED_BYTES, "embed-back");
+        }
+        spans.push((t0, t));
+    }
+    spans
+}
+
+/// Chunk count 1 must attribute bit-identically to the monolithic load
+/// path: same token spans, same phase buckets, same critical path — on
+/// uniform and mixed fleets, with random stragglers.
+#[test]
+fn prop_chunks_one_attribution_matches_monolithic() {
+    check("chunks=1 attribution == monolithic", CASES, 603, |rng| {
+        let mut classes = vec![random_class(rng), random_class(rng)];
+        if rng.uniform() < 0.5 {
+            classes.push(random_class(rng));
+        }
+        let mut a = Cluster::with_classes(HardwareProfile::rtx3090(), classes.clone());
+        let mut b = Cluster::with_classes(HardwareProfile::rtx3090(), classes);
+        a.trace.enabled = true;
+        b.trace.enabled = true;
+        if rng.uniform() < 0.5 {
+            let w = rng.below(a.workers.len());
+            let slow = 1.0 + rng.uniform() * 4.0;
+            a.inject_straggler(w, slow);
+            b.inject_straggler(w, slow);
+        }
+        let plan = random_plan(rng, a.workers.len());
+        let sa = apply_plan(&mut a, &plan, false);
+        let sb = apply_plan(&mut b, &plan, true);
+        if sa != sb {
+            return Err(format!("token spans diverge: {sa:?} vs {sb:?}"));
+        }
+        let t0 = sa.first().expect("tokens").0;
+        let t1 = sa.last().expect("tokens").1;
+        let (da, db) = (decompose(&a.trace, t0, t1), decompose(&b.trace, t0, t1));
+        if da != db {
+            return Err(format!("phase buckets diverge: {da:?} vs {db:?}"));
+        }
+        let (aa, ab) = (attribute(&a.trace, &sa), attribute(&b.trace, &sb));
+        for (ta, tb) in aa.tokens.iter().zip(&ab.tokens) {
+            if ta.phase_ms != tb.phase_ms {
+                return Err(format!("token {} buckets diverge", ta.index));
+            }
+        }
+        if aa.critical.len() != ab.critical.len() {
+            let (la, lb) = (aa.critical.len(), ab.critical.len());
+            return Err(format!("chain lengths diverge: {la} vs {lb}"));
+        }
+        for (x, y) in aa.critical.iter().zip(ab.critical.iter()) {
+            if x.phase != y.phase || x.start != y.start || x.end != y.end {
+                return Err(format!("chain segment diverges: {x:?} vs {y:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Both conservation invariants survive a mid-decode fail-stop with
+/// rerouting: a dead worker's frozen bookings still decompose exactly,
+/// and the makespan stays fully attributed.
+#[test]
+fn prop_conservation_survives_fail_stop() {
+    check("conservation under fail-stop", CASES, 604, |rng| {
+        let mut c = random_fleet(rng);
+        let spans = book_decode(&mut c, rng, true);
+        let a = attribute(&c.trace, &spans);
+        for tok in &a.tokens {
+            if (tok.phases_total() - tok.latency()).abs() > 1e-9 {
+                return Err(format!("token {} leaks time after fail-stop", tok.index));
+            }
+        }
+        let makespan = a.t1 - a.t0;
+        if (a.critical_total() - makespan).abs() > 1e-9 {
+            return Err(format!("critical {} != makespan {makespan}", a.critical_total()));
+        }
+        let by_phase: f64 = a.critical_by_phase().iter().sum();
+        if (by_phase - makespan).abs() > 1e-9 {
+            return Err(format!("per-phase chain split {by_phase} != makespan {makespan}"));
+        }
+        Ok(())
+    });
+}
