@@ -1,11 +1,23 @@
-//! Expert-cache policies for the offloading baselines (paper §2.2).
+//! Expert residency: baseline cache pools and the tiered cache.
 //!
-//! OD-MoE itself is cache*less*; these policies exist to reproduce the
-//! systems it is compared against: LRU (Mixtral-Offloading/AdapMoE), LFU
-//! (MoE-Infinity), and HOBBIT's mixed-precision variant where evictions
-//! prefer low-precision copies.
+//! Two layers live here. [`ExpertCache`] reproduces the single-pool
+//! LRU/LFU caches of the offloading baselines the paper compares against
+//! (Mixtral-Offloading/AdapMoE, MoE-Infinity). [`TieredCache`] is the
+//! optional GPU-hot / CPU-warm / SSD-cold residency subsystem layered on
+//! top of OD-MoE's on-demand streaming (DESIGN.md §12): per-worker tiers
+//! with per-tier expert-slot budgets, pluggable eviction
+//! ([`TierPolicy::Lru`], [`TierPolicy::Sieve`], and the SEP-informed
+//! [`TierPolicy::ReuseDistance`]), and a demotion chain hot → warm →
+//! cold → out. A GPU-hot hit skips the expert stream entirely, an
+//! SSD-cold hit stages over the worker's storage link first, and warm
+//! hits and misses take the unchanged on-demand path. The disabled
+//! config (every budget 0) constructs no tier state at all, which is how
+//! budget 0 stays bit-identical — tokens AND timings — to the cacheless
+//! engine.
 
 use std::collections::HashMap;
+
+use anyhow::{bail, Result};
 
 /// A (layer, expert) cache key.
 pub type ExpertKey = (usize, usize);
@@ -113,6 +125,373 @@ impl ExpertCache {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Tiered residency subsystem (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Residency tier of a cached expert, ordered hottest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierLevel {
+    /// Resident in GPU memory: a hit skips the expert stream entirely.
+    GpuHot,
+    /// Resident in host DRAM — the same place on-demand streams load
+    /// from, so a warm hit takes the standard PCIe chunk train.
+    CpuWarm,
+    /// Resident on local SSD: a hit first stages over the worker's
+    /// storage link (its own `Resource`), then the PCIe train.
+    SsdCold,
+}
+
+/// Pluggable eviction policy for the tiered cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierPolicy {
+    /// Evict the least-recently-used entry.
+    Lru,
+    /// SIEVE-style second chance: a hand scans insertion order, sparing
+    /// (and un-marking) visited entries, evicting the first unvisited.
+    Sieve,
+    /// Predicted-reuse-distance: entries SEP predicts within the
+    /// lookahead window have a finite reuse distance and are never
+    /// victims; the rest (distance ∞) evict in LRU order. If every
+    /// resident expert is predicted-soon, the incoming key — itself the
+    /// farthest-reuse entry — is refused instead.
+    ReuseDistance,
+}
+
+impl TierPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lru" => Ok(Self::Lru),
+            "sieve" => Ok(Self::Sieve),
+            "reuse" | "reuse-distance" => Ok(Self::ReuseDistance),
+            other => bail!("unknown cache policy {other:?} (expected lru|sieve|reuse)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Lru => "lru",
+            Self::Sieve => "sieve",
+            Self::ReuseDistance => "reuse",
+        }
+    }
+}
+
+/// Per-worker tier budgets, in expert slots (experts are uniform-size
+/// within a precision, so slot counts — not bytes — are the natural
+/// budget unit; `metrics::memory` converts to bytes for the audit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// GPU-hot slots. These bytes stay allocated on the worker's ledger.
+    pub hot: usize,
+    /// CPU-warm slots (host DRAM).
+    pub warm: usize,
+    /// SSD-cold slots.
+    pub cold: usize,
+    pub policy: TierPolicy,
+}
+
+impl CacheConfig {
+    /// The cacheless default: no tier state is constructed at all, so
+    /// the engine's budget-0 paths are byte-for-byte the seed paths.
+    pub fn disabled() -> Self {
+        Self { hot: 0, warm: 0, cold: 0, policy: TierPolicy::Lru }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.hot + self.warm + self.cold > 0
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:h{}w{}c{}", self.policy.label(), self.hot, self.warm, self.cold)
+    }
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+#[derive(Debug, Clone)]
+struct TierEntry {
+    key: ExpertKey,
+    /// SIEVE visited bit (set by touch, cleared by the scanning hand).
+    visited: bool,
+    /// Last-use tick (global per tier; unique, so victim choice is
+    /// deterministic without tie-breaks).
+    tick: u64,
+}
+
+/// Where an insert left the incoming key.
+enum Placed {
+    /// Stored; if the tier was full, the displaced victim.
+    Stored(Option<ExpertKey>),
+    /// Not stored: zero capacity, or every resident entry is protected
+    /// under [`TierPolicy::ReuseDistance`].
+    Dropped,
+}
+
+/// One tier: insertion-ordered entries (oldest first) + policy state.
+#[derive(Debug)]
+struct Tier {
+    capacity: usize,
+    policy: TierPolicy,
+    entries: Vec<TierEntry>,
+    /// SIEVE hand: index into `entries` where the next scan starts.
+    hand: usize,
+    tick: u64,
+}
+
+impl Tier {
+    fn new(capacity: usize, policy: TierPolicy) -> Self {
+        Self { capacity, policy, entries: Vec::new(), hand: 0, tick: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn contains(&self, key: ExpertKey) -> bool {
+        self.entries.iter().any(|e| e.key == key)
+    }
+
+    /// Refresh recency/visited state; true on hit.
+    fn touch(&mut self, key: ExpertKey) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.iter_mut().find(|e| e.key == key) {
+            Some(e) => {
+                e.tick = tick;
+                e.visited = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn remove(&mut self, key: ExpertKey) -> bool {
+        match self.entries.iter().position(|e| e.key == key) {
+            Some(i) => {
+                self.entries.remove(i);
+                // Keep the hand on the entry it pointed at (everything
+                // after `i` shifted left by one).
+                if self.hand > i {
+                    self.hand -= 1;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Choose a victim index per policy, or None to refuse admission.
+    fn victim(&mut self, protected: &[ExpertKey]) -> Option<usize> {
+        debug_assert!(!self.entries.is_empty());
+        match self.policy {
+            TierPolicy::Lru => self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(i, _)| i),
+            TierPolicy::Sieve => {
+                if self.hand >= self.entries.len() {
+                    self.hand = 0;
+                }
+                // Terminates: each visited entry is un-marked exactly
+                // once before the hand can revisit it.
+                loop {
+                    if self.entries[self.hand].visited {
+                        self.entries[self.hand].visited = false;
+                        self.hand = (self.hand + 1) % self.entries.len();
+                    } else {
+                        return Some(self.hand);
+                    }
+                }
+            }
+            TierPolicy::ReuseDistance => self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !protected.contains(&e.key))
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(i, _)| i),
+        }
+    }
+
+    /// Insert `key` (must not already be present), evicting if full.
+    fn insert(&mut self, key: ExpertKey, protected: &[ExpertKey]) -> Placed {
+        debug_assert!(!self.contains(key));
+        if self.capacity == 0 {
+            return Placed::Dropped;
+        }
+        self.tick += 1;
+        let evicted = if self.entries.len() >= self.capacity {
+            match self.victim(protected) {
+                Some(i) => {
+                    let v = self.entries.remove(i);
+                    if self.hand > i {
+                        self.hand -= 1;
+                    }
+                    Some(v.key)
+                }
+                None => return Placed::Dropped,
+            }
+        } else {
+            None
+        };
+        self.entries.push(TierEntry { key, visited: false, tick: self.tick });
+        Placed::Stored(evicted)
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.hand = 0;
+    }
+}
+
+/// Outcome of [`TieredCache::install`]; drives the engine's GPU ledger.
+#[derive(Debug)]
+pub struct Install {
+    /// The installed key is GPU-resident: its bytes stay allocated.
+    pub hot_resident: bool,
+    /// Keys that just lost GPU residency (demoted or dropped): the
+    /// engine must release their bytes.
+    pub evicted_hot: Vec<ExpertKey>,
+}
+
+/// Per-worker tiered expert cache (DESIGN.md §12).
+///
+/// `lookup` classifies an access (and counts hit/miss stats); `install`
+/// runs at *compute* time — only experts that were actually used enter
+/// the cache, so mispredicted streams never pollute it — promoting the
+/// key to GPU-hot and demoting victims down the hot → warm → cold → out
+/// chain. All internal state is `Vec`-ordered: identical op sequences
+/// produce identical evictions on every run.
+#[derive(Debug)]
+pub struct TieredCache {
+    hot: Tier,
+    warm: Tier,
+    cold: Tier,
+    pub hot_hits: u64,
+    pub warm_hits: u64,
+    pub cold_hits: u64,
+    pub misses: u64,
+}
+
+impl TieredCache {
+    pub fn new(cfg: &CacheConfig) -> Self {
+        Self {
+            hot: Tier::new(cfg.hot, cfg.policy),
+            warm: Tier::new(cfg.warm, cfg.policy),
+            cold: Tier::new(cfg.cold, cfg.policy),
+            hot_hits: 0,
+            warm_hits: 0,
+            cold_hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Classify an access and refresh the hit tier's recency state.
+    /// Promotion is deferred to [`Self::install`] (compute time).
+    pub fn lookup(&mut self, key: ExpertKey) -> Option<TierLevel> {
+        if self.hot.touch(key) {
+            self.hot_hits += 1;
+            Some(TierLevel::GpuHot)
+        } else if self.warm.touch(key) {
+            self.warm_hits += 1;
+            Some(TierLevel::CpuWarm)
+        } else if self.cold.touch(key) {
+            self.cold_hits += 1;
+            Some(TierLevel::SsdCold)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Total accesses; always equals hot+warm+cold hits + misses.
+    pub fn touches(&self) -> u64 {
+        self.hot_hits + self.warm_hits + self.cold_hits + self.misses
+    }
+
+    pub fn contains_hot(&self, key: ExpertKey) -> bool {
+        self.hot.contains(key)
+    }
+
+    pub fn hot_len(&self) -> usize {
+        self.hot.len()
+    }
+
+    pub fn warm_len(&self) -> usize {
+        self.warm.len()
+    }
+
+    pub fn cold_len(&self) -> usize {
+        self.cold.len()
+    }
+
+    /// Install a just-computed expert, promoting it to the hottest tier
+    /// with room and demoting victims down the chain. `protected` is
+    /// SEP's lookahead set ([`TierPolicy::ReuseDistance`] only; lower
+    /// tiers ignore it — protection is about avoiding GPU reload
+    /// stalls, and refusing a *demotion* would drop the entry outright).
+    pub fn install(&mut self, key: ExpertKey, protected: &[ExpertKey]) -> Install {
+        if self.hot.contains(key) {
+            self.hot.touch(key);
+            return Install { hot_resident: true, evicted_hot: Vec::new() };
+        }
+        // Promotion: the key leaves any lower tier it occupied.
+        self.warm.remove(key);
+        self.cold.remove(key);
+        match self.hot.insert(key, protected) {
+            Placed::Stored(victim) => {
+                let mut evicted_hot = Vec::new();
+                if let Some(v) = victim {
+                    evicted_hot.push(v);
+                    self.demote_to_warm(v);
+                }
+                Install { hot_resident: true, evicted_hot }
+            }
+            Placed::Dropped => {
+                // Refused from (or no) GPU tier: the key was still just
+                // used, so it enters the warm chain instead.
+                self.demote_to_warm(key);
+                Install { hot_resident: false, evicted_hot: Vec::new() }
+            }
+        }
+    }
+
+    fn demote_to_warm(&mut self, key: ExpertKey) {
+        if let Placed::Stored(Some(v)) = self.warm.insert(key, &[]) {
+            // Warm victim falls to cold; the cold victim falls out.
+            let _ = self.cold.insert(v, &[]);
+        }
+    }
+
+    /// Worker fail-stop: all tiers vanish with the node (stats are
+    /// cumulative and survive — the ledger is zeroed by `Node::fail`,
+    /// so no per-key dealloc happens here).
+    pub fn drop_all(&mut self) {
+        self.hot.clear();
+        self.warm.clear();
+        self.cold.clear();
+    }
+
+    /// Full reset for replay determinism: contents and stats.
+    pub fn reset(&mut self) {
+        self.drop_all();
+        self.hot.tick = 0;
+        self.warm.tick = 0;
+        self.cold.tick = 0;
+        self.hot_hits = 0;
+        self.warm_hits = 0;
+        self.cold_hits = 0;
+        self.misses = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +554,135 @@ mod tests {
         c.insert((0, 0));
         assert!(c.is_empty());
         assert!(!c.touch((0, 0)));
+    }
+
+    #[test]
+    fn lfu_tie_breaks_by_recency_deterministically() {
+        // Equal use counts: the stalest (lowest tick) entry loses, and
+        // the choice must not depend on HashMap iteration order.
+        for _ in 0..8 {
+            let mut c = ExpertCache::new(3, Policy::Lfu);
+            c.insert((0, 0)); // tick 1
+            c.insert((0, 1)); // tick 2
+            c.insert((0, 2)); // tick 3 — all counts equal (1)
+            let ev = c.insert((0, 3));
+            assert_eq!(ev, vec![(0, 0)]);
+        }
+    }
+
+    #[test]
+    fn eviction_order_is_replay_deterministic() {
+        // Same pseudo-random touch/insert sequence twice -> identical
+        // eviction streams (ticks are unique, so min_by_key has no
+        // HashMap-order-dependent ties).
+        let run = |policy: Policy| -> Vec<ExpertKey> {
+            let mut c = ExpertCache::new(4, policy);
+            let mut out = Vec::new();
+            let mut x = 0x9e3779b9u64;
+            for _ in 0..200 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let e = (x >> 33) as usize % 12;
+                if x % 3 == 0 {
+                    c.touch((0, e));
+                } else {
+                    out.extend(c.insert((0, e)));
+                }
+            }
+            out
+        };
+        assert_eq!(run(Policy::Lru), run(Policy::Lru));
+        assert_eq!(run(Policy::Lfu), run(Policy::Lfu));
+    }
+
+    // ---- tiered cache ----
+
+    fn tiered(hot: usize, warm: usize, cold: usize, policy: TierPolicy) -> TieredCache {
+        TieredCache::new(&CacheConfig { hot, warm, cold, policy })
+    }
+
+    #[test]
+    fn disabled_config_is_the_default() {
+        assert_eq!(CacheConfig::default(), CacheConfig::disabled());
+        assert!(!CacheConfig::disabled().enabled());
+        assert!(CacheConfig { hot: 1, ..CacheConfig::disabled() }.enabled());
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for p in [TierPolicy::Lru, TierPolicy::Sieve, TierPolicy::ReuseDistance] {
+            assert_eq!(TierPolicy::parse(p.label()).unwrap(), p);
+        }
+        assert!(TierPolicy::parse("mru").is_err());
+    }
+
+    #[test]
+    fn install_promotes_and_demotes_down_the_chain() {
+        let mut t = tiered(1, 1, 1, TierPolicy::Lru);
+        let a = (0, 0);
+        let b = (0, 1);
+        let c = (0, 2);
+        let d = (0, 3);
+        assert!(t.install(a, &[]).hot_resident); // hot=[a]
+        let inst = t.install(b, &[]); // a demotes to warm
+        assert!(inst.hot_resident);
+        assert_eq!(inst.evicted_hot, vec![a]);
+        assert_eq!(t.lookup(a), Some(TierLevel::CpuWarm));
+        let _ = t.install(c, &[]); // b->warm, a->cold
+        assert_eq!(t.lookup(a), Some(TierLevel::SsdCold));
+        let _ = t.install(d, &[]); // c->warm, b->cold, a drops out
+        assert_eq!(t.lookup(a), None);
+        assert_eq!(t.lookup(d), Some(TierLevel::GpuHot));
+        assert_eq!(t.hot_len() + t.warm_len() + t.cold_len(), 3);
+    }
+
+    #[test]
+    fn promotion_removes_from_lower_tier() {
+        let mut t = tiered(1, 2, 0, TierPolicy::Lru);
+        let _ = t.install((0, 0), &[]);
+        let _ = t.install((0, 1), &[]); // (0,0) -> warm
+        assert_eq!(t.lookup((0, 0)), Some(TierLevel::CpuWarm));
+        let _ = t.install((0, 0), &[]); // promote back; (0,1) -> warm
+        assert_eq!(t.lookup((0, 0)), Some(TierLevel::GpuHot));
+        assert_eq!(t.warm_len(), 1);
+        assert!(!t.contains_hot((0, 1)));
+    }
+
+    #[test]
+    fn reuse_distance_refuses_when_all_protected() {
+        let mut t = tiered(2, 1, 0, TierPolicy::ReuseDistance);
+        let _ = t.install((1, 0), &[]);
+        let _ = t.install((2, 0), &[]);
+        let protected = [(1, 0), (2, 0)];
+        let inst = t.install((3, 0), &protected);
+        assert!(!inst.hot_resident, "all-protected hot tier must refuse admission");
+        assert!(inst.evicted_hot.is_empty());
+        assert!(t.contains_hot((1, 0)) && t.contains_hot((2, 0)));
+        // The refused key still lands in the warm chain.
+        assert_eq!(t.lookup((3, 0)), Some(TierLevel::CpuWarm));
+    }
+
+    #[test]
+    fn sieve_spares_visited_entries() {
+        let mut t = tiered(2, 0, 0, TierPolicy::Sieve);
+        let _ = t.install((0, 0), &[]);
+        let _ = t.install((0, 1), &[]);
+        t.lookup((0, 0)); // visited bit on (0,0)
+        let inst = t.install((0, 2), &[]);
+        assert_eq!(inst.evicted_hot, vec![(0, 1)], "visited (0,0) gets a second chance");
+        assert!(t.contains_hot((0, 0)) && t.contains_hot((0, 2)));
+    }
+
+    #[test]
+    fn drop_all_keeps_stats_reset_clears_them() {
+        let mut t = tiered(2, 0, 0, TierPolicy::Lru);
+        let _ = t.install((0, 0), &[]);
+        t.lookup((0, 0));
+        t.lookup((9, 9));
+        assert_eq!((t.hot_hits, t.misses), (1, 1));
+        t.drop_all();
+        assert_eq!(t.hot_len(), 0);
+        assert_eq!((t.hot_hits, t.misses), (1, 1), "fail-stop keeps cumulative stats");
+        t.reset();
+        assert_eq!(t.touches(), 0);
     }
 }

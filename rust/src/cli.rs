@@ -3,6 +3,7 @@
 //! harnesses with the full parameter grids.
 
 use anyhow::{ensure, Context, Result};
+use odmoe::cache::{CacheConfig, TierPolicy};
 use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
 use odmoe::coordinator::{BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine};
@@ -13,11 +14,12 @@ use odmoe::predictor::{
     AlignPeriod, AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical,
 };
 use odmoe::serve::{
-    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, config_from_args, failover_json,
-    failover_sweep, overlap_json, overlap_sweep, parse_batches, parse_chunk_counts, parse_depths,
-    parse_rates, rate_sweep, sweep_json, write_bench, ArrivalModel, AttribPoint,
-    BatchEngineService, BatchPoint, FailoverPoint, Histogram, OverlapPoint, Scheduler,
-    SchedulerConfig, ServeReport, ServiceModel, SessionOutcome, SyntheticService, WorkloadSpec,
+    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
+    config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
+    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates, rate_sweep, sweep_json,
+    write_bench, ArrivalModel, AttribPoint, BatchEngineService, BatchPoint, CachePoint,
+    FailoverPoint, Histogram, OverlapPoint, Scheduler, SchedulerConfig, ServeReport, ServiceModel,
+    SessionOutcome, SyntheticService, WorkloadSpec,
 };
 use odmoe::telemetry::{self, Phase, Registry};
 use odmoe::trace::EventKind;
@@ -30,6 +32,19 @@ use odmoe::Runtime;
 
 fn parse_precision(s: &str) -> Result<Precision> {
     Precision::parse(s)
+}
+
+/// Parse the tiered-cache flags (`--cache-hot/--cache-warm/--cache-cold`
+/// slot budgets + `--cache-policy lru|sieve|reuse`) into a
+/// [`CacheConfig`]. All budgets default to 0 — the cacheless seed engine
+/// (DESIGN.md §12's budget-0 bit-identity contract).
+fn parse_cache_flags(a: &Args) -> Result<CacheConfig> {
+    Ok(CacheConfig {
+        hot: a.usize_or("cache-hot", 0)?,
+        warm: a.usize_or("cache-warm", 0)?,
+        cold: a.usize_or("cache-cold", 0)?,
+        policy: TierPolicy::parse(a.get_or("cache-policy", "lru"))?,
+    })
 }
 
 /// Apply `--fleet <spec>` / `--plan <file>` to an engine config (+ the
@@ -64,9 +79,17 @@ fn apply_fleet_flags(
             if a.get("prefetch-depth").is_none() {
                 cfg.prefetch_depth = choice.prefetch_depth;
             }
+            if a.get("cache-hot").is_none() {
+                cfg.cache.hot = choice.cache_hot;
+            }
             cfg.n_workers = choice.fleet.n_nodes();
+            let cache_note = if choice.cache_hot > 0 {
+                format!(" | hot cache {}", choice.cache_hot)
+            } else {
+                String::new()
+            };
             let banner = format!(
-                "plan: fleet {} | {} transfers | chunks {} | depth {} | {} replica(s) | claimed p99 tpot {:.1} ms",
+                "plan: fleet {} | {} transfers | chunks {} | depth {}{cache_note} | {} replica(s) | claimed p99 tpot {:.1} ms",
                 choice.fleet.label(),
                 choice.precision.label(),
                 choice.chunks,
@@ -143,7 +166,15 @@ fn validate_failures(specs: &[FailureSpec], n_workers: usize) -> Result<()> {
 /// Fleets (DESIGN.md §10): `--fleet rtx3080:4,jetson:4,nano:2` serves on
 /// a heterogeneous cluster (per-class durations, capability-aware
 /// slots); `--plan BENCH_plan.json` re-runs the deployment `od-moe plan`
-/// chose — fleet, transfer precision, chunks, depth, and replicas.
+/// chose — fleet, transfer precision, chunks, depth, cache budget, and
+/// replicas.
+///
+/// Tiered cache (DESIGN.md §12): `--cache-hot/--cache-warm/--cache-cold`
+/// give each worker GPU-hot / CPU-warm / SSD-cold residency budgets
+/// under `--cache-policy lru|sieve|reuse` (all 0 = the cacheless seed
+/// engine, bit-identical tokens AND timings); `--cache-sweep` decodes
+/// one session at every `--cache-grid` GPU-hot budget and writes the
+/// deterministic `BENCH_cache.json`.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let (mut spec, mut sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
     let ws = WeightStore::generate(&rt.cfg, seed);
@@ -155,6 +186,7 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         },
         chunks: a.usize_or("chunks", 1)?,
         prefetch_depth: a.usize_or("prefetch-depth", 0)?,
+        cache: parse_cache_flags(a)?,
         ..OdMoeConfig::default()
     };
     anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
@@ -216,6 +248,70 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         write_bench(
             path,
             &failover_json(&points, seed, cfg.n_workers, rt.cfg.top_k, fail_at, out_tokens),
+        )?;
+        println!("\nwrote {}", path.display());
+        return Ok(());
+    }
+
+    // `--cache-sweep` (DESIGN.md §12): decode one session at every
+    // GPU-hot budget in `--cache-grid` (budget 0 — the cacheless seed
+    // engine — is always present as the pin) on a fresh engine per
+    // point, report ms/token and loads/token against the cacheless
+    // baseline and the fully-cached ceiling, and write the deterministic
+    // `BENCH_cache.json` locating the crossover between pure OD-MoE,
+    // tiered residency, and a fully-cached deployment. `--cache-warm`/
+    // `--cache-cold`/`--cache-policy` shape the non-swept tiers; a
+    // `--fail` plan is a fixed fault background for every point.
+    if a.has("cache-sweep") {
+        let budgets = parse_cache_budgets(a.get_or("cache-grid", "0,1,2,4,8"))?;
+        let out_tokens = a.usize_or("out-tokens", 16)?;
+        let background = match a.get("fail") {
+            Some(s) => FailureSpec::parse_list(s)?,
+            None => Vec::new(),
+        };
+        validate_failures(&background, cfg.n_workers)?;
+        let prompt = Corpus::generate(seed ^ 8, 1, 16, rt.cfg.vocab_size as u32)
+            .prompts
+            .pop()
+            .expect("one prompt");
+        // Fully-cached ceiling on the same session (never cache-tiered).
+        let fc_ms_per_token = {
+            let mut e = FullyCachedEngine::new(rt, ws.clone())?;
+            let res = e.run_batch(&[(prompt.as_slice(), out_tokens)])?;
+            res.sessions[0].decode_ms / res.decode_tokens as f64
+        };
+        let points = cache_sweep(&budgets, fc_ms_per_token, |budget| {
+            // Budget 0 is the cacheless engine itself — no tiers at all,
+            // not a zero-capacity cache — so the pin really compares
+            // against the seed code path.
+            let cache = if budget == 0 {
+                CacheConfig::disabled()
+            } else {
+                CacheConfig { hot: budget, ..cfg.cache }
+            };
+            let mut e = OdMoeEngine::new(rt, ws.clone(), OdMoeConfig { cache, ..cfg.clone() })?;
+            for &f in &background {
+                e.inject_failure(f);
+            }
+            e.run_batch(&[(prompt.as_slice(), out_tokens)])
+        })?;
+        print_cache(&points);
+        let fleet_label = cfg
+            .fleet
+            .as_ref()
+            .map_or_else(|| format!("uniform:{}", cfg.n_workers), |f| f.label());
+        let path = std::path::Path::new("BENCH_cache.json");
+        write_bench(
+            path,
+            &cache_json(
+                &points,
+                seed,
+                &budgets,
+                &fleet_label,
+                cfg.cache.policy.label(),
+                out_tokens,
+                fc_ms_per_token,
+            ),
         )?;
         println!("\nwrote {}", path.display());
         return Ok(());
@@ -442,6 +538,23 @@ fn print_batch_sweep(results: &[(String, Vec<BatchPoint>)]) {
     t.print();
 }
 
+fn print_cache(points: &[CachePoint]) {
+    let mut t = Table::new(&[
+        "hot budget", "ms/token", "of fully-cached", "loads/token", "stall (ms)", "tokens",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{}", p.budget),
+            format!("{:.2}", p.ms_per_token),
+            format!("{:.1}%", p.frac_of_fully_cached * 100.0),
+            format!("{:.2}", p.loads_per_token),
+            format!("{:.1}", p.stall_ms),
+            if p.tokens_match_baseline { "identical".into() } else { "DIVERGED".to_string() },
+        ]);
+    }
+    t.print();
+}
+
 fn print_sweep(results: &[(String, Vec<ServeReport>)]) {
     let mut t = Table::new(&[
         "system", "rate req/s", "tok/s", "goodput tok/s", "slo %", "ttft p50", "ttft p95",
@@ -474,6 +587,8 @@ fn print_sweep(results: &[(String, Vec<ServeReport>)]) {
 /// pre-chunking engine; every point's token stream is checked against
 /// it). Baseline engines are untouched by chunking, so the
 /// fraction-of-fully-cached comparison stays fair.
+/// `--cache-hot/--cache-warm/--cache-cold/--cache-policy` enable the
+/// tiered expert cache (DESIGN.md §12) and print its hit/miss tallies.
 pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let out_tokens = a.usize_or("out-tokens", 24)?;
     anyhow::ensure!(out_tokens >= 2, "--out-tokens must be >= 2 to measure decode");
@@ -484,6 +599,7 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         .expect("one prompt");
     let mut base_cfg = OdMoeConfig {
         shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
+        cache: parse_cache_flags(a)?,
         ..OdMoeConfig::default()
     };
     anyhow::ensure!(
@@ -548,6 +664,10 @@ pub fn decode(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         res.loads_per_token(),
         res.aborted_loads,
     );
+    if e.cfg.cache.enabled() {
+        let (hot, warm, cold, misses) = e.cache_stats();
+        println!("cache: {hot} hot / {warm} warm / {cold} cold hit(s), {misses} miss(es)");
+    }
     // `--attribution` (DESIGN.md §11): walk the trace and print the exact
     // per-token time decomposition (phases partition each token's
     // latency; the critical path partitions the makespan).
@@ -756,9 +876,11 @@ pub fn quality(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
 }
 
 /// `od-moe memory`: Table 2(ii) audit. With `--fleet` (plus optional
-/// `--precision`/`--max-batch`/`--prefetch-depth`), audits a
-/// heterogeneous fleet per node against each class's memory budget
-/// instead of the paper presets.
+/// `--precision`/`--max-batch`/`--prefetch-depth`/`--cache-hot`), audits
+/// a heterogeneous fleet per node against each class's memory budget
+/// instead of the paper presets — `--cache-hot N` adds the tiered
+/// cache's N GPU-resident expert payloads to every worker's bound
+/// (DESIGN.md §12).
 pub fn memory(a: &Args) -> Result<()> {
     let p = HardwareProfile::rtx3090();
     if let Some(spec) = a.get("fleet") {
@@ -766,6 +888,7 @@ pub fn memory(a: &Args) -> Result<()> {
         let precision = parse_precision(a.get_or("precision", "fp16"))?;
         let max_batch = a.usize_or("max-batch", 1)?;
         let depth = a.usize_or("prefetch-depth", 0)?;
+        let cache_hot = a.usize_or("cache-hot", 0)?;
         let scaled = planner::precision_scaled(&p, precision);
         let audit = memaudit::odmoe_fleet(
             &scaled,
@@ -773,6 +896,7 @@ pub fn memory(a: &Args) -> Result<()> {
             memaudit::PAPER_TOP_K,
             max_batch,
             depth,
+            cache_hot,
         );
         let budgets: Vec<f64> = fleet.node_classes().iter().map(|c| c.mem_bytes).collect();
         let mut t = Table::new(&["node", "GPU memory (GB)", "budget (GB)", "fits"]);
@@ -790,7 +914,7 @@ pub fn memory(a: &Args) -> Result<()> {
         }
         t.print();
         println!(
-            "\nfleet {} | {} transfers | max batch {max_batch} | depth {depth} | total {:.1} GB",
+            "\nfleet {} | {} transfers | max batch {max_batch} | depth {depth} | hot cache {cache_hot} | total {:.1} GB",
             fleet.label(),
             precision.label(),
             audit.total_gb()
@@ -826,12 +950,14 @@ pub fn memory(a: &Args) -> Result<()> {
 
 /// `od-moe plan`: the SLO-driven fleet deployment planner (DESIGN.md
 /// §10). Searches (class subset, transfer precision, chunk count,
-/// prefetch depth, replica count) over `--fleet`, pruning candidates
-/// whose classes miss their Eq. (1) window or memory budget, and scores
-/// survivors by running the real engine through the serving scheduler in
-/// virtual time on the same workload grammar as `od-moe serve`. Emits
-/// the deterministic `BENCH_plan.json` (Pareto frontier + chosen plan);
-/// `od-moe serve --plan BENCH_plan.json` re-runs the choice directly.
+/// prefetch depth, replica count, GPU-hot cache budget — `--cache-grid`,
+/// default 0 only) over `--fleet`, pruning candidates whose classes miss
+/// their Eq. (1) window or memory budget (hot-cached experts count
+/// toward the floor), and scores survivors by running the real engine
+/// through the serving scheduler in virtual time on the same workload
+/// grammar as `od-moe serve`. Emits the deterministic `BENCH_plan.json`
+/// (Pareto frontier + chosen plan); `od-moe serve --plan
+/// BENCH_plan.json` re-runs the choice directly.
 pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let fleet = FleetSpec::parse(a.get_or("fleet", "rtx3080:4,jetson:4,nano:2"))?;
     let slo_p99 = a.f64_or("slo-p99", 250.0)?;
@@ -846,6 +972,7 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         chunk_counts: parse_chunk_counts(a.get_or("chunk-grid", "1,8"))?,
         depths: parse_depths(a.get_or("depth-grid", "0,1"))?,
         replicas: parse_batches(a.get_or("replica-grid", "1"))?,
+        cache_budgets: parse_cache_budgets(a.get_or("cache-grid", "0"))?,
     };
     let ws = WeightStore::generate(&rt.cfg, seed);
     let base = OdMoeConfig::default().profile;
@@ -878,6 +1005,9 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
             prefetch_depth: cand.prefetch_depth,
             profile: cand.scaled_profile(&base),
             fleet: Some(cand.fleet.clone()),
+            // hot == 0 is exactly CacheConfig::disabled(): the cacheless
+            // grid point runs the seed engine, not a zero-slot cache.
+            cache: CacheConfig { hot: cand.cache_hot, ..CacheConfig::disabled() },
             ..OdMoeConfig::default()
         };
         let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
@@ -891,8 +1021,15 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         let worker_peak_bytes: Vec<f64> =
             engine.cluster.workers.iter().map(|w| w.gpu_bytes_peak as f64).collect();
         // Latency: the serving scheduler at the candidate's replica
-        // count, same workload for every candidate (same seed).
-        let cand_sched = SchedulerConfig { n_replicas: cand.replicas, ..sched.clone() };
+        // count, same workload for every candidate (same seed). The
+        // candidate's hot-tier bytes are reserved out of the admission
+        // budget, exactly as `serve --cache-hot` would.
+        let reserved = (cand.cache_hot as f64 * cand.scaled_profile(&base).expert_bytes) as u64;
+        let cand_sched = SchedulerConfig {
+            n_replicas: cand.replicas,
+            memory: sched.memory.with_reservation(reserved),
+            ..sched.clone()
+        };
         let reqs = spec.generate(seed);
         let mut svc = BatchEngineService::new(&mut engine);
         let outcome = Scheduler::run(&cand_sched, &mut svc, &reqs)?;
@@ -921,8 +1058,8 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     })?;
 
     let mut t = Table::new(&[
-        "fleet", "prec", "chunks", "depth", "repl", "ms/tok", "p99 tpot", "GB", "cost", "mem",
-        "slo", "pareto",
+        "fleet", "prec", "chunks", "depth", "hot", "repl", "ms/tok", "p99 tpot", "GB", "cost",
+        "mem", "slo", "pareto",
     ]);
     for (i, pt) in report.points.iter().enumerate() {
         let marker = if report.chosen == Some(i) { " <= CHOSEN" } else { "" };
@@ -931,6 +1068,7 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
             pt.candidate.precision.label().to_string(),
             format!("{}", pt.candidate.chunks),
             format!("{}", pt.candidate.prefetch_depth),
+            format!("{}", pt.candidate.cache_hot),
             format!("{}", pt.candidate.replicas),
             format!("{:.1}", pt.meas.ms_per_token),
             format!("{:.0}", pt.meas.tpot_p99_ms),

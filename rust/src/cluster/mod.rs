@@ -185,6 +185,9 @@ pub struct Node {
     pub id: usize,
     pub gpu: Resource,
     pub pcie: Resource,
+    /// Local-SSD read link (tiered cache's cold tier, DESIGN.md §12).
+    /// Inert unless the engine stages cold-tier experts on this node.
+    pub ssd: Resource,
     /// Paper-scale bytes currently resident on the GPU.
     pub gpu_bytes_used: u64,
     /// High-water mark of `gpu_bytes_used`.
@@ -206,6 +209,7 @@ impl Node {
             id,
             gpu: Resource::new(),
             pcie: Resource::new(),
+            ssd: Resource::new(),
             gpu_bytes_used: 0,
             gpu_bytes_peak: 0,
             pcie_slowdown: 1.0,
@@ -238,6 +242,7 @@ impl Node {
         self.health = NodeHealth::Failed { at_ms };
         self.gpu.preempt(at_ms);
         self.pcie.preempt(at_ms);
+        self.ssd.preempt(at_ms);
         self.gpu_bytes_used = 0;
     }
 
@@ -260,6 +265,7 @@ impl Node {
     pub fn reset(&mut self) {
         self.gpu.reset();
         self.pcie.reset();
+        self.ssd.reset();
         self.gpu_bytes_used = 0;
         self.gpu_bytes_peak = 0;
         self.health = NodeHealth::Healthy;
@@ -442,6 +448,24 @@ impl Cluster {
             next = e;
         }
         ChunkedTransfer { worker, start: first_start, chunk_ends, free_before }
+    }
+
+    /// Stage `bytes` from `worker`'s local SSD into host DRAM (tiered
+    /// cache cold-tier hit, DESIGN.md §12). Books on the worker's
+    /// [`Node::ssd`] resource — storage reads queue like PCIe transfers
+    /// do — using the owning node's class profile for bandwidth/latency.
+    /// Returns (start, end); the PCIe chunk train may begin at `end`.
+    /// Panics on a dead worker.
+    pub fn ssd_stage(&mut self, worker: usize, earliest: Ms, bytes: f64) -> (Ms, Ms) {
+        assert!(
+            self.workers[worker].is_alive(),
+            "SSD staging booked on dead worker {worker}"
+        );
+        let dur = self.worker_profiles[worker].ssd_stage_ms(bytes);
+        let id = self.workers[worker].id;
+        let (start, end) = self.workers[worker].ssd.acquire(earliest, dur);
+        self.trace.push(EventKind::ExpertLoad, id, start, end, "SSD");
+        (start, end)
     }
 
     /// Book an expert compute of base duration `base_ms` on `worker`'s

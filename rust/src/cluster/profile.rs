@@ -81,6 +81,12 @@ pub struct HardwareProfile {
     pub nonexpert_bytes: f64,
     pub shadow_model_bytes: f64,
     pub activation_bytes: f64,
+    /// Local-SSD read bandwidth, GB/s (tiered cache's cold tier,
+    /// DESIGN.md §12). Storage I/O books on its own per-worker
+    /// `Resource`, making it a schedulable bottleneck like PCIe.
+    pub ssd_gbps: f64,
+    /// Per-read SSD access latency.
+    pub ssd_lat_ms: Ms,
 }
 
 impl HardwareProfile {
@@ -119,6 +125,8 @@ impl HardwareProfile {
         nonneg(self.nonexpert_bytes, "nonexpert_bytes")?;
         nonneg(self.shadow_model_bytes, "shadow_model_bytes")?;
         nonneg(self.activation_bytes, "activation_bytes")?;
+        pos(self.ssd_gbps, "ssd_gbps")?;
+        nonneg(self.ssd_lat_ms, "ssd_lat_ms")?;
         for (v, what) in [
             (self.batch_marginal, "batch_marginal"),
             (self.prefill_attn_marginal, "prefill_attn_marginal"),
@@ -162,6 +170,8 @@ impl HardwareProfile {
             nonexpert_bytes: 7e9,      // paper: 7 GB on the main node
             shadow_model_bytes: 45e9,  // paper: 45 GB INT8 shadow
             activation_bytes: 0.3e9,   // compute workspace per worker
+            ssd_gbps: 3.5,             // NVMe-class local storage
+            ssd_lat_ms: 0.1,
         };
         p.validate().expect("rtx3090 preset violates §3.1 invariants");
         p
@@ -194,6 +204,12 @@ impl HardwareProfile {
     /// PCIe transfer time for `bytes`.
     pub fn pcie_transfer_ms(&self, bytes: f64) -> Ms {
         bytes / (self.pcie_gbps * 1e9) * 1e3
+    }
+
+    /// SSD→DRAM staging time for `bytes` (tiered cache's cold tier,
+    /// DESIGN.md §12): access latency + read at `ssd_gbps`.
+    pub fn ssd_stage_ms(&self, bytes: f64) -> Ms {
+        self.ssd_lat_ms + bytes / (self.ssd_gbps * 1e9) * 1e3
     }
 
     /// Per-chunk durations of a `bytes` transfer streamed as `chunks`

@@ -48,6 +48,7 @@ use super::batch::{merge_distinct, BatchEngine, BatchRunResult};
 use super::prefill::{simulate_odmoe_prefill, PrefillTiming};
 use super::schedule::{GroupSchedule, SlotMap};
 use super::{Engine, PromptResult};
+use crate::cache::{CacheConfig, ExpertKey, TierLevel, TieredCache};
 use crate::cluster::{ChunkedTransfer, Cluster, HardwareProfile, Ms};
 use crate::engine::{BatchState, ModelState, StepRecord};
 use crate::fleet::{capability_slots, FleetSpec};
@@ -162,6 +163,15 @@ pub struct OdMoeConfig {
     /// profile's class reproduces `None` bit-identically — tokens AND
     /// timings — which `rust/tests/fleet_props.rs` pins.
     pub fleet: Option<FleetSpec>,
+    /// Optional tiered expert cache (DESIGN.md §12): per-worker GPU-hot /
+    /// CPU-warm / SSD-cold residency budgets layered on top of on-demand
+    /// streaming. The default — [`CacheConfig::disabled`], every budget
+    /// 0 — constructs no tier state at all, so the cacheless paths run
+    /// byte-for-byte the seed code: budget 0 is bit-identical (tokens
+    /// AND timings) on sequential, batched, chunked, failure-injection
+    /// and mixed-fleet paths, which `rust/tests/cache_props.rs` and the
+    /// existing prop suites pin.
+    pub cache: CacheConfig,
 }
 
 impl Default for OdMoeConfig {
@@ -176,6 +186,7 @@ impl Default for OdMoeConfig {
             prefetch_depth: 0,
             profile: HardwareProfile::rtx3090(),
             fleet: None,
+            cache: CacheConfig::disabled(),
         }
     }
 }
@@ -239,6 +250,14 @@ pub struct OdMoeEngine<'rt> {
     /// in order, since the last reset — the per-token windows
     /// [`crate::telemetry::attribute`] decomposes.
     token_spans: Vec<(Ms, Ms)>,
+    /// Per-worker tiered caches (DESIGN.md §12); `None` when
+    /// `cfg.cache` is disabled so the cacheless code paths stay
+    /// byte-for-byte the seed paths.
+    tiers: Option<Vec<TieredCache>>,
+    /// Keys SEP predicts within the prefetch window of the layer being
+    /// decoded — the reuse-distance policy's protection set. Rebuilt per
+    /// layer; always empty while the cache is disabled.
+    protected: Vec<ExpertKey>,
 }
 
 impl<'rt> OdMoeEngine<'rt> {
@@ -301,6 +320,10 @@ impl<'rt> OdMoeEngine<'rt> {
             })
             .collect();
         let slots_blueprint = slots.clone();
+        let tiers = cfg
+            .cache
+            .enabled()
+            .then(|| (0..cfg.n_workers).map(|_| TieredCache::new(&cfg.cache)).collect());
         let mut engine = Self {
             cfg,
             cluster,
@@ -320,6 +343,8 @@ impl<'rt> OdMoeEngine<'rt> {
             pending_shadow: None,
             registry: Registry::new(),
             token_spans: Vec::new(),
+            tiers,
+            protected: Vec::new(),
         };
         engine.charge_static_memory();
         Ok(engine)
@@ -393,6 +418,64 @@ impl<'rt> OdMoeEngine<'rt> {
         &self.token_spans
     }
 
+    /// Experts currently GPU-hot on worker `w` (0 when the cache is
+    /// disabled) — their bytes are held on the worker's memory ledger.
+    pub fn cache_hot_resident(&self, w: usize) -> usize {
+        self.tiers.as_ref().map_or(0, |t| t[w].hot_len())
+    }
+
+    /// Cumulative cache accesses since reset as (hot, warm, cold,
+    /// misses), summed over workers. All zero while the cache is
+    /// disabled.
+    pub fn cache_stats(&self) -> (u64, u64, u64, u64) {
+        self.tiers.as_ref().map_or((0, 0, 0, 0), |tiers| {
+            tiers.iter().fold((0, 0, 0, 0), |acc, t| {
+                (
+                    acc.0 + t.hot_hits,
+                    acc.1 + t.warm_hits,
+                    acc.2 + t.cold_hits,
+                    acc.3 + t.misses,
+                )
+            })
+        })
+    }
+
+    /// Is `(layer, expert)` GPU-hot on `w`? Right after a load call this
+    /// is equivalent to "that load was a hot hit that streamed nothing":
+    /// installs only happen at compute time, later in the layer, so the
+    /// state cannot have changed in between. Always false when the cache
+    /// is disabled — the budget-0 counting paths are untouched.
+    fn hot_resident(&self, w: usize, layer: usize, expert: usize) -> bool {
+        self.tiers.as_ref().is_some_and(|t| t[w].contains_hot((layer, expert)))
+    }
+
+    /// Rebuild the reuse-distance protection set for layer `l`: every
+    /// expert SEP predicts within the next `prefetch_depth + 1` layers
+    /// (the lookahead window; >= 1 so the policy is meaningful at depth
+    /// 0). `route_for(lf)` yields each session's predicted route for a
+    /// future layer. No-op while the cache is disabled.
+    fn rebuild_protected<'a>(
+        &mut self,
+        l: usize,
+        n_layers: usize,
+        mut routes_for: impl FnMut(usize) -> Vec<&'a [usize]>,
+    ) {
+        if self.tiers.is_none() {
+            return;
+        }
+        self.protected.clear();
+        let horizon = n_layers.min(l + 1 + self.cfg.prefetch_depth + 1);
+        for lf in (l + 1)..horizon {
+            for route in routes_for(lf) {
+                for &e in route {
+                    if !self.protected.contains(&(lf, e)) {
+                        self.protected.push((lf, e));
+                    }
+                }
+            }
+        }
+    }
+
     // ---- Failure machinery (shared by both decode paths). ---------------
 
     fn pending_worker_fail(&self, w: usize) -> Option<Ms> {
@@ -414,6 +497,13 @@ impl<'rt> OdMoeEngine<'rt> {
     /// as the old shared-profile reroute did.
     fn apply_worker_failure(&mut self, w: usize, at: Ms) {
         self.pending_fail.retain(|&(pw, _)| pw != w);
+        // The node's tier contents die with it (no dealloc here:
+        // `Node::fail` zeroes the whole GPU ledger). Survivors rebuild
+        // hot state from scratch — the cold-start reroute the failure
+        // tests pin.
+        if let Some(tiers) = self.tiers.as_mut() {
+            tiers[w].drop_all();
+        }
         self.cluster.fail_worker(w, at);
         let n_groups = self.schedule.n_groups();
         let chunks = self.cfg.chunks;
@@ -496,12 +586,21 @@ impl<'rt> OdMoeEngine<'rt> {
     /// stream start behind the target's residency window (prediction-
     /// driven and conventional reactive loads); mispredict reloads skip
     /// it, exactly like the seed's reload path.
+    ///
+    /// `expert` identifies the weights for the tiered cache (DESIGN.md
+    /// §12; ignored — and the lookup skipped entirely — while the cache
+    /// is disabled): a GPU-hot hit returns a ready-at-notice pseudo
+    /// transfer without booking the link or touching the ledger (the
+    /// bytes never left the GPU); an SSD-cold hit stages over the
+    /// worker's storage link first; warm hits and misses stream exactly
+    /// as today.
     fn load_with_failover(
         &mut self,
         layer: usize,
         slot: usize,
         mut earliest: Ms,
         respect_residency: bool,
+        expert: Option<usize>,
     ) -> ChunkedTransfer {
         let bytes = self.cluster.profile.expert_bytes;
         let lan_lat = self.cluster.profile.lan_lat_ms;
@@ -527,6 +626,45 @@ impl<'rt> OdMoeEngine<'rt> {
             } else {
                 notice
             };
+            // Tiered-cache lookup (DESIGN.md §12). Skipped structurally
+            // while the cache is disabled — budget 0 books the seed's
+            // exact sequence.
+            let hit = match (expert, self.tiers.as_mut()) {
+                (Some(e), Some(tiers)) => Some(tiers[w].lookup((layer, e))),
+                _ => None,
+            };
+            let mut stream_at = start_at;
+            match hit {
+                Some(Some(TierLevel::GpuHot)) => {
+                    // Hot hit: the expert never left the GPU. No link
+                    // booking, no ledger change; ready the moment the
+                    // dispatch notice lands. The single-element train
+                    // keeps `first_ready == done == notice`.
+                    self.registry.counter_add("engine.cache_hot_hits", 1);
+                    return ChunkedTransfer {
+                        worker: w,
+                        start: notice,
+                        chunk_ends: vec![notice],
+                        free_before: self.cluster.workers[w].pcie.free_at(),
+                    };
+                }
+                Some(Some(TierLevel::SsdCold)) => {
+                    // Cold hit: stage SSD -> DRAM on the worker's storage
+                    // link, then the standard PCIe train.
+                    self.registry.counter_add("engine.cache_cold_hits", 1);
+                    let (_, staged) = self.cluster.ssd_stage(w, start_at, bytes);
+                    stream_at = staged;
+                }
+                Some(Some(TierLevel::CpuWarm)) => {
+                    // Warm = host DRAM = where on-demand streams already
+                    // load from: the hit only changes accounting.
+                    self.registry.counter_add("engine.cache_warm_hits", 1);
+                }
+                Some(None) => {
+                    self.registry.counter_add("engine.cache_misses", 1);
+                }
+                None => {}
+            }
             // A stream that jumps the residency gate (depth >= 1) is the
             // speculative slack-filler; tag it so timelines show it.
             let kind = if respect_residency
@@ -538,7 +676,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 EventKind::ExpertLoad
             };
             let durs: &[Ms] = &self.chunk_durs[w][done_chunks..];
-            let t = self.cluster.expert_load_chunks(w, start_at, durs, kind);
+            let t = self.cluster.expert_load_chunks(w, stream_at, durs, kind);
             if let Some(at) = self.pending_worker_fail(w) {
                 if at < t.done() {
                     // The stream dies with the node: the link freezes at
@@ -612,14 +750,19 @@ impl<'rt> OdMoeEngine<'rt> {
     /// the holder dies before the compute finishes, the expert is lost
     /// with the node: the slot's replacement re-streams it (one LAN
     /// notification after the failure) and the tiles re-gate on the new
-    /// train. Evicts the expert after the compute (cacheless) and
-    /// advances the worker's residency history. Returns the final
-    /// (holder, compute end).
+    /// train. Evicts the expert after the compute (cacheless) — unless
+    /// the tiered cache admits it GPU-hot, in which case the bytes stay
+    /// on the ledger until the entry is demoted, dropped, or the node
+    /// dies (DESIGN.md §12; install happens HERE, at compute time, so
+    /// mispredicted streams never enter the cache) — and advances the
+    /// worker's residency history. Returns the final (holder, compute
+    /// end).
     #[allow(clippy::too_many_arguments)]
     fn compute_with_failover(
         &mut self,
         layer: usize,
         slot: usize,
+        expert: usize,
         mut holder: usize,
         ec_floor: Ms,
         embed_arrival: Ms,
@@ -642,7 +785,7 @@ impl<'rt> OdMoeEngine<'rt> {
             // here) passes through it exactly once.
             if let Some(at) = self.cluster.workers[holder].failed_at() {
                 self.registry.counter_add("engine.failovers", 1);
-                let t = self.load_with_failover(layer, slot, at + lan_lat, false);
+                let t = self.load_with_failover(layer, slot, at + lan_lat, false, Some(expert));
                 holder = t.worker;
                 restreamed = Some(t.chunk_ends);
                 continue;
@@ -665,7 +808,25 @@ impl<'rt> OdMoeEngine<'rt> {
                     continue;
                 }
             }
-            self.cluster.workers[holder].dealloc(bytes);
+            // Cacheless eviction — or, with the tiered cache enabled, an
+            // install: the just-used expert promotes to GPU-hot (keeping
+            // its bytes on the ledger) and any expert it displaced from
+            // the hot tier releases its bytes as it demotes down the
+            // warm/cold chain. A hot-hit compute never allocated, so the
+            // skipped dealloc keeps the ledger balanced either way.
+            let (retain, evicted_hot) = match self.tiers.as_mut() {
+                Some(tiers) => {
+                    let inst = tiers[holder].install((layer, expert), &self.protected);
+                    (inst.hot_resident, inst.evicted_hot.len() as u64)
+                }
+                None => (false, 0),
+            };
+            if !retain {
+                self.cluster.workers[holder].dealloc(bytes);
+            }
+            if evicted_hot > 0 {
+                self.cluster.workers[holder].dealloc(evicted_hot * bytes);
+            }
             let ends = &mut self.workers[holder].ec_ends;
             ends.push(ec_end);
             // Only the freshest entries are ever read: the residency
@@ -781,18 +942,38 @@ impl<'rt> OdMoeEngine<'rt> {
             // reached the worker AND its previous expert was evicted; the
             // reactive (gate-result-driven) path starts at M_l end.
             let reactive_t = m_end + p.lan_lat_ms;
+            // Reuse-distance protection: experts SEP predicts within the
+            // lookahead window must not be evicted from the hot tier
+            // (no-op while the cache is disabled).
+            self.rebuild_protected(l, n_layers, |lf| {
+                pred_routes[lf].as_deref().into_iter().collect()
+            });
             // Phase 1 — prediction-driven streams, one per slot.
+            // `owned[slot]` tracks which expert's weights a slot serves
+            // (confirmed predictions keep their predicted expert even
+            // when it sits at a different position in the actual route);
+            // pure bookkeeping for the cache keys, no timing effect.
             let mut holders: Vec<Option<ChunkedTransfer>> =
                 (0..group_size).map(|_| None).collect();
+            let mut owned: Vec<Option<usize>> = vec![None; group_size];
             let mut aborts: Vec<ChunkedTransfer> = Vec::new();
             let mut pending: Vec<(usize, bool)> = Vec::new(); // (slot, residency-gated)
             for slot in 0..group_size {
                 match predicted.get(slot).copied() {
                     Some(pe) if pred_avail[l] <= reactive_t => {
-                        let t = self.load_with_failover(l, slot, pred_avail[l], true);
+                        let t = self.load_with_failover(l, slot, pred_avail[l], true, Some(pe));
+                        // A GPU-hot hit streamed nothing: it is neither a
+                        // counted load (confirmed) nor an abortable
+                        // stream (mispredicted — the expert stays hot).
+                        let hot = self.hot_resident(t.worker, l, pe);
                         if actual.experts.contains(&pe) {
-                            self.registry.counter_add("engine.expert_loads", 1);
+                            if !hot {
+                                self.registry.counter_add("engine.expert_loads", 1);
+                            }
                             holders[slot] = Some(t);
+                            owned[slot] = Some(pe);
+                        } else if hot {
+                            pending.push((slot, false));
                         } else {
                             // Mispredict: the reload is gate-driven (the
                             // link is cancelled first, so no residency
@@ -807,6 +988,23 @@ impl<'rt> OdMoeEngine<'rt> {
                     _ => pending.push((slot, true)),
                 }
             }
+            // Unconfirmed slots take the actual experts no confirmed
+            // stream already covers, in route order (multiset-exact:
+            // each route entry is served exactly once).
+            {
+                let mut remaining: Vec<usize> = actual.experts.clone();
+                for pe in owned.iter().flatten() {
+                    if let Some(i) = remaining.iter().position(|x| x == pe) {
+                        remaining.remove(i);
+                    }
+                }
+                let mut rem = remaining.into_iter();
+                for o in owned.iter_mut() {
+                    if o.is_none() {
+                        *o = rem.next();
+                    }
+                }
+            }
             // Phase 2 — gate result: cancel mispredicted streams (their
             // undelivered chunks are reclaimed; delivered chunks stay
             // booked and are simply evicted).
@@ -815,8 +1013,11 @@ impl<'rt> OdMoeEngine<'rt> {
             }
             // Phase 3 — reloads + reactive loads.
             for &(slot, residency) in &pending {
-                let t = self.load_with_failover(l, slot, reactive_t, residency);
-                self.registry.counter_add("engine.expert_loads", 1);
+                let e = owned[slot].expect("every slot owns an expert");
+                let t = self.load_with_failover(l, slot, reactive_t, residency, Some(e));
+                if !self.hot_resident(t.worker, l, e) {
+                    self.registry.counter_add("engine.expert_loads", 1);
+                }
                 holders[slot] = Some(t);
             }
             let holders: Vec<ChunkedTransfer> =
@@ -855,6 +1056,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 let (holder, ec_end) = self.compute_with_failover(
                     l,
                     slot,
+                    owned[slot].expect("every slot owns an expert"),
                     t.worker,
                     ec_earliest,
                     embed_arrival,
@@ -895,6 +1097,11 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         } else {
             format!("od-moe({mode})")
         };
+        let name = if self.cfg.cache.enabled() {
+            format!("{name}+cache[{}]", self.cfg.cache.label())
+        } else {
+            name
+        };
         match &self.cfg.fleet {
             Some(f) => format!("{name}@{}", f.label()),
             None => name,
@@ -915,6 +1122,12 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         }
         self.registry.clear();
         self.token_spans.clear();
+        if let Some(tiers) = self.tiers.as_mut() {
+            for t in tiers {
+                t.reset();
+            }
+        }
+        self.protected.clear();
         for w in &mut self.workers {
             w.ec_ends.clear();
         }
@@ -1084,6 +1297,11 @@ impl<'rt> OdMoeEngine<'rt> {
                 .push(EventKind::MainCompute, self.cluster.main.id, m_start, m_end, "M");
             let reactive_t = m_end + p.lan_lat_ms;
             let usable = pred_avail[l] <= reactive_t;
+            // Reuse-distance protection across the whole batch's
+            // predicted routes (no-op while the cache is disabled).
+            self.rebuild_protected(l, n_layers, |lf| {
+                pred.iter().filter_map(|row| row[lf].as_deref()).collect()
+            });
 
             for (k, c) in correct.iter_mut().enumerate() {
                 let predicted = pred[k][l].as_deref().unwrap_or(&[]);
@@ -1105,7 +1323,7 @@ impl<'rt> OdMoeEngine<'rt> {
             let mut pred_loaded: Vec<(usize, usize, ChunkedTransfer)> = Vec::new();
             for (i, &(pe, _)) in pred_set.iter().enumerate() {
                 let slot = i % group_size;
-                let t = self.load_with_failover(l, slot, pred_avail[l], true);
+                let t = self.load_with_failover(l, slot, pred_avail[l], true, Some(pe));
                 pred_loaded.push((pe, slot, t));
             }
 
@@ -1120,6 +1338,11 @@ impl<'rt> OdMoeEngine<'rt> {
                 if in_actual(entry.0) {
                     continue;
                 }
+                // A mispredicted GPU-hot hit streamed nothing; there is
+                // no train to cancel and the expert simply stays hot.
+                if self.hot_resident(entry.2.worker, l, entry.0) {
+                    continue;
+                }
                 self.registry.counter_add("engine.aborted_loads", 1);
                 self.abort_predicted(&entry.2, reactive_t);
             }
@@ -1130,19 +1353,22 @@ impl<'rt> OdMoeEngine<'rt> {
             // routed to the expert — the amortization at the heart of
             // batched decode.
             let mut ec_count: Vec<usize> = vec![0; group_size];
-            let mut placed: Vec<(usize, usize, ChunkedTransfer)> = Vec::new(); // (rows, slot, stream)
-            let mut pending: Vec<usize> = Vec::new(); // row counts needing a load
+            // (expert, rows, slot, stream)
+            let mut placed: Vec<(usize, usize, usize, ChunkedTransfer)> = Vec::new();
+            let mut pending: Vec<(usize, usize)> = Vec::new(); // (expert, rows)
             for &(ae, cnt) in &actual_set {
                 match pred_loaded.iter().find(|entry| entry.0 == ae) {
                     Some(entry) => {
                         ec_count[entry.1] += 1;
-                        self.registry.counter_add("engine.expert_loads", 1);
-                        placed.push((cnt, entry.1, entry.2.clone()));
+                        if !self.hot_resident(entry.2.worker, l, ae) {
+                            self.registry.counter_add("engine.expert_loads", 1);
+                        }
+                        placed.push((ae, cnt, entry.1, entry.2.clone()));
                     }
-                    None => pending.push(cnt),
+                    None => pending.push((ae, cnt)),
                 }
             }
-            for cnt in pending {
+            for (ae, cnt) in pending {
                 let slot = (0..group_size)
                     .min_by_key(|&sl| (ec_count[sl], sl))
                     .expect("group has at least one slot");
@@ -1151,16 +1377,18 @@ impl<'rt> OdMoeEngine<'rt> {
                 // wrong) prediction the link was just cancelled, exactly
                 // like the sequential mispredict reload; without one the
                 // load also waits for the residency window.
-                let t = self.load_with_failover(l, slot, reactive_t, !usable);
-                self.registry.counter_add("engine.expert_loads", 1);
-                placed.push((cnt, slot, t));
+                let t = self.load_with_failover(l, slot, reactive_t, !usable, Some(ae));
+                if !self.hot_resident(t.worker, l, ae) {
+                    self.registry.counter_add("engine.expert_loads", 1);
+                }
+                placed.push((ae, cnt, slot, t));
             }
 
             // Embeddings for all B tokens ship to the group after M_l.
             // EC gates on every placed expert's FIRST chunk (== the whole
             // expert at chunk count 1, the seed's gate).
             let expert_ready =
-                placed.iter().fold(0.0f64, |m, (_, _, t)| m.max(t.first_ready()));
+                placed.iter().fold(0.0f64, |m, (_, _, _, t)| m.max(t.first_ready()));
             let embed_arrival =
                 self.cluster.lan_send(m_end, p.embed_msg_bytes * b as f64, "embed");
             let ec_earliest = embed_arrival.max(expert_ready);
@@ -1184,12 +1412,13 @@ impl<'rt> OdMoeEngine<'rt> {
             // bookings commute under max). Embed arrival and the return
             // hop honor each holder's LAN attach extra, 0 on uniform
             // clusters — same collapse as sequential decode.
-            placed.sort_by_key(|&(_, slot, _)| slot);
+            placed.sort_by_key(|&(_, _, slot, _)| slot);
             let mut out_ready = ec_earliest;
-            for (cnt, slot, t) in &placed {
+            for (ae, cnt, slot, t) in &placed {
                 let (holder, ec_end) = self.compute_with_failover(
                     l,
                     *slot,
+                    *ae,
                     t.worker,
                     ec_earliest,
                     embed_arrival,
@@ -1339,6 +1568,7 @@ mod tests {
         assert_eq!(cfg.chunks, 1, "default = monolithic transfers");
         assert_eq!(cfg.prefetch_depth, 0, "default = strict single-expert residency");
         assert!(cfg.fleet.is_none(), "default = the uniform shared-profile cluster");
+        assert!(!cfg.cache.enabled(), "default = cacheless (tiered cache disabled)");
     }
 
     #[test]

@@ -32,6 +32,9 @@ pub struct PlanGrid {
     pub chunk_counts: Vec<usize>,
     pub depths: Vec<usize>,
     pub replicas: Vec<usize>,
+    /// Per-worker GPU-hot tier budgets (expert slots) to consider;
+    /// 0 = cacheless, the seed behavior (DESIGN.md §12).
+    pub cache_budgets: Vec<usize>,
 }
 
 impl Default for PlanGrid {
@@ -41,6 +44,7 @@ impl Default for PlanGrid {
             chunk_counts: vec![1, 8],
             depths: vec![0, 1],
             replicas: vec![1],
+            cache_budgets: vec![0],
         }
     }
 }
@@ -57,6 +61,7 @@ impl PlanGrid {
             self.replicas.iter().all(|&r| r >= 1) && !self.replicas.is_empty(),
             "replica counts must be >= 1"
         );
+        ensure!(!self.cache_budgets.is_empty(), "grid needs at least one cache budget (0 = off)");
         Ok(())
     }
 }
@@ -73,6 +78,8 @@ pub struct PlanCandidate {
     pub chunks: usize,
     pub prefetch_depth: usize,
     pub replicas: usize,
+    /// Per-worker GPU-hot cache budget in expert slots (0 = cacheless).
+    pub cache_hot: usize,
 }
 
 /// `base` with an in-flight transfer precision applied: `expert_bytes`
@@ -89,15 +96,22 @@ pub fn precision_scaled(base: &HardwareProfile, precision: Precision) -> Hardwar
 
 impl PlanCandidate {
     /// Human-readable candidate id, also the deterministic tie-breaker.
+    /// Cacheless candidates keep the pre-cache label so old plan files
+    /// and new ones name the same deployment the same way.
     pub fn label(&self) -> String {
-        format!(
+        let base = format!(
             "{}/{}/c{}/d{}/r{}",
             self.fleet.label(),
             self.precision.label(),
             self.chunks,
             self.prefetch_depth,
             self.replicas
-        )
+        );
+        if self.cache_hot > 0 {
+            format!("{base}/h{}", self.cache_hot)
+        } else {
+            base
+        }
     }
 
     /// The base profile with this candidate's transfer precision applied.
@@ -204,71 +218,75 @@ pub fn search(
             for &chunks in &grid.chunk_counts {
                 for &prefetch_depth in &grid.depths {
                     for &replicas in &grid.replicas {
-                        let cand = PlanCandidate {
-                            fleet: sub.clone(),
-                            precision,
-                            chunks,
-                            prefetch_depth,
-                            replicas,
-                        };
-                        let scaled = cand.scaled_profile(base);
-                        // Window prefilter: every included class must
-                        // hold one slot inside its own Eq. (1) window
-                        // (the subset without an incapable class is its
-                        // own candidate, so pruning loses nothing).
-                        let window_ok = sub.entries().iter().all(|(c, _)| {
-                            c.worker_profile(&scaled).reroute_feasible(1, n_groups, chunks)
-                        });
-                        // Memory prefilter: steady residency (depth + 1
-                        // staged experts + workspace) within each
-                        // class's budget.
-                        let mem_floor_ok = sub.entries().iter().all(|(c, _)| {
-                            (prefetch_depth + 1) as f64 * scaled.expert_bytes
-                                + scaled.activation_bytes
-                                <= c.mem_bytes
-                        });
-                        if !window_ok || !mem_floor_ok {
-                            pruned += 1;
-                            continue;
+                        for &cache_hot in &grid.cache_budgets {
+                            let cand = PlanCandidate {
+                                fleet: sub.clone(),
+                                precision,
+                                chunks,
+                                prefetch_depth,
+                                replicas,
+                                cache_hot,
+                            };
+                            let scaled = cand.scaled_profile(base);
+                            // Window prefilter: every included class must
+                            // hold one slot inside its own Eq. (1) window
+                            // (the subset without an incapable class is its
+                            // own candidate, so pruning loses nothing).
+                            let window_ok = sub.entries().iter().all(|(c, _)| {
+                                c.worker_profile(&scaled).reroute_feasible(1, n_groups, chunks)
+                            });
+                            // Memory prefilter: steady residency (depth + 1
+                            // staged experts + the GPU-hot cache budget +
+                            // workspace) within each class's budget.
+                            let mem_floor_ok = sub.entries().iter().all(|(c, _)| {
+                                (prefetch_depth + 1 + cache_hot) as f64 * scaled.expert_bytes
+                                    + scaled.activation_bytes
+                                    <= c.mem_bytes
+                            });
+                            if !window_ok || !mem_floor_ok {
+                                pruned += 1;
+                                continue;
+                            }
+                            let meas = eval(&cand)
+                                .with_context(|| format!("evaluating plan {}", cand.label()))?;
+                            ensure!(
+                                meas.worker_peak_bytes.len() == sub.n_nodes(),
+                                "{}: one worker peak per node ({} vs {})",
+                                cand.label(),
+                                meas.worker_peak_bytes.len(),
+                                sub.n_nodes()
+                            );
+                            let classes = sub.node_classes();
+                            let mem_ok = classes
+                                .iter()
+                                .zip(&meas.worker_peak_bytes)
+                                .all(|(c, &peak)| peak <= c.mem_bytes);
+                            let bound = crate::metrics::memory::fleet_worker_bound_bytes(
+                                &scaled,
+                                group_size,
+                                max_batch,
+                                prefetch_depth,
+                                cache_hot,
+                            );
+                            let ledger_within_audit =
+                                meas.worker_peak_bytes.iter().all(|&peak| peak <= bound + 0.5);
+                            let total_gpu_bytes = (meas.main_peak_bytes
+                                + meas.shadow_peak_bytes
+                                + meas.worker_peak_bytes.iter().sum::<f64>())
+                                * replicas as f64;
+                            let cost = sub.bill() * replicas as f64;
+                            let meets_slo = meas.tpot_p99_ms <= slo_p99_tpot_ms;
+                            points.push(PlanPoint {
+                                candidate: cand,
+                                meas,
+                                total_gpu_bytes,
+                                cost,
+                                mem_ok,
+                                ledger_within_audit,
+                                meets_slo,
+                                pareto: false,
+                            });
                         }
-                        let meas = eval(&cand)
-                            .with_context(|| format!("evaluating plan {}", cand.label()))?;
-                        ensure!(
-                            meas.worker_peak_bytes.len() == sub.n_nodes(),
-                            "{}: one worker peak per node ({} vs {})",
-                            cand.label(),
-                            meas.worker_peak_bytes.len(),
-                            sub.n_nodes()
-                        );
-                        let classes = sub.node_classes();
-                        let mem_ok = classes
-                            .iter()
-                            .zip(&meas.worker_peak_bytes)
-                            .all(|(c, &peak)| peak <= c.mem_bytes);
-                        let bound = crate::metrics::memory::fleet_worker_bound_bytes(
-                            &scaled,
-                            group_size,
-                            max_batch,
-                            prefetch_depth,
-                        );
-                        let ledger_within_audit =
-                            meas.worker_peak_bytes.iter().all(|&peak| peak <= bound + 0.5);
-                        let total_gpu_bytes = (meas.main_peak_bytes
-                            + meas.shadow_peak_bytes
-                            + meas.worker_peak_bytes.iter().sum::<f64>())
-                            * replicas as f64;
-                        let cost = sub.bill() * replicas as f64;
-                        let meets_slo = meas.tpot_p99_ms <= slo_p99_tpot_ms;
-                        points.push(PlanPoint {
-                            candidate: cand,
-                            meas,
-                            total_gpu_bytes,
-                            cost,
-                            mem_ok,
-                            ledger_within_audit,
-                            meets_slo,
-                            pareto: false,
-                        });
                     }
                 }
             }
@@ -318,6 +336,7 @@ fn candidate_json(c: &PlanCandidate) -> Vec<(&'static str, Json)> {
         ("chunks", Json::Num(c.chunks as f64)),
         ("prefetch_depth", Json::Num(c.prefetch_depth as f64)),
         ("replicas", Json::Num(c.replicas as f64)),
+        ("cache_hot", Json::Num(c.cache_hot as f64)),
     ]
 }
 
@@ -347,6 +366,10 @@ pub fn plan_json(report: &PlanReport, fleet: &FleetSpec, grid: &PlanGrid, seed: 
         ),
         ("depths", Json::Arr(grid.depths.iter().map(|&d| Json::Num(d as f64)).collect())),
         ("replicas", Json::Arr(grid.replicas.iter().map(|&r| Json::Num(r as f64)).collect())),
+        (
+            "cache_budgets",
+            Json::Arr(grid.cache_budgets.iter().map(|&h| Json::Num(h as f64)).collect()),
+        ),
     ]);
     let points = Json::Arr(
         report
@@ -403,6 +426,9 @@ pub struct PlanChoice {
     pub chunks: usize,
     pub prefetch_depth: usize,
     pub replicas: usize,
+    /// Per-worker GPU-hot cache budget; plan files written before the
+    /// tiered cache existed read back as 0 (cacheless).
+    pub cache_hot: usize,
     /// The p99 TPOT the plan claimed when it was chosen (re-simulation
     /// should reproduce it — virtual time is deterministic).
     pub claimed_tpot_p99_ms: f64,
@@ -421,6 +447,10 @@ impl PlanChoice {
             chunks: chosen.get("chunks")?.as_usize()?,
             prefetch_depth: chosen.get("prefetch_depth")?.as_usize()?,
             replicas: chosen.get("replicas")?.as_usize()?,
+            cache_hot: match chosen.get("cache_hot") {
+                Ok(v) => v.as_usize()?,
+                Err(_) => 0, // pre-cache plan file
+            },
             claimed_tpot_p99_ms: chosen.get("tpot_p99_ms")?.as_f64()?,
         })
     }
@@ -576,6 +606,7 @@ mod tests {
             chunk_counts: vec![1],
             depths: vec![0],
             replicas: vec![1],
+            cache_budgets: vec![0],
         };
         let r = search(&f, &base, 2, 4, 1e6, &grid, |c| {
             let mut m = fake_eval(c, &base);
@@ -592,5 +623,41 @@ mod tests {
             r.points.iter().all(|p| !p.ledger_within_audit),
             "5 GB peaks also exceed the analytic audit bound"
         );
+    }
+
+    #[test]
+    fn cache_budget_is_a_search_dimension_with_backward_compatible_labels() {
+        let base = HardwareProfile::rtx3090();
+        let f = FleetSpec::uniform(NodeClass::rtx3080(), 4).unwrap();
+        let grid = PlanGrid {
+            precisions: vec![Precision::Nf4],
+            chunk_counts: vec![1],
+            depths: vec![0],
+            replicas: vec![1],
+            cache_budgets: vec![0, 2],
+        };
+        let r = search(&f, &base, 2, 1, 1e6, &grid, |c| Ok(fake_eval(c, &base))).unwrap();
+        let labels: Vec<String> = r.points.iter().map(|p| p.candidate.label()).collect();
+        // Budget 0 keeps the pre-cache label; budget 2 gets the /h suffix.
+        assert!(labels.iter().any(|l| !l.contains("/h")), "{labels:?}");
+        assert!(labels.iter().any(|l| l.ends_with("/h2")), "{labels:?}");
+        // A budget too large for the class's memory floor is pruned, not
+        // measured: nano (1 GB) cannot hold 8 extra nf4 experts.
+        let tiny = FleetSpec::uniform(NodeClass::nano(), 2).unwrap();
+        let big = PlanGrid { cache_budgets: vec![8], ..grid.clone() };
+        let r = search(&tiny, &base, 2, 1, 1e6, &big, |c| Ok(fake_eval(c, &base))).unwrap();
+        assert!(r.points.is_empty() && r.pruned > 0, "oversized cache budgets must be pruned");
+        // Round trip: a chosen cached plan reads back its budget, and a
+        // pre-cache plan file (no cache_hot key) defaults to 0.
+        let full = PlanGrid { cache_budgets: vec![2], ..grid };
+        let r = search(&f, &base, 2, 1, 1e6, &full, |c| Ok(fake_eval(c, &base))).unwrap();
+        let doc = plan_json(&r, &f, &full, 7);
+        assert_eq!(PlanChoice::from_json(&doc).unwrap().cache_hot, 2);
+        let legacy = Json::parse(
+            "{\"chosen\":{\"fleet\":\"rtx3080:4\",\"precision\":\"nf4\",\"chunks\":1,\
+             \"prefetch_depth\":0,\"replicas\":1,\"tpot_p99_ms\":10.0}}",
+        )
+        .unwrap();
+        assert_eq!(PlanChoice::from_json(&legacy).unwrap().cache_hot, 0);
     }
 }

@@ -12,7 +12,8 @@
 //! Artifacts the sweep subcommands write: `BENCH_serve.json`
 //! (`serve --rates`), `BENCH_batch.json` (`serve --batch-sweep`),
 //! `BENCH_failover.json` (`serve --failover-sweep`), `BENCH_overlap.json`
-//! (`decode --overlap-sweep`), `BENCH_plan.json` (`plan`, DESIGN.md §10),
+//! (`decode --overlap-sweep`), `BENCH_cache.json` (`serve --cache-sweep`,
+//! DESIGN.md §12), `BENCH_plan.json` (`plan`, DESIGN.md §10),
 //! `BENCH_attrib.json` (`serve --attribution`), `ATTRIB.json`
 //! (`decode --attribution`), `BENCH_perf.json` (`bench`), and
 //! `METRICS_<cmd>.jsonl` (`--metrics`, DESIGN.md §11).
@@ -102,6 +103,12 @@ const SERVE_FLAGS: &[Flag] = workload_flags![+
     val("fleet", "SPEC", "heterogeneous fleet, e.g. rtx3080:4,jetson:4,nano:2"),
     val("plan", "FILE", "run the deployment chosen in BENCH_plan.json"),
     switch("attribution", "per-rate attribution sweep; writes BENCH_attrib.json"),
+    val("cache-hot", "N", "GPU-hot tier budget, expert slots (default 0 = cacheless)"),
+    val("cache-warm", "N", "CPU-warm tier budget, expert slots (default 0)"),
+    val("cache-cold", "N", "SSD-cold tier budget, expert slots (default 0)"),
+    val("cache-policy", "P", "eviction policy lru|sieve|reuse (default lru)"),
+    switch("cache-sweep", "hot-budget sweep; writes BENCH_cache.json (§12)"),
+    val("cache-grid", "H1,H2,..", "budgets for --cache-sweep (default 0,1,2,4,8)"),
     switch("metrics", "export the metrics registry to METRICS_serve.jsonl"),
 ];
 
@@ -115,6 +122,10 @@ const DECODE_FLAGS: &[Flag] = &[
     val("fleet", "SPEC", "heterogeneous fleet, e.g. rtx3080:4,jetson:4,nano:2"),
     val("plan", "FILE", "decode on the deployment chosen in BENCH_plan.json"),
     switch("attribution", "per-token critical-path table; writes ATTRIB.json"),
+    val("cache-hot", "N", "GPU-hot tier budget, expert slots (default 0 = cacheless)"),
+    val("cache-warm", "N", "CPU-warm tier budget, expert slots (default 0)"),
+    val("cache-cold", "N", "SSD-cold tier budget, expert slots (default 0)"),
+    val("cache-policy", "P", "eviction policy lru|sieve|reuse (default lru)"),
     switch("metrics", "export the metrics registry to METRICS_decode.jsonl"),
 ];
 
@@ -138,6 +149,7 @@ const MEMORY_FLAGS: &[Flag] = &[
     val("precision", "P", "transfer precision for the fleet audit (default fp16)"),
     val("max-batch", "N", "batched residency bound for the fleet audit (default 1)"),
     val("prefetch-depth", "D", "staging depth for the fleet audit (default 0)"),
+    val("cache-hot", "N", "GPU-hot cache slots added to the bound (default 0)"),
 ];
 
 const PLAN_FLAGS: &[Flag] = workload_flags![+
@@ -147,6 +159,7 @@ const PLAN_FLAGS: &[Flag] = workload_flags![+
     val("chunk-grid", "K1,K2,..", "chunk counts to search (default 1,8)"),
     val("depth-grid", "D1,D2,..", "prefetch depths to search (default 0,1)"),
     val("replica-grid", "R1,R2,..", "replica counts to search (default 1)"),
+    val("cache-grid", "H1,H2,..", "GPU-hot cache budgets to search (default 0)"),
     switch("metrics", "export planner + engine metrics to METRICS_plan.jsonl"),
 ];
 

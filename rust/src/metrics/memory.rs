@@ -74,20 +74,22 @@ pub fn odmoe_batched(
 
 /// OD-MoE residency across a heterogeneous fleet (DESIGN.md §10): one
 /// entry per node, labelled `class/worker<i>`, bounding the transient
-/// per-worker residency at `ceil(distinct / group_size) + depth` staged
-/// experts (batched co-residency — see [`odmoe_batched`] — plus the
-/// speculative prefetch depth) in *`p`-scaled* expert payloads. Pass the
-/// planner candidate's precision-scaled profile to audit a plan; the
-/// planner cross-checks engine ledger peaks against this bound and each
-/// class's `mem_bytes` budget.
+/// per-worker residency at `ceil(distinct / group_size) + depth +
+/// cache_hot` staged experts (batched co-residency — see
+/// [`odmoe_batched`] — plus the speculative prefetch depth plus the
+/// tiered cache's GPU-hot budget, DESIGN.md §12) in *`p`-scaled* expert
+/// payloads. Pass the planner candidate's precision-scaled profile to
+/// audit a plan; the planner cross-checks engine ledger peaks against
+/// this bound and each class's `mem_bytes` budget.
 pub fn odmoe_fleet(
     p: &HardwareProfile,
     fleet: &FleetSpec,
     group_size: usize,
     max_batch: usize,
     prefetch_depth: usize,
+    cache_hot: usize,
 ) -> MemoryAudit {
-    let bound = fleet_worker_bound_bytes(p, group_size, max_batch, prefetch_depth);
+    let bound = fleet_worker_bound_bytes(p, group_size, max_batch, prefetch_depth, cache_hot);
     let mut per_node = vec![
         ("main".to_string(), p.nonexpert_bytes),
         ("shadow".to_string(), p.shadow_model_bytes),
@@ -99,19 +101,24 @@ pub fn odmoe_fleet(
 }
 
 /// The per-worker transient residency bound behind [`odmoe_fleet`]:
-/// `ceil(distinct / group_size) + prefetch_depth` staged experts (in
-/// `p`-scaled payloads) plus workspace. The single formula both the
-/// audit and the planner's `ledger_within_audit` cross-check consult —
-/// sharing it is what makes that cross-check meaningful.
+/// `ceil(distinct / group_size) + prefetch_depth + cache_hot` staged
+/// experts (in `p`-scaled payloads) plus workspace — `cache_hot` is the
+/// tiered cache's GPU-hot budget in expert slots (0 = cacheless, the
+/// seed bound). The single formula the audit, the planner's
+/// `ledger_within_audit` cross-check, and the serve scheduler's
+/// admission reservation consult — sharing it is what makes those
+/// cross-checks meaningful.
 pub fn fleet_worker_bound_bytes(
     p: &HardwareProfile,
     group_size: usize,
     max_batch: usize,
     prefetch_depth: usize,
+    cache_hot: usize,
 ) -> f64 {
     assert!(group_size > 0 && max_batch > 0, "need a group and a batch");
     let distinct = (PAPER_TOP_K * max_batch).min(PAPER_EXPERTS_PER_LAYER);
-    (distinct.div_ceil(group_size) + prefetch_depth) as f64 * p.expert_bytes + p.activation_bytes
+    (distinct.div_ceil(group_size) + prefetch_depth + cache_hot) as f64 * p.expert_bytes
+        + p.activation_bytes
 }
 
 /// Fully GPU-cached full-precision deployment (Transformers reference).
@@ -207,7 +214,7 @@ mod tests {
         let fleet = FleetSpec::parse("rtx3080:2,nano:1").unwrap();
         // Sequential, no prefetch, full precision: same per-worker bound
         // as the uniform sequential audit.
-        let a = odmoe_fleet(&base, &fleet, 2, 1, 0);
+        let a = odmoe_fleet(&base, &fleet, 2, 1, 0, 0);
         assert_eq!(a.per_node[2].0, "rtx3080/worker0");
         assert_eq!(a.per_node[4].0, "nano/worker2");
         assert_eq!(a.per_node[2].1, base.expert_bytes + base.activation_bytes);
@@ -215,13 +222,25 @@ mod tests {
         // one staged expert; fp16 with prefetch does not.
         let nf4 = HardwareProfile { expert_bytes: base.expert_bytes * 0.28, ..base.clone() };
         let nano_budget = 1e9;
-        let tight = odmoe_fleet(&nf4, &fleet, 2, 1, 1);
+        let tight = odmoe_fleet(&nf4, &fleet, 2, 1, 1, 0);
         assert!(tight.per_node[4].1 <= nano_budget, "{}", tight.per_node[4].1);
-        let loose = odmoe_fleet(&base, &fleet, 2, 1, 1);
+        let loose = odmoe_fleet(&base, &fleet, 2, 1, 1, 0);
         assert!(loose.per_node[4].1 > nano_budget, "fp16 + depth 1 must blow the budget");
         // Batched residency adds on top of prefetch depth.
-        let batched = odmoe_fleet(&base, &fleet, 2, 4, 1);
+        let batched = odmoe_fleet(&base, &fleet, 2, 4, 1, 0);
         assert!(batched.per_node[2].1 > loose.per_node[2].1);
+    }
+
+    #[test]
+    fn cache_hot_budget_adds_expert_payloads_to_the_bound() {
+        let p = HardwareProfile::rtx3090();
+        let cacheless = fleet_worker_bound_bytes(&p, 2, 1, 0, 0);
+        let hot2 = fleet_worker_bound_bytes(&p, 2, 1, 0, 2);
+        assert_eq!(hot2, cacheless + 2.0 * p.expert_bytes);
+        // The audit mirrors the shared bound per node.
+        let fleet = FleetSpec::parse("rtx3080:2,nano:1").unwrap();
+        let audit = odmoe_fleet(&p, &fleet, 2, 1, 0, 2);
+        assert_eq!(audit.per_node[2].1, hot2);
     }
 
     #[test]

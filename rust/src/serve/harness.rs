@@ -12,6 +12,11 @@
 //!   fraction-of-fully-cached vs. transfer chunk count and speculative
 //!   prefetch depth (DESIGN.md §9), read against the monolithic
 //!   (chunks 1, depth 0) baseline.
+//! * [`cache_sweep`] → `BENCH_cache.json` — ms/token and
+//!   loads-per-token vs. the tiered cache's GPU-hot budget
+//!   (DESIGN.md §12), read against the cacheless (budget 0) baseline
+//!   and the fully-cached ceiling, locating the crossover between pure
+//!   OD-MoE, tiered residency, and a fully-cached deployment.
 //!
 //! Each (system, point) run regenerates the workload at that rate from
 //! the *same* seed — prompts and lengths are identical across points
@@ -106,6 +111,13 @@ pub fn parse_depths(s: &str) -> Result<Vec<usize>> {
     parse_usize_sweep(s, "prefetch depth", 0, 0)
 }
 
+/// Parse a `--cache-grid 0,2,8,64` GPU-hot budget list for the cache
+/// sweep. Budget 0 — the cacheless seed engine every other point is
+/// pinned against — is prepended when absent.
+pub fn parse_cache_budgets(s: &str) -> Result<Vec<usize>> {
+    parse_usize_sweep(s, "cache budget", 0, 0)
+}
+
 /// Build the workload + scheduler configuration from CLI flags — shared
 /// by `od-moe serve` and `examples/load_test.rs` so the two cannot
 /// drift. Returns (spec, scheduler config, single-run offered rate).
@@ -118,7 +130,10 @@ pub fn parse_depths(s: &str) -> Result<Vec<usize>> {
 /// `--replicas`, `--mem-gb`, `--preempt-ms`, `--max-batch` (1 =
 /// sequential dispatch), `--shared-prompt` (every request decodes the
 /// same prompt — the shared-routing workload), `--fail-replica N@MS`
-/// (fail-stop replica N at virtual time MS; its sessions re-queue).
+/// (fail-stop replica N at virtual time MS; its sessions re-queue),
+/// `--cache-hot N` (per-worker GPU-hot tier budget; its expert payloads
+/// are reserved out of the admission budget up front — DESIGN.md §12 —
+/// so 0, the default, leaves the cacheless admission schedule intact).
 pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, SchedulerConfig, f64)> {
     // Back-compat: the old FCFS server took `--arrival-gap-ms`.
     let rate = match a.get("arrival-gap-ms") {
@@ -163,10 +178,16 @@ pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, Scheduler
     };
     let max_batch = a.usize_or("max-batch", 1)?;
     ensure!(max_batch >= 1, "--max-batch must be >= 1, got {max_batch}");
+    let profile = HardwareProfile::rtx3090();
+    // GPU-hot cache residency holds its bytes across tokens, so the
+    // admission budget only sees what the reservation leaves behind.
+    let cache_hot = a.usize_or("cache-hot", 0)?;
+    let reserved = (cache_hot as f64 * profile.expert_bytes) as u64;
     let sched = SchedulerConfig {
         policy: Policy::parse(a.get_or("policy", "fcfs"))?,
         n_replicas: a.usize_or("replicas", 1)?,
-        memory: MemoryModel::from_profile(&HardwareProfile::rtx3090(), a.f64_or("mem-gb", 24.0)?),
+        memory: MemoryModel::from_profile(&profile, a.f64_or("mem-gb", 24.0)?)
+            .with_reservation(reserved),
         preempt_budget_ms: a.get("preempt-ms").map(|s| s.parse::<f64>()).transpose()?,
         max_batch,
         replica_failures: match a.get("fail-replica") {
@@ -584,6 +605,128 @@ pub fn overlap_json(
     ])
 }
 
+/// One point of a [`cache_sweep`]: decode with a per-worker GPU-hot
+/// tier of `budget` expert slots (0 = the cacheless seed engine), read
+/// against the budget-0 baseline and the fully-cached ceiling
+/// (DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct CachePoint {
+    pub budget: usize,
+    pub decode_ms: f64,
+    /// Decode virtual time per generated token.
+    pub ms_per_token: f64,
+    /// Expert-train loads actually streamed per token — GPU-hot hits
+    /// skip the train, so this is the axis where the cache's bandwidth
+    /// savings show up (1 load/token/slot cacheless, → 0 fully cached).
+    pub loads_per_token: f64,
+    pub stall_ms: f64,
+    /// `fully-cached ms/token / this point's ms/token` — approaches 1
+    /// as the hot tier absorbs the working set.
+    pub frac_of_fully_cached: f64,
+    /// The residency contract: cache budgets change *when and whether*
+    /// bytes move, never *which* tokens decode.
+    pub tokens_match_baseline: bool,
+}
+
+impl CachePoint {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("budget", Json::Num(self.budget as f64)),
+            ("decode_ms", num(self.decode_ms)),
+            ("ms_per_token", num(self.ms_per_token)),
+            ("loads_per_token", num(self.loads_per_token)),
+            ("stall_ms", num(self.stall_ms)),
+            ("frac_of_fully_cached", num(self.frac_of_fully_cached)),
+            ("tokens_match_baseline", Json::Bool(self.tokens_match_baseline)),
+        ])
+    }
+}
+
+/// Run one decode session at every GPU-hot budget and report ms/token
+/// and loads/token against the cacheless baseline and the fully-cached
+/// ceiling. `run(budget)` must execute the *same* session on a fresh
+/// engine whose tiered cache holds `budget` hot slots per worker;
+/// budget 0 — which [`parse_cache_budgets`] guarantees is present — is
+/// the cacheless seed engine, booked bit-identically (tokens *and*
+/// timings) to a build without the cache subsystem, and every other
+/// point's token stream is checked against it.
+/// `fully_cached_ms_per_token` is the ceiling from the fully-cached
+/// reference engine on the same session. The closure boundary keeps the
+/// sweep engine-agnostic and unit-testable without the PJRT runtime.
+pub fn cache_sweep<F>(
+    budgets: &[usize],
+    fully_cached_ms_per_token: f64,
+    mut run: F,
+) -> Result<Vec<CachePoint>>
+where
+    F: FnMut(usize) -> Result<crate::coordinator::BatchRunResult>,
+{
+    ensure!(
+        budgets.contains(&0),
+        "the sweep needs the cacheless (budget 0) baseline point"
+    );
+    ensure!(
+        fully_cached_ms_per_token.is_finite() && fully_cached_ms_per_token > 0.0,
+        "fully-cached reference ms/token must be finite and positive"
+    );
+    let baseline = run(0)?;
+    ensure!(
+        baseline.sessions.len() == 1,
+        "cache sweep measures one session per run, got {}",
+        baseline.sessions.len()
+    );
+    ensure!(
+        baseline.decode_tokens > 0 && baseline.sessions[0].decode_ms > 0.0,
+        "baseline decode must produce tokens in positive time"
+    );
+    let mut points = Vec::with_capacity(budgets.len());
+    for &budget in budgets {
+        let res = if budget == 0 { baseline.clone() } else { run(budget)? };
+        ensure!(res.sessions.len() == 1, "one session per cache run");
+        let s = &res.sessions[0];
+        ensure!(
+            s.decode_ms.is_finite() && s.stall_ms.is_finite() && res.decode_tokens > 0,
+            "non-finite decode at cache budget {budget}"
+        );
+        let ms_per_token = s.decode_ms / res.decode_tokens as f64;
+        points.push(CachePoint {
+            budget,
+            decode_ms: s.decode_ms,
+            ms_per_token,
+            loads_per_token: res.loads_per_token(),
+            stall_ms: s.stall_ms,
+            frac_of_fully_cached: fully_cached_ms_per_token / ms_per_token,
+            tokens_match_baseline: s.tokens == baseline.sessions[0].tokens,
+        });
+    }
+    Ok(points)
+}
+
+/// Assemble the `BENCH_cache.json` document.
+pub fn cache_json(
+    points: &[CachePoint],
+    seed: u64,
+    budgets: &[usize],
+    fleet: &str,
+    policy: &str,
+    out_tokens: usize,
+    fully_cached_ms_per_token: f64,
+) -> Json {
+    obj(vec![
+        ("bench", Json::Str("cache".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("fleet", Json::Str(fleet.to_string())),
+        ("policy", Json::Str(policy.to_string())),
+        (
+            "cache_budgets",
+            Json::Arr(budgets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        ("out_tokens", Json::Num(out_tokens as f64)),
+        ("fully_cached_ms_per_token", num(fully_cached_ms_per_token)),
+        ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+    ])
+}
+
 /// One arrival rate's aggregate critical-path attribution in an
 /// [`attribution_sweep`]: per-phase time summed over every decoded token
 /// of every session served at that rate (DESIGN.md §11).
@@ -827,6 +970,85 @@ mod tests {
         // A run whose tokens drift under chunking must be flagged.
         let drift = overlap_sweep(&[1, 2], &[0], 30.0, |c, _| {
             Ok(fake(c, 0, if c == 1 { vec![1] } else { vec![2] }))
+        })
+        .unwrap();
+        assert!(!drift[1].tokens_match_baseline);
+    }
+
+    #[test]
+    fn parse_cache_budgets_injects_cacheless_baseline() {
+        assert_eq!(parse_cache_budgets("2,8").unwrap(), vec![0, 2, 8]);
+        assert_eq!(parse_cache_budgets("0,64").unwrap(), vec![0, 64]);
+        assert!(parse_cache_budgets("").is_err());
+    }
+
+    #[test]
+    fn cache_reservation_shrinks_admission_budget_and_zero_is_identity() {
+        let p = HardwareProfile::rtx3090();
+        let base = MemoryModel::from_profile(&p, 24.0);
+        let same = base.with_reservation(0);
+        assert_eq!(same.budget_bytes, base.budget_bytes, "budget 0 must change nothing");
+        let two = base.with_reservation(2 * p.expert_bytes as u64);
+        assert_eq!(two.budget_bytes, base.budget_bytes - 2 * p.expert_bytes as u64);
+        assert_eq!(two.kv_bytes_per_token, base.kv_bytes_per_token);
+        // Oversized reservations saturate instead of wrapping.
+        assert_eq!(base.with_reservation(u64::MAX).budget_bytes, 0);
+    }
+
+    #[test]
+    fn cache_sweep_is_deterministic_and_flags_token_drift() {
+        use crate::coordinator::{BatchRunResult, PromptResult};
+        // Synthetic engine: each hot slot absorbs one of 8 loads/iter
+        // and shaves decode toward the 240 ms fully-cached floor.
+        let fake = |budget: usize, tokens: Vec<u32>| {
+            let hot = budget.min(8) as f64;
+            BatchRunResult {
+                sessions: vec![PromptResult {
+                    ttft_ms: 100.0,
+                    decode_ms: 320.0 - 10.0 * hot,
+                    tokens,
+                    stall_ms: 40.0 * (1.0 - hot / 8.0),
+                    ..PromptResult::default()
+                }],
+                expert_loads: (8 * (8 - budget.min(8))) as u64,
+                aborted_loads: 0,
+                failovers: 0,
+                decode_tokens: 8,
+                decode_iterations: 8,
+                decode_span_ms: 0.0,
+            }
+        };
+        let budgets = [0usize, 2, 8];
+        let run = || {
+            let points =
+                cache_sweep(&budgets, 30.0, |b| Ok(fake(b, vec![1, 2, 3]))).unwrap();
+            cache_json(&points, 42, &budgets, "uniform:8", "lru:h8w0c0", 8, 30.0).to_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same inputs must reproduce the file byte for byte");
+        assert!(a.contains("\"bench\":\"cache\""));
+        assert!(a.contains("\"cache_budgets\":[0,2,8]"));
+        assert!(a.contains("\"tokens_match_baseline\":true"));
+
+        let points =
+            cache_sweep(&budgets, 30.0, |b| Ok(fake(b, vec![1, 2, 3]))).unwrap();
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].budget, 0);
+        assert!((points[0].ms_per_token - 40.0).abs() < 1e-9);
+        assert!((points[0].loads_per_token - 8.0).abs() < 1e-9);
+        // ms/token and loads/token strictly improve with hot budget.
+        for w in points.windows(2) {
+            assert!(w[1].ms_per_token < w[0].ms_per_token);
+            assert!(w[1].loads_per_token < w[0].loads_per_token);
+            assert!(w[1].frac_of_fully_cached > w[0].frac_of_fully_cached);
+        }
+        // The whole working set resident: no loads at all.
+        assert_eq!(points[2].loads_per_token, 0.0);
+        // A sweep without the budget-0 pin is rejected.
+        assert!(cache_sweep(&[2, 8], 30.0, |b| Ok(fake(b, vec![1]))).is_err());
+        // A run whose tokens drift under caching must be flagged.
+        let drift = cache_sweep(&[0, 4], 30.0, |b| {
+            Ok(fake(b, if b == 0 { vec![1] } else { vec![2] }))
         })
         .unwrap();
         assert!(!drift[1].tokens_match_baseline);

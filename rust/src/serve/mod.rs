@@ -25,7 +25,8 @@
 //! * [`harness`] — sweep drivers that run any [`Engine`] (OD-MoE and
 //!   every baseline) across arrival rates, batch sizes and worker-failure
 //!   counts, emitting the deterministic `BENCH_serve.json`,
-//!   `BENCH_batch.json` and `BENCH_failover.json` artifacts.
+//!   `BENCH_batch.json`, `BENCH_failover.json` and `BENCH_cache.json`
+//!   artifacts.
 //!
 //! Failures surface at two levels: engine-level node faults
 //! ([`crate::coordinator::FailureSpec`], DESIGN.md §8) reroute expert
@@ -50,10 +51,11 @@ pub mod scheduler;
 
 pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
 pub use harness::{
-    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, config_from_args,
-    failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
-    parse_chunk_counts, parse_depths, parse_rates, parse_replica_failures, rate_sweep,
-    sweep_json, write_bench, AttribPoint, BatchPoint, FailoverPoint, OverlapPoint,
+    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
+    config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
+    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates, parse_replica_failures,
+    rate_sweep, sweep_json, write_bench, AttribPoint, BatchPoint, CachePoint, FailoverPoint,
+    OverlapPoint,
 };
 pub use metrics::{Histogram, Percentiles, ServeReport, TenantReport};
 pub use scheduler::{

@@ -174,6 +174,21 @@ impl MemoryModel {
         self.session_fixed_bytes
             + self.kv_bytes_per_token * (r.prompt.len() + r.out_tokens) as u64
     }
+
+    /// `self` with `bytes` carved out of the admission budget up front —
+    /// how the tiered cache's per-worker GPU-hot reservation (DESIGN.md
+    /// §12) enters admission accounting: hot-resident experts hold their
+    /// bytes across tokens, so sessions compete for what remains.
+    /// Saturates at zero (an oversized reservation admits nothing rather
+    /// than wrapping); a zero reservation is the identity, preserving the
+    /// cacheless admission schedule bit for bit.
+    pub fn with_reservation(&self, bytes: u64) -> Self {
+        Self {
+            budget_bytes: self.budget_bytes.saturating_sub(bytes),
+            kv_bytes_per_token: self.kv_bytes_per_token,
+            session_fixed_bytes: self.session_fixed_bytes,
+        }
+    }
 }
 
 /// Scheduler configuration.

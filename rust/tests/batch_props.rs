@@ -6,6 +6,7 @@
 //! convention as `engine_integration.rs`: they panic with a pointer to
 //! `make artifacts` when the artifacts are absent).
 
+use odmoe::cache::{CacheConfig, TierPolicy};
 use odmoe::cluster::HardwareProfile;
 use odmoe::coordinator::batch::merge_distinct;
 use odmoe::coordinator::baselines::FullyCachedEngine;
@@ -365,4 +366,204 @@ fn shared_routing_amortizes_loads_and_raises_throughput() {
         prev_lpt = lpt;
         prev_tps = tps;
     }
+}
+
+// ---------------------------------------------------------------------
+// Tiered expert cache (DESIGN.md §12): budget-0 pins, warm-tier timing
+// neutrality, eviction-storm ledger reconciliation, and convergence
+// toward the fully-cached ceiling.
+// ---------------------------------------------------------------------
+
+/// Budget 0 is the seed engine, bit-for-bit: an explicit all-zero
+/// [`CacheConfig`] (under every eviction policy — the policy must be
+/// inert when no tier has capacity) reproduces the default engine's
+/// tokens AND timings on the sequential, batched, chunked, and
+/// failure-injection paths.
+#[test]
+fn budget_zero_cache_is_bit_identical_across_all_paths() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(7, 16, rt.cfg.vocab_size as u32);
+    let zero = |policy| CacheConfig { hot: 0, warm: 0, cold: 0, policy };
+
+    let variants: Vec<(&str, OdMoeConfig)> = vec![
+        ("sequential/sep", OdMoeConfig::default()),
+        (
+            "sequential/no-prefetch",
+            OdMoeConfig { predictor: PredictorMode::None, ..OdMoeConfig::default() },
+        ),
+        (
+            "chunked+staged",
+            OdMoeConfig { chunks: 4, prefetch_depth: 1, ..OdMoeConfig::default() },
+        ),
+    ];
+    for policy in [TierPolicy::Lru, TierPolicy::Sieve, TierPolicy::ReuseDistance] {
+        for (what, cfg) in &variants {
+            let mut base = OdMoeEngine::new(&rt, ws.clone(), cfg.clone()).unwrap();
+            let zeroed = OdMoeConfig { cache: zero(policy), ..cfg.clone() };
+            let mut z = OdMoeEngine::new(&rt, ws.clone(), zeroed).unwrap();
+            let a = base.run_prompt(&p, 8, false).unwrap();
+            let b = z.run_prompt(&p, 8, false).unwrap();
+            assert_eq!(a.tokens, b.tokens, "{what}/{policy:?}: tokens");
+            assert_eq!(a.ttft_ms, b.ttft_ms, "{what}/{policy:?}: ttft");
+            assert_eq!(a.decode_ms, b.decode_ms, "{what}/{policy:?}: decode time");
+            assert_eq!(a.stall_ms, b.stall_ms, "{what}/{policy:?}: stalls");
+            assert_eq!(a.correct_per_token, b.correct_per_token, "{what}/{policy:?}: recall");
+            let (h, w, c, m) = z.cache_stats();
+            assert_eq!((h, w, c, m), (0, 0, 0, 0), "{what}/{policy:?}: cache never consulted");
+        }
+    }
+
+    // Batched + failure injection, load tallies included.
+    let pa = prompt(1, 16, rt.cfg.vocab_size as u32);
+    let pb = prompt(2, 16, rt.cfg.vocab_size as u32);
+    let sessions: Vec<(&[u32], usize)> = vec![(pa.as_slice(), 6), (pb.as_slice(), 9)];
+    let zeroed = OdMoeConfig { cache: zero(TierPolicy::Lru), ..OdMoeConfig::default() };
+    let mut base = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let mut z = OdMoeEngine::new(&rt, ws.clone(), zeroed.clone()).unwrap();
+    let x = base.run_batch(&sessions).unwrap();
+    let y = z.run_batch(&sessions).unwrap();
+    assert_eq!(x.expert_loads, y.expert_loads, "batched: load tallies");
+    assert_eq!(x.aborted_loads, y.aborted_loads, "batched: abort tallies");
+    assert_eq!(x.decode_span_ms, y.decode_span_ms, "batched: span");
+    for (s, t) in x.sessions.iter().zip(&y.sessions) {
+        assert_eq!(s.tokens, t.tokens, "batched: tokens");
+        assert_eq!(s.decode_ms, t.decode_ms, "batched: decode time");
+    }
+    let mid = x.sessions[1].ttft_ms + x.sessions[1].decode_ms / 2.0;
+    let mut base = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    base.inject_failure(FailureSpec::Worker { worker: 2, at_ms: mid });
+    let mut z = OdMoeEngine::new(&rt, ws.clone(), zeroed).unwrap();
+    z.inject_failure(FailureSpec::Worker { worker: 2, at_ms: mid });
+    let a = base.run_prompt(&pb, 9, false).unwrap();
+    let b = z.run_prompt(&pb, 9, false).unwrap();
+    assert_eq!(a.tokens, b.tokens, "failure: tokens");
+    assert_eq!(a.decode_ms, b.decode_ms, "failure: decode time");
+    assert_eq!(a.stall_ms, b.stall_ms, "failure: stalls");
+    assert_eq!(base.failovers(), z.failovers(), "failure: failover counts");
+}
+
+/// A CPU-warm hit re-streams the standard PCIe chunk train (DESIGN.md
+/// §12), so a warm-only cache changes NOTHING observable in virtual
+/// time: tokens, timings, and load tallies all equal the cacheless
+/// engine — only the hit counters move.
+#[test]
+fn warm_only_cache_is_timing_neutral_by_construction() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(7, 16, rt.cfg.vocab_size as u32);
+    let sessions: Vec<(&[u32], usize)> = vec![(p.as_slice(), 8)];
+
+    let mut base = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let u = base.run_batch(&sessions).unwrap();
+
+    let warm_cfg = OdMoeConfig {
+        cache: CacheConfig { hot: 0, warm: 8, cold: 0, policy: TierPolicy::Lru },
+        ..OdMoeConfig::default()
+    };
+    let mut warm = OdMoeEngine::new(&rt, ws.clone(), warm_cfg).unwrap();
+    let w = warm.run_batch(&sessions).unwrap();
+
+    assert_eq!(u.sessions[0].tokens, w.sessions[0].tokens);
+    assert_eq!(u.sessions[0].ttft_ms, w.sessions[0].ttft_ms, "warm hits book the miss train");
+    assert_eq!(u.sessions[0].decode_ms, w.sessions[0].decode_ms);
+    assert_eq!(u.sessions[0].stall_ms, w.sessions[0].stall_ms);
+    assert_eq!(u.expert_loads, w.expert_loads, "warm hits still count as loads");
+    assert_eq!(u.decode_span_ms, w.decode_span_ms);
+    let (hot, warm_hits, _cold, misses) = warm.cache_stats();
+    assert_eq!(hot, 0, "no hot tier to hit");
+    assert!(warm_hits + misses > 0, "the cache was consulted");
+}
+
+/// Eviction storm under a one-slot hot tier: the byte ledger reconciles
+/// exactly after every install displaces the previous resident —
+/// steady-state usage ends at workspace + residents, and peaks stay
+/// within the batched audit bound plus the hot budget's payloads.
+#[test]
+fn ledger_reconciles_through_eviction_storms() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let hp = HardwareProfile::rtx3090();
+    let act = hp.activation_bytes as u64;
+    let expert = hp.expert_bytes as u64;
+
+    let mut base = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let prompts: Vec<Vec<u32>> = (1..=4).map(|s| prompt(s, 16, vocab)).collect();
+    let sessions: Vec<(&[u32], usize)> = prompts.iter().map(|p| (p.as_slice(), 6)).collect();
+    let u = base.run_batch(&sessions).unwrap();
+
+    for policy in [TierPolicy::Lru, TierPolicy::Sieve, TierPolicy::ReuseDistance] {
+        let cfg = OdMoeConfig {
+            cache: CacheConfig { hot: 1, warm: 2, cold: 2, policy },
+            ..OdMoeConfig::default()
+        };
+        let mut engine = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+        let c = engine.run_batch(&sessions).unwrap();
+        for (s, t) in u.sessions.iter().zip(&c.sessions) {
+            assert_eq!(s.tokens, t.tokens, "{policy:?}: cache state never moves tokens");
+        }
+        let audit = memaudit::odmoe_batched(&hp, 8, 2, 4);
+        for (i, w) in engine.cluster.workers.iter().enumerate() {
+            let resident = engine.cache_hot_resident(i) as u64;
+            assert!(resident <= 1, "{policy:?}: worker {i} exceeded its one-slot budget");
+            assert_eq!(
+                w.gpu_bytes_used,
+                act + resident * expert,
+                "{policy:?}: worker {i} ledger must settle at workspace + residents"
+            );
+            let (_, bound) = &audit.per_node[2 + i];
+            assert!(
+                w.gpu_bytes_peak <= *bound as u64 + expert,
+                "{policy:?}: worker {i} peak {} exceeds audited bound + hot budget",
+                w.gpu_bytes_peak
+            );
+        }
+    }
+}
+
+/// Convergence bracket: a saturating hot budget can never beat the
+/// fully-cached ceiling nor lose to the cacheless floor — its decode
+/// time lands between them, with the same token stream as both.
+#[test]
+fn saturating_budget_lands_between_cacheless_and_fully_cached() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(5, 16, rt.cfg.vocab_size as u32);
+    let sessions: Vec<(&[u32], usize)> = vec![(p.as_slice(), 12)];
+
+    let mut cacheless = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let u = cacheless.run_batch(&sessions).unwrap();
+
+    let cfg = OdMoeConfig {
+        cache: CacheConfig {
+            hot: rt.cfg.n_layers * rt.cfg.n_experts,
+            warm: 0,
+            cold: 0,
+            policy: TierPolicy::Lru,
+        },
+        ..OdMoeConfig::default()
+    };
+    let mut cached = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+    let c = cached.run_batch(&sessions).unwrap();
+
+    let mut full = FullyCachedEngine::new(&rt, ws).unwrap();
+    let f = full.run_batch(&sessions).unwrap();
+
+    assert_eq!(u.sessions[0].tokens, c.sessions[0].tokens);
+    assert_eq!(u.sessions[0].tokens, f.sessions[0].tokens, "baselines share numerics");
+    assert!(
+        c.decode_span_ms <= u.decode_span_ms + 1e-6,
+        "saturating cache cannot lose to cacheless: {} vs {}",
+        c.decode_span_ms,
+        u.decode_span_ms
+    );
+    assert!(
+        f.decode_span_ms <= c.decode_span_ms + 1e-6,
+        "nothing beats the fully-cached ceiling: {} vs {}",
+        f.decode_span_ms,
+        c.decode_span_ms
+    );
+    assert!(c.expert_loads < u.expert_loads, "repeats must be served hot");
+    assert_eq!(f.expert_loads, 0, "fully cached never loads");
 }

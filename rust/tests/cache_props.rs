@@ -1,0 +1,307 @@
+//! Property tests for the tiered expert cache's eviction policies
+//! (DESIGN.md §12). All of these are pure data-structure properties —
+//! no PJRT runtime needed: capacity ceilings, exact hit/miss
+//! accounting, LRU eviction order against a reference model, SIEVE
+//! hand/second-chance invariants, and the reuse-distance guarantee that
+//! SEP-predicted experts are never evicted.
+
+use odmoe::cache::{CacheConfig, ExpertKey, TierLevel, TierPolicy, TieredCache};
+use odmoe::util::prop::check;
+
+const CASES: usize = 64;
+
+fn key(layer: usize, expert: usize) -> ExpertKey {
+    (layer, expert)
+}
+
+/// No tier ever holds more entries than its slot budget, under any
+/// interleaving of lookups and installs, for every policy — and the
+/// access counters reconcile exactly: every lookup is classified as
+/// exactly one of hot/warm/cold hit or miss.
+#[test]
+fn prop_tier_capacities_and_stats_reconcile() {
+    check("tier capacity + accounting", CASES, 401, |rng| {
+        let policy = match rng.below(3) {
+            0 => TierPolicy::Lru,
+            1 => TierPolicy::Sieve,
+            _ => TierPolicy::ReuseDistance,
+        };
+        let cfg = CacheConfig {
+            hot: rng.below(4),
+            warm: rng.below(4),
+            cold: rng.below(4),
+            policy,
+        };
+        let mut t = TieredCache::new(&cfg);
+        let mut lookups = 0u64;
+        for _ in 0..120 {
+            let k = key(rng.below(4), rng.below(6));
+            if rng.uniform() < 0.5 {
+                t.lookup(k);
+                lookups += 1;
+            } else {
+                let protected: Vec<ExpertKey> =
+                    (0..rng.below(3)).map(|_| key(rng.below(4), rng.below(6))).collect();
+                let inst = t.install(k, &protected);
+                if inst.hot_resident && !t.contains_hot(k) {
+                    return Err(format!("{k:?} reported hot-resident but absent"));
+                }
+                if !inst.hot_resident && t.contains_hot(k) {
+                    return Err(format!("{k:?} refused from hot tier but present"));
+                }
+            }
+            if t.hot_len() > cfg.hot {
+                return Err(format!("hot tier {} > budget {}", t.hot_len(), cfg.hot));
+            }
+            if t.warm_len() > cfg.warm {
+                return Err(format!("warm tier {} > budget {}", t.warm_len(), cfg.warm));
+            }
+            if t.cold_len() > cfg.cold {
+                return Err(format!("cold tier {} > budget {}", t.cold_len(), cfg.cold));
+            }
+            let counted = t.hot_hits + t.warm_hits + t.cold_hits + t.misses;
+            if counted != lookups || t.touches() != lookups {
+                return Err(format!("{counted} classified accesses for {lookups} lookups"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// LRU eviction order matches a reference recency list under randomized
+/// touch/install sequences on a hot-only tier: the victim is always the
+/// entry whose last use (lookup or install) is oldest.
+#[test]
+fn prop_lru_eviction_order_matches_reference_model() {
+    check("LRU vs reference recency list", CASES, 402, |rng| {
+        let cap = 1 + rng.below(4);
+        let cfg = CacheConfig { hot: cap, warm: 0, cold: 0, policy: TierPolicy::Lru };
+        let mut t = TieredCache::new(&cfg);
+        // Reference: keys ordered oldest-use first.
+        let mut model: Vec<ExpertKey> = Vec::new();
+        for _ in 0..150 {
+            let k = key(0, rng.below(8));
+            if rng.uniform() < 0.4 {
+                let hit = t.lookup(k) == Some(TierLevel::GpuHot);
+                let modeled = model.contains(&k);
+                if hit != modeled {
+                    return Err(format!("{k:?}: lookup hit {hit}, model says {modeled}"));
+                }
+                if hit {
+                    model.retain(|&x| x != k);
+                    model.push(k);
+                }
+            } else {
+                let inst = t.install(k, &[]);
+                if model.contains(&k) {
+                    // Re-install refreshes recency, evicts nothing.
+                    if !inst.evicted_hot.is_empty() {
+                        return Err(format!("{k:?}: re-install evicted {:?}", inst.evicted_hot));
+                    }
+                    model.retain(|&x| x != k);
+                    model.push(k);
+                } else {
+                    if model.len() == cap {
+                        let victim = model.remove(0);
+                        if inst.evicted_hot != vec![victim] {
+                            return Err(format!(
+                                "expected victim {victim:?}, got {:?}",
+                                inst.evicted_hot
+                            ));
+                        }
+                    } else if !inst.evicted_hot.is_empty() {
+                        return Err(format!("eviction below capacity: {:?}", inst.evicted_hot));
+                    }
+                    model.push(k);
+                }
+                if !inst.hot_resident {
+                    return Err(format!("{k:?}: LRU must always admit"));
+                }
+            }
+            if t.hot_len() != model.len() {
+                return Err(format!("len {} vs model {}", t.hot_len(), model.len()));
+            }
+            for &k in &model {
+                if !t.contains_hot(k) {
+                    return Err(format!("model key {k:?} missing from hot tier"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// SIEVE invariants on a hot-only tier, against a reference of the
+/// documented algorithm: a hand scans insertion order, un-marking and
+/// sparing visited entries, evicting the first unvisited one. The
+/// observable contract: victims match the reference exactly, so every
+/// entry with its visited bit set survives any single eviction.
+#[test]
+fn prop_sieve_hand_spares_visited_entries() {
+    struct Ref {
+        entries: Vec<(ExpertKey, bool)>,
+        hand: usize,
+    }
+    impl Ref {
+        fn evict(&mut self) -> ExpertKey {
+            if self.hand >= self.entries.len() {
+                self.hand = 0;
+            }
+            loop {
+                if self.entries[self.hand].1 {
+                    self.entries[self.hand].1 = false;
+                    self.hand = (self.hand + 1) % self.entries.len();
+                } else {
+                    let v = self.entries.remove(self.hand).0;
+                    // `hand == victim index`: it now points at the next
+                    // entry, exactly like the Tier's removal shift.
+                    return v;
+                }
+            }
+        }
+    }
+    check("SIEVE vs reference hand", CASES, 403, |rng| {
+        let cap = 2 + rng.below(4);
+        let cfg = CacheConfig { hot: cap, warm: 0, cold: 0, policy: TierPolicy::Sieve };
+        let mut t = TieredCache::new(&cfg);
+        let mut model = Ref { entries: Vec::new(), hand: 0 };
+        for _ in 0..150 {
+            let k = key(0, rng.below(10));
+            if rng.uniform() < 0.45 {
+                let hit = t.lookup(k) == Some(TierLevel::GpuHot);
+                let e = model.entries.iter_mut().find(|(x, _)| *x == k);
+                if hit != e.is_some() {
+                    return Err(format!("{k:?}: hit {hit} disagrees with model"));
+                }
+                if let Some(e) = e {
+                    e.1 = true;
+                }
+            } else if !model.entries.iter().any(|(x, _)| *x == k) {
+                let inst = t.install(k, &[]);
+                if model.entries.len() == cap {
+                    let victim = model.evict();
+                    if inst.evicted_hot != vec![victim] {
+                        return Err(format!(
+                            "expected victim {victim:?}, got {:?}",
+                            inst.evicted_hot
+                        ));
+                    }
+                } else if !inst.evicted_hot.is_empty() {
+                    return Err(format!("eviction below capacity: {:?}", inst.evicted_hot));
+                }
+                model.entries.push((k, false));
+            } else {
+                // Install of a resident key: pure touch, no eviction.
+                let inst = t.install(k, &[]);
+                if !inst.evicted_hot.is_empty() {
+                    return Err("re-install must not evict".into());
+                }
+                if let Some(e) = model.entries.iter_mut().find(|(x, _)| *x == k) {
+                    e.1 = true;
+                }
+            }
+            if t.hot_len() != model.entries.len() {
+                return Err(format!("len {} vs model {}", t.hot_len(), model.entries.len()));
+            }
+            for &(k, _) in &model.entries {
+                if !t.contains_hot(k) {
+                    return Err(format!("model key {k:?} missing from hot tier"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The SEP-informed policy's headline guarantee: an expert predicted
+/// within the lookahead window (the `protected` set) is NEVER evicted
+/// from the hot tier — when every resident is protected, the incoming
+/// key is refused (and lands warm) instead.
+#[test]
+fn prop_reuse_distance_never_evicts_protected_experts() {
+    check("reuse-distance protection", CASES, 404, |rng| {
+        let cap = 1 + rng.below(4);
+        let cfg = CacheConfig { hot: cap, warm: 2, cold: 0, policy: TierPolicy::ReuseDistance };
+        let mut t = TieredCache::new(&cfg);
+        for _ in 0..120 {
+            // A fresh lookahead set each step, like rebuild_protected
+            // does per layer.
+            let protected: Vec<ExpertKey> =
+                (0..rng.below(cap + 2)).map(|_| key(rng.below(3), rng.below(6))).collect();
+            let k = key(rng.below(3), rng.below(6));
+            if rng.uniform() < 0.3 {
+                t.lookup(k);
+                continue;
+            }
+            let hot_before = t.hot_len();
+            let was_resident = t.contains_hot(k);
+            let inst = t.install(k, &protected);
+            for v in &inst.evicted_hot {
+                if protected.contains(v) {
+                    return Err(format!("protected {v:?} evicted for {k:?}"));
+                }
+            }
+            if !inst.hot_resident {
+                // Refusal is only legal when the tier is full of
+                // protected residents (and the key itself was absent).
+                if was_resident {
+                    return Err(format!("{k:?} was resident yet refused"));
+                }
+                if hot_before < cap {
+                    return Err(format!("{k:?} refused with free hot slots"));
+                }
+                if t.lookup(k).is_none() {
+                    return Err(format!("refused {k:?} must land in the warm chain"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Demotion-chain conservation: with all three tiers bounded, a key
+/// evicted from hot reappears warm, warm victims fall to cold, and a
+/// key is never resident in two tiers at once (lookup classifies it
+/// uniquely, hottest first).
+#[test]
+fn prop_demotion_chain_keeps_keys_unique_across_tiers() {
+    check("hot -> warm -> cold demotion", CASES, 405, |rng| {
+        let cfg = CacheConfig {
+            hot: 1 + rng.below(2),
+            warm: 1 + rng.below(2),
+            cold: 1 + rng.below(2),
+            policy: TierPolicy::Lru,
+        };
+        let mut t = TieredCache::new(&cfg);
+        let mut installed: Vec<ExpertKey> = Vec::new();
+        for _ in 0..100 {
+            let k = key(0, rng.below(7));
+            let inst = t.install(k, &[]);
+            if !installed.contains(&k) {
+                installed.push(k);
+            }
+            for v in &inst.evicted_hot {
+                // A hot victim demotes to warm, displacing downward —
+                // it must still be somewhere below the hot tier.
+                if t.contains_hot(*v) {
+                    return Err(format!("evicted {v:?} still hot"));
+                }
+                match t.lookup(*v) {
+                    Some(TierLevel::CpuWarm) => {}
+                    other => return Err(format!("hot victim {v:?} landed at {other:?}")),
+                }
+            }
+            let total = t.hot_len() + t.warm_len() + t.cold_len();
+            if total > cfg.hot + cfg.warm + cfg.cold {
+                return Err(format!("{total} residents exceed the summed budgets"));
+            }
+            if total > installed.len() {
+                return Err(format!(
+                    "{total} residents but only {} distinct keys ever installed",
+                    installed.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -200,3 +200,56 @@ fn prop_failover_resume_books_only_undelivered_chunks() {
         Ok(())
     });
 }
+
+/// SSD staging for the tiered cache's cold tier (DESIGN.md §12): the
+/// staging time is exactly access latency + payload at `ssd_gbps`,
+/// monotone in bytes, and every booking lands on the worker's dedicated
+/// storage [`Resource`] — reads queue like PCIe transfers but never
+/// touch the PCIe or GPU accounting.
+#[test]
+fn prop_ssd_staging_books_exact_durations_on_its_own_resource() {
+    check("ssd cold-tier staging", CASES, 306, |rng| {
+        let mut c = Cluster::new(HardwareProfile::rtx3090(), 2);
+        let mut last_end = [0.0f64; 2];
+        let mut booked = [0.0f64; 2];
+        let mut prev_ms = 0.0f64;
+        let mut bytes = 1e6f64;
+        for _ in 0..12 {
+            let w = rng.below(2);
+            let earliest = rng.uniform() * 30.0;
+            // Growing payloads double as the monotonicity probe.
+            bytes += rng.uniform() * 2e8;
+            let expect = c.profile.ssd_lat_ms + bytes / (c.profile.ssd_gbps * 1e9) * 1e3;
+            let ms = c.profile.ssd_stage_ms(bytes);
+            if (ms - expect).abs() > 1e-9 {
+                return Err(format!("ssd_stage_ms {ms} != model {expect}"));
+            }
+            if ms + 1e-9 < prev_ms {
+                return Err(format!("staging time shrank with a larger payload: {ms}"));
+            }
+            prev_ms = ms;
+            let (s, e) = c.ssd_stage(w, earliest, bytes);
+            if s < earliest - 1e-9 {
+                return Err(format!("stage started at {s} before earliest {earliest}"));
+            }
+            if s + 1e-9 < last_end[w] {
+                return Err(format!("worker {w}: storage reads must queue: {s} < {}", last_end[w]));
+            }
+            if ((e - s) - ms).abs() > 1e-9 {
+                return Err(format!("booked span {} != staging time {ms}", e - s));
+            }
+            last_end[w] = e;
+            booked[w] += e - s;
+        }
+        for w in 0..2 {
+            let ssd = c.workers[w].ssd.busy_total();
+            if (ssd - booked[w]).abs() > 1e-6 {
+                return Err(format!("worker {w}: ssd busy {ssd} != booked {}", booked[w]));
+            }
+            if c.workers[w].pcie.busy_total() != 0.0 || c.workers[w].gpu.busy_total() != 0.0 {
+                return Err(format!("worker {w}: staging leaked onto PCIe/GPU"));
+            }
+        }
+        Ok(())
+    });
+}

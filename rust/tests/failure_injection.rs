@@ -4,7 +4,8 @@
 //! scheduler's fallback paths (reactive loads, slot rerouting) preserve
 //! correctness by construction (DESIGN.md §8).
 
-use odmoe::cluster::Cluster;
+use odmoe::cache::{CacheConfig, TierPolicy};
+use odmoe::cluster::{Cluster, HardwareProfile};
 use odmoe::coordinator::{
     Engine, FailureSpec, OdMoeConfig, OdMoeEngine, PredictorMode, Request, Server,
 };
@@ -294,6 +295,67 @@ fn worker_and_shadow_failures_compose() {
     assert_eq!(d.tokens, d2.tokens);
     assert_eq!(d.decode_ms, d2.decode_ms, "failure replay must be deterministic");
     assert_eq!(d.stall_ms, d2.stall_ms);
+}
+
+#[test]
+fn worker_death_drops_its_hot_tier_and_ledger_reconciles() {
+    // Tiered cache x fail-stop (DESIGN.md §12 x §8): a dead worker's
+    // GPU-hot tier dies with the node — its ledger zeroes, the reroute
+    // serves the same stream as the cacheless cold-start, and every
+    // survivor's ledger settles at workspace + its hot residents.
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt();
+    let out = 10;
+    let hp = HardwareProfile::rtx3090();
+    let act = hp.activation_bytes as u64;
+    let expert = hp.expert_bytes as u64;
+
+    let mut cacheless = OdMoeEngine::new(&rt, ws.clone(), OdMoeConfig::default()).unwrap();
+    let h = cacheless.run_prompt(&p, out, false).unwrap();
+    let mid = h.ttft_ms + h.decode_ms / 2.0;
+
+    for victim in [0usize, 3, 7] {
+        let cfg = OdMoeConfig {
+            cache: CacheConfig { hot: 4, warm: 4, cold: 4, policy: TierPolicy::Lru },
+            ..OdMoeConfig::default()
+        };
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+        e.inject_failure(FailureSpec::Worker { worker: victim, at_ms: mid });
+        let d = e.run_prompt(&p, out, false).unwrap();
+        assert_eq!(
+            h.tokens, d.tokens,
+            "worker {victim}: cache + failure must never change the stream"
+        );
+        assert!(d.decode_ms.is_finite() && d.decode_ms > 0.0);
+        // The hot tier died with the node: no residents, no bytes.
+        assert_eq!(e.cache_hot_resident(victim), 0, "worker {victim}: hot tier must drop");
+        assert_eq!(
+            e.cluster.workers[victim].gpu_bytes_used, 0,
+            "worker {victim}: dead ledger must zero"
+        );
+        // Survivors reconcile exactly after the eviction churn the
+        // rerouted load concentration causes.
+        for (i, w) in e.cluster.workers.iter().enumerate() {
+            if i == victim {
+                continue;
+            }
+            assert_eq!(
+                w.gpu_bytes_used,
+                act + e.cache_hot_resident(i) as u64 * expert,
+                "worker {i}: ledger must settle at workspace + residents"
+            );
+        }
+        assert_virtual_time_sane(&e.cluster);
+
+        // Failure replay with cache state is deterministic: reset clears
+        // the tiers and re-arms the plan, reproducing the run exactly.
+        e.reset().unwrap();
+        let d2 = e.run_prompt(&p, out, false).unwrap();
+        assert_eq!(d.tokens, d2.tokens, "worker {victim}: replay tokens");
+        assert_eq!(d.decode_ms, d2.decode_ms, "worker {victim}: replay must be deterministic");
+        assert_eq!(d.stall_ms, d2.stall_ms);
+    }
 }
 
 #[test]

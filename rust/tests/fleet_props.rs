@@ -7,6 +7,7 @@
 //! `engine_integration.rs`: it panics with a pointer to `make artifacts`
 //! when they are absent).
 
+use odmoe::cache::{CacheConfig, TierPolicy};
 use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
 use odmoe::coordinator::{
     BatchEngine, Engine, FailureSpec, GroupSchedule, OdMoeConfig, OdMoeEngine, PredictorMode,
@@ -335,7 +336,7 @@ fn mixed_fleet_decodes_same_tokens_slower_and_within_audit() {
 
     // Ledger peaks within the fleet audit bound, per node.
     let hp = HardwareProfile::rtx3090();
-    let audit = memaudit::odmoe_fleet(&hp, &mixed, rt.cfg.top_k, 1, 0);
+    let audit = memaudit::odmoe_fleet(&hp, &mixed, rt.cfg.top_k, 1, 0, 0);
     for (i, w) in engine.cluster.workers.iter().enumerate() {
         let (label, bound) = &audit.per_node[2 + i];
         assert!(
@@ -372,4 +373,119 @@ fn engine_slots_prefer_window_capable_classes() {
     // take the first slots and the jetsons only the shortfall.
     assert_eq!(engine.slots.workers_of(0), vec![2, 3]);
     assert_eq!(engine.slots.workers_of(4), vec![0, 1]);
+}
+
+// ---------------------------------------------------------------------
+// Tiered cache on the fleet path (DESIGN.md §12).
+// ---------------------------------------------------------------------
+
+/// The headline cache contract on the mixed-fleet path: budget 0 is the
+/// cacheless engine, bit-for-bit — an explicit all-zero [`CacheConfig`]
+/// changes neither tokens nor any timing on sequential or batched
+/// decode, with and without a mid-decode worker failure.
+#[test]
+fn budget_zero_cache_is_bit_identical_on_mixed_fleet() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let p = prompt(23, 16, vocab);
+    let mixed = FleetSpec::parse("rtx3090:4,jetson:4").unwrap();
+    let base = OdMoeConfig { fleet: Some(mixed), ..OdMoeConfig::default() };
+    let zeroed = OdMoeConfig { cache: CacheConfig::disabled(), ..base.clone() };
+
+    // Sequential.
+    let mut plain = OdMoeEngine::new(&rt, ws.clone(), base.clone()).unwrap();
+    let mut zero = OdMoeEngine::new(&rt, ws.clone(), zeroed.clone()).unwrap();
+    let a = plain.run_prompt(&p, 8, false).unwrap();
+    let b = zero.run_prompt(&p, 8, false).unwrap();
+    assert_same(&a, &b, "mixed fleet, cache budget 0, sequential");
+    let (hot, warm, cold, misses) = zero.cache_stats();
+    assert_eq!(
+        (hot, warm, cold, misses),
+        (0, 0, 0, 0),
+        "a disabled cache must never even be consulted"
+    );
+
+    // Batched, with load/abort tallies.
+    let pa = prompt(5, 16, vocab);
+    let pb = prompt(6, 16, vocab);
+    let sessions: Vec<(&[u32], usize)> = vec![(pa.as_slice(), 6), (pb.as_slice(), 9)];
+    let mut plain = OdMoeEngine::new(&rt, ws.clone(), base.clone()).unwrap();
+    let mut zero = OdMoeEngine::new(&rt, ws.clone(), zeroed.clone()).unwrap();
+    let x = plain.run_batch(&sessions).unwrap();
+    let y = zero.run_batch(&sessions).unwrap();
+    for (s, t) in x.sessions.iter().zip(&y.sessions) {
+        assert_same(s, t, "mixed fleet, cache budget 0, batched");
+    }
+    assert_eq!(x.expert_loads, y.expert_loads);
+    assert_eq!(x.aborted_loads, y.aborted_loads);
+    assert_eq!(x.decode_span_ms, y.decode_span_ms);
+
+    // Mid-decode worker fail-stop reroutes identically.
+    let mid = a.ttft_ms + a.decode_ms / 2.0;
+    let mut plain = OdMoeEngine::new(&rt, ws.clone(), base).unwrap();
+    plain.inject_failure(FailureSpec::Worker { worker: 2, at_ms: mid });
+    let mut zero = OdMoeEngine::new(&rt, ws.clone(), zeroed).unwrap();
+    zero.inject_failure(FailureSpec::Worker { worker: 2, at_ms: mid });
+    let x = plain.run_prompt(&p, 8, false).unwrap();
+    let y = zero.run_prompt(&p, 8, false).unwrap();
+    assert_same(&x, &y, "mixed fleet, cache budget 0, failure");
+    assert_eq!(plain.failovers(), zero.failovers());
+}
+
+/// Convergence toward the fully-cached ceiling on a fleet: a GPU-hot
+/// budget large enough to hold every expert a worker can ever serve
+/// decodes the same tokens with strictly fewer expert loads and no
+/// slower than the cacheless engine (the cache only removes transfer
+/// work, it never adds any).
+#[test]
+fn saturating_hot_budget_cuts_loads_without_touching_tokens() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let vocab = rt.cfg.vocab_size as u32;
+    let p = prompt(29, 16, vocab);
+    let mixed = FleetSpec::parse("rtx3090:4,jetson:4").unwrap();
+    let base = OdMoeConfig { fleet: Some(mixed), ..OdMoeConfig::default() };
+    let sessions: Vec<(&[u32], usize)> = vec![(p.as_slice(), 8)];
+
+    let mut plain = OdMoeEngine::new(&rt, ws.clone(), base.clone()).unwrap();
+    let u = plain.run_batch(&sessions).unwrap();
+
+    // Enough slots for every (layer, expert) pair in the model — nothing
+    // is ever evicted, so every repeat is a hot hit.
+    let saturating = rt.cfg.n_layers * rt.cfg.n_experts;
+    let cached_cfg = OdMoeConfig {
+        cache: CacheConfig {
+            hot: saturating,
+            warm: 0,
+            cold: 0,
+            policy: TierPolicy::Lru,
+        },
+        ..base
+    };
+    let mut cached = OdMoeEngine::new(&rt, ws.clone(), cached_cfg).unwrap();
+    let c = cached.run_batch(&sessions).unwrap();
+
+    assert_eq!(
+        u.sessions[0].tokens, c.sessions[0].tokens,
+        "cache state shifts timings, never tokens"
+    );
+    assert!(
+        c.expert_loads < u.expert_loads,
+        "repeated experts must be served from the hot tier: {} vs {}",
+        c.expert_loads,
+        u.expert_loads
+    );
+    assert!(
+        c.decode_span_ms <= u.decode_span_ms + 1e-6,
+        "dropping transfers can only shorten decode: {} vs {}",
+        c.decode_span_ms,
+        u.decode_span_ms
+    );
+    let (hot, _warm, _cold, misses) = cached.cache_stats();
+    assert!(hot > 0, "saturating budget must produce hot hits");
+    assert!(misses > 0, "first touch of each expert is still a miss");
+    let resident: usize = (0..8).map(|w| cached.cache_hot_resident(w)).sum();
+    assert!(resident > 0, "experts stay resident after the run");
+    assert!(resident <= saturating * 8, "per-worker budget bounds residency");
 }
