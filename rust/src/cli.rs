@@ -16,10 +16,11 @@ use odmoe::predictor::{
 use odmoe::serve::{
     attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
     config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
-    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates, rate_sweep, sweep_json,
-    write_bench, ArrivalModel, AttribPoint, BatchEngineService, BatchPoint, CachePoint,
-    FailoverPoint, Histogram, OverlapPoint, Scheduler, SchedulerConfig, ServeReport, ServiceModel,
-    SessionOutcome, SyntheticService, WorkloadSpec,
+    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates, parse_scale_sessions,
+    rate_sweep, run_streamed, scale_json, scale_sweep, scale_workload, sweep_json, write_bench,
+    ArrivalModel, AttribPoint, BatchEngineService, BatchPoint, CachePoint, FailoverPoint,
+    Histogram, OverlapPoint, Scheduler, SchedulerConfig, ServeReport, ServiceModel,
+    SessionOutcome, SyntheticService, WorkloadSpec, SCALE_SAMPLE_CAP,
 };
 use odmoe::telemetry::{self, Phase, Registry};
 use odmoe::trace::EventKind;
@@ -177,6 +178,15 @@ fn validate_failures(specs: &[FailureSpec], n_workers: usize) -> Result<()> {
 /// deterministic `BENCH_cache.json`.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let (mut spec, mut sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
+    let threads = a.usize_or("threads", 1)?;
+    anyhow::ensure!(threads >= 1, "--threads must be >= 1, got {threads}");
+    if threads > 1 {
+        // Engine-backed sweeps measure through one mutable engine
+        // instance, so their cells are inherently serial; the runtime-free
+        // `--scale-sweep` path (dispatched before the artifact load) is
+        // where `--threads` buys wall-clock.
+        println!("note: --threads parallelizes --scale-sweep; engine-backed sweeps run serially");
+    }
     let ws = WeightStore::generate(&rt.cfg, seed);
     let mut cfg = OdMoeConfig {
         shadow_precision: parse_precision(a.get_or("shadow", "int8"))?,
@@ -959,6 +969,14 @@ pub fn memory(a: &Args) -> Result<()> {
 /// (Pareto frontier + chosen plan); `od-moe serve --plan
 /// BENCH_plan.json` re-runs the choice directly.
 pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
+    let threads = a.usize_or("threads", 1)?;
+    ensure!(threads >= 1, "--threads must be >= 1, got {threads}");
+    if threads > 1 {
+        // Candidate scoring borrows one PJRT runtime mutably (`eval` is
+        // FnMut over a single measuring engine), so the planner search
+        // stays serial regardless of --threads.
+        println!("note: plan candidate scoring runs serially (one measuring runtime)");
+    }
     let fleet = FleetSpec::parse(a.get_or("fleet", "rtx3080:4,jetson:4,nano:2"))?;
     let slo_p99 = a.f64_or("slo-p99", 250.0)?;
     let (spec, sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
@@ -1111,6 +1129,68 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `od-moe serve --scale-sweep`: session-count scaling of the scheduler
+/// itself (DESIGN.md §13). Runtime-free — every cell drives the
+/// synthetic service, so the measured cost is the scheduler core, not an
+/// engine. The event core runs at every size in `--scale-sessions`; the
+/// round-loop oracle also runs at sizes up to `--scale-round-cap`, where
+/// its linear dispatch scan (quadratic in eligible sessions) is still
+/// affordable — the gap between the two columns is the point of the
+/// sweep. Cells fan out across `--threads` scoped workers and merge by
+/// cell index; everything in `BENCH_scale.json` except the `wall_*`
+/// keys is deterministic per seed at any thread count (`--omit-wall`
+/// drops those, which is how CI diffs two runs).
+pub fn scale(seed: u64, a: &Args) -> Result<()> {
+    let sizes = parse_scale_sessions(a.get_or("scale-sessions", "1000,10000,100000,1000000"))?;
+    let round_cap = a.usize_or("scale-round-cap", 10_000)?;
+    let threads = a.usize_or("threads", 1)?;
+    ensure!(threads >= 1, "--threads must be >= 1, got {threads}");
+    println!(
+        "scale sweep: sessions {sizes:?} | round-loop oracle up to {round_cap} | \
+         {threads} thread(s)"
+    );
+    let cells = scale_sweep(&sizes, round_cap, threads, seed)?;
+    let mut t = Table::new(&[
+        "sessions", "core", "completed", "requeued", "events", "ev/virt-s", "arena MB", "wall ms",
+        "e2e p99",
+    ]);
+    for c in &cells {
+        let eps = match c.events {
+            Some(e) if c.makespan_ms > 0.0 => format!("{:.0}", e as f64 * 1000.0 / c.makespan_ms),
+            _ => "-".to_string(),
+        };
+        t.row(&[
+            format!("{}", c.sessions),
+            c.core.label().to_string(),
+            format!("{}", c.completed),
+            format!("{}", c.requeued),
+            c.events.map_or("-".to_string(), |e| format!("{e}")),
+            eps,
+            c.arena_bytes.map_or("-".to_string(), |b| format!("{:.1}", b as f64 / 1e6)),
+            format!("{:.0}", c.wall_ms),
+            format!("{:.1}{}", c.e2e.p99, if c.exact_percentiles { "" } else { "~" }),
+        ]);
+    }
+    t.print();
+    let include_wall = !a.has("omit-wall");
+    let path = std::path::Path::new("BENCH_scale.json");
+    write_bench(path, &scale_json(&cells, &sizes, round_cap, seed, include_wall))?;
+    println!("\nwrote {}", path.display());
+    if a.has("metrics") {
+        let mut reg = Registry::new();
+        for c in &cells {
+            let k = format!("scale.{}.{}", c.core.label(), c.sessions);
+            reg.gauge_set(&format!("{k}.makespan_ms"), c.makespan_ms);
+            reg.gauge_set(&format!("{k}.wall_ms"), c.wall_ms);
+            if let Some(e) = c.events {
+                reg.counter_add(&format!("{k}.events"), e);
+            }
+        }
+        write_metrics("serve_scale", &reg)?;
+    }
+    Ok(())
+}
+
 /// Book a 16-layer round-robin expert stream (LAN dispatch, chunked
 /// load, pipelined FFN tiles, LAN return) on a trace-enabled cluster.
 /// Purely virtual-time and deterministic; returns the cluster (for
@@ -1201,6 +1281,28 @@ pub fn bench(a: &Args) -> Result<()> {
         virt.push((format!("sched/poisson-r{rate}/tpot_p99_ms"), rep.tpot.p99));
     }
 
+    // Event-core throughput on a closed-loop scale workload: heap pops
+    // per *virtual* second is deterministic, so it is gatable (the
+    // wall-clock flavor lives in `BENCH_scale.json` and never is). The
+    // key is registered in the committed baseline behind the bootstrap
+    // flag so the gate picks it up the moment a real baseline is pinned.
+    let scale_sched = SchedulerConfig {
+        n_replicas: 4,
+        max_batch: 4,
+        queue_sample_stride: 64,
+        ..SchedulerConfig::default()
+    };
+    let scale_reqs = scale_workload(2_000, 500, seed);
+    {
+        let mut svc = SyntheticService::new(2.0, 0.1, 1.0).with_batch_marginal(0.2);
+        let stats = run_streamed(&scale_sched, &mut svc, &scale_reqs, SCALE_SAMPLE_CAP)?;
+        ensure!(stats.makespan_ms > 0.0, "scale workload produced an empty schedule");
+        virt.push((
+            "scheduler_events_per_sec".into(),
+            stats.events as f64 * 1000.0 / stats.makespan_ms,
+        ));
+    }
+
     let mut t = Table::new(&["virtual metric (gated)", "value"]);
     for (k, v) in &virt {
         t.row(&[k.clone(), format!("{v:.4}")]);
@@ -1226,6 +1328,14 @@ pub fn bench(a: &Args) -> Result<()> {
             h.push((x >> 33) as f64);
         }
         std::hint::black_box(h.summary());
+    }));
+    let micro_reqs = scale_workload(512, 128, seed);
+    wall.push(bench_util::run("sched/event-core/512-session-run", samples, iters, || {
+        let mut svc = SyntheticService::new(2.0, 0.1, 1.0).with_batch_marginal(0.2);
+        std::hint::black_box(
+            run_streamed(&scale_sched, &mut svc, &micro_reqs, SCALE_SAMPLE_CAP)
+                .expect("event core microbench"),
+        );
     }));
     let virt_obj = obj(virt.iter().map(|(k, v)| (k.as_str(), num(*v))).collect());
     let virt_text = virt_obj.to_string();

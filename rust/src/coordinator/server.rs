@@ -82,7 +82,10 @@ impl<'e> Server<'e> {
             .drain(..)
             .map(|r| serve::Request::open_loop(r.id, r.prompt, r.out_tokens, r.arrival_ms))
             .collect();
-        let cfg = SchedulerConfig::default(); // FCFS, one replica, no limits
+        // FCFS, one replica, no limits; the default core is the event
+        // executor (DESIGN.md §13), pinned bit-identical to the round
+        // loop by the equivalence properties, so nothing here changes.
+        let cfg = SchedulerConfig::default();
         let mut service = EngineService::new(&mut *self.engine);
         let outcome = Scheduler::run(&cfg, &mut service, &reqs)?;
 

@@ -183,6 +183,13 @@ impl PlanReport {
 /// so the emitted JSON is byte-stable for a given seed. `max_batch` is
 /// the serving batch limit the deployment will run with — it sizes the
 /// memory bound a worker must fit.
+///
+/// Candidate scoring is inherently serial — `eval` is `FnMut`, because
+/// the CLI's closure borrows one measuring engine/runtime mutably — so
+/// `--threads` does not apply here (unlike the runtime-free serve
+/// sweeps, whose cells fan out via `crate::serve::harness::parallel_map`).
+/// Measurements made through `crate::serve::Scheduler::run` inherit the
+/// event core (DESIGN.md §13), bit-identical to the old round loop.
 #[allow(clippy::too_many_arguments)]
 pub fn search(
     fleet: &FleetSpec,

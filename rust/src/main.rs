@@ -13,7 +13,8 @@
 //! (`serve --rates`), `BENCH_batch.json` (`serve --batch-sweep`),
 //! `BENCH_failover.json` (`serve --failover-sweep`), `BENCH_overlap.json`
 //! (`decode --overlap-sweep`), `BENCH_cache.json` (`serve --cache-sweep`,
-//! DESIGN.md §12), `BENCH_plan.json` (`plan`, DESIGN.md §10),
+//! DESIGN.md §12), `BENCH_scale.json` (`serve --scale-sweep`,
+//! DESIGN.md §13), `BENCH_plan.json` (`plan`, DESIGN.md §10),
 //! `BENCH_attrib.json` (`serve --attribution`), `ATTRIB.json`
 //! (`decode --attribution`), `BENCH_perf.json` (`bench`), and
 //! `METRICS_<cmd>.jsonl` (`--metrics`, DESIGN.md §11).
@@ -62,10 +63,13 @@ macro_rules! workload_flags {
             val("max-batch", "N", "co-scheduled sessions per dispatch (default 1)"),
             switch("shared-prompt", "every request decodes one shared prompt"),
             val("fail-replica", "R@MS", "fail-stop scheduler replicas, e.g. 0@500"),
+            val("core", "KIND", "scheduler executor event|round-loop (default event)"),
+            val("queue-sample", "N", "queue-depth trace stride (default 1 = every tick)"),
+            val("threads", "N", "worker threads for sweep cells (default 1)"),
         ]
     };
     (+ $($extra:expr),* $(,)?) => {{
-        const W: [Flag; 19] = workload_flags!();
+        const W: [Flag; 22] = workload_flags!();
         const E: &[Flag] = &[$($extra),*];
         const N: usize = W.len() + E.len();
         const OUT: [Flag; N] = {
@@ -109,6 +113,10 @@ const SERVE_FLAGS: &[Flag] = workload_flags![+
     val("cache-policy", "P", "eviction policy lru|sieve|reuse (default lru)"),
     switch("cache-sweep", "hot-budget sweep; writes BENCH_cache.json (§12)"),
     val("cache-grid", "H1,H2,..", "budgets for --cache-sweep (default 0,1,2,4,8)"),
+    switch("scale-sweep", "session-count scaling sweep; writes BENCH_scale.json (§13)"),
+    val("scale-sessions", "N1,N2,..", "sizes for --scale-sweep (default 1000,10000,100000,1000000)"),
+    val("scale-round-cap", "N", "largest size the round-loop oracle also runs (default 10000)"),
+    switch("omit-wall", "drop wall-clock fields from BENCH_scale.json (determinism diffs)"),
     switch("metrics", "export the metrics registry to METRICS_serve.jsonl"),
 ];
 
@@ -242,6 +250,12 @@ fn main() -> Result<()> {
     if cmd == "bench" {
         // Runtime-free: virtual-time metrics + wall-clock microbenches.
         return cli::bench(&args);
+    }
+    if cmd == "serve" && args.has("scale-sweep") {
+        // Runtime-free: the scale sweep drives the synthetic service only
+        // (measuring an engine 10^6 times would swamp the scheduler cost
+        // under test), so skip the PJRT artifact load entirely.
+        return cli::scale(seed, &args);
     }
     let rt = match args.get("artifacts") {
         Some(dir) => odmoe::Runtime::load(dir)?,

@@ -1,0 +1,889 @@
+//! Event-driven scheduler core (DESIGN.md §13): the heap-based executor
+//! behind [`Scheduler::run`].
+//!
+//! The round loop in [`super::scheduler`] re-scans every replica's
+//! running list on every clock step and keeps its pending arrivals in a
+//! sorted `Vec` with O(n) inserts — fine at thousands of sessions,
+//! hopeless at the ROADMAP's million-session scale. This module replaces
+//! the executor while keeping the round loop's *observable behavior as
+//! the spec*: records, outcomes, tokens, queue-depth samples, busy time
+//! and requeue counts are reproduced bit-identically (pinned by
+//! `rust/tests/event_core_props.rs`), and the round loop survives as the
+//! equivalence oracle behind [`CoreKind::RoundLoop`].
+//!
+//! Mechanics:
+//!
+//! * **One min-heap of [`Event`]s** — arrivals (open-loop and
+//!   closed-loop chain releases), batch-member completions, and replica
+//!   fail-stops — ordered by `(time, kind, request id)` with kind codes
+//!   chosen so a tick drains completions, then failures, then arrivals:
+//!   exactly the round loop's phase order. Push and pop are O(log n).
+//! * **Struct-of-arrays [`SessionArena`]** — `eligible_at`, `state`,
+//!   `epoch`, `owner`, `session_bytes` and `record` columns preallocated
+//!   once per run; the hot path allocates nothing per event. Stale
+//!   completion events (their session re-queued when a replica died) are
+//!   invalidated by an epoch counter instead of a heap search, and a
+//!   stale-only clock stop runs no phases at all — provably a no-op, so
+//!   the tick counter (and with it the stride-sampled queue-depth trace)
+//!   stays in lockstep with the round loop.
+//! * **Pluggable record sink** — [`run`] collects full
+//!   [`SessionRecord`]s for a [`ServeOutcome`]; [`run_streamed`] folds
+//!   each record into bounded summaries ([`ScaleStats`], backed by
+//!   [`BoundedHistogram`]) the moment it completes, so a million-session
+//!   run never holds a million records.
+//!
+//! Determinism caveat: dispatch picks the key-minimal admitted session
+//! via an ordered set, relying on policy keys being unique — which they
+//! are whenever request ids are unique (every generator in this repo
+//! assigns ids `0..n`). The round loop's linear scan breaks exact-key
+//! ties by replica index instead; duplicate-id workloads are outside the
+//! equivalence contract.
+//!
+//! [`Scheduler::run`]: super::scheduler::Scheduler::run
+//! [`CoreKind::RoundLoop`]: super::scheduler::CoreKind::RoundLoop
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+use anyhow::{bail, ensure, Result};
+
+use super::metrics::BoundedHistogram;
+use super::scheduler::{
+    truncate, QueueKey, SchedulerConfig, ServeOutcome, ServiceModel, SessionOutcome, SessionRecord,
+};
+use super::Request;
+use crate::cluster::{Ms, Node};
+
+/// Min-heap over `(time, request id, request index)` pending-arrival
+/// entries: the shared replacement for the old sorted-`Vec` +
+/// `insert_future` pair (O(n) per insert). Pop order matches the old
+/// comparator exactly — earliest time first, ties by request id — which
+/// `futureheap_pops_in_old_comparator_order` pins below.
+#[derive(Debug, Default)]
+pub(crate) struct FutureHeap {
+    heap: BinaryHeap<Reverse<FutureEntry>>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FutureEntry(Ms, u64, usize);
+
+impl PartialEq for FutureEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for FutureEntry {}
+
+impl PartialOrd for FutureEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FutureEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Times are never NaN (they come from finite arrival/think
+        // arithmetic), so total_cmp agrees with the old partial_cmp
+        // comparator; the index tie-break only keeps the order total.
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1)).then(self.2.cmp(&other.2))
+    }
+}
+
+impl FutureHeap {
+    pub(crate) fn with_capacity(n: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(n) }
+    }
+
+    pub(crate) fn push(&mut self, e: (Ms, u64, usize)) {
+        self.heap.push(Reverse(FutureEntry(e.0, e.1, e.2)));
+    }
+
+    /// The earliest pending entry, if any.
+    pub(crate) fn peek(&self) -> Option<(Ms, u64, usize)> {
+        self.heap.peek().map(|&Reverse(FutureEntry(t, id, idx))| (t, id, idx))
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<(Ms, u64, usize)> {
+        self.heap.pop().map(|Reverse(FutureEntry(t, id, idx))| (t, id, idx))
+    }
+}
+
+// Event kind codes double as the intra-tick phase order (the heap pops
+// same-time events kind-ascending): completions before failures — a
+// session finishing exactly at the failure instant counts as completed —
+// before arrivals. Matches round-loop phases 1, 1b, 2.
+const EV_COMPLETION: u8 = 0;
+const EV_FAILURE: u8 = 1;
+const EV_ARRIVAL: u8 = 2;
+
+/// One scheduled occurrence. `id` is the request id (or the replica
+/// index for failures), `idx` the arena row (or replica index), `epoch`
+/// the session's requeue generation at push time — a completion whose
+/// epoch no longer matches the arena's is stale and skipped.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: Ms,
+    kind: u8,
+    id: u64,
+    idx: usize,
+    epoch: u32,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.kind.cmp(&other.kind))
+            .then(self.id.cmp(&other.id))
+            .then(self.idx.cmp(&other.idx))
+            .then(self.epoch.cmp(&other.epoch))
+    }
+}
+
+/// Session lifecycle, one byte per row in the arena's `state` column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SessState {
+    /// Not yet eligible (future arrival or gated behind its chain).
+    Pending,
+    Waiting,
+    Admitted,
+    Running,
+    Done,
+}
+
+/// Struct-of-arrays session state: every column preallocated at run
+/// start, indexed by request position. Holding per-session state in
+/// parallel columns (instead of a `Vec` of structs or per-event boxes)
+/// keeps the hot path allocation-free and makes the run's resident
+/// footprint a closed form — [`SessionArena::footprint_bytes`], the
+/// peak-RSS proxy `BENCH_scale.json` reports.
+struct SessionArena {
+    eligible_at: Vec<Ms>,
+    state: Vec<SessState>,
+    /// Requeue generation; bumped when a replica failure re-queues the
+    /// session, invalidating its in-heap completion event.
+    epoch: Vec<u32>,
+    /// Replica owning the session's ledger bytes (meaningful in
+    /// Admitted/Running states).
+    owner: Vec<usize>,
+    /// Admission footprint, precomputed once.
+    session_bytes: Vec<u64>,
+    records: Vec<Option<SessionRecord>>,
+}
+
+impl SessionArena {
+    fn new(cfg: &SchedulerConfig, requests: &[Request]) -> Self {
+        let n = requests.len();
+        Self {
+            eligible_at: vec![0.0; n],
+            state: vec![SessState::Pending; n],
+            epoch: vec![0; n],
+            owner: vec![usize::MAX; n],
+            session_bytes: requests.iter().map(|r| cfg.memory.session_bytes(r)).collect(),
+            records: vec![None; n],
+        }
+    }
+
+    /// Resident bytes of the arena columns (capacity × element size) —
+    /// the peak-RSS proxy. Record payloads (tokens) are excluded: they
+    /// are per-session transients the streaming sink drops at
+    /// completion, not steady arena state.
+    fn footprint_bytes(&self) -> u64 {
+        use std::mem::size_of;
+        (self.eligible_at.capacity() * size_of::<Ms>()
+            + self.state.capacity() * size_of::<SessState>()
+            + self.epoch.capacity() * size_of::<u32>()
+            + self.owner.capacity() * size_of::<usize>()
+            + self.session_bytes.capacity() * size_of::<u64>()
+            + self.records.capacity() * size_of::<Option<SessionRecord>>()) as u64
+    }
+}
+
+/// Where finished records go: [`run`] collects them whole,
+/// [`run_streamed`] folds them into bounded summaries and drops them.
+trait RecordSink {
+    fn emit(&mut self, rec: SessionRecord);
+}
+
+#[derive(Default)]
+struct CollectSink {
+    records: Vec<SessionRecord>,
+}
+
+impl RecordSink for CollectSink {
+    fn emit(&mut self, rec: SessionRecord) {
+        self.records.push(rec);
+    }
+}
+
+/// Streaming sink: outcome counts, token totals, and bounded e2e/TTFT
+/// histograms. Mirrors [`super::metrics::ServeReport`]'s aggregation
+/// conventions (rejected sessions are counted, then skipped).
+struct StreamSink {
+    completed: u64,
+    preempted: u64,
+    rejected: u64,
+    total_tokens: u64,
+    e2e: BoundedHistogram,
+    ttft: BoundedHistogram,
+}
+
+impl StreamSink {
+    fn new(sample_cap: usize) -> Self {
+        Self {
+            completed: 0,
+            preempted: 0,
+            rejected: 0,
+            total_tokens: 0,
+            e2e: BoundedHistogram::new(sample_cap),
+            ttft: BoundedHistogram::new(sample_cap),
+        }
+    }
+}
+
+impl RecordSink for StreamSink {
+    fn emit(&mut self, rec: SessionRecord) {
+        match rec.outcome {
+            SessionOutcome::Completed => self.completed += 1,
+            SessionOutcome::Preempted => self.preempted += 1,
+            SessionOutcome::Rejected => {
+                self.rejected += 1;
+                return;
+            }
+        }
+        self.total_tokens += rec.tokens.len() as u64;
+        self.e2e.push(rec.e2e_ms());
+        if let Some(t) = rec.ttft_ms() {
+            self.ttft.push(t);
+        }
+    }
+}
+
+/// Bounded-memory summary of one streamed run — what
+/// `od-moe serve --scale-sweep` reports per cell.
+#[derive(Debug, Clone)]
+pub struct ScaleStats {
+    pub completed: u64,
+    pub preempted: u64,
+    pub rejected: u64,
+    /// Sessions re-queued by replica failures (same meaning as
+    /// [`ServeOutcome::requeued`]).
+    pub requeued: usize,
+    /// Generated tokens across completed + preempted sessions.
+    pub total_tokens: u64,
+    pub makespan_ms: Ms,
+    /// Events popped from the heap (arrivals, completions including
+    /// stale ones, failures) — the throughput denominator.
+    pub events: u64,
+    /// Scheduling ticks: clock stops where at least one phase ran.
+    pub ticks: u64,
+    /// Arena column footprint, the peak-RSS proxy.
+    pub arena_bytes: u64,
+    /// End-to-end latency; exact percentiles up to the sample cap,
+    /// log-binned above it ([`BoundedHistogram::is_exact`]).
+    pub e2e: BoundedHistogram,
+    pub ttft: BoundedHistogram,
+}
+
+/// What [`run_core`] produced besides the sink's records.
+struct CoreOutcome {
+    makespan_ms: Ms,
+    queue_depth: Vec<(Ms, usize)>,
+    replica_busy_ms: Vec<Ms>,
+    bookings: Vec<Vec<(Ms, Ms, u64)>>,
+    requeued: usize,
+    events: u64,
+    ticks: u64,
+    arena_bytes: u64,
+}
+
+struct EventReplica {
+    node: Node,
+    /// In-flight sessions of the current batch: (arena row, finish time).
+    running: Vec<(usize, Ms)>,
+    busy_ms: Ms,
+    bookings: Vec<(Ms, Ms, u64)>,
+    dead: bool,
+}
+
+/// Full-fidelity run: collect every record and return the same
+/// [`ServeOutcome`] the round loop produces (completion order: finish
+/// time, then id).
+pub fn run(
+    cfg: &SchedulerConfig,
+    service: &mut dyn ServiceModel,
+    requests: &[Request],
+) -> Result<ServeOutcome> {
+    let mut sink = CollectSink::default();
+    let core = run_core(cfg, service, requests, &mut sink, false)?;
+    let mut records = sink.records;
+    records.sort_by(|a, b| {
+        a.finish_ms.partial_cmp(&b.finish_ms).unwrap_or(Ordering::Equal).then(a.id.cmp(&b.id))
+    });
+    Ok(ServeOutcome {
+        records,
+        makespan_ms: core.makespan_ms,
+        queue_depth: core.queue_depth,
+        replica_busy_ms: core.replica_busy_ms,
+        bookings: core.bookings,
+        requeued: core.requeued,
+    })
+}
+
+/// Bounded-memory run for scale sweeps: records fold into
+/// [`ScaleStats`] as they complete (exact percentiles up to
+/// `sample_cap` samples per series, log-binned summaries above), and
+/// per-replica booking logs are skipped. Scheduling decisions are
+/// identical to [`run`] — only what is *retained* differs.
+pub fn run_streamed(
+    cfg: &SchedulerConfig,
+    service: &mut dyn ServiceModel,
+    requests: &[Request],
+    sample_cap: usize,
+) -> Result<ScaleStats> {
+    let mut sink = StreamSink::new(sample_cap);
+    let core = run_core(cfg, service, requests, &mut sink, true)?;
+    Ok(ScaleStats {
+        completed: sink.completed,
+        preempted: sink.preempted,
+        rejected: sink.rejected,
+        requeued: core.requeued,
+        total_tokens: sink.total_tokens,
+        makespan_ms: core.makespan_ms,
+        events: core.events,
+        ticks: core.ticks,
+        arena_bytes: core.arena_bytes,
+        e2e: sink.e2e,
+        ttft: sink.ttft,
+    })
+}
+
+/// The event loop proper. `lean` skips the per-replica booking logs
+/// (unbounded at scale); everything else is retained identically.
+fn run_core<S: RecordSink>(
+    cfg: &SchedulerConfig,
+    service: &mut dyn ServiceModel,
+    requests: &[Request],
+    sink: &mut S,
+    lean: bool,
+) -> Result<CoreOutcome> {
+    assert!(cfg.n_replicas > 0, "need at least one replica");
+    assert!(cfg.max_batch > 0, "need a positive batch limit");
+    let n = requests.len();
+    let stride = cfg.queue_sample_stride.max(1) as u64;
+
+    // Closed-loop chains: per client, requests become eligible in id
+    // order, each gated behind its predecessor's completion plus think
+    // time — the round loop's construction, verbatim.
+    let mut chains: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    let mut by_id: Vec<usize> = (0..n).collect();
+    by_id.sort_by_key(|&i| requests[i].id);
+    for &i in &by_id {
+        chains.entry(requests[i].client).or_default().push(i);
+    }
+    let mut chain_pos: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut events: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(n + cfg.n_replicas);
+    for (client, chain) in &chains {
+        let idx = chain[0];
+        events.push(Reverse(Event {
+            time: requests[idx].arrival_ms,
+            kind: EV_ARRIVAL,
+            id: requests[idx].id,
+            idx,
+            epoch: 0,
+        }));
+        chain_pos.insert(*client, 1);
+    }
+
+    let mut fail_at: Vec<Ms> = vec![f64::INFINITY; cfg.n_replicas];
+    for &(ri, at) in &cfg.replica_failures {
+        ensure!(ri < cfg.n_replicas, "replica failure targets replica {ri} of {}", cfg.n_replicas);
+        ensure!(at.is_finite() && at >= 0.0, "bad replica failure time {at}");
+        fail_at[ri] = fail_at[ri].min(at);
+    }
+    for (ri, &at) in fail_at.iter().enumerate() {
+        if at.is_finite() {
+            events.push(Reverse(Event {
+                time: at,
+                kind: EV_FAILURE,
+                id: ri as u64,
+                idx: ri,
+                epoch: 0,
+            }));
+        }
+    }
+
+    let mut reps: Vec<EventReplica> = (0..cfg.n_replicas)
+        .map(|i| EventReplica {
+            node: Node::new(i),
+            running: Vec::new(),
+            busy_ms: 0.0,
+            bookings: Vec::new(),
+            dead: false,
+        })
+        .collect();
+    let mut arena = SessionArena::new(cfg, requests);
+    let arena_bytes = arena.footprint_bytes();
+
+    // Waiting queue and admitted set are ordered indexes over (policy
+    // key, arena row). The admitted set is global (the round loop kept
+    // per-replica lists) with the owning replica in the arena's `owner`
+    // column — dispatch wants the key-minimal entry across all replicas
+    // anyway, so one ordered set answers it in O(log n).
+    let mut waiting: BTreeSet<(QueueKey, usize)> = BTreeSet::new();
+    let mut admitted: BTreeSet<(QueueKey, usize)> = BTreeSet::new();
+    let mut admitted_count: Vec<usize> = vec![0; cfg.n_replicas];
+
+    let mut queue_depth: Vec<(Ms, usize)> = Vec::new();
+    let mut clock: Ms = 0.0;
+    let mut makespan: Ms = 0.0;
+    // Max finish over emitted (completed/preempted) records: with
+    // records streamed out at completion, the failure-time makespan
+    // rebuild folds this instead of re-scanning finished sessions.
+    let mut finalized_makespan: Ms = 0.0;
+    let mut done = 0usize;
+    let mut requeued = 0usize;
+    let mut n_events: u64 = 0;
+    let mut tick: u64 = 0;
+
+    // Release the next request of `client`'s chain after a completion
+    // (or rejection) at time `at`.
+    let release_next = |events: &mut BinaryHeap<Reverse<Event>>,
+                        chain_pos: &mut BTreeMap<u64, usize>,
+                        client: u64,
+                        at: Ms| {
+        let chain = &chains[&client];
+        let pos = chain_pos.get_mut(&client).expect("chain position");
+        if *pos < chain.len() {
+            let idx = chain[*pos];
+            *pos += 1;
+            let req = &requests[idx];
+            let t = req.arrival_ms.max(at + req.think_ms);
+            events.push(Reverse(Event { time: t, kind: EV_ARRIVAL, id: req.id, idx, epoch: 0 }));
+        }
+    };
+
+    loop {
+        // Drain every event due at `clock` in (time, kind, id) order —
+        // the kind codes reproduce the round loop's completions →
+        // failures → arrivals phase order. The first tick always runs
+        // its phases (the round loop's unconditional first pass at
+        // clock 0); after that, a drain of nothing but stale
+        // completions runs none (see module docs).
+        let mut acted = tick == 0;
+        while let Some(&Reverse(ev)) = events.peek() {
+            if ev.time > clock {
+                break;
+            }
+            events.pop();
+            n_events += 1;
+            match ev.kind {
+                EV_COMPLETION => {
+                    let idx = ev.idx;
+                    if arena.epoch[idx] != ev.epoch {
+                        // Stale: the session re-queued when its replica
+                        // died; its real completion is a future event.
+                        continue;
+                    }
+                    acted = true;
+                    debug_assert_eq!(arena.state[idx], SessState::Running, "completion state");
+                    let ri = arena.owner[idx];
+                    let r = &mut reps[ri];
+                    let pos = r
+                        .running
+                        .iter()
+                        .position(|&(i, _)| i == idx)
+                        .expect("completed session in its replica's batch");
+                    r.running.swap_remove(pos);
+                    let bytes = arena.session_bytes[idx];
+                    let freed = r.node.dealloc(bytes);
+                    debug_assert_eq!(
+                        freed,
+                        bytes,
+                        "memory ledger drift on request {}",
+                        requests[idx].id
+                    );
+                    arena.state[idx] = SessState::Done;
+                    done += 1;
+                    let rec = arena.records[idx].take().expect("running session has a record");
+                    finalized_makespan = finalized_makespan.max(rec.finish_ms);
+                    sink.emit(rec);
+                    release_next(&mut events, &mut chain_pos, requests[idx].client, ev.time);
+                }
+                EV_FAILURE => {
+                    acted = true;
+                    let ri = ev.idx;
+                    let r = &mut reps[ri];
+                    debug_assert!(!r.dead, "one failure event per replica");
+                    r.dead = true;
+                    // Unfinished batch members re-queue with their
+                    // ledger bytes released; eligibility (and thus
+                    // policy key) is unchanged. The epoch bump strands
+                    // their in-heap completion events.
+                    let mut batch_end = clock;
+                    for (idx, end) in r.running.drain(..) {
+                        batch_end = batch_end.max(end);
+                        r.node.dealloc(arena.session_bytes[idx]);
+                        arena.records[idx] = None;
+                        arena.epoch[idx] += 1;
+                        arena.state[idx] = SessState::Waiting;
+                        requeued += 1;
+                        let key =
+                            QueueKey::new(cfg.policy.key(&requests[idx], arena.eligible_at[idx]));
+                        waiting.insert((key, idx));
+                    }
+                    // Busy only until it died: drop the aborted tail
+                    // from utilization and bookings.
+                    r.busy_ms -= (batch_end - clock).max(0.0);
+                    if !lean {
+                        r.bookings.retain(|&(_, end, _)| end <= clock);
+                    }
+                    // Admitted-but-queued sessions it owned re-queue too.
+                    let mine: Vec<(QueueKey, usize)> = admitted
+                        .iter()
+                        .filter(|&&(_, idx)| arena.owner[idx] == ri)
+                        .copied()
+                        .collect();
+                    for (key, idx) in mine {
+                        admitted.remove(&(key, idx));
+                        reps[ri].node.dealloc(arena.session_bytes[idx]);
+                        arena.state[idx] = SessState::Waiting;
+                        requeued += 1;
+                        waiting.insert((key, idx));
+                    }
+                    admitted_count[ri] = 0;
+                    // Aborted dispatches may have advanced the makespan
+                    // past anything that will actually finish; rebuild
+                    // from what survives — emitted finishes plus the
+                    // other replicas' in-flight records.
+                    makespan = finalized_makespan;
+                    for rep in &reps {
+                        for &(idx, _) in &rep.running {
+                            if let Some(rec) = &arena.records[idx] {
+                                makespan = makespan.max(rec.finish_ms);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    acted = true;
+                    let idx = ev.idx;
+                    let t = ev.time;
+                    arena.eligible_at[idx] = t;
+                    let req = &requests[idx];
+                    if arena.session_bytes[idx] > cfg.memory.budget_bytes {
+                        // Can never fit any replica: rejected outright.
+                        arena.state[idx] = SessState::Done;
+                        done += 1;
+                        sink.emit(SessionRecord {
+                            id: req.id,
+                            tenant: req.tenant,
+                            replica: None,
+                            arrival_ms: req.arrival_ms,
+                            eligible_ms: t,
+                            start_ms: t,
+                            first_token_ms: None,
+                            finish_ms: t,
+                            tokens: Vec::new(),
+                            requested_tokens: req.out_tokens,
+                            stall_ms: 0.0,
+                            slo: req.slo,
+                            outcome: SessionOutcome::Rejected,
+                        });
+                        release_next(&mut events, &mut chain_pos, req.client, t);
+                    } else {
+                        arena.state[idx] = SessState::Waiting;
+                        let key = QueueKey::new(cfg.policy.key(req, t));
+                        waiting.insert((key, idx));
+                    }
+                }
+            }
+        }
+
+        if acted {
+            // Admission: waiting → replica ledgers, in key order, onto
+            // the least-loaded live replica with room (ties prefer free
+            // bytes, then the lowest index); stop at the first
+            // head-of-line session that fits nowhere.
+            while let Some(&(key, idx)) = waiting.first() {
+                let bytes = arena.session_bytes[idx];
+                let mut best: Option<(usize, usize, u64)> = None;
+                for (ri, r) in reps.iter().enumerate() {
+                    if r.dead {
+                        continue;
+                    }
+                    let free = cfg.memory.budget_bytes.saturating_sub(r.node.gpu_bytes_used);
+                    if free < bytes {
+                        continue;
+                    }
+                    let load = admitted_count[ri] + r.running.len();
+                    let better = match best {
+                        None => true,
+                        Some((_, bl, bf)) => load < bl || (load == bl && free > bf),
+                    };
+                    if better {
+                        best = Some((ri, load, free));
+                    }
+                }
+                let Some((ri, _, _)) = best else { break };
+                reps[ri].node.alloc(bytes);
+                admitted_count[ri] += 1;
+                arena.owner[idx] = ri;
+                arena.state[idx] = SessState::Admitted;
+                admitted.insert((key, idx));
+                waiting.remove(&(key, idx));
+            }
+
+            // Dispatch: each idle live replica starts up to `max_batch`
+            // of the globally best admitted sessions as one batch,
+            // stealing siblings' admitted sessions when they fit its
+            // own ledger.
+            for ri in 0..reps.len() {
+                if reps[ri].dead || !reps[ri].running.is_empty() {
+                    continue;
+                }
+                let mut picked: Vec<usize> = Vec::new();
+                while picked.len() < cfg.max_batch {
+                    let free_ri =
+                        cfg.memory.budget_bytes.saturating_sub(reps[ri].node.gpu_bytes_used);
+                    // First in-order qualifying entry = the key-minimal
+                    // one (keys embed the unique request id), i.e. the
+                    // same choice the round loop's full scan made.
+                    let choice = admitted
+                        .iter()
+                        .find(|&&(_, idx)| {
+                            arena.owner[idx] == ri || arena.session_bytes[idx] <= free_ri
+                        })
+                        .copied();
+                    let Some((key, idx)) = choice else { break };
+                    admitted.remove(&(key, idx));
+                    let qi = arena.owner[idx];
+                    admitted_count[qi] -= 1;
+                    if qi != ri {
+                        let bytes = arena.session_bytes[idx];
+                        let freed = reps[qi].node.dealloc(bytes);
+                        debug_assert_eq!(freed, bytes, "steal ledger drift on request {idx}");
+                        reps[ri].node.alloc(bytes);
+                    }
+                    picked.push(idx);
+                }
+                if picked.is_empty() {
+                    continue;
+                }
+                let refs: Vec<&Request> = picked.iter().map(|&idx| &requests[idx]).collect();
+                let profiles = service.measure_batch(&refs)?;
+                ensure!(profiles.len() == picked.len(), "one profile per batched session");
+                let start = clock;
+                let mut batch_end = start;
+                for (profile, &idx) in profiles.iter().zip(&picked) {
+                    let req = &requests[idx];
+                    let (kept, svc, preempted) = truncate(profile, cfg.preempt_budget_ms);
+                    let finish = start + svc;
+                    arena.records[idx] = Some(SessionRecord {
+                        id: req.id,
+                        tenant: req.tenant,
+                        replica: Some(ri),
+                        arrival_ms: req.arrival_ms,
+                        eligible_ms: arena.eligible_at[idx],
+                        start_ms: start,
+                        first_token_ms: (kept > 0).then_some(start + profile.ttft_ms),
+                        finish_ms: finish,
+                        tokens: profile.tokens[..kept].to_vec(),
+                        requested_tokens: req.out_tokens,
+                        stall_ms: profile.stall_ms,
+                        slo: req.slo,
+                        outcome: if preempted {
+                            SessionOutcome::Preempted
+                        } else {
+                            SessionOutcome::Completed
+                        },
+                    });
+                    arena.state[idx] = SessState::Running;
+                    arena.owner[idx] = ri;
+                    reps[ri].running.push((idx, finish));
+                    if !lean {
+                        reps[ri].bookings.push((start, finish, req.id));
+                    }
+                    events.push(Reverse(Event {
+                        time: finish,
+                        kind: EV_COMPLETION,
+                        id: req.id,
+                        idx,
+                        epoch: arena.epoch[idx],
+                    }));
+                    batch_end = batch_end.max(finish);
+                    makespan = makespan.max(finish);
+                }
+                reps[ri].busy_ms += batch_end - start;
+            }
+
+            // Queue-depth sample, every `stride` ticks, deduplicated.
+            if tick % stride == 0 {
+                let depth = waiting.len() + admitted.len();
+                if queue_depth.last().map(|&(_, d)| d) != Some(depth) {
+                    queue_depth.push((clock, depth));
+                }
+            }
+            tick += 1;
+
+            if done >= n {
+                break;
+            }
+        }
+
+        // Advance to the next pending event. An empty heap with work
+        // outstanding means failures killed every replica that could
+        // serve the remaining queue (running sessions always hold a
+        // live completion event, live failing replicas a failure event).
+        match events.peek() {
+            Some(&Reverse(ev)) => clock = ev.time,
+            None => bail!(
+                "scheduler stalled with {} request(s) stuck waiting ({} of {} replica(s) dead)",
+                waiting.len(),
+                reps.iter().filter(|r| r.dead).count(),
+                reps.len()
+            ),
+        }
+    }
+
+    Ok(CoreOutcome {
+        makespan_ms: makespan,
+        queue_depth,
+        replica_busy_ms: reps.iter().map(|r| r.busy_ms).collect(),
+        bookings: reps.into_iter().map(|r| r.bookings).collect(),
+        requeued,
+        events: n_events,
+        ticks: tick,
+        arena_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::{Policy, Scheduler, SyntheticService};
+
+    /// The retired comparator, verbatim: descending (time, id) sort so
+    /// `pop()` from the Vec tail yields the earliest entry.
+    fn oracle_insert(v: &mut Vec<(Ms, u64, usize)>, e: (Ms, u64, usize)) {
+        let at = v.partition_point(|x| x.0 > e.0 || (x.0 == e.0 && x.1 > e.1));
+        v.insert(at, e);
+    }
+
+    #[test]
+    fn futureheap_pops_in_old_comparator_order() {
+        // Satellite pin: the heap must pop exactly as the old sorted-Vec
+        // + insert_future pair did, including (time) ties broken by id.
+        let entries: Vec<(Ms, u64, usize)> = vec![
+            (5.0, 3, 0),
+            (1.0, 9, 1),
+            (5.0, 1, 2),
+            (0.0, 4, 3),
+            (2.5, 7, 4),
+            (2.5, 2, 5),
+            (1.0, 0, 6),
+            (7.25, 5, 7),
+        ];
+        let mut oracle: Vec<(Ms, u64, usize)> = Vec::new();
+        let mut heap = FutureHeap::with_capacity(entries.len());
+        for &e in &entries {
+            oracle_insert(&mut oracle, e);
+            heap.push(e);
+        }
+        while let Some(expect) = oracle.pop() {
+            assert_eq!(heap.peek(), Some(expect));
+            assert_eq!(heap.pop(), Some(expect));
+        }
+        assert_eq!(heap.pop(), None);
+    }
+
+    #[test]
+    fn event_order_is_time_then_kind_then_id() {
+        let ev = |time, kind, id| Event { time, kind, id, idx: 0, epoch: 0 };
+        let mut h: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        for e in [
+            ev(1.0, EV_ARRIVAL, 0),
+            ev(1.0, EV_COMPLETION, 5),
+            ev(0.5, EV_ARRIVAL, 9),
+            ev(1.0, EV_FAILURE, 1),
+            ev(1.0, EV_COMPLETION, 2),
+        ] {
+            h.push(Reverse(e));
+        }
+        let popped: Vec<(Ms, u8, u64)> = std::iter::from_fn(|| h.pop())
+            .map(|Reverse(e)| (e.time, e.kind, e.id))
+            .collect();
+        // Same time: completions (id ascending), then failures, then
+        // arrivals — the round loop's phase order.
+        assert_eq!(
+            popped,
+            vec![
+                (0.5, EV_ARRIVAL, 9),
+                (1.0, EV_COMPLETION, 2),
+                (1.0, EV_COMPLETION, 5),
+                (1.0, EV_FAILURE, 1),
+                (1.0, EV_ARRIVAL, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn streamed_run_matches_collected_outcome() {
+        // run_streamed must make the same scheduling decisions as run —
+        // only retention differs.
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| {
+                let mut r = Request::open_loop(i, vec![1 + i as u32], 6, i as f64 * 3.0);
+                r.client = i % 5; // 5 chains of 8
+                r.think_ms = 2.0;
+                r
+            })
+            .collect();
+        let cfg = SchedulerConfig {
+            n_replicas: 2,
+            max_batch: 2,
+            policy: Policy::Sjf,
+            ..SchedulerConfig::default()
+        };
+        let mut svc = SyntheticService::new(2.0, 0.1, 1.0).with_batch_marginal(0.3);
+        let out = Scheduler::run(&cfg, &mut svc.clone(), &reqs).unwrap();
+        let stats = run_streamed(&cfg, &mut svc, &reqs, 1 << 12).unwrap();
+        assert_eq!(stats.completed as usize + stats.preempted as usize, out.records.len());
+        assert_eq!(stats.makespan_ms, out.makespan_ms);
+        assert_eq!(stats.requeued, out.requeued);
+        assert_eq!(
+            stats.total_tokens,
+            out.records.iter().map(|r| r.tokens.len() as u64).sum::<u64>()
+        );
+        let mut e2e = stats.e2e.clone();
+        let s = e2e.summary();
+        assert!(s.count == out.records.len() && stats.e2e.is_exact());
+        assert!(stats.events > 0 && stats.ticks > 0 && stats.arena_bytes > 0);
+    }
+
+    #[test]
+    fn arena_footprint_is_linear_in_sessions() {
+        let mk = |n: usize| {
+            let reqs: Vec<Request> =
+                (0..n as u64).map(|i| Request::open_loop(i, vec![1], 4, 0.0)).collect();
+            SessionArena::new(&SchedulerConfig::default(), &reqs).footprint_bytes()
+        };
+        let (small, big) = (mk(100), mk(1000));
+        assert!(big >= 9 * small && big <= 11 * small, "{small} vs {big}");
+    }
+}

@@ -17,6 +17,12 @@
 //!   (DESIGN.md §12), read against the cacheless (budget 0) baseline
 //!   and the fully-cached ceiling, locating the crossover between pure
 //!   OD-MoE, tiered residency, and a fully-cached deployment.
+//! * [`scale_sweep`] → `BENCH_scale.json` — event-core throughput
+//!   (events/sec, arena bytes as a peak-RSS proxy) at 1k..1M synthetic
+//!   closed-loop sessions, with the round loop as a comparison point at
+//!   the sizes it can still reach (DESIGN.md §13). Cells run across
+//!   `--threads` scoped workers; results merge by cell index, so the
+//!   deterministic section is byte-identical at any thread count.
 //!
 //! Each (system, point) run regenerates the workload at that rate from
 //! the *same* seed — prompts and lengths are identical across points
@@ -29,9 +35,13 @@ use std::path::Path;
 use anyhow::{ensure, Context, Result};
 
 use super::arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
-use super::metrics::{num, obj, ServeReport};
-use super::scheduler::{BatchStats, MemoryModel, Policy, Scheduler, SchedulerConfig, ServiceModel};
-use super::Slo;
+use super::events::run_streamed;
+use super::metrics::{num, obj, Histogram, Percentiles, ServeReport};
+use super::scheduler::{
+    BatchStats, CoreKind, MemoryModel, Policy, Scheduler, SchedulerConfig, ServiceModel,
+    SessionOutcome, SyntheticService,
+};
+use super::{Request, Slo};
 use crate::cluster::HardwareProfile;
 use crate::runtime::PREFILL_SIZES;
 use crate::telemetry::{DecodeAttribution, Phase, NPHASES};
@@ -133,7 +143,11 @@ pub fn parse_cache_budgets(s: &str) -> Result<Vec<usize>> {
 /// (fail-stop replica N at virtual time MS; its sessions re-queue),
 /// `--cache-hot N` (per-worker GPU-hot tier budget; its expert payloads
 /// are reserved out of the admission budget up front — DESIGN.md §12 —
-/// so 0, the default, leaves the cacheless admission schedule intact).
+/// so 0, the default, leaves the cacheless admission schedule intact),
+/// `--core event|round-loop` (scheduler executor, DESIGN.md §13; both
+/// produce bit-identical outcomes), `--queue-sample N` (queue-depth
+/// trace stride in scheduling ticks; 1, the default, is the historical
+/// every-tick trace).
 pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, SchedulerConfig, f64)> {
     // Back-compat: the old FCFS server took `--arrival-gap-ms`.
     let rate = match a.get("arrival-gap-ms") {
@@ -193,6 +207,12 @@ pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, Scheduler
         replica_failures: match a.get("fail-replica") {
             Some(s) => parse_replica_failures(s)?,
             None => Vec::new(),
+        },
+        core: CoreKind::parse(a.get_or("core", "event"))?,
+        queue_sample_stride: {
+            let stride = a.usize_or("queue-sample", 1)?;
+            ensure!(stride >= 1, "--queue-sample must be >= 1, got {stride}");
+            stride
         },
     };
     Ok((spec, sched, rate))
@@ -816,6 +836,263 @@ pub fn attrib_json(points: &[AttribPoint], seed: u64, fleet: &str) -> Json {
     ])
 }
 
+/// Run `f` over `items` on up to `threads` scoped workers, returning
+/// results in item order regardless of which worker computed what or
+/// when. Workers claim indices from a shared counter (no work stealing,
+/// no channels) and write into per-index slots, so the only
+/// thread-sensitive quantity is wall-clock: anything deterministic per
+/// item stays deterministic at every thread count. `threads == 1` runs
+/// inline on the caller's stack.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().expect("unpoisoned result slot") = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("unpoisoned result slot").expect("every item computed"))
+        .collect()
+}
+
+/// Exact-percentile retention cap for streamed scale cells: runs at or
+/// under this many completions keep the full latency series (exact
+/// percentiles); larger runs fall back to the bounded histogram's
+/// log-binned summaries, flagged `exact_percentiles: false` in the JSON.
+pub const SCALE_SAMPLE_CAP: usize = 65_536;
+
+/// Synthetic closed-loop workload for the scale sweep, built directly
+/// (bypassing [`WorkloadSpec::generate`]'s per-request machinery, which
+/// is fine at thousands of requests and wasteful at a million): one
+/// chain per client, `sessions / clients`-deep, single-token prompts,
+/// 8 output tokens, exponential think times (mean 10 virtual ms) from
+/// the seeded generator. Deterministic per (sessions, clients, seed).
+pub fn scale_workload(sessions: usize, clients: usize, seed: u64) -> Vec<Request> {
+    let mut rng = crate::model::rng::Rng::new(seed ^ 0x5CA1E);
+    (0..sessions)
+        .map(|i| {
+            let mut r = Request::open_loop(i as u64, vec![1 + (i % 250) as u32], 8, 0.0);
+            r.client = (i % clients.max(1)) as u64;
+            r.think_ms = -(1.0 - rng.uniform()).ln() * 10.0;
+            r
+        })
+        .collect()
+}
+
+/// One measured (session count, core) cell of the scale sweep.
+#[derive(Debug, Clone)]
+pub struct ScaleCell {
+    pub sessions: usize,
+    pub core: CoreKind,
+    pub completed: u64,
+    pub preempted: u64,
+    pub rejected: u64,
+    pub requeued: usize,
+    pub total_tokens: u64,
+    pub makespan_ms: f64,
+    /// Heap pops over the run (event core only).
+    pub events: Option<u64>,
+    /// Scheduling ticks (event core only).
+    pub ticks: Option<u64>,
+    /// Session-arena footprint, the peak-RSS proxy (event core only).
+    pub arena_bytes: Option<u64>,
+    pub e2e: Percentiles,
+    pub exact_percentiles: bool,
+    /// Wall-clock for the cell — reported under the separate `"wall"`
+    /// keys and never part of the deterministic section.
+    pub wall_ms: f64,
+}
+
+/// The scale sweep's scheduler shape: 4 replicas x batch 4, unlimited
+/// memory (the queue pressure comes from chain gating, not admission),
+/// queue-depth stride 64 so the trace stays bounded at a million ticks.
+fn scale_config(core: CoreKind) -> SchedulerConfig {
+    SchedulerConfig {
+        n_replicas: 4,
+        max_batch: 4,
+        queue_sample_stride: 64,
+        core,
+        ..SchedulerConfig::default()
+    }
+}
+
+fn run_scale_cell(sessions: usize, core: CoreKind, seed: u64) -> Result<ScaleCell> {
+    // Chains 4 deep: a quarter of the sessions are eligible at once, so
+    // the admitted index the dispatcher searches grows with the session
+    // count — exactly the regime where the round loop's linear pick scan
+    // goes quadratic and the event core's ordered index does not.
+    let reqs = scale_workload(sessions, (sessions / 4).max(1), seed);
+    let cfg = scale_config(core);
+    let mut svc = SyntheticService::new(2.0, 0.1, 1.0).with_batch_marginal(0.2);
+    let start = std::time::Instant::now();
+    match core {
+        CoreKind::Event => {
+            let mut stats = run_streamed(&cfg, &mut svc, &reqs, SCALE_SAMPLE_CAP)?;
+            let wall_ms = start.elapsed().as_secs_f64() * 1000.0;
+            let exact_percentiles = stats.e2e.is_exact();
+            Ok(ScaleCell {
+                sessions,
+                core,
+                completed: stats.completed,
+                preempted: stats.preempted,
+                rejected: stats.rejected,
+                requeued: stats.requeued,
+                total_tokens: stats.total_tokens,
+                makespan_ms: stats.makespan_ms,
+                events: Some(stats.events),
+                ticks: Some(stats.ticks),
+                arena_bytes: Some(stats.arena_bytes),
+                e2e: stats.e2e.summary(),
+                exact_percentiles,
+                wall_ms,
+            })
+        }
+        CoreKind::RoundLoop => {
+            let out = Scheduler::run_round_loop(&cfg, &mut svc, &reqs)?;
+            let wall_ms = start.elapsed().as_secs_f64() * 1000.0;
+            let (mut completed, mut preempted, mut rejected) = (0u64, 0u64, 0u64);
+            let mut total_tokens = 0u64;
+            let mut e2e = Histogram::default();
+            for rec in &out.records {
+                match rec.outcome {
+                    SessionOutcome::Completed => completed += 1,
+                    SessionOutcome::Preempted => preempted += 1,
+                    SessionOutcome::Rejected => {
+                        rejected += 1;
+                        continue;
+                    }
+                }
+                total_tokens += rec.tokens.len() as u64;
+                e2e.push(rec.e2e_ms());
+            }
+            Ok(ScaleCell {
+                sessions,
+                core,
+                completed,
+                preempted,
+                rejected,
+                requeued: out.requeued,
+                total_tokens,
+                makespan_ms: out.makespan_ms,
+                events: None,
+                ticks: None,
+                arena_bytes: None,
+                e2e: e2e.summary(),
+                exact_percentiles: true,
+                wall_ms,
+            })
+        }
+    }
+}
+
+/// Measure event-core throughput at every session count (and the round
+/// loop's, at counts up to `round_cap` — its quadratic dispatch scan
+/// makes larger counts impractical, which is the point of the
+/// comparison). Cells run across `threads` scoped workers via
+/// [`parallel_map`]; the result order is by cell index either way.
+pub fn scale_sweep(
+    sizes: &[usize],
+    round_cap: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<Vec<ScaleCell>> {
+    ensure!(!sizes.is_empty(), "scale sweep needs at least one session count");
+    ensure!(sizes.iter().all(|&s| s >= 1), "session counts must be >= 1, got {sizes:?}");
+    let mut cells: Vec<(usize, CoreKind)> =
+        sizes.iter().map(|&s| (s, CoreKind::Event)).collect();
+    cells.extend(sizes.iter().filter(|&&s| s <= round_cap).map(|&s| (s, CoreKind::RoundLoop)));
+    parallel_map(&cells, threads, |_, &(sessions, core)| run_scale_cell(sessions, core, seed))
+        .into_iter()
+        .collect()
+}
+
+/// Parse a `--scale-sessions 1000,10000,...` list.
+pub fn parse_scale_sessions(s: &str) -> Result<Vec<usize>> {
+    let sizes: Vec<usize> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("bad session count list {s:?}"))?;
+    ensure!(!sizes.is_empty(), "--scale-sessions needs at least one session count");
+    ensure!(sizes.iter().all(|&v| v >= 1), "session counts must be >= 1, got {sizes:?}");
+    Ok(sizes)
+}
+
+/// Assemble the `BENCH_scale.json` document. Everything except the
+/// `wall_*` keys is deterministic per seed at any `--threads` value —
+/// the property the CI scale-smoke job diffs — so wall-clock is both
+/// clearly labeled and excludable (`include_wall: false`, the CLI's
+/// `--omit-wall`).
+pub fn scale_json(
+    cells: &[ScaleCell],
+    sizes: &[usize],
+    round_cap: usize,
+    seed: u64,
+    include_wall: bool,
+) -> Json {
+    let cell_json = |c: &ScaleCell| {
+        let mut fields = vec![
+            ("sessions", Json::Num(c.sessions as f64)),
+            ("core", Json::Str(c.core.label().to_string())),
+            ("completed", Json::Num(c.completed as f64)),
+            ("preempted", Json::Num(c.preempted as f64)),
+            ("rejected", Json::Num(c.rejected as f64)),
+            ("requeued", Json::Num(c.requeued as f64)),
+            ("total_tokens", Json::Num(c.total_tokens as f64)),
+            ("makespan_ms", num(c.makespan_ms)),
+            ("e2e_ms", c.e2e.to_json()),
+            ("exact_percentiles", Json::Bool(c.exact_percentiles)),
+        ];
+        if let (Some(events), Some(ticks), Some(arena)) = (c.events, c.ticks, c.arena_bytes) {
+            fields.push(("events", Json::Num(events as f64)));
+            fields.push(("ticks", Json::Num(ticks as f64)));
+            fields.push(("arena_bytes", Json::Num(arena as f64)));
+            let eps =
+                if c.makespan_ms > 0.0 { events as f64 * 1000.0 / c.makespan_ms } else { 0.0 };
+            fields.push(("events_per_virtual_s", num(eps)));
+        }
+        if include_wall {
+            fields.push(("wall_ms", num(c.wall_ms)));
+            let wall_s = c.wall_ms / 1000.0;
+            if wall_s > 0.0 {
+                fields.push(("wall_sessions_per_s", num(c.sessions as f64 / wall_s)));
+                if let Some(events) = c.events {
+                    fields.push(("wall_events_per_s", num(events as f64 / wall_s)));
+                }
+            }
+        }
+        obj(fields)
+    };
+    obj(vec![
+        ("bench", Json::Str("scale".to_string())),
+        ("schema", Json::Str("odmoe.scale.v1".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("sizes", Json::Arr(sizes.iter().map(|&s| Json::Num(s as f64)).collect())),
+        ("round_cap", Json::Num(round_cap as f64)),
+        ("cells", Json::Arr(cells.iter().map(cell_json).collect())),
+    ])
+}
+
 /// Write a JSON document with a trailing newline.
 pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
     std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
@@ -906,6 +1183,72 @@ mod tests {
         let drift =
             failover_sweep(1, |k| Ok(fake(k, if k == 0 { vec![1] } else { vec![2] }))).unwrap();
         assert!(!drift[1].tokens_match_healthy);
+    }
+
+    #[test]
+    fn parallel_map_is_deterministic_and_ordered() {
+        let items: Vec<usize> = (0..37).collect();
+        let serial = parallel_map(&items, 1, |i, &v| (i, v * v));
+        for threads in [2, 4, 16] {
+            assert_eq!(parallel_map(&items, threads, |i, &v| (i, v * v)), serial);
+        }
+        assert_eq!(parallel_map::<usize, usize, _>(&[], 4, |_, &v| v), vec![]);
+    }
+
+    #[test]
+    fn scale_sweep_cores_agree_and_threads_do_not_matter() {
+        let sizes = [150usize, 300];
+        let cells = scale_sweep(&sizes, 300, 1, 42).unwrap();
+        assert_eq!(cells.len(), 4, "two event cells + two round cells under the cap");
+        // Event and round cells at the same size must agree on every
+        // deterministic quantity — the same equivalence the property
+        // tests pin, surfaced through the sweep path.
+        for &size in &sizes {
+            let ev = cells
+                .iter()
+                .find(|c| c.sessions == size && c.core == CoreKind::Event)
+                .expect("event cell");
+            let rl = cells
+                .iter()
+                .find(|c| c.sessions == size && c.core == CoreKind::RoundLoop)
+                .expect("round cell");
+            assert_eq!(
+                (ev.completed, ev.preempted, ev.rejected, ev.requeued, ev.total_tokens),
+                (rl.completed, rl.preempted, rl.rejected, rl.requeued, rl.total_tokens)
+            );
+            assert_eq!(ev.makespan_ms, rl.makespan_ms);
+            assert!(ev.exact_percentiles, "small cells stay in the exact regime");
+            // Percentiles are individual sample values — bitwise equal.
+            // The mean is a sum accumulated in different orders
+            // (completion order vs. sorted record order), so only
+            // near-equality holds for it.
+            assert_eq!((ev.e2e.p50, ev.e2e.p95, ev.e2e.p99), (rl.e2e.p50, rl.e2e.p95, rl.e2e.p99));
+            assert!((ev.e2e.mean - rl.e2e.mean).abs() <= 1e-9 * rl.e2e.mean.abs().max(1.0));
+            assert!(ev.events.unwrap() > 0 && ev.arena_bytes.unwrap() > 0);
+        }
+        // The deterministic JSON section is byte-identical at any thread
+        // count (and across repeat runs) once wall-clock is excluded.
+        let json = |threads| {
+            scale_json(&scale_sweep(&sizes, 300, threads, 42).unwrap(), &sizes, 300, 42, false)
+                .to_string()
+        };
+        let one = json(1);
+        assert_eq!(one, json(4), "--threads must not leak into the deterministic section");
+        assert!(one.contains("\"bench\":\"scale\""));
+        assert!(one.contains("\"events_per_virtual_s\""));
+        assert!(!one.contains("wall_ms"), "wall keys excluded on --omit-wall");
+        let with_wall =
+            scale_json(&scale_sweep(&sizes, 0, 1, 42).unwrap(), &sizes, 0, 42, true).to_string();
+        assert!(with_wall.contains("\"wall_ms\""));
+        assert!(!with_wall.contains("\"core\":\"round-loop\""), "round cap 0 skips the oracle");
+    }
+
+    #[test]
+    fn parse_scale_sessions_validates() {
+        assert_eq!(parse_scale_sessions("1000,10000").unwrap(), vec![1000, 10000]);
+        assert!(parse_scale_sessions("").is_err());
+        assert!(parse_scale_sessions("0").is_err());
+        assert!(parse_scale_sessions("a").is_err());
     }
 
     #[test]

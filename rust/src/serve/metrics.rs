@@ -74,6 +74,174 @@ impl Histogram {
     }
 }
 
+/// Pending pushes accumulated before each compact sorted merge.
+const MERGE_BATCH: usize = 1024;
+/// Log-spaced bins for the streaming fallback: 8 per octave over
+/// [2^-10, 2^54) ms — sub-microsecond to beyond any virtual makespan —
+/// so a bin's edges are within 2^(1/8) ≈ 9% of each other.
+const BINS_PER_OCTAVE: f64 = 8.0;
+const BIN_FLOOR_LOG2: f64 = -10.0;
+const N_BINS: usize = 512;
+
+/// Bounded-memory latency sink for million-session runs ([`Histogram`]
+/// retains every sample; this one cannot). Up to `sample_cap` samples it
+/// keeps the exact series in sorted form — new pushes buffer and fold in
+/// via compact sorted merges, so there is never a full re-sort of the
+/// whole series — and percentiles are exact, identical to
+/// [`Histogram`]'s. Past the cap it degrades *explicitly*: retained
+/// samples spill into logarithmic bins, [`BoundedHistogram::is_exact`]
+/// flips to false, and percentiles come from a cumulative bin walk
+/// (error bounded by the ~9% bin width). Count, sum, min and max stay
+/// exact at every scale.
+#[derive(Debug, Clone)]
+pub struct BoundedHistogram {
+    cap: usize,
+    /// Retained samples, sorted (exact regime only).
+    sorted: Vec<f64>,
+    /// Recent pushes not yet merged into `sorted`.
+    pending: Vec<f64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Populated only after the cap is crossed.
+    bins: Vec<u64>,
+    exact: bool,
+}
+
+impl BoundedHistogram {
+    pub fn new(sample_cap: usize) -> Self {
+        Self {
+            cap: sample_cap,
+            sorted: Vec::new(),
+            pending: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            bins: Vec::new(),
+            exact: true,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.exact {
+            if self.count <= self.cap as u64 {
+                self.pending.push(v);
+                if self.pending.len() >= MERGE_BATCH {
+                    self.merge_pending();
+                }
+                return;
+            }
+            // Crossing the cap: spill everything retained into bins and
+            // stay there — a run either fits the exact regime or it
+            // doesn't.
+            self.merge_pending();
+            self.exact = false;
+            self.bins = vec![0; N_BINS];
+            for s in std::mem::take(&mut self.sorted) {
+                self.bins[Self::bin(s)] += 1;
+            }
+        }
+        self.bins[Self::bin(v)] += 1;
+    }
+
+    /// Whether `summary` percentiles are exact (sample count never
+    /// exceeded the cap) or log-bin approximations.
+    pub fn is_exact(&self) -> bool {
+        self.exact
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Fold `pending` into `sorted`: sort the small batch, then one
+    /// linear merge — O(cap) per batch instead of O(cap log cap).
+    fn merge_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.pending.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut merged = Vec::with_capacity(self.sorted.len() + self.pending.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.sorted.len() && j < self.pending.len() {
+            if self.sorted[i] <= self.pending[j] {
+                merged.push(self.sorted[i]);
+                i += 1;
+            } else {
+                merged.push(self.pending[j]);
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&self.sorted[i..]);
+        merged.extend_from_slice(&self.pending[j..]);
+        self.sorted = merged;
+        self.pending.clear();
+    }
+
+    fn bin(v: f64) -> usize {
+        let l = v.max(2f64.powf(BIN_FLOOR_LOG2)).log2();
+        (((l - BIN_FLOOR_LOG2) * BINS_PER_OCTAVE) as usize).min(N_BINS - 1)
+    }
+
+    /// Geometric midpoint of bin `i` — the representative an approximate
+    /// quantile reports.
+    fn bin_value(i: usize) -> f64 {
+        2f64.powf(BIN_FLOOR_LOG2 + (i as f64 + 0.5) / BINS_PER_OCTAVE)
+    }
+
+    /// Nearest-rank quantile over the cumulative bin counts, clamped to
+    /// the exact observed [min, max].
+    fn approx_quantile(&self, q: f64) -> f64 {
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bin_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&mut self) -> Percentiles {
+        if self.count == 0 {
+            return Percentiles::default();
+        }
+        let mean = self.sum / self.count as f64;
+        if self.exact {
+            self.merge_pending();
+            return Percentiles {
+                count: self.count as usize,
+                mean,
+                p50: percentile_sorted(&self.sorted, 0.50),
+                p95: percentile_sorted(&self.sorted, 0.95),
+                p99: percentile_sorted(&self.sorted, 0.99),
+            };
+        }
+        Percentiles {
+            count: self.count as usize,
+            mean,
+            p50: self.approx_quantile(0.50),
+            p95: self.approx_quantile(0.95),
+            p99: self.approx_quantile(0.99),
+        }
+    }
+}
+
 /// Compact percentile summary of one latency series.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Percentiles {
@@ -339,6 +507,74 @@ mod tests {
         assert_eq!(s.p50, crate::metrics::percentile(&raw, 0.5));
         assert_eq!(s.p95, crate::metrics::percentile(&raw, 0.95));
         assert_eq!(s.p99, crate::metrics::percentile(&raw, 0.99));
+    }
+
+    /// Deterministic LCG stream shared by the bounded-histogram tests.
+    fn lcg_stream(n: usize) -> Vec<f64> {
+        let mut x = 7u64;
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                0.05 + (x >> 33) as f64 / 1e7
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bounded_histogram_is_exact_below_the_cap() {
+        // Below the cap the bounded sink must agree with Histogram
+        // exactly, including with summaries interleaved between pushes
+        // (each one forces a compact merge of the pending batch).
+        let vals = lcg_stream(3000); // > MERGE_BATCH, < cap
+        let mut exact = Histogram::default();
+        let mut bounded = BoundedHistogram::new(1 << 16);
+        for (i, &v) in vals.iter().enumerate() {
+            exact.push(v);
+            bounded.push(v);
+            if i % 997 == 0 {
+                let (a, b) = (exact.summary(), bounded.summary());
+                assert_eq!((a.p50, a.p95, a.p99), (b.p50, b.p95, b.p99));
+            }
+        }
+        assert!(bounded.is_exact());
+        let (a, b) = (exact.summary(), bounded.summary());
+        assert_eq!(a.count, b.count);
+        assert_eq!((a.mean, a.p50, a.p95, a.p99), (b.mean, b.p50, b.p95, b.p99));
+    }
+
+    #[test]
+    fn bounded_histogram_degrades_to_log_bins_above_the_cap() {
+        let vals = lcg_stream(5000);
+        let mut exact = Histogram::default();
+        let mut bounded = BoundedHistogram::new(256);
+        for &v in &vals {
+            exact.push(v);
+            bounded.push(v);
+        }
+        assert!(!bounded.is_exact(), "5000 samples must overflow a cap of 256");
+        assert_eq!(bounded.count(), 5000);
+        let (a, b) = (exact.summary(), bounded.summary());
+        assert_eq!(a.count, b.count);
+        assert!((a.mean - b.mean).abs() < 1e-9, "mean stays exact");
+        // Approximate quantiles land within one log bin (edges within
+        // 2^(1/8) ≈ 9%) of the true value.
+        for (t, approx) in [(a.p50, b.p50), (a.p95, b.p95), (a.p99, b.p99)] {
+            assert!((approx / t).log2().abs() <= 1.0 / 8.0 + 1e-9, "true {t} vs approx {approx}");
+        }
+    }
+
+    #[test]
+    fn bounded_histogram_clamps_approx_quantiles_to_observed_range() {
+        let mut b = BoundedHistogram::new(2);
+        for v in [100.0, 101.0, 102.0, 103.0] {
+            b.push(v);
+        }
+        assert!(!b.is_exact());
+        let s = b.summary();
+        for p in [s.p50, s.p95, s.p99] {
+            assert!((100.0..=103.0).contains(&p), "quantile {p} outside observed range");
+        }
+        assert_eq!(BoundedHistogram::new(8).summary().count, 0, "empty sink summarizes to zero");
     }
 
     #[test]

@@ -9,24 +9,34 @@
 //!   ON-OFF, replayed traces) and closed-loop clients with think time,
 //!   drawing per-request prompt/output lengths from
 //!   [`crate::workload::Corpus`].
-//! * [`scheduler`] — a continuous virtual-time event loop that multiplexes
-//!   in-flight sessions across a pool of engine replicas, with pluggable
-//!   policies (FCFS / SJF / SLO-aware EDF), admission control backed by a
-//!   per-replica KV + expert-weight memory ledger
+//! * [`scheduler`] — continuous virtual-time scheduling semantics that
+//!   multiplex in-flight sessions across a pool of engine replicas, with
+//!   pluggable policies (FCFS / SJF / SLO-aware EDF), admission control
+//!   backed by a per-replica KV + expert-weight memory ledger
 //!   ([`crate::cluster::Node`]'s byte accounting), preemption of
 //!   over-budget sessions at token boundaries, and multi-session batched
 //!   dispatch: an idle replica takes up to
 //!   [`scheduler::SchedulerConfig::max_batch`] admitted sessions as one
 //!   co-scheduled decode batch (see
 //!   [`crate::coordinator::BatchEngine`] and DESIGN.md §7).
+//! * [`events`] — the heap-based executor behind those semantics
+//!   (DESIGN.md §13): one event heap, a struct-of-arrays session arena,
+//!   and a streaming-summary mode ([`events::run_streamed`]) that takes
+//!   serving runs to a million sessions in bounded memory. The original
+//!   round loop survives as the equivalence oracle
+//!   ([`scheduler::CoreKind`] selects).
 //! * [`metrics`] — streaming latency histograms with exact nearest-rank
 //!   p50/p95/p99 TTFT and TPOT, goodput (tokens meeting SLO), and
-//!   queue-depth timelines, broken down per tenant.
+//!   queue-depth timelines, broken down per tenant; [`BoundedHistogram`]
+//!   keeps percentiles meaningful past the point where retaining every
+//!   sample stops being.
 //! * [`harness`] — sweep drivers that run any [`Engine`] (OD-MoE and
 //!   every baseline) across arrival rates, batch sizes and worker-failure
 //!   counts, emitting the deterministic `BENCH_serve.json`,
-//!   `BENCH_batch.json`, `BENCH_failover.json` and `BENCH_cache.json`
-//!   artifacts.
+//!   `BENCH_batch.json`, `BENCH_failover.json`, `BENCH_cache.json` and
+//!   `BENCH_scale.json` artifacts; independent sweep cells fan out
+//!   across [`harness::parallel_map`] workers with index-ordered merges,
+//!   so `--threads` changes wall-clock and nothing else.
 //!
 //! Failures surface at two levels: engine-level node faults
 //! ([`crate::coordinator::FailureSpec`], DESIGN.md §8) reroute expert
@@ -45,21 +55,24 @@
 //! [`Engine`]: crate::coordinator::Engine
 
 pub mod arrivals;
+pub mod events;
 pub mod harness;
 pub mod metrics;
 pub mod scheduler;
 
 pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
+pub use events::{run_streamed, ScaleStats};
 pub use harness::{
     attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
-    config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
-    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates, parse_replica_failures,
-    rate_sweep, sweep_json, write_bench, AttribPoint, BatchPoint, CachePoint, FailoverPoint,
-    OverlapPoint,
+    config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parallel_map,
+    parse_batches, parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates,
+    parse_replica_failures, parse_scale_sessions, rate_sweep, scale_json, scale_sweep,
+    scale_workload, sweep_json, write_bench, AttribPoint, BatchPoint, CachePoint, FailoverPoint,
+    OverlapPoint, ScaleCell, SCALE_SAMPLE_CAP,
 };
-pub use metrics::{Histogram, Percentiles, ServeReport, TenantReport};
+pub use metrics::{BoundedHistogram, Histogram, Percentiles, ServeReport, TenantReport};
 pub use scheduler::{
-    BatchEngineService, BatchStats, EngineService, MemoryModel, Policy, Scheduler,
+    BatchEngineService, BatchStats, CoreKind, EngineService, MemoryModel, Policy, Scheduler,
     SchedulerConfig, ServeOutcome, ServiceModel, SessionOutcome, SessionProfile, SessionRecord,
     SyntheticService,
 };

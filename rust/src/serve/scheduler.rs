@@ -32,6 +32,13 @@
 //!    but the replica re-forms a *new* batch only once all members have
 //!    completed — the head-of-line-blocking fairness caveat documented in
 //!    DESIGN.md §7.
+//!
+//! Two executors implement these semantics: the heap-based event core in
+//! [`super::events`] (the default, built for million-session runs —
+//! DESIGN.md §13) and the original phase-stepped round loop kept here as
+//! the equivalence oracle ([`Scheduler::run_round_loop`]).
+//! [`SchedulerConfig::core`] selects between them;
+//! `rust/tests/event_core_props.rs` pins their outputs bit-identical.
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BTreeSet};
@@ -78,7 +85,7 @@ impl Policy {
     /// Keys may be infinite (relaxed SLOs) but never NaN — the
     /// `out_tokens == 0` guard avoids `inf * 0` — so sorting with
     /// [`key_cmp`] is a genuine total order.
-    fn key(self, r: &Request, eligible_ms: Ms) -> (f64, f64, u64) {
+    pub(crate) fn key(self, r: &Request, eligible_ms: Ms) -> (f64, f64, u64) {
         let primary = match self {
             Policy::Fcfs => eligible_ms,
             Policy::Sjf => (r.prompt.len() + 8 * r.out_tokens) as f64,
@@ -118,10 +125,10 @@ fn key_cmp(a: (f64, f64, u64), b: (f64, f64, u64)) -> Ordering {
 /// here, and the `BTreeSet` iterates in the same order those sorts
 /// produced: `BENCH_serve.json` stays byte-identical.
 #[derive(Debug, Clone, Copy, PartialEq)]
-struct QueueKey(f64, f64, u64);
+pub(crate) struct QueueKey(f64, f64, u64);
 
 impl QueueKey {
-    fn new(k: (f64, f64, u64)) -> Self {
+    pub(crate) fn new(k: (f64, f64, u64)) -> Self {
         debug_assert!(!k.0.is_nan() && !k.1.is_nan(), "NaN policy key breaks the total order");
         QueueKey(k.0, k.1, k.2)
     }
@@ -191,6 +198,37 @@ impl MemoryModel {
     }
 }
 
+/// Which executor [`Scheduler::run`] drives. Both implement the exact
+/// same scheduling semantics (pinned bit-identical by
+/// `rust/tests/event_core_props.rs`); they differ only in asymptotics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreKind {
+    /// Heap-based event loop ([`super::events`], DESIGN.md §13): O(log n)
+    /// per event, preallocated session arena. The default.
+    Event,
+    /// The original phase-stepped round loop
+    /// ([`Scheduler::run_round_loop`]): linear scans per clock step.
+    /// Demoted to equivalence oracle and scale-sweep comparison point.
+    RoundLoop,
+}
+
+impl CoreKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "event" => CoreKind::Event,
+            "round-loop" | "round" => CoreKind::RoundLoop,
+            other => bail!("unknown scheduler core {other:?} (event|round-loop)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CoreKind::Event => "event",
+            CoreKind::RoundLoop => "round-loop",
+        }
+    }
+}
+
 /// Scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -217,6 +255,14 @@ pub struct SchedulerConfig {
     /// At least one replica must survive to drain outstanding work, else
     /// the run errors out.
     pub replica_failures: Vec<(usize, Ms)>,
+    /// Executor backing [`Scheduler::run`].
+    pub core: CoreKind,
+    /// Sample the queue-depth trace every this many scheduling ticks
+    /// (clock steps where work happened). The default of 1 samples every
+    /// tick — the historical behavior, byte-identical sweep outputs —
+    /// while million-session runs use a wider stride so the trace stays
+    /// bounded instead of growing O(events).
+    pub queue_sample_stride: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -228,6 +274,8 @@ impl Default for SchedulerConfig {
             preempt_budget_ms: None,
             max_batch: 1,
             replica_failures: Vec::new(),
+            core: CoreKind::Event,
+            queue_sample_stride: 1,
         }
     }
 }
@@ -349,17 +397,42 @@ impl BatchStats {
     }
 }
 
+/// Interns distinct prompts to dense `u32` ids so service memo keys
+/// compare in O(1) instead of cloning and comparing a full `Vec<u32>`
+/// per lookup. Interning is by content — equal prompts always intern to
+/// the same id — so a memo keyed on (interned id, output length) hits
+/// exactly when the old (prompt clone, output length) key did; ids
+/// merely depend on first-seen order, which the memo never exposes.
+#[derive(Debug, Default)]
+struct PromptInterner {
+    ids: BTreeMap<Vec<u32>, u32>,
+}
+
+impl PromptInterner {
+    /// Id for `prompt`, allocating one (and the only clone this prompt
+    /// will ever cost) on first sight.
+    fn intern(&mut self, prompt: &[u32]) -> u32 {
+        if let Some(&id) = self.ids.get(prompt) {
+            return id;
+        }
+        let id = self.ids.len() as u32;
+        self.ids.insert(prompt.to_vec(), id);
+        id
+    }
+}
+
 /// [`ServiceModel`] backed by a real [`Engine`], memoizing profiles per
-/// (prompt, output-length) so rate sweeps re-measure each distinct
-/// request once.
+/// (interned prompt id, output length) so rate sweeps re-measure each
+/// distinct request once.
 pub struct EngineService<'e> {
     engine: &'e mut dyn Engine,
-    memo: BTreeMap<(Vec<u32>, usize), SessionProfile>,
+    interner: PromptInterner,
+    memo: BTreeMap<(u32, usize), SessionProfile>,
 }
 
 impl<'e> EngineService<'e> {
     pub fn new(engine: &'e mut dyn Engine) -> Self {
-        Self { engine, memo: BTreeMap::new() }
+        Self { engine, interner: PromptInterner::default(), memo: BTreeMap::new() }
     }
 
     pub fn engine_name(&self) -> String {
@@ -369,7 +442,7 @@ impl<'e> EngineService<'e> {
 
 impl ServiceModel for EngineService<'_> {
     fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
-        let key = (req.prompt.clone(), req.out_tokens);
+        let key = (self.interner.intern(&req.prompt), req.out_tokens);
         if let Some(p) = self.memo.get(&key) {
             return Ok(p.clone());
         }
@@ -394,17 +467,23 @@ impl ServiceModel for EngineService<'_> {
 /// composition stands for a real repeated dispatch in the modeled run.
 pub struct BatchEngineService<'e> {
     engine: &'e mut dyn BatchEngine,
+    interner: PromptInterner,
     memo: BTreeMap<BatchKey, (Vec<SessionProfile>, BatchStats)>,
     stats: BatchStats,
 }
 
-/// Batch composition: the ordered (prompt, output-length) list — the
-/// memoization key for batched measurements.
-type BatchKey = Vec<(Vec<u32>, usize)>;
+/// Batch composition: the ordered (interned prompt id, output-length)
+/// list — the memoization key for batched measurements.
+type BatchKey = Vec<(u32, usize)>;
 
 impl<'e> BatchEngineService<'e> {
     pub fn new(engine: &'e mut dyn BatchEngine) -> Self {
-        Self { engine, memo: BTreeMap::new(), stats: BatchStats::default() }
+        Self {
+            engine,
+            interner: PromptInterner::default(),
+            memo: BTreeMap::new(),
+            stats: BatchStats::default(),
+        }
     }
 
     pub fn engine_name(&self) -> String {
@@ -419,7 +498,8 @@ impl ServiceModel for BatchEngineService<'_> {
     }
 
     fn measure_batch(&mut self, reqs: &[&Request]) -> Result<Vec<SessionProfile>> {
-        let key: BatchKey = reqs.iter().map(|r| (r.prompt.clone(), r.out_tokens)).collect();
+        let key: BatchKey =
+            reqs.iter().map(|r| (self.interner.intern(&r.prompt), r.out_tokens)).collect();
         if let Some((profiles, tallies)) = self.memo.get(&key) {
             self.stats.merge(tallies);
             return Ok(profiles.clone());
@@ -636,7 +716,7 @@ pub struct ServeOutcome {
 /// Truncate a session at a token boundary when its measured service
 /// exceeds the preemption budget. Returns (tokens kept, charged service
 /// ms, preempted?).
-fn truncate(p: &SessionProfile, budget: Option<Ms>) -> (usize, Ms, bool) {
+pub(crate) fn truncate(p: &SessionProfile, budget: Option<Ms>) -> (usize, Ms, bool) {
     let full = p.service_ms();
     let total = p.tokens.len();
     let Some(b) = budget else { return (total, full, false) };
@@ -653,13 +733,6 @@ fn truncate(p: &SessionProfile, budget: Option<Ms>) -> (usize, Ms, bool) {
         (((b - p.ttft_ms) / tpot).floor() as usize).min(total - 1)
     };
     (1 + extra, p.ttft_ms + extra as f64 * tpot, true)
-}
-
-/// `future` is kept sorted descending by (time, id) so `pop()` yields the
-/// earliest event.
-fn insert_future(v: &mut Vec<(Ms, u64, usize)>, e: (Ms, u64, usize)) {
-    let at = v.partition_point(|x| x.0 > e.0 || (x.0 == e.0 && x.1 > e.1));
-    v.insert(at, e);
 }
 
 struct Replica {
@@ -681,7 +754,27 @@ struct Replica {
 pub struct Scheduler;
 
 impl Scheduler {
+    /// Simulate one serving run with the executor selected by
+    /// [`SchedulerConfig::core`]. Both executors produce bit-identical
+    /// [`ServeOutcome`]s; the event core just gets there in O(log n) per
+    /// event.
     pub fn run(
+        cfg: &SchedulerConfig,
+        service: &mut dyn ServiceModel,
+        requests: &[Request],
+    ) -> Result<ServeOutcome> {
+        match cfg.core {
+            CoreKind::Event => super::events::run(cfg, service, requests),
+            CoreKind::RoundLoop => Self::run_round_loop(cfg, service, requests),
+        }
+    }
+
+    /// The original phase-stepped executor, kept as the equivalence
+    /// oracle for the event core (and as the slow comparison point in
+    /// `--scale-sweep`). Scans every replica's running list per clock
+    /// step — O(replicas x batch) per event where the event core pays
+    /// O(log n).
+    pub fn run_round_loop(
         cfg: &SchedulerConfig,
         service: &mut dyn ServiceModel,
         requests: &[Request],
@@ -700,12 +793,14 @@ impl Scheduler {
         for &i in &by_id {
             chains.entry(requests[i].client).or_default().push(i);
         }
-        // Next position to release per chain, and the pending-event list.
+        // Next position to release per chain, and the pending-arrival
+        // heap (shared with the event core; pops earliest time, ties by
+        // id — the order the old sorted-Vec insertion produced).
         let mut chain_pos: BTreeMap<u64, usize> = BTreeMap::new();
-        let mut future: Vec<(Ms, u64, usize)> = Vec::with_capacity(n);
+        let mut future = super::events::FutureHeap::with_capacity(n);
         for (client, chain) in &chains {
             let idx = chain[0];
-            insert_future(&mut future, (requests[idx].arrival_ms, requests[idx].id, idx));
+            future.push((requests[idx].arrival_ms, requests[idx].id, idx));
             chain_pos.insert(*client, 1);
         }
 
@@ -737,10 +832,12 @@ impl Scheduler {
         let mut clock: Ms = 0.0;
         let mut makespan: Ms = 0.0;
         let mut done = 0usize;
+        let stride = cfg.queue_sample_stride.max(1) as u64;
+        let mut tick: u64 = 0;
 
         // Release the next request of `client`'s chain after a completion
         // (or rejection) at time `at`.
-        let release_next = |future: &mut Vec<(Ms, u64, usize)>,
+        let release_next = |future: &mut super::events::FutureHeap,
                             chain_pos: &mut BTreeMap<u64, usize>,
                             client: u64,
                             at: Ms| {
@@ -751,7 +848,7 @@ impl Scheduler {
                 *pos += 1;
                 let req = &requests[idx];
                 let t = req.arrival_ms.max(at + req.think_ms);
-                insert_future(future, (t, req.id, idx));
+                future.push((t, req.id, idx));
             }
         };
 
@@ -819,7 +916,7 @@ impl Scheduler {
             }
 
             // -- 2. arrivals due at `clock` ------------------------------
-            while let Some(&(t, _, _)) = future.last() {
+            while let Some((t, _, _)) = future.peek() {
                 if t > clock {
                     break;
                 }
@@ -963,11 +1060,14 @@ impl Scheduler {
                 reps[ri].busy_ms += batch_end - start;
             }
 
-            // -- 5. queue-depth sample -----------------------------------
-            let depth = waiting.len() + reps.iter().map(|r| r.admitted.len()).sum::<usize>();
-            if queue_depth.last().map(|&(_, d)| d) != Some(depth) {
-                queue_depth.push((clock, depth));
+            // -- 5. queue-depth sample (every `stride` ticks) ------------
+            if tick % stride == 0 {
+                let depth = waiting.len() + reps.iter().map(|r| r.admitted.len()).sum::<usize>();
+                if queue_depth.last().map(|&(_, d)| d) != Some(depth) {
+                    queue_depth.push((clock, depth));
+                }
             }
+            tick += 1;
 
             if done >= n {
                 break;
@@ -975,7 +1075,7 @@ impl Scheduler {
 
             // -- 6. advance virtual time to the next event ---------------
             let mut next = f64::INFINITY;
-            if let Some(&(t, _, _)) = future.last() {
+            if let Some((t, _, _)) = future.peek() {
                 next = next.min(t);
             }
             for r in &reps {
@@ -1065,6 +1165,38 @@ mod tests {
             let from_sort: Vec<usize> = sorted.iter().map(|&(_, idx)| idx).collect();
             assert_eq!(from_index, from_sort, "case {case}: index order diverged from sort");
         }
+    }
+
+    #[test]
+    fn prompt_interner_is_stable_by_content() {
+        let mut it = PromptInterner::default();
+        let a = it.intern(&[1, 2, 3]);
+        let b = it.intern(&[4, 5]);
+        assert_ne!(a, b);
+        assert_eq!(it.intern(&[1, 2, 3]), a, "same prompt, same id");
+        assert_eq!(it.intern(&[4, 5]), b);
+        assert_ne!(it.intern(&[1, 2]), a, "prefix is a different prompt");
+    }
+
+    #[test]
+    fn queue_depth_stride_subsamples_the_trace() {
+        // Stride 1 (the default) is the historical every-tick trace; a
+        // wider stride bounds it by sampling only ticks divisible by the
+        // stride. Both cores must agree on the trace at every stride —
+        // the ticks they count are the same clock stops.
+        let reqs: Vec<Request> = (0..12).map(|i| req(i, i as f64 * 7.0, 3)).collect();
+        let mut lens = Vec::new();
+        for stride in [1usize, 4] {
+            let mut traces = Vec::new();
+            for core in [CoreKind::Event, CoreKind::RoundLoop] {
+                let cfg =
+                    SchedulerConfig { core, queue_sample_stride: stride, ..Default::default() };
+                traces.push(Scheduler::run(&cfg, &mut svc(), &reqs).unwrap().queue_depth);
+            }
+            assert_eq!(traces[0], traces[1], "stride {stride}: cores disagree on the trace");
+            lens.push(traces[0].len());
+        }
+        assert!(lens[1] < lens[0], "stride 4 must drop samples: {lens:?}");
     }
 
     #[test]

@@ -45,6 +45,11 @@ pub struct GateOutcome {
     /// Baseline keys missing from the current run (a silently dropped
     /// benchmark is treated as a failure, not a pass).
     pub missing: Vec<String>,
+    /// Current-run keys absent from the baseline. Informational only —
+    /// a freshly added benchmark has no history to regress against —
+    /// but listed in the report so new metrics get pinned deliberately
+    /// (`od-moe bench --write-baseline`) instead of staying ungated.
+    pub new_metrics: Vec<String>,
     /// The baseline was a bootstrap placeholder; nothing was compared.
     pub bootstrap: bool,
 }
@@ -98,6 +103,9 @@ impl GateOutcome {
         for name in &self.missing {
             let _ = writeln!(out, "  MISSING    {name} (in baseline, not produced by this run)");
         }
+        for name in &self.new_metrics {
+            let _ = writeln!(out, "  new        {name} (not in baseline; ungated until pinned)");
+        }
         if !self.passed() {
             out.push_str(
                 "intentional change? regenerate with `od-moe bench --write-baseline` \
@@ -137,6 +145,11 @@ pub fn gate(current: &Json, baseline: &Json, band: f64) -> Result<GateOutcome> {
             out.regressions.push(d);
         } else if delta_frac < -band {
             out.improvements.push(d);
+        }
+    }
+    for name in cur.keys() {
+        if !base.contains_key(name) {
+            out.new_metrics.push(name.clone());
         }
     }
     Ok(out)
@@ -204,10 +217,13 @@ mod tests {
     }
 
     #[test]
-    fn new_benchmark_in_current_is_fine() {
+    fn new_benchmark_in_current_is_fine_and_listed() {
         let base = perf(&[("decode/uniform", 100.0)]);
         let cur = perf(&[("decode/uniform", 100.0), ("brand_new", 1.0)]);
-        assert!(gate(&cur, &base, 0.02).unwrap().passed());
+        let g = gate(&cur, &base, 0.02).unwrap();
+        assert!(g.passed(), "a new metric must never fail the gate");
+        assert_eq!(g.new_metrics, vec!["brand_new".to_string()]);
+        assert!(g.report(0.02).contains("new        brand_new"), "{}", g.report(0.02));
     }
 
     #[test]

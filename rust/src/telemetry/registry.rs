@@ -1,6 +1,7 @@
 //! Unified metrics registry: named counters, gauges, and histograms with
-//! one structured JSONL export schema shared by `decode`, `serve`, and
-//! `plan` (DESIGN.md §11).
+//! one structured JSONL export schema shared by `decode`, `serve`
+//! (including `--scale-sweep`'s per-cell `scale.*` series, DESIGN.md
+//! §13), and `plan` (DESIGN.md §11).
 //!
 //! The registry replaces ad-hoc counter plumbing (the engine's private
 //! `failovers` field, loose abort/load counters threaded through return

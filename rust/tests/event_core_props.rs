@@ -1,0 +1,189 @@
+//! Equivalence properties for the event-driven scheduler core
+//! (DESIGN.md §13): the retired round loop is the executable spec, and
+//! the heap-based event core must reproduce its `ServeOutcome` bit for
+//! bit — same records in the same order, same bookings, same queue-depth
+//! timeline, same makespan — across every scheduling feature the round
+//! loop supports. Comparison is on the full `Debug` rendering, so any
+//! new `ServeOutcome` field is automatically under test.
+//!
+//! Runtime-free: everything here drives the synthetic service model.
+
+use odmoe::model::rng::Rng;
+use odmoe::serve::{
+    scale_json, scale_sweep, ArrivalModel, CoreKind, MemoryModel, Policy, Request, Scheduler,
+    SchedulerConfig, SyntheticService, TenantSpec, WorkloadSpec,
+};
+use odmoe::util::prop::check;
+
+const CASES: usize = 48;
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    [Policy::Fcfs, Policy::Sjf, Policy::Edf][rng.below(3)]
+}
+
+fn random_workload(rng: &mut Rng, n: usize) -> Vec<Request> {
+    let rate = 0.5 + rng.uniform() * 8.0;
+    let mut spec = WorkloadSpec::poisson(rate, n, 256);
+    if rng.uniform() < 0.3 {
+        spec.tenants = vec![TenantSpec::interactive(), TenantSpec::batch()];
+    }
+    if rng.uniform() < 0.4 {
+        spec.model = ArrivalModel::ClosedLoop {
+            clients: 1 + rng.below(4),
+            mean_think_ms: 20.0 + rng.uniform() * 300.0,
+        };
+    }
+    spec.generate(rng.next_u64())
+}
+
+fn random_service(rng: &mut Rng) -> SyntheticService {
+    let base = SyntheticService::new(
+        5.0 + rng.uniform() * 50.0,
+        rng.uniform() * 2.0,
+        5.0 + rng.uniform() * 100.0,
+    );
+    if rng.uniform() < 0.5 {
+        base.with_batch_marginal(0.05 + rng.uniform() * 0.5)
+    } else {
+        base
+    }
+}
+
+/// Both cores on identical inputs; service models are deterministic per
+/// construction, so each core gets its own clone.
+fn both_cores(
+    cfg: &SchedulerConfig,
+    svc: &SyntheticService,
+    reqs: &[Request],
+) -> Result<(String, String), String> {
+    let event_cfg = SchedulerConfig { core: CoreKind::Event, ..cfg.clone() };
+    let mut ev_svc = svc.clone();
+    let ev = Scheduler::run(&event_cfg, &mut ev_svc, reqs).map_err(|e| e.to_string())?;
+    let mut rl_svc = svc.clone();
+    let rl = Scheduler::run_round_loop(cfg, &mut rl_svc, reqs).map_err(|e| e.to_string())?;
+    Ok((format!("{ev:?}"), format!("{rl:?}")))
+}
+
+#[test]
+fn prop_event_core_is_bit_identical_to_round_loop() {
+    check("event core == round loop", CASES, 201, |rng| {
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(4),
+            max_batch: [1, 2, 4][rng.below(3)],
+            preempt_budget_ms: if rng.uniform() < 0.3 {
+                Some(30.0 + rng.uniform() * 200.0)
+            } else {
+                None
+            },
+            queue_sample_stride: 1 + rng.below(4),
+            ..Default::default()
+        };
+        let reqs = random_workload(rng, 4 + rng.below(28));
+        let svc = random_service(rng);
+        let (ev, rl) = both_cores(&cfg, &svc, &reqs)?;
+        if ev != rl {
+            return Err(format!(
+                "cores diverge under {:?} x{} batch {}",
+                cfg.policy, cfg.n_replicas, cfg.max_batch
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_core_matches_round_loop_under_admission_pressure() {
+    check("cores agree with a bounded ledger", CASES, 202, |rng| {
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas: 1 + rng.below(3),
+            max_batch: 1 + rng.below(3),
+            memory: MemoryModel {
+                budget_bytes: 2_000,
+                kv_bytes_per_token: 10,
+                session_fixed_bytes: 100,
+            },
+            ..Default::default()
+        };
+        // Mixed sizes: some requests exceed the budget outright and are
+        // rejected, the rest contend for admission — both paths must
+        // agree on who runs where and when.
+        let reqs: Vec<Request> = (0..20)
+            .map(|i| {
+                let prompt_len = if rng.uniform() < 0.25 { 200 } else { 16 };
+                Request::open_loop(i, vec![1; prompt_len], 8, i as f64 * 15.0)
+            })
+            .collect();
+        let svc = random_service(rng);
+        let (ev, rl) = both_cores(&cfg, &svc, &reqs)?;
+        if ev != rl {
+            return Err("cores diverge under admission pressure".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_core_matches_round_loop_under_replica_failure() {
+    check("cores agree through fail-stop", CASES, 203, |rng| {
+        let n_replicas = 2 + rng.below(3);
+        let mut failures = vec![(rng.below(n_replicas - 1), rng.uniform() * 400.0)];
+        if rng.uniform() < 0.3 && n_replicas >= 3 {
+            // Two distinct casualties; replica n-1 always survives.
+            let second = (failures[0].0 + 1) % (n_replicas - 1);
+            failures.push((second, rng.uniform() * 400.0));
+        }
+        let cfg = SchedulerConfig {
+            policy: random_policy(rng),
+            n_replicas,
+            max_batch: 1 + rng.below(3),
+            replica_failures: failures,
+            ..Default::default()
+        };
+        let reqs = random_workload(rng, 4 + rng.below(24));
+        let svc = random_service(rng);
+        let (ev, rl) = both_cores(&cfg, &svc, &reqs)?;
+        if ev != rl {
+            return Err(format!("cores diverge with failures {:?}", cfg.replica_failures));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn core_selector_picks_the_round_loop() {
+    // `--core round-loop` must actually run the old executor: selecting
+    // it through `Scheduler::run` gives the same outcome as calling
+    // `run_round_loop` directly (and, per the properties above, the same
+    // outcome as the event core — this pins the plumbing, not the math).
+    let cfg = SchedulerConfig { core: CoreKind::RoundLoop, n_replicas: 2, ..Default::default() };
+    let reqs = WorkloadSpec::poisson(4.0, 12, 256).generate(7);
+    let mut a = SyntheticService::new(10.0, 0.2, 20.0);
+    let mut b = a.clone();
+    let via_selector = Scheduler::run(&cfg, &mut a, &reqs).unwrap();
+    let direct = Scheduler::run_round_loop(&cfg, &mut b, &reqs).unwrap();
+    assert_eq!(format!("{via_selector:?}"), format!("{direct:?}"));
+    assert_eq!(CoreKind::parse("round-loop").unwrap(), CoreKind::RoundLoop);
+    assert_eq!(CoreKind::parse("round").unwrap(), CoreKind::RoundLoop);
+    assert_eq!(CoreKind::parse("event").unwrap(), CoreKind::Event);
+    assert!(CoreKind::parse("warp").is_err());
+}
+
+#[test]
+fn scale_bench_json_is_identical_at_any_thread_count() {
+    // The CI scale-smoke contract: BENCH_scale.json without wall-clock
+    // keys is byte-identical between --threads 1 and --threads 4.
+    let sizes = [160usize, 320];
+    let round_cap = 320;
+    let render = |threads: usize| {
+        let cells = scale_sweep(&sizes, round_cap, threads, 42).unwrap();
+        scale_json(&cells, &sizes, round_cap, 42, false).to_string()
+    };
+    let serial = render(1);
+    let threaded = render(4);
+    assert_eq!(serial, threaded, "thread count must not leak into the deterministic section");
+    assert!(serial.contains("\"schema\":\"odmoe.scale.v1\""));
+    assert!(serial.contains("\"core\":\"round-loop\""), "oracle cells present under the cap");
+    assert!(!serial.contains("wall_ms"), "include_wall=false must drop wall-clock keys");
+}
