@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Independent mirror of `od-moe bench`'s precision/* virtual metrics.
+
+Recomputes the `precision/<class>/loads_<tier>` tier tallies of the
+committed baseline (rust/benches/perf_baseline.json) from the same
+closed-form duration model as `cluster::HardwareProfile` and
+`coordinator::precision::PrecisionController`, without touching the Rust
+crate. The counts are small integers and every slack comparison in the
+grid clears its boundary by >= 0.1 ms, so agreement is exact, not
+band-dependent.
+
+Usage:
+    python3 rust/benches/baseline_mirror.py          # print the JSON
+    python3 rust/benches/baseline_mirror.py --check  # diff vs the file
+
+`od-moe bench --write-baseline` pins whatever the crate currently
+computes; this script is the cross-check that the pinned numbers follow
+from the documented model (DESIGN.md §14).
+"""
+
+import json
+import sys
+
+# cluster::HardwareProfile::rtx3090() — the base (main/LAN/model) profile.
+BASE = {
+    "t_nonexpert_ms": 3.5,
+    "lan_gbps": 1.0,
+    "lan_lat_ms": 0.15,
+    "embed_msg_bytes": 16_384.0,
+    "expert_bytes": 500e6,
+}
+
+# cluster::NodeClass presets — the worker-side knobs worker_profile()
+# overlays on BASE (name, t_expert_gpu_ms, pcie_gbps, pcie_lat_ms,
+# chunk_overhead_ms).
+CLASSES = [
+    ("rtx3090", 1.4, 25.0, 0.2, 0.01),
+    ("rtx3080", 1.9, 22.0, 0.2, 0.01),
+    ("jetson", 3.2, 8.0, 0.4, 0.02),
+    ("nano", 6.5, 4.0, 0.6, 0.04),
+]
+
+# quant::Precision::transfer_factor() at PAPER_EXPERT_ROW = 4096:
+# bytes_per_param relative to fp16's 2.0 B/param.
+TRANSFER_FACTORS = [
+    1.0,                        # fp16
+    (1.0 + 4.0 / 4096.0) / 2.0,  # int8: one f32 absmax per 4096-wide row
+    (0.5 + 4.0 / 64.0) / 2.0,    # nf4: one f32 scale per 64-elem block
+]
+
+CHUNKS = 4
+N_GROUPS = 4
+IMPORTANCE_FLOOR = 0.5
+TIER_LABELS = ["fp16", "int8", "nf4"]
+
+
+def chunk_durations(bytes_, pcie_gbps, overhead_ms):
+    per = bytes_ / (pcie_gbps * 1e9) * 1e3 / CHUNKS
+    return [per if i == 0 else per + overhead_ms for i in range(CHUNKS)]
+
+
+def window_ms(t_expert_ms):
+    lan_transfer = BASE["embed_msg_bytes"] * 8.0 / (BASE["lan_gbps"] * 1e9) * 1e3
+    t_main = BASE["t_nonexpert_ms"] + 2.0 * (BASE["lan_lat_ms"] + lan_transfer)
+    return N_GROUPS * t_main + (N_GROUPS - 1) * t_expert_ms
+
+
+def select(tiers, start, deadline, importance):
+    # PrecisionController::select with done_chunks = 0, min_tier = 0.
+    idx = len(tiers) - 1
+    for i, durs in enumerate(tiers):
+        if start + sum(durs) <= deadline:
+            idx = i
+            break
+    if importance >= IMPORTANCE_FLOOR:
+        idx = min(idx, 1)  # SlackImportance: important experts refuse NF4
+    return idx
+
+
+def tallies():
+    out = {}
+    for name, t_expert, pcie, _pcie_lat, overhead in CLASSES:
+        tiers = [
+            chunk_durations(BASE["expert_bytes"] * f, pcie, overhead)
+            for f in TRANSFER_FACTORS
+        ]
+        win = window_ms(t_expert)
+        counts = [0, 0, 0]
+        for si in range(8):
+            start = win * float(si) / 8.0
+            for imp in [0.1, 0.3, 0.5, 0.7, 0.9]:
+                counts[select(tiers, start, win, imp)] += 1
+        for tier, label in enumerate(TIER_LABELS):
+            out[f"precision/{name}/loads_{label}"] = float(counts[tier])
+    return out
+
+
+def main():
+    virt = tallies()
+    doc = {"schema": "odmoe.bench.v1", "virtual": virt}
+    if "--check" in sys.argv:
+        with open("rust/benches/perf_baseline.json", encoding="utf-8") as f:
+            pinned = json.load(f)["virtual"]
+        bad = {
+            k: (v, pinned.get(k))
+            for k, v in virt.items()
+            if pinned.get(k) != v
+        }
+        if bad:
+            for k, (want, got) in sorted(bad.items()):
+                print(f"MISMATCH {k}: mirror {want} != pinned {got}")
+            sys.exit(1)
+        print(f"ok: {len(virt)} precision metrics match the pinned baseline")
+        return
+    print(json.dumps(doc, indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -420,6 +420,16 @@ impl TieredCache {
         self.hot.contains(key)
     }
 
+    /// Evict `key` from the hot tier only (lower tiers keep their
+    /// copies). The upgrade-reload path of the runtime precision
+    /// controller (DESIGN.md §14) uses this to drop a resident that was
+    /// installed from a downgraded stream before re-streaming it at full
+    /// precision; returns whether an entry was actually dropped so the
+    /// caller can release its memory accounting.
+    pub fn remove_hot(&mut self, key: ExpertKey) -> bool {
+        self.hot.remove(key)
+    }
+
     pub fn hot_len(&self) -> usize {
         self.hot.len()
     }

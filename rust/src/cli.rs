@@ -6,7 +6,10 @@ use anyhow::{ensure, Context, Result};
 use odmoe::cache::{CacheConfig, TierPolicy};
 use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
-use odmoe::coordinator::{BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine};
+use odmoe::coordinator::{
+    BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine, PrecisionController,
+    PrecisionPolicy,
+};
 use odmoe::fleet::{planner, FleetSpec, PlanChoice, PlanGrid, PlanMeasurement};
 use odmoe::metrics::memory as memaudit;
 use odmoe::model::{Precision, WeightStore};
@@ -16,10 +19,11 @@ use odmoe::predictor::{
 use odmoe::serve::{
     attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
     config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
-    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates, parse_scale_sessions,
-    rate_sweep, run_streamed, scale_json, scale_sweep, scale_workload, sweep_json, write_bench,
-    ArrivalModel, AttribPoint, BatchEngineService, BatchPoint, CachePoint, FailoverPoint,
-    Histogram, OverlapPoint, Scheduler, SchedulerConfig, ServeReport, ServiceModel,
+    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_fleet_grid, parse_policy_grid,
+    parse_rates, parse_scale_sessions, precision_json, precision_sweep, rate_sweep, run_streamed,
+    scale_json, scale_sweep, scale_workload, sweep_json, write_bench, ArrivalModel, AttribPoint,
+    BatchEngineService, BatchPoint, CachePoint, FailoverPoint, Histogram, OverlapPoint,
+    PrecisionCell, PrecisionMeasurement, Scheduler, SchedulerConfig, ServeReport, ServiceModel,
     SessionOutcome, SyntheticService, WorkloadSpec, SCALE_SAMPLE_CAP,
 };
 use odmoe::telemetry::{self, Phase, Registry};
@@ -52,10 +56,11 @@ fn parse_cache_flags(a: &Args) -> Result<CacheConfig> {
 /// scheduler's replica count for a plan): the one place the two flags
 /// are interpreted, shared by `serve` and `decode` so a chosen plan runs
 /// identically through either. A plan supplies the fleet and transfer
-/// precision unconditionally, but its chunks/depth/replicas are
-/// *defaults*: an explicitly passed `--chunks`/`--prefetch-depth`/
-/// `--replicas` wins, so overriding one knob of a plan does not silently
-/// discard the flag. Returns a banner describing what was applied.
+/// precision unconditionally, but its chunks/depth/replicas/runtime
+/// precision policy are *defaults*: an explicitly passed `--chunks`/
+/// `--prefetch-depth`/`--replicas`/`--precision-policy` wins, so
+/// overriding one knob of a plan does not silently discard the flag.
+/// Returns a banner describing what was applied.
 fn apply_fleet_flags(
     a: &Args,
     cfg: &mut OdMoeConfig,
@@ -83,14 +88,22 @@ fn apply_fleet_flags(
             if a.get("cache-hot").is_none() {
                 cfg.cache.hot = choice.cache_hot;
             }
+            if a.get("precision-policy").is_none() {
+                cfg.precision_policy = choice.policy;
+            }
             cfg.n_workers = choice.fleet.n_nodes();
             let cache_note = if choice.cache_hot > 0 {
                 format!(" | hot cache {}", choice.cache_hot)
             } else {
                 String::new()
             };
+            let policy_note = if choice.policy == PrecisionPolicy::Static {
+                String::new()
+            } else {
+                format!(" | runtime {}", choice.policy.label())
+            };
             let banner = format!(
-                "plan: fleet {} | {} transfers | chunks {} | depth {}{cache_note} | {} replica(s) | claimed p99 tpot {:.1} ms",
+                "plan: fleet {} | {} transfers{policy_note} | chunks {} | depth {}{cache_note} | {} replica(s) | claimed p99 tpot {:.1} ms",
                 choice.fleet.label(),
                 choice.precision.label(),
                 choice.chunks,
@@ -176,6 +189,15 @@ fn validate_failures(specs: &[FailureSpec], n_workers: usize) -> Result<()> {
 /// engine, bit-identical tokens AND timings); `--cache-sweep` decodes
 /// one session at every `--cache-grid` GPU-hot budget and writes the
 /// deterministic `BENCH_cache.json`.
+///
+/// Runtime mixed precision (DESIGN.md §14): `--precision-policy
+/// static|slack|slack-importance` selects per-load transfer precision
+/// from deadline slack and routing importance (`static` = the seed
+/// engine, bit-identical tokens AND timings); `--precision-skip` lets a
+/// hopeless deadline honestly skip the least-important expert;
+/// `--precision-sweep` decodes every `--precision-grid` policy x
+/// `--precision-fleets` fleet x `--rates` rate and writes the
+/// deterministic `BENCH_precision.json` speed-vs-quality frontier.
 pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     let (mut spec, mut sched, rate) = config_from_args(a, rt.cfg.vocab_size as u32)?;
     let threads = a.usize_or("threads", 1)?;
@@ -197,6 +219,8 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         chunks: a.usize_or("chunks", 1)?,
         prefetch_depth: a.usize_or("prefetch-depth", 0)?,
         cache: parse_cache_flags(a)?,
+        precision_policy: PrecisionPolicy::parse(a.get_or("precision-policy", "static"))?,
+        precision_skip: a.has("precision-skip"),
         ..OdMoeConfig::default()
     };
     anyhow::ensure!(cfg.chunks >= 1, "--chunks must be >= 1");
@@ -322,6 +346,83 @@ pub fn serve(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
                 out_tokens,
                 fc_ms_per_token,
             ),
+        )?;
+        println!("\nwrote {}", path.display());
+        return Ok(());
+    }
+
+    // `--precision-sweep` (DESIGN.md §14): decode every (fleet x rate x
+    // policy) cell's workload on a fresh engine — the whole request set
+    // as one co-scheduled batch — and report the speed-vs-quality
+    // frontier of runtime mixed-precision expert loading: ms/token,
+    // per-tier load counts, skip/upgrade counts, accrued quality debt,
+    // and fidelity against the single-node full-precision reference on a
+    // fixed corpus. The `static` cell of each (fleet, rate) is the seed
+    // engine itself (no controller is built), so every speedup is read
+    // against the bit-identical baseline; `tokens_match_static` makes
+    // token drift (possible only via honest `--precision-skip` skips)
+    // explicit in `BENCH_precision.json`.
+    if a.has("precision-sweep") {
+        let policies =
+            parse_policy_grid(a.get_or("precision-grid", "static,slack,slack-importance"))?;
+        let fleets = parse_fleet_grid(a.get_or("precision-fleets", "uniform|jetson:4,nano:2"))?;
+        let rates = parse_rates(a.get_or("rates", "2"))?;
+        let out_tokens = a.usize_or("out-tokens", 8)?;
+        let skip = a.has("precision-skip");
+        // One fixed corpus + single-node reference for every cell, so
+        // fidelity deltas are attributable to the policy alone.
+        let corpus = Corpus::generate(seed ^ 11, 2, 16, rt.cfg.vocab_size as u32);
+        let reference = fidelity::reference(rt, &ws, &corpus, out_tokens)?;
+        let cells = precision_sweep(&fleets, &policies, &rates, |fleet, policy, rate| {
+            let mut c = cfg.clone();
+            c.precision_policy = policy;
+            c.precision_skip = skip;
+            if fleet == "uniform" {
+                c.fleet = None;
+            } else {
+                let f = FleetSpec::parse(fleet)?;
+                c.n_workers = f.n_nodes();
+                c.fleet = Some(f);
+            }
+            let mut e = OdMoeEngine::new(rt, ws.clone(), c)?;
+            let reqs = spec.with_rate(rate).generate(seed);
+            let batch: Vec<(&[u32], usize)> =
+                reqs.iter().map(|r| (r.prompt.as_slice(), r.out_tokens)).collect();
+            let res = e.run_batch(&batch)?;
+            let reg = e.registry();
+            // The static engine builds no controller and ticks no tier
+            // counters; its loads all stream at the deployed precision
+            // (tier 0) by construction.
+            let loads = if policy == PrecisionPolicy::Static {
+                [res.expert_loads, 0, 0]
+            } else {
+                [
+                    reg.counter("engine.loads_fp16"),
+                    reg.counter("engine.loads_int8"),
+                    reg.counter("engine.loads_nf4"),
+                ]
+            };
+            let skipped_experts = reg.counter("engine.skipped_experts");
+            let upgrade_reloads = reg.counter("engine.upgrade_reloads");
+            let quality_debt_frac = reg.gauge("engine.quality_debt_frac").unwrap_or(0.0);
+            let fid = fidelity::evaluate(&mut e, &reference, &corpus, out_tokens)?;
+            Ok(PrecisionMeasurement {
+                decode_ms: res.decode_span_ms,
+                decode_tokens: res.decode_tokens,
+                loads,
+                skipped_experts,
+                upgrade_reloads,
+                quality_debt_frac,
+                token_match_rate: fid.token_match_rate(),
+                mean_kl: fid.mean_kl(),
+                tokens: res.sessions.first().map(|s| s.tokens.clone()).unwrap_or_default(),
+            })
+        })?;
+        print_precision(&cells);
+        let path = std::path::Path::new("BENCH_precision.json");
+        write_bench(
+            path,
+            &precision_json(&cells, seed, &fleets, &policies, &rates, out_tokens),
         )?;
         println!("\nwrote {}", path.display());
         return Ok(());
@@ -560,6 +661,30 @@ fn print_cache(points: &[CachePoint]) {
             format!("{:.2}", p.loads_per_token),
             format!("{:.1}", p.stall_ms),
             if p.tokens_match_baseline { "identical".into() } else { "DIVERGED".to_string() },
+        ]);
+    }
+    t.print();
+}
+
+fn print_precision(cells: &[PrecisionCell]) {
+    let mut t = Table::new(&[
+        "fleet", "rate", "policy", "ms/token", "vs static", "fp16/int8/nf4", "skips", "upgrades",
+        "debt", "match %", "mean KL", "tokens",
+    ]);
+    for c in cells {
+        t.row(&[
+            c.fleet.clone(),
+            format!("{:.2}", c.rate),
+            c.policy.label().to_string(),
+            format!("{:.2}", c.ms_per_token),
+            format!("{:.3}x", c.speedup_vs_static),
+            format!("{}/{}/{}", c.meas.loads[0], c.meas.loads[1], c.meas.loads[2]),
+            format!("{}", c.meas.skipped_experts),
+            format!("{}", c.meas.upgrade_reloads),
+            format!("{:.4}", c.meas.quality_debt_frac),
+            format!("{:.1}", c.meas.token_match_rate * 100.0),
+            format!("{:.4}", c.meas.mean_kl),
+            if c.tokens_match_static { "identical".into() } else { "DIVERGED".to_string() },
         ]);
     }
     t.print();
@@ -961,9 +1086,12 @@ pub fn memory(a: &Args) -> Result<()> {
 /// `od-moe plan`: the SLO-driven fleet deployment planner (DESIGN.md
 /// §10). Searches (class subset, transfer precision, chunk count,
 /// prefetch depth, replica count, GPU-hot cache budget — `--cache-grid`,
-/// default 0 only) over `--fleet`, pruning candidates whose classes miss
-/// their Eq. (1) window or memory budget (hot-cached experts count
-/// toward the floor), and scores survivors by running the real engine
+/// default 0 only — and runtime precision policy — `--policy-grid`,
+/// default static only) over `--fleet`, pruning candidates whose classes
+/// miss their Eq. (1) window (judged at best-case NF4 stream size when a
+/// non-static policy could downgrade at runtime) or memory budget
+/// (hot-cached experts count toward the floor), and scores survivors by
+/// running the real engine
 /// through the serving scheduler in virtual time on the same workload
 /// grammar as `od-moe serve`. Emits the deterministic `BENCH_plan.json`
 /// (Pareto frontier + chosen plan); `od-moe serve --plan
@@ -991,6 +1119,7 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
         depths: parse_depths(a.get_or("depth-grid", "0,1"))?,
         replicas: parse_batches(a.get_or("replica-grid", "1"))?,
         cache_budgets: parse_cache_budgets(a.get_or("cache-grid", "0"))?,
+        policies: parse_policy_grid(a.get_or("policy-grid", "static"))?,
     };
     let ws = WeightStore::generate(&rt.cfg, seed);
     let base = OdMoeConfig::default().profile;
@@ -1026,6 +1155,7 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
             // hot == 0 is exactly CacheConfig::disabled(): the cacheless
             // grid point runs the seed engine, not a zero-slot cache.
             cache: CacheConfig { hot: cand.cache_hot, ..CacheConfig::disabled() },
+            precision_policy: cand.policy,
             ..OdMoeConfig::default()
         };
         let mut engine = OdMoeEngine::new(rt, ws.clone(), cfg)?;
@@ -1076,14 +1206,15 @@ pub fn plan(rt: &Runtime, seed: u64, a: &Args) -> Result<()> {
     })?;
 
     let mut t = Table::new(&[
-        "fleet", "prec", "chunks", "depth", "hot", "repl", "ms/tok", "p99 tpot", "GB", "cost",
-        "mem", "slo", "pareto",
+        "fleet", "prec", "policy", "chunks", "depth", "hot", "repl", "ms/tok", "p99 tpot", "GB",
+        "cost", "mem", "slo", "pareto",
     ]);
     for (i, pt) in report.points.iter().enumerate() {
         let marker = if report.chosen == Some(i) { " <= CHOSEN" } else { "" };
         t.row(&[
             pt.candidate.fleet.label(),
             pt.candidate.precision.label().to_string(),
+            pt.candidate.policy.label().to_string(),
             format!("{}", pt.candidate.chunks),
             format!("{}", pt.candidate.prefetch_depth),
             format!("{}", pt.candidate.cache_hot),
@@ -1301,6 +1432,45 @@ pub fn bench(a: &Args) -> Result<()> {
             "scheduler_events_per_sec".into(),
             stats.events as f64 * 1000.0 / stats.makespan_ms,
         ));
+    }
+
+    // Precision-controller tier tallies (DESIGN.md §14): drive the pure
+    // slack/importance selector over a fixed (start offset x importance)
+    // grid per fleet class and count the transfer tier each load would
+    // take. Exact small integers from the closed-form duration model —
+    // the committed baseline pins them, and
+    // `rust/benches/baseline_mirror.py` recomputes them independently of
+    // this crate (every comparison in the grid clears its boundary by
+    // >= 0.1 ms, so the tallies are robust, not knife-edge).
+    {
+        let base = HardwareProfile::rtx3090();
+        let classes =
+            [NodeClass::rtx3090(), NodeClass::rtx3080(), NodeClass::jetson(), NodeClass::nano()];
+        for class in &classes {
+            let p = class.worker_profile(&base);
+            let ctl = PrecisionController::from_profiles(
+                &[&p],
+                base.expert_bytes,
+                4,
+                4,
+                PrecisionPolicy::SlackImportance,
+                false,
+            );
+            let win = ctl.window_ms(0);
+            let mut counts = [0u64; 3];
+            for si in 0..8 {
+                let start = win * si as f64 / 8.0;
+                for imp in [0.1, 0.3, 0.5, 0.7, 0.9] {
+                    counts[ctl.select(0, start, win, imp, 0, 0)] += 1;
+                }
+            }
+            for (tier, label) in ["fp16", "int8", "nf4"].iter().enumerate() {
+                virt.push((
+                    format!("precision/{}/loads_{label}", class.name),
+                    counts[tier] as f64,
+                ));
+            }
+        }
     }
 
     let mut t = Table::new(&["virtual metric (gated)", "value"]);

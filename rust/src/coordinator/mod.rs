@@ -5,6 +5,7 @@
 pub mod baselines;
 pub mod batch;
 pub mod odmoe;
+pub mod precision;
 pub mod prefill;
 pub mod schedule;
 pub mod replication;
@@ -12,6 +13,7 @@ pub mod server;
 
 pub use batch::{BatchEngine, BatchRunResult};
 pub use odmoe::{FailureSpec, OdMoeConfig, OdMoeEngine, PredictorMode};
+pub use precision::{PrecisionController, PrecisionPolicy};
 pub use schedule::{GroupSchedule, SlotMap};
 // `server` is a compatibility shim; the serving layer proper lives in
 // [`crate::serve`].

@@ -44,13 +44,16 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use std::collections::BTreeMap;
+
 use super::batch::{merge_distinct, BatchEngine, BatchRunResult};
+use super::precision::{gate_weight, prefetch_importance, PrecisionController, PrecisionPolicy, TRANSFER_TIERS};
 use super::prefill::{simulate_odmoe_prefill, PrefillTiming};
 use super::schedule::{GroupSchedule, SlotMap};
 use super::{Engine, PromptResult};
 use crate::cache::{CacheConfig, ExpertKey, TierLevel, TieredCache};
 use crate::cluster::{ChunkedTransfer, Cluster, HardwareProfile, Ms};
-use crate::engine::{BatchState, ModelState, StepRecord};
+use crate::engine::{BatchState, ModelState, Route, StepRecord};
 use crate::fleet::{capability_slots, FleetSpec};
 use crate::metrics::correct_count;
 use crate::model::{Precision, WeightStore};
@@ -172,6 +175,23 @@ pub struct OdMoeConfig {
     /// and mixed-fleet paths, which `rust/tests/cache_props.rs` and the
     /// existing prop suites pin.
     pub cache: CacheConfig,
+    /// Runtime mixed-precision expert loading (DESIGN.md §14). The
+    /// default — [`PrecisionPolicy::Static`] — builds no controller at
+    /// all, so every load streams the deployed profile's fp16 train
+    /// byte-for-byte the seed way (bit-identical in tokens AND timings,
+    /// pinned by `rust/tests/precision_props.rs`). `Slack` picks the
+    /// cheapest of fp16/int8/nf4 whose remaining chunk train still lands
+    /// inside the worker's Eq. (1) window; `SlackImportance` adds the
+    /// routing-importance signal (gate weight for reactive loads, SEP
+    /// rank for prefetches): important experts refuse the NF4 tier.
+    pub precision_policy: PrecisionPolicy,
+    /// With [`PrecisionPolicy::SlackImportance`] only: allow honestly
+    /// *skipping* the weakest routed expert on a worker that provably
+    /// cannot land even the NF4 train in-window. Skips drop the expert's
+    /// contribution from the residual stream — a real token-level
+    /// fidelity cost measured by `workload::fidelity` — and are counted
+    /// in `engine.skipped_experts` plus the quality-debt gauge.
+    pub precision_skip: bool,
 }
 
 impl Default for OdMoeConfig {
@@ -187,6 +207,8 @@ impl Default for OdMoeConfig {
             profile: HardwareProfile::rtx3090(),
             fleet: None,
             cache: CacheConfig::disabled(),
+            precision_policy: PrecisionPolicy::Static,
+            precision_skip: false,
         }
     }
 }
@@ -258,6 +280,22 @@ pub struct OdMoeEngine<'rt> {
     /// decoded — the reuse-distance policy's protection set. Rebuilt per
     /// layer; always empty while the cache is disabled.
     protected: Vec<ExpertKey>,
+    /// Runtime precision controller (DESIGN.md §14); `None` under
+    /// [`PrecisionPolicy::Static`] so the load path streams straight off
+    /// `chunk_durs` byte-for-byte the seed way.
+    precision: Option<PrecisionController>,
+    /// Transfer precision of the most recent stream per `(worker, layer,
+    /// expert)` — what a hot-tier install "remembers" (upgrade-reload
+    /// checks it) and what the EC sites charge quality debt against.
+    /// Only populated while a controller is active.
+    stream_prec: BTreeMap<(usize, usize, usize), Precision>,
+    /// Accumulated honest quality cost this run: Σ gate_weight ×
+    /// rel_error over computed downgraded experts, plus the full gate
+    /// weight of every skipped expert.
+    quality_debt: f64,
+    /// Σ of all routed gate weights this run — the quality-debt
+    /// normalizer behind the `engine.quality_debt_frac` gauge.
+    route_weight: f64,
 }
 
 impl<'rt> OdMoeEngine<'rt> {
@@ -324,6 +362,17 @@ impl<'rt> OdMoeEngine<'rt> {
             .cache
             .enabled()
             .then(|| (0..cfg.n_workers).map(|_| TieredCache::new(&cfg.cache)).collect());
+        let precision = (cfg.precision_policy != PrecisionPolicy::Static).then(|| {
+            PrecisionController::new(
+                &cluster,
+                cfg.n_workers,
+                cfg.profile.expert_bytes,
+                cfg.chunks,
+                schedule.n_groups(),
+                cfg.precision_policy,
+                cfg.precision_skip,
+            )
+        });
         let mut engine = Self {
             cfg,
             cluster,
@@ -345,6 +394,10 @@ impl<'rt> OdMoeEngine<'rt> {
             token_spans: Vec::new(),
             tiers,
             protected: Vec::new(),
+            precision,
+            stream_prec: BTreeMap::new(),
+            quality_debt: 0.0,
+            route_weight: 0.0,
         };
         engine.charge_static_memory();
         Ok(engine)
@@ -572,6 +625,19 @@ impl<'rt> OdMoeEngine<'rt> {
         }
     }
 
+    /// Publish the run's honest quality-debt fraction — downgraded
+    /// residual error plus skipped gate weight, over all routed gate
+    /// weight (DESIGN.md §14). Only meaningful under a runtime precision
+    /// policy; Static publishes nothing (no controller, no new gauges).
+    fn flush_quality_gauges(&mut self) {
+        if self.precision.is_none() {
+            return;
+        }
+        let frac =
+            if self.route_weight > 0.0 { self.quality_debt / self.route_weight } else { 0.0 };
+        self.registry.gauge_set("engine.quality_debt_frac", frac);
+    }
+
     /// Book one expert load for slot `(layer, slot)` as a chunk train
     /// (`cfg.chunks` chunks; one chunk = the monolithic booking),
     /// rerouting around node deaths: a worker already dead when the load
@@ -594,6 +660,10 @@ impl<'rt> OdMoeEngine<'rt> {
     /// bytes never left the GPU); an SSD-cold hit stages over the
     /// worker's storage link first; warm hits and misses stream exactly
     /// as today.
+    /// `importance` is the expert's routing-importance signal (gate
+    /// weight for reactive loads, SEP-rank decay for prefetches) feeding
+    /// the runtime precision controller; ignored — like the controller
+    /// itself — under [`PrecisionPolicy::Static`].
     fn load_with_failover(
         &mut self,
         layer: usize,
@@ -601,6 +671,7 @@ impl<'rt> OdMoeEngine<'rt> {
         mut earliest: Ms,
         respect_residency: bool,
         expert: Option<usize>,
+        importance: f64,
     ) -> ChunkedTransfer {
         let bytes = self.cluster.profile.expert_bytes;
         let lan_lat = self.cluster.profile.lan_lat_ms;
@@ -609,6 +680,9 @@ impl<'rt> OdMoeEngine<'rt> {
         // train, so a resumed stream pays the new link's honest times
         // (identical to the dead worker's on a uniform cluster).
         let mut done_chunks = 0usize;
+        // Failover-forced downgrade floor: each mid-stream death pushes
+        // the re-booked suffix at least one tier lower (DESIGN.md §14).
+        let mut min_tier = 0usize;
         loop {
             let w = self.slots.worker_for(layer, slot);
             // The dispatch notice reaches a class-c worker its LAN
@@ -636,17 +710,46 @@ impl<'rt> OdMoeEngine<'rt> {
             let mut stream_at = start_at;
             match hit {
                 Some(Some(TierLevel::GpuHot)) => {
-                    // Hot hit: the expert never left the GPU. No link
-                    // booking, no ledger change; ready the moment the
-                    // dispatch notice lands. The single-element train
-                    // keeps `first_ready == done == notice`.
-                    self.registry.counter_add("engine.cache_hot_hits", 1);
-                    return ChunkedTransfer {
-                        worker: w,
-                        start: notice,
-                        chunk_ends: vec![notice],
-                        free_before: self.cluster.workers[w].pcie.free_at(),
+                    // Upgrade reload (DESIGN.md §14): a hot resident
+                    // installed from a downgraded stream gets re-streamed
+                    // at full precision when slack is plentiful — the
+                    // worker's class lands a whole fp16 train in-window
+                    // AND the controller would pick fp16 for this very
+                    // load. Drop the low-precision copy (releasing its
+                    // ledger bytes) and fall through to a normal stream;
+                    // the upgraded copy re-installs at compute time.
+                    let upgrade = match (self.precision.as_ref(), expert) {
+                        (Some(ctl), Some(e)) => {
+                            ctl.fp16_fits(w)
+                                && self
+                                    .stream_prec
+                                    .get(&(w, layer, e))
+                                    .is_some_and(|p| *p != Precision::Fp16)
+                                && ctl.select(w, start_at, notice + ctl.window_ms(w), importance, 0, 0)
+                                    == 0
+                        }
+                        _ => false,
                     };
+                    if !upgrade {
+                        // Hot hit: the expert never left the GPU. No link
+                        // booking, no ledger change; ready the moment the
+                        // dispatch notice lands. The single-element train
+                        // keeps `first_ready == done == notice`.
+                        self.registry.counter_add("engine.cache_hot_hits", 1);
+                        return ChunkedTransfer {
+                            worker: w,
+                            start: notice,
+                            chunk_ends: vec![notice],
+                            free_before: self.cluster.workers[w].pcie.free_at(),
+                        };
+                    }
+                    self.registry.counter_add("engine.upgrade_reloads", 1);
+                    let e = expert.expect("upgrade implies an expert key");
+                    if self.tiers.as_mut().expect("hot hit implies tiers")[w]
+                        .remove_hot((layer, e))
+                    {
+                        self.cluster.workers[w].dealloc(bytes as u64);
+                    }
                 }
                 Some(Some(TierLevel::SsdCold)) => {
                     // Cold hit: stage SSD -> DRAM on the worker's storage
@@ -675,15 +778,41 @@ impl<'rt> OdMoeEngine<'rt> {
             } else {
                 EventKind::ExpertLoad
             };
-            let durs: &[Ms] = &self.chunk_durs[w][done_chunks..];
+            // Runtime precision selection (DESIGN.md §14): the cheapest
+            // [`TRANSFER_TIERS`] tier whose remaining train still lands
+            // inside this worker's Eq. (1) window, measured from the
+            // dispatch notice. `None` (policy Static) streams the
+            // engine's static fp16 train byte-for-byte the seed way.
+            let tier = self
+                .precision
+                .as_ref()
+                .map(|ctl| ctl.select(w, stream_at, notice + ctl.window_ms(w), importance, done_chunks, min_tier));
+            if let Some(ti) = tier {
+                self.registry.counter_add(PrecisionController::tier_counter(ti), 1);
+                if let Some(e) = expert {
+                    self.stream_prec.insert((w, layer, e), TRANSFER_TIERS[ti]);
+                }
+            }
+            let durs: &[Ms] = match tier {
+                Some(ti) => {
+                    let ctl = self.precision.as_ref().expect("tier implies a controller");
+                    &ctl.durs(w, ti)[done_chunks..]
+                }
+                None => &self.chunk_durs[w][done_chunks..],
+            };
             let t = self.cluster.expert_load_chunks(w, stream_at, durs, kind);
             if let Some(at) = self.pending_worker_fail(w) {
                 if at < t.done() {
                     // The stream dies with the node: the link freezes at
                     // the failure instant; the replacement re-books the
                     // undelivered suffix of the train after the failure
-                    // notice reaches the coordinator.
+                    // notice reaches the coordinator — at least one
+                    // precision tier lower when a controller is active
+                    // (the recovery is already behind schedule).
                     done_chunks += t.delivered_by(at);
+                    if self.precision.is_some() {
+                        min_tier = (min_tier + 1).min(TRANSFER_TIERS.len() - 1);
+                    }
                     self.apply_worker_failure(w, at);
                     self.registry.counter_add("engine.failovers", 1);
                     earliest = earliest.max(at + lan_lat);
@@ -768,6 +897,7 @@ impl<'rt> OdMoeEngine<'rt> {
         embed_arrival: Ms,
         rows: usize,
         gates: &[Ms],
+        importance: f64,
     ) -> (usize, Ms) {
         let bytes = self.cluster.profile.expert_bytes as u64;
         let lan_lat = self.cluster.profile.lan_lat_ms;
@@ -785,7 +915,8 @@ impl<'rt> OdMoeEngine<'rt> {
             // here) passes through it exactly once.
             if let Some(at) = self.cluster.workers[holder].failed_at() {
                 self.registry.counter_add("engine.failovers", 1);
-                let t = self.load_with_failover(layer, slot, at + lan_lat, false, Some(expert));
+                let t =
+                    self.load_with_failover(layer, slot, at + lan_lat, false, Some(expert), importance);
                 holder = t.worker;
                 restreamed = Some(t.chunk_ends);
                 continue;
@@ -918,7 +1049,48 @@ impl<'rt> OdMoeEngine<'rt> {
         }
 
         // ---- Main model numerics (routes + token are ground truth). -----
-        let rec = self.main.decode_step(token)?;
+        // Under the SlackImportance skip rule (DESIGN.md §14) the
+        // weakest routed expert may be honestly dropped on a worker that
+        // provably cannot land even the NF4 train in-window: its
+        // contribution leaves the residual stream (a real fidelity cost
+        // `workload::fidelity` measures) and the placement below loads
+        // nothing for it. With skipping inactive this IS `decode_step` —
+        // the decider path never runs.
+        let mut skip_log: Vec<Vec<usize>> = Vec::new();
+        let rec = if self.precision.as_ref().is_some_and(|c| c.skip_active()) {
+            skip_log = vec![Vec::new(); n_layers];
+            let ctl = self.precision.as_ref().expect("skip implies a controller");
+            let slots = &self.slots;
+            let reg = &mut self.registry;
+            let debt = &mut self.quality_debt;
+            let log = &mut skip_log;
+            let mut decide = |l: usize, route: &Route| -> Option<usize> {
+                let last = route.experts.len().checked_sub(1)?;
+                if last == 0 {
+                    return None; // never drop a layer's only expert
+                }
+                let weight = route.weights[last] as f64;
+                let w = slots.worker_for(l, last);
+                if !ctl.should_skip(w, weight) {
+                    return None;
+                }
+                log[l].push(route.experts[last]);
+                reg.counter_add("engine.skipped_experts", 1);
+                *debt += weight; // the whole contribution is lost
+                Some(last)
+            };
+            self.main.decode_step_skipping(token, &mut decide)?
+        } else {
+            self.main.decode_step(token)?
+        };
+        if self.precision.is_some() {
+            self.route_weight += rec
+                .routes
+                .iter()
+                .flat_map(|r| &r.weights)
+                .map(|&w| w as f64)
+                .sum::<f64>();
+        }
 
         // ---- Virtual-time pipeline over main + workers (Fig. 2). --------
         let group_size = self.slots.group_size();
@@ -935,6 +1107,9 @@ impl<'rt> OdMoeEngine<'rt> {
             let actual = &rec.routes[l];
             let predicted = pred_routes[l].as_deref().unwrap_or(&[]);
             correct.push(correct_count(predicted, &actual.experts));
+            // Experts the skip rule dropped this layer: they are not
+            // placed, loaded, or computed (empty unless skipping fired).
+            let skipped: &[usize] = skip_log.get(l).map_or(&[], |v| v.as_slice());
 
             // Expert placement: slot j of the group takes predicted[j]
             // (or the actual expert when prediction is late/absent/wrong).
@@ -961,12 +1136,19 @@ impl<'rt> OdMoeEngine<'rt> {
             for slot in 0..group_size {
                 match predicted.get(slot).copied() {
                     Some(pe) if pred_avail[l] <= reactive_t => {
-                        let t = self.load_with_failover(l, slot, pred_avail[l], true, Some(pe));
+                        let t = self.load_with_failover(
+                            l,
+                            slot,
+                            pred_avail[l],
+                            true,
+                            Some(pe),
+                            prefetch_importance(slot),
+                        );
                         // A GPU-hot hit streamed nothing: it is neither a
                         // counted load (confirmed) nor an abortable
                         // stream (mispredicted — the expert stays hot).
                         let hot = self.hot_resident(t.worker, l, pe);
-                        if actual.experts.contains(&pe) {
+                        if actual.experts.contains(&pe) && !skipped.contains(&pe) {
                             if !hot {
                                 self.registry.counter_add("engine.expert_loads", 1);
                             }
@@ -990,9 +1172,11 @@ impl<'rt> OdMoeEngine<'rt> {
             }
             // Unconfirmed slots take the actual experts no confirmed
             // stream already covers, in route order (multiset-exact:
-            // each route entry is served exactly once).
+            // each route entry is served exactly once). Skipped experts
+            // are nobody's to serve — their slots simply idle.
             {
-                let mut remaining: Vec<usize> = actual.experts.clone();
+                let mut remaining: Vec<usize> =
+                    actual.experts.iter().copied().filter(|e| !skipped.contains(e)).collect();
                 for pe in owned.iter().flatten() {
                     if let Some(i) = remaining.iter().position(|x| x == pe) {
                         remaining.remove(i);
@@ -1011,22 +1195,29 @@ impl<'rt> OdMoeEngine<'rt> {
             for t in &aborts {
                 self.abort_predicted(t, reactive_t);
             }
-            // Phase 3 — reloads + reactive loads.
+            // Phase 3 — reloads + reactive loads. A slot left unowned by
+            // a skip idles this layer (nothing to stream or compute).
             for &(slot, residency) in &pending {
-                let e = owned[slot].expect("every slot owns an expert");
-                let t = self.load_with_failover(l, slot, reactive_t, residency, Some(e));
+                let Some(e) = owned[slot] else { continue };
+                let t = self.load_with_failover(
+                    l,
+                    slot,
+                    reactive_t,
+                    residency,
+                    Some(e),
+                    gate_weight(actual, e),
+                );
                 if !self.hot_resident(t.worker, l, e) {
                     self.registry.counter_add("engine.expert_loads", 1);
                 }
                 holders[slot] = Some(t);
             }
-            let holders: Vec<ChunkedTransfer> =
-                holders.into_iter().map(|h| h.expect("every slot placed")).collect();
             // EC may begin once every expert's FIRST chunk is resident
             // (at chunk count 1, first == last — the seed's whole-expert
-            // gate); later tiles gate on their own chunks below.
+            // gate); later tiles gate on their own chunks below. Idle
+            // (skip-emptied) slots hold no transfer and gate nothing.
             let expert_ready =
-                holders.iter().fold(0.0f64, |m, t| m.max(t.first_ready()));
+                holders.iter().flatten().fold(0.0f64, |m, t| m.max(t.first_ready()));
 
             // Embedding ships to the group after M_l.
             let embed_arrival = self.cluster.lan_send(m_end, p.embed_msg_bytes, "embed");
@@ -1053,16 +1244,30 @@ impl<'rt> OdMoeEngine<'rt> {
             // uniform cluster, collapsing to the old expressions.
             let mut out_ready = ec_earliest;
             for (slot, t) in holders.iter().enumerate() {
+                let Some(t) = t else { continue }; // slot idled by a skip
+                let e = owned[slot].expect("a held slot owns an expert");
                 let (holder, ec_end) = self.compute_with_failover(
                     l,
                     slot,
-                    owned[slot].expect("every slot owns an expert"),
+                    e,
                     t.worker,
                     ec_earliest,
                     embed_arrival,
                     1,
                     &t.chunk_ends,
+                    gate_weight(actual, e),
                 );
+                // Quality debt of the stream actually computed: charged
+                // here — not at load issue — so aborted mispredicted
+                // streams never pollute the fidelity account.
+                if self.precision.is_some() {
+                    let prec = self
+                        .stream_prec
+                        .get(&(holder, l, e))
+                        .copied()
+                        .unwrap_or(Precision::Fp16);
+                    self.quality_debt += gate_weight(actual, e) * prec.rel_error();
+                }
                 out_ready = out_ready.max(ec_end + self.cluster.lan_extra(holder));
             }
 
@@ -1102,6 +1307,15 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         } else {
             name
         };
+        let name = match self.cfg.precision_policy {
+            PrecisionPolicy::Static => name,
+            // The skip tag only when the rule can actually fire (it
+            // requires the importance signal, i.e. SlackImportance).
+            PrecisionPolicy::SlackImportance if self.cfg.precision_skip => {
+                format!("{name}+prec[slack-importance+skip]")
+            }
+            policy => format!("{name}+prec[{}]", policy.label()),
+        };
         match &self.cfg.fleet {
             Some(f) => format!("{name}@{}", f.label()),
             None => name,
@@ -1128,6 +1342,9 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
             }
         }
         self.protected.clear();
+        self.stream_prec.clear();
+        self.quality_debt = 0.0;
+        self.route_weight = 0.0;
         for w in &mut self.workers {
             w.ec_ends.clear();
         }
@@ -1182,6 +1399,7 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         }
         res.decode_ms = self.now - decode_start;
         res.stall_ms = stall;
+        self.flush_quality_gauges();
         Ok(res)
     }
 }
@@ -1209,6 +1427,11 @@ impl<'rt> OdMoeEngine<'rt> {
         let shadow_alive = self.cfg.predictor != PredictorMode::Sep || !self.shadow_dead_by(t0);
 
         // ---- Numerics: shadow + main model for every active session. ----
+        // The skip rule acts per session, exactly as in sequential
+        // decode (lockstep: see `decode_iteration`); `skips[k][l]` lists
+        // the experts session k's layer-l residual stream dropped.
+        let skip_on = self.precision.as_ref().is_some_and(|c| c.skip_active());
+        let mut skips: Vec<Vec<Vec<usize>>> = Vec::with_capacity(b);
         let mut recs: Vec<StepRecord> = Vec::with_capacity(b);
         let mut align_bytes = 0.0;
         for &s in active {
@@ -1219,9 +1442,45 @@ impl<'rt> OdMoeEngine<'rt> {
                 sep.begin_token(&self.main, token)?;
                 align_bytes += sep.alignment_bytes(&p);
             }
-            let rec = self.main.decode_step(token);
+            let rec = if skip_on {
+                let ctl = self.precision.as_ref().expect("skip implies a controller");
+                let slots = &self.slots;
+                let reg = &mut self.registry;
+                let debt = &mut self.quality_debt;
+                let mut log = vec![Vec::new(); n_layers];
+                let rec = {
+                    let mut decide = |l: usize, route: &Route| -> Option<usize> {
+                        let last = route.experts.len().checked_sub(1)?;
+                        if last == 0 {
+                            return None; // never drop a layer's only expert
+                        }
+                        let weight = route.weights[last] as f64;
+                        let w = slots.worker_for(l, last);
+                        if !ctl.should_skip(w, weight) {
+                            return None;
+                        }
+                        log[l].push(route.experts[last]);
+                        reg.counter_add("engine.skipped_experts", 1);
+                        *debt += weight; // the whole contribution is lost
+                        Some(last)
+                    };
+                    self.main.decode_step_skipping(token, &mut decide)
+                };
+                skips.push(log);
+                rec
+            } else {
+                self.main.decode_step(token)
+            };
             batch.deactivate(s, &mut self.main);
             let rec = rec?;
+            if self.precision.is_some() {
+                self.route_weight += rec
+                    .routes
+                    .iter()
+                    .flat_map(|r| &r.weights)
+                    .map(|&w| w as f64)
+                    .sum::<f64>();
+            }
             batch.record_token(s, rec.token_out);
             recs.push(rec);
         }
@@ -1310,7 +1569,37 @@ impl<'rt> OdMoeEngine<'rt> {
 
             // Route merge: distinct experts across the batch, with how
             // many sessions route to each (their batch-FFN row count).
-            let actual_set = merge_distinct(recs.iter().map(|r| r.routes[l].experts.as_slice()));
+            // Skipped experts leave each session's effective route first
+            // (an expert skipped by every routing session is loaded for
+            // none); structurally the seed merge while skipping is off.
+            let actual_set = if skip_on {
+                let effective: Vec<Vec<usize>> = recs
+                    .iter()
+                    .enumerate()
+                    .map(|(k, r)| {
+                        r.routes[l]
+                            .experts
+                            .iter()
+                            .copied()
+                            .filter(|e| !skips[k][l].contains(e))
+                            .collect()
+                    })
+                    .collect();
+                merge_distinct(effective.iter().map(|v| v.as_slice()))
+            } else {
+                merge_distinct(recs.iter().map(|r| r.routes[l].experts.as_slice()))
+            };
+            // Batched importance of an expert: the strongest gate weight
+            // any non-skipping session gives it (reactive loads); debt
+            // below instead sums weights, since every routed session's
+            // residual stream carries the downgraded contribution.
+            let max_weight = |e: usize| -> f64 {
+                recs.iter()
+                    .enumerate()
+                    .filter(|(k, _)| !skip_on || !skips[*k][l].contains(&e))
+                    .map(|(_, r)| gate_weight(&r.routes[l], e))
+                    .fold(0.0, f64::max)
+            };
             let pred_set: Vec<(usize, usize)> = if usable {
                 merge_distinct(pred.iter().filter_map(|row| row[l].as_deref()))
             } else {
@@ -1323,7 +1612,14 @@ impl<'rt> OdMoeEngine<'rt> {
             let mut pred_loaded: Vec<(usize, usize, ChunkedTransfer)> = Vec::new();
             for (i, &(pe, _)) in pred_set.iter().enumerate() {
                 let slot = i % group_size;
-                let t = self.load_with_failover(l, slot, pred_avail[l], true, Some(pe));
+                let t = self.load_with_failover(
+                    l,
+                    slot,
+                    pred_avail[l],
+                    true,
+                    Some(pe),
+                    prefetch_importance(i),
+                );
                 pred_loaded.push((pe, slot, t));
             }
 
@@ -1377,7 +1673,7 @@ impl<'rt> OdMoeEngine<'rt> {
                 // wrong) prediction the link was just cancelled, exactly
                 // like the sequential mispredict reload; without one the
                 // load also waits for the residency window.
-                let t = self.load_with_failover(l, slot, reactive_t, !usable, Some(ae));
+                let t = self.load_with_failover(l, slot, reactive_t, !usable, Some(ae), max_weight(ae));
                 if !self.hot_resident(t.worker, l, ae) {
                     self.registry.counter_add("engine.expert_loads", 1);
                 }
@@ -1424,7 +1720,28 @@ impl<'rt> OdMoeEngine<'rt> {
                     embed_arrival,
                     *cnt,
                     &t.chunk_ends,
+                    max_weight(*ae),
                 );
+                // Quality debt of the computed stream (lockstep with the
+                // sequential EC loop): every routed, non-skipping
+                // session's residual carries the downgraded output, so
+                // the charge sums their gate weights.
+                if self.precision.is_some() {
+                    let prec = self
+                        .stream_prec
+                        .get(&(holder, l, *ae))
+                        .copied()
+                        .unwrap_or(Precision::Fp16);
+                    if prec.rel_error() > 0.0 {
+                        let wsum: f64 = recs
+                            .iter()
+                            .enumerate()
+                            .filter(|(k, _)| !skip_on || !skips[*k][l].contains(ae))
+                            .map(|(_, r)| gate_weight(&r.routes[l], *ae))
+                            .sum();
+                        self.quality_debt += wsum * prec.rel_error();
+                    }
+                }
                 out_ready = out_ready.max(ec_end + self.cluster.lan_extra(holder));
             }
 
@@ -1523,6 +1840,7 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
             let lpt = expert_loads as f64 / decode_tokens as f64;
             self.registry.gauge_set("engine.loads_per_token", lpt);
         }
+        self.flush_quality_gauges();
         Ok(BatchRunResult {
             sessions: out,
             expert_loads,
@@ -1569,6 +1887,12 @@ mod tests {
         assert_eq!(cfg.prefetch_depth, 0, "default = strict single-expert residency");
         assert!(cfg.fleet.is_none(), "default = the uniform shared-profile cluster");
         assert!(!cfg.cache.enabled(), "default = cacheless (tiered cache disabled)");
+        assert_eq!(
+            cfg.precision_policy,
+            PrecisionPolicy::Static,
+            "default = static deployed-precision transfers (no runtime controller)"
+        );
+        assert!(!cfg.precision_skip, "default = no expert skipping");
     }
 
     #[test]

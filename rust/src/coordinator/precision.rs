@@ -1,0 +1,404 @@
+//! Runtime mixed-precision expert loading (DESIGN.md §14).
+//!
+//! HOBBIT (arXiv 2411.01433) observes that the expert-transfer precision
+//! does not have to be a deployment constant: at the moment a load is
+//! issued the coordinator knows how much of the Eq. (1) no-stall window
+//! is left (slack) and how much the expert matters to the token
+//! (importance — its router gate weight, or its SEP rank for a
+//! prefetch), so it can stream each expert at the cheapest precision
+//! that still lands in time. [`PrecisionController`] is that decision,
+//! precomputed per worker class; [`PrecisionPolicy`] is the engine knob
+//! that enables it.
+//!
+//! Numerics in this repo stay FP32 and in-flight precision is a
+//! bandwidth property ([`Precision::transfer_factor`]): a transfer
+//! downgrade changes ONLY virtual-time bookings, never tokens. The two
+//! honest quality costs are tracked separately — every downgraded load
+//! accrues `gate_weight × rel_error(tier)` of quality debt
+//! ([`Precision::rel_error`]), and the optional *skip* of the weakest
+//! routed expert under a hard deadline (SlimCaching's importance
+//! argument, arXiv 2507.06567) really drops the expert's contribution
+//! from the residual stream, which `workload::fidelity` then measures
+//! as token drift.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{Cluster, HardwareProfile, Ms};
+use crate::engine::Route;
+use crate::quant::Precision;
+
+/// How the engine picks each expert load's transfer precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrecisionPolicy {
+    /// The deployed profile's precision for every load — the seed
+    /// behavior, bit-identical in tokens AND timings (the engine builds
+    /// no controller at all under this policy).
+    Static,
+    /// Cheapest tier of [`TRANSFER_TIERS`] whose remaining chunk train
+    /// still lands inside the worker's Eq. (1) window.
+    Slack,
+    /// [`PrecisionPolicy::Slack`], plus the importance signal: experts
+    /// with gate weight ≥ [`IMPORTANCE_FLOOR`] refuse the NF4 tier, and
+    /// (only with the explicit skip knob) the weakest routed expert may
+    /// be dropped outright on a worker whose window is hopeless.
+    SlackImportance,
+}
+
+impl PrecisionPolicy {
+    pub const ALL: [PrecisionPolicy; 3] =
+        [PrecisionPolicy::Static, PrecisionPolicy::Slack, PrecisionPolicy::SlackImportance];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PrecisionPolicy::Static => "static",
+            PrecisionPolicy::Slack => "slack",
+            PrecisionPolicy::SlackImportance => "slack-importance",
+        }
+    }
+
+    /// Parse a `static|slack|slack-importance` CLI token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "static" => PrecisionPolicy::Static,
+            "slack" => PrecisionPolicy::Slack,
+            "slack-importance" => PrecisionPolicy::SlackImportance,
+            other => bail!("unknown precision policy {other:?} (static|slack|slack-importance)"),
+        })
+    }
+}
+
+/// Transfer tiers the runtime controller may choose from, fastest wire
+/// first in *precision* order: index 0 is the deployed full-fidelity
+/// stream (fp16's transfer factor is exactly 1.0, so tier 0's chunk
+/// train is bit-identical to the engine's static train), higher indices
+/// shrink the stream at growing [`Precision::rel_error`].
+pub const TRANSFER_TIERS: [Precision; 3] = [Precision::Fp16, Precision::Int8, Precision::Nf4];
+
+/// Gate weight at or above which `SlackImportance` refuses the NF4
+/// tier: the top expert of a top-2 softmax always clears this, so the
+/// dominant contribution never takes the worst quantization.
+pub const IMPORTANCE_FLOOR: f64 = 0.5;
+
+/// Gate weight at or below which the skip rule may drop an expert (only
+/// on hopeless workers, only with the skip knob on). Softmax weights
+/// over a top-k ≥ 2 selection give the weakest expert ≤ 0.5, so this
+/// bounds skipping to "never the dominant expert".
+pub const SKIP_MAX_WEIGHT: f64 = 0.5;
+
+/// Per-worker precomputed state behind runtime precision selection.
+///
+/// Built once per engine from each worker's *class* profile: the chunk
+/// train of one expert at every tier, the worker's Eq. (1) window, and
+/// two static verdicts — whether the full fp16 train fits the window
+/// from a standing start (`fp16_fits`, the upgrade-reload condition)
+/// and whether even the NF4 train cannot (`hopeless`, the skip
+/// condition). Selection itself is pure arithmetic over these tables,
+/// so it is deterministic and costs no allocation on the load path.
+#[derive(Debug, Clone)]
+pub struct PrecisionController {
+    policy: PrecisionPolicy,
+    skip: bool,
+    /// `durs[w][tier]` = per-chunk durations of one expert transfer on
+    /// worker `w` at [`TRANSFER_TIERS`]`[tier]`.
+    durs: Vec<[Vec<Ms>; 3]>,
+    /// Eq. (1) no-stall window of worker `w`'s class.
+    window: Vec<Ms>,
+    hopeless: Vec<bool>,
+    fp16_fits: Vec<bool>,
+}
+
+impl PrecisionController {
+    pub fn new(
+        cluster: &Cluster,
+        n_workers: usize,
+        expert_bytes: f64,
+        chunks: usize,
+        n_groups: usize,
+        policy: PrecisionPolicy,
+        skip: bool,
+    ) -> Self {
+        let profiles: Vec<&HardwareProfile> =
+            (0..n_workers).map(|w| cluster.worker_profile(w)).collect();
+        Self::from_profiles(&profiles, expert_bytes, chunks, n_groups, policy, skip)
+    }
+
+    /// Profile-level constructor (what the runtime-free `bench` section
+    /// and the unit tests drive directly).
+    pub fn from_profiles(
+        profiles: &[&HardwareProfile],
+        expert_bytes: f64,
+        chunks: usize,
+        n_groups: usize,
+        policy: PrecisionPolicy,
+        skip: bool,
+    ) -> Self {
+        let mut durs = Vec::with_capacity(profiles.len());
+        let mut window = Vec::with_capacity(profiles.len());
+        let mut hopeless = Vec::with_capacity(profiles.len());
+        let mut fp16_fits = Vec::with_capacity(profiles.len());
+        for p in profiles {
+            let tiers: [Vec<Ms>; 3] = TRANSFER_TIERS
+                .map(|t| p.chunk_durations(expert_bytes * t.transfer_factor(), chunks));
+            let win = p.t_maxload_ms(n_groups);
+            let full = |ds: &[Ms]| p.pcie_lat_ms + ds.iter().sum::<f64>();
+            hopeless.push(full(&tiers[2]) > win);
+            fp16_fits.push(full(&tiers[0]) <= win);
+            window.push(win);
+            durs.push(tiers);
+        }
+        Self { policy, skip, durs, window, hopeless, fp16_fits }
+    }
+
+    /// Pick the transfer tier (index into [`TRANSFER_TIERS`]) for a load
+    /// on worker `w` that would start streaming at `start` and must land
+    /// by `deadline`, with `done_chunks` chunks already delivered (a
+    /// failover re-books only the suffix). The estimate charges the
+    /// remaining train back to back from `start` — link queueing is
+    /// ignored, keeping selection a pure function of the schedule.
+    /// `min_tier` forces at least that much downgrade (a mid-stream
+    /// failover re-books the undelivered suffix one tier lower); it
+    /// overrides the importance floor — a forced downgrade is a deadline
+    /// recovery, not a fidelity preference.
+    pub fn select(
+        &self,
+        w: usize,
+        start: Ms,
+        deadline: Ms,
+        importance: f64,
+        done_chunks: usize,
+        min_tier: usize,
+    ) -> usize {
+        let mut idx = TRANSFER_TIERS.len() - 1; // nothing fits: cheapest wire
+        for i in 0..TRANSFER_TIERS.len() {
+            if start + self.remaining_ms(w, i, done_chunks) <= deadline {
+                idx = i;
+                break;
+            }
+        }
+        if self.policy == PrecisionPolicy::SlackImportance && importance >= IMPORTANCE_FLOOR {
+            idx = idx.min(1); // important experts refuse the NF4 tier
+        }
+        idx.max(min_tier).min(TRANSFER_TIERS.len() - 1)
+    }
+
+    /// Remaining stream time of the undelivered suffix at a tier.
+    pub fn remaining_ms(&self, w: usize, tier: usize, done_chunks: usize) -> Ms {
+        let ds = &self.durs[w][tier];
+        ds[done_chunks.min(ds.len())..].iter().sum()
+    }
+
+    /// The per-chunk train of worker `w` at a tier (same length as the
+    /// engine's static train; tier 0 is bit-identical to it).
+    pub fn durs(&self, w: usize, tier: usize) -> &[Ms] {
+        &self.durs[w][tier]
+    }
+
+    /// Worker `w`'s Eq. (1) deadline window (its class's `t_maxload`).
+    pub fn window_ms(&self, w: usize) -> Ms {
+        self.window[w]
+    }
+
+    /// Can worker `w` land a full fp16 train inside its window from a
+    /// standing start? The upgrade-reload condition: a hot-tier resident
+    /// installed from a downgraded stream is only worth re-streaming at
+    /// full precision where this holds.
+    pub fn fp16_fits(&self, w: usize) -> bool {
+        self.fp16_fits[w]
+    }
+
+    /// Worker `w` cannot land even the NF4 train in-window: the hard
+    /// deadline under which the skip rule is allowed to act.
+    pub fn hopeless(&self, w: usize) -> bool {
+        self.hopeless[w]
+    }
+
+    /// Is expert skipping in effect? Requires both the explicit knob and
+    /// the `SlackImportance` policy — under `Slack` the importance
+    /// signal (and with it the skip rule) does not exist.
+    pub fn skip_active(&self) -> bool {
+        self.skip && self.policy == PrecisionPolicy::SlackImportance
+    }
+
+    /// Skip rule: drop an expert of gate weight `weight` routed to
+    /// worker `w`? Only under an active skip knob, only on a hopeless
+    /// worker, and never the dominant expert (see [`SKIP_MAX_WEIGHT`]).
+    pub fn should_skip(&self, w: usize, weight: f64) -> bool {
+        self.skip_active() && self.hopeless[w] && weight <= SKIP_MAX_WEIGHT
+    }
+
+    /// Registry counter name for loads issued at a tier.
+    pub fn tier_counter(tier: usize) -> &'static str {
+        match TRANSFER_TIERS[tier] {
+            Precision::Fp16 => "engine.loads_fp16",
+            Precision::Int8 => "engine.loads_int8",
+            _ => "engine.loads_nf4",
+        }
+    }
+}
+
+/// Routing importance of `expert` within `route`: its softmax gate
+/// weight, 0.0 when not routed — the reactive-load importance signal.
+pub fn gate_weight(route: &Route, expert: usize) -> f64 {
+    route
+        .experts
+        .iter()
+        .position(|&e| e == expert)
+        .map_or(0.0, |i| route.weights[i] as f64)
+}
+
+/// Importance of a SEP prefetch candidate by shadow-route rank:
+/// `1/(1+rank)` — the shadow's top pick counts like a certain route,
+/// deeper speculative candidates matter geometrically less.
+pub fn prefetch_importance(rank: usize) -> f64 {
+    1.0 / (1.0 + rank as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeClass;
+
+    fn ctl_for(
+        class: NodeClass,
+        chunks: usize,
+        n_groups: usize,
+        policy: PrecisionPolicy,
+        skip: bool,
+    ) -> (PrecisionController, HardwareProfile) {
+        let base = HardwareProfile::rtx3090();
+        let p = class.worker_profile(&base);
+        let bytes = base.expert_bytes;
+        let ctl = PrecisionController::from_profiles(&[&p], bytes, chunks, n_groups, policy, skip);
+        (ctl, p)
+    }
+
+    #[test]
+    fn policy_parse_round_trips_and_lists_names_on_error() {
+        for p in PrecisionPolicy::ALL {
+            assert_eq!(PrecisionPolicy::parse(p.label()).unwrap(), p);
+        }
+        let err = PrecisionPolicy::parse("adaptive").unwrap_err().to_string();
+        for name in ["static", "slack", "slack-importance"] {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn tier_zero_train_is_bitwise_the_static_train() {
+        // fp16's transfer factor is exactly 1.0, so tier 0 reproduces
+        // the engine's precomputed chunk durations bit for bit — the
+        // structural half of the Static-pinning argument.
+        for chunks in [1usize, 4, 8] {
+            let (ctl, p) = ctl_for(NodeClass::jetson(), chunks, 3, PrecisionPolicy::Slack, false);
+            let seed = p.chunk_durations(HardwareProfile::rtx3090().expert_bytes, chunks);
+            assert_eq!(ctl.durs(0, 0), seed.as_slice());
+        }
+    }
+
+    #[test]
+    fn ample_slack_selects_fp16_and_pressure_downgrades() {
+        let (ctl, _) = ctl_for(NodeClass::jetson(), 4, 3, PrecisionPolicy::Slack, false);
+        let win = ctl.window_ms(0);
+        // Jetson misses its window at fp16 but holds it at nf4 (the
+        // pinned `jetson_needs_precision_or_chunking_to_hold_the_window`
+        // fact), so a standing start picks a downgraded tier...
+        let tight = ctl.select(0, 0.0, win, 0.1, 0, 0);
+        assert!(tight > 0, "jetson under pressure must downgrade, got tier {tight}");
+        assert!(0.0 + ctl.remaining_ms(0, tight, 0) <= win, "the chosen tier lands in time");
+        // ...while a huge deadline always affords fp16.
+        assert_eq!(ctl.select(0, 0.0, 1e9, 0.1, 0, 0), 0);
+        // More slack never lowers precision (tier index monotone).
+        let mut last = usize::MAX;
+        for deadline in [5.0, 10.0, 20.0, 40.0, 80.0, 1e9] {
+            let t = ctl.select(0, 0.0, deadline, 0.1, 0, 0);
+            assert!(t <= last, "slack {deadline}: tier went {last} -> {t}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn importance_floor_refuses_nf4_under_slack_importance_only() {
+        let (slack, _) = ctl_for(NodeClass::nano(), 1, 3, PrecisionPolicy::Slack, false);
+        let (imp, _) = ctl_for(NodeClass::nano(), 1, 3, PrecisionPolicy::SlackImportance, false);
+        // Impossible deadline: pure slack falls to nf4; an important
+        // expert under SlackImportance stops at int8.
+        assert_eq!(slack.select(0, 0.0, 1.0, 0.9, 0, 0), 2);
+        assert_eq!(imp.select(0, 0.0, 1.0, 0.9, 0, 0), 1);
+        // Unimportant experts take the full downgrade either way.
+        assert_eq!(imp.select(0, 0.0, 1.0, 0.2, 0, 0), 2);
+    }
+
+    #[test]
+    fn forced_min_tier_overrides_both_slack_and_importance() {
+        let (ctl, _) = ctl_for(NodeClass::rtx3080(), 4, 3, PrecisionPolicy::SlackImportance, false);
+        // Ample slack would pick fp16; a failover-forced floor wins.
+        assert_eq!(ctl.select(0, 0.0, 1e9, 0.9, 0, 1), 1);
+        // And the floor clamps to the last tier even past it.
+        assert_eq!(ctl.select(0, 0.0, 1e9, 0.9, 0, 7), 2);
+    }
+
+    #[test]
+    fn suffix_rebooking_at_lower_tiers_never_exceeds_monolithic_fp16() {
+        // Satellite invariant for mid-stream failover downgrades: for
+        // every class, chunk count, downgraded tier and progress point,
+        // the undelivered suffix at the lower precision re-streams in no
+        // more than one whole monolithic fp16 load — the recovery can
+        // only be cheaper than starting the original transfer over.
+        let base = HardwareProfile::rtx3090();
+        for class in [NodeClass::rtx3090(), NodeClass::rtx3080(), NodeClass::jetson(), NodeClass::nano()]
+        {
+            let p = class.worker_profile(&base);
+            let mono_fp16 = p.expert_load_ms(Precision::Fp16.transfer_factor());
+            for chunks in [1usize, 2, 4, 8] {
+                let ctl = PrecisionController::from_profiles(
+                    &[&p],
+                    base.expert_bytes,
+                    chunks,
+                    3,
+                    PrecisionPolicy::Slack,
+                    false,
+                );
+                for tier in 1..TRANSFER_TIERS.len() {
+                    for done in 0..chunks {
+                        let suffix = p.pcie_lat_ms + ctl.remaining_ms(0, tier, done);
+                        assert!(
+                            suffix <= mono_fp16,
+                            "{} c{chunks} tier{tier} done{done}: {suffix} > {mono_fp16}",
+                            class.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_rule_needs_knob_policy_hopeless_worker_and_a_weak_expert() {
+        // nano at one chunk cannot land even nf4 inside a 3-group window.
+        let (ctl, _) = ctl_for(NodeClass::nano(), 1, 3, PrecisionPolicy::SlackImportance, true);
+        assert!(ctl.hopeless(0));
+        assert!(ctl.should_skip(0, 0.3));
+        assert!(!ctl.should_skip(0, 0.7), "dominant experts are never skipped");
+        // Same class, skip knob off.
+        let (off, _) = ctl_for(NodeClass::nano(), 1, 3, PrecisionPolicy::SlackImportance, false);
+        assert!(!off.should_skip(0, 0.3));
+        // Slack policy has no importance signal, so no skip either.
+        let (slack, _) = ctl_for(NodeClass::nano(), 1, 3, PrecisionPolicy::Slack, true);
+        assert!(!slack.skip_active());
+        // A class that holds its window is never hopeless.
+        let (fast, _) = ctl_for(NodeClass::rtx3090(), 1, 3, PrecisionPolicy::SlackImportance, true);
+        assert!(!fast.hopeless(0) && fast.fp16_fits(0));
+        assert!(!fast.should_skip(0, 0.3));
+    }
+
+    #[test]
+    fn importance_signals_are_ordered_and_bounded() {
+        let route = Route { experts: vec![5, 2], weights: vec![0.7, 0.3] };
+        assert_eq!(gate_weight(&route, 5), 0.7f32 as f64);
+        assert_eq!(gate_weight(&route, 2), 0.3f32 as f64);
+        assert_eq!(gate_weight(&route, 9), 0.0);
+        assert_eq!(prefetch_importance(0), 1.0);
+        assert!(prefetch_importance(1) < prefetch_importance(0));
+        assert!(prefetch_importance(1) >= IMPORTANCE_FLOOR);
+    }
+}

@@ -79,9 +79,28 @@ impl<'rt> ModelState<'rt> {
     /// Default expert execution: run all selected experts from own weights
     /// and combine with router weights.
     pub fn run_experts(&self, layer: usize, route: &Route, h: &[f32]) -> Result<Vec<f32>> {
+        self.run_experts_except(layer, route, h, None)
+    }
+
+    /// [`Self::run_experts`] minus the route position `skip` (`None`
+    /// runs all): the skipped expert's weighted contribution is simply
+    /// omitted from the combine — an *honest* quality cost, since the
+    /// residual stream really loses that term. The route itself is
+    /// untouched; step records keep the router's full selection as
+    /// ground truth.
+    pub fn run_experts_except(
+        &self,
+        layer: usize,
+        route: &Route,
+        h: &[f32],
+        skip: Option<usize>,
+    ) -> Result<Vec<f32>> {
         let d = self.cfg().d_model;
         let mut acc = vec![0f32; d];
         for (i, &e) in route.experts.iter().enumerate() {
+            if Some(i) == skip {
+                continue;
+            }
             let y = self.rt.expert_ffn(&self.dm, layer, e, h, 1)?;
             let w = route.weights[i];
             for j in 0..d {
@@ -93,15 +112,34 @@ impl<'rt> ModelState<'rt> {
 
     /// Decode one token with the default expert execution.
     pub fn decode_step(&mut self, token: u32) -> Result<StepRecord> {
-        self.decode_inner(token, None)
+        self.decode_inner(token, None, None)
     }
 
     /// Decode one token, delegating expert execution to `exec`.
     pub fn decode_step_with(&mut self, token: u32, exec: &mut ExpertExec) -> Result<StepRecord> {
-        self.decode_inner(token, Some(exec))
+        self.decode_inner(token, Some(exec), None)
     }
 
-    fn decode_inner(&mut self, token: u32, mut exec: Option<&mut ExpertExec>) -> Result<StepRecord> {
+    /// Decode one token with the default expert execution, letting
+    /// `decide` drop at most one routed expert per layer: called with
+    /// each layer's route, it returns the route *position* to skip (or
+    /// `None` to run all). Used by the runtime precision controller's
+    /// deadline skip rule (DESIGN.md §14); a decider that always returns
+    /// `None` is bit-identical to [`Self::decode_step`].
+    pub fn decode_step_skipping(
+        &mut self,
+        token: u32,
+        decide: &mut dyn FnMut(usize, &Route) -> Option<usize>,
+    ) -> Result<StepRecord> {
+        self.decode_inner(token, None, Some(decide))
+    }
+
+    fn decode_inner(
+        &mut self,
+        token: u32,
+        mut exec: Option<&mut ExpertExec>,
+        mut skip: Option<&mut dyn FnMut(usize, &Route) -> Option<usize>>,
+    ) -> Result<StepRecord> {
         let cfg = self.cfg().clone();
         anyhow::ensure!(self.pos < cfg.max_seq_len, "KV cache full");
         let mut x = self.ws.embed(token).to_vec();
@@ -122,7 +160,10 @@ impl<'rt> ModelState<'rt> {
             };
             let contrib = match exec.as_mut() {
                 Some(f) => f(l, &route, &out.x_resid, &out.h_norm)?,
-                None => self.run_experts(l, &route, &out.h_norm)?,
+                None => {
+                    let s = skip.as_mut().and_then(|d| d(l, &route));
+                    self.run_experts_except(l, &route, &out.h_norm, s)?
+                }
             };
             x = out.x_resid;
             for j in 0..cfg.d_model {

@@ -20,12 +20,14 @@ use anyhow::{ensure, Context, Result};
 
 use super::FleetSpec;
 use crate::cluster::HardwareProfile;
+use crate::coordinator::precision::PrecisionPolicy;
 use crate::quant::Precision;
 use crate::util::json::Json;
 
-/// The planner's search grid. Defaults cover the knobs the last four
-/// PRs built: precision (HOBBIT's lever), chunked streaming, speculative
-/// prefetch, and replica count.
+/// The planner's search grid. Defaults cover the knobs the last PRs
+/// built: precision (HOBBIT's lever), chunked streaming, speculative
+/// prefetch, replica count, cache budget, and the runtime precision
+/// policy (DESIGN.md §14).
 #[derive(Debug, Clone)]
 pub struct PlanGrid {
     pub precisions: Vec<Precision>,
@@ -35,6 +37,10 @@ pub struct PlanGrid {
     /// Per-worker GPU-hot tier budgets (expert slots) to consider;
     /// 0 = cacheless, the seed behavior (DESIGN.md §12).
     pub cache_budgets: Vec<usize>,
+    /// Runtime precision policies to consider (DESIGN.md §14);
+    /// [`PrecisionPolicy::Static`] = the deployed precision for every
+    /// load, the seed behavior.
+    pub policies: Vec<PrecisionPolicy>,
 }
 
 impl Default for PlanGrid {
@@ -45,6 +51,7 @@ impl Default for PlanGrid {
             depths: vec![0, 1],
             replicas: vec![1],
             cache_budgets: vec![0],
+            policies: vec![PrecisionPolicy::Static],
         }
     }
 }
@@ -62,6 +69,10 @@ impl PlanGrid {
             "replica counts must be >= 1"
         );
         ensure!(!self.cache_budgets.is_empty(), "grid needs at least one cache budget (0 = off)");
+        ensure!(
+            !self.policies.is_empty(),
+            "grid needs at least one precision policy (static = off)"
+        );
         Ok(())
     }
 }
@@ -80,6 +91,11 @@ pub struct PlanCandidate {
     pub replicas: usize,
     /// Per-worker GPU-hot cache budget in expert slots (0 = cacheless).
     pub cache_hot: usize,
+    /// Runtime per-load precision policy (DESIGN.md §14). Non-static
+    /// policies may downgrade individual transfers below the deployed
+    /// `precision` when the Eq. (1) slack is short, so their window
+    /// feasibility is judged at the best-case (NF4) stream size.
+    pub policy: PrecisionPolicy,
 }
 
 /// `base` with an in-flight transfer precision applied: `expert_bytes`
@@ -107,10 +123,15 @@ impl PlanCandidate {
             self.prefetch_depth,
             self.replicas
         );
-        if self.cache_hot > 0 {
+        let base = if self.cache_hot > 0 {
             format!("{base}/h{}", self.cache_hot)
         } else {
             base
+        };
+        if self.policy == PrecisionPolicy::Static {
+            base
+        } else {
+            format!("{base}/{}", self.policy.label())
         }
     }
 
@@ -226,73 +247,93 @@ pub fn search(
                 for &prefetch_depth in &grid.depths {
                     for &replicas in &grid.replicas {
                         for &cache_hot in &grid.cache_budgets {
-                            let cand = PlanCandidate {
-                                fleet: sub.clone(),
-                                precision,
-                                chunks,
-                                prefetch_depth,
-                                replicas,
-                                cache_hot,
-                            };
-                            let scaled = cand.scaled_profile(base);
-                            // Window prefilter: every included class must
-                            // hold one slot inside its own Eq. (1) window
-                            // (the subset without an incapable class is its
-                            // own candidate, so pruning loses nothing).
-                            let window_ok = sub.entries().iter().all(|(c, _)| {
-                                c.worker_profile(&scaled).reroute_feasible(1, n_groups, chunks)
-                            });
-                            // Memory prefilter: steady residency (depth + 1
-                            // staged experts + the GPU-hot cache budget +
-                            // workspace) within each class's budget.
-                            let mem_floor_ok = sub.entries().iter().all(|(c, _)| {
-                                (prefetch_depth + 1 + cache_hot) as f64 * scaled.expert_bytes
-                                    + scaled.activation_bytes
-                                    <= c.mem_bytes
-                            });
-                            if !window_ok || !mem_floor_ok {
-                                pruned += 1;
-                                continue;
+                            for &policy in &grid.policies {
+                                let cand = PlanCandidate {
+                                    fleet: sub.clone(),
+                                    precision,
+                                    chunks,
+                                    prefetch_depth,
+                                    replicas,
+                                    cache_hot,
+                                    policy,
+                                };
+                                let scaled = cand.scaled_profile(base);
+                                // Window prefilter: every included class must
+                                // hold one slot inside its own Eq. (1) window
+                                // (the subset without an incapable class is its
+                                // own candidate, so pruning loses nothing).
+                                // A runtime policy may downgrade any transfer
+                                // down to NF4 of the deployed stream, so its
+                                // feasibility is judged at that best case —
+                                // the evaluator then measures what the policy
+                                // actually achieves.
+                                let window_profile = if policy == PrecisionPolicy::Static {
+                                    scaled.clone()
+                                } else {
+                                    precision_scaled(&scaled, Precision::Nf4)
+                                };
+                                let window_ok = sub.entries().iter().all(|(c, _)| {
+                                    c.worker_profile(&window_profile)
+                                        .reroute_feasible(1, n_groups, chunks)
+                                });
+                                // Memory prefilter: steady residency (depth + 1
+                                // staged experts + the GPU-hot cache budget +
+                                // workspace) within each class's budget. Buffers
+                                // are provisioned at the deployed precision even
+                                // under a runtime policy (downgrades shrink the
+                                // wire stream, not the resident copy).
+                                let mem_floor_ok = sub.entries().iter().all(|(c, _)| {
+                                    (prefetch_depth + 1 + cache_hot) as f64 * scaled.expert_bytes
+                                        + scaled.activation_bytes
+                                        <= c.mem_bytes
+                                });
+                                if !window_ok || !mem_floor_ok {
+                                    pruned += 1;
+                                    continue;
+                                }
+                                let meas = eval(&cand).with_context(|| {
+                                    format!("evaluating plan {}", cand.label())
+                                })?;
+                                ensure!(
+                                    meas.worker_peak_bytes.len() == sub.n_nodes(),
+                                    "{}: one worker peak per node ({} vs {})",
+                                    cand.label(),
+                                    meas.worker_peak_bytes.len(),
+                                    sub.n_nodes()
+                                );
+                                let classes = sub.node_classes();
+                                let mem_ok = classes
+                                    .iter()
+                                    .zip(&meas.worker_peak_bytes)
+                                    .all(|(c, &peak)| peak <= c.mem_bytes);
+                                let bound = crate::metrics::memory::fleet_worker_bound_bytes(
+                                    &scaled,
+                                    group_size,
+                                    max_batch,
+                                    prefetch_depth,
+                                    cache_hot,
+                                );
+                                let ledger_within_audit = meas
+                                    .worker_peak_bytes
+                                    .iter()
+                                    .all(|&peak| peak <= bound + 0.5);
+                                let total_gpu_bytes = (meas.main_peak_bytes
+                                    + meas.shadow_peak_bytes
+                                    + meas.worker_peak_bytes.iter().sum::<f64>())
+                                    * replicas as f64;
+                                let cost = sub.bill() * replicas as f64;
+                                let meets_slo = meas.tpot_p99_ms <= slo_p99_tpot_ms;
+                                points.push(PlanPoint {
+                                    candidate: cand,
+                                    meas,
+                                    total_gpu_bytes,
+                                    cost,
+                                    mem_ok,
+                                    ledger_within_audit,
+                                    meets_slo,
+                                    pareto: false,
+                                });
                             }
-                            let meas = eval(&cand)
-                                .with_context(|| format!("evaluating plan {}", cand.label()))?;
-                            ensure!(
-                                meas.worker_peak_bytes.len() == sub.n_nodes(),
-                                "{}: one worker peak per node ({} vs {})",
-                                cand.label(),
-                                meas.worker_peak_bytes.len(),
-                                sub.n_nodes()
-                            );
-                            let classes = sub.node_classes();
-                            let mem_ok = classes
-                                .iter()
-                                .zip(&meas.worker_peak_bytes)
-                                .all(|(c, &peak)| peak <= c.mem_bytes);
-                            let bound = crate::metrics::memory::fleet_worker_bound_bytes(
-                                &scaled,
-                                group_size,
-                                max_batch,
-                                prefetch_depth,
-                                cache_hot,
-                            );
-                            let ledger_within_audit =
-                                meas.worker_peak_bytes.iter().all(|&peak| peak <= bound + 0.5);
-                            let total_gpu_bytes = (meas.main_peak_bytes
-                                + meas.shadow_peak_bytes
-                                + meas.worker_peak_bytes.iter().sum::<f64>())
-                                * replicas as f64;
-                            let cost = sub.bill() * replicas as f64;
-                            let meets_slo = meas.tpot_p99_ms <= slo_p99_tpot_ms;
-                            points.push(PlanPoint {
-                                candidate: cand,
-                                meas,
-                                total_gpu_bytes,
-                                cost,
-                                mem_ok,
-                                ledger_within_audit,
-                                meets_slo,
-                                pareto: false,
-                            });
                         }
                     }
                 }
@@ -344,6 +385,7 @@ fn candidate_json(c: &PlanCandidate) -> Vec<(&'static str, Json)> {
         ("prefetch_depth", Json::Num(c.prefetch_depth as f64)),
         ("replicas", Json::Num(c.replicas as f64)),
         ("cache_hot", Json::Num(c.cache_hot as f64)),
+        ("policy", Json::Str(c.policy.label().to_string())),
     ]
 }
 
@@ -376,6 +418,10 @@ pub fn plan_json(report: &PlanReport, fleet: &FleetSpec, grid: &PlanGrid, seed: 
         (
             "cache_budgets",
             Json::Arr(grid.cache_budgets.iter().map(|&h| Json::Num(h as f64)).collect()),
+        ),
+        (
+            "policies",
+            Json::Arr(grid.policies.iter().map(|p| Json::Str(p.label().to_string())).collect()),
         ),
     ]);
     let points = Json::Arr(
@@ -436,6 +482,9 @@ pub struct PlanChoice {
     /// Per-worker GPU-hot cache budget; plan files written before the
     /// tiered cache existed read back as 0 (cacheless).
     pub cache_hot: usize,
+    /// Runtime precision policy; plan files written before the policy
+    /// dimension existed read back as [`PrecisionPolicy::Static`].
+    pub policy: PrecisionPolicy,
     /// The p99 TPOT the plan claimed when it was chosen (re-simulation
     /// should reproduce it — virtual time is deterministic).
     pub claimed_tpot_p99_ms: f64,
@@ -457,6 +506,10 @@ impl PlanChoice {
             cache_hot: match chosen.get("cache_hot") {
                 Ok(v) => v.as_usize()?,
                 Err(_) => 0, // pre-cache plan file
+            },
+            policy: match chosen.get("policy") {
+                Ok(v) => PrecisionPolicy::parse(v.as_str()?)?,
+                Err(_) => PrecisionPolicy::Static, // pre-policy plan file
             },
             claimed_tpot_p99_ms: chosen.get("tpot_p99_ms")?.as_f64()?,
         })
@@ -495,7 +548,15 @@ mod tests {
             .iter()
             .map(|(cl, _)| cl.worker_profile(&scaled).effective_load_ms(c.chunks))
             .fold(0.0f64, f64::max);
-        let ms = 40.0 + slow / n - 2.0 * c.prefetch_depth as f64;
+        // Runtime downgrades shave load time off the critical path; the
+        // importance-aware policy shaves slightly more (mirrors the real
+        // engine's direction, not its magnitude).
+        let policy_gain = match c.policy {
+            PrecisionPolicy::Static => 0.0,
+            PrecisionPolicy::Slack => 2.0,
+            PrecisionPolicy::SlackImportance => 3.0,
+        };
+        let ms = 40.0 + slow / n - 2.0 * c.prefetch_depth as f64 - policy_gain;
         let peak = (c.prefetch_depth + 1) as f64 * scaled.expert_bytes + scaled.activation_bytes;
         PlanMeasurement {
             ms_per_token: ms,
@@ -614,6 +675,7 @@ mod tests {
             depths: vec![0],
             replicas: vec![1],
             cache_budgets: vec![0],
+            policies: vec![PrecisionPolicy::Static],
         };
         let r = search(&f, &base, 2, 4, 1e6, &grid, |c| {
             let mut m = fake_eval(c, &base);
@@ -642,6 +704,7 @@ mod tests {
             depths: vec![0],
             replicas: vec![1],
             cache_budgets: vec![0, 2],
+            policies: vec![PrecisionPolicy::Static],
         };
         let r = search(&f, &base, 2, 1, 1e6, &grid, |c| Ok(fake_eval(c, &base))).unwrap();
         let labels: Vec<String> = r.points.iter().map(|p| p.candidate.label()).collect();
@@ -666,5 +729,45 @@ mod tests {
         )
         .unwrap();
         assert_eq!(PlanChoice::from_json(&legacy).unwrap().cache_hot, 0);
+    }
+
+    #[test]
+    fn precision_policy_is_a_search_dimension_with_relaxed_window() {
+        let base = HardwareProfile::rtx3090();
+        // jetson at fp16 misses its Eq. (1) window even with 4 groups,
+        // but the best-case NF4 stream fits: the static candidate is
+        // pruned while the runtime-policy candidates get measured.
+        let f = FleetSpec::uniform(NodeClass::jetson(), 4).unwrap();
+        let grid = PlanGrid {
+            precisions: vec![Precision::Fp16],
+            chunk_counts: vec![1],
+            depths: vec![0],
+            replicas: vec![1],
+            cache_budgets: vec![0],
+            policies: vec![
+                PrecisionPolicy::Static,
+                PrecisionPolicy::Slack,
+                PrecisionPolicy::SlackImportance,
+            ],
+        };
+        let r = search(&f, &base, 1, 1, 1e6, &grid, |c| Ok(fake_eval(c, &base))).unwrap();
+        assert!(r.pruned > 0, "static fp16 on jetson must be pruned");
+        assert_eq!(r.points.len(), 2, "both runtime policies survive the relaxed filter");
+        assert!(r.points.iter().all(|p| p.candidate.policy != PrecisionPolicy::Static));
+        // Labels carry the policy suffix only for non-static candidates.
+        let labels: Vec<String> = r.points.iter().map(|p| p.candidate.label()).collect();
+        assert!(labels.iter().any(|l| l.ends_with("/slack")), "{labels:?}");
+        assert!(labels.iter().any(|l| l.ends_with("/slack-importance")), "{labels:?}");
+        // The chosen plan round-trips its policy through the JSON.
+        let doc = plan_json(&r, &f, &grid, 7);
+        let choice = PlanChoice::from_json(&doc).unwrap();
+        assert_eq!(choice.policy, PrecisionPolicy::SlackImportance, "fastest fake policy wins");
+        // A pre-policy plan file (no policy key) reads back as static.
+        let legacy = Json::parse(
+            "{\"chosen\":{\"fleet\":\"rtx3080:4\",\"precision\":\"nf4\",\"chunks\":1,\
+             \"prefetch_depth\":0,\"replicas\":1,\"cache_hot\":0,\"tpot_p99_ms\":10.0}}",
+        )
+        .unwrap();
+        assert_eq!(PlanChoice::from_json(&legacy).unwrap().policy, PrecisionPolicy::Static);
     }
 }

@@ -16,8 +16,9 @@
 //! DESIGN.md §12), `BENCH_scale.json` (`serve --scale-sweep`,
 //! DESIGN.md §13), `BENCH_plan.json` (`plan`, DESIGN.md §10),
 //! `BENCH_attrib.json` (`serve --attribution`), `ATTRIB.json`
-//! (`decode --attribution`), `BENCH_perf.json` (`bench`), and
-//! `METRICS_<cmd>.jsonl` (`--metrics`, DESIGN.md §11).
+//! (`decode --attribution`), `BENCH_precision.json`
+//! (`serve --precision-sweep`, DESIGN.md §14), `BENCH_perf.json`
+//! (`bench`), and `METRICS_<cmd>.jsonl` (`--metrics`, DESIGN.md §11).
 
 use anyhow::{bail, Result};
 use odmoe::util::cli::{render_usage, Args, CommandSpec, Flag};
@@ -113,6 +114,11 @@ const SERVE_FLAGS: &[Flag] = workload_flags![+
     val("cache-policy", "P", "eviction policy lru|sieve|reuse (default lru)"),
     switch("cache-sweep", "hot-budget sweep; writes BENCH_cache.json (§12)"),
     val("cache-grid", "H1,H2,..", "budgets for --cache-sweep (default 0,1,2,4,8)"),
+    val("precision-policy", "P", "runtime load precision static|slack|slack-importance (§14)"),
+    switch("precision-skip", "let hopeless deadlines skip low-weight experts (honest drift)"),
+    switch("precision-sweep", "policy x fleet x rate frontier; writes BENCH_precision.json"),
+    val("precision-grid", "P1,P2,..", "policies for --precision-sweep (static always included)"),
+    val("precision-fleets", "F1|F2", "fleets for --precision-sweep, | separated (uniform = base)"),
     switch("scale-sweep", "session-count scaling sweep; writes BENCH_scale.json (§13)"),
     val("scale-sessions", "N1,N2,..", "sizes for --scale-sweep (default 1000,10000,100000,1000000)"),
     val("scale-round-cap", "N", "largest size the round-loop oracle also runs (default 10000)"),
@@ -168,6 +174,7 @@ const PLAN_FLAGS: &[Flag] = workload_flags![+
     val("depth-grid", "D1,D2,..", "prefetch depths to search (default 0,1)"),
     val("replica-grid", "R1,R2,..", "replica counts to search (default 1)"),
     val("cache-grid", "H1,H2,..", "GPU-hot cache budgets to search (default 0)"),
+    val("policy-grid", "P1,P2,..", "runtime precision policies to search (default static)"),
     switch("metrics", "export planner + engine metrics to METRICS_plan.jsonl"),
 ];
 

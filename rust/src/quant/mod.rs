@@ -95,6 +95,24 @@ impl Precision {
     pub fn transfer_factor(self) -> f64 {
         self.bytes_per_param(PAPER_EXPERT_ROW) / Precision::Fp16.bytes_per_param(PAPER_EXPERT_ROW)
     }
+
+    /// Modeled per-element relative reconstruction error of streaming an
+    /// expert at this precision, as a fraction of the weight scale —
+    /// the quality cost a runtime transfer downgrade accrues
+    /// (`coordinator::precision`, DESIGN.md §14). FP16 is 0.0 by
+    /// definition: `expert_bytes` is calibrated as the FP16 payload, so
+    /// fp16 *is* the deployed full-fidelity stream. The INT8/NF4 values
+    /// are round(½·quantization-step) for unit-scale weights — half the
+    /// 2/254 INT8 step and half the widest (~0.3039·absmax) NF4
+    /// inter-level gap weighted by occupancy — and preserve the measured
+    /// ordering in [`fake_quant`]'s error-bound tests: fp16 < int8 < nf4.
+    pub fn rel_error(self) -> f64 {
+        match self {
+            Precision::Fp32 | Precision::Fp16 => 0.0,
+            Precision::Int8 => 0.008,
+            Precision::Nf4 => 0.03,
+        }
+    }
 }
 
 /// Mixtral-8x7B expert weight-row width (the `w1/w3` trailing dim), the
@@ -362,6 +380,65 @@ mod tests {
             assert_eq!(Precision::parse(p.label()).unwrap(), p);
         }
         assert!(Precision::parse("fp8").is_err());
+    }
+
+    #[test]
+    fn precision_parse_error_lists_every_valid_name() {
+        let err = Precision::parse("bf16").unwrap_err().to_string();
+        for name in ["fp32", "fp16", "int8", "nf4"] {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+        assert!(err.contains("bf16"), "error must echo the rejected token: {err}");
+    }
+
+    #[test]
+    fn bytes_per_param_property_monotone_for_random_row_lens() {
+        // Property sweep: for ANY row length past the degenerate
+        // crossover (row_len > 4, where INT8's one-f32-per-row overhead
+        // exceeds the fp16 payload itself), bytes/param is strictly
+        // monotone in precision width. Row lengths are drawn from the
+        // repo's deterministic RNG, spanning 5..~8k.
+        let mut rng = crate::model::rng::Rng::new(9);
+        let mut lens: Vec<usize> = (0..50).map(|_| 5 + (rng.normal().abs() * 2000.0) as usize).collect();
+        lens.extend([5usize, 6, 64, 1024, PAPER_EXPERT_ROW, 8192]);
+        for row_len in lens {
+            let widths = [
+                Precision::Fp32.bytes_per_param(row_len),
+                Precision::Fp16.bytes_per_param(row_len),
+                Precision::Int8.bytes_per_param(row_len),
+                Precision::Nf4.bytes_per_param(row_len),
+            ];
+            for pair in widths.windows(2) {
+                assert!(pair[0] > pair[1], "row_len {row_len}: {widths:?} not monotone");
+            }
+            // INT8's per-row scale is accounted exactly, for every row_len.
+            assert_eq!(
+                Precision::Int8.bytes_per_param(row_len),
+                1.0 + 4.0 / row_len as f64,
+                "row_len {row_len}"
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_factor_fp16_is_exactly_one() {
+        // Not "close to": the Static pinning argument needs fp16's
+        // factor to be *bitwise* 1.0, so `bytes * factor == bytes` and
+        // the runtime controller's tier-0 chunk train reproduces the
+        // engine's static train exactly.
+        assert_eq!(Precision::Fp16.transfer_factor(), 1.0);
+        assert_eq!(500e6 * Precision::Fp16.transfer_factor(), 500e6);
+    }
+
+    #[test]
+    fn rel_error_is_zero_at_deployed_precision_and_ordered() {
+        assert_eq!(Precision::Fp32.rel_error(), 0.0);
+        assert_eq!(Precision::Fp16.rel_error(), 0.0);
+        assert!(Precision::Int8.rel_error() > 0.0);
+        assert!(
+            Precision::Nf4.rel_error() > Precision::Int8.rel_error(),
+            "modeled error must preserve the measured fp16 < int8 < nf4 ordering"
+        );
     }
 
     #[test]

@@ -17,6 +17,11 @@
 //!   (DESIGN.md §12), read against the cacheless (budget 0) baseline
 //!   and the fully-cached ceiling, locating the crossover between pure
 //!   OD-MoE, tiered residency, and a fully-cached deployment.
+//! * [`precision_sweep`] → `BENCH_precision.json` — ms/token *and*
+//!   fidelity per (runtime precision policy x fleet x arrival rate)
+//!   (DESIGN.md §14), read against the static-fp16 baseline cell of the
+//!   same fleet and rate — the honest speed-vs-quality frontier for
+//!   slack- and importance-aware transfer downgrades.
 //! * [`scale_sweep`] → `BENCH_scale.json` — event-core throughput
 //!   (events/sec, arena bytes as a peak-RSS proxy) at 1k..1M synthetic
 //!   closed-loop sessions, with the round loop as a comparison point at
@@ -43,6 +48,7 @@ use super::scheduler::{
 };
 use super::{Request, Slo};
 use crate::cluster::HardwareProfile;
+use crate::coordinator::PrecisionPolicy;
 use crate::runtime::PREFILL_SIZES;
 use crate::telemetry::{DecodeAttribution, Phase, NPHASES};
 use crate::util::cli::Args;
@@ -747,6 +753,179 @@ pub fn cache_json(
     ])
 }
 
+/// Parse a `--precision-grid static,slack,slack-importance` policy list.
+/// The static baseline — the cell every other policy's speedup and token
+/// stream are read against — is prepended when absent.
+pub fn parse_policy_grid(s: &str) -> Result<Vec<PrecisionPolicy>> {
+    let mut policies: Vec<PrecisionPolicy> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| PrecisionPolicy::parse(p.trim()))
+        .collect::<Result<_>>()?;
+    ensure!(!policies.is_empty(), "--precision-grid needs at least one policy");
+    if !policies.contains(&PrecisionPolicy::Static) {
+        policies.insert(0, PrecisionPolicy::Static);
+    }
+    Ok(policies)
+}
+
+/// Parse a `--precision-fleets "uniform|jetson:4,nano:2"` list —
+/// pipe-separated because fleet specs themselves contain commas. Fleet
+/// grammar is validated by the CLI when it builds each engine.
+pub fn parse_fleet_grid(s: &str) -> Result<Vec<String>> {
+    let fleets: Vec<String> =
+        s.split('|').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect();
+    ensure!(!fleets.is_empty(), "--precision-fleets needs at least one fleet");
+    Ok(fleets)
+}
+
+/// What the CLI measured for one (fleet, policy, rate) precision cell:
+/// virtual decode timing, the engine's per-tier stream tallies, and
+/// fidelity against a fixed reference decode of the same prompts
+/// (`workload::fidelity`). The closure boundary keeps the sweep
+/// engine-agnostic and unit-testable without the PJRT runtime.
+#[derive(Debug, Clone)]
+pub struct PrecisionMeasurement {
+    pub decode_ms: f64,
+    pub decode_tokens: u64,
+    /// Expert streams issued at each transfer tier, `[fp16, int8, nf4]`
+    /// order (`engine.loads_*` counters; failover suffixes included).
+    pub loads: [u64; 3],
+    pub skipped_experts: u64,
+    pub upgrade_reloads: u64,
+    /// Gate-weighted modeled quantization error per routed gate weight
+    /// (`engine.quality_debt_frac`, DESIGN.md §14).
+    pub quality_debt_frac: f64,
+    /// Fidelity vs. the reference decode on the same prompts.
+    pub token_match_rate: f64,
+    pub mean_kl: f64,
+    /// First session's token stream, for the static pinning check.
+    pub tokens: Vec<u32>,
+}
+
+/// One (fleet, policy, rate) cell of a [`precision_sweep`].
+#[derive(Debug, Clone)]
+pub struct PrecisionCell {
+    pub fleet: String,
+    pub policy: PrecisionPolicy,
+    pub rate: f64,
+    pub meas: PrecisionMeasurement,
+    pub ms_per_token: f64,
+    /// `static ms/token / this cell's ms/token` at the same fleet and
+    /// rate (1.0 for the static cell itself; > 1 when downgrades win).
+    pub speedup_vs_static: f64,
+    /// The transfer-only contract: policies that never skip an expert
+    /// change *how* bytes move, never *which* tokens decode.
+    pub tokens_match_static: bool,
+}
+
+impl PrecisionCell {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("fleet", Json::Str(self.fleet.clone())),
+            ("policy", Json::Str(self.policy.label().to_string())),
+            ("rate_per_s", num(self.rate)),
+            ("decode_ms", num(self.meas.decode_ms)),
+            ("ms_per_token", num(self.ms_per_token)),
+            ("speedup_vs_static", num(self.speedup_vs_static)),
+            ("loads_fp16", Json::Num(self.meas.loads[0] as f64)),
+            ("loads_int8", Json::Num(self.meas.loads[1] as f64)),
+            ("loads_nf4", Json::Num(self.meas.loads[2] as f64)),
+            ("skipped_experts", Json::Num(self.meas.skipped_experts as f64)),
+            ("upgrade_reloads", Json::Num(self.meas.upgrade_reloads as f64)),
+            ("quality_debt_frac", num(self.meas.quality_debt_frac)),
+            ("token_match_rate", num(self.meas.token_match_rate)),
+            ("mean_kl", num(self.meas.mean_kl)),
+            ("tokens_match_static", Json::Bool(self.tokens_match_static)),
+        ])
+    }
+}
+
+/// Run every policy at every (fleet, rate) and report speed *and*
+/// fidelity against the static baseline cell of the same fleet and rate.
+/// `run(fleet, policy, rate)` must decode the *same* workload on a fresh
+/// engine configured with that fleet and runtime policy;
+/// [`PrecisionPolicy::Static`] — which [`parse_policy_grid`] guarantees
+/// is present — is the deployed-precision seed engine, booked
+/// bit-identically (tokens *and* timings) to a build without the
+/// precision controller, and every other cell's speedup and token stream
+/// are read against it.
+pub fn precision_sweep<F>(
+    fleets: &[String],
+    policies: &[PrecisionPolicy],
+    rates: &[f64],
+    mut run: F,
+) -> Result<Vec<PrecisionCell>>
+where
+    F: FnMut(&str, PrecisionPolicy, f64) -> Result<PrecisionMeasurement>,
+{
+    ensure!(!fleets.is_empty(), "precision sweep needs at least one fleet");
+    ensure!(!rates.is_empty(), "precision sweep needs at least one rate");
+    ensure!(
+        policies.contains(&PrecisionPolicy::Static),
+        "the sweep needs the static baseline policy"
+    );
+    let mut cells = Vec::with_capacity(fleets.len() * rates.len() * policies.len());
+    for fleet in fleets {
+        for &rate in rates {
+            let base = run(fleet, PrecisionPolicy::Static, rate)?;
+            ensure!(
+                base.decode_ms.is_finite() && base.decode_tokens > 0 && base.decode_ms > 0.0,
+                "static baseline on {fleet} must produce tokens in positive time"
+            );
+            let base_mpt = base.decode_ms / base.decode_tokens as f64;
+            for &policy in policies {
+                let meas = if policy == PrecisionPolicy::Static {
+                    base.clone()
+                } else {
+                    run(fleet, policy, rate)?
+                };
+                ensure!(
+                    meas.decode_ms.is_finite() && meas.decode_tokens > 0,
+                    "non-finite decode for policy {} on {fleet}",
+                    policy.label()
+                );
+                let ms_per_token = meas.decode_ms / meas.decode_tokens as f64;
+                cells.push(PrecisionCell {
+                    fleet: fleet.clone(),
+                    policy,
+                    rate,
+                    ms_per_token,
+                    speedup_vs_static: base_mpt / ms_per_token,
+                    tokens_match_static: meas.tokens == base.tokens,
+                    meas,
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Assemble the `BENCH_precision.json` document — the speed-vs-quality
+/// frontier for runtime mixed-precision loading (DESIGN.md §14).
+pub fn precision_json(
+    cells: &[PrecisionCell],
+    seed: u64,
+    fleets: &[String],
+    policies: &[PrecisionPolicy],
+    rates: &[f64],
+    out_tokens: usize,
+) -> Json {
+    obj(vec![
+        ("bench", Json::Str("precision".to_string())),
+        ("schema", Json::Str("odmoe.precision.v1".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("fleets", Json::Arr(fleets.iter().map(|f| Json::Str(f.clone())).collect())),
+        (
+            "policies",
+            Json::Arr(policies.iter().map(|p| Json::Str(p.label().to_string())).collect()),
+        ),
+        ("rates_per_s", Json::Arr(rates.iter().map(|&r| num(r)).collect())),
+        ("out_tokens", Json::Num(out_tokens as f64)),
+        ("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect())),
+    ])
+}
+
 /// One arrival rate's aggregate critical-path attribution in an
 /// [`attribution_sweep`]: per-phase time summed over every decoded token
 /// of every session served at that rate (DESIGN.md §11).
@@ -1395,6 +1574,102 @@ mod tests {
         })
         .unwrap();
         assert!(!drift[1].tokens_match_baseline);
+    }
+
+    #[test]
+    fn parse_policy_and_fleet_grids_validate() {
+        assert_eq!(
+            parse_policy_grid("static,slack,slack-importance").unwrap(),
+            vec![
+                PrecisionPolicy::Static,
+                PrecisionPolicy::Slack,
+                PrecisionPolicy::SlackImportance
+            ]
+        );
+        // The static baseline is prepended when absent.
+        assert_eq!(
+            parse_policy_grid("slack").unwrap(),
+            vec![PrecisionPolicy::Static, PrecisionPolicy::Slack]
+        );
+        assert!(parse_policy_grid("").is_err());
+        assert!(parse_policy_grid("fp16").is_err(), "precision names are not policies");
+        assert_eq!(
+            parse_fleet_grid("uniform|jetson:4,nano:2").unwrap(),
+            vec!["uniform".to_string(), "jetson:4,nano:2".to_string()]
+        );
+        assert!(parse_fleet_grid("||").is_err());
+    }
+
+    #[test]
+    fn precision_sweep_is_deterministic_and_pins_static() {
+        // Synthetic engine: slack shaves 10% off decode, the
+        // importance-aware policy 15% plus one skipped expert (which
+        // also perturbs the token stream); fidelity degrades with the
+        // downgrade depth.
+        let fake = |policy: PrecisionPolicy, fleet: &str| {
+            let (gain, skipped, debt, tokens) = match policy {
+                PrecisionPolicy::Static => (1.0, 0, 0.0, vec![1u32, 2, 3]),
+                PrecisionPolicy::Slack => (0.9, 0, 0.004, vec![1, 2, 3]),
+                PrecisionPolicy::SlackImportance => (0.85, 2, 0.011, vec![1, 2, 4]),
+            };
+            let slow = if fleet == "uniform" { 1.0 } else { 1.5 };
+            PrecisionMeasurement {
+                decode_ms: 320.0 * gain * slow,
+                decode_tokens: 8,
+                loads: match policy {
+                    PrecisionPolicy::Static => [96, 0, 0],
+                    PrecisionPolicy::Slack => [40, 32, 24],
+                    PrecisionPolicy::SlackImportance => [30, 40, 24],
+                },
+                skipped_experts: skipped,
+                upgrade_reloads: 0,
+                quality_debt_frac: debt,
+                token_match_rate: 1.0 - debt,
+                mean_kl: debt * 0.1,
+                tokens,
+            }
+        };
+        let fleets = vec!["uniform".to_string(), "jetson:4,nano:2".to_string()];
+        let policies = parse_policy_grid("static,slack,slack-importance").unwrap();
+        let rates = [2.0];
+        let run = || {
+            let cells = precision_sweep(&fleets, &policies, &rates, |f, p, _| Ok(fake(p, f)))
+                .unwrap();
+            precision_json(&cells, 42, &fleets, &policies, &rates, 8).to_string()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same inputs must reproduce the file byte for byte");
+        assert!(a.contains("\"bench\":\"precision\""));
+        assert!(a.contains("\"policy\":\"slack-importance\""));
+        assert!(a.contains("\"loads_int8\":32"));
+
+        let cells =
+            precision_sweep(&fleets, &policies, &rates, |f, p, _| Ok(fake(p, f))).unwrap();
+        assert_eq!(cells.len(), 6, "policy x fleet x rate");
+        // The static cell is its own baseline: speedup exactly 1, tokens
+        // trivially matching.
+        let stat = &cells[0];
+        assert_eq!(stat.policy, PrecisionPolicy::Static);
+        assert_eq!(stat.speedup_vs_static, 1.0);
+        assert!(stat.tokens_match_static);
+        // Transfer-only downgrades speed decode up without token drift...
+        let slack = &cells[1];
+        assert!(slack.speedup_vs_static > 1.0);
+        assert!(slack.tokens_match_static, "transfer precision must not move tokens");
+        // ...while the skipping policy is faster still and honestly
+        // flags its token drift and quality debt.
+        let si = &cells[2];
+        assert!(si.speedup_vs_static > slack.speedup_vs_static);
+        assert!(!si.tokens_match_static);
+        assert!(si.meas.quality_debt_frac > slack.meas.quality_debt_frac);
+        // A sweep without the static pin is rejected.
+        assert!(precision_sweep(
+            &fleets,
+            &[PrecisionPolicy::Slack],
+            &rates,
+            |f, p, _| Ok(fake(p, f))
+        )
+        .is_err());
     }
 
     #[test]

@@ -33,8 +33,8 @@
 //! * [`harness`] — sweep drivers that run any [`Engine`] (OD-MoE and
 //!   every baseline) across arrival rates, batch sizes and worker-failure
 //!   counts, emitting the deterministic `BENCH_serve.json`,
-//!   `BENCH_batch.json`, `BENCH_failover.json`, `BENCH_cache.json` and
-//!   `BENCH_scale.json` artifacts; independent sweep cells fan out
+//!   `BENCH_batch.json`, `BENCH_failover.json`, `BENCH_cache.json`,
+//!   `BENCH_precision.json` and `BENCH_scale.json` artifacts; independent sweep cells fan out
 //!   across [`harness::parallel_map`] workers with index-ordered merges,
 //!   so `--threads` changes wall-clock and nothing else.
 //!
@@ -65,10 +65,11 @@ pub use events::{run_streamed, ScaleStats};
 pub use harness::{
     attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
     config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parallel_map,
-    parse_batches, parse_cache_budgets, parse_chunk_counts, parse_depths, parse_rates,
-    parse_replica_failures, parse_scale_sessions, rate_sweep, scale_json, scale_sweep,
-    scale_workload, sweep_json, write_bench, AttribPoint, BatchPoint, CachePoint, FailoverPoint,
-    OverlapPoint, ScaleCell, SCALE_SAMPLE_CAP,
+    parse_batches, parse_cache_budgets, parse_chunk_counts, parse_depths, parse_fleet_grid,
+    parse_policy_grid, parse_rates, parse_replica_failures, parse_scale_sessions, precision_json,
+    precision_sweep, rate_sweep, scale_json, scale_sweep, scale_workload, sweep_json, write_bench,
+    AttribPoint, BatchPoint, CachePoint, FailoverPoint, OverlapPoint, PrecisionCell,
+    PrecisionMeasurement, ScaleCell, SCALE_SAMPLE_CAP,
 };
 pub use metrics::{BoundedHistogram, Histogram, Percentiles, ServeReport, TenantReport};
 pub use scheduler::{

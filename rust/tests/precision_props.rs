@@ -1,0 +1,165 @@
+//! Engine-level contracts of runtime mixed-precision expert loading
+//! (DESIGN.md §14): transfer downgrades are a *virtual-time* knob — a
+//! policy that only changes transfer precision must serve a token stream
+//! bit-identical to the static seed engine on every path (uniform,
+//! heterogeneous fleet, chunked streaming, mid-stream failover) — while
+//! on a tight-window fleet the downgrades must actually fire, accrue
+//! honest quality debt, and strictly beat the static engine's decode
+//! clock. Needs the AOT artifacts (same convention as
+//! `engine_integration.rs`).
+
+use odmoe::coordinator::{
+    BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine, PrecisionPolicy,
+};
+use odmoe::fleet::FleetSpec;
+use odmoe::model::WeightStore;
+use odmoe::workload::Corpus;
+use odmoe::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn prompt(rt: &Runtime) -> Vec<u32> {
+    Corpus::generate(29, 1, 16, rt.cfg.vocab_size as u32).prompts.pop().unwrap()
+}
+
+/// All workers are embedded-class: no worker can land an fp16 train
+/// inside its Eq. (1) window, so a slack-aware controller downgrades
+/// every load — the fleet where the policy must pay for itself.
+fn tight_fleet() -> FleetSpec {
+    FleetSpec::parse("jetson:4,nano:2").unwrap()
+}
+
+fn cfg_with(policy: PrecisionPolicy, fleet: Option<FleetSpec>, chunks: usize) -> OdMoeConfig {
+    let mut cfg = OdMoeConfig {
+        precision_policy: policy,
+        chunks,
+        ..OdMoeConfig::default()
+    };
+    if let Some(f) = fleet {
+        cfg.n_workers = f.n_nodes();
+        cfg.fleet = Some(f);
+    }
+    cfg
+}
+
+/// Transfer-precision policies never touch numerics: on the uniform
+/// cluster the three policies serve bit-identical token streams (only
+/// the virtual clock may move).
+#[test]
+fn transfer_only_policies_serve_identical_tokens_uniform() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(&rt);
+    let mut reference = None;
+    for policy in PrecisionPolicy::ALL {
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), cfg_with(policy, None, 1)).unwrap();
+        let r = e.run_prompt(&p, 10, false).unwrap();
+        match &reference {
+            None => reference = Some(r.tokens),
+            Some(toks) => assert_eq!(
+                toks,
+                &r.tokens,
+                "{} drifted from the static stream",
+                policy.label()
+            ),
+        }
+    }
+}
+
+/// Same contract on the hard path: heterogeneous tight-window fleet,
+/// chunked streaming, and a mid-run worker death (the failover re-books
+/// the undelivered suffix, possibly at a downgraded tier). Tokens stay
+/// bit-identical across policies under the *same* fault plan, and the
+/// slack-aware engine never decodes slower than static.
+#[test]
+fn policies_preserve_tokens_under_chunks_and_failover() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(&rt);
+    let out = 8;
+    let mut static_res = None;
+    for policy in PrecisionPolicy::ALL {
+        let cfg = cfg_with(policy, Some(tight_fleet()), 4);
+        let mut e = OdMoeEngine::new(&rt, ws.clone(), cfg).unwrap();
+        e.inject_failure(FailureSpec::Worker { worker: 1, at_ms: 5.0 });
+        let r = e.run_batch(&[(p.as_slice(), out)]).unwrap();
+        match &static_res {
+            None => static_res = Some(r),
+            Some(base) => {
+                assert_eq!(
+                    base.sessions[0].tokens,
+                    r.sessions[0].tokens,
+                    "{} drifted under chunked failover",
+                    policy.label()
+                );
+                assert!(
+                    r.decode_span_ms <= base.decode_span_ms + 1e-6,
+                    "{} decoded slower than static: {} vs {}",
+                    policy.label(),
+                    r.decode_span_ms,
+                    base.decode_span_ms
+                );
+            }
+        }
+    }
+}
+
+/// On the tight-window fleet the controller's downgrades actually fire:
+/// zero fp16 streams (no embedded worker fits one), every load at
+/// int8/nf4, honest nonzero quality debt on the gauge — and a strictly
+/// faster decode clock than the static engine on the same session.
+#[test]
+fn tight_fleet_downgrades_fire_and_pay() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(&rt);
+    let out = 8;
+
+    let mut stat =
+        OdMoeEngine::new(&rt, ws.clone(), cfg_with(PrecisionPolicy::Static, Some(tight_fleet()), 1))
+            .unwrap();
+    let base = stat.run_batch(&[(p.as_slice(), out)]).unwrap();
+
+    let mut e = OdMoeEngine::new(
+        &rt,
+        ws.clone(),
+        cfg_with(PrecisionPolicy::SlackImportance, Some(tight_fleet()), 1),
+    )
+    .unwrap();
+    let r = e.run_batch(&[(p.as_slice(), out)]).unwrap();
+    assert_eq!(base.sessions[0].tokens, r.sessions[0].tokens, "downgrades must not drift tokens");
+
+    let reg = e.registry();
+    let fp16 = reg.counter("engine.loads_fp16");
+    let int8 = reg.counter("engine.loads_int8");
+    let nf4 = reg.counter("engine.loads_nf4");
+    assert_eq!(fp16, 0, "no embedded-class worker fits an fp16 train in-window");
+    assert!(int8 + nf4 > 0, "the tight fleet must downgrade its loads");
+    let debt = reg.gauge("engine.quality_debt_frac").expect("debt gauge published");
+    assert!(debt > 0.0, "downgraded streams must accrue quality debt, got {debt}");
+    assert!(
+        r.decode_span_ms < base.decode_span_ms,
+        "slack-importance must beat static on the tight fleet: {} vs {}",
+        r.decode_span_ms,
+        base.decode_span_ms
+    );
+}
+
+/// The static engine publishes none of the controller's telemetry — the
+/// counters exist only when a controller does, so a zero reading in the
+/// sweep is "no downgrades", never "no instrumentation".
+#[test]
+fn static_engine_publishes_no_precision_telemetry() {
+    let rt = runtime();
+    let ws = WeightStore::generate(&rt.cfg, 42);
+    let p = prompt(&rt);
+    let mut e = OdMoeEngine::new(&rt, ws, cfg_with(PrecisionPolicy::Static, None, 1)).unwrap();
+    e.run_batch(&[(p.as_slice(), 6)]).unwrap();
+    let reg = e.registry();
+    assert_eq!(reg.counter("engine.loads_fp16"), 0);
+    assert_eq!(reg.counter("engine.loads_int8"), 0);
+    assert_eq!(reg.counter("engine.loads_nf4"), 0);
+    assert!(reg.gauge("engine.quality_debt_frac").is_none(), "static publishes no debt gauge");
+}
