@@ -1,13 +1,15 @@
 #!/usr/bin/env python3
-"""Independent mirror of `od-moe bench`'s precision/* virtual metrics.
+"""Independent mirror of `od-moe bench`'s precision/* and control/*
+virtual metrics.
 
-Recomputes the `precision/<class>/loads_<tier>` tier tallies of the
+Recomputes the `precision/<class>/loads_<tier>` tier tallies and the
+`control/grid_*` / `control/episode_*` SLO-controller tallies of the
 committed baseline (rust/benches/perf_baseline.json) from the same
-closed-form duration model as `cluster::HardwareProfile` and
-`coordinator::precision::PrecisionController`, without touching the Rust
-crate. The counts are small integers and every slack comparison in the
-grid clears its boundary by >= 0.1 ms, so agreement is exact, not
-band-dependent.
+closed-form models as `cluster::HardwareProfile`,
+`coordinator::precision::PrecisionController`, and
+`control::{classify, ControlState}`, without touching the Rust crate.
+The counts are small integers and every comparison in both grids clears
+its boundary strictly, so agreement is exact, not band-dependent.
 
 Usage:
     python3 rust/benches/baseline_mirror.py          # print the JSON
@@ -15,7 +17,7 @@ Usage:
 
 `od-moe bench --write-baseline` pins whatever the crate currently
 computes; this script is the cross-check that the pinned numbers follow
-from the documented model (DESIGN.md §14).
+from the documented models (DESIGN.md §14, §15).
 """
 
 import json
@@ -95,8 +97,89 @@ def tallies():
     return out
 
 
+# control::ControlConfig as `od-moe bench` configures it (cli.rs):
+# target_p99_ttft_ms 100, replicas 1..=4, dispatch_width 4.
+CONTROL_TARGET = 100.0
+CONTROL_MIN = 1
+CONTROL_MAX = 4
+CONTROL_WIDTH = 4
+
+# The scripted 16-epoch drift episode replayed through
+# ControlState::observe (one overload ramp, then a calm tail).
+EPISODE_P99 = [
+    40.0, 90.0, 150.0, 220.0, 260.0, 240.0, 200.0, 150.0,
+    110.0, 70.0, 45.0, 40.0, 35.0, 30.0, 30.0, 30.0,
+]
+EPISODE_QUEUE = [0, 2, 6, 14, 20, 18, 12, 8, 4, 2, 1, 0, 0, 0, 0, 0]
+EPISODE_BUSY = [
+    0.3, 0.5, 0.8, 0.95, 0.97, 0.9, 0.85, 0.7,
+    0.6, 0.45, 0.3, 0.2, 0.2, 0.2, 0.2, 0.2,
+]
+
+
+def classify(p99, queue, live, busy):
+    # control::classify — strict comparisons, operands off-boundary.
+    cap = live * CONTROL_WIDTH
+    if p99 > 1.25 * CONTROL_TARGET or queue > 2 * cap:
+        return "over"
+    if p99 < 0.5 * CONTROL_TARGET and 2 * queue < cap and busy < 0.5:
+        return "calm"
+    return "hold"
+
+
+def control_tallies():
+    out = {}
+    over = calm = hold = 0
+    for ratio in [0.4, 0.8, 1.1, 1.3, 1.6, 2.2]:
+        for queue in [0, 2, 6, 12, 24]:
+            for busy in [0.2, 0.55, 0.9]:
+                kind = classify(ratio * CONTROL_TARGET, queue, 2, busy)
+                over += kind == "over"
+                calm += kind == "calm"
+                hold += kind == "hold"
+    out["control/grid_pressure"] = float(over)
+    out["control/grid_calm"] = float(calm)
+    out["control/grid_hold"] = float(hold)
+
+    # ControlState::observe over the scripted episode, Decision-level
+    # counts (an epoch under budget-exhausted pressure counts one
+    # relief even where the runtime would hold its relief scale).
+    pressure_epochs = calm_epochs = 0
+    live = 2
+    ups = downs = reliefs = tightens = 0
+    for p99, queue, busy in zip(EPISODE_P99, EPISODE_QUEUE, EPISODE_BUSY):
+        kind = classify(p99, queue, live, busy)
+        delta = 0
+        if kind == "over":
+            pressure_epochs += 1
+            calm_epochs = 0
+            if live < CONTROL_MAX:
+                delta = 1
+            else:
+                reliefs += 1
+            if pressure_epochs >= 2:
+                tightens += 1
+        elif kind == "calm":
+            calm_epochs += 1
+            pressure_epochs = 0
+            if calm_epochs >= 2 and live > CONTROL_MIN:
+                delta = -1
+                calm_epochs = 0
+        else:
+            pressure_epochs = calm_epochs = 0
+        live += delta
+        ups += delta > 0
+        downs += delta < 0
+    out["control/episode_scale_ups"] = float(ups)
+    out["control/episode_scale_downs"] = float(downs)
+    out["control/episode_reliefs"] = float(reliefs)
+    out["control/episode_tightens"] = float(tightens)
+    out["control/episode_final_live"] = float(live)
+    return out
+
+
 def main():
-    virt = tallies()
+    virt = {**tallies(), **control_tallies()}
     doc = {"schema": "odmoe.bench.v1", "virtual": virt}
     if "--check" in sys.argv:
         with open("rust/benches/perf_baseline.json", encoding="utf-8") as f:
@@ -110,7 +193,7 @@ def main():
             for k, (want, got) in sorted(bad.items()):
                 print(f"MISMATCH {k}: mirror {want} != pinned {got}")
             sys.exit(1)
-        print(f"ok: {len(virt)} precision metrics match the pinned baseline")
+        print(f"ok: {len(virt)} precision+control metrics match the pinned baseline")
         return
     print(json.dumps(doc, indent=2, sort_keys=True))
 

@@ -5,6 +5,7 @@
 use anyhow::{ensure, Context, Result};
 use odmoe::cache::{CacheConfig, TierPolicy};
 use odmoe::cluster::{Cluster, HardwareProfile, NodeClass};
+use odmoe::control::{classify, ControlConfig, ControlState, EpochObservation, Pressure};
 use odmoe::coordinator::baselines::{CpuEngine, FullyCachedEngine, OffloadConfig, OffloadEngine};
 use odmoe::coordinator::{
     BatchEngine, Engine, FailureSpec, OdMoeConfig, OdMoeEngine, PrecisionController,
@@ -17,8 +18,9 @@ use odmoe::predictor::{
     AlignPeriod, AlignmentConfig, GateLookahead, MultiLayerGate, RandomPredictor, Statistical,
 };
 use odmoe::serve::{
-    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
-    config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parse_batches,
+    attrib_json, attribution_sweep, autoscale_json, autoscale_sweep, batch_sweep, batch_sweep_json,
+    cache_json, cache_sweep, config_from_args, failover_json, failover_sweep, overlap_json,
+    overlap_sweep, parse_batches,
     parse_cache_budgets, parse_chunk_counts, parse_depths, parse_fleet_grid, parse_policy_grid,
     parse_rates, parse_scale_sessions, precision_json, precision_sweep, rate_sweep, run_streamed,
     scale_json, scale_sweep, scale_workload, sweep_json, write_bench, ArrivalModel, AttribPoint,
@@ -1322,6 +1324,65 @@ pub fn scale(seed: u64, a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `od-moe serve --autoscale-sweep`: the SLO control loop under traffic
+/// drift (DESIGN.md §15). Runtime-free — every cell drives the demand-
+/// tagged synthetic service, so the measured cost is the controller, not
+/// an engine. Each of the three drift scenarios (diurnal swing, flash
+/// crowd, rolling replica failure) is served twice on the *same* arrival
+/// stream: by the static 2-replica fleet and by the reactive controller,
+/// whose replica-ms, replication bytes, and quality debt ride next to
+/// its latency wins in `BENCH_autoscale.json`. Deterministic per
+/// `--seed`, byte for byte.
+pub fn autoscale(seed: u64, a: &Args) -> Result<()> {
+    let requests = a.usize_or("requests", 160)?;
+    let rate = a.f64_or("rate", 24.0)?;
+    println!("autoscale sweep: {requests} requests at {rate}/s base rate | seed {seed}");
+    let cells = autoscale_sweep(requests, rate, seed)?;
+    let mut t = Table::new(&[
+        "scenario", "mode", "done", "p99 ttft", "goodput", "slo", "replica-ms", "acts",
+    ]);
+    for c in &cells {
+        let acts = match &c.control {
+            Some(r) => format!(
+                "+{} -{} r{} x{}",
+                r.scale_ups, r.scale_downs, r.reliefs, r.replications
+            ),
+            None => "-".to_string(),
+        };
+        t.row(&[
+            c.scenario.clone(),
+            c.mode.to_string(),
+            format!("{}", c.report.completed),
+            format!("{:.0}", c.report.ttft.p99),
+            format!("{:.0}", c.report.goodput_tok_s),
+            format!("{:.2}", c.report.slo_attainment),
+            format!("{:.0}", c.replica_ms),
+            acts,
+        ]);
+    }
+    t.print();
+    let path = std::path::Path::new("BENCH_autoscale.json");
+    write_bench(path, &autoscale_json(&cells, requests, rate, seed))?;
+    println!("\nwrote {}", path.display());
+    if a.has("metrics") {
+        let mut reg = Registry::new();
+        for c in &cells {
+            let k = format!("autoscale.{}.{}", c.scenario, c.mode);
+            reg.gauge_set(&format!("{k}.ttft_p99_ms"), c.report.ttft.p99);
+            reg.gauge_set(&format!("{k}.slo_attainment"), c.report.slo_attainment);
+            reg.gauge_set(&format!("{k}.replica_ms"), c.replica_ms);
+            if let Some(r) = &c.control {
+                reg.counter_add(&format!("{k}.scale_ups"), r.scale_ups as u64);
+                reg.counter_add(&format!("{k}.scale_downs"), r.scale_downs as u64);
+                reg.counter_add(&format!("{k}.reliefs"), r.reliefs as u64);
+                reg.counter_add(&format!("{k}.replications"), r.replications as u64);
+            }
+        }
+        write_metrics("serve_autoscale", &reg)?;
+    }
+    Ok(())
+}
+
 /// Book a 16-layer round-robin expert stream (LAN dispatch, chunked
 /// load, pipelined FFN tiles, LAN return) on a trace-enabled cluster.
 /// Purely virtual-time and deterministic; returns the cluster (for
@@ -1473,6 +1534,90 @@ pub fn bench(a: &Args) -> Result<()> {
         }
     }
 
+    // SLO-controller decision tallies (DESIGN.md §15): `classify` over a
+    // fixed observation grid, plus a scripted 16-epoch traffic episode
+    // (ramp into overload past the 4-replica budget, then drain) replayed
+    // through `ControlState::observe`. Exact integers — every grid
+    // operand sits off its threshold boundary — pinned in the committed
+    // baseline and recomputed independently by
+    // `rust/benches/baseline_mirror.py`. Decision-level counts: an epoch
+    // under budget-exhausted pressure counts one relief even where the
+    // runtime would hold its relief scale steady.
+    let control_cfg = ControlConfig {
+        target_p99_ttft_ms: 100.0,
+        min_replicas: 1,
+        max_replicas: 4,
+        dispatch_width: 4,
+        ..ControlConfig::default()
+    };
+    let episode_p99 = [
+        40.0, 90.0, 150.0, 220.0, 260.0, 240.0, 200.0, 150.0, 110.0, 70.0, 45.0, 40.0, 35.0,
+        30.0, 30.0, 30.0,
+    ];
+    let episode_queue = [0usize, 2, 6, 14, 20, 18, 12, 8, 4, 2, 1, 0, 0, 0, 0, 0];
+    let episode_busy = [
+        0.3, 0.5, 0.8, 0.95, 0.97, 0.9, 0.85, 0.7, 0.6, 0.45, 0.3, 0.2, 0.2, 0.2, 0.2, 0.2,
+    ];
+    let replay_episode = |cfg: &ControlConfig| {
+        let mut st = ControlState::default();
+        let mut live = 2usize;
+        let (mut ups, mut downs, mut reliefs, mut tightens) = (0u64, 0u64, 0u64, 0u64);
+        for i in 0..episode_p99.len() {
+            let obs = EpochObservation {
+                p99_ttft_ms: episode_p99[i],
+                queue_depth: episode_queue[i],
+                live_replicas: live,
+                busy_frac: episode_busy[i],
+                completed: 0,
+            };
+            let d = st.observe(cfg, &obs);
+            live = (live as i64 + d.replica_delta as i64) as usize;
+            if d.replica_delta > 0 {
+                ups += 1;
+            }
+            if d.replica_delta < 0 {
+                downs += 1;
+            }
+            if d.precision_relief {
+                reliefs += 1;
+            }
+            if d.tighten_admission {
+                tightens += 1;
+            }
+        }
+        (ups, downs, reliefs, tightens, live)
+    };
+    {
+        let (mut over, mut calm, mut hold) = (0u64, 0u64, 0u64);
+        for ratio in [0.4, 0.8, 1.1, 1.3, 1.6, 2.2] {
+            for queue in [0usize, 2, 6, 12, 24] {
+                for busy in [0.2, 0.55, 0.9] {
+                    let obs = EpochObservation {
+                        p99_ttft_ms: ratio * control_cfg.target_p99_ttft_ms,
+                        queue_depth: queue,
+                        live_replicas: 2,
+                        busy_frac: busy,
+                        completed: 0,
+                    };
+                    match classify(&control_cfg, &obs) {
+                        Pressure::Over => over += 1,
+                        Pressure::Calm => calm += 1,
+                        Pressure::Neutral => hold += 1,
+                    }
+                }
+            }
+        }
+        virt.push(("control/grid_pressure".into(), over as f64));
+        virt.push(("control/grid_calm".into(), calm as f64));
+        virt.push(("control/grid_hold".into(), hold as f64));
+        let (ups, downs, reliefs, tightens, live) = replay_episode(&control_cfg);
+        virt.push(("control/episode_scale_ups".into(), ups as f64));
+        virt.push(("control/episode_scale_downs".into(), downs as f64));
+        virt.push(("control/episode_reliefs".into(), reliefs as f64));
+        virt.push(("control/episode_tightens".into(), tightens as f64));
+        virt.push(("control/episode_final_live".into(), live as f64));
+    }
+
     let mut t = Table::new(&["virtual metric (gated)", "value"]);
     for (k, v) in &virt {
         t.row(&[k.clone(), format!("{v:.4}")]);
@@ -1498,6 +1643,9 @@ pub fn bench(a: &Args) -> Result<()> {
             h.push((x >> 33) as f64);
         }
         std::hint::black_box(h.summary());
+    }));
+    wall.push(bench_util::run("control/epoch-decision/16-epoch-episode", samples, iters, || {
+        std::hint::black_box(replay_episode(&control_cfg));
     }));
     let micro_reqs = scale_workload(512, 128, seed);
     wall.push(bench_util::run("sched/event-core/512-session-run", samples, iters, || {

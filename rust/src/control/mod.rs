@@ -1,0 +1,496 @@
+//! Online SLO control loop (DESIGN.md §15): the deterministic decision
+//! engine behind `--control reactive`.
+//!
+//! The PR 5 planner picks one static deployment offline; this module is
+//! the closed loop that keeps an SLO alive when the workload drifts away
+//! from what was planned — flash crowds, diurnal swings, rolling node
+//! failures. Every `epoch_ms` of virtual time the serving event core
+//! ([`crate::serve`]) hands the controller a rolling-window observation
+//! (windowed p99 TTFT, queue depth, live replicas, busy fraction,
+//! completions) and applies whatever [`Decision`] comes back:
+//!
+//! * **scale up / down** against the fleet budget (`min_replicas` ..=
+//!   `max_replicas`),
+//! * **tighten / relax admission** (cap in-flight sessions at the
+//!   dispatch width under sustained pressure),
+//! * **precision relief** — when the fleet budget is exhausted, shrink
+//!   transfer time at a quality-debt cost (HOBBIT's runtime knob, the
+//!   PR 9 mechanism),
+//! * **popularity-driven expert replication** — fold cross-session
+//!   expert-demand counts (the batched path's load-dedup tallies,
+//!   [`crate::coordinator::replication::demand_from_routes`]) into a
+//!   greedy demand-split [`Placement`] when demand skew crosses the
+//!   threshold (SlimCaching's k-replication framing).
+//!
+//! Everything here is pure arithmetic over the observation — no clocks,
+//! no randomness — so a run with the controller on is exactly as
+//! deterministic as one without, and `od-moe bench` can tally the
+//! decision grid as pinned integers (`control/*` in
+//! `rust/benches/perf_baseline.json`, independently recomputed by
+//! `rust/benches/baseline_mirror.py`). With `--control off` (the
+//! default) the scheduler builds no controller at all — the PR 8/9
+//! structural pin: off is the absence of the mechanism, byte-identical
+//! in tokens AND timings.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::Ms;
+use crate::coordinator::replication::{place_replicated, place_single, Demand, Placement};
+
+/// Controller knobs. Defaults match the `od-moe bench` decision grid and
+/// the autoscale sweep; the CLI overrides epoch/target/budget
+/// (`--control-epoch`, `--control-target-p99`, `--control-max-replicas`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlConfig {
+    /// Virtual time between controller invocations.
+    pub epoch_ms: Ms,
+    /// The p99 TTFT the loop defends (arrival → first token).
+    pub target_p99_ttft_ms: Ms,
+    /// Fleet class budget: the replica count may move inside this band.
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Dispatch width of one replica (the scheduler's `max_batch`) —
+    /// sizes the queue watermarks and the tightened admission cap.
+    pub dispatch_width: usize,
+    /// Rolling TTFT window the p99 is read from.
+    pub window: usize,
+    /// Virtual-time factor a precision-relief epoch applies to measured
+    /// service (transfer downgrades shrink the expert-load share of
+    /// service time; < 1.0). Quality debt is charged per token served
+    /// under relief — the PR 9 honesty convention.
+    pub relief_scale: f64,
+    /// Expert demand skew (max/mean of per-expert counts) above which
+    /// replication triggers.
+    pub imbalance_threshold: f64,
+    /// Worker group the replication placement spreads experts over.
+    pub group_workers: usize,
+    /// Memory bound of the greedy demand-split placement.
+    pub max_replicas_per_expert: usize,
+    /// Bytes one additional expert replica costs (reported, never
+    /// hidden: `replication_bytes` in the autoscale artifact).
+    pub expert_bytes: u64,
+    /// Share of service time that is expert-load bound — what
+    /// replication can actually speed up (the rest is compute/LAN).
+    pub expert_load_share: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        Self {
+            epoch_ms: 200.0,
+            target_p99_ttft_ms: 300.0,
+            min_replicas: 1,
+            max_replicas: 8,
+            dispatch_width: 4,
+            window: 256,
+            relief_scale: 0.85,
+            imbalance_threshold: 1.5,
+            group_workers: 4,
+            max_replicas_per_expert: 2,
+            expert_bytes: 500_000_000,
+            expert_load_share: 0.5,
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Parse the `--control` mode: `off` (no controller at all — the
+    /// structural pin) or `reactive` (defaults, tuned by the other
+    /// flags).
+    pub fn parse(mode: &str) -> Result<Option<Self>> {
+        match mode {
+            "off" => Ok(None),
+            "reactive" => Ok(Some(Self::default())),
+            other => bail!("unknown control mode {other:?} (off|reactive)"),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.epoch_ms.is_finite() && self.epoch_ms > 0.0, "control epoch must be > 0 ms");
+        ensure!(
+            self.target_p99_ttft_ms.is_finite() && self.target_p99_ttft_ms > 0.0,
+            "control target p99 must be > 0 ms"
+        );
+        ensure!(self.min_replicas >= 1, "need at least one replica");
+        ensure!(
+            self.max_replicas >= self.min_replicas,
+            "replica budget {}..{} is empty",
+            self.min_replicas,
+            self.max_replicas
+        );
+        ensure!(self.dispatch_width >= 1, "need a positive dispatch width");
+        ensure!(self.window >= 1, "need a positive window");
+        ensure!(
+            self.relief_scale > 0.0 && self.relief_scale <= 1.0,
+            "relief scale must be in (0, 1]"
+        );
+        ensure!(self.imbalance_threshold >= 1.0, "imbalance threshold must be >= 1.0");
+        ensure!(self.group_workers >= 1, "need at least one group worker");
+        ensure!(self.max_replicas_per_expert >= 1, "need a positive replica bound");
+        ensure!(
+            self.expert_load_share >= 0.0 && self.expert_load_share <= 1.0,
+            "expert-load share must be in [0, 1]"
+        );
+        Ok(())
+    }
+}
+
+/// What the event core observed over the epoch that just ended.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochObservation {
+    /// Windowed p99 of arrival → first-token latency (0 while the
+    /// window is empty — treated as "no evidence", never as pressure).
+    pub p99_ttft_ms: Ms,
+    /// Waiting + admitted-but-not-running sessions at the epoch instant.
+    pub queue_depth: usize,
+    /// Replicas that are alive and accepting work.
+    pub live_replicas: usize,
+    /// Fraction of live replicas mid-batch at the epoch instant.
+    pub busy_frac: f64,
+    /// Sessions completed during the epoch.
+    pub completed: u64,
+}
+
+/// One epoch's actuation, applied by the event core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Decision {
+    /// +1 = add a replica, -1 = retire one, 0 = hold. Already clamped
+    /// to the fleet budget.
+    pub replica_delta: i32,
+    /// Cap in-flight sessions at `live * dispatch_width` this epoch.
+    pub tighten_admission: bool,
+    /// Drop the cap (and any active relief) — the system is calm.
+    pub relax: bool,
+    /// Serve under the downgraded-transfer time scale this epoch
+    /// (only decided when the replica budget is exhausted).
+    pub precision_relief: bool,
+}
+
+impl Decision {
+    /// Primary label for timelines and tables.
+    pub fn label(&self) -> &'static str {
+        if self.replica_delta > 0 {
+            "scale-up"
+        } else if self.replica_delta < 0 {
+            "scale-down"
+        } else if self.precision_relief {
+            "relief"
+        } else if self.relax {
+            "relax"
+        } else {
+            "hold"
+        }
+    }
+}
+
+/// Hysteresis state between epochs. Scale-down and admission-tightening
+/// both require *consecutive* evidence (two calm / two pressured epochs)
+/// so one noisy window cannot flap the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ControlState {
+    pub pressure_epochs: u32,
+    pub calm_epochs: u32,
+}
+
+/// Classification of one observation — the stateless core of
+/// [`ControlState::observe`], tallied by `od-moe bench` as the
+/// `control/grid_*` pinned integers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pressure {
+    /// SLO in danger: windowed p99 beyond 1.25× target, or the queue
+    /// beyond twice what the fleet can dispatch.
+    Over,
+    /// Comfortably idle: p99 under half target, queue under half a
+    /// dispatch round, most replicas idle.
+    Calm,
+    /// Neither — hold everything.
+    Neutral,
+}
+
+/// Stateless classify: the thresholds, in one place. All comparisons
+/// are strict and the bench grid keeps every operand off its boundary,
+/// so the pinned tallies are exact integers, not band-dependent.
+pub fn classify(cfg: &ControlConfig, obs: &EpochObservation) -> Pressure {
+    let cap = obs.live_replicas * cfg.dispatch_width;
+    let over = obs.p99_ttft_ms > 1.25 * cfg.target_p99_ttft_ms || obs.queue_depth > 2 * cap;
+    if over {
+        return Pressure::Over;
+    }
+    let calm = obs.p99_ttft_ms < 0.5 * cfg.target_p99_ttft_ms
+        && 2 * obs.queue_depth < cap
+        && obs.busy_frac < 0.5;
+    if calm {
+        Pressure::Calm
+    } else {
+        Pressure::Neutral
+    }
+}
+
+impl ControlState {
+    /// One epoch step: classify the observation, update the hysteresis
+    /// counters, and emit the actuation. Pure in (self, cfg, obs) —
+    /// `od-moe bench` replays a scripted episode through this exact
+    /// function and pins the resulting action counts.
+    pub fn observe(&mut self, cfg: &ControlConfig, obs: &EpochObservation) -> Decision {
+        let mut d = Decision::default();
+        match classify(cfg, obs) {
+            Pressure::Over => {
+                self.pressure_epochs += 1;
+                self.calm_epochs = 0;
+                if obs.live_replicas < cfg.max_replicas {
+                    d.replica_delta = 1;
+                } else {
+                    // Budget exhausted: trade quality for time instead.
+                    d.precision_relief = true;
+                }
+                if self.pressure_epochs >= 2 {
+                    d.tighten_admission = true;
+                }
+            }
+            Pressure::Calm => {
+                self.calm_epochs += 1;
+                self.pressure_epochs = 0;
+                d.relax = true;
+                if self.calm_epochs >= 2 && obs.live_replicas > cfg.min_replicas {
+                    d.replica_delta = -1;
+                    self.calm_epochs = 0;
+                }
+            }
+            Pressure::Neutral => {
+                self.pressure_epochs = 0;
+                self.calm_epochs = 0;
+            }
+        }
+        d
+    }
+}
+
+/// Replication verdict for one epoch's accumulated demand.
+#[derive(Debug, Clone)]
+pub struct ReplicationPlan {
+    pub placement: Placement,
+    /// Single-placement max load the placement is judged against.
+    pub single_max_load: f64,
+    /// Expert-replica slots beyond one-per-expert (the memory cost).
+    pub extra_replicas: usize,
+    /// Virtual-time factor on the expert-load share of service
+    /// (`<= 1.0`): load shrinks by the max-load ratio on the
+    /// `expert_load_share` fraction of service time.
+    pub time_scale: f64,
+}
+
+/// Evaluate popularity-driven replication over accumulated per-expert
+/// demand: returns a plan iff the single-placement skew crosses
+/// `cfg.imbalance_threshold` AND the greedy demand-split placement
+/// actually lowers the max per-worker load. Deterministic in the demand
+/// vector alone.
+pub fn plan_replication(cfg: &ControlConfig, demand: &Demand) -> Option<ReplicationPlan> {
+    if demand.len() < 2 || demand.iter().all(|&d| d == 0) {
+        return None;
+    }
+    let single = place_single(demand, cfg.group_workers);
+    if single.imbalance() <= cfg.imbalance_threshold {
+        return None;
+    }
+    let placement = place_replicated(demand, cfg.group_workers, cfg.max_replicas_per_expert);
+    let (pre, post) = (single.max_load(), placement.max_load());
+    if post >= pre {
+        return None;
+    }
+    let share = cfg.expert_load_share;
+    let time_scale = (1.0 - share) + share * (post / pre);
+    Some(ReplicationPlan {
+        single_max_load: pre,
+        extra_replicas: placement.replica_count().saturating_sub(demand.len()),
+        time_scale,
+        placement,
+    })
+}
+
+/// One row of the controller's per-epoch timeline — what
+/// `BENCH_autoscale.json` records for the reactive cells.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochSnapshot {
+    pub t_ms: Ms,
+    pub p99_ttft_ms: Ms,
+    pub queue_depth: usize,
+    pub live_replicas: usize,
+    pub completed: u64,
+    pub action: &'static str,
+}
+
+/// Everything a controlled run did, costs included — honesty is the
+/// point: replica-hours and replication bytes ride next to the latency
+/// wins in the same artifact.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ControlReport {
+    pub epochs: Vec<EpochSnapshot>,
+    pub scale_ups: u32,
+    pub scale_downs: u32,
+    /// Epochs where relief transitioned on (budget-exhausted pressure).
+    pub reliefs: u32,
+    pub tightens: u32,
+    pub replications: u32,
+    /// Admitted-but-not-running sessions migrated off retiring replicas
+    /// (ledger-correct requeues; running sessions always drain).
+    pub migrated: u32,
+    /// ∫ live replicas dt — the replica-hours cost of elasticity.
+    pub replica_ms: f64,
+    /// Bytes of additional expert replicas placed (memory cost).
+    pub replication_bytes: u64,
+    /// Tokens served under precision relief (the quality-debt proxy:
+    /// each paid the downgraded-transfer error, per DESIGN.md §14).
+    pub quality_debt_tokens: u64,
+    pub peak_replicas: usize,
+    pub final_replicas: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(p99: Ms, queue: usize, live: usize, busy: f64) -> EpochObservation {
+        EpochObservation {
+            p99_ttft_ms: p99,
+            queue_depth: queue,
+            live_replicas: live,
+            busy_frac: busy,
+            completed: 0,
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_modes_and_off_is_no_controller() {
+        assert!(ControlConfig::parse("off").unwrap().is_none());
+        assert!(ControlConfig::parse("reactive").unwrap().is_some());
+        let err = ControlConfig::parse("pid").unwrap_err().to_string();
+        assert!(err.contains("off|reactive"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_budgets() {
+        let c = ControlConfig { min_replicas: 4, max_replicas: 2, ..ControlConfig::default() };
+        assert!(c.validate().is_err());
+        let mut c = ControlConfig { epoch_ms: 0.0, ..ControlConfig::default() };
+        assert!(c.validate().is_err());
+        c.epoch_ms = 100.0;
+        c.relief_scale = 0.0;
+        assert!(c.validate().is_err());
+        assert!(ControlConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn pressure_scales_up_until_the_budget_then_degrades_precision() {
+        let cfg = ControlConfig { max_replicas: 3, ..ControlConfig::default() };
+        let mut st = ControlState::default();
+        // p99 well past 1.25x target, fleet below budget: add a replica.
+        let d = st.observe(&cfg, &obs(500.0, 0, 2, 0.9));
+        assert_eq!(d.replica_delta, 1);
+        assert!(!d.precision_relief);
+        // At the budget the same pressure turns into precision relief.
+        let d = st.observe(&cfg, &obs(500.0, 0, 3, 0.9));
+        assert_eq!(d.replica_delta, 0);
+        assert!(d.precision_relief);
+        assert!(d.tighten_admission, "second consecutive pressured epoch tightens");
+    }
+
+    #[test]
+    fn queue_blowup_alone_is_pressure() {
+        // Empty TTFT window (p99 = 0) but a queue past 2x dispatch
+        // capacity: still scale up — early flash crowds look exactly
+        // like this before any first token lands.
+        let cfg = ControlConfig::default();
+        let mut st = ControlState::default();
+        let cap = 2 * cfg.dispatch_width; // live = 2
+        let d = st.observe(&cfg, &obs(0.0, 2 * cap + 1, 2, 1.0));
+        assert_eq!(d.replica_delta, 1);
+    }
+
+    #[test]
+    fn scale_down_needs_two_consecutive_calm_epochs() {
+        let cfg = ControlConfig::default();
+        let mut st = ControlState::default();
+        let calm = obs(50.0, 0, 4, 0.2);
+        let d1 = st.observe(&cfg, &calm);
+        assert_eq!(d1.replica_delta, 0, "one calm epoch only relaxes");
+        assert!(d1.relax);
+        let d2 = st.observe(&cfg, &calm);
+        assert_eq!(d2.replica_delta, -1);
+        // The counter resets: the next calm epoch holds again.
+        let d3 = st.observe(&cfg, &calm);
+        assert_eq!(d3.replica_delta, 0);
+    }
+
+    #[test]
+    fn scale_down_respects_the_floor_and_neutral_resets_hysteresis() {
+        let cfg = ControlConfig::default();
+        let mut st = ControlState::default();
+        let floor = obs(50.0, 0, cfg.min_replicas, 0.2);
+        st.observe(&cfg, &floor);
+        let d = st.observe(&cfg, &floor);
+        assert_eq!(d.replica_delta, 0, "never below min_replicas");
+        // Calm, neutral, calm: no scale-down (evidence must be consecutive).
+        let mut st = ControlState::default();
+        st.observe(&cfg, &obs(50.0, 0, 4, 0.2));
+        st.observe(&cfg, &obs(200.0, 0, 4, 0.7));
+        let d = st.observe(&cfg, &obs(50.0, 0, 4, 0.2));
+        assert_eq!(d.replica_delta, 0);
+    }
+
+    #[test]
+    fn decision_labels_rank_scaling_over_relief() {
+        assert_eq!(Decision { replica_delta: 1, ..Decision::default() }.label(), "scale-up");
+        assert_eq!(Decision { replica_delta: -1, ..Decision::default() }.label(), "scale-down");
+        assert_eq!(
+            Decision { precision_relief: true, ..Decision::default() }.label(),
+            "relief"
+        );
+        assert_eq!(Decision { relax: true, ..Decision::default() }.label(), "relax");
+        assert_eq!(Decision::default().label(), "hold");
+    }
+
+    #[test]
+    fn replication_triggers_only_on_skew_and_reports_costs() {
+        let cfg = ControlConfig::default(); // 4 workers, <=2 replicas/expert
+        // Uniform demand: no skew, no plan.
+        assert!(plan_replication(&cfg, &vec![8, 8, 8, 8]).is_none());
+        assert!(plan_replication(&cfg, &vec![0, 0, 0, 0]).is_none(), "no demand, no plan");
+        assert!(plan_replication(&cfg, &vec![5]).is_none(), "one expert cannot rebalance");
+        // One hot expert: single placement pins its whole demand on one
+        // worker; the plan splits it and prices the extra replicas.
+        let plan = plan_replication(&cfg, &vec![64, 2, 2, 2]).expect("skew crosses threshold");
+        assert!(plan.placement.max_load() < plan.single_max_load);
+        assert!(plan.extra_replicas >= 1);
+        assert!(plan.time_scale < 1.0 && plan.time_scale > 0.0);
+        // Scale only touches the expert-load share of service time.
+        let ratio = plan.placement.max_load() / plan.single_max_load;
+        let want = (1.0 - cfg.expert_load_share) + cfg.expert_load_share * ratio;
+        assert!((plan.time_scale - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn the_bench_grid_classification_is_the_pinned_tally() {
+        // The exact grid `od-moe bench` tallies (and the Python mirror
+        // recomputes): 6 p99 ratios x 5 queue depths x 3 busy fractions
+        // at live=2, width=4, target=100. Keep in lockstep with
+        // cli::bench and rust/benches/baseline_mirror.py.
+        let cfg = ControlConfig {
+            target_p99_ttft_ms: 100.0,
+            dispatch_width: 4,
+            ..ControlConfig::default()
+        };
+        let (mut over, mut calm, mut hold) = (0u64, 0u64, 0u64);
+        for ratio in [0.4, 0.8, 1.1, 1.3, 1.6, 2.2] {
+            for queue in [0usize, 2, 6, 12, 24] {
+                for busy in [0.2, 0.55, 0.9] {
+                    match classify(&cfg, &obs(100.0 * ratio, queue, 2, busy)) {
+                        Pressure::Over => over += 1,
+                        Pressure::Calm => calm += 1,
+                        Pressure::Neutral => hold += 1,
+                    }
+                }
+            }
+        }
+        assert_eq!((over, calm, hold), (54, 2, 34));
+    }
+}

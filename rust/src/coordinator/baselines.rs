@@ -524,6 +524,7 @@ impl<'rt> BatchEngine for FullyCachedEngine<'rt> {
             decode_tokens,
             decode_iterations,
             decode_span_ms: self.now - decode_start,
+            expert_demand: Vec::new(),
         })
     }
 }

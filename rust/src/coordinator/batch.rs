@@ -54,6 +54,13 @@ pub struct BatchRunResult {
     /// Virtual span of the decode phase (last token time minus the batch
     /// decode start).
     pub decode_span_ms: Ms,
+    /// Per-expert demand over the run: how many session-route hits each
+    /// expert took across layers and iterations — the sum of
+    /// [`merge_distinct`]'s per-expert counts. Indexed by expert id;
+    /// empty for engines that do not track it (baselines). This is the
+    /// popularity signal the SLO control loop's expert replication
+    /// consumes (DESIGN.md §15).
+    pub expert_demand: Vec<u64>,
 }
 
 impl BatchRunResult {

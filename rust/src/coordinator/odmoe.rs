@@ -296,6 +296,12 @@ pub struct OdMoeEngine<'rt> {
     /// Σ of all routed gate weights this run — the quality-debt
     /// normalizer behind the `engine.quality_debt_frac` gauge.
     route_weight: f64,
+    /// Per-expert session-route hits accumulated by the batched path's
+    /// load-dedup merge (`merge_distinct` counts, summed over layers and
+    /// iterations) — drained into [`BatchRunResult::expert_demand`], the
+    /// popularity signal the SLO control loop's replication consumes
+    /// (DESIGN.md §15). Grown on demand; empty in sequential decode.
+    expert_demand: Vec<u64>,
 }
 
 impl<'rt> OdMoeEngine<'rt> {
@@ -398,6 +404,7 @@ impl<'rt> OdMoeEngine<'rt> {
             stream_prec: BTreeMap::new(),
             quality_debt: 0.0,
             route_weight: 0.0,
+            expert_demand: Vec::new(),
         };
         engine.charge_static_memory();
         Ok(engine)
@@ -1345,6 +1352,7 @@ impl<'rt> Engine for OdMoeEngine<'rt> {
         self.stream_prec.clear();
         self.quality_debt = 0.0;
         self.route_weight = 0.0;
+        self.expert_demand.clear();
         for w in &mut self.workers {
             w.ec_ends.clear();
         }
@@ -1589,6 +1597,14 @@ impl<'rt> OdMoeEngine<'rt> {
             } else {
                 merge_distinct(recs.iter().map(|r| r.routes[l].experts.as_slice()))
             };
+            // Demand tally for the SLO control loop: each merged entry's
+            // count is how many sessions routed to that expert here.
+            for &(e, cnt) in &actual_set {
+                if e >= self.expert_demand.len() {
+                    self.expert_demand.resize(e + 1, 0);
+                }
+                self.expert_demand[e] += cnt as u64;
+            }
             // Batched importance of an expert: the strongest gate weight
             // any non-skipping session gives it (reactive loads); debt
             // below instead sums weights, since every routed session's
@@ -1849,6 +1865,7 @@ impl<'rt> BatchEngine for OdMoeEngine<'rt> {
             decode_tokens,
             decode_iterations,
             decode_span_ms: self.now - decode_start,
+            expert_demand: std::mem::take(&mut self.expert_demand),
         })
     }
 }

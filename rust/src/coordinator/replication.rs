@@ -194,6 +194,92 @@ mod tests {
         });
     }
 
+    // ---- Placement invariants (DESIGN.md §15) ----------------------
+    //
+    // The SLO control loop consumes placements live (replication plans
+    // between epochs, `SlotMap::route_replicated` per route), so the
+    // four invariants below are what the controller is allowed to
+    // assume without re-checking.
+
+    #[test]
+    fn invariant_every_expert_is_placed_on_valid_distinct_workers() {
+        crate::util::prop::check("placement covers every expert", 64, 7, |rng| {
+            let n_workers = 2 + rng.below(7);
+            let n_experts = 1 + rng.below(12);
+            let demand: Demand = (0..n_experts).map(|_| rng.below(40)).collect();
+            let max_rep = 1 + rng.below(n_workers);
+            let p = place_replicated(&demand, n_workers, max_rep);
+            for (e, hosts) in p.replicas.iter().enumerate() {
+                if hosts.is_empty() {
+                    return Err(format!("expert {e} unplaced for {demand:?}"));
+                }
+                let mut ws = hosts.clone();
+                ws.sort_unstable();
+                ws.dedup();
+                if ws.len() != hosts.len() || ws.iter().any(|&w| w >= n_workers) {
+                    return Err(format!("expert {e}: bad hosts {hosts:?} ({n_workers} workers)"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invariant_demand_is_conserved_across_split_replicas() {
+        crate::util::prop::check("split shares sum to total demand", 64, 11, |rng| {
+            let n_workers = 2 + rng.below(7);
+            let demand: Demand = (0..1 + rng.below(12)).map(|_| rng.below(40)).collect();
+            let total: f64 = demand.iter().map(|&d| d as f64).sum();
+            let p = place_replicated(&demand, n_workers, 1 + rng.below(n_workers));
+            let placed: f64 = p.load.iter().sum();
+            if (placed - total).abs() > 1e-9 {
+                return Err(format!("placed load {placed} != demand {total} for {demand:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invariant_imbalance_is_at_least_one() {
+        crate::util::prop::check("imbalance >= 1.0 (max >= mean)", 64, 13, |rng| {
+            let n_workers = 2 + rng.below(7);
+            let demand: Demand = (0..1 + rng.below(12)).map(|_| rng.below(40)).collect();
+            for p in [
+                place_single(&demand, n_workers),
+                place_replicated(&demand, n_workers, 1 + rng.below(n_workers)),
+            ] {
+                if p.imbalance() < 1.0 - 1e-9 {
+                    return Err(format!("imbalance {} < 1 for {demand:?}", p.imbalance()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invariant_replica_count_is_monotone_in_demand_skew() {
+        // Fixed total demand (64) over 8 experts, 4 workers: as the
+        // share of the hottest expert grows the splitter can only add
+        // replicas, never remove them.
+        let n_workers = 4;
+        let mut prev = 0usize;
+        for hot in [8usize, 16, 24, 32, 48, 57] {
+            let rest = (64 - hot) / 7;
+            let mut demand: Demand = vec![rest; 8];
+            demand[0] = hot + (64 - hot - rest * 7); // keep the total at 64
+            assert_eq!(demand.iter().sum::<usize>(), 64);
+            let p = place_replicated(&demand, n_workers, n_workers);
+            assert!(
+                p.replica_count() >= prev,
+                "replicas dropped {} -> {} at hot={hot} ({demand:?})",
+                prev,
+                p.replica_count()
+            );
+            prev = p.replica_count();
+        }
+        assert!(prev > 8, "the skew ladder must end replicated");
+    }
+
     #[test]
     fn beats_single_placement_under_heavy_skew() {
         crate::util::prop::check("replication wins under skew", 32, 101, |rng| {

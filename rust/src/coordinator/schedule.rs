@@ -226,6 +226,36 @@ impl SlotMap {
         moves
     }
 
+    /// Route an expert through a replication [`Placement`] (DESIGN.md
+    /// §15): among the expert's replica hosts that are still alive, pick
+    /// the one with the lowest placement load share (ties by lowest
+    /// worker id — deterministic). An expert the placement does not
+    /// cover, or whose replica hosts are all dead, falls back to the
+    /// slot's default host [`SlotMap::worker_for`] — replication only
+    /// ever *adds* routing options, it never strands a route.
+    pub fn route_replicated(
+        &self,
+        placement: &crate::coordinator::replication::Placement,
+        layer: usize,
+        slot: usize,
+        expert: usize,
+    ) -> usize {
+        let best = placement
+            .replicas
+            .get(expert)
+            .into_iter()
+            .flatten()
+            .copied()
+            .filter(|&w| w < self.alive.len() && self.alive[w])
+            .min_by(|&a, &b| {
+                placement.load[a]
+                    .partial_cmp(&placement.load[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+        best.unwrap_or_else(|| self.worker_for(layer, slot))
+    }
+
     /// Least projected-load-time feasible survivor, else least loaded by
     /// time outright (ties: slot count, then lowest id — deterministic).
     fn choose_target(
@@ -476,5 +506,34 @@ mod tests {
         let mut m = SlotMap::new(2, 2);
         m.fail(0, |_| true);
         m.fail(1, |_| true);
+    }
+
+    #[test]
+    fn route_replicated_picks_least_loaded_alive_replica() {
+        use crate::coordinator::replication::Placement;
+        let m = SlotMap::new(4, 2);
+        let p = Placement {
+            replicas: vec![vec![1, 3], vec![2]],
+            load: vec![0.0, 8.0, 4.0, 2.0],
+        };
+        // Expert 0 is held on workers 1 and 3; 3 carries less load.
+        assert_eq!(m.route_replicated(&p, 0, 0, 0), 3);
+        assert_eq!(m.route_replicated(&p, 0, 1, 1), 2);
+        // Load ties break by lowest worker id.
+        let tied = Placement { replicas: vec![vec![3, 1]], load: vec![0.0; 4] };
+        assert_eq!(m.route_replicated(&tied, 0, 0, 0), 1);
+    }
+
+    #[test]
+    fn route_replicated_falls_back_past_dead_or_missing_hosts() {
+        use crate::coordinator::replication::Placement;
+        let mut m = SlotMap::new(4, 2);
+        let p = Placement { replicas: vec![vec![3]], load: vec![0.0, 0.0, 0.0, 9.0] };
+        assert_eq!(m.route_replicated(&p, 0, 1, 0), 3, "alive replica wins");
+        m.fail(3, |_| true);
+        // All replica hosts dead -> the slot's default host.
+        assert_eq!(m.route_replicated(&p, 0, 1, 0), m.worker_for(0, 1));
+        // Expert the placement does not cover -> default host too.
+        assert_eq!(m.route_replicated(&p, 2, 0, 7), m.worker_for(2, 0));
     }
 }

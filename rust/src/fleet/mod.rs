@@ -31,7 +31,7 @@ use anyhow::{bail, ensure, Result};
 use crate::cluster::{Cluster, HardwareProfile, NodeClass};
 use crate::coordinator::SlotMap;
 
-pub use planner::{PlanCandidate, PlanChoice, PlanGrid, PlanMeasurement, PlanReport};
+pub use planner::{replan, PlanCandidate, PlanChoice, PlanGrid, PlanMeasurement, PlanReport};
 
 /// A named fleet composition: node classes with counts, in declaration
 /// order. Worker ids are assigned by expanding the entries in order

@@ -377,6 +377,63 @@ pub fn search(
     Ok(PlanReport { slo_p99_tpot_ms, points, pruned, chosen })
 }
 
+/// The deployed value plus its nearest grid neighbor on either side —
+/// at most three values, whatever the grid size. The deployed value is
+/// always included even when it is not a grid point, so a plan that
+/// drifted off the grid can still step back toward it.
+fn neighborhood(grid: &[usize], current: usize) -> Vec<usize> {
+    let mut vals: Vec<usize> = grid.to_vec();
+    vals.push(current);
+    vals.sort_unstable();
+    vals.dedup();
+    let i = vals.iter().position(|&v| v == current).expect("current value was just inserted");
+    let lo = i.saturating_sub(1);
+    let hi = (i + 1).min(vals.len() - 1);
+    vals[lo..=hi].to_vec()
+}
+
+impl PlanGrid {
+    /// This grid narrowed to the neighborhood of a deployed plan: each
+    /// numeric dimension keeps only the deployed value and its nearest
+    /// grid neighbors ([`neighborhood`]); precisions and runtime
+    /// policies stay as-is (both lists are three entries at most). The
+    /// result bounds the candidate count by a constant independent of
+    /// the full grid's size.
+    pub fn narrowed_around(&self, current: &PlanChoice) -> PlanGrid {
+        PlanGrid {
+            precisions: self.precisions.clone(),
+            chunk_counts: neighborhood(&self.chunk_counts, current.chunks),
+            depths: neighborhood(&self.depths, current.prefetch_depth),
+            replicas: neighborhood(&self.replicas, current.replicas),
+            cache_budgets: neighborhood(&self.cache_budgets, current.cache_hot),
+            policies: self.policies.clone(),
+        }
+    }
+}
+
+/// Bounded live replan (DESIGN.md §15): [`search`] restricted to the
+/// neighborhood of the currently deployed plan instead of the full
+/// grid. The SLO control loop re-searches between epochs, where an
+/// exhaustive sweep would not fit in one epoch; narrowing every numeric
+/// dimension to at most three values caps the candidate count at a
+/// constant, and because this reuses `search` verbatim the report,
+/// prefilter, Pareto, and chosen-plan semantics are identical to the
+/// offline planner's.
+#[allow(clippy::too_many_arguments)]
+pub fn replan(
+    fleet: &FleetSpec,
+    base: &HardwareProfile,
+    group_size: usize,
+    max_batch: usize,
+    slo_p99_tpot_ms: f64,
+    grid: &PlanGrid,
+    current: &PlanChoice,
+    eval: impl FnMut(&PlanCandidate) -> Result<PlanMeasurement>,
+) -> Result<PlanReport> {
+    let narrowed = grid.narrowed_around(current);
+    search(fleet, base, group_size, max_batch, slo_p99_tpot_ms, &narrowed, eval)
+}
+
 fn candidate_json(c: &PlanCandidate) -> Vec<(&'static str, Json)> {
     vec![
         ("fleet", Json::Str(c.fleet.label())),
@@ -729,6 +786,54 @@ mod tests {
         )
         .unwrap();
         assert_eq!(PlanChoice::from_json(&legacy).unwrap().cache_hot, 0);
+    }
+
+    #[test]
+    fn replan_searches_only_the_neighborhood_of_the_deployed_plan() {
+        let base = HardwareProfile::rtx3090();
+        let f = FleetSpec::uniform(NodeClass::rtx3080(), 4).unwrap();
+        let grid = PlanGrid {
+            precisions: vec![Precision::Nf4],
+            chunk_counts: vec![1, 2, 4, 8, 16],
+            depths: vec![0, 1, 2, 3],
+            replicas: vec![1, 2, 3, 4],
+            cache_budgets: vec![0],
+            policies: vec![PrecisionPolicy::Static],
+        };
+        let current = PlanChoice {
+            fleet: f.clone(),
+            precision: Precision::Nf4,
+            chunks: 4,
+            prefetch_depth: 0,
+            replicas: 2,
+            cache_hot: 0,
+            policy: PrecisionPolicy::Static,
+            claimed_tpot_p99_ms: 50.0,
+        };
+        let narrowed = grid.narrowed_around(&current);
+        assert_eq!(narrowed.chunk_counts, vec![2, 4, 8]);
+        assert_eq!(narrowed.depths, vec![0, 1], "edge values keep one neighbor");
+        assert_eq!(narrowed.replicas, vec![1, 2, 3]);
+        // replan reuses search on the narrowed grid: every measured
+        // candidate stays within one grid step of the deployed plan,
+        // and the candidate count is bounded regardless of grid size.
+        let mut evals = 0usize;
+        let r = replan(&f, &base, 2, 1, 1e6, &grid, &current, |c| {
+            evals += 1;
+            Ok(fake_eval(c, &base))
+        })
+        .unwrap();
+        assert!(r.points.iter().all(|p| {
+            narrowed.chunk_counts.contains(&p.candidate.chunks)
+                && narrowed.depths.contains(&p.candidate.prefetch_depth)
+                && narrowed.replicas.contains(&p.candidate.replicas)
+        }));
+        assert!(evals <= 3 * 2 * 3, "bounded candidate count, got {evals}");
+        assert!(r.chosen.is_some(), "a loose SLO still chooses inside the neighborhood");
+        // A deployed value that fell off the grid anchors its own
+        // neighborhood, so the controller can step back onto the grid.
+        let off = PlanChoice { chunks: 3, ..current };
+        assert_eq!(grid.narrowed_around(&off).chunk_counts, vec![2, 3, 4]);
     }
 
     #[test]

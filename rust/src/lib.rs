@@ -44,9 +44,15 @@
 //!   over traces (`od-moe decode --attribution`, `BENCH_attrib.json`), a
 //!   unified metrics registry with one JSONL export schema, and the
 //!   `od-moe bench` perf-regression gate (DESIGN.md §11).
+//! * [`control`] — the online SLO control loop: rolling-window
+//!   observations feed a deterministic decision engine that scales
+//!   replicas, tightens admission, downgrades transfer precision and
+//!   replicates hot experts live between epochs (`--control reactive`,
+//!   `od-moe serve --autoscale-sweep`, DESIGN.md §15).
 
 pub mod cache;
 pub mod cluster;
+pub mod control;
 pub mod coordinator;
 pub mod engine;
 pub mod fleet;

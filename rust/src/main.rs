@@ -17,7 +17,8 @@
 //! DESIGN.md §13), `BENCH_plan.json` (`plan`, DESIGN.md §10),
 //! `BENCH_attrib.json` (`serve --attribution`), `ATTRIB.json`
 //! (`decode --attribution`), `BENCH_precision.json`
-//! (`serve --precision-sweep`, DESIGN.md §14), `BENCH_perf.json`
+//! (`serve --precision-sweep`, DESIGN.md §14), `BENCH_autoscale.json`
+//! (`serve --autoscale-sweep`, DESIGN.md §15), `BENCH_perf.json`
 //! (`bench`), and `METRICS_<cmd>.jsonl` (`--metrics`, DESIGN.md §11).
 
 use anyhow::{bail, Result};
@@ -49,7 +50,7 @@ macro_rules! workload_flags {
             val("prompts", "N", "legacy alias for --requests"),
             val("rate", "R", "offered arrival rate, req/s (default 2)"),
             val("arrival-gap-ms", "MS", "legacy: fixed gap instead of --rate"),
-            val("arrival", "KIND", "poisson|bursty|trace|closed (default poisson)"),
+            val("arrival", "KIND", "poisson|bursty|trace|diurnal|closed (default poisson)"),
             val("clients", "N", "closed-loop client count (default 4)"),
             val("think-ms", "MS", "closed-loop think time (default 500)"),
             val("input-len", "N", "fixed prompt length (default bimodal 16/128)"),
@@ -67,10 +68,14 @@ macro_rules! workload_flags {
             val("core", "KIND", "scheduler executor event|round-loop (default event)"),
             val("queue-sample", "N", "queue-depth trace stride (default 1 = every tick)"),
             val("threads", "N", "worker threads for sweep cells (default 1)"),
+            val("control", "M", "SLO control loop off|reactive (default off, §15)"),
+            val("control-epoch", "MS", "controller epoch length (default 200)"),
+            val("control-target-p99", "MS", "controller p99 TTFT target (default 300)"),
+            val("control-max-replicas", "N", "controller fleet ceiling (default 8)"),
         ]
     };
     (+ $($extra:expr),* $(,)?) => {{
-        const W: [Flag; 22] = workload_flags!();
+        const W: [Flag; 26] = workload_flags!();
         const E: &[Flag] = &[$($extra),*];
         const N: usize = W.len() + E.len();
         const OUT: [Flag; N] = {
@@ -123,6 +128,7 @@ const SERVE_FLAGS: &[Flag] = workload_flags![+
     val("scale-sessions", "N1,N2,..", "sizes for --scale-sweep (default 1000,10000,100000,1000000)"),
     val("scale-round-cap", "N", "largest size the round-loop oracle also runs (default 10000)"),
     switch("omit-wall", "drop wall-clock fields from BENCH_scale.json (determinism diffs)"),
+    switch("autoscale-sweep", "drift scenarios x {static,reactive}; writes BENCH_autoscale.json (§15)"),
     switch("metrics", "export the metrics registry to METRICS_serve.jsonl"),
 ];
 
@@ -263,6 +269,12 @@ fn main() -> Result<()> {
         // (measuring an engine 10^6 times would swamp the scheduler cost
         // under test), so skip the PJRT artifact load entirely.
         return cli::scale(seed, &args);
+    }
+    if cmd == "serve" && args.has("autoscale-sweep") {
+        // Runtime-free for the same reason: the autoscale sweep compares
+        // the static fleet against the control loop on the synthetic
+        // service, where drift effects dominate engine detail.
+        return cli::autoscale(seed, &args);
     }
     let rt = match args.get("artifacts") {
         Some(dir) => odmoe::Runtime::load(dir)?,

@@ -47,12 +47,15 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 use anyhow::{bail, ensure, Result};
 
-use super::metrics::BoundedHistogram;
+use super::metrics::{BoundedHistogram, WindowedHistogram};
 use super::scheduler::{
     truncate, QueueKey, SchedulerConfig, ServeOutcome, ServiceModel, SessionOutcome, SessionRecord,
 };
 use super::Request;
 use crate::cluster::{Ms, Node};
+use crate::control::{
+    plan_replication, ControlConfig, ControlReport, ControlState, EpochObservation, EpochSnapshot,
+};
 
 /// Min-heap over `(time, request id, request index)` pending-arrival
 /// entries: the shared replacement for the old sorted-`Vec` +
@@ -116,6 +119,11 @@ impl FutureHeap {
 const EV_COMPLETION: u8 = 0;
 const EV_FAILURE: u8 = 1;
 const EV_ARRIVAL: u8 = 2;
+/// Controller epoch boundary (`--control reactive` only; an off run
+/// never pushes one). Highest kind code: the controller observes an
+/// instant *after* that instant's completions, failures and arrivals
+/// have landed, so its queue/busy readings are the settled state.
+const EV_CONTROL: u8 = 3;
 
 /// One scheduled occurrence. `id` is the request id (or the replica
 /// index for failures), `idx` the arena row (or replica index), `epoch`
@@ -310,6 +318,9 @@ struct CoreOutcome {
     events: u64,
     ticks: u64,
     arena_bytes: u64,
+    /// The controller's action log + cost ledger (`--control reactive`
+    /// only; None on off runs).
+    control: Option<ControlReport>,
 }
 
 struct EventReplica {
@@ -319,6 +330,96 @@ struct EventReplica {
     busy_ms: Ms,
     bookings: Vec<(Ms, Ms, u64)>,
     dead: bool,
+    /// Retired by a controller scale-down: stops admitting and
+    /// dispatching but drains its running batch (unlike `dead`, which
+    /// aborts it). A later scale-up un-retires the replica, ledger and
+    /// busy-time history intact.
+    retired: bool,
+}
+
+/// Live replicas = alive and accepting work (neither failed nor
+/// retired) — the controller's fleet size and the admission target set.
+fn live_replicas(reps: &[EventReplica]) -> usize {
+    reps.iter().filter(|r| !r.dead && !r.retired).count()
+}
+
+/// Controller state threaded through one event-core run. Built only
+/// under `--control reactive` — an off run constructs none of this (the
+/// PR 8/9 structural pin: off is the absence of the mechanism).
+struct ControlRuntime {
+    cfg: ControlConfig,
+    state: ControlState,
+    /// Rolling arrival→first-token window the epoch p99 is read from
+    /// (samples land at dispatch, when the first-token time is known).
+    ttft: WindowedHistogram,
+    /// Completions since the last epoch boundary.
+    epoch_completed: u64,
+    /// Per-expert demand accumulated from the service model's load-dedup
+    /// tallies ([`ServiceModel::take_expert_demand`]) since run start.
+    demand: Vec<u64>,
+    /// Service-time factor from active precision relief (1.0 = off;
+    /// [`ControlConfig::relief_scale`] while on — non-compounding).
+    relief_scale: f64,
+    /// Service-time factor from the one-shot expert replication.
+    replication_scale: f64,
+    /// In-flight session cap while admission is tightened.
+    admission_cap: Option<usize>,
+    /// ∫ live dt bookkeeping: integral is advanced at every fleet-size
+    /// change and finalized at the makespan.
+    live_since: Ms,
+    live_count: usize,
+    report: ControlReport,
+}
+
+impl ControlRuntime {
+    fn new(cfg: ControlConfig, initial_live: usize) -> Self {
+        let window = cfg.window;
+        Self {
+            cfg,
+            state: ControlState::default(),
+            ttft: WindowedHistogram::new(window),
+            epoch_completed: 0,
+            demand: Vec::new(),
+            relief_scale: 1.0,
+            replication_scale: 1.0,
+            admission_cap: None,
+            live_since: 0.0,
+            live_count: initial_live,
+            report: ControlReport { peak_replicas: initial_live, ..ControlReport::default() },
+        }
+    }
+
+    /// Combined factor applied to measured service durations at
+    /// dispatch: precision relief × replication speedup.
+    fn time_scale(&self) -> f64 {
+        self.relief_scale * self.replication_scale
+    }
+
+    /// Advance the replica-ms integral to `t`, with `live` replicas
+    /// live from `t` on.
+    fn note_live(&mut self, t: Ms, live: usize) {
+        self.report.replica_ms += (t - self.live_since).max(0.0) * self.live_count as f64;
+        self.live_since = t;
+        self.live_count = live;
+        self.report.peak_replicas = self.report.peak_replicas.max(live);
+    }
+
+    fn finalize(mut self, t: Ms) -> ControlReport {
+        let live = self.live_count;
+        self.note_live(t, live);
+        self.report.final_replicas = live;
+        self.report
+    }
+
+    /// Fold one drained demand vector into the cross-epoch accumulator.
+    fn merge_demand(&mut self, d: &[u64]) {
+        if d.len() > self.demand.len() {
+            self.demand.resize(d.len(), 0);
+        }
+        for (acc, &v) in self.demand.iter_mut().zip(d) {
+            *acc += v;
+        }
+    }
 }
 
 /// Full-fidelity run: collect every record and return the same
@@ -342,6 +443,7 @@ pub fn run(
         replica_busy_ms: core.replica_busy_ms,
         bookings: core.bookings,
         requeued: core.requeued,
+        control: core.control,
     })
 }
 
@@ -435,10 +537,40 @@ fn run_core<S: RecordSink>(
             busy_ms: 0.0,
             bookings: Vec::new(),
             dead: false,
+            retired: false,
         })
         .collect();
     let mut arena = SessionArena::new(cfg, requests);
     let arena_bytes = arena.footprint_bytes();
+
+    // --control reactive: build the controller and seed the first epoch
+    // boundary. --control off builds nothing and pushes nothing — every
+    // clock stop, tick and sample stays byte-identical to a build
+    // without this feature.
+    let mut control: Option<ControlRuntime> = match &cfg.control {
+        Some(c) => {
+            c.validate()?;
+            ensure!(
+                (c.min_replicas..=c.max_replicas).contains(&cfg.n_replicas),
+                "--control replica budget {}..={} must contain the starting fleet of {}",
+                c.min_replicas,
+                c.max_replicas,
+                cfg.n_replicas
+            );
+            events.push(Reverse(Event {
+                time: c.epoch_ms,
+                kind: EV_CONTROL,
+                id: 0,
+                idx: 0,
+                epoch: 0,
+            }));
+            Some(ControlRuntime::new(c.clone(), cfg.n_replicas))
+        }
+        None => None,
+    };
+    // Set when a control event fires; the next boundary is pushed after
+    // the tick's phases so the heap-emptiness stall check stays sound.
+    let mut control_due: Option<Ms> = None;
 
     // Waiting queue and admitted set are ordered indexes over (policy
     // key, arena row). The admitted set is global (the round loop kept
@@ -523,6 +655,9 @@ fn run_core<S: RecordSink>(
                     let rec = arena.records[idx].take().expect("running session has a record");
                     finalized_makespan = finalized_makespan.max(rec.finish_ms);
                     sink.emit(rec);
+                    if let Some(ctl) = &mut control {
+                        ctl.epoch_completed += 1;
+                    }
                     release_next(&mut events, &mut chain_pos, requests[idx].client, ev.time);
                 }
                 EV_FAILURE => {
@@ -579,6 +714,120 @@ fn run_core<S: RecordSink>(
                             }
                         }
                     }
+                    if let Some(ctl) = &mut control {
+                        // A failure shrinks the fleet the controller is
+                        // paying for; advance the replica-ms integral.
+                        ctl.note_live(clock, live_replicas(&reps));
+                    }
+                }
+                EV_CONTROL => {
+                    acted = true;
+                    let ctl = control.as_mut().expect("control event without a controller");
+                    // Fold the service model's accumulated expert-demand
+                    // tallies (the batched path's load-dedup counts)
+                    // into the cross-epoch popularity signal.
+                    if let Some(d) = service.take_expert_demand() {
+                        ctl.merge_demand(&d);
+                    }
+                    let live = live_replicas(&reps);
+                    let busy = reps
+                        .iter()
+                        .filter(|r| !r.dead && !r.retired && !r.running.is_empty())
+                        .count();
+                    let obs = EpochObservation {
+                        p99_ttft_ms: ctl.ttft.p(0.99),
+                        queue_depth: waiting.len() + admitted.len(),
+                        live_replicas: live,
+                        busy_frac: if live > 0 { busy as f64 / live as f64 } else { 1.0 },
+                        completed: std::mem::take(&mut ctl.epoch_completed),
+                    };
+                    let d = ctl.state.observe(&ctl.cfg, &obs);
+                    let mut live_now = live;
+                    if d.replica_delta > 0 && live < ctl.cfg.max_replicas {
+                        // Un-retire the highest-index parked replica if
+                        // one exists (its ledger is intact), else grow
+                        // the fleet with a fresh node.
+                        if let Some(ri) =
+                            (0..reps.len()).rev().find(|&i| reps[i].retired && !reps[i].dead)
+                        {
+                            reps[ri].retired = false;
+                        } else {
+                            reps.push(EventReplica {
+                                node: Node::new(reps.len()),
+                                running: Vec::new(),
+                                busy_ms: 0.0,
+                                bookings: Vec::new(),
+                                dead: false,
+                                retired: false,
+                            });
+                            admitted_count.push(0);
+                        }
+                        ctl.report.scale_ups += 1;
+                        live_now += 1;
+                    } else if d.replica_delta < 0 && live > ctl.cfg.min_replicas {
+                        // Retire the highest-index live replica. Its
+                        // running batch drains; admitted-but-queued
+                        // sessions migrate back to waiting with their
+                        // ledger bytes released (counted as `migrated`,
+                        // not `requeued` — nothing was aborted).
+                        let ri = (0..reps.len())
+                            .rev()
+                            .find(|&i| !reps[i].dead && !reps[i].retired)
+                            .expect("a live replica exists");
+                        reps[ri].retired = true;
+                        let mine: Vec<(QueueKey, usize)> = admitted
+                            .iter()
+                            .filter(|&&(_, idx)| arena.owner[idx] == ri)
+                            .copied()
+                            .collect();
+                        for (key, idx) in mine {
+                            admitted.remove(&(key, idx));
+                            reps[ri].node.dealloc(arena.session_bytes[idx]);
+                            arena.state[idx] = SessState::Waiting;
+                            ctl.report.migrated += 1;
+                            waiting.insert((key, idx));
+                        }
+                        admitted_count[ri] = 0;
+                        ctl.report.scale_downs += 1;
+                        live_now -= 1;
+                    }
+                    if d.tighten_admission {
+                        ctl.admission_cap = Some(live_now * ctl.cfg.dispatch_width);
+                        ctl.report.tightens += 1;
+                    }
+                    if d.relax {
+                        ctl.admission_cap = None;
+                        ctl.relief_scale = 1.0;
+                    }
+                    if d.precision_relief {
+                        if ctl.relief_scale == 1.0 {
+                            ctl.report.reliefs += 1;
+                        }
+                        ctl.relief_scale = ctl.cfg.relief_scale;
+                    }
+                    // One-shot popularity-driven replication: once the
+                    // accumulated demand is skewed enough for a plan
+                    // that lowers max load, place it and book its cost.
+                    if ctl.report.replications == 0 && !ctl.demand.is_empty() {
+                        let demand: Vec<usize> =
+                            ctl.demand.iter().map(|&v| v as usize).collect();
+                        if let Some(plan) = plan_replication(&ctl.cfg, &demand) {
+                            ctl.replication_scale = plan.time_scale;
+                            ctl.report.replications += 1;
+                            ctl.report.replication_bytes =
+                                plan.extra_replicas as u64 * ctl.cfg.expert_bytes;
+                        }
+                    }
+                    ctl.note_live(clock, live_now);
+                    ctl.report.epochs.push(EpochSnapshot {
+                        t_ms: clock,
+                        p99_ttft_ms: obs.p99_ttft_ms,
+                        queue_depth: obs.queue_depth,
+                        live_replicas: live_now,
+                        completed: obs.completed,
+                        action: d.label(),
+                    });
+                    control_due = Some(clock);
                 }
                 _ => {
                     acted = true;
@@ -621,10 +870,19 @@ fn run_core<S: RecordSink>(
             // bytes, then the lowest index); stop at the first
             // head-of-line session that fits nowhere.
             while let Some(&(key, idx)) = waiting.first() {
+                // Tightened admission: the controller caps in-flight
+                // sessions (admitted + running) at live × width.
+                if let Some(cap) = control.as_ref().and_then(|c| c.admission_cap) {
+                    let in_flight =
+                        admitted.len() + reps.iter().map(|r| r.running.len()).sum::<usize>();
+                    if in_flight >= cap {
+                        break;
+                    }
+                }
                 let bytes = arena.session_bytes[idx];
                 let mut best: Option<(usize, usize, u64)> = None;
                 for (ri, r) in reps.iter().enumerate() {
-                    if r.dead {
+                    if r.dead || r.retired {
                         continue;
                     }
                     let free = cfg.memory.budget_bytes.saturating_sub(r.node.gpu_bytes_used);
@@ -654,7 +912,7 @@ fn run_core<S: RecordSink>(
             // stealing siblings' admitted sessions when they fit its
             // own ledger.
             for ri in 0..reps.len() {
-                if reps[ri].dead || !reps[ri].running.is_empty() {
+                if reps[ri].dead || reps[ri].retired || !reps[ri].running.is_empty() {
                     continue;
                 }
                 let mut picked: Vec<usize> = Vec::new();
@@ -686,14 +944,38 @@ fn run_core<S: RecordSink>(
                     continue;
                 }
                 let refs: Vec<&Request> = picked.iter().map(|&idx| &requests[idx]).collect();
-                let profiles = service.measure_batch(&refs)?;
+                let mut profiles = service.measure_batch(&refs)?;
                 ensure!(profiles.len() == picked.len(), "one profile per batched session");
+                // Active relief / replication shrink service durations
+                // at dispatch (never off: scale 1.0 means no-op and the
+                // off path never builds a controller at all).
+                if let Some(ctl) = &control {
+                    let s = ctl.time_scale();
+                    if s < 1.0 {
+                        for p in &mut profiles {
+                            p.ttft_ms *= s;
+                            p.decode_ms *= s;
+                            p.stall_ms *= s;
+                        }
+                    }
+                }
                 let start = clock;
                 let mut batch_end = start;
                 for (profile, &idx) in profiles.iter().zip(&picked) {
                     let req = &requests[idx];
                     let (kept, svc, preempted) = truncate(profile, cfg.preempt_budget_ms);
                     let finish = start + svc;
+                    if let Some(ctl) = &mut control {
+                        // Arrival → first token lands in the rolling
+                        // window now, when the dispatch fixes it; tokens
+                        // served under relief accrue quality debt.
+                        if kept > 0 {
+                            ctl.ttft.push(start + profile.ttft_ms - req.arrival_ms);
+                        }
+                        if ctl.relief_scale < 1.0 {
+                            ctl.report.quality_debt_tokens += kept as u64;
+                        }
+                    }
                     arena.records[idx] = Some(SessionRecord {
                         id: req.id,
                         tenant: req.tenant,
@@ -744,6 +1026,25 @@ fn run_core<S: RecordSink>(
             if done >= n {
                 break;
             }
+
+            // Re-arm the next controller epoch, but only while there is
+            // work the controller could still affect: a running batch or
+            // a pending non-control event. Otherwise the chain stops and
+            // the empty-heap stall check below keeps its meaning.
+            if let Some(epoch_t) = control_due.take() {
+                let ctl = control.as_ref().expect("control_due without a controller");
+                let work_left = reps.iter().any(|r| !r.running.is_empty())
+                    || events.iter().any(|&Reverse(e)| e.kind != EV_CONTROL);
+                if work_left {
+                    events.push(Reverse(Event {
+                        time: epoch_t + ctl.cfg.epoch_ms,
+                        kind: EV_CONTROL,
+                        id: 0,
+                        idx: 0,
+                        epoch: 0,
+                    }));
+                }
+            }
         }
 
         // Advance to the next pending event. An empty heap with work
@@ -770,6 +1071,7 @@ fn run_core<S: RecordSink>(
         events: n_events,
         ticks: tick,
         arena_bytes,
+        control: control.map(|ctl| ctl.finalize(makespan.max(clock))),
     })
 }
 
@@ -874,6 +1176,113 @@ mod tests {
         let s = e2e.summary();
         assert!(s.count == out.records.len() && stats.e2e.is_exact());
         assert!(stats.events > 0 && stats.ticks > 0 && stats.arena_bytes > 0);
+    }
+
+    #[test]
+    fn a_controller_that_never_acts_leaves_records_and_makespan_identical() {
+        // A reactive controller whose thresholds can never trip (huge
+        // target, huge dispatch width, fleet pinned min == max) adds
+        // control events — extra clock stops and queue samples — but
+        // must not move a single token or timing: replicas and ledger
+        // bytes only free at completions, so the extra admission and
+        // dispatch passes at quiescent instants are provable no-ops.
+        use crate::serve::WorkloadSpec;
+        let reqs = WorkloadSpec::poisson(6.0, 30, 256).generate(11);
+        let base = SchedulerConfig { n_replicas: 2, max_batch: 2, ..SchedulerConfig::default() };
+        let controlled = SchedulerConfig {
+            control: Some(ControlConfig {
+                epoch_ms: 50.0,
+                target_p99_ttft_ms: 1e9,
+                min_replicas: 2,
+                max_replicas: 2,
+                dispatch_width: 1 << 20,
+                ..ControlConfig::default()
+            }),
+            ..base.clone()
+        };
+        let mut svc = SyntheticService::new(4.0, 0.1, 2.0).with_batch_marginal(0.4);
+        let off = run(&base, &mut svc.clone(), &reqs).unwrap();
+        let on = run(&controlled, &mut svc, &reqs).unwrap();
+        assert_eq!(format!("{:?}", off.records), format!("{:?}", on.records));
+        assert_eq!(off.makespan_ms, on.makespan_ms);
+        assert!(off.control.is_none(), "off runs carry no report");
+        let report = on.control.expect("reactive runs carry a report");
+        assert_eq!((report.scale_ups, report.scale_downs, report.reliefs), (0, 0, 0));
+        assert_eq!(report.replications, 0, "synthetic service reports no expert demand");
+        assert!(report.epochs.iter().all(|e| e.action == "relax" || e.action == "hold"));
+        assert!(!report.epochs.is_empty() && report.replica_ms > 0.0);
+        assert_eq!((report.peak_replicas, report.final_replicas), (2, 2));
+    }
+
+    #[test]
+    fn sustained_pressure_scales_up_and_elasticity_beats_the_static_fleet() {
+        // Arrivals far outpace a single replica: the queue blows past
+        // 2 x live x width before the first epoch, so the controller
+        // must add replicas — and the report must price them. On this
+        // embarrassingly parallel backlog a 4-replica peak finishes
+        // strictly sooner than the static single replica.
+        let reqs: Vec<Request> =
+            (0..40).map(|i| Request::open_loop(i, vec![1], 4, i as f64)).collect();
+        let cfg = SchedulerConfig {
+            n_replicas: 1,
+            max_batch: 2,
+            control: Some(ControlConfig {
+                epoch_ms: 40.0,
+                min_replicas: 1,
+                max_replicas: 4,
+                dispatch_width: 2,
+                ..ControlConfig::default()
+            }),
+            ..SchedulerConfig::default()
+        };
+        let mut svc = SyntheticService::new(10.0, 0.0, 10.0);
+        let out = run(&cfg, &mut svc, &reqs).unwrap();
+        let report = out.control.expect("reactive run reports");
+        assert!(report.scale_ups >= 1, "{report:?}");
+        assert!(report.peak_replicas > 1 && report.replica_ms > 0.0);
+        assert!(report.epochs.iter().any(|e| e.action == "scale-up"));
+        let static_cfg = SchedulerConfig { control: None, ..cfg.clone() };
+        let mut svc = SyntheticService::new(10.0, 0.0, 10.0);
+        let static_out = run(&static_cfg, &mut svc, &reqs).unwrap();
+        assert!(
+            out.makespan_ms < static_out.makespan_ms,
+            "reactive {} !< static {}",
+            out.makespan_ms,
+            static_out.makespan_ms
+        );
+        assert_eq!(out.records.len(), static_out.records.len(), "same sessions served");
+    }
+
+    #[test]
+    fn retirement_drains_cleanly_and_every_session_completes() {
+        // Force a calm fleet of 3 down: retirements park replicas
+        // (running batches drain, admitted sessions migrate with their
+        // ledger bytes) and the run must still complete every session
+        // without a single abort-requeue.
+        let reqs: Vec<Request> =
+            (0..12).map(|i| Request::open_loop(i, vec![1], 2, i as f64 * 60.0)).collect();
+        let cfg = SchedulerConfig {
+            n_replicas: 3,
+            max_batch: 1,
+            control: Some(ControlConfig {
+                epoch_ms: 30.0,
+                target_p99_ttft_ms: 1e9,
+                min_replicas: 1,
+                max_replicas: 3,
+                dispatch_width: 4,
+                ..ControlConfig::default()
+            }),
+            ..SchedulerConfig::default()
+        };
+        // Short sessions, long gaps: the fleet idles between arrivals,
+        // so calm epochs accumulate and the controller sheds replicas.
+        let mut svc = SyntheticService::new(2.0, 0.0, 1.0);
+        let out = run(&cfg, &mut svc, &reqs).unwrap();
+        let report = out.control.expect("reactive run reports");
+        assert!(report.scale_downs >= 1, "{report:?}");
+        assert!(report.final_replicas < 3);
+        assert_eq!(out.records.len(), reqs.len(), "every session still completes");
+        assert_eq!(out.requeued, 0, "migration is not an abort");
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //!   the sizes it can still reach (DESIGN.md §13). Cells run across
 //!   `--threads` scoped workers; results merge by cell index, so the
 //!   deterministic section is byte-identical at any thread count.
+//! * [`autoscale_sweep`] → `BENCH_autoscale.json` — the SLO control
+//!   loop under traffic drift (DESIGN.md §15): {diurnal, flash-crowd,
+//!   rolling-failure} scenarios, each served by the static fleet and by
+//!   the reactive controller on the *same* arrival stream, with the
+//!   controller's costs (replica-ms, replication bytes, quality debt)
+//!   reported next to its latency wins and a `tokens_match_static`
+//!   honesty bit per reactive cell.
 //!
 //! Each (system, point) run regenerates the workload at that rate from
 //! the *same* seed — prompts and lengths are identical across points
@@ -43,11 +50,12 @@ use super::arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
 use super::events::run_streamed;
 use super::metrics::{num, obj, Histogram, Percentiles, ServeReport};
 use super::scheduler::{
-    BatchStats, CoreKind, MemoryModel, Policy, Scheduler, SchedulerConfig, ServiceModel,
-    SessionOutcome, SyntheticService,
+    BatchStats, CoreKind, MemoryModel, Policy, Scheduler, SchedulerConfig, ServeOutcome,
+    ServiceModel, SessionOutcome, SessionProfile, SyntheticService,
 };
 use super::{Request, Slo};
 use crate::cluster::HardwareProfile;
+use crate::control::{ControlConfig, ControlReport};
 use crate::coordinator::PrecisionPolicy;
 use crate::runtime::PREFILL_SIZES;
 use crate::telemetry::{DecodeAttribution, Phase, NPHASES};
@@ -139,7 +147,7 @@ pub fn parse_cache_budgets(s: &str) -> Result<Vec<usize>> {
 /// drift. Returns (spec, scheduler config, single-run offered rate).
 ///
 /// Flags: `--requests` (24), `--rate` (2; or legacy `--arrival-gap-ms`),
-/// `--arrival poisson|bursty|trace|closed`, `--clients`, `--think-ms`,
+/// `--arrival poisson|bursty|trace|diurnal|closed`, `--clients`, `--think-ms`,
 /// `--input-len` (else bimodal 16/128), `--out-tokens` (16),
 /// `--slo-ttft-ms`/`--slo-tpot-ms` (raw virtual ms), `--tenants` (1–2:
 /// single class, or interactive + batch), `--policy fcfs|sjf|edf`,
@@ -153,7 +161,11 @@ pub fn parse_cache_budgets(s: &str) -> Result<Vec<usize>> {
 /// `--core event|round-loop` (scheduler executor, DESIGN.md §13; both
 /// produce bit-identical outcomes), `--queue-sample N` (queue-depth
 /// trace stride in scheduling ticks; 1, the default, is the historical
-/// every-tick trace).
+/// every-tick trace), `--control off|reactive` (the SLO control loop,
+/// DESIGN.md §15; off, the default, builds no controller state at all —
+/// tokens *and* timings stay byte-identical to a build without the
+/// subsystem) with `--control-epoch MS`, `--control-target-p99 MS`, and
+/// `--control-max-replicas N` tuning the reactive mode.
 pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, SchedulerConfig, f64)> {
     // Back-compat: the old FCFS server took `--arrival-gap-ms`.
     let rate = match a.get("arrival-gap-ms") {
@@ -219,6 +231,19 @@ pub fn config_from_args(a: &Args, vocab: u32) -> Result<(WorkloadSpec, Scheduler
             let stride = a.usize_or("queue-sample", 1)?;
             ensure!(stride >= 1, "--queue-sample must be >= 1, got {stride}");
             stride
+        },
+        control: match ControlConfig::parse(a.get_or("control", "off"))? {
+            Some(base) => {
+                let c = ControlConfig {
+                    epoch_ms: a.f64_or("control-epoch", base.epoch_ms)?,
+                    target_p99_ttft_ms: a.f64_or("control-target-p99", base.target_p99_ttft_ms)?,
+                    max_replicas: a.usize_or("control-max-replicas", base.max_replicas)?,
+                    ..base
+                };
+                c.validate()?;
+                Some(c)
+            }
+            None => None,
         },
     };
     Ok((spec, sched, rate))
@@ -1277,6 +1302,281 @@ pub fn write_bench(path: &Path, json: &Json) -> Result<()> {
     std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path:?}"))
 }
 
+/// [`SyntheticService`] plus a synthetic routing signal: every session
+/// routes each generated token to the globally hot expert 0 and to one
+/// prompt-determined cold expert, and the resulting per-expert counts
+/// are surfaced through [`ServiceModel::take_expert_demand`] — the same
+/// channel `BatchEngineService` feeds from the real engine's load-dedup
+/// tallies. The skew (half of all routed demand on one expert) is
+/// exactly the regime popularity-driven replication exists for, so the
+/// autoscale sweep can exercise the controller's replication actuator
+/// without the PJRT runtime. Both sweep modes wrap the same inner
+/// service, so measured timings cannot differ between them.
+pub struct DemandService {
+    inner: SyntheticService,
+    n_experts: usize,
+    demand: Vec<u64>,
+}
+
+impl DemandService {
+    pub fn new(inner: SyntheticService, n_experts: usize) -> Self {
+        assert!(n_experts >= 2, "need a hot and at least one cold expert");
+        Self { inner, n_experts, demand: vec![0; n_experts] }
+    }
+
+    fn note(&mut self, reqs: &[&Request]) {
+        for r in reqs {
+            let tokens = r.out_tokens.max(1) as u64;
+            let cold = 1 + r.prompt.first().copied().unwrap_or(0) as usize % (self.n_experts - 1);
+            self.demand[0] += tokens;
+            self.demand[cold] += tokens;
+        }
+    }
+}
+
+impl ServiceModel for DemandService {
+    fn measure(&mut self, req: &Request) -> Result<SessionProfile> {
+        self.note(&[req]);
+        self.inner.measure(req)
+    }
+
+    fn measure_batch(&mut self, reqs: &[&Request]) -> Result<Vec<SessionProfile>> {
+        self.note(reqs);
+        self.inner.measure_batch(reqs)
+    }
+
+    fn take_expert_demand(&mut self) -> Option<Vec<u64>> {
+        if self.demand.iter().all(|&d| d == 0) {
+            return None;
+        }
+        Some(std::mem::replace(&mut self.demand, vec![0; self.n_experts]))
+    }
+}
+
+/// One traffic-drift scenario of the autoscale sweep: a workload, the
+/// static fleet shape it is served on, and the controller configuration
+/// the reactive mode adds on top of that same shape.
+pub struct AutoscaleScenario {
+    pub name: String,
+    pub spec: WorkloadSpec,
+    pub sched: SchedulerConfig,
+    pub control: ControlConfig,
+}
+
+/// The three drift scenarios (DESIGN.md §15), sized off the expected
+/// span `requests / rate`: a diurnal swing whose peak slightly exceeds
+/// the 2-replica static fleet, a flash crowd at 4x the base rate over
+/// 15% of the span, and a rolling failure that kills one of the two
+/// static replicas mid-run. The static shape is 2 replicas x batch 4;
+/// the controller may float between 1 and 6 replicas against a 120 ms
+/// p99-TTFT target.
+pub fn autoscale_scenarios(requests: usize, rate: f64) -> Result<Vec<AutoscaleScenario>> {
+    ensure!(requests >= 8, "autoscale scenarios need >= 8 requests, got {requests}");
+    ensure!(rate.is_finite() && rate > 0.0, "rate must be finite and positive, got {rate}");
+    let span_ms = requests as f64 / rate * 1000.0;
+    let spec = |model: ArrivalModel| WorkloadSpec {
+        model,
+        n_requests: requests,
+        prompt_len: LenDist::Bimodal { short: 16, long: 128, p_long: 0.5 },
+        out_tokens: LenDist::Fixed(32),
+        tenants: vec![TenantSpec::new("default", Slo::new(120.0, 15.0))],
+        vocab: 256,
+        shared_prompt: false,
+    };
+    let sched = SchedulerConfig {
+        n_replicas: 2,
+        max_batch: 4,
+        queue_sample_stride: 16,
+        ..SchedulerConfig::default()
+    };
+    let control = ControlConfig {
+        epoch_ms: 250.0,
+        target_p99_ttft_ms: 120.0,
+        min_replicas: 1,
+        max_replicas: 6,
+        dispatch_width: 4,
+        ..ControlConfig::default()
+    };
+    Ok(vec![
+        AutoscaleScenario {
+            name: "diurnal".into(),
+            spec: spec(ArrivalModel::Diurnal {
+                rate_per_s: rate,
+                amplitude: 0.6,
+                period_ms: (span_ms / 2.0).max(1.0),
+                bursts: Vec::new(),
+            }),
+            sched: sched.clone(),
+            control: control.clone(),
+        },
+        AutoscaleScenario {
+            name: "flash-crowd".into(),
+            spec: spec(ArrivalModel::Diurnal {
+                rate_per_s: rate,
+                amplitude: 0.2,
+                period_ms: span_ms.max(1.0),
+                bursts: vec![(0.30 * span_ms, 0.45 * span_ms, 4.0)],
+            }),
+            sched: sched.clone(),
+            control: control.clone(),
+        },
+        AutoscaleScenario {
+            name: "rolling-failure".into(),
+            spec: spec(ArrivalModel::Poisson { rate_per_s: rate }),
+            sched: SchedulerConfig { replica_failures: vec![(0, 0.35 * span_ms)], ..sched },
+            control,
+        },
+    ])
+}
+
+/// One (scenario, mode) cell of the autoscale sweep.
+#[derive(Debug, Clone)]
+pub struct AutoscaleCell {
+    pub scenario: String,
+    pub mode: &'static str,
+    pub report: ServeReport,
+    pub requeued: usize,
+    /// Fleet cost: ∫ live replicas dt for the reactive mode,
+    /// `n_replicas x makespan` for the static fleet — the honest
+    /// denominator under every latency win.
+    pub replica_ms: f64,
+    pub replication_bytes: u64,
+    /// Token streams only — the controller moves capacity and timing,
+    /// and this flags any run where it moved *which* tokens decode
+    /// (requeue truncation under failure legitimately can).
+    pub tokens_match_static: bool,
+    pub control: Option<ControlReport>,
+}
+
+impl AutoscaleCell {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("mode", Json::Str(self.mode.to_string())),
+            ("requeued", Json::Num(self.requeued as f64)),
+            ("replica_ms", num(self.replica_ms)),
+            ("replication_bytes", Json::Num(self.replication_bytes as f64)),
+            ("tokens_match_static", Json::Bool(self.tokens_match_static)),
+            ("serve", self.report.to_json()),
+            (
+                "control",
+                match &self.control {
+                    Some(r) => control_report_json(r),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// JSON rendering of a [`ControlReport`]: action tallies, costs, and
+/// the per-epoch timeline the figure plots.
+pub fn control_report_json(r: &ControlReport) -> Json {
+    let epochs = r
+        .epochs
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("t_ms", num(e.t_ms)),
+                ("p99_ttft_ms", num(e.p99_ttft_ms)),
+                ("queue_depth", Json::Num(e.queue_depth as f64)),
+                ("live_replicas", Json::Num(e.live_replicas as f64)),
+                ("completed", Json::Num(e.completed as f64)),
+                ("action", Json::Str(e.action.to_string())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("scale_ups", Json::Num(r.scale_ups as f64)),
+        ("scale_downs", Json::Num(r.scale_downs as f64)),
+        ("reliefs", Json::Num(r.reliefs as f64)),
+        ("tightens", Json::Num(r.tightens as f64)),
+        ("replications", Json::Num(r.replications as f64)),
+        ("migrated", Json::Num(r.migrated as f64)),
+        ("replica_ms", num(r.replica_ms)),
+        ("replication_bytes", Json::Num(r.replication_bytes as f64)),
+        ("quality_debt_tokens", Json::Num(r.quality_debt_tokens as f64)),
+        ("peak_replicas", Json::Num(r.peak_replicas as f64)),
+        ("final_replicas", Json::Num(r.final_replicas as f64)),
+        ("epochs", Json::Arr(epochs)),
+    ])
+}
+
+/// Serve every drift scenario twice on the *same* generated arrival
+/// stream — once on the static fleet (`control: None`, structurally the
+/// uncontrolled scheduler) and once with the reactive controller — and
+/// report both cells side by side. Both modes wrap the same
+/// [`DemandService`], so the only degree of freedom between them is the
+/// controller itself.
+pub fn autoscale_sweep(requests: usize, rate: f64, seed: u64) -> Result<Vec<AutoscaleCell>> {
+    let scenarios = autoscale_scenarios(requests, rate)?;
+    let mut cells = Vec::with_capacity(scenarios.len() * 2);
+    for sc in &scenarios {
+        let tenant_names: Vec<String> = sc.spec.tenants.iter().map(|t| t.name.clone()).collect();
+        let reqs = sc.spec.generate(seed);
+        let mut run = |control: Option<ControlConfig>| -> Result<ServeOutcome> {
+            let sched = SchedulerConfig { control, ..sc.sched.clone() };
+            let inner = SyntheticService::new(5.0, 0.05, 3.0).with_batch_marginal(0.3);
+            let mut svc = DemandService::new(inner, 8);
+            Scheduler::run(&sched, &mut svc, &reqs)
+        };
+        let stat = run(None)?;
+        let reactive = run(Some(sc.control.clone()))?;
+        let streams = |o: &ServeOutcome| {
+            let mut v: Vec<(u64, Vec<u32>)> =
+                o.records.iter().map(|r| (r.id, r.tokens.clone())).collect();
+            v.sort_by_key(|&(id, _)| id);
+            v
+        };
+        let tokens_match = streams(&reactive) == streams(&stat);
+        cells.push(AutoscaleCell {
+            scenario: sc.name.clone(),
+            mode: "static",
+            report: ServeReport::from_outcome("static", rate, &stat, &tenant_names),
+            requeued: stat.requeued,
+            replica_ms: sc.sched.n_replicas as f64 * stat.makespan_ms,
+            replication_bytes: 0,
+            tokens_match_static: true,
+            control: None,
+        });
+        let ctl = reactive.control.clone().expect("reactive run carries a control report");
+        cells.push(AutoscaleCell {
+            scenario: sc.name.clone(),
+            mode: "reactive",
+            report: ServeReport::from_outcome("reactive", rate, &reactive, &tenant_names),
+            requeued: reactive.requeued,
+            replica_ms: ctl.replica_ms,
+            replication_bytes: ctl.replication_bytes,
+            tokens_match_static: tokens_match,
+            control: Some(ctl),
+        });
+    }
+    Ok(cells)
+}
+
+/// Assemble the `BENCH_autoscale.json` document.
+pub fn autoscale_json(cells: &[AutoscaleCell], requests: usize, rate: f64, seed: u64) -> Json {
+    let mut names: Vec<String> = Vec::new();
+    for c in cells {
+        if !names.contains(&c.scenario) {
+            names.push(c.scenario.clone());
+        }
+    }
+    obj(vec![
+        ("bench", Json::Str("autoscale".to_string())),
+        ("schema", Json::Str("odmoe.autoscale.v1".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("rate_per_s", num(rate)),
+        ("scenarios", Json::Arr(names.into_iter().map(Json::Str).collect())),
+        (
+            "modes",
+            Json::Arr(vec![Json::Str("static".into()), Json::Str("reactive".into())]),
+        ),
+        ("cells", Json::Arr(cells.iter().map(|c| c.to_json()).collect())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1342,6 +1642,7 @@ mod tests {
             decode_tokens: 8,
             decode_iterations: 8,
             decode_span_ms: 0.0,
+            expert_demand: Vec::new(),
         };
         let run = || {
             let points =
@@ -1461,6 +1762,7 @@ mod tests {
             decode_tokens: 8,
             decode_iterations: 8,
             decode_span_ms: 0.0,
+            expert_demand: Vec::new(),
         };
         let chunk_counts = [1usize, 2, 4, 8];
         let depths = [0usize, 1];
@@ -1538,6 +1840,7 @@ mod tests {
                 decode_tokens: 8,
                 decode_iterations: 8,
                 decode_span_ms: 0.0,
+                expert_demand: Vec::new(),
             }
         };
         let budgets = [0usize, 2, 8];
@@ -1702,6 +2005,74 @@ mod tests {
         assert_eq!(points[0].bound(), Phase::ExpertLoad);
         assert!((points[0].total_ms() - 10.5).abs() < 1e-9, "phases partition the window");
         assert!(attribution_sweep(&[], mk).is_err(), "empty rate list rejected");
+    }
+
+    #[test]
+    fn demand_service_skews_and_drains_the_routing_signal() {
+        let mut s = DemandService::new(SyntheticService::new(5.0, 0.05, 3.0), 8);
+        assert!(s.take_expert_demand().is_none(), "untouched service has no signal");
+        let reqs: Vec<Request> =
+            (0..6).map(|i| Request::open_loop(i, vec![i as u32 + 1, 2, 3], 8, 0.0)).collect();
+        let refs: Vec<&Request> = reqs.iter().collect();
+        s.measure_batch(&refs[..4]).unwrap();
+        s.measure(refs[4]).unwrap();
+        s.measure(refs[5]).unwrap();
+        let d = s.take_expert_demand().expect("routed demand present");
+        assert_eq!(d.len(), 8);
+        assert_eq!(d[0], 6 * 8, "the hot expert sees every session's tokens");
+        assert_eq!(d.iter().sum::<u64>(), 2 * 6 * 8, "top-2 routing: twice the token count");
+        assert!(s.take_expert_demand().is_none(), "the drain resets the tallies");
+    }
+
+    #[test]
+    fn autoscale_scenarios_cover_the_three_drifts() {
+        let scs = autoscale_scenarios(48, 24.0).unwrap();
+        let names: Vec<&str> = scs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["diurnal", "flash-crowd", "rolling-failure"]);
+        for sc in &scs {
+            assert!(sc.sched.control.is_none(), "the scenario shape itself is uncontrolled");
+            assert_eq!(sc.sched.n_replicas, 2);
+            assert!(sc.control.max_replicas > sc.sched.n_replicas);
+        }
+        let (ri, at) = scs[2].sched.replica_failures[0];
+        assert_eq!(ri, 0);
+        assert!((at - 700.0).abs() < 1e-6, "failure at 35% of the 2s span, got {at}");
+        assert!(autoscale_scenarios(4, 24.0).is_err());
+        assert!(autoscale_scenarios(48, 0.0).is_err());
+    }
+
+    #[test]
+    fn autoscale_sweep_is_deterministic_and_pairs_static_with_reactive() {
+        let run = |seed| {
+            let cells = autoscale_sweep(48, 24.0, seed).unwrap();
+            autoscale_json(&cells, 48, 24.0, seed).to_string()
+        };
+        let a = run(42);
+        assert_eq!(a, run(42), "same seed must reproduce the file byte for byte");
+        assert_ne!(a, run(43));
+        assert!(a.contains("\"schema\":\"odmoe.autoscale.v1\""));
+        assert!(a.contains("\"scenario\":\"flash-crowd\""));
+
+        let cells = autoscale_sweep(48, 24.0, 42).unwrap();
+        assert_eq!(cells.len(), 6, "three scenarios x two modes");
+        for pair in cells.chunks(2) {
+            let (stat, reactive) = (&pair[0], &pair[1]);
+            assert_eq!(stat.scenario, reactive.scenario);
+            assert_eq!(stat.mode, "static");
+            assert_eq!(reactive.mode, "reactive");
+            // The static cell is structurally uncontrolled and its own
+            // token reference; the reactive cell carries the full
+            // decision timeline and its costs.
+            assert!(stat.control.is_none());
+            assert!(stat.tokens_match_static);
+            let ctl = reactive.control.as_ref().expect("reactive control report");
+            assert!(!ctl.epochs.is_empty(), "the run spans multiple control epochs");
+            assert!(reactive.replica_ms > 0.0);
+            assert!(stat.replica_ms > 0.0);
+            // Every session is accounted for in both modes.
+            assert_eq!(stat.report.offered, 48);
+            assert_eq!(reactive.report.offered, 48);
+        }
     }
 
     #[test]

@@ -242,6 +242,117 @@ impl BoundedHistogram {
     }
 }
 
+/// Rolling-window percentile sink for the SLO control loop (DESIGN.md
+/// §15): a ring buffer over exactly the last `window` samples, with
+/// exact nearest-rank percentiles over the current contents. Where
+/// [`Histogram`] answers "the whole run so far" and [`BoundedHistogram`]
+/// "the whole run, bounded", this answers "the recent past" — the signal
+/// an epoch controller reacts to. The window is small (hundreds), so
+/// reads sort a copy; pushes are O(1) and allocation-free once full.
+#[derive(Debug, Clone)]
+pub struct WindowedHistogram {
+    window: usize,
+    buf: Vec<f64>,
+    /// Next overwrite position once the buffer is full.
+    head: usize,
+    pushed: u64,
+}
+
+impl WindowedHistogram {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "need a positive window");
+        Self { window, buf: Vec::with_capacity(window), head: 0, pushed: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() < self.window {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.window;
+        }
+        self.pushed += 1;
+    }
+
+    /// Samples currently in the window (≤ the configured width).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Lifetime push count (samples seen, not retained).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Configured window width (max retained samples).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Current window contents, oldest sample first — what a merge or a
+    /// replay would re-push to reproduce this window.
+    pub fn ordered(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.buf.len());
+        if self.buf.len() < self.window {
+            v.extend_from_slice(&self.buf);
+        } else {
+            v.extend_from_slice(&self.buf[self.head..]);
+            v.extend_from_slice(&self.buf[..self.head]);
+        }
+        v
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    /// Exact nearest-rank quantile over the current window (0 when
+    /// empty) — same convention as [`Histogram::p`], which the unit
+    /// tests pin it against on a full window.
+    pub fn p(&self, q: f64) -> f64 {
+        let mut s = self.buf.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&s, q)
+    }
+
+    pub fn summary(&self) -> Percentiles {
+        let mut s = self.buf.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            count: s.len(),
+            mean: self.mean(),
+            p50: percentile_sorted(&s, 0.50),
+            p95: percentile_sorted(&s, 0.95),
+            p99: percentile_sorted(&s, 0.99),
+        }
+    }
+
+    /// Coarse log-binned view of the current window — (bin midpoint,
+    /// count) for every non-empty bin, on exactly the bin edges of
+    /// [`BoundedHistogram`]'s streaming fallback, so windowed exports
+    /// and whole-run exports bucket identically.
+    pub fn log_bins(&self) -> Vec<(f64, u64)> {
+        let mut counts = vec![0u64; N_BINS];
+        for &v in &self.buf {
+            counts[BoundedHistogram::bin(v)] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (BoundedHistogram::bin_value(i), c))
+            .collect()
+    }
+}
+
 /// Compact percentile summary of one latency series.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Percentiles {
@@ -575,6 +686,62 @@ mod tests {
             assert!((100.0..=103.0).contains(&p), "quantile {p} outside observed range");
         }
         assert_eq!(BoundedHistogram::new(8).summary().count, 0, "empty sink summarizes to zero");
+    }
+
+    #[test]
+    fn windowed_histogram_matches_exact_path_on_a_full_window() {
+        // On a window that holds the whole series, the rolling sink must
+        // agree with Histogram exactly — same nearest-rank convention.
+        let vals = lcg_stream(200);
+        let mut exact = Histogram::default();
+        let mut windowed = WindowedHistogram::new(256);
+        for &v in &vals {
+            exact.push(v);
+            windowed.push(v);
+        }
+        assert_eq!(windowed.len(), 200);
+        let (a, b) = (exact.summary(), windowed.summary());
+        assert_eq!(a.count, b.count);
+        assert_eq!((a.mean, a.p50, a.p95, a.p99), (b.mean, b.p50, b.p95, b.p99));
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(windowed.p(q), exact.p(q));
+        }
+    }
+
+    #[test]
+    fn windowed_histogram_retains_exactly_the_last_window() {
+        // Push past the window: percentiles must equal the exact path
+        // over only the trailing `window` samples.
+        let vals = lcg_stream(500);
+        let window = 128;
+        let mut windowed = WindowedHistogram::new(window);
+        for &v in &vals {
+            windowed.push(v);
+        }
+        let mut tail = Histogram::default();
+        for &v in &vals[vals.len() - window..] {
+            tail.push(v);
+        }
+        assert_eq!(windowed.len(), window);
+        assert_eq!(windowed.pushed(), 500);
+        let (a, b) = (tail.summary(), windowed.summary());
+        assert_eq!((a.mean, a.p50, a.p95, a.p99), (b.mean, b.p50, b.p95, b.p99));
+        assert_eq!(WindowedHistogram::new(4).p(0.99), 0.0, "empty window reads as zero");
+    }
+
+    #[test]
+    fn windowed_log_bins_cover_the_window_on_shared_edges() {
+        let mut w = WindowedHistogram::new(64);
+        for &v in &lcg_stream(64) {
+            w.push(v);
+        }
+        let bins = w.log_bins();
+        assert_eq!(bins.iter().map(|&(_, c)| c).sum::<u64>(), 64);
+        // Bin midpoints are BoundedHistogram's: re-binning a midpoint
+        // lands in its own bin.
+        for &(mid, _) in &bins {
+            assert_eq!(BoundedHistogram::bin_value(BoundedHistogram::bin(mid)), mid);
+        }
     }
 
     #[test]

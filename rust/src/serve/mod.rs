@@ -34,9 +34,12 @@
 //!   every baseline) across arrival rates, batch sizes and worker-failure
 //!   counts, emitting the deterministic `BENCH_serve.json`,
 //!   `BENCH_batch.json`, `BENCH_failover.json`, `BENCH_cache.json`,
-//!   `BENCH_precision.json` and `BENCH_scale.json` artifacts; independent sweep cells fan out
+//!   `BENCH_precision.json`, `BENCH_scale.json` and
+//!   `BENCH_autoscale.json` artifacts; independent sweep cells fan out
 //!   across [`harness::parallel_map`] workers with index-ordered merges,
-//!   so `--threads` changes wall-clock and nothing else.
+//!   so `--threads` changes wall-clock and nothing else. The autoscale
+//!   sweep pits the static fleet against the [`crate::control`] loop on
+//!   identical arrival streams under traffic drift (DESIGN.md §15).
 //!
 //! Failures surface at two levels: engine-level node faults
 //! ([`crate::coordinator::FailureSpec`], DESIGN.md §8) reroute expert
@@ -63,15 +66,18 @@ pub mod scheduler;
 pub use arrivals::{ArrivalModel, LenDist, TenantSpec, WorkloadSpec};
 pub use events::{run_streamed, ScaleStats};
 pub use harness::{
-    attrib_json, attribution_sweep, batch_sweep, batch_sweep_json, cache_json, cache_sweep,
-    config_from_args, failover_json, failover_sweep, overlap_json, overlap_sweep, parallel_map,
-    parse_batches, parse_cache_budgets, parse_chunk_counts, parse_depths, parse_fleet_grid,
-    parse_policy_grid, parse_rates, parse_replica_failures, parse_scale_sessions, precision_json,
-    precision_sweep, rate_sweep, scale_json, scale_sweep, scale_workload, sweep_json, write_bench,
-    AttribPoint, BatchPoint, CachePoint, FailoverPoint, OverlapPoint, PrecisionCell,
-    PrecisionMeasurement, ScaleCell, SCALE_SAMPLE_CAP,
+    attrib_json, attribution_sweep, autoscale_json, autoscale_scenarios, autoscale_sweep,
+    batch_sweep, batch_sweep_json, cache_json, cache_sweep, config_from_args, control_report_json,
+    failover_json, failover_sweep, overlap_json, overlap_sweep, parallel_map, parse_batches,
+    parse_cache_budgets, parse_chunk_counts, parse_depths, parse_fleet_grid, parse_policy_grid,
+    parse_rates, parse_replica_failures, parse_scale_sessions, precision_json, precision_sweep,
+    rate_sweep, scale_json, scale_sweep, scale_workload, sweep_json, write_bench, AttribPoint,
+    AutoscaleCell, AutoscaleScenario, BatchPoint, CachePoint, DemandService, FailoverPoint,
+    OverlapPoint, PrecisionCell, PrecisionMeasurement, ScaleCell, SCALE_SAMPLE_CAP,
 };
-pub use metrics::{BoundedHistogram, Histogram, Percentiles, ServeReport, TenantReport};
+pub use metrics::{
+    BoundedHistogram, Histogram, Percentiles, ServeReport, TenantReport, WindowedHistogram,
+};
 pub use scheduler::{
     BatchEngineService, BatchStats, CoreKind, EngineService, MemoryModel, Policy, Scheduler,
     SchedulerConfig, ServeOutcome, ServiceModel, SessionOutcome, SessionProfile, SessionRecord,

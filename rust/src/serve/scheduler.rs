@@ -47,6 +47,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::{Request, Slo};
 use crate::cluster::{HardwareProfile, Ms, Node};
+use crate::control::{ControlConfig, ControlReport};
 use crate::coordinator::{BatchEngine, Engine};
 
 /// Queue-ordering policy.
@@ -263,6 +264,13 @@ pub struct SchedulerConfig {
     /// while million-session runs use a wider stride so the trace stays
     /// bounded instead of growing O(events).
     pub queue_sample_stride: usize,
+    /// Online SLO control loop (DESIGN.md §15). `None` — the default,
+    /// CLI `--control off` — builds no controller at all, the PR 8/9
+    /// structural pin: the event core pushes no epoch events, applies no
+    /// scaling, and every existing path runs byte-identically in tokens
+    /// AND timings. `Some` enables reactive control on the event core
+    /// (the round loop stays the uncontrolled oracle and rejects it).
+    pub control: Option<ControlConfig>,
 }
 
 impl Default for SchedulerConfig {
@@ -276,6 +284,7 @@ impl Default for SchedulerConfig {
             replica_failures: Vec::new(),
             core: CoreKind::Event,
             queue_sample_stride: 1,
+            control: None,
         }
     }
 }
@@ -341,6 +350,16 @@ pub trait ServiceModel {
     /// (`None` for models that do not track any). Used by the
     /// `BENCH_batch.json` sweep to report expert loads per token.
     fn take_stats(&mut self) -> Option<BatchStats> {
+        None
+    }
+
+    /// Per-expert demand counts accumulated since the last call — the
+    /// batched path's load-dedup tallies (how many sessions routed to
+    /// each expert, [`crate::coordinator::batch::merge_distinct`]'s
+    /// counts summed over iterations). `None` for models that do not
+    /// route experts. The SLO control loop (DESIGN.md §15) drains this
+    /// each epoch to drive popularity-aware expert replication.
+    fn take_expert_demand(&mut self) -> Option<Vec<u64>> {
         None
     }
 }
@@ -468,8 +487,9 @@ impl ServiceModel for EngineService<'_> {
 pub struct BatchEngineService<'e> {
     engine: &'e mut dyn BatchEngine,
     interner: PromptInterner,
-    memo: BTreeMap<BatchKey, (Vec<SessionProfile>, BatchStats)>,
+    memo: BTreeMap<BatchKey, (Vec<SessionProfile>, BatchStats, Vec<u64>)>,
     stats: BatchStats,
+    demand: Vec<u64>,
 }
 
 /// Batch composition: the ordered (interned prompt id, output-length)
@@ -483,6 +503,18 @@ impl<'e> BatchEngineService<'e> {
             interner: PromptInterner::default(),
             memo: BTreeMap::new(),
             stats: BatchStats::default(),
+            demand: Vec::new(),
+        }
+    }
+
+    /// Element-wise demand merge (grows on demand; memo hits re-count
+    /// their stored vector, same rule as the [`BatchStats`] tallies).
+    fn merge_demand(&mut self, d: &[u64]) {
+        if d.len() > self.demand.len() {
+            self.demand.resize(d.len(), 0);
+        }
+        for (acc, &v) in self.demand.iter_mut().zip(d) {
+            *acc += v;
         }
     }
 
@@ -500,9 +532,11 @@ impl ServiceModel for BatchEngineService<'_> {
     fn measure_batch(&mut self, reqs: &[&Request]) -> Result<Vec<SessionProfile>> {
         let key: BatchKey =
             reqs.iter().map(|r| (self.interner.intern(&r.prompt), r.out_tokens)).collect();
-        if let Some((profiles, tallies)) = self.memo.get(&key) {
-            self.stats.merge(tallies);
-            return Ok(profiles.clone());
+        if let Some((profiles, tallies, demand)) = self.memo.get(&key) {
+            let (tallies, demand, profiles) = (*tallies, demand.clone(), profiles.clone());
+            self.stats.merge(&tallies);
+            self.merge_demand(&demand);
+            return Ok(profiles);
         }
         self.engine.reset()?;
         let sessions: Vec<(&[u32], usize)> =
@@ -529,12 +563,20 @@ impl ServiceModel for BatchEngineService<'_> {
             decode_iterations: res.decode_iterations,
         };
         self.stats.merge(&tallies);
-        self.memo.insert(key, (profiles.clone(), tallies));
+        self.merge_demand(&res.expert_demand);
+        self.memo.insert(key, (profiles.clone(), tallies, res.expert_demand));
         Ok(profiles)
     }
 
     fn take_stats(&mut self) -> Option<BatchStats> {
         Some(std::mem::take(&mut self.stats))
+    }
+
+    fn take_expert_demand(&mut self) -> Option<Vec<u64>> {
+        if self.demand.iter().all(|&d| d == 0) {
+            return None;
+        }
+        Some(std::mem::take(&mut self.demand))
     }
 }
 
@@ -711,6 +753,10 @@ pub struct ServeOutcome {
     /// (each re-queue counts once; a session can re-queue repeatedly if
     /// several replicas fail).
     pub requeued: usize,
+    /// What the SLO control loop did, costs included (DESIGN.md §15).
+    /// `None` whenever [`SchedulerConfig::control`] was `None` — the
+    /// uncontrolled outcome is structurally unchanged.
+    pub control: Option<ControlReport>,
 }
 
 /// Truncate a session at a token boundary when its measured service
@@ -763,6 +809,13 @@ impl Scheduler {
         service: &mut dyn ServiceModel,
         requests: &[Request],
     ) -> Result<ServeOutcome> {
+        if cfg.control.is_some() {
+            ensure!(
+                cfg.core == CoreKind::Event,
+                "--control reactive requires the event core (the round loop is the \
+                 uncontrolled equivalence oracle)"
+            );
+        }
         match cfg.core {
             CoreKind::Event => super::events::run(cfg, service, requests),
             CoreKind::RoundLoop => Self::run_round_loop(cfg, service, requests),
@@ -1117,6 +1170,7 @@ impl Scheduler {
             replica_busy_ms: reps.iter().map(|r| r.busy_ms).collect(),
             bookings: reps.into_iter().map(|r| r.bookings).collect(),
             requeued,
+            control: None,
         })
     }
 }

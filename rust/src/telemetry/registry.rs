@@ -14,6 +14,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::serve::WindowedHistogram;
 use crate::util::json::{num, obj, Json};
 
 /// A process-local metrics registry. Cheap to create; `Default` is empty.
@@ -22,6 +23,10 @@ pub struct Registry {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
     histograms: BTreeMap<String, Vec<f64>>,
+    /// Rolling-window series ([`WindowedHistogram`]): the "recent past"
+    /// signal the SLO control loop reads, exported with exact
+    /// percentiles over the current window (DESIGN.md §15).
+    windows: BTreeMap<String, WindowedHistogram>,
 }
 
 impl Registry {
@@ -58,6 +63,22 @@ impl Registry {
         self.histograms.get(name).map_or(&[], |v| v.as_slice())
     }
 
+    /// Record one observation into the named rolling-window series,
+    /// created with `window` retained samples on first touch (later
+    /// calls keep the original width — the window is part of the
+    /// series' identity).
+    pub fn observe_windowed(&mut self, name: &str, window: usize, v: f64) {
+        self.windows
+            .entry(name.to_string())
+            .or_insert_with(|| WindowedHistogram::new(window))
+            .push(v);
+    }
+
+    /// The named rolling-window series, if ever observed.
+    pub fn windowed(&self, name: &str) -> Option<&WindowedHistogram> {
+        self.windows.get(name)
+    }
+
     /// Fold `other` into `self`: counters add, gauges take `other`'s
     /// value, histogram samples append.
     pub fn merge(&mut self, other: &Registry) {
@@ -70,16 +91,29 @@ impl Registry {
         for (k, v) in &other.histograms {
             self.histograms.entry(k.clone()).or_default().extend_from_slice(v);
         }
+        for (k, w) in &other.windows {
+            let mine = self
+                .windows
+                .entry(k.clone())
+                .or_insert_with(|| WindowedHistogram::new(w.window()));
+            for v in w.ordered() {
+                mine.push(v);
+            }
+        }
     }
 
     pub fn clear(&mut self) {
         self.counters.clear();
         self.gauges.clear();
         self.histograms.clear();
+        self.windows.clear();
     }
 
     pub fn is_empty(&self) -> bool {
-        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+        self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.histograms.is_empty()
+            && self.windows.is_empty()
     }
 
     /// Export every metric as JSON Lines, one object per line, counters
@@ -130,6 +164,23 @@ impl Registry {
                 ("p50", num(p(0.5))),
                 ("p95", num(p(0.95))),
                 ("p99", num(p(0.99))),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        for (name, w) in &self.windows {
+            let s = w.summary();
+            let line = obj(vec![
+                ("kind", Json::Str("windowed_histogram".into())),
+                ("name", Json::Str(name.clone())),
+                ("source", Json::Str(source.into())),
+                ("window", Json::Num(w.window() as f64)),
+                ("pushed", Json::Num(w.pushed() as f64)),
+                ("count", Json::Num(s.count as f64)),
+                ("mean", num(s.mean)),
+                ("p50", num(s.p50)),
+                ("p95", num(s.p95)),
+                ("p99", num(s.p99)),
             ]);
             out.push_str(&line.to_string());
             out.push('\n');
@@ -203,5 +254,54 @@ mod tests {
         assert_eq!(h.get("min").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(h.get("max").unwrap().as_f64().unwrap(), 4.0);
         assert_eq!(h.get("p50").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn windowed_series_retains_only_the_last_window() {
+        let mut r = Registry::new();
+        for v in 0..10 {
+            r.observe_windowed("serve.ttft_recent", 4, v as f64);
+        }
+        let w = r.windowed("serve.ttft_recent").unwrap();
+        assert_eq!(w.pushed(), 10, "lifetime count survives eviction");
+        assert_eq!(w.ordered(), vec![6.0, 7.0, 8.0, 9.0], "only the last 4 retained");
+        assert!(r.windowed("never.touched").is_none());
+        assert!(!r.is_empty());
+        r.clear();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn merge_folds_windowed_samples_in_order() {
+        let mut a = Registry::new();
+        a.observe_windowed("w", 3, 1.0);
+        a.observe_windowed("w", 3, 2.0);
+        let mut b = Registry::new();
+        b.observe_windowed("w", 3, 3.0);
+        b.observe_windowed("w", 3, 4.0);
+        b.observe_windowed("only_b", 2, 9.0);
+        a.merge(&b);
+        // a's window (width 3) receives b's samples newest-last, so the
+        // oldest of the four combined falls out.
+        assert_eq!(a.windowed("w").unwrap().ordered(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(a.windowed("only_b").unwrap().ordered(), vec![9.0]);
+    }
+
+    #[test]
+    fn windowed_export_reports_window_and_lifetime_pushes() {
+        let mut r = Registry::new();
+        for v in [5.0, 1.0, 3.0, 7.0, 9.0] {
+            r.observe_windowed("serve.ttft_recent", 3, v);
+        }
+        let text = r.export_jsonl("serve");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "windowed_histogram");
+        assert_eq!(j.get("window").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("pushed").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 3);
+        // Percentiles are over the retained window {3, 7, 9} only.
+        assert_eq!(j.get("p50").unwrap().as_f64().unwrap(), 7.0);
     }
 }
